@@ -1,0 +1,117 @@
+//! End-to-end driver (the repo's headline validation run): proves all
+//! three layers compose on a real small workload.
+//!
+//!   corpus -> train `small` (~6M params) for a few hundred steps,
+//!   logging the loss curve -> export -> PTQ into three schemes ->
+//!   eval each (acc + ppl) -> serve a batched ShareGPT-like workload
+//!   through each -> report latency/throughput.
+//!
+//!   cargo run --release --example e2e_train_quantize_serve
+//!   (AO_E2E_STEPS=300 for the full run; default 300)
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use ao::benchsupport as bs;
+use ao::data::dataset::PackedDataset;
+use ao::data::workload::WorkloadSpec;
+use ao::tokenizer::Tokenizer;
+use ao::train::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    ao::util::log::init();
+    let artifacts = ao::default_artifacts_dir();
+    let steps = std::env::var("AO_E2E_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(300usize);
+
+    // ---- 1. train -------------------------------------------------------
+    println!("== 1. training `small` for {steps} steps ==");
+    let (train_text, _) = bs::corpus_pair();
+    let tok = Tokenizer::byte_level();
+    let mut trainer = Trainer::new(&artifacts, "small", "bf16", 0)?;
+    let ds = PackedDataset::from_text(&tok, &train_text, trainer.seq());
+    let mut csv = String::from("step,loss,seconds\n");
+    let report = trainer.run(&ds, steps, 0xE2E, |i, loss, dt| {
+        csv.push_str(&format!("{i},{loss},{dt:.4}\n"));
+        if i % 25 == 0 || i + 1 == steps {
+            println!("  step {i:>4}  loss {loss:.4}");
+        }
+    })?;
+    let curve_path = ao::runs_dir().join("e2e_loss_curve.csv");
+    std::fs::write(&curve_path, csv)?;
+    println!(
+        "  loss {:.3} -> {:.3}; median {:.0} tok/s; peak RSS {} MiB; \
+         curve -> {}",
+        report.losses[0],
+        report.final_loss(),
+        report.median_tok_per_s(),
+        report.peak_rss_bytes / (1024 * 1024),
+        curve_path.display()
+    );
+    anyhow::ensure!(
+        report.final_loss() < report.losses[0] - 0.5,
+        "training failed to learn"
+    );
+
+    // ---- 2. quantize ------------------------------------------------------
+    let master = trainer.export_checkpoint()?;
+    let master_path = ao::runs_dir().join("e2e_small.aockpt");
+    master.save(&master_path)?;
+    println!("\n== 2. PTQ sweep ==");
+    let schemes = ["f32", "int8wo", "int4wo-64", "fp8dq_row"];
+    let mut ckpts = Vec::new();
+    for tag in schemes {
+        if tag == "f32" {
+            println!("  f32: {} bytes", master.total_bytes());
+            ckpts.push(master_path.clone());
+        } else {
+            let (p, rep) = bs::quantized_ckpt(&master_path, tag)?;
+            println!(
+                "  {tag}: {} -> {} bytes ({:.2}x)",
+                rep.f32_bytes, rep.packed_bytes, rep.ratio()
+            );
+            ckpts.push(p);
+        }
+    }
+
+    // ---- 3. eval ----------------------------------------------------------
+    println!("\n== 3. eval (hellaswag-proxy + word ppl) ==");
+    let mut t = bs::Table::new(&["scheme", "acc", "word ppl", "token ppl"]);
+    for (tag, ckpt) in schemes.iter().zip(&ckpts) {
+        let (acc, wppl, tppl) = bs::eval_ckpt("small", tag, ckpt, 48, 6)?;
+        t.row(vec![
+            tag.to_string(),
+            format!("{:.1}%", acc * 100.0),
+            format!("{wppl:.3}"),
+            format!("{tppl:.3}"),
+        ]);
+    }
+    t.print();
+
+    // ---- 4. serve ----------------------------------------------------------
+    println!("\n== 4. serving a batched workload through each scheme ==");
+    let spec = WorkloadSpec {
+        n_requests: 12,
+        max_prompt_tokens: 96,
+        max_output_tokens: 48,
+        ..Default::default()
+    };
+    let mut t = bs::Table::new(&[
+        "scheme", "tok/s", "TPOT ms", "ITL ms", "TTFT ms", "occupancy",
+    ]);
+    for (tag, ckpt) in schemes.iter().zip(&ckpts) {
+        let m = bs::serve_workload("small", tag, ckpt, &spec)?;
+        t.row(vec![
+            tag.to_string(),
+            format!("{:.1}", m.output_tok_per_s()),
+            format!("{:.2}", m.tpot().mean * 1e3),
+            format!("{:.2}", m.itl().mean * 1e3),
+            format!("{:.0}", m.ttft().mean * 1e3),
+            format!("{:.0}%", m.occupancy() * 100.0),
+        ]);
+    }
+    t.print();
+    println!("\ne2e_train_quantize_serve OK — all three layers compose.");
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Workflow 1 (paper §2): FP8 targeting server GPUs.
+//!
+//!   pre-train in FP8 (TorchTitan analog: the AO trainer with the
+//!   fp8_tensorwise recipe) -> "push to hub" (save the AOCKPT) -> quantize
+//!   to fp8 dynamic-quant -> serve over TCP through the vLLM-analog engine
+//!   -> hit it with a client (Listing 2, Rust spelling).
+//!
+//!   cargo run --release --example fp8_server_flow
+
+use ao::benchsupport as bs;
+use ao::coordinator::{engine, server};
+use ao::data::dataset::PackedDataset;
+use ao::tokenizer::Tokenizer;
+use ao::train::Trainer;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    ao::util::log::init();
+    let artifacts = ao::default_artifacts_dir();
+    let steps = bs::bench_steps(40);
+
+    // 1. FP8 pre-training (dynamic tensorwise scaling, paper §2.1)
+    println!("== 1. FP8 (tensorwise) pre-training, {steps} steps ==");
+    let (train_text, _) = bs::corpus_pair();
+    let tok = Tokenizer::byte_level();
+    let mut trainer = Trainer::new(&artifacts, "small", "fp8_tensorwise", 0)?;
+    let ds = PackedDataset::from_text(&tok, &train_text, trainer.seq());
+    let report = trainer.run(&ds, steps, 0xF8, |i, loss, _| {
+        if i % 10 == 0 {
+            println!("  step {i:>3}  loss {loss:.4}");
+        }
+    })?;
+    println!(
+        "  trained at {:.0} tok/s median; final loss {:.4}",
+        report.median_tok_per_s(),
+        report.final_loss()
+    );
+
+    // 2. "push to hub": the master checkpoint
+    let master = trainer.export_checkpoint()?;
+    let master_path = ao::runs_dir().join("fp8flow_small.aockpt");
+    master.save(&master_path)?;
+    println!("\n== 2. checkpoint saved -> {} ==", master_path.display());
+
+    // 3. FP8 dynamic quantization with the *same* scaling family the
+    //    training recipe used (tensorwise) — the paper's end-to-end
+    //    numerics-consistency point
+    let (fp8_path, size) = bs::quantized_ckpt(&master_path, "fp8dq_tensor")?;
+    println!(
+        "== 3. quantized to fp8dq_tensor: {:.2} -> {:.2} MiB ==",
+        size.f32_bytes as f64 / (1024.0 * 1024.0),
+        size.packed_bytes as f64 / (1024.0 * 1024.0)
+    );
+
+    // 4. serve over TCP + drive with a client
+    println!("\n== 4. serving on 127.0.0.1:7434 (vLLM-analog) ==");
+    let (handle, join) = engine::spawn(engine::EngineConfig {
+        artifacts_dir: artifacts,
+        ckpt_path: fp8_path,
+        model: "small".into(),
+        scheme: "fp8dq_tensor".into(),
+        eos_token: None,
+    });
+    let srv_handle = handle.clone();
+    let srv = std::thread::spawn(move || {
+        server::serve(
+            "127.0.0.1:7434",
+            srv_handle,
+            Arc::new(Tokenizer::byte_level()),
+            Some(1),
+        )
+    });
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    let mut client = server::Client::connect("127.0.0.1:7434")?;
+    for prompt in ["the cat ", "every bren ", "if the "] {
+        let g = client.generate(prompt, 24, 0.0)?;
+        println!(
+            "  {prompt:?} -> {} tokens, ttft {:.0}ms, tpot {:.2}ms: {:?}",
+            g.n_generated, g.ttft_ms, g.tpot_ms,
+            &g.text[..g.text.len().min(40)]
+        );
+    }
+    drop(client);
+    srv.join().unwrap()?;
+    handle.shutdown();
+    let metrics = join.join().unwrap()?;
+    println!("\n{}", metrics.report("fp8_server_flow"));
+    println!("fp8_server_flow OK");
+    Ok(())
+}

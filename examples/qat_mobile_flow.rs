@@ -1,0 +1,111 @@
+//! Workflow 2 (paper §3): QAT targeting mobile/edge.
+//!
+//!   QAT fine-tune (TorchTune-analog: fake-quantized int8-act/int4-weight
+//!   forward with STE) -> convert: PTQ to the *same* 8da4w scheme
+//!   (ExecuTorch-analog lowering: real packed nibbles + group scales) ->
+//!   size/memory report -> on-"device" generation through the 8da4w
+//!   serving graph (Listing 3, Rust spelling).
+//!
+//!   cargo run --release --example qat_mobile_flow
+
+use ao::benchsupport as bs;
+use ao::coordinator::{engine, Event, SubmitReq};
+use ao::data::dataset::PackedDataset;
+use ao::tokenizer::Tokenizer;
+use ao::train::Trainer;
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    ao::util::log::init();
+    let artifacts = ao::default_artifacts_dir();
+    let steps = bs::bench_steps(40);
+
+    // 1. QAT fine-tuning: int8 per-token activations + int4 group-32
+    //    weights, simulated in high precision with straight-through grads
+    println!("== 1. QAT fine-tuning (8da4w-32 simulated), {steps} steps ==");
+    let (train_text, _) = bs::corpus_pair();
+    let tok = Tokenizer::byte_level();
+    let mut trainer = Trainer::new(&artifacts, "small", "qat_8da4w", 0)?;
+    let ds = PackedDataset::from_text(&tok, &train_text, trainer.seq());
+    let report = trainer.run(&ds, steps, 0x4A7, |i, loss, _| {
+        if i % 10 == 0 {
+            println!("  step {i:>3}  loss {loss:.4}");
+        }
+    })?;
+    println!(
+        "  QAT checkpoint keeps the full f32 structure (drop-in \
+         replacement); final loss {:.4}",
+        report.final_loss()
+    );
+
+    // 2. convert: the same quantize_ path PTQ uses — numerics match what
+    //    training simulated (tested in test_quant_api.py)
+    let master = trainer.export_checkpoint()?;
+    let master_path = ao::runs_dir().join("qatflow_small.aockpt");
+    master.save(&master_path)?;
+    let (packed_path, size) = bs::quantized_ckpt(&master_path, "8da4w-32")?;
+    println!(
+        "\n== 2. convert -> packed 8da4w (ExecuTorch-analog) ==\n  {:.2} \
+         MiB -> {:.2} MiB ({:.2}x smaller; paper: 56% size cut on \
+         Llama3.2)",
+        size.f32_bytes as f64 / (1024.0 * 1024.0),
+        size.packed_bytes as f64 / (1024.0 * 1024.0),
+        size.ratio()
+    );
+
+    // 3. quality through the real quantized graph
+    let (acc, wppl, _) = bs::eval_ckpt("small", "8da4w-32", &packed_path, 32, 4)?;
+    println!(
+        "\n== 3. eval (quantized graph) ==\n  hellaswag-proxy {:.1}%, word \
+         ppl {wppl:.3}",
+        acc * 100.0
+    );
+
+    // 4. on-device serving: memory footprint + generation
+    println!("\n== 4. 'on-device' generation (8da4w serving graph) ==");
+    let rss_before = ao::util::stats::rss_bytes().unwrap_or(0);
+    let (handle, join) = engine::spawn(engine::EngineConfig {
+        artifacts_dir: artifacts,
+        ckpt_path: packed_path,
+        model: "small".into(),
+        scheme: "8da4w-32".into(),
+        eos_token: None,
+    });
+    let (tx, rx) = channel();
+    handle.submit(SubmitReq {
+        id: 1,
+        prompt_tokens: tok.encode("What is the capital of France? the "),
+        max_new_tokens: 24,
+        temperature: 0.0,
+        seed: 1,
+        tx,
+        submitted_at: Instant::now(),
+    })?;
+    let mut text = String::new();
+    for ev in rx {
+        match ev {
+            Event::Token(t) => text.push_str(&tok.decode(&[t])),
+            Event::Done(info) => {
+                println!(
+                    "  {} tokens at {:.1} ms/token: {:?}",
+                    info.n_generated,
+                    info.tpot_s * 1e3,
+                    &text[..text.len().min(48)]
+                );
+                break;
+            }
+            Event::Error(e) => anyhow::bail!(e),
+        }
+    }
+    handle.shutdown();
+    join.join().unwrap()?;
+    let rss_after = ao::util::stats::peak_rss_bytes().unwrap_or(0);
+    println!(
+        "  peak RSS {} MiB (engine + packed weights; before {} MiB)",
+        rss_after / (1024 * 1024),
+        rss_before / (1024 * 1024)
+    );
+    println!("\nqat_mobile_flow OK");
+    Ok(())
+}

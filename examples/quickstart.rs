@@ -1,0 +1,100 @@
+//! Quickstart: the one-line-API feel of the paper's Figure 2, end to end
+//! on the tiny model.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Steps: deterministic init -> `quantize_`-style PTQ (int4 weight-only)
+//! -> size report -> perplexity check through the quantized serving graph
+//! -> a short generation through the serving engine.
+
+use ao::benchsupport as bs;
+use ao::coordinator::{engine, Event, SubmitReq};
+use ao::quant::{quantize_checkpoint, QuantConfig};
+use ao::tokenizer::Tokenizer;
+use ao::train::Trainer;
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    ao::util::log::init();
+    let artifacts = ao::default_artifacts_dir();
+    anyhow::ensure!(
+        artifacts.join("manifest.json").exists(),
+        "run `make artifacts` first"
+    );
+
+    // 1. a model checkpoint (deterministic init; see e2e example for a
+    //    trained one)
+    println!("== 1. checkpoint ==");
+    let trainer = Trainer::new(&artifacts, "tiny", "bf16", 42)?;
+    let master = trainer.export_checkpoint()?;
+    let master_path = ao::runs_dir().join("quickstart_tiny.aockpt");
+    master.save(&master_path)?;
+    println!("tiny model: {} bytes of f32 weights", master.total_bytes());
+
+    // 2. quantize_(model, Int4WeightOnlyConfig(group_size=32)) — paper
+    //    Listing 5, Rust spelling
+    println!("\n== 2. quantize_ (int4 weight-only, group 32) ==");
+    let cfg = QuantConfig::parse("8da4w-32")?;
+    let (packed, report) = quantize_checkpoint(&master, cfg)?;
+    let packed_path = ao::runs_dir().join("quickstart_tiny_8da4w.aockpt");
+    packed.save(&packed_path)?;
+    println!(
+        "{} -> {} bytes ({:.2}x smaller)",
+        report.f32_bytes,
+        report.packed_bytes,
+        report.ratio()
+    );
+
+    // 3. numerics survive: perplexity through the *quantized* graph
+    println!("\n== 3. eval through the quantized serving graph ==");
+    let (acc, wppl, tppl) =
+        bs::eval_ckpt("tiny", "8da4w-32", &packed_path, 16, 2)?;
+    println!(
+        "8da4w: token ppl {tppl:.2}, word ppl {wppl:.2}, hellaswag-proxy \
+         {:.0}%  (untrained tiny model — the point is the pipeline)",
+        acc * 100.0
+    );
+
+    // 4. serve it
+    println!("\n== 4. generate through the serving engine ==");
+    let (handle, join) = engine::spawn(engine::EngineConfig {
+        artifacts_dir: artifacts,
+        ckpt_path: packed_path,
+        model: "tiny".into(),
+        scheme: "8da4w-32".into(),
+        eos_token: None,
+    });
+    let tok = Tokenizer::byte_level();
+    let (tx, rx) = channel();
+    handle.submit(SubmitReq {
+        id: 1,
+        prompt_tokens: tok.encode("the cat "),
+        max_new_tokens: 16,
+        temperature: 0.7,
+        seed: 7,
+        tx,
+        submitted_at: Instant::now(),
+    })?;
+    let mut text = String::new();
+    for ev in rx {
+        match ev {
+            Event::Token(t) => text.push_str(&tok.decode(&[t])),
+            Event::Done(info) => {
+                println!(
+                    "generated {} tokens (ttft {:.0}ms, tpot {:.1}ms): {:?}",
+                    info.n_generated,
+                    info.ttft_s * 1e3,
+                    info.tpot_s * 1e3,
+                    text
+                );
+                break;
+            }
+            Event::Error(e) => anyhow::bail!(e),
+        }
+    }
+    handle.shutdown();
+    join.join().unwrap()?;
+    println!("\nquickstart OK");
+    Ok(())
+}

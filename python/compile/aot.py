@@ -1,0 +1,370 @@
+"""AOT exporter: lower every (graph x scheme x model-size) to HLO text.
+
+Run once at build time (`make artifacts`); the Rust runtime loads the
+results through PJRT and Python never appears on the request path.
+
+Interchange format is HLO *text* (NOT serialized HloModuleProto): jax>=0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Every artifact is described in artifacts/manifest.json: flattened
+input/output leaf names (pytree path order == XLA parameter order), shapes
+and dtypes — the contract rust/src/runtime/artifact.rs binds buffers by.
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    MODEL_SIZES,
+    ModelConfig,
+    QuantScheme,
+    decode_step,
+    init_params,
+    nll,
+    prefill,
+)
+from .quant_api import quantize_params
+from .train import (
+    OptConfig,
+    add_lora_params,
+    init_opt_state,
+    lora_mask,
+    train_step,
+)
+
+DTYPE_NAMES = {
+    jnp.dtype("float32"): "f32",
+    jnp.dtype("int32"): "s32",
+    jnp.dtype("int8"): "s8",
+    jnp.dtype("uint8"): "u8",
+}
+
+# ---------------------------------------------------------------------------
+# Lowering helpers
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _path_name(prefix, path):
+    parts = [prefix]
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def leaf_specs(tree, prefix):
+    """Flattened (name, shape, dtype) list in pytree order."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves:
+        out.append(
+            {
+                "name": _path_name(prefix, path),
+                "shape": list(leaf.shape),
+                "dtype": DTYPE_NAMES[jnp.dtype(leaf.dtype)],
+            }
+        )
+    return out
+
+
+def sds(tree):
+    """Pytree -> ShapeDtypeStruct pytree (lower without materializing)."""
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+class Exporter:
+    def __init__(self, out_dir, force=False):
+        self.out_dir = out_dir
+        self.force = force
+        self.manifest = {"version": 1, "models": {}, "artifacts": []}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def add_model(self, cfg: ModelConfig):
+        self.manifest["models"][cfg.name] = {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads, "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq, "head_dim": cfg.head_dim,
+            "rope_theta": cfg.rope_theta, "norm_eps": cfg.norm_eps,
+            "param_count": cfg.param_count(),
+        }
+
+    def export(self, name, fn, args_tree, arg_prefixes, meta):
+        """Lower fn(*args) and write {name}.hlo.txt + manifest entry.
+
+        args_tree: tuple of pytrees; arg_prefixes: name prefix per element.
+        """
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        inputs = []
+        for prefix, tree in zip(arg_prefixes, args_tree):
+            inputs.extend(leaf_specs(tree, prefix))
+        out_sds = jax.eval_shape(fn, *args_tree)
+        outputs = leaf_specs(out_sds, "out")
+        entry = dict(meta)
+        entry.update(
+            {"name": name, "file": f"{name}.hlo.txt",
+             "inputs": inputs, "outputs": outputs}
+        )
+        self.manifest["artifacts"].append(entry)
+        if os.path.exists(path) and not self.force:
+            print(f"  [skip] {name}")
+            return
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*args_tree)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  [ok]   {name}  ({len(text)//1024} KiB, {time.time()-t0:.1f}s)")
+
+    def write_manifest(self):
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1)
+
+
+# ---------------------------------------------------------------------------
+# Graph builders
+# ---------------------------------------------------------------------------
+
+
+def serving_args(cfg, scheme, batch, seq):
+    params = jax.eval_shape(
+        lambda k: quantize_params(init_params(cfg, k), scheme),
+        jax.random.PRNGKey(0),
+    )
+    tokens = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    lens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return params, tokens, lens
+
+
+def export_serving(ex, cfg, scheme_tag, batch, prefill_seqs, smax):
+    scheme = QuantScheme.parse(scheme_tag)
+    params, _, _ = serving_args(cfg, scheme, batch, 8)
+    kvshape = (
+        cfg.n_layers, batch, cfg.n_kv_heads, smax, cfg.head_dim
+    )
+    kc = jax.ShapeDtypeStruct(kvshape, jnp.float32)
+    vc = jax.ShapeDtypeStruct(kvshape, jnp.float32)
+
+    for seq in prefill_seqs:
+        tokens = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        lens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+        ex.export(
+            f"prefill_{scheme_tag}_{cfg.name}_b{batch}_s{seq}",
+            lambda p, t, l: prefill(p, t, l, cfg, scheme, smax),
+            (params, tokens, lens),
+            ("params", "tokens", "lens"),
+            {"kind": "prefill", "model": cfg.name, "scheme": scheme_tag,
+             "batch": batch, "seq": seq, "smax": smax},
+        )
+
+    token = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    ex.export(
+        f"decode_{scheme_tag}_{cfg.name}_b{batch}",
+        lambda p, k, v, t, q: decode_step(p, k, v, t, q, cfg, scheme),
+        (params, kc, vc, token, pos),
+        ("params", "kcache", "vcache", "token", "pos"),
+        {"kind": "decode", "model": cfg.name, "scheme": scheme_tag,
+         "batch": batch, "smax": smax},
+    )
+
+    t_eval = jax.ShapeDtypeStruct((batch, smax), jnp.int32)
+    lens_b = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    plens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    ex.export(
+        f"nll_{scheme_tag}_{cfg.name}_b{batch}",
+        lambda p, t, l, pl: nll(p, t, l, cfg, scheme, pl),
+        (params, t_eval, lens_b, plens),
+        ("params", "tokens", "lens", "prefix_lens"),
+        {"kind": "nll", "model": cfg.name, "scheme": scheme_tag,
+         "batch": batch, "seq": smax},
+    )
+
+
+def export_training(ex, cfg, recipe, batch, seq, lr):
+    opt = OptConfig(lr=lr)
+    lora = recipe.endswith("_lora")
+
+    def make_params(key):
+        p = init_params(cfg, key)
+        if lora:
+            p = add_lora_params(p, cfg, 8, jax.random.PRNGKey(1))
+        return p
+
+    params = jax.eval_shape(make_params, jax.random.PRNGKey(0))
+    m, v = jax.eval_shape(lambda p: init_opt_state(p), params)
+    step = jax.ShapeDtypeStruct((), jnp.float32)
+    tokens = jax.ShapeDtypeStruct((batch, seq + 1), jnp.int32)
+
+    if lora:
+        mask_tree = None  # computed inside the graph: it is static
+
+        def fn(p, mm, vv, s, t):
+            return train_step(p, mm, vv, s, t, cfg, recipe, opt,
+                              lora_mask(p))
+    else:
+        def fn(p, mm, vv, s, t):
+            return train_step(p, mm, vv, s, t, cfg, recipe, opt)
+
+    ex.export(
+        f"train_{recipe}_{cfg.name}_b{batch}_s{seq}",
+        fn,
+        (params, m, v, step, tokens),
+        ("params", "m", "v", "step", "tokens"),
+        {"kind": "train", "model": cfg.name, "recipe": recipe,
+         "batch": batch, "seq": seq, "lr": lr, "lora": lora},
+    )
+
+
+def export_init(ex, cfg, recipe, batch, seq, seed):
+    """Param/opt-state initialization graph: lets the Rust trainer start
+    from a deterministic init without a Python runtime."""
+    lora = recipe.endswith("_lora")
+
+    def fn(seed_arr):
+        key = jax.random.PRNGKey(0)
+        key = jax.random.fold_in(key, seed_arr[0])
+        p = init_params(cfg, key)
+        if lora:
+            p = add_lora_params(p, cfg, 8, jax.random.PRNGKey(1))
+        m, v = init_opt_state(p)
+        return p, m, v
+
+    seed_arr = jax.ShapeDtypeStruct((1,), jnp.int32)
+    variant = "lora" if lora else "dense"
+    name = f"init_{variant}_{cfg.name}"
+    if any(a["name"] == name for a in ex.manifest["artifacts"]):
+        return
+    ex.export(
+        name,
+        fn,
+        (seed_arr,),
+        ("seed",),
+        {"kind": "init", "model": cfg.name, "variant": variant},
+    )
+
+
+def export_fig3(ex, sizes):
+    """LayerNorm -> Linear -> Sigmoid fwd+bwd microbench graphs (Fig 3),
+    in the high-precision baseline and the fp8 tensorwise recipe."""
+    from .train import fp8_linear
+
+    def block(x, w, g, mode):
+        h = (x - x.mean(-1, keepdims=True)) / jnp.sqrt(
+            x.var(-1, keepdims=True) + 1e-5
+        ) * g
+        y = fp8_linear(h, w, "fp8_tensorwise") if mode == "fp8" else h @ w.T
+        return jax.nn.sigmoid(y)
+
+    def fwd_bwd(mode):
+        def fn(x, w, g):
+            def loss(x, w, g):
+                return block(x, w, g, mode).sum()
+
+            l, grads = jax.value_and_grad(loss, argnums=(0, 1))(x, w, g)
+            return l, grads[0], grads[1]
+
+        return fn
+
+    for m, k, n in sizes:
+        x = jax.ShapeDtypeStruct((m, k), jnp.float32)
+        w = jax.ShapeDtypeStruct((n, k), jnp.float32)
+        g = jax.ShapeDtypeStruct((k,), jnp.float32)
+        for mode in ("bf16", "fp8"):
+            ex.export(
+                f"fig3_{mode}_m{m}_k{k}_n{n}",
+                fwd_bwd(mode),
+                (x, w, g),
+                ("x", "w", "g"),
+                {"kind": "fig3", "mode": mode, "m": m, "k": k, "n": n},
+            )
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+DEFAULT_SCHEMES = [
+    "f32", "int8wo", "int4wo-64", "fp8wo", "fp8dq_row", "fp8dq_tensor",
+    "int8dq", "8da4w-32", "nf4", "sparse24", "int8dq_sparse24",
+]
+DEFAULT_RECIPES = [
+    "bf16", "fp8_tensorwise", "fp8_rowwise", "fp8_rowwise_gw_hp",
+    "qat_8da4w", "qat_8da4w_lora",
+]
+FIG3_SIZES = [(64, 256, 256), (256, 256, 1024), (256, 1024, 1024)]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--sizes", default="tiny,small")
+    ap.add_argument("--serve-size", default="small",
+                    help="model sizes that get the full serving scheme set")
+    ap.add_argument("--schemes", default=",".join(DEFAULT_SCHEMES))
+    ap.add_argument("--recipes", default=",".join(DEFAULT_RECIPES))
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--train-batch", type=int, default=4)
+    ap.add_argument("--train-seq", type=int, default=64)
+    ap.add_argument("--prefill-seqs", default="32,128")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--no-fig3", action="store_true")
+    args = ap.parse_args()
+
+    ex = Exporter(args.out_dir, args.force)
+    sizes = [s for s in args.sizes.split(",") if s]
+    schemes = [s for s in args.schemes.split(",") if s]
+    recipes = [r for r in args.recipes.split(",") if r]
+    prefill_seqs = [int(s) for s in args.prefill_seqs.split(",")]
+
+    t0 = time.time()
+    for size in sizes:
+        cfg = MODEL_SIZES[size]
+        ex.add_model(cfg)
+        smax = cfg.max_seq
+        size_schemes = (
+            schemes if size in args.serve_size.split(",") else ["f32", "8da4w-32"]
+        )
+        print(f"[{size}] serving schemes: {size_schemes}")
+        for tag in size_schemes:
+            export_serving(ex, cfg, tag, args.batch, prefill_seqs, smax)
+        print(f"[{size}] training recipes: {recipes}")
+        for recipe in recipes:
+            export_training(
+                ex, cfg, recipe, args.train_batch, args.train_seq, args.lr
+            )
+            export_init(ex, cfg, recipe, args.train_batch, args.train_seq, 0)
+    if not args.no_fig3:
+        print("[fig3] microbench graphs")
+        export_fig3(ex, FIG3_SIZES)
+    ex.write_manifest()
+    print(f"manifest: {len(ex.manifest['artifacts'])} artifacts, "
+          f"{time.time()-t0:.0f}s total")
+
+
+if __name__ == "__main__":
+    main()

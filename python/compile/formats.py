@@ -1,0 +1,221 @@
+"""Bit-exact emulation of the low-precision numeric formats AO supports.
+
+This is the single source of truth for quantization numerics on the Python
+side. Values are *emulated*: a tensor "in fp8" is an f32 tensor whose values
+all lie exactly on the fp8 grid. Storage-side packing (true int4 nibbles,
+fp8 bytes) lives in the Rust layer (`rust/src/quant/formats.rs`) and is
+cross-checked against the golden vectors produced by
+`python/tests/test_formats.py::test_golden_vectors` (written to
+`artifacts/golden_formats.json`).
+
+Formats (mirroring the paper's Table of supported dtypes):
+  - FP8 E4M3 (OCP "FN": no inf, max 448) and E5M2 (max 57344)
+  - FP6 E2M3 / E3M2, FP4 E2M1 (MX element formats)
+  - E8M0 power-of-two shared scales (MX block scales)
+  - INT8 / INT4 affine quantization parameter math
+"""
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class FloatFormat:
+    """A miniature IEEE-style float format: 1 sign bit, `ebits` exponent
+    bits with bias 2^(ebits-1)-1, `mbits` mantissa bits, saturating cast,
+    subnormals supported, no inf/nan encodings used (OCP-style)."""
+
+    name: str
+    ebits: int
+    mbits: int
+    max_val: float  # largest finite magnitude
+
+    @property
+    def bias(self) -> int:
+        return 2 ** (self.ebits - 1) - 1
+
+    @property
+    def min_normal(self) -> float:
+        return 2.0 ** (1 - self.bias)
+
+    @property
+    def bits(self) -> int:
+        return 1 + self.ebits + self.mbits
+
+
+# OCP FP8 / MX element formats.
+E4M3 = FloatFormat("e4m3", ebits=4, mbits=3, max_val=448.0)
+E5M2 = FloatFormat("e5m2", ebits=5, mbits=2, max_val=57344.0)
+E2M3 = FloatFormat("e2m3", ebits=2, mbits=3, max_val=7.5)  # fp6
+E3M2 = FloatFormat("e3m2", ebits=3, mbits=2, max_val=28.0)  # fp6
+E2M1 = FloatFormat("e2m1", ebits=2, mbits=1, max_val=6.0)  # fp4
+
+FORMATS = {f.name: f for f in (E4M3, E5M2, E2M3, E3M2, E2M1)}
+
+# MX block size fixed by the OCP MX spec.
+MX_BLOCK = 32
+
+
+def cast_to_float_format(x, fmt: FloatFormat):
+    """Round `x` (f32) to the nearest representable value of `fmt`.
+
+    Saturating (TorchAO float8 casts saturate rather than produce inf),
+    round-half-to-even on the mantissa, with subnormal support. Returns f32
+    values lying exactly on the format grid.
+    """
+    x = x.astype(jnp.float32)
+    sgn = jnp.where(x < 0, -1.0, 1.0)
+    ax = jnp.minimum(jnp.abs(x), fmt.max_val)
+    # Exponent of the enclosing binade, clamped to the normal range.
+    e = jnp.floor(jnp.log2(jnp.maximum(ax, fmt.min_normal)))
+    # Quantum for normals: 2^(e - mbits); for subnormals: fixed min quantum.
+    normal_q = jnp.exp2(e - fmt.mbits)
+    sub_q = fmt.min_normal / (2**fmt.mbits)
+    quantum = jnp.where(ax < fmt.min_normal, sub_q, normal_q)
+    q = jnp.round(ax / quantum) * quantum
+    # Rounding may carry into the next binade (e.g. 1.96 -> 2.0); that value
+    # is still representable, but may exceed max_val at the top: re-clamp.
+    q = jnp.minimum(q, fmt.max_val)
+    return (sgn * q).astype(jnp.float32)
+
+
+def float_format_encode(x, fmt: FloatFormat):
+    """Encode grid values to their bit patterns (uint8 for <=8 bit formats).
+
+    Used only to produce golden vectors for the Rust packing layer; the JAX
+    compute graphs operate on emulated f32 values.
+    """
+    x = cast_to_float_format(x, fmt)
+    # zero always encodes as +0 (negative zero carries no information here)
+    sgn = x < 0
+    ax = jnp.abs(x)
+    e = jnp.floor(jnp.log2(jnp.maximum(ax, fmt.min_normal)))
+    is_sub = ax < fmt.min_normal
+    mant_scale = jnp.where(
+        is_sub, (2**fmt.mbits) / fmt.min_normal, jnp.exp2(fmt.mbits - e)
+    )
+    mant = jnp.round(ax * mant_scale).astype(jnp.int32)
+    # Normals store the hidden bit implicitly.
+    mant = jnp.where(is_sub, mant, mant - 2**fmt.mbits)
+    exp_field = jnp.where(is_sub, 0, e.astype(jnp.int32) + fmt.bias)
+    # Carry case: mantissa rounded up to 2^mbits exactly.
+    carry = mant >= 2**fmt.mbits
+    mant = jnp.where(carry, 0, mant)
+    exp_field = jnp.where(carry, exp_field + 1, exp_field)
+    code = (
+        sgn.astype(jnp.int32) << (fmt.ebits + fmt.mbits)
+        | (exp_field << fmt.mbits)
+        | mant
+    )
+    return code.astype(jnp.uint8)
+
+
+def float_format_decode(code, fmt: FloatFormat):
+    """Decode bit patterns back to f32 values. Inverse of encode."""
+    code = code.astype(jnp.int32)
+    sgn = jnp.where((code >> (fmt.ebits + fmt.mbits)) & 1 == 1, -1.0, 1.0)
+    exp_field = (code >> fmt.mbits) & (2**fmt.ebits - 1)
+    mant = (code & (2**fmt.mbits - 1)).astype(jnp.float32)
+    is_sub = exp_field == 0
+    val_sub = mant * (fmt.min_normal / 2**fmt.mbits)
+    val_norm = jnp.exp2(exp_field.astype(jnp.float32) - fmt.bias) * (
+        1.0 + mant / 2**fmt.mbits
+    )
+    val = jnp.where(is_sub, val_sub, val_norm)
+    # Codes above max_val are inf/nan in the source IEEE formats; OCP-style
+    # saturating encode never emits them. Clamp so the decode table is total.
+    return sgn * jnp.minimum(val, fmt.max_val)
+
+
+# ---------------------------------------------------------------------------
+# E8M0 shared scales (MX) — power-of-two scales stored as a biased exponent.
+# ---------------------------------------------------------------------------
+
+E8M0_BIAS = 127
+
+
+def e8m0_scale_from_amax(amax, elem_fmt: FloatFormat):
+    """MX shared scale: 2^(floor(log2(amax)) - emax_elem), clamped to the
+    E8M0 range. Maps the block's largest magnitude into the element format's
+    top binade (OCP MX spec §5.2)."""
+    emax_elem = jnp.floor(jnp.log2(jnp.float32(elem_fmt.max_val)))
+    safe = jnp.maximum(amax, 2.0**-120)
+    e = jnp.floor(jnp.log2(safe)) - emax_elem
+    e = jnp.clip(e, -E8M0_BIAS, E8M0_BIAS + 1)
+    return jnp.exp2(e).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Integer affine quantization parameter math.
+# ---------------------------------------------------------------------------
+
+
+def int_symmetric_qparams(amax, nbits: int):
+    """Symmetric scale for signed int{nbits}: amax -> qmax."""
+    qmax = 2 ** (nbits - 1) - 1
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    return scale.astype(jnp.float32)
+
+
+def int_asymmetric_qparams(xmin, xmax, nbits: int):
+    """Asymmetric (scale, zero_point) for unsigned int{nbits} in [0, 2^n-1].
+
+    TorchAO's int4 weight-only uses this (uint4 + per-group zero point).
+    """
+    qmax = 2**nbits - 1
+    xmin = jnp.minimum(xmin, 0.0)
+    xmax = jnp.maximum(xmax, 0.0)
+    scale = jnp.maximum(xmax - xmin, 1e-12) / qmax
+    zp = jnp.round(-xmin / scale)
+    zp = jnp.clip(zp, 0, qmax)
+    return scale.astype(jnp.float32), zp.astype(jnp.float32)
+
+
+def quantize_affine(x, scale, zp, qmin: int, qmax: int):
+    """q = clamp(round(x/scale) + zp)."""
+    q = jnp.round(x / scale) + zp
+    return jnp.clip(q, qmin, qmax)
+
+
+def dequantize_affine(q, scale, zp):
+    return (q - zp) * scale
+
+
+# ---------------------------------------------------------------------------
+# NF4 — the QLoRA "NormalFloat-4" data type (paper §1: "TorchAO also
+# provides the NF4 data type for QLoRA"). 16 fixed quantiles of a standard
+# normal, scaled per block by absmax. Values from Dettmers et al. 2023.
+# ---------------------------------------------------------------------------
+
+NF4_TABLE = (
+    -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+    -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+    0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+    0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+    0.7229568362236023, 1.0,
+)
+
+NF4_BLOCK = 64
+
+
+def quantize_nf4(x):
+    """x[..., K] (K % 64 == 0) -> (codes uint8-valued [..., K] in [0,15],
+    absmax scales [..., K//64])."""
+    shape = x.shape
+    nb = shape[-1] // NF4_BLOCK
+    xb = x.reshape(*shape[:-1], nb, NF4_BLOCK)
+    amax = jnp.maximum(jnp.max(jnp.abs(xb), axis=-1), 1e-12)
+    norm = xb / amax[..., None]
+    table = jnp.asarray(NF4_TABLE, jnp.float32)
+    dist = jnp.abs(norm[..., None] - table)
+    codes = jnp.argmin(dist, axis=-1).astype(jnp.uint8)
+    return codes.reshape(shape), amax.astype(jnp.float32)
+
+
+def dequantize_nf4(codes, scales):
+    shape = codes.shape
+    nb = scales.shape[-1]
+    table = jnp.asarray(NF4_TABLE, jnp.float32)
+    vals = table[codes.astype(jnp.int32)].reshape(*shape[:-1], nb, NF4_BLOCK)
+    return (vals * scales[..., None]).reshape(shape)

@@ -1,0 +1,26 @@
+"""AO Layer-1: Pallas quantization/sparsity kernels + pure-jnp oracles.
+
+Public surface re-exported here; `ref` holds the oracles every kernel is
+tested against (python/tests/test_kernels_*.py).
+"""
+
+from . import ref  # noqa: F401
+from .quant_fp8 import (  # noqa: F401
+    matmul_fp8_dyn_rowwise,
+    matmul_fp8_dyn_tensorwise,
+    matmul_fp8_rowwise,
+    matmul_fp8_tensorwise,
+    matmul_fp8_wo,
+)
+from .quant_int import (  # noqa: F401
+    matmul_nf4,
+    fake_quant_int4_group,
+    fake_quant_int8_rowwise,
+    matmul_8da4w,
+    matmul_w4a16,
+    matmul_w8a8_dyn,
+    matmul_w8a16,
+    quant_int8_rowwise,
+)
+from .quant_mx import dequant_mx, matmul_mx, quant_mx  # noqa: F401
+from .sparse24 import matmul_int8dq_sparse24, matmul_sparse24  # noqa: F401

@@ -1,0 +1,341 @@
+"""Pallas kernels for integer quantization and quantized matmuls.
+
+Hardware adaptation note (DESIGN.md §2): the paper's CUDA tinygemm kernel
+streams packed int4 weights from global memory and dequantizes in registers
+next to the tensor-core MMA. The TPU-shaped equivalent below streams the
+packed u8 plane HBM->VMEM per (i, j) grid cell via BlockSpec, unpacks and
+dequantizes in VMEM, and feeds the MXU with an f32 (bf16 on real TPU) tile.
+All kernels run under interpret=True on CPU (Mosaic lowering is
+TPU-only); numerics are identical either way.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .tiling import pad_to, pick_block
+
+# ---------------------------------------------------------------------------
+# Dynamic activation quantization
+# ---------------------------------------------------------------------------
+
+
+def _quant_int8_rowwise_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...]
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale.astype(jnp.float32)
+
+
+def quant_int8_rowwise(x):
+    """Per-row symmetric int8 quant: x[M,K] -> (q int8 [M,K], scale [M])."""
+    m, k = x.shape
+    bm = pick_block(m)
+    xp, m0 = pad_to(x, 0, bm)
+    mp = xp.shape[0]
+    q, s = pl.pallas_call(
+        _quant_int8_rowwise_kernel,
+        grid=(mp // bm,),
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, k), jnp.int8),
+            jax.ShapeDtypeStruct((mp,), jnp.float32),
+        ],
+        interpret=True,
+    )(xp)
+    return q[:m0], s[:m0]
+
+
+# ---------------------------------------------------------------------------
+# int8 weight-only matmul (W8A16 analog; activations stay high precision)
+# ---------------------------------------------------------------------------
+
+
+def _matmul_w8a16_kernel(x_ref, qw_ref, ws_ref, o_ref):
+    x = x_ref[...]
+    w = qw_ref[...].astype(jnp.float32)
+    acc = jnp.dot(x, w.T, preferred_element_type=jnp.float32)
+    o_ref[...] = acc * ws_ref[...][None, :]
+
+
+def matmul_w8a16(x, qw, wscale):
+    """y[M,N] = x[M,K] @ (qw*scale)[N,K].T with dequant fused in-kernel."""
+    m, k = x.shape
+    n = qw.shape[0]
+    bm, bn = pick_block(m), pick_block(n)
+    xp, m0 = pad_to(x, 0, bm)
+    qwp, n0 = pad_to(qw, 0, bn)
+    wsp, _ = pad_to(wscale, 0, bn)
+    out = pl.pallas_call(
+        _matmul_w8a16_kernel,
+        grid=(xp.shape[0] // bm, qwp.shape[0] // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], qwp.shape[0]), jnp.float32),
+        interpret=True,
+    )(xp, qwp, wsp)
+    return out[:m0, :n0]
+
+
+# ---------------------------------------------------------------------------
+# int4 weight-only matmul (tinygemm analog): packed u8 plane, groupwise
+# asymmetric dequant inside the tile loop.
+# ---------------------------------------------------------------------------
+
+
+def _unpack_u4(p):
+    """u8 [bn, K/2] -> f32 [bn, K] in [0, 15], even K index in low nibble."""
+    p = p.astype(jnp.int32)
+    lo = p & 0xF
+    hi = (p >> 4) & 0xF
+    bn, kh = p.shape
+    return jnp.stack([lo, hi], axis=-1).reshape(bn, kh * 2).astype(jnp.float32)
+
+
+def _matmul_w4a16_kernel(x_ref, wp_ref, s_ref, zp_ref, o_ref, *, group_size):
+    x = x_ref[...]
+    q = _unpack_u4(wp_ref[...])  # [bn, K]
+    bn, k = q.shape
+    g = k // group_size
+    qg = q.reshape(bn, g, group_size)
+    w = (qg - zp_ref[...][..., None]) * s_ref[...][..., None]
+    w = w.reshape(bn, k)
+    o_ref[...] = jnp.dot(x, w.T, preferred_element_type=jnp.float32)
+
+
+def matmul_w4a16(x, wp, scale, zp, group_size: int):
+    """y = x @ dequant(packed-uint4 W).T; scale/zp are [N, K//group]."""
+    m, k2 = x.shape[0], wp.shape[1]
+    k = k2 * 2
+    n = wp.shape[0]
+    bm, bn = pick_block(m), pick_block(n)
+    xp, m0 = pad_to(x, 0, bm)
+    wpp, n0 = pad_to(wp, 0, bn)
+    sp, _ = pad_to(scale, 0, bn)
+    zpp, _ = pad_to(zp, 0, bn)
+    g = k // group_size
+    out = pl.pallas_call(
+        functools.partial(_matmul_w4a16_kernel, group_size=group_size),
+        grid=(xp.shape[0] // bm, wpp.shape[0] // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k2), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, g), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, g), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wpp.shape[0]), jnp.float32),
+        interpret=True,
+    )(xp, wpp, sp, zpp)
+    return out[:m0, :n0]
+
+
+# ---------------------------------------------------------------------------
+# int8 dynamic activation + int8 weight (W8A8): per-row act quant fused in,
+# integer accumulation, rescale on the way out.
+# ---------------------------------------------------------------------------
+
+
+def _matmul_w8a8_dyn_kernel(x_ref, qw_ref, ws_ref, o_ref):
+    x = x_ref[...]
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    xscale = jnp.maximum(amax, 1e-12) / 127.0
+    qx = jnp.clip(jnp.round(x / xscale[:, None]), -127, 127).astype(jnp.int32)
+    qw = qw_ref[...].astype(jnp.int32)
+    acc = jnp.dot(qx, qw.T, preferred_element_type=jnp.int32)
+    o_ref[...] = (
+        acc.astype(jnp.float32) * xscale[:, None] * ws_ref[...][None, :]
+    )
+
+
+def matmul_w8a8_dyn(x, qw, wscale):
+    """INT8 dynamic-activation int8-weight matmul with int32 accumulation."""
+    m, k = x.shape
+    n = qw.shape[0]
+    bm, bn = pick_block(m), pick_block(n)
+    xp, m0 = pad_to(x, 0, bm)
+    qwp, n0 = pad_to(qw, 0, bn)
+    wsp, _ = pad_to(wscale, 0, bn)
+    out = pl.pallas_call(
+        _matmul_w8a8_dyn_kernel,
+        grid=(xp.shape[0] // bm, qwp.shape[0] // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], qwp.shape[0]), jnp.float32),
+        interpret=True,
+    )(xp, qwp, wsp)
+    return out[:m0, :n0]
+
+
+# ---------------------------------------------------------------------------
+# 8da4w: int8 dynamic activations + int4 symmetric group weights (the QAT /
+# ExecuTorch mobile target). Per-group integer accumulation, rescaled by
+# xscale * wscale[g, n].
+# ---------------------------------------------------------------------------
+
+
+def _matmul_8da4w_kernel(x_ref, wp_ref, s_ref, o_ref, *, group_size):
+    x = x_ref[...]
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    xscale = jnp.maximum(amax, 1e-12) / 127.0
+    qx = jnp.clip(jnp.round(x / xscale[:, None]), -127, 127)
+    u = _unpack_u4(wp_ref[...])
+    qw = jnp.where(u >= 8, u - 16.0, u)  # signed int4 values
+    bn, k = qw.shape
+    g = k // group_size
+    bm = x.shape[0]
+    qxg = qx.reshape(bm, g, group_size)
+    qwg = qw.reshape(bn, g, group_size)
+    acc = jnp.einsum("mgk,ngk->mgn", qxg, qwg)  # exact: small-int f32 sums
+    acc = acc * s_ref[...].T[None, :, :]
+    o_ref[...] = acc.sum(axis=1) * xscale[:, None]
+
+
+def matmul_8da4w(x, wp, scale, group_size: int):
+    """INT8 dyn-act + packed int4 group-symmetric weights; scale [N, G]."""
+    m = x.shape[0]
+    k = wp.shape[1] * 2
+    n = wp.shape[0]
+    bm, bn = pick_block(m), pick_block(n)
+    xp, m0 = pad_to(x, 0, bm)
+    wpp, n0 = pad_to(wp, 0, bn)
+    sp, _ = pad_to(scale, 0, bn)
+    g = k // group_size
+    out = pl.pallas_call(
+        functools.partial(_matmul_8da4w_kernel, group_size=group_size),
+        grid=(xp.shape[0] // bm, wpp.shape[0] // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k // 2), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, g), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wpp.shape[0]), jnp.float32),
+        interpret=True,
+    )(xp, wpp, sp)
+    return out[:m0, :n0]
+
+
+# ---------------------------------------------------------------------------
+# Fake-quant forward kernels (QAT). Gradients (STE) are attached at L2
+# (quant_api.py) via jax.custom_vjp around these forwards.
+# ---------------------------------------------------------------------------
+
+
+def _fake_quant_int4_group_kernel(w_ref, o_ref, *, group_size):
+    w = w_ref[...]
+    bn, k = w.shape
+    g = k // group_size
+    wg = w.reshape(bn, g, group_size)
+    amax = jnp.max(jnp.abs(wg), axis=-1)
+    scale = jnp.maximum(amax, 1e-12) / 7.0
+    q = jnp.clip(jnp.round(wg / scale[..., None]), -8, 7)
+    o_ref[...] = (q * scale[..., None]).reshape(bn, k)
+
+
+def fake_quant_int4_group(w, group_size: int):
+    """Quant->dequant round trip for int4 symmetric group weights."""
+    n, k = w.shape
+    bn = pick_block(n)
+    wp, n0 = pad_to(w, 0, bn)
+    out = pl.pallas_call(
+        functools.partial(_fake_quant_int4_group_kernel, group_size=group_size),
+        grid=(wp.shape[0] // bn,),
+        in_specs=[pl.BlockSpec((bn, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bn, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(wp.shape, jnp.float32),
+        interpret=True,
+    )(wp)
+    return out[:n0]
+
+
+def _fake_quant_int8_rowwise_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127)
+    o_ref[...] = q * scale[:, None]
+
+
+def fake_quant_int8_rowwise(x):
+    """Quant->dequant round trip for per-row int8 activations."""
+    m, k = x.shape
+    bm = pick_block(m)
+    xp, m0 = pad_to(x, 0, bm)
+    out = pl.pallas_call(
+        _fake_quant_int8_rowwise_kernel,
+        grid=(xp.shape[0] // bm,),
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, jnp.float32),
+        interpret=True,
+    )(xp)
+    return out[:m0]
+
+
+# ---------------------------------------------------------------------------
+# NF4 weight-only matmul (QLoRA base-weight kernel): table lookup + blockwise
+# absmax descale inside the tile.
+# ---------------------------------------------------------------------------
+
+
+def _matmul_nf4_kernel(x_ref, wp_ref, s_ref, o_ref):
+    from .. import formats as F
+
+    x = x_ref[...]
+    codes = _unpack_u4(wp_ref[...]).astype(jnp.int32)  # [bn, K]
+    bn, k = codes.shape
+    nb = k // F.NF4_BLOCK
+    # scalar-select lookup: xla_extension 0.5.1 (the AOT execution target)
+    # returns zeros for the gather AND for any rank-3 broadcast against a
+    # [16] table tensor (bisected in examples/probe_nf4.rs), so the
+    # quantile table is expanded into 16 scalar selects.
+    vals = jnp.zeros_like(codes, dtype=jnp.float32)
+    for ci, tv in enumerate(F.NF4_TABLE):
+        vals = jnp.where(codes == ci, jnp.float32(tv), vals)
+    vals = vals.reshape(bn, nb, F.NF4_BLOCK)
+    w = (vals * s_ref[...][..., None]).reshape(bn, k)
+    o_ref[...] = jnp.dot(x, w.T, preferred_element_type=jnp.float32)
+
+
+def matmul_nf4(x, wp, scales):
+    """y = x @ dequant_nf4(W).T; scales [N, K//64]."""
+    from .. import formats as F
+
+    m = x.shape[0]
+    k = wp.shape[1] * 2
+    n = wp.shape[0]
+    bm, bn = pick_block(m), pick_block(n)
+    xp, m0 = pad_to(x, 0, bm)
+    wpp, n0 = pad_to(wp, 0, bn)
+    sp, _ = pad_to(scales, 0, bn)
+    nb = k // F.NF4_BLOCK
+    out = pl.pallas_call(
+        _matmul_nf4_kernel,
+        grid=(xp.shape[0] // bm, wpp.shape[0] // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k // 2), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, nb), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wpp.shape[0]), jnp.float32),
+        interpret=True,
+    )(xp, wpp, sp)
+    return out[:m0, :n0]

@@ -1,0 +1,130 @@
+"""Pallas kernels for MX block formats (mxfp4 / mxfp6 / mxfp8).
+
+MX (OCP Microscaling) stores 32-element blocks sharing one E8M0
+(power-of-two) scale. These are prototype features in the paper (Appendix
+E) and prototype here too: quant/dequant kernels + an MX linear, exposed in
+the config vocabulary but not on the serving hot path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import formats
+from ..formats import FORMATS, FloatFormat
+from .quant_fp8 import _cast_fmt
+from .tiling import pad_to, pick_block
+
+
+def _e8m0_scale(amax, fmt: FloatFormat):
+    emax_elem = jnp.floor(jnp.log2(jnp.float32(fmt.max_val)))
+    safe = jnp.maximum(amax, 2.0**-120)
+    e = jnp.floor(jnp.log2(safe)) - emax_elem
+    e = jnp.clip(e, -formats.E8M0_BIAS, formats.E8M0_BIAS + 1)
+    return jnp.exp2(e)
+
+
+def _quant_mx_kernel(x_ref, e_ref, s_ref, *, fmt):
+    x = x_ref[...]
+    bm, k = x.shape
+    nb = k // formats.MX_BLOCK
+    xb = x.reshape(bm, nb, formats.MX_BLOCK)
+    amax = jnp.max(jnp.abs(xb), axis=-1)
+    scale = _e8m0_scale(amax, fmt)
+    elem = _cast_fmt(xb / scale[..., None], fmt)
+    e_ref[...] = elem.reshape(bm, k)
+    s_ref[...] = scale.astype(jnp.float32)
+
+
+def quant_mx(x, fmt: str):
+    """x[M,K] -> (elements on fmt grid [M,K], e8m0 scales [M,K//32])."""
+    f = FORMATS[fmt]
+    m, k = x.shape
+    bm = pick_block(m)
+    xp, m0 = pad_to(x, 0, bm)
+    nb = k // formats.MX_BLOCK
+    elem, scale = pl.pallas_call(
+        functools.partial(_quant_mx_kernel, fmt=f),
+        grid=(xp.shape[0] // bm,),
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm, nb), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((xp.shape[0], k), jnp.float32),
+            jax.ShapeDtypeStruct((xp.shape[0], nb), jnp.float32),
+        ],
+        interpret=True,
+    )(xp)
+    return elem[:m0], scale[:m0]
+
+
+def _dequant_mx_kernel(e_ref, s_ref, o_ref):
+    e = e_ref[...]
+    bm, k = e.shape
+    nb = k // formats.MX_BLOCK
+    eb = e.reshape(bm, nb, formats.MX_BLOCK)
+    o_ref[...] = (eb * s_ref[...][..., None]).reshape(bm, k)
+
+
+def dequant_mx(elem, scale):
+    """(elements, e8m0 scales) -> f32 reconstruction."""
+    m, k = elem.shape
+    bm = pick_block(m)
+    ep, m0 = pad_to(elem, 0, bm)
+    sp, _ = pad_to(scale, 0, bm)
+    out = pl.pallas_call(
+        _dequant_mx_kernel,
+        grid=(ep.shape[0] // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm, scale.shape[1]), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((ep.shape[0], k), jnp.float32),
+        interpret=True,
+    )(ep, sp)
+    return out[:m0]
+
+
+def _matmul_mx_kernel(x_ref, w_ref, o_ref, *, fmt):
+    x = x_ref[...]
+    w = w_ref[...]
+    bm, k = x.shape
+    bn = w.shape[0]
+    nb = k // formats.MX_BLOCK
+    xb = x.reshape(bm, nb, formats.MX_BLOCK)
+    wb = w.reshape(bn, nb, formats.MX_BLOCK)
+    xs = _e8m0_scale(jnp.max(jnp.abs(xb), axis=-1), fmt)
+    ws = _e8m0_scale(jnp.max(jnp.abs(wb), axis=-1), fmt)
+    xq = _cast_fmt(xb / xs[..., None], fmt) * xs[..., None]
+    wq = _cast_fmt(wb / ws[..., None], fmt) * ws[..., None]
+    o_ref[...] = jnp.dot(
+        xq.reshape(bm, k), wq.reshape(bn, k).T,
+        preferred_element_type=jnp.float32,
+    )
+
+
+def matmul_mx(x, w, fmt: str):
+    """MX linear: both operands block-quantized in-kernel, f32 accumulate."""
+    f = FORMATS[fmt]
+    m, k = x.shape
+    n = w.shape[0]
+    bm, bn = pick_block(m), pick_block(n)
+    xp, m0 = pad_to(x, 0, bm)
+    wp, n0 = pad_to(w, 0, bn)
+    out = pl.pallas_call(
+        functools.partial(_matmul_mx_kernel, fmt=f),
+        grid=(xp.shape[0] // bm, wp.shape[0] // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[0]), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m0, :n0]

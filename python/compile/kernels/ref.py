@@ -1,0 +1,366 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the *semantics*; the Pallas kernels must match them exactly
+(interpret=True on CPU is bit-exact f32, so tests use tight tolerances).
+Conventions:
+  - Linear weights are `W[N, K]` (out_features, in_features); `y = x @ W.T`.
+  - Group quantization groups along K; `G = K // group_size`.
+  - "Emulated" low-precision tensors are f32 tensors on the format grid.
+  - Packed int4 is uint8 with the *even* K index in the low nibble.
+"""
+
+import jax.numpy as jnp
+
+from .. import formats
+from ..formats import E4M3, FloatFormat
+
+# ---------------------------------------------------------------------------
+# Integer quantization
+# ---------------------------------------------------------------------------
+
+
+def quant_int8_rowwise(x):
+    """Symmetric per-row int8 quantization (dynamic activation quant).
+
+    Returns (q int8 [M,K], scale f32 [M]).
+    """
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scale = formats.int_symmetric_qparams(amax, 8)
+    q = jnp.clip(jnp.round(x / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def quant_int8_channelwise(w):
+    """Symmetric per-output-channel int8 weight quantization.
+
+    w[N,K] -> (q int8 [N,K], scale f32 [N]).
+    """
+    amax = jnp.max(jnp.abs(w), axis=-1)
+    scale = formats.int_symmetric_qparams(amax, 8)
+    q = jnp.clip(jnp.round(w / scale[:, None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def quant_int4_group_asym(w, group_size: int):
+    """Asymmetric uint4 groupwise quantization (TorchAO int4 weight-only).
+
+    w[N,K] -> (q uint8-valued in [0,15] [N,K], scale [N,G], zp [N,G]).
+    """
+    n, k = w.shape
+    g = k // group_size
+    wg = w.reshape(n, g, group_size)
+    scale, zp = formats.int_asymmetric_qparams(
+        wg.min(axis=-1), wg.max(axis=-1), 4
+    )
+    q = formats.quantize_affine(wg, scale[..., None], zp[..., None], 0, 15)
+    return q.reshape(n, k).astype(jnp.uint8), scale, zp
+
+
+def quant_int4_group_sym(w, group_size: int):
+    """Symmetric int4 groupwise quantization in [-8, 7] (8da4w weights).
+
+    w[N,K] -> (q int8-valued [N,K], scale [N,G]).
+    """
+    n, k = w.shape
+    g = k // group_size
+    wg = w.reshape(n, g, group_size)
+    amax = jnp.max(jnp.abs(wg), axis=-1)
+    scale = formats.int_symmetric_qparams(amax, 4)
+    q = jnp.clip(jnp.round(wg / scale[..., None]), -8, 7)
+    return q.reshape(n, k).astype(jnp.int8), scale
+
+
+def pack_int4(q):
+    """Pack int4 values (int8/uint8-valued [N,K], K even) into u8 [N,K//2].
+
+    Low nibble = even K index. Signed values are stored two's-complement.
+    """
+    q = q.astype(jnp.int32) & 0xF
+    lo = q[:, 0::2]
+    hi = q[:, 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4_unsigned(p):
+    """u8 [N,K//2] -> uint4 values f32 [N,K] in [0,15]."""
+    p = p.astype(jnp.int32)
+    lo = p & 0xF
+    hi = (p >> 4) & 0xF
+    n, kh = p.shape
+    out = jnp.stack([lo, hi], axis=-1).reshape(n, kh * 2)
+    return out.astype(jnp.float32)
+
+
+def unpack_int4_signed(p):
+    """u8 [N,K//2] -> int4 values f32 [N,K] in [-8,7]."""
+    u = unpack_int4_unsigned(p)
+    return jnp.where(u >= 8, u - 16.0, u)
+
+
+def dequant_int4_group_asym(p, scale, zp, group_size: int):
+    """Packed uint4 [N,K//2] + [N,G] scale/zp -> f32 [N,K]."""
+    q = unpack_int4_unsigned(p)
+    n, k = q.shape
+    g = k // group_size
+    qg = q.reshape(n, g, group_size)
+    w = formats.dequantize_affine(qg, scale[..., None], zp[..., None])
+    return w.reshape(n, k)
+
+
+def dequant_int4_group_sym(p, scale, group_size: int):
+    q = unpack_int4_signed(p)
+    n, k = q.shape
+    g = k // group_size
+    qg = q.reshape(n, g, group_size)
+    return (qg * scale[..., None]).reshape(n, k)
+
+
+# ---------------------------------------------------------------------------
+# Linear layer references (what the matmul kernels must compute)
+# ---------------------------------------------------------------------------
+
+
+def linear_f32(x, w):
+    return x @ w.T
+
+
+def linear_w8a16(x, qw, wscale):
+    """int8 weight-only: y = x @ (qw*scale).T computed as (x @ qw.T)*scale."""
+    acc = x @ qw.astype(jnp.float32).T
+    return acc * wscale[None, :]
+
+
+def linear_w4a16(x, wp, scale, zp, group_size: int):
+    """int4 weight-only (tinygemm analog): dequant inside, f32 accumulate."""
+    w = dequant_int4_group_asym(wp, scale, zp, group_size)
+    return x @ w.T
+
+
+def linear_w8a8_dyn(x, qw, wscale):
+    """int8 dynamic-activation int8-weight: per-row act quant, int accum."""
+    qx, xscale = quant_int8_rowwise(x)
+    acc = jnp.matmul(
+        qx.astype(jnp.int32), qw.astype(jnp.int32).T
+    ).astype(jnp.float32)
+    return acc * xscale[:, None] * wscale[None, :]
+
+
+def linear_8da4w(x, wp, scale, group_size: int):
+    """int8 dynamic activation + int4 symmetric group weight (QAT target).
+
+    Integer accumulation per K-group, rescaled by xscale*wscale per group.
+    """
+    qx, xscale = quant_int8_rowwise(x)
+    q = unpack_int4_signed(wp)  # [N, K]
+    n, k = q.shape
+    g = k // group_size
+    m = x.shape[0]
+    qxg = qx.astype(jnp.float32).reshape(m, g, group_size)
+    qwg = q.reshape(n, g, group_size)
+    # acc[m, g, n] = sum_k qx * qw  (f32 einsum; values are small ints)
+    acc = jnp.einsum("mgk,ngk->mgn", qxg, qwg)
+    acc = acc * scale.T[None, :, :]  # [m, g, n] * [g, n]
+    y = acc.sum(axis=1)
+    return y * xscale[:, None]
+
+
+# ---------------------------------------------------------------------------
+# FP8
+# ---------------------------------------------------------------------------
+
+
+def fp8_tensorwise_scale(x, fmt: FloatFormat = E4M3):
+    amax = jnp.max(jnp.abs(x))
+    return (fmt.max_val / jnp.maximum(amax, 1e-12)).astype(jnp.float32)
+
+
+def fp8_rowwise_scale(x, fmt: FloatFormat = E4M3, axis: int = -1):
+    amax = jnp.max(jnp.abs(x), axis=axis)
+    return (fmt.max_val / jnp.maximum(amax, 1e-12)).astype(jnp.float32)
+
+
+def fp8_cast(x, scale, fmt: FloatFormat = E4M3):
+    """Emulated scaled cast: values on the fp8 grid of x*scale."""
+    return formats.cast_to_float_format(x * scale, fmt)
+
+
+def quant_fp8_rowwise(x, fmt: FloatFormat = E4M3):
+    """Returns (codes u8 [M,K], scale [M]) — storage form, rowwise."""
+    scale = fp8_rowwise_scale(x, fmt)
+    q = fp8_cast(x, scale[:, None], fmt)
+    return formats.float_format_encode(q, fmt), scale
+
+
+def quant_fp8_tensorwise(x, fmt: FloatFormat = E4M3):
+    scale = fp8_tensorwise_scale(x, fmt)
+    q = fp8_cast(x, scale, fmt)
+    return formats.float_format_encode(q, fmt), scale
+
+
+def linear_fp8_tensorwise(x, wcodes, wscale, fmt: FloatFormat = E4M3):
+    """FP8 dynamic-activation tensorwise: quantize x tensorwise, matmul on
+    the fp8 grids, rescale by 1/(xscale*wscale)."""
+    xscale = fp8_tensorwise_scale(x, fmt)
+    qx = fp8_cast(x, xscale, fmt)
+    w = formats.float_format_decode(wcodes, fmt)
+    acc = qx @ w.T
+    return acc / (xscale * wscale)
+
+
+def linear_fp8_rowwise(x, wcodes, wscale, fmt: FloatFormat = E4M3):
+    """FP8 rowwise: per-row act scales, per-out-channel weight scales."""
+    xscale = fp8_rowwise_scale(x, fmt)
+    qx = fp8_cast(x, xscale[:, None], fmt)
+    w = formats.float_format_decode(wcodes, fmt)
+    acc = qx @ w.T
+    return acc / (xscale[:, None] * wscale[None, :])
+
+
+def linear_fp8_wo(x, wcodes, wscale, fmt: FloatFormat = E4M3):
+    """FP8 weight-only: f32 activations, dequantized fp8 weights."""
+    w = formats.float_format_decode(wcodes, fmt) / wscale[:, None]
+    return x @ w.T
+
+
+# ---------------------------------------------------------------------------
+# MX block formats (mxfp4 / mxfp6 / mxfp8)
+# ---------------------------------------------------------------------------
+
+
+def quant_mx(x, fmt: FloatFormat):
+    """MX quantization along the last axis in blocks of 32.
+
+    x[..., K] -> (emulated element values on fmt grid [..., K],
+                  e8m0 scales [..., K//32]).
+    dequant(elem, scale) reconstructs x approximately.
+    """
+    shape = x.shape
+    k = shape[-1]
+    nb = k // formats.MX_BLOCK
+    xb = x.reshape(*shape[:-1], nb, formats.MX_BLOCK)
+    amax = jnp.max(jnp.abs(xb), axis=-1)
+    scale = formats.e8m0_scale_from_amax(amax, fmt)
+    elem = formats.cast_to_float_format(xb / scale[..., None], fmt)
+    return elem.reshape(shape), scale
+
+
+def dequant_mx(elem, scale):
+    shape = elem.shape
+    nb = scale.shape[-1]
+    eb = elem.reshape(*shape[:-1], nb, formats.MX_BLOCK)
+    return (eb * scale[..., None]).reshape(shape)
+
+
+def linear_mx(x, w, fmt: FloatFormat):
+    """MX linear: both operands block-quantized along K, f32 accumulate."""
+    xe, xs = quant_mx(x, fmt)
+    we, ws = quant_mx(w, fmt)
+    return dequant_mx(xe, xs) @ dequant_mx(we, ws).T
+
+
+# ---------------------------------------------------------------------------
+# 2:4 semi-structured sparsity
+# ---------------------------------------------------------------------------
+
+
+def sparse24_prune(w):
+    """Magnitude-based 2:4 pruning along K: zero the 2 smallest of each
+    contiguous group of 4. Returns the pruned dense tensor."""
+    n, k = w.shape
+    g = k // 4
+    wg = w.reshape(n, g, 4)
+    a = jnp.abs(wg)
+    # rank each element within its group of 4; keep the top 2
+    order = jnp.argsort(a, axis=-1)  # ascending
+    ranks = jnp.argsort(order, axis=-1)
+    keep = ranks >= 2
+    return (wg * keep).reshape(n, k)
+
+
+def sparse24_compress(w_pruned):
+    """Dense 2:4-pruned [N,K] -> (values [N,K//2], idx u8 [N,K//2]).
+
+    idx holds the position (0..3) of each kept value within its group.
+    Within a group the two kept values preserve their original order.
+    """
+    n, k = w_pruned.shape
+    g = k // 4
+    wg = w_pruned.reshape(n, g, 4)
+    a = jnp.abs(wg)
+    ranks = jnp.argsort(jnp.argsort(a, axis=-1), axis=-1)
+    keep = ranks >= 2  # exactly 2 per group (ties broken by argsort order)
+    # positions of kept elements, ascending
+    pos = jnp.argsort(jnp.where(keep, jnp.arange(4), 4), axis=-1)[..., :2]
+    vals = jnp.take_along_axis(wg, pos, axis=-1)
+    return vals.reshape(n, k // 2), pos.reshape(n, k // 2).astype(jnp.uint8)
+
+
+def sparse24_decompress(vals, idx, k: int):
+    """Inverse of compress -> dense [N, K]."""
+    n = vals.shape[0]
+    g = k // 4
+    vg = vals.reshape(n, g, 2)
+    ig = idx.reshape(n, g, 2).astype(jnp.int32)
+    out = jnp.zeros((n, g, 4), dtype=vals.dtype)
+    out = out.at[
+        jnp.arange(n)[:, None, None], jnp.arange(g)[None, :, None], ig
+    ].set(vg)
+    return out.reshape(n, k)
+
+
+def linear_sparse24(x, vals, idx):
+    """y = x @ decompress(W).T — the semantics the sparse kernel matches."""
+    k = x.shape[-1]
+    w = sparse24_decompress(vals, idx, k)
+    return x @ w.T
+
+
+def linear_int8dq_sparse24(x, qvals, idx, wscale):
+    """INT8 dynamic activation quant + 2:4 sparse int8 weights."""
+    k = x.shape[-1]
+    qx, xscale = quant_int8_rowwise(x)
+    w = sparse24_decompress(qvals.astype(jnp.float32), idx, k)
+    acc = qx.astype(jnp.float32) @ w.T
+    return acc * xscale[:, None] * wscale[None, :]
+
+
+# ---------------------------------------------------------------------------
+# Fake quantization (QAT forward semantics)
+# ---------------------------------------------------------------------------
+
+
+def fake_quant_int4_group_sym(w, group_size: int):
+    """quantize -> dequantize round trip in f32 (STE handled at L2)."""
+    n, k = w.shape
+    g = k // group_size
+    wg = w.reshape(n, g, group_size)
+    amax = jnp.max(jnp.abs(wg), axis=-1)
+    scale = formats.int_symmetric_qparams(amax, 4)
+    q = jnp.clip(jnp.round(wg / scale[..., None]), -8, 7)
+    return (q * scale[..., None]).reshape(n, k)
+
+
+def fake_quant_int8_rowwise(x):
+    q, scale = quant_int8_rowwise(x)
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+# ---------------------------------------------------------------------------
+# NF4 (QLoRA weight format)
+# ---------------------------------------------------------------------------
+
+
+def quant_nf4(w):
+    """w[N,K] -> (packed u8 [N,K//2], absmax scales [N, K//64])."""
+    codes, scales = formats.quantize_nf4(w)
+    return pack_int4(codes.astype(jnp.int8)), scales
+
+
+def dequant_nf4(p, scales):
+    codes = unpack_int4_unsigned(p).astype(jnp.uint8)
+    return formats.dequantize_nf4(codes, scales)
+
+
+def linear_nf4(x, p, scales):
+    """NF4 weight-only linear (QLoRA-style frozen base weight)."""
+    return x @ dequant_nf4(p, scales).T

@@ -1,0 +1,99 @@
+"""Pallas kernels for 2:4 semi-structured sparsity.
+
+Hardware adaptation (DESIGN.md §2): NVIDIA sparse tensor cores consume a
+compressed operand (values + 2-bit metadata) and skip the zeroed lanes for
+a 2x math-rate win. The TPU MXU has no structured-sparsity mode, so the
+kernel reproduces the *memory-system* half of the trick — it streams the
+~2x-smaller compressed operand HBM->VMEM and expands it next to the MXU —
+while the math-rate half is accounted analytically in `perfmodel`.
+
+Metadata layout matches `ref.sparse24_compress`: for each group of 4 along
+K we keep 2 values; `idx` (u8, values 0..3) gives each kept value's original
+position within its group.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .tiling import pad_to, pick_block
+
+
+def _expand_24(vals, idx, k):
+    """Expand compressed [bn, K/2] (+2-bit positions) to dense [bn, K]."""
+    bn = vals.shape[0]
+    g = k // 4
+    vg = vals.reshape(bn, g, 2)
+    ig = idx.reshape(bn, g, 2).astype(jnp.int32)
+    # one-hot scatter without .at[]: dense[p] = sum_j vals[j] * (idx[j]==p)
+    onehot = (ig[..., None] == jnp.arange(4)[None, None, None, :]).astype(
+        jnp.float32
+    )
+    dense = jnp.sum(vg[..., None] * onehot, axis=2)  # [bn, g, 4]
+    return dense.reshape(bn, k)
+
+
+def _matmul_sparse24_kernel(x_ref, v_ref, i_ref, o_ref):
+    x = x_ref[...]
+    k = x.shape[-1]
+    w = _expand_24(v_ref[...], i_ref[...], k)
+    o_ref[...] = jnp.dot(x, w.T, preferred_element_type=jnp.float32)
+
+
+def matmul_sparse24(x, vals, idx):
+    """y = x @ expand(vals, idx).T — f32 2:4 sparse weights."""
+    m, k = x.shape
+    n = vals.shape[0]
+    bm, bn = pick_block(m), pick_block(n)
+    xp, m0 = pad_to(x, 0, bm)
+    vp, n0 = pad_to(vals, 0, bn)
+    ip, _ = pad_to(idx, 0, bn)
+    out = pl.pallas_call(
+        _matmul_sparse24_kernel,
+        grid=(xp.shape[0] // bm, vp.shape[0] // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k // 2), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, k // 2), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], vp.shape[0]), jnp.float32),
+        interpret=True,
+    )(xp, vp, ip)
+    return out[:m0, :n0]
+
+
+def _matmul_int8dq_sparse24_kernel(x_ref, v_ref, i_ref, ws_ref, o_ref):
+    x = x_ref[...]
+    k = x.shape[-1]
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    xscale = jnp.maximum(amax, 1e-12) / 127.0
+    qx = jnp.clip(jnp.round(x / xscale[:, None]), -127, 127)
+    w = _expand_24(v_ref[...].astype(jnp.float32), i_ref[...], k)
+    acc = jnp.dot(qx, w.T, preferred_element_type=jnp.float32)
+    o_ref[...] = acc * xscale[:, None] * ws_ref[...][None, :]
+
+
+def matmul_int8dq_sparse24(x, qvals, idx, wscale):
+    """INT8 dynamic act + int8 2:4-sparse weights (paper §2.2 combo)."""
+    m, k = x.shape
+    n = qvals.shape[0]
+    bm, bn = pick_block(m), pick_block(n)
+    xp, m0 = pad_to(x, 0, bm)
+    vp, n0 = pad_to(qvals, 0, bn)
+    ip, _ = pad_to(idx, 0, bn)
+    wsp, _ = pad_to(wscale, 0, bn)
+    out = pl.pallas_call(
+        _matmul_int8dq_sparse24_kernel,
+        grid=(xp.shape[0] // bm, vp.shape[0] // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k // 2), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, k // 2), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], vp.shape[0]), jnp.float32),
+        interpret=True,
+    )(xp, vp, ip, wsp)
+    return out[:m0, :n0]

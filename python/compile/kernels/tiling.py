@@ -1,0 +1,36 @@
+"""Tiling helpers shared by all Pallas kernels.
+
+Kernels tile over (M, N) with the full K dimension resident in VMEM (the
+models in this repo keep K*max(bm,bn) well under the ~16 MB VMEM budget of a
+TPU core; `ao perfmodel --kernels` reports the exact footprint per kernel).
+Grid cell (i, j) computes the (bm x bn) output tile.
+
+Inputs whose leading dims are not multiples of the block are zero-padded
+here and the result is sliced back — zero rows quantize to zero and
+contribute nothing to matmuls, so padding is semantics-preserving.
+"""
+
+import jax.numpy as jnp
+
+# Default MXU-aligned tile edge. 128 matches both the MXU systolic array and
+# the lane dimension of TPU vector registers.
+TILE = 128
+
+
+def pick_block(dim: int, cap: int = TILE) -> int:
+    """Largest power-of-two block <= cap that is <= dim (>= 8)."""
+    b = 8
+    while b * 2 <= min(dim, cap):
+        b *= 2
+    return b
+
+
+def pad_to(x, axis: int, multiple: int):
+    """Zero-pad `x` along `axis` up to the next multiple. Returns (x, orig)."""
+    orig = x.shape[axis]
+    rem = orig % multiple
+    if rem == 0:
+        return x, orig
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad), orig

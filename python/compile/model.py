@@ -1,0 +1,402 @@
+"""AO Layer-2: Llama-style transformer with quantization-aware linears.
+
+The model is a standard pre-norm decoder (RMSNorm, RoPE, GQA attention,
+SwiGLU MLP). Every projection goes through `quantized_linear`, which
+dispatches on a `QuantScheme` to the Layer-1 Pallas kernels — the same
+dispatch vocabulary the Rust side uses (`rust/src/quant/config.rs`), which
+is how the paper's "same config from training to serving" property is kept.
+
+Graphs exported by aot.py:
+  - prefill:      (params…, tokens[B,S], lens[B]) -> (last-token logits, K, V)
+  - decode_step:  (params…, K, V, token[B], pos[B]) -> (logits, K', V')
+  - nll:          (params…, tokens[B,T], lens[B]) -> (sum_nll[B], ntok[B])
+KV caches are [L, B, Hkv, Smax, Dh] and functionally updated — the Rust
+engine keeps them device-resident between steps (`execute_b`).
+
+Everything is f32: this testbed's CPU PJRT has no bf16 arithmetic advantage,
+so f32 stands in for the paper's BF16 baseline (DESIGN.md §2).
+"""
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels as K
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "small"
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    n_kv_heads: int = 4
+    d_ff: int = 704  # ~8/3 * d_model, 64-aligned for group quantization
+    max_seq: int = 256
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        h = self.n_heads * self.head_dim
+        hkv = self.n_kv_heads * self.head_dim
+        per_layer = d * h + 2 * d * hkv + h * d + 2 * d * f + f * d + 2 * d
+        return v * d + self.n_layers * per_layer + d + v * d
+
+
+# The three scales used across tests/benches/examples. `base` is the
+# end-to-end model (~27M params), sized so a few hundred CPU train steps
+# finish in minutes; DESIGN.md §3 discusses the scale substitution.
+MODEL_SIZES = {
+    "tiny": ModelConfig(
+        name="tiny", vocab=256, d_model=64, n_layers=2, n_heads=4,
+        n_kv_heads=2, d_ff=192, max_seq=128,
+    ),
+    "small": ModelConfig(
+        name="small", vocab=512, d_model=256, n_layers=4, n_heads=8,
+        n_kv_heads=4, d_ff=704, max_seq=256,
+    ),
+    "base": ModelConfig(
+        name="base", vocab=1024, d_model=512, n_layers=8, n_heads=8,
+        n_kv_heads=4, d_ff=1408, max_seq=256,
+    ),
+}
+
+
+@dataclass(frozen=True)
+class QuantScheme:
+    """Mirror of the Rust `QuantConfig` vocabulary (DESIGN.md §1)."""
+
+    kind: str = "f32"
+    group_size: int = 64
+    fmt: str = "e4m3"
+
+    @staticmethod
+    def parse(s: str) -> "QuantScheme":
+        """'int4wo-64' -> QuantScheme('int4wo', 64). 'f32' -> baseline."""
+        if "-" in s and s.split("-")[-1].isdigit():
+            head, g = s.rsplit("-", 1)
+            return QuantScheme(head, int(g))
+        return QuantScheme(s)
+
+    def tag(self) -> str:
+        if self.kind in ("int4wo", "8da4w"):
+            return f"{self.kind}-{self.group_size}"
+        return self.kind
+
+
+SERVING_SCHEMES = [
+    "f32", "int8wo", "int4wo-64", "fp8wo", "fp8dq_row", "fp8dq_tensor",
+    "int8dq", "8da4w-32", "sparse24", "int8dq_sparse24",
+]
+
+# ---------------------------------------------------------------------------
+# Parameter initialization (f32 master weights)
+# ---------------------------------------------------------------------------
+
+LAYER_LINEARS = ("wq", "wk", "wv", "wo", "w1", "w2", "w3")
+
+
+def linear_shapes(cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.n_heads * cfg.head_dim
+    hkv = cfg.n_kv_heads * cfg.head_dim
+    f = cfg.d_ff
+    return {
+        "wq": (h, d), "wk": (hkv, d), "wv": (hkv, d), "wo": (d, h),
+        "w1": (f, d), "w2": (d, f), "w3": (f, d),
+    }
+
+
+def init_params(cfg: ModelConfig, key):
+    """Scaled-normal init; layer weights stacked [L, ...] for lax.scan."""
+    shapes = linear_shapes(cfg)
+    keys = jax.random.split(key, len(shapes) + 2)
+    layers = {}
+    for i, (name, (n, k)) in enumerate(shapes.items()):
+        std = (2.0 / (n + k)) ** 0.5
+        layers[name] = {
+            "w": jax.random.normal(keys[i], (cfg.n_layers, n, k), jnp.float32)
+            * std
+        }
+    layers["attn_norm"] = jnp.ones((cfg.n_layers, cfg.d_model), jnp.float32)
+    layers["mlp_norm"] = jnp.ones((cfg.n_layers, cfg.d_model), jnp.float32)
+    emb = jax.random.normal(keys[-2], (cfg.vocab, cfg.d_model)) * 0.02
+    head = jax.random.normal(keys[-1], (cfg.vocab, cfg.d_model)) * (
+        1.0 / cfg.d_model**0.5
+    )
+    return {
+        "tok_emb": emb.astype(jnp.float32),
+        "layers": layers,
+        "out_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": {"w": head.astype(jnp.float32)},
+    }
+
+
+# ---------------------------------------------------------------------------
+# Quantized linear dispatch (L1 kernel calls)
+# ---------------------------------------------------------------------------
+
+
+def quantized_linear(x2d, p, scheme: QuantScheme):
+    """y[M,N] = x[M,K] @ W[N,K].T where W is stored per `scheme`.
+
+    `p` is this linear's param dict (leaf names match quant_api.quantize_params
+    and the Rust packer)."""
+    k = scheme.kind
+    if k == "f32":
+        return x2d @ p["w"].T
+    if k == "int8wo":
+        return K.matmul_w8a16(x2d, p["q"], p["s"])
+    if k == "int4wo":
+        return K.matmul_w4a16(x2d, p["p"], p["s"], p["zp"], scheme.group_size)
+    if k == "fp8wo":
+        return K.matmul_fp8_wo(x2d, p["c"], p["s"], scheme.fmt)
+    if k == "fp8dq_row":
+        return K.matmul_fp8_rowwise(x2d, p["c"], p["s"], scheme.fmt)
+    if k == "fp8dq_tensor":
+        xscale = jnp.float32(448.0) / jnp.maximum(
+            jnp.max(jnp.abs(x2d)), 1e-12
+        )
+        return K.matmul_fp8_tensorwise(x2d, xscale, p["c"], p["s"], scheme.fmt)
+    if k == "int8dq":
+        return K.matmul_w8a8_dyn(x2d, p["q"], p["s"])
+    if k == "8da4w":
+        return K.matmul_8da4w(x2d, p["p"], p["s"], scheme.group_size)
+    if k == "nf4":
+        return K.matmul_nf4(x2d, p["p"], p["s"])
+    if k == "sparse24":
+        return K.matmul_sparse24(x2d, p["v"], p["i"])
+    if k == "int8dq_sparse24":
+        return K.matmul_int8dq_sparse24(x2d, p["v"], p["i"], p["s"])
+    if k in ("mxfp8", "mxfp6", "mxfp4"):
+        fmt = {"mxfp8": "e4m3", "mxfp6": "e2m3", "mxfp4": "e2m1"}[k]
+        return K.matmul_mx(x2d, p["w"], fmt)
+    raise ValueError(f"unknown quant scheme {k}")
+
+
+# ---------------------------------------------------------------------------
+# Model blocks
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, g, eps):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def rope_tables(cfg: ModelConfig, positions):
+    """cos/sin [..., head_dim//2] at the given positions."""
+    dh = cfg.head_dim
+    inv = cfg.rope_theta ** (
+        -jnp.arange(0, dh, 2, dtype=jnp.float32) / dh
+    )
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., Dh]; cos/sin broadcastable to [..., Dh//2]."""
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x1 * sin + x2 * cos
+    return jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+
+
+def _project(x, p, scheme, cfg, heads):
+    """[B, S, D] -> [B, heads, S, Dh] via a (possibly quantized) linear."""
+    b, s, d = x.shape
+    y = quantized_linear(x.reshape(b * s, d), p, scheme)
+    return y.reshape(b, s, heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+
+def attention_block(x, lp, scheme, cfg, cos, sin, mask, kv=None):
+    """Returns (out [B,S,D], k, v [B,Hkv,S,Dh]). `mask` is [B,1,S,T]
+    additive; when `kv` is given (decode), keys/values come from the cache
+    AFTER inserting the new position (handled by the caller)."""
+    b, s, _ = x.shape
+    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    q = _project(h, lp["wq"], scheme, cfg, cfg.n_heads)
+    kk = _project(h, lp["wk"], scheme, cfg, cfg.n_kv_heads)
+    vv = _project(h, lp["wv"], scheme, cfg, cfg.n_kv_heads)
+    q = apply_rope(q, cos[:, None], sin[:, None])  # [B,H,S,Dh]
+    kk = apply_rope(kk, cos[:, None], sin[:, None])
+    keys, vals = (kk, vv) if kv is None else kv
+    rep = cfg.n_heads // cfg.n_kv_heads
+    keys_r = jnp.repeat(keys, rep, axis=1)
+    vals_r = jnp.repeat(vals, rep, axis=1)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, keys_r) / cfg.head_dim**0.5
+    scores = scores + mask
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhst,bhtd->bhsd", attn, vals_r)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    out = quantized_linear(
+        ctx.reshape(b * s, -1), lp["wo"], scheme
+    ).reshape(b, s, -1)
+    return out, kk, vv
+
+
+def mlp_block(x, lp, scheme, cfg):
+    b, s, d = x.shape
+    h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps).reshape(b * s, d)
+    g = quantized_linear(h, lp["w1"], scheme)
+    u = quantized_linear(h, lp["w3"], scheme)
+    y = quantized_linear(jax.nn.silu(g) * u, lp["w2"], scheme)
+    return y.reshape(b, s, d)
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, tokens, lens, cfg: ModelConfig, scheme: QuantScheme,
+            smax: int):
+    """tokens [B,S] (right-padded), lens [B] -> (last-token logits [B,V],
+    K, V [L,B,Hkv,Smax,Dh])."""
+    b, s = tokens.shape
+    x = params["tok_emb"][tokens]  # [B,S,D]
+    pos = jnp.arange(s)
+    cos, sin = rope_tables(cfg, pos)  # [S, Dh/2]
+    causal = jnp.tril(jnp.ones((s, s), jnp.float32))
+    keymask = (jnp.arange(s)[None, :] < lens[:, None]).astype(jnp.float32)
+    mask01 = causal[None, None] * keymask[:, None, None, :]
+    mask = jnp.where(mask01 > 0, 0.0, -1e9)
+
+    def layer_fn(h, lp):
+        a, kk, vv = attention_block(
+            h, lp, scheme, cfg, cos[None], sin[None], mask
+        )
+        h = h + a
+        h = h + mlp_block(h, lp, scheme, cfg)
+        return h, (kk, vv)
+
+    x, (ks, vs) = jax.lax.scan(layer_fn, x, params["layers"])
+    x = rms_norm(x, params["out_norm"], cfg.norm_eps)
+    last = jnp.take_along_axis(
+        x, (lens - 1)[:, None, None].astype(jnp.int32), axis=1
+    )[:, 0]  # [B, D]
+    logits = quantized_linear(last, params["lm_head"], scheme)
+    # pad caches to Smax so decode shapes are static
+    pad = smax - s
+    ks = jnp.pad(ks, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    vs = jnp.pad(vs, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    return logits, ks, vs
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params, kcache, vcache, token, pos, cfg: ModelConfig,
+                scheme: QuantScheme):
+    """One token for every sequence in the batch.
+
+    kcache/vcache [L,B,Hkv,Smax,Dh]; token [B] int32; pos [B] int32 (the
+    position this token occupies). Returns (logits [B,V], k', v').
+    Slots whose pos is stale simply produce logits that the Rust engine
+    ignores — static shapes are the serving contract (DESIGN.md §4).
+    """
+    b = token.shape[0]
+    smax = kcache.shape[3]
+    x = params["tok_emb"][token][:, None]  # [B,1,D]
+    cos, sin = rope_tables(cfg, pos)  # [B, Dh/2]
+    cos, sin = cos[:, None], sin[:, None]  # [B,1,Dh/2]
+    tpos = jnp.arange(smax)
+    # attend to positions <= pos[b]
+    mask01 = (tpos[None, :] <= pos[:, None]).astype(jnp.float32)
+    mask = jnp.where(mask01 > 0, 0.0, -1e9)[:, None, None, :]  # [B,1,1,Smax]
+    barange = jnp.arange(b)
+
+    def layer_fn(h, carry):
+        lp, kc, vc = carry
+        hn = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        q = _project(hn, lp["wq"], scheme, cfg, cfg.n_heads)  # [B,H,1,Dh]
+        kk = _project(hn, lp["wk"], scheme, cfg, cfg.n_kv_heads)
+        vv = _project(hn, lp["wv"], scheme, cfg, cfg.n_kv_heads)
+        q = apply_rope(q, cos[:, :, None], sin[:, :, None])
+        kk = apply_rope(kk, cos[:, :, None], sin[:, :, None])
+        kc = kc.at[barange, :, pos].set(kk[:, :, 0])
+        vc = vc.at[barange, :, pos].set(vv[:, :, 0])
+        rep = cfg.n_heads // cfg.n_kv_heads
+        keys_r = jnp.repeat(kc, rep, axis=1)  # [B,H,Smax,Dh]
+        vals_r = jnp.repeat(vc, rep, axis=1)
+        scores = jnp.einsum("bhsd,bhtd->bhst", q, keys_r) / cfg.head_dim**0.5
+        scores = scores + mask
+        attn = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhst,bhtd->bhsd", attn, vals_r)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b, 1, -1)
+        a = quantized_linear(
+            ctx.reshape(b, -1), lp["wo"], scheme
+        ).reshape(b, 1, -1)
+        h = h + a
+        h = h + mlp_block(h, lp, scheme, cfg)
+        return h, (kc, vc)
+
+    x, (kout, vout) = jax.lax.scan(
+        layer_fn, x, (params["layers"], kcache, vcache)
+    )
+    x = rms_norm(x[:, 0], params["out_norm"], cfg.norm_eps)
+    logits = quantized_linear(x, params["lm_head"], scheme)
+    return logits, kout, vout
+
+
+# ---------------------------------------------------------------------------
+# NLL (evaluation: perplexity + multiple-choice scoring)
+# ---------------------------------------------------------------------------
+
+
+def nll(params, tokens, lens, cfg: ModelConfig, scheme: QuantScheme,
+        prefix_lens=None):
+    """tokens [B,T] right-padded; predicts tokens[:,1:] from tokens[:,:-1].
+
+    Returns (sum_nll [B], ntok [B]). When `prefix_lens` is given, positions
+    before the prefix are excluded (hellaswag-style continuation scoring).
+    """
+    b, t = tokens.shape
+    s = t - 1
+    x = params["tok_emb"][tokens[:, :s]]
+    pos = jnp.arange(s)
+    cos, sin = rope_tables(cfg, pos)
+    causal = jnp.tril(jnp.ones((s, s), jnp.float32))
+    keymask = (jnp.arange(s)[None, :] < (lens - 1)[:, None]).astype(
+        jnp.float32
+    )
+    mask = jnp.where(
+        (causal[None, None] * keymask[:, None, None, :]) > 0, 0.0, -1e9
+    )
+
+    def layer_fn(h, lp):
+        a, _, _ = attention_block(
+            h, lp, scheme, cfg, cos[None], sin[None], mask
+        )
+        h = h + a
+        h = h + mlp_block(h, lp, scheme, cfg)
+        return h, None
+
+    x, _ = jax.lax.scan(layer_fn, x, params["layers"])
+    x = rms_norm(x, params["out_norm"], cfg.norm_eps)
+    logits = quantized_linear(
+        x.reshape(b * s, -1), params["lm_head"], scheme
+    ).reshape(b, s, -1)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = tokens[:, 1:]
+    tok_nll = -jnp.take_along_axis(logp, tgt[:, :, None], axis=-1)[..., 0]
+    valid = (jnp.arange(s)[None, :] < (lens - 1)[:, None]).astype(jnp.float32)
+    if prefix_lens is not None:
+        valid = valid * (
+            jnp.arange(s)[None, :] >= (prefix_lens - 1)[:, None]
+        ).astype(jnp.float32)
+    return (tok_nll * valid).sum(axis=1), valid.sum(axis=1)

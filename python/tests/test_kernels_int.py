@@ -1,0 +1,137 @@
+"""Integer quantization Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/group sizes; fixed-seed numpy drives the data.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+ATOL = 2e-4  # f32 matmul over K<=512 with values O(10)
+
+
+def _data(seed, m, n, k, scale=1.0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(scale=scale, size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(scale=scale, size=(n, k)).astype(np.float32))
+    return x, w
+
+
+shapes = st.tuples(
+    st.integers(1, 33),  # M: includes non-multiples of the block
+    st.sampled_from([8, 24, 48, 96]),  # N
+    st.sampled_from([32, 64, 128, 256]),  # K
+)
+
+
+@settings(max_examples=12, deadline=None)
+@given(shapes, st.integers(0, 2**31 - 1))
+def test_quant_int8_rowwise(shape, seed):
+    m, n, k = shape
+    x, _ = _data(seed, m, n, k)
+    qk, sk = K.quant_int8_rowwise(x)
+    qr, sr = ref.quant_int8_rowwise(x)
+    np.testing.assert_array_equal(np.asarray(qk), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-6)
+
+
+@settings(max_examples=12, deadline=None)
+@given(shapes, st.integers(0, 2**31 - 1))
+def test_matmul_w8a16(shape, seed):
+    m, n, k = shape
+    x, w = _data(seed, m, n, k)
+    qw, ws = ref.quant_int8_channelwise(w)
+    np.testing.assert_allclose(
+        np.asarray(K.matmul_w8a16(x, qw, ws)),
+        np.asarray(ref.linear_w8a16(x, qw, ws)),
+        atol=ATOL, rtol=1e-4,
+    )
+
+
+@settings(max_examples=12, deadline=None)
+@given(shapes, st.sampled_from([32, 64, 128]), st.integers(0, 2**31 - 1))
+def test_matmul_w4a16(shape, group, seed):
+    m, n, k = shape
+    if k % group != 0:
+        return
+    x, w = _data(seed, m, n, k)
+    q, s, zp = ref.quant_int4_group_asym(w, group)
+    p = ref.pack_int4(q)
+    np.testing.assert_allclose(
+        np.asarray(K.matmul_w4a16(x, p, s, zp, group)),
+        np.asarray(ref.linear_w4a16(x, p, s, zp, group)),
+        atol=ATOL, rtol=1e-4,
+    )
+
+
+@settings(max_examples=12, deadline=None)
+@given(shapes, st.integers(0, 2**31 - 1))
+def test_matmul_w8a8_dyn(shape, seed):
+    m, n, k = shape
+    x, w = _data(seed, m, n, k)
+    qw, ws = ref.quant_int8_channelwise(w)
+    np.testing.assert_allclose(
+        np.asarray(K.matmul_w8a8_dyn(x, qw, ws)),
+        np.asarray(ref.linear_w8a8_dyn(x, qw, ws)),
+        atol=ATOL, rtol=1e-4,
+    )
+
+
+@settings(max_examples=12, deadline=None)
+@given(shapes, st.sampled_from([32, 64]), st.integers(0, 2**31 - 1))
+def test_matmul_8da4w(shape, group, seed):
+    m, n, k = shape
+    if k % group != 0:
+        return
+    x, w = _data(seed, m, n, k)
+    q, s = ref.quant_int4_group_sym(w, group)
+    p = ref.pack_int4(q)
+    np.testing.assert_allclose(
+        np.asarray(K.matmul_8da4w(x, p, s, group)),
+        np.asarray(ref.linear_8da4w(x, p, s, group)),
+        atol=ATOL, rtol=1e-4,
+    )
+
+
+def test_pack_unpack_roundtrip(rng):
+    q = jnp.asarray(rng.integers(-8, 8, size=(16, 64)).astype(np.int8))
+    p = ref.pack_int4(q)
+    u = ref.unpack_int4_signed(p)
+    np.testing.assert_array_equal(np.asarray(u), np.asarray(q, dtype=np.float32))
+    qu = jnp.asarray(rng.integers(0, 16, size=(16, 64)).astype(np.uint8))
+    pu = ref.pack_int4(qu)
+    uu = ref.unpack_int4_unsigned(pu)
+    np.testing.assert_array_equal(np.asarray(uu), np.asarray(qu, np.float32))
+
+
+def test_int4_asym_dequant_error_bound(rng):
+    """Dequantization error must be <= scale/2 per element."""
+    w = jnp.asarray(rng.normal(size=(8, 128)).astype(np.float32))
+    q, s, zp = ref.quant_int4_group_asym(w, 32)
+    wd = ref.dequant_int4_group_asym(ref.pack_int4(q), s, zp, 32)
+    err = np.abs(np.asarray(wd - w)).reshape(8, 4, 32)
+    bound = np.asarray(s)[..., None] / 2 + 1e-6
+    assert (err <= bound).all()
+
+
+def test_fake_quant_matches_quant_dequant(rng):
+    """QAT fake-quant == PTQ quantize->dequantize: the paper's end-to-end
+    consistency invariant, at the kernel level."""
+    w = jnp.asarray(rng.normal(size=(16, 128)).astype(np.float32))
+    fq = K.fake_quant_int4_group(w, 32)
+    q, s = ref.quant_int4_group_sym(w, 32)
+    deq = ref.dequant_int4_group_sym(ref.pack_int4(q), s, 32)
+    np.testing.assert_allclose(np.asarray(fq), np.asarray(deq), atol=1e-6)
+
+
+def test_fake_quant_int8_rowwise(rng):
+    x = jnp.asarray(rng.normal(size=(9, 64)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(K.fake_quant_int8_rowwise(x)),
+        np.asarray(ref.fake_quant_int8_rowwise(x)),
+        atol=1e-6,
+    )

@@ -1,0 +1,144 @@
+"""MX block-format and 2:4 sparsity kernels vs oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import formats
+from compile import kernels as K
+from compile.kernels import ref
+
+
+def _data(seed, m, n, k, scale=1.0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(scale=scale, size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(scale=scale, size=(n, k)).astype(np.float32))
+    return x, w
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(1, 33),
+    st.sampled_from([32, 64, 128, 256]),
+    st.sampled_from(["e4m3", "e2m3", "e3m2", "e2m1"]),
+    st.integers(0, 2**31 - 1),
+)
+def test_quant_mx_matches_ref(m, k, fmt, seed):
+    x, _ = _data(seed, m, 8, k)
+    ek, sk = K.quant_mx(x, fmt)
+    er, sr = ref.quant_mx(x, formats.FORMATS[fmt])
+    np.testing.assert_array_equal(np.asarray(ek), np.asarray(er))
+    np.testing.assert_array_equal(np.asarray(sk), np.asarray(sr))
+    # dequant round trip
+    dk = K.dequant_mx(ek, sk)
+    dr = ref.dequant_mx(er, sr)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dr), atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    st.tuples(st.integers(1, 17), st.sampled_from([8, 24]), st.sampled_from([64, 128])),
+    st.sampled_from(["e4m3", "e2m1"]),
+    st.integers(0, 2**31 - 1),
+)
+def test_matmul_mx(shape, fmt, seed):
+    m, n, k = shape
+    x, w = _data(seed, m, n, k)
+    np.testing.assert_allclose(
+        np.asarray(K.matmul_mx(x, w, fmt)),
+        np.asarray(ref.linear_mx(x, w, formats.FORMATS[fmt])),
+        atol=3e-4, rtol=1e-4,
+    )
+
+
+def test_mx_error_ordering(rng):
+    """mxfp8 must reconstruct better than mxfp6 better than mxfp4."""
+    x = jnp.asarray(rng.normal(size=(64, 256)).astype(np.float32))
+    errs = []
+    for name in ["e4m3", "e3m2", "e2m1"]:
+        e, s = ref.quant_mx(x, formats.FORMATS[name])
+        errs.append(float(jnp.abs(ref.dequant_mx(e, s) - x).mean()))
+    assert errs[0] < errs[1] < errs[2]
+
+
+# --- 2:4 sparsity ---
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(1, 24), st.sampled_from([8, 32]), st.sampled_from([32, 64, 128]),
+    st.integers(0, 2**31 - 1),
+)
+def test_sparse24_prune_invariants(n, _n2, k, seed):
+    _, w = _data(seed, 4, n, k)
+    wp = np.asarray(ref.sparse24_prune(w))
+    groups = wp.reshape(n, k // 4, 4)
+    nonzero = (groups != 0).sum(axis=-1)
+    assert (nonzero <= 2).all()
+    # pruning keeps the two largest magnitudes of each group
+    orig = np.asarray(w).reshape(n, k // 4, 4)
+    kept_mass = np.abs(groups).sum(-1)
+    top2 = np.sort(np.abs(orig), axis=-1)[..., 2:].sum(-1)
+    np.testing.assert_allclose(kept_mass, top2, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.tuples(st.integers(1, 17), st.sampled_from([8, 24]), st.sampled_from([32, 64])),
+    st.integers(0, 2**31 - 1),
+)
+def test_sparse24_compress_roundtrip(shape, seed):
+    _, n, k = shape
+    _, w = _data(seed, 4, n, k)
+    wp = ref.sparse24_prune(w)
+    v, i = ref.sparse24_compress(wp)
+    d = ref.sparse24_decompress(v, i, k)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(wp), atol=0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.tuples(st.integers(1, 17), st.sampled_from([8, 24]), st.sampled_from([32, 64, 128])),
+    st.integers(0, 2**31 - 1),
+)
+def test_matmul_sparse24(shape, seed):
+    m, n, k = shape
+    x, w = _data(seed, m, n, k)
+    v, i = ref.sparse24_compress(ref.sparse24_prune(w))
+    np.testing.assert_allclose(
+        np.asarray(K.matmul_sparse24(x, v, i)),
+        np.asarray(ref.linear_sparse24(x, v, i)),
+        atol=2e-4, rtol=1e-4,
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    st.tuples(st.integers(1, 17), st.sampled_from([8, 24]), st.sampled_from([32, 64])),
+    st.integers(0, 2**31 - 1),
+)
+def test_matmul_int8dq_sparse24(shape, seed):
+    m, n, k = shape
+    x, w = _data(seed, m, n, k)
+    wp = ref.sparse24_prune(w)
+    v, i = ref.sparse24_compress(wp)
+    # int8-quantize the kept values per channel
+    amax = jnp.maximum(jnp.max(jnp.abs(v), axis=-1), 1e-12)
+    ws = amax / 127.0
+    qv = jnp.clip(jnp.round(v / ws[:, None]), -127, 127).astype(jnp.int8)
+    np.testing.assert_allclose(
+        np.asarray(K.matmul_int8dq_sparse24(x, qv, i, ws)),
+        np.asarray(ref.linear_int8dq_sparse24(x, qv, i, ws)),
+        atol=2e-4, rtol=1e-4,
+    )
+
+
+def test_sparse24_footprint():
+    """Compressed operand must be ~56% of dense f32 (vals f32 + idx u8)."""
+    k = 128
+    n = 64
+    dense_bytes = n * k * 4
+    comp_bytes = n * (k // 2) * 4 + n * (k // 2) * 1
+    assert comp_bytes / dense_bytes == pytest.approx(0.625)

@@ -1,0 +1,150 @@
+"""Training-graph tests on the tiny config: descent, recipe parity, QAT
+freezing, AdamW behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import MODEL_SIZES, init_params
+from compile.train import (
+    OptConfig,
+    add_lora_params,
+    fp8_linear,
+    init_opt_state,
+    lora_mask,
+    loss_fn,
+    train_step,
+)
+
+CFG = MODEL_SIZES["tiny"]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    m, v = init_opt_state(params)
+    rng = np.random.default_rng(11)
+    toks = jnp.asarray(rng.integers(0, CFG.vocab, (4, 33)), jnp.int32)
+    return params, m, v, toks
+
+
+def test_bf16_loss_descends(setup):
+    params, m, v, toks = setup
+    step = jax.jit(
+        lambda p, mm, vv, s, t: train_step(p, mm, vv, s, t, CFG, "bf16",
+                                           OptConfig(lr=1e-3, warmup=1))
+    )
+    losses = []
+    for i in range(8):
+        params, m, v, loss = step(params, m, v, jnp.float32(i + 1), toks)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+@pytest.mark.parametrize(
+    "recipe", ["fp8_tensorwise", "fp8_rowwise", "fp8_rowwise_gw_hp"]
+)
+def test_fp8_recipe_loss_close_to_bf16(setup, recipe):
+    """Paper Fig 4: fp8 training loss tracks the bf16 loss closely."""
+    params, m, v, toks = setup
+    l_bf16 = float(loss_fn(params, toks, CFG, "bf16"))
+    l_fp8 = float(loss_fn(params, toks, CFG, recipe))
+    assert abs(l_fp8 - l_bf16) / l_bf16 < 0.02
+
+
+def test_fp8_recipes_descend(setup):
+    params, m, v, toks = setup
+    step = jax.jit(
+        lambda p, mm, vv, s, t: train_step(
+            p, mm, vv, s, t, CFG, "fp8_rowwise", OptConfig(lr=1e-3, warmup=1)
+        )
+    )
+    losses = []
+    for i in range(5):
+        params, m, v, loss = step(params, m, v, jnp.float32(i + 1), toks)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+
+
+def test_fp8_linear_grads_close_to_exact():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(16, 32)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(24, 32)).astype(np.float32))
+
+    def f8(x, w):
+        return fp8_linear(x, w, "fp8_rowwise").sum()
+
+    def fexact(x, w):
+        return (x @ w.T).sum()
+
+    g8 = jax.grad(f8, argnums=(0, 1))(x, w)
+    ge = jax.grad(fexact, argnums=(0, 1))(x, w)
+    for a, b in zip(g8, ge):
+        denom = np.abs(np.asarray(b)).mean() + 1e-6
+        assert np.abs(np.asarray(a - b)).mean() / denom < 0.05
+
+
+def test_qat_descends_and_uses_fake_quant(setup):
+    params, m, v, toks = setup
+    l_qat = float(loss_fn(params, toks, CFG, "qat_8da4w"))
+    l_bf = float(loss_fn(params, toks, CFG, "bf16"))
+    assert l_qat != l_bf  # fake quant actually perturbs numerics
+    step = jax.jit(
+        lambda p, mm, vv, s, t: train_step(
+            p, mm, vv, s, t, CFG, "qat_8da4w", OptConfig(lr=1e-3, warmup=1)
+        )
+    )
+    losses = []
+    for i in range(5):
+        params, m, v, loss = step(params, m, v, jnp.float32(i + 1), toks)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+
+
+def test_qat_lora_freezes_base(setup):
+    params, _, _, toks = setup
+    lp = add_lora_params(params, CFG, 8, jax.random.PRNGKey(1))
+    mask = lora_mask(lp)
+    m, v = init_opt_state(lp)
+    step = jax.jit(
+        lambda p, mm, vv, s, t: train_step(
+            p, mm, vv, s, t, CFG, "qat_8da4w_lora",
+            OptConfig(lr=1e-3, warmup=1), mask
+        )
+    )
+    p2, m2, v2, _ = step(lp, m, v, jnp.float32(1), toks)
+    p3, _, _, _ = step(p2, m2, v2, jnp.float32(2), toks)
+    for name in ("wq", "w1"):
+        assert bool(
+            jnp.all(p3["layers"][name]["w"] == lp["layers"][name]["w"])
+        ), f"base {name} moved"
+        assert not bool(
+            jnp.all(p3["layers"][name]["b"] == lp["layers"][name]["b"])
+        ), f"lora {name} frozen"
+    # embeddings frozen too (mask), norms trainable
+    assert bool(jnp.all(p3["tok_emb"] == lp["tok_emb"]))
+
+
+def test_lora_adds_factors_everywhere():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    lp = add_lora_params(params, CFG, 4, jax.random.PRNGKey(1))
+    for name in ("wq", "wk", "wv", "wo", "w1", "w2", "w3"):
+        assert lp["layers"][name]["a"].shape[1] == 4
+        assert bool(jnp.all(lp["layers"][name]["b"] == 0.0))
+
+
+def test_adamw_warmup():
+    """No update excursion on step 1 thanks to warmup + bias correction."""
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    m, v = init_opt_state(params)
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(0, CFG.vocab, (2, 17)), jnp.int32)
+    p2, _, _, _ = train_step(
+        params, m, v, jnp.float32(1), toks, CFG, "bf16",
+        OptConfig(lr=1e-3, warmup=20)
+    )
+    delta = float(
+        jnp.abs(p2["layers"]["wq"]["w"] - params["layers"]["wq"]["w"]).max()
+    )
+    assert delta < 1e-3  # lr is warmup-scaled on step 1

@@ -1,0 +1,91 @@
+//! Figure 3 — FP8 vs BF16 speedup of LayerNorm→Linear→Sigmoid (fwd+bwd)
+//! by forward (M, K, N).
+//!
+//! Paper: an H100 microbenchmark grid; small shapes lose (~0.75x), large
+//! shapes win (up to ~1.5x), growing along all three dims.
+//!
+//! Here: (a) the H100 roofline-model grid over the paper's exact sizes —
+//! this is the reproduction of the figure's *shape*; (b) measured CPU
+//! wall-times of the AOT fig3 artifacts (bf16 vs emulated fp8) for the
+//! small shapes that fit this testbed — labeled emulation overhead, NOT a
+//! speedup claim.
+
+use ao::perfmodel::{fig3_speedup, H100};
+use ao::runtime::Runtime;
+use ao::tensor::HostTensor;
+use ao::util::rng::Rng;
+use ao::util::stats::{bench, summarize};
+
+fn main() -> anyhow::Result<()> {
+    ao::util::log::init();
+    println!("=== Figure 3: FP8 vs BF16 LayerNorm->Linear->Sigmoid ===\n");
+    println!("model: H100 roofline grid (speedup = t_bf16 / t_fp8):");
+    let sizes = [1024usize, 2048, 4096, 8192, 16384];
+    print!("{:>6} {:>6} |", "M", "K");
+    for n in sizes {
+        print!(" {n:>7}");
+    }
+    println!();
+    let mut cells = Vec::new();
+    for m in sizes {
+        for k in sizes {
+            print!("{m:>6} {k:>6} |");
+            for n in sizes {
+                let v = fig3_speedup(&H100, m, k, n);
+                cells.push(((m, k, n), v));
+                print!(" {v:>7.2}");
+            }
+            println!();
+        }
+    }
+    let min = cells.iter().cloned().fold(f64::INFINITY, |a, (_, v)| a.min(v));
+    let max = cells.iter().cloned().fold(0.0f64, |a, (_, v)| a.max(v));
+    println!(
+        "\nrange {min:.2}..{max:.2} (paper: 0.74..1.57); crossover to >1 at \
+         mid-size shapes, largest shapes win most — matching Fig 3's shape."
+    );
+
+    // measured CPU pass over the exported microbench artifacts
+    let dir = ao::default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let runtime = Runtime::open(&dir)?;
+        println!("\nmeasured (CPU, fp8 *emulated* — ratio <1 is emulation \
+                  overhead, not a speedup claim):");
+        println!(
+            "{:>6} {:>6} {:>6} {:>12} {:>12} {:>8}",
+            "M", "K", "N", "bf16 (ms)", "fp8-emu (ms)", "ratio"
+        );
+        let mut rng = Rng::new(1);
+        for (m, k, n) in [(64usize, 256usize, 256usize), (256, 256, 1024), (256, 1024, 1024)] {
+            let mut time_one = |mode: &str| -> anyhow::Result<f64> {
+                let name = format!("fig3_{mode}_m{m}_k{k}_n{n}");
+                if runtime.manifest.artifact(&name).is_err() {
+                    return Ok(f64::NAN);
+                }
+                let x = HostTensor::f32(
+                    vec![m, k],
+                    (0..m * k).map(|_| rng.normal() as f32).collect(),
+                );
+                let w = HostTensor::f32(
+                    vec![n, k],
+                    (0..n * k).map(|_| rng.normal() as f32).collect(),
+                );
+                let g = HostTensor::f32(vec![k], vec![1.0; k]);
+                let lits = [x.to_literal()?, w.to_literal()?, g.to_literal()?];
+                let samples = bench(2, 8, || {
+                    runtime.run(&name, &lits).unwrap();
+                });
+                Ok(summarize(&samples).p50 * 1e3)
+            };
+            let t_bf16 = time_one("bf16")?;
+            let t_fp8 = time_one("fp8")?;
+            println!(
+                "{m:>6} {k:>6} {n:>6} {t_bf16:>12.2} {t_fp8:>12.2} {:>8.2}",
+                t_bf16 / t_fp8
+            );
+        }
+    } else {
+        println!("\n(no artifacts; run `make artifacts` for the measured pass)");
+    }
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Table 4 — Post-training quantization sweep.
+//!
+//! Paper (Llama3.1-8B, 1xH100, bs=1, torch.compile): PTQ cuts model size
+//! 2–4x and raises decode throughput up to 2x while roughly holding
+//! hellaswag accuracy and wikitext word ppl (int4wo-64 degrades most).
+//!
+//! Here: the trained `small` model swept through the same configs. Model
+//! size is the *real packed byte count*; accuracy/ppl are measured through
+//! the quantized serving graphs; throughput is a single-stream decode loop
+//! (bs=1-per-slot, matching the paper's bs=1).
+
+use ao::benchsupport as bs;
+use ao::data::workload::WorkloadSpec;
+use ao::quant::table4_configs;
+
+fn main() -> anyhow::Result<()> {
+    ao::util::log::init();
+    let steps = bs::bench_steps(60);
+    let n_items = 48;
+    println!("=== Table 4: PTQ sweep ===");
+    println!("model=small ({steps}-step fine-tune), greedy decode\n");
+
+    let (master, _) = bs::trained_ckpt("small", "bf16", steps)?;
+    let spec = WorkloadSpec {
+        n_requests: 8,
+        max_prompt_tokens: 64,
+        max_output_tokens: 32,
+        ..Default::default()
+    };
+
+    let mut t = bs::Table::new(&[
+        "Quantization",
+        "acc",
+        "word ppl",
+        "tok/s",
+        "size (MiB)",
+        "size ratio",
+    ]);
+    let mut extra = vec![
+        "int8dq".to_string(),
+        "8da4w-32".to_string(),
+    ];
+    let mut tags: Vec<String> = table4_configs()
+        .iter()
+        .map(|c| c.tag())
+        .collect();
+    tags.append(&mut extra);
+    let mut f32_size = 0f64;
+    for tag in tags {
+        let (ckpt, size_mib) = if tag == "f32" {
+            let bytes = ao::ckpt::Checkpoint::load(&master)?.total_bytes();
+            f32_size = bytes as f64 / (1024.0 * 1024.0);
+            (master.clone(), f32_size)
+        } else {
+            let (p, report) = bs::quantized_ckpt(&master, &tag)?;
+            (p, report.packed_bytes as f64 / (1024.0 * 1024.0))
+        };
+        let (acc, wppl, _tppl) =
+            bs::eval_ckpt("small", &tag, &ckpt, n_items, 6)?;
+        let m = bs::serve_workload("small", &tag, &ckpt, &spec)?;
+        let cfg = ao::quant::QuantConfig::parse(&tag)?;
+        t.row(vec![
+            cfg.display(),
+            format!("{:.2}", acc * 100.0),
+            format!("{wppl:.3}"),
+            format!("{:.1}", m.output_tok_per_s()),
+            format!("{size_mib:.2}"),
+            format!("{:.2}x", f32_size / size_mib),
+        ]);
+    }
+    t.print();
+    println!(
+        "\npaper shape check: size 2-4x down (int4 most), acc/ppl near \
+         baseline except int4wo; throughput gains on H100 come from \
+         halved/quartered weight traffic (weight-only decode is \
+         memory-bound) — the size column here is the real packed byte \
+         count driving that effect."
+    );
+    Ok(())
+}

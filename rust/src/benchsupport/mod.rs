@@ -1,0 +1,197 @@
+//! Shared plumbing for the paper-reproduction benches (rust/benches/*).
+//!
+//! Benches are plain `harness = false` mains (criterion is not in the
+//! offline registry); each regenerates one table/figure. This module keeps
+//! them short: corpus/checkpoint caching, in-process serving runs, and a
+//! tiny table printer.
+
+use crate::ckpt::Checkpoint;
+use crate::coordinator::engine::{self, EngineConfig};
+use crate::coordinator::metrics::MetricsCollector;
+use crate::coordinator::request::{Event, SubmitReq};
+use crate::data::corpus::standard_corpus;
+use crate::data::dataset::PackedDataset;
+use crate::data::workload::{self, WorkloadSpec};
+use crate::quant::{quantize_checkpoint, QuantConfig};
+use crate::tokenizer::Tokenizer;
+use crate::train::{TrainReport, Trainer};
+use anyhow::Result;
+use std::path::PathBuf;
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+/// Steps used when a bench needs a trained model. Override with
+/// AO_BENCH_STEPS; the default keeps every bench minutes-scale on 1 core.
+pub fn bench_steps(default: usize) -> usize {
+    std::env::var("AO_BENCH_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+pub fn corpus_pair() -> (String, String) {
+    let train_p = crate::runs_dir().join("corpus_train.txt");
+    let val_p = crate::runs_dir().join("corpus_val.txt");
+    if train_p.exists() && val_p.exists() {
+        (
+            std::fs::read_to_string(&train_p).unwrap(),
+            std::fs::read_to_string(&val_p).unwrap(),
+        )
+    } else {
+        let c = standard_corpus(7, 512 * 1024, 64 * 1024);
+        let _ = std::fs::write(&train_p, &c.train);
+        let _ = std::fs::write(&val_p, &c.val);
+        (c.train, c.val)
+    }
+}
+
+/// Train (or reuse a cached) checkpoint for (model, recipe, steps).
+pub fn trained_ckpt(
+    model: &str,
+    recipe: &str,
+    steps: usize,
+) -> Result<(PathBuf, Option<TrainReport>)> {
+    let path = crate::runs_dir()
+        .join(format!("bench_{model}_{recipe}_{steps}.aockpt"));
+    if path.exists() {
+        return Ok((path, None));
+    }
+    let (train_text, _) = corpus_pair();
+    let tok = Tokenizer::byte_level();
+    let mut trainer =
+        Trainer::new(&crate::default_artifacts_dir(), model, recipe, 0)?;
+    let ds = PackedDataset::from_text(&tok, &train_text, trainer.seq());
+    let report = trainer.run(&ds, steps, 0xA0, |i, loss, _| {
+        if i % 20 == 0 {
+            eprintln!("  [{model}/{recipe}] step {i} loss {loss:.3}");
+        }
+    })?;
+    trainer.export_checkpoint()?.save(&path)?;
+    Ok((path, Some(report)))
+}
+
+/// Quantize a master ckpt into runs/ (cached) and return its path + sizes.
+pub fn quantized_ckpt(
+    master_path: &PathBuf,
+    tag: &str,
+) -> Result<(PathBuf, crate::quant::SizeReport)> {
+    let cfg = QuantConfig::parse(tag)?;
+    let master = Checkpoint::load(master_path)?;
+    let (packed, report) = quantize_checkpoint(&master, cfg)?;
+    let stem = master_path.file_stem().unwrap().to_str().unwrap();
+    let path = crate::runs_dir().join(format!("{stem}_{tag}.aockpt"));
+    packed.save(&path)?;
+    Ok((path, report))
+}
+
+/// Run a full serving workload in-process; returns engine metrics.
+pub fn serve_workload(
+    model: &str,
+    scheme: &str,
+    ckpt_path: &PathBuf,
+    spec: &WorkloadSpec,
+) -> Result<MetricsCollector> {
+    let reqs = workload::generate(spec);
+    let tok = Tokenizer::byte_level();
+    let (handle, join) = engine::spawn(EngineConfig {
+        artifacts_dir: crate::default_artifacts_dir(),
+        ckpt_path: ckpt_path.clone(),
+        model: model.into(),
+        scheme: scheme.into(),
+        eos_token: None,
+    });
+    let mut rxs = Vec::new();
+    for r in &reqs {
+        let (tx, rx) = channel();
+        handle.submit(SubmitReq {
+            id: r.id,
+            prompt_tokens: tok.encode(&r.prompt),
+            max_new_tokens: r.max_new_tokens,
+            temperature: 0.0,
+            seed: r.id,
+            tx,
+            submitted_at: Instant::now(),
+        })?;
+        rxs.push(rx);
+    }
+    for rx in rxs {
+        for ev in rx {
+            if matches!(ev, Event::Done(_) | Event::Error(_)) {
+                break;
+            }
+        }
+    }
+    handle.shutdown();
+    join.join().expect("engine thread")
+}
+
+/// Evaluate (hellaswag-proxy acc, word ppl, token ppl) for a checkpoint.
+pub fn eval_ckpt(
+    model: &str,
+    scheme: &str,
+    ckpt_path: &PathBuf,
+    n_items: usize,
+    ppl_batches: usize,
+) -> Result<(f64, f64, f64)> {
+    let runtime = crate::runtime::Runtime::open(&crate::default_artifacts_dir())?;
+    let ckpt = Checkpoint::load(ckpt_path)?;
+    let ev = crate::evalh::Evaluator::new(&runtime, model, scheme, &ckpt)?;
+    let (_, val) = corpus_pair();
+    let tok = Tokenizer::byte_level();
+    let ids = tok.encode(&val);
+    let n_words = val.split_whitespace().count();
+    let ppl = ev.perplexity(&ids, n_words, ppl_batches)?;
+    let items = crate::data::evaltask::generate(0xE7A1, n_items, 2);
+    let acc = ev.hellaswag(&items, &tok)?;
+    Ok((acc, ppl.word_ppl, ppl.token_ppl))
+}
+
+/// Fixed-width table printer for bench output.
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!(
+            "{}",
+            widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}

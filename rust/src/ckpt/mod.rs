@@ -1,0 +1,211 @@
+//! AOCKPT: the repo's checkpoint container (safetensors analog).
+//!
+//! Layout:
+//!   bytes 0..8    magic "AOCKPT1\n"
+//!   bytes 8..16   u64 LE header length H
+//!   bytes 16..16+H  JSON header:
+//!     {"meta": {...}, "tensors": [{"name","dtype","shape","offset","nbytes"}]}
+//!   then padding to a 64-byte boundary, then raw little-endian blobs at
+//!   the stated offsets (relative to the data section start).
+//!
+//! Tensor order in the header is preserved on write and read (offsets are
+//! assigned in header order), and names are unique. Both f32 master
+//! checkpoints and packed quantized checkpoints use this container.
+
+use crate::tensor::{Data, DType, HostTensor};
+use crate::util::json::{self, Value};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"AOCKPT1\n";
+const ALIGN: usize = 64;
+
+#[derive(Debug, Default)]
+pub struct Checkpoint {
+    /// Insertion-ordered tensors (order matters for artifact binding).
+    pub names: Vec<String>,
+    pub tensors: BTreeMap<String, HostTensor>,
+    pub meta: Value,
+}
+
+impl Checkpoint {
+    pub fn new() -> Checkpoint {
+        Checkpoint {
+            names: Vec::new(),
+            tensors: BTreeMap::new(),
+            meta: Value::Obj(Default::default()),
+        }
+    }
+
+    pub fn insert(&mut self, name: &str, t: HostTensor) {
+        if !self.tensors.contains_key(name) {
+            self.names.push(name.to_string());
+        }
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&HostTensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("checkpoint missing tensor '{name}'"))
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.tensors.values().map(|t| t.byte_size()).sum()
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut entries = Vec::new();
+        let mut offset = 0usize;
+        for name in &self.names {
+            let t = &self.tensors[name];
+            let nbytes = t.byte_size();
+            entries.push(json::obj(vec![
+                ("name", json::s(name)),
+                ("dtype", json::s(t.dtype().name())),
+                (
+                    "shape",
+                    json::arr(
+                        t.shape.iter().map(|&d| json::num(d as f64)).collect(),
+                    ),
+                ),
+                ("offset", json::num(offset as f64)),
+                ("nbytes", json::num(nbytes as f64)),
+            ]));
+            offset += nbytes;
+            offset = offset.div_ceil(ALIGN) * ALIGN;
+        }
+        let header = json::obj(vec![
+            ("meta", self.meta.clone()),
+            ("tensors", json::arr(entries)),
+        ])
+        .to_string();
+
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("create {}", path.display()))?,
+        );
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        let data_start = 16 + header.len();
+        let pad = data_start.div_ceil(ALIGN) * ALIGN - data_start;
+        f.write_all(&vec![0u8; pad])?;
+        let mut pos = 0usize;
+        for name in &self.names {
+            let t = &self.tensors[name];
+            f.write_all(t.data.bytes())?;
+            pos += t.byte_size();
+            let next = pos.div_ceil(ALIGN) * ALIGN;
+            f.write_all(&vec![0u8; next - pos])?;
+            pos = next;
+        }
+        f.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{} is not an AOCKPT file", path.display());
+        }
+        let mut lenb = [0u8; 8];
+        f.read_exact(&mut lenb)?;
+        let hlen = u64::from_le_bytes(lenb) as usize;
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = Value::parse(std::str::from_utf8(&hbuf)?)
+            .map_err(|e| anyhow::anyhow!("bad ckpt header: {e}"))?;
+        let data_start = 16 + hlen;
+        let pad = data_start.div_ceil(ALIGN) * ALIGN - data_start;
+        std::io::copy(&mut f.by_ref().take(pad as u64), &mut std::io::sink())?;
+        let mut rest = Vec::new();
+        f.read_to_end(&mut rest)?;
+
+        let mut ckpt = Checkpoint::new();
+        ckpt.meta = header.get("meta").cloned().unwrap_or(Value::Null);
+        for e in header.req("tensors")?.as_arr().context("tensors not arr")? {
+            let name = e.req_str("name")?;
+            let dtype = DType::parse(e.req_str("dtype")?)?;
+            let shape: Vec<usize> = e
+                .req("shape")?
+                .as_arr()
+                .context("shape not arr")?
+                .iter()
+                .map(|v| v.as_usize().unwrap())
+                .collect();
+            let offset = e.req_usize("offset")?;
+            let nbytes = e.req_usize("nbytes")?;
+            if offset + nbytes > rest.len() {
+                bail!("tensor '{name}' extends past end of file");
+            }
+            let data =
+                Data::from_bytes(dtype, &rest[offset..offset + nbytes])?;
+            ckpt.insert(name, HostTensor::new(shape, data)?);
+        }
+        Ok(ckpt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("ao_ckpt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_mixed_dtypes() {
+        let mut c = Checkpoint::new();
+        c.insert("w", HostTensor::f32(vec![2, 3], vec![1.0; 6]));
+        c.insert("q", HostTensor::s8(vec![4], vec![-1, 2, -3, 4]));
+        c.insert("p", HostTensor::u8(vec![2], vec![0xAB, 0xCD]));
+        c.insert("idx", HostTensor::s32(vec![2], vec![7, -9]));
+        c.meta = json::obj(vec![("model", json::s("tiny"))]);
+        let path = tmpfile("roundtrip.aockpt");
+        c.save(&path).unwrap();
+        let c2 = Checkpoint::load(&path).unwrap();
+        assert_eq!(c2.names, c.names);
+        for n in &c.names {
+            assert_eq!(c2.tensors[n], c.tensors[n], "{n}");
+        }
+        assert_eq!(c2.meta.req_str("model").unwrap(), "tiny");
+    }
+
+    #[test]
+    fn order_preserved() {
+        let mut c = Checkpoint::new();
+        for i in 0..10 {
+            c.insert(&format!("t{i}"), HostTensor::f32(vec![1], vec![i as f32]));
+        }
+        let path = tmpfile("order.aockpt");
+        c.save(&path).unwrap();
+        let c2 = Checkpoint::load(&path).unwrap();
+        assert_eq!(c2.names, (0..10).map(|i| format!("t{i}")).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmpfile("bad.aockpt");
+        std::fs::write(&path, b"NOTACKPT").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn total_bytes() {
+        let mut c = Checkpoint::new();
+        c.insert("a", HostTensor::f32(vec![4], vec![0.0; 4]));
+        c.insert("b", HostTensor::u8(vec![4], vec![0; 4]));
+        assert_eq!(c.total_bytes(), 20);
+    }
+}

@@ -1,0 +1,151 @@
+//! Admission queue + continuous-batching policy.
+//!
+//! Policy (vLLM-default-like, adapted to static shapes):
+//!   - FCFS admission whenever a slot is free.
+//!   - Prefill is batched: up to `max_prefill_batch` waiting requests are
+//!     prefetched together in one prefill call (they must share a sequence
+//!     bucket; the shortest-bucket-that-fits is chosen per group).
+//!   - Decode proceeds every iteration over all active slots.
+
+use super::request::SubmitReq;
+use std::collections::VecDeque;
+
+pub struct Batcher {
+    pub queue: VecDeque<SubmitReq>,
+    /// available prefill sequence buckets, ascending
+    pub buckets: Vec<usize>,
+}
+
+impl Batcher {
+    pub fn new(mut buckets: Vec<usize>) -> Batcher {
+        buckets.sort_unstable();
+        Batcher { queue: VecDeque::new(), buckets }
+    }
+
+    pub fn push(&mut self, req: SubmitReq) {
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Smallest bucket that fits a prompt of `len` tokens; None -> too long.
+    pub fn bucket_for(&self, len: usize) -> Option<usize> {
+        self.buckets.iter().copied().find(|&b| b >= len)
+    }
+
+    /// Pop up to `n_free` requests that share one bucket (the bucket of the
+    /// queue head, FCFS). Returns (bucket, requests); empty if none fit.
+    pub fn take_prefill_group(&mut self, n_free: usize) -> (usize, Vec<SubmitReq>) {
+        let mut group = Vec::new();
+        if n_free == 0 || self.queue.is_empty() {
+            return (0, group);
+        }
+        let head_len = self.queue[0].prompt_tokens.len();
+        let Some(bucket) = self.bucket_for(head_len) else {
+            // head cannot fit any bucket: reject it so the queue advances
+            let req = self.queue.pop_front().unwrap();
+            let _ = req.tx.send(super::request::Event::Error(format!(
+                "prompt of {head_len} tokens exceeds the largest prefill \
+                 bucket ({})",
+                self.buckets.last().copied().unwrap_or(0)
+            )));
+            return (0, group);
+        };
+        while group.len() < n_free {
+            match self.queue.front() {
+                Some(r)
+                    if self
+                        .bucket_for(r.prompt_tokens.len())
+                        .map(|b| b == bucket)
+                        .unwrap_or(false) =>
+                {
+                    group.push(self.queue.pop_front().unwrap());
+                }
+                _ => break,
+            }
+        }
+        (bucket, group)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::time::Instant;
+
+    fn req(len: usize) -> (SubmitReq, std::sync::mpsc::Receiver<super::super::request::Event>) {
+        let (tx, rx) = channel();
+        (
+            SubmitReq {
+                id: 0,
+                prompt_tokens: vec![5; len],
+                max_new_tokens: 4,
+                temperature: 0.0,
+                seed: 0,
+                tx,
+                submitted_at: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let b = Batcher::new(vec![128, 32]);
+        assert_eq!(b.bucket_for(10), Some(32));
+        assert_eq!(b.bucket_for(32), Some(32));
+        assert_eq!(b.bucket_for(33), Some(128));
+        assert_eq!(b.bucket_for(129), None);
+    }
+
+    #[test]
+    fn groups_share_bucket_fcfs() {
+        let mut b = Batcher::new(vec![32, 128]);
+        let (r1, _k1) = req(10);
+        let (r2, _k2) = req(20);
+        let (r3, _k3) = req(100); // different bucket
+        let (r4, _k4) = req(5);
+        b.push(r1);
+        b.push(r2);
+        b.push(r3);
+        b.push(r4);
+        let (bucket, group) = b.take_prefill_group(8);
+        assert_eq!(bucket, 32);
+        assert_eq!(group.len(), 2, "stops at the 128-bucket request");
+        let (bucket2, group2) = b.take_prefill_group(8);
+        assert_eq!(bucket2, 128);
+        assert_eq!(group2.len(), 1);
+    }
+
+    #[test]
+    fn respects_free_slots() {
+        let mut b = Batcher::new(vec![32]);
+        for _ in 0..5 {
+            let (r, rx) = req(8);
+            std::mem::forget(rx);
+            b.push(r);
+        }
+        let (_, group) = b.take_prefill_group(3);
+        assert_eq!(group.len(), 3);
+        assert_eq!(b.pending(), 2);
+    }
+
+    #[test]
+    fn oversized_prompt_rejected() {
+        let mut b = Batcher::new(vec![32]);
+        let (r, rx) = req(100);
+        b.push(r);
+        let (_, group) = b.take_prefill_group(4);
+        assert!(group.is_empty());
+        assert_eq!(b.pending(), 0);
+        match rx.try_recv().unwrap() {
+            super::super::request::Event::Error(e) => {
+                assert!(e.contains("exceeds"))
+            }
+            _ => panic!("expected error event"),
+        }
+    }
+}

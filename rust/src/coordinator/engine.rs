@@ -1,0 +1,607 @@
+//! The serving engine: continuous batching over AOT prefill/decode
+//! artifacts with a persistent KV cache.
+//!
+//! One OS thread owns everything PJRT (the runtime is deliberately
+//! `!Send`); the rest of the process talks to it through an
+//! `EngineHandle`. Each loop iteration:
+//!
+//!   1. drain incoming commands into the batcher queue
+//!   2. admit waiting requests into free KV slots (batched prefill; the
+//!      first output token is sampled straight from the prefill logits)
+//!   3. run one decode step over the full static batch; sample a token for
+//!      every active slot, stream it out, retire finished requests
+//!
+//! KV caches live as XLA literals and flow output->input between steps —
+//! the engine never reinterprets their bytes except when splicing freshly
+//! prefilled rows into the persistent cache.
+
+use super::batcher::Batcher;
+use super::kvslots::{Slot, SlotTable};
+use super::metrics::MetricsCollector;
+use super::request::{Event, FinishInfo, FinishReason, SubmitReq};
+use crate::ckpt::Checkpoint;
+use crate::runtime::Runtime;
+use crate::tensor::HostTensor;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::time::Instant;
+use xla::{Literal, PjRtBuffer};
+
+use crate::runtime::OwnedBuffer;
+
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub artifacts_dir: PathBuf,
+    pub ckpt_path: PathBuf,
+    pub model: String,
+    pub scheme: String,
+    /// stop generating a sequence when this token appears (None = never)
+    pub eos_token: Option<u32>,
+}
+
+pub enum Command {
+    Submit(SubmitReq),
+    /// flush metrics: respond with the formatted report
+    Report(Sender<String>),
+    Shutdown,
+}
+
+/// Cloneable, Send handle to the engine thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: Sender<Command>,
+}
+
+impl EngineHandle {
+    pub fn submit(&self, req: SubmitReq) -> Result<()> {
+        self.tx
+            .send(Command::Submit(req))
+            .map_err(|_| anyhow!("engine thread is gone"))
+    }
+
+    pub fn report(&self) -> Result<String> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Command::Report(tx))
+            .map_err(|_| anyhow!("engine thread is gone"))?;
+        Ok(rx.recv()?)
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Command::Shutdown);
+    }
+}
+
+/// Spawn the engine on its own thread; returns (handle, join handle).
+pub fn spawn(
+    cfg: EngineConfig,
+) -> (EngineHandle, std::thread::JoinHandle<Result<MetricsCollector>>) {
+    let (tx, rx) = channel();
+    let join = std::thread::Builder::new()
+        .name("ao-engine".into())
+        .spawn(move || -> Result<MetricsCollector> {
+            let mut engine = Engine::new(cfg)?;
+            engine.serve(rx)?;
+            Ok(std::mem::take(&mut engine.metrics))
+        })
+        .expect("spawn engine thread");
+    (EngineHandle { tx }, join)
+}
+
+struct ActiveRequest {
+    tx: Sender<Event>,
+    submitted_at: Instant,
+    first_token_at: Option<Instant>,
+    last_token_at: Option<Instant>,
+    token_gaps: Vec<f64>,
+}
+
+pub struct Engine {
+    pub runtime: Runtime,
+    cfg: EngineConfig,
+    /// weights in artifact input order, uploaded to device buffers ONCE —
+    /// the serving hot loop never re-copies them
+    decode_params: Vec<OwnedBuffer>,
+    decode_name: String,
+    /// per-bucket prefill artifact names
+    prefill_names: Vec<(usize, String)>, // (seq, name)
+    slots: SlotTable,
+    batch: usize,
+    smax: usize,
+    kcache: Literal,
+    vcache: Literal,
+    /// host mirror shapes for cache splicing
+    kv_dims: (usize, usize, usize, usize, usize), // l, b, h, s, d
+    batcher: Batcher,
+    requests: Vec<Option<ActiveRequest>>,
+    /// token sampled last step per slot, to be consumed by the next decode
+    pending: Vec<i32>,
+    pub metrics: MetricsCollector,
+    _rng: Rng,
+    /// non-XLA engine overhead accounting (perf)
+    pub overhead_s: f64,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig) -> Result<Engine> {
+        let runtime = Runtime::open(&cfg.artifacts_dir)?;
+        let decode_specs =
+            runtime.manifest.find("decode", &cfg.model, Some(&cfg.scheme));
+        let decode = decode_specs
+            .first()
+            .with_context(|| {
+                format!(
+                    "no decode artifact for model={} scheme={}",
+                    cfg.model, cfg.scheme
+                )
+            })?;
+        let decode_name = decode.name.clone();
+        let batch = decode.batch;
+        let smax = decode.smax;
+        let kidx = decode.input_index("kcache")?;
+        let kshape = decode.inputs[kidx].shape.clone();
+        let kv_dims =
+            (kshape[0], kshape[1], kshape[2], kshape[3], kshape[4]);
+
+        let mut prefill_names: Vec<(usize, String)> = runtime
+            .manifest
+            .find("prefill", &cfg.model, Some(&cfg.scheme))
+            .iter()
+            .map(|s| (s.seq, s.name.clone()))
+            .collect();
+        prefill_names.sort();
+        if prefill_names.is_empty() {
+            bail!("no prefill artifacts for {}/{}", cfg.model, cfg.scheme);
+        }
+
+        // Load weights once, in decode-artifact order.
+        let ckpt = Checkpoint::load(&cfg.ckpt_path)?;
+        let decode_spec = runtime.spec(&decode_name)?.clone();
+        let mut decode_params = Vec::new();
+        for spec in &decode_spec.inputs {
+            let Some(pname) = spec.name.strip_prefix("params.") else {
+                continue;
+            };
+            let t = ckpt.get(pname).with_context(|| {
+                format!(
+                    "checkpoint {} lacks '{pname}' needed by artifact \
+                     '{decode_name}' — was it quantized with scheme {}?",
+                    cfg.ckpt_path.display(), cfg.scheme
+                )
+            })?;
+            if t.shape != spec.shape || t.dtype().name() != spec.dtype {
+                bail!(
+                    "checkpoint tensor '{pname}' is {:?} {} but artifact \
+                     wants {:?} {}",
+                    t.shape, t.dtype().name(), spec.shape, spec.dtype
+                );
+            }
+            decode_params.push(runtime.to_buffer(t.to_literal()?)?);
+        }
+
+        let kcache = HostTensor::zeros(
+            crate::tensor::DType::F32,
+            kshape.clone(),
+        )
+        .to_literal()?;
+        let vcache = HostTensor::zeros(crate::tensor::DType::F32, kshape)
+            .to_literal()?;
+
+        let buckets = prefill_names.iter().map(|(s, _)| *s).collect();
+        Ok(Engine {
+            runtime,
+            decode_params,
+            decode_name,
+            prefill_names,
+            slots: SlotTable::new(batch, smax),
+            batch,
+            smax,
+            kcache,
+            vcache,
+            kv_dims,
+            batcher: Batcher::new(buckets),
+            requests: (0..batch).map(|_| None).collect(),
+            pending: vec![0; batch],
+            metrics: MetricsCollector::new(),
+            _rng: Rng::new(0xE1_61_4E),
+            overhead_s: 0.0,
+            cfg,
+        })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Main loop: runs until Shutdown and queue drained.
+    pub fn serve(&mut self, rx: Receiver<Command>) -> Result<()> {
+        self.metrics.begin();
+        let mut shutting_down = false;
+        loop {
+            // 1. drain the command channel (block only when fully idle)
+            loop {
+                if self.slots.is_empty()
+                    && self.batcher.pending() == 0
+                    && !shutting_down
+                {
+                    match rx.recv() {
+                        Ok(cmd) => {
+                            if self.handle(cmd, &mut shutting_down) {
+                                continue;
+                            }
+                        }
+                        Err(_) => shutting_down = true,
+                    }
+                }
+                match rx.try_recv() {
+                    Ok(cmd) => {
+                        self.handle(cmd, &mut shutting_down);
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        shutting_down = true;
+                        break;
+                    }
+                }
+            }
+            if shutting_down
+                && self.slots.is_empty()
+                && self.batcher.pending() == 0
+            {
+                break;
+            }
+            // 2. admission via batched prefill
+            while self.slots.n_free() > 0 && self.batcher.pending() > 0 {
+                let (bucket, group) =
+                    self.batcher.take_prefill_group(self.slots.n_free());
+                if group.is_empty() {
+                    break;
+                }
+                self.prefill(bucket, group)?;
+            }
+            // 3. one decode step over the batch
+            if !self.slots.is_empty() {
+                self.decode_step()?;
+            }
+        }
+        self.metrics.finish();
+        Ok(())
+    }
+
+    fn handle(&mut self, cmd: Command, shutting_down: &mut bool) -> bool {
+        match cmd {
+            Command::Submit(req) => {
+                self.batcher.push(req);
+                true
+            }
+            Command::Report(tx) => {
+                let _ = tx.send(self.metrics.report("engine"));
+                true
+            }
+            Command::Shutdown => {
+                *shutting_down = true;
+                false
+            }
+        }
+    }
+
+    /// Run one batched prefill for `group`, splice their KV rows into the
+    /// persistent cache, sample + stream each request's first token.
+    fn prefill(&mut self, bucket: usize, group: Vec<SubmitReq>) -> Result<()> {
+        let t_overhead = Instant::now();
+        let name = self
+            .prefill_names
+            .iter()
+            .find(|(s, _)| *s == bucket)
+            .map(|(_, n)| n.clone())
+            .ok_or_else(|| anyhow!("no prefill artifact for bucket {bucket}"))?;
+
+        let b = self.batch;
+        let mut tokens = vec![0i32; b * bucket];
+        let mut lens = vec![1i32; b]; // dummy rows attend to 1 pad token
+        for (row, req) in group.iter().enumerate() {
+            let n = req.prompt_tokens.len().min(bucket);
+            for (j, &t) in req.prompt_tokens[..n].iter().enumerate() {
+                tokens[row * bucket + j] = t as i32;
+            }
+            lens[row] = n as i32;
+        }
+        let extra = [
+            self.runtime.to_buffer(
+                HostTensor::s32(vec![b, bucket], tokens).to_literal()?,
+            )?,
+            self.runtime
+                .to_buffer(HostTensor::s32(vec![b], lens).to_literal()?)?,
+        ];
+        let mut inputs: Vec<&PjRtBuffer> =
+            self.decode_params.iter().map(|o| &o.buffer).collect();
+        inputs.extend(extra.iter().map(|o| &o.buffer));
+        self.overhead_s += t_overhead.elapsed().as_secs_f64();
+
+        let outs = self.runtime.run_buffers(&name, &inputs)?;
+        self.metrics.prefill_calls += 1;
+
+        let t_overhead = Instant::now();
+        let logits = HostTensor::from_literal(&outs[0])?;
+        let knew = HostTensor::from_literal(&outs[1])?;
+        let vnew = HostTensor::from_literal(&outs[2])?;
+        let mut khost = HostTensor::from_literal(&self.kcache)?;
+        let mut vhost = HostTensor::from_literal(&self.vcache)?;
+
+        for (row, req) in group.into_iter().enumerate() {
+            let n_prompt = req.prompt_tokens.len().min(bucket);
+            let seed = req.seed ^ req.id;
+            let slot = Slot {
+                request_id: req.id,
+                pos: n_prompt,
+                n_prompt,
+                n_generated: 0,
+                max_new_tokens: req.max_new_tokens,
+                temperature: req.temperature,
+                rng_state: seed,
+            };
+            let idx = self
+                .slots
+                .claim(slot)
+                .ok_or_else(|| anyhow!("slot table full during prefill"))?;
+            // splice this row's fresh KV into the persistent cache row idx
+            splice_kv(&mut khost, &knew, self.kv_dims, row, idx)?;
+            splice_kv(&mut vhost, &vnew, self.kv_dims, row, idx)?;
+            // first output token comes straight from the prefill logits
+            let vocab = logits.shape[1];
+            let lrow = &logits.as_f32()?[row * vocab..(row + 1) * vocab];
+            let mut rng = Rng::new(seed);
+            let tok = sample(lrow, req.temperature, &mut rng);
+            self.slots.get_mut(idx).unwrap().rng_state = rng.next_u64();
+
+            let now = Instant::now();
+            let active = ActiveRequest {
+                tx: req.tx,
+                submitted_at: req.submitted_at,
+                first_token_at: Some(now),
+                last_token_at: Some(now),
+                token_gaps: Vec::new(),
+            };
+            let _ = active.tx.send(Event::Token(tok));
+            self.requests[idx] = Some(active);
+            self.apply_sampled_token(idx, tok)?;
+        }
+        self.kcache = khost.to_literal()?;
+        self.vcache = vhost.to_literal()?;
+        self.overhead_s += t_overhead.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    /// Record a sampled token for slot `idx`: the token will be fed to the
+    /// next decode step (it is written into `pending_tokens`). Finishes the
+    /// request if limits are reached.
+    fn apply_sampled_token(&mut self, idx: usize, tok: u32) -> Result<()> {
+        let slot = self.slots.get_mut(idx).unwrap();
+        slot.n_generated += 1;
+        let eos_hit = self.cfg.eos_token == Some(tok);
+        let len_hit = slot.n_generated >= slot.max_new_tokens;
+        let ctx_hit = slot.pos + 1 >= self.smax;
+        if eos_hit || len_hit || ctx_hit {
+            let reason = if eos_hit {
+                FinishReason::Eos
+            } else if len_hit {
+                FinishReason::Length
+            } else {
+                FinishReason::ContextFull
+            };
+            self.finish_slot(idx, reason);
+        } else {
+            // token enters the cache on the next decode step
+            self.pending_token(idx, tok);
+        }
+        Ok(())
+    }
+
+    fn pending_token(&mut self, idx: usize, tok: u32) {
+        self.pending[idx] = tok as i32;
+    }
+
+    fn finish_slot(&mut self, idx: usize, reason: FinishReason) {
+        let slot = self.slots.release(idx).unwrap();
+        if let Some(req) = self.requests[idx].take() {
+            let now = Instant::now();
+            let ttft = req
+                .first_token_at
+                .map(|t| (t - req.submitted_at).as_secs_f64())
+                .unwrap_or(0.0);
+            let total = (now - req.submitted_at).as_secs_f64();
+            let tpot = if req.token_gaps.is_empty() {
+                0.0
+            } else {
+                req.token_gaps.iter().sum::<f64>() / req.token_gaps.len() as f64
+            };
+            self.metrics.record_request(
+                slot.n_prompt,
+                slot.n_generated,
+                ttft,
+                &req.token_gaps,
+            );
+            let _ = req.tx.send(Event::Done(FinishInfo {
+                id: slot.request_id,
+                n_prompt: slot.n_prompt,
+                n_generated: slot.n_generated,
+                ttft_s: ttft,
+                tpot_s: tpot,
+                total_s: total,
+                reason,
+            }));
+        }
+    }
+
+    /// One decode step over the full static batch.
+    fn decode_step(&mut self) -> Result<()> {
+        let t_overhead = Instant::now();
+        let b = self.batch;
+        let mut tokens = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        let active = self.slots.active_indices();
+        for &i in &active {
+            tokens[i] = self.pending[i];
+            pos[i] = self.slots.get(i).unwrap().pos as i32;
+        }
+        let extra = [
+            self.runtime.to_buffer(self.kcache.clone())?,
+            self.runtime.to_buffer(self.vcache.clone())?,
+            self.runtime
+                .to_buffer(HostTensor::s32(vec![b], tokens).to_literal()?)?,
+            self.runtime
+                .to_buffer(HostTensor::s32(vec![b], pos).to_literal()?)?,
+        ];
+        let mut inputs: Vec<&PjRtBuffer> =
+            self.decode_params.iter().map(|o| &o.buffer).collect();
+        inputs.extend(extra.iter().map(|o| &o.buffer));
+        self.overhead_s += t_overhead.elapsed().as_secs_f64();
+
+        let decode_name = self.decode_name.clone();
+        let outs = self.runtime.run_buffers(&decode_name, &inputs)?;
+        self.metrics.decode_steps += 1;
+        self.metrics.total_slot_steps += b;
+        self.metrics.active_slot_steps += active.len();
+
+        let t_overhead = Instant::now();
+        let logits = HostTensor::from_literal(&outs[0])?;
+        self.kcache = outs[1].clone();
+        self.vcache = outs[2].clone();
+        let vocab = logits.shape[1];
+        let now = Instant::now();
+        for i in active {
+            let slot = self.slots.get_mut(i).unwrap();
+            slot.pos += 1;
+            let mut rng = Rng::new(slot.rng_state);
+            let temp = slot.temperature;
+            let lrow = &logits.as_f32()?[i * vocab..(i + 1) * vocab];
+            let tok = sample(lrow, temp, &mut rng);
+            self.slots.get_mut(i).unwrap().rng_state = rng.next_u64();
+            if let Some(req) = self.requests[i].as_mut() {
+                if let Some(last) = req.last_token_at {
+                    req.token_gaps.push((now - last).as_secs_f64());
+                }
+                req.last_token_at = Some(now);
+                let _ = req.tx.send(Event::Token(tok));
+            }
+            self.apply_sampled_token(i, tok)?;
+        }
+        self.overhead_s += t_overhead.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+
+    // exposed for the bench harness / tests
+    pub fn xla_seconds(&self) -> f64 {
+        *self.runtime.xla_seconds.borrow()
+    }
+}
+
+/// Copy row `src_row` of a freshly prefilled KV tensor into row `dst_row`
+/// of the persistent cache. Layout [L, B, H, S, D] — row (l, b) is the
+/// contiguous H*S*D block at (l*B + b).
+fn splice_kv(
+    cache: &mut HostTensor,
+    fresh: &HostTensor,
+    dims: (usize, usize, usize, usize, usize),
+    src_row: usize,
+    dst_row: usize,
+) -> Result<()> {
+    let (l, b, h, s, d) = dims;
+    let block = h * s * d;
+    if fresh.shape != vec![l, b, h, s, d] {
+        bail!("prefill kv shape {:?} != cache {:?}", fresh.shape, dims);
+    }
+    let src = fresh.as_f32()?.to_vec();
+    let dst = match &mut cache.data {
+        crate::tensor::Data::F32(v) => v,
+        _ => bail!("kv cache must be f32"),
+    };
+    for li in 0..l {
+        let so = (li * b + src_row) * block;
+        let doff = (li * b + dst_row) * block;
+        dst[doff..doff + block].copy_from_slice(&src[so..so + block]);
+    }
+    Ok(())
+}
+
+/// Sample a token from logits (greedy at temperature 0, else softmax with
+/// temperature).
+pub fn sample(logits: &[f32], temperature: f32, rng: &mut Rng) -> u32 {
+    if temperature <= 0.0 {
+        return argmax(logits) as u32;
+    }
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f64> = logits
+        .iter()
+        .map(|&l| (((l - max) / temperature) as f64).exp())
+        .collect();
+    let z: f64 = exps.iter().sum();
+    let mut target = rng.f64() * z;
+    for (i, e) in exps.iter().enumerate() {
+        target -= e;
+        if target <= 0.0 {
+            return i as u32;
+        }
+    }
+    (logits.len() - 1) as u32
+}
+
+fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_greedy_is_argmax() {
+        let mut rng = Rng::new(0);
+        assert_eq!(sample(&[0.1, 3.0, -1.0], 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn sample_temperature_varies() {
+        let mut rng = Rng::new(0);
+        let logits = [1.0f32, 1.0, 1.0, 1.0];
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..64 {
+            seen.insert(sample(&logits, 1.0, &mut rng));
+        }
+        assert!(seen.len() > 1, "uniform logits should mix");
+    }
+
+    #[test]
+    fn splice_kv_moves_one_row() {
+        let dims = (2usize, 3usize, 2usize, 4usize, 2usize);
+        let n = 2 * 3 * 2 * 4 * 2;
+        let mut cache = HostTensor::f32(vec![2, 3, 2, 4, 2], vec![0.0; n]);
+        let fresh = HostTensor::f32(
+            vec![2, 3, 2, 4, 2],
+            (0..n).map(|i| i as f32).collect(),
+        );
+        splice_kv(&mut cache, &fresh, dims, 1, 2).unwrap();
+        let c = cache.as_f32().unwrap();
+        let f = fresh.as_f32().unwrap();
+        let block = 2 * 4 * 2;
+        // dst row 2 of layer 0 == src row 1 of layer 0
+        assert_eq!(&c[2 * block..3 * block], &f[block..2 * block]);
+        // dst row 1 untouched
+        assert!(c[block..2 * block].iter().all(|&x| x == 0.0));
+        // layer 1 rows also spliced
+        let l1 = 3 * block;
+        assert_eq!(
+            &c[l1 + 2 * block..l1 + 3 * block],
+            &f[l1 + block..l1 + 2 * block]
+        );
+    }
+}

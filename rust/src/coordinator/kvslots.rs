@@ -1,0 +1,126 @@
+//! Batch-slot bookkeeping for the static-shape KV cache.
+//!
+//! The decode artifact operates on a fixed batch B with caches
+//! [L, B, Hkv, Smax, Dh]; a slot is one batch row. This is the
+//! static-shape analog of vLLM's block tables: admission = claiming a
+//! free row, completion = releasing it. Idle rows still flow through the
+//! GEMMs (their logits are ignored) — that wasted compute is exactly the
+//! trade the paper's serving stack makes for static shapes on
+//! non-paged backends.
+
+#[derive(Debug, Clone)]
+pub struct Slot {
+    pub request_id: u64,
+    /// next position to be written in the cache (== current seq length)
+    pub pos: usize,
+    pub n_prompt: usize,
+    pub n_generated: usize,
+    pub max_new_tokens: usize,
+    pub temperature: f32,
+    pub rng_state: u64,
+}
+
+#[derive(Debug)]
+pub struct SlotTable {
+    slots: Vec<Option<Slot>>,
+    pub smax: usize,
+}
+
+impl SlotTable {
+    pub fn new(batch: usize, smax: usize) -> SlotTable {
+        SlotTable { slots: vec![None; batch], smax }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn n_free(&self) -> usize {
+        self.batch() - self.n_active()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_active() == 0
+    }
+
+    pub fn claim(&mut self, slot: Slot) -> Option<usize> {
+        let idx = self.slots.iter().position(|s| s.is_none())?;
+        self.slots[idx] = Some(slot);
+        Some(idx)
+    }
+
+    pub fn release(&mut self, idx: usize) -> Option<Slot> {
+        self.slots[idx].take()
+    }
+
+    pub fn get(&self, idx: usize) -> Option<&Slot> {
+        self.slots[idx].as_ref()
+    }
+
+    pub fn get_mut(&mut self, idx: usize) -> Option<&mut Slot> {
+        self.slots[idx].as_mut()
+    }
+
+    pub fn active_indices(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_some())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Slots that still have room to grow (pos < smax).
+    pub fn has_context_room(&self, idx: usize) -> bool {
+        self.get(idx).map(|s| s.pos < self.smax).unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slot(id: u64) -> Slot {
+        Slot {
+            request_id: id, pos: 4, n_prompt: 4, n_generated: 0,
+            max_new_tokens: 8, temperature: 0.0, rng_state: 0,
+        }
+    }
+
+    #[test]
+    fn claim_release_cycle() {
+        let mut t = SlotTable::new(2, 16);
+        assert_eq!(t.n_free(), 2);
+        let a = t.claim(slot(1)).unwrap();
+        let b = t.claim(slot(2)).unwrap();
+        assert_ne!(a, b);
+        assert!(t.claim(slot(3)).is_none(), "table full");
+        t.release(a);
+        assert_eq!(t.n_free(), 1);
+        let c = t.claim(slot(3)).unwrap();
+        assert_eq!(c, a, "released slot is reused");
+    }
+
+    #[test]
+    fn active_indices_sorted() {
+        let mut t = SlotTable::new(4, 16);
+        t.claim(slot(1));
+        t.claim(slot(2));
+        t.claim(slot(3));
+        t.release(1);
+        assert_eq!(t.active_indices(), vec![0, 2]);
+    }
+
+    #[test]
+    fn context_room() {
+        let mut t = SlotTable::new(1, 8);
+        let i = t.claim(slot(9)).unwrap();
+        assert!(t.has_context_room(i));
+        t.get_mut(i).unwrap().pos = 8;
+        assert!(!t.has_context_room(i));
+    }
+}

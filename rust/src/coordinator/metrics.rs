@@ -1,0 +1,131 @@
+//! Serving metrics: the quantities Table 1 reports (output token
+//! throughput, time per output token, inter-token latency) plus TTFT.
+
+use crate::util::stats::{summarize, Summary};
+use std::time::Instant;
+
+#[derive(Debug, Default)]
+pub struct MetricsCollector {
+    start: Option<Instant>,
+    end: Option<Instant>,
+    pub ttft_s: Vec<f64>,
+    pub tpot_s: Vec<f64>,
+    /// all inter-token gaps across all requests
+    pub itl_s: Vec<f64>,
+    pub n_output_tokens: usize,
+    pub n_prompt_tokens: usize,
+    pub n_requests: usize,
+    /// engine-side accounting
+    pub decode_steps: usize,
+    pub prefill_calls: usize,
+    pub active_slot_steps: usize,
+    pub total_slot_steps: usize,
+}
+
+impl MetricsCollector {
+    pub fn new() -> Self {
+        Default::default()
+    }
+
+    pub fn begin(&mut self) {
+        self.start.get_or_insert_with(Instant::now);
+    }
+
+    pub fn finish(&mut self) {
+        self.end = Some(Instant::now());
+    }
+
+    pub fn wall_s(&self) -> f64 {
+        match (self.start, self.end) {
+            (Some(s), Some(e)) => (e - s).as_secs_f64(),
+            (Some(s), None) => s.elapsed().as_secs_f64(),
+            _ => 0.0,
+        }
+    }
+
+    pub fn record_request(
+        &mut self,
+        n_prompt: usize,
+        n_generated: usize,
+        ttft_s: f64,
+        token_gaps: &[f64],
+    ) {
+        self.n_requests += 1;
+        self.n_prompt_tokens += n_prompt;
+        self.n_output_tokens += n_generated;
+        self.ttft_s.push(ttft_s);
+        if n_generated > 1 && !token_gaps.is_empty() {
+            let tpot = token_gaps.iter().sum::<f64>() / token_gaps.len() as f64;
+            self.tpot_s.push(tpot);
+            self.itl_s.extend_from_slice(token_gaps);
+        }
+    }
+
+    /// Output token throughput (tok/s) over the whole run.
+    pub fn output_tok_per_s(&self) -> f64 {
+        self.n_output_tokens as f64 / self.wall_s().max(1e-9)
+    }
+
+    pub fn ttft(&self) -> Summary {
+        summarize(&self.ttft_s)
+    }
+
+    pub fn tpot(&self) -> Summary {
+        summarize(&self.tpot_s)
+    }
+
+    pub fn itl(&self) -> Summary {
+        summarize(&self.itl_s)
+    }
+
+    /// Batch occupancy: fraction of slot-steps that carried a live request.
+    pub fn occupancy(&self) -> f64 {
+        self.active_slot_steps as f64 / self.total_slot_steps.max(1) as f64
+    }
+
+    pub fn report(&self, label: &str) -> String {
+        format!(
+            "[{label}] requests={} out_tokens={} wall={:.2}s \
+             tput={:.1} tok/s  TPOT={:.2}ms  ITL={:.2}ms  TTFT={:.1}ms  \
+             occupancy={:.0}%  (decode_steps={} prefills={})",
+            self.n_requests,
+            self.n_output_tokens,
+            self.wall_s(),
+            self.output_tok_per_s(),
+            self.tpot().mean * 1e3,
+            self.itl().mean * 1e3,
+            self.ttft().mean * 1e3,
+            self.occupancy() * 100.0,
+            self.decode_steps,
+            self.prefill_calls,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_accounting() {
+        let mut m = MetricsCollector::new();
+        m.begin();
+        m.record_request(10, 5, 0.1, &[0.01, 0.02, 0.01, 0.02]);
+        m.record_request(8, 1, 0.05, &[]);
+        m.finish();
+        assert_eq!(m.n_requests, 2);
+        assert_eq!(m.n_output_tokens, 6);
+        assert_eq!(m.ttft_s.len(), 2);
+        assert_eq!(m.tpot_s.len(), 1);
+        assert!((m.tpot().mean - 0.015).abs() < 1e-9);
+        assert_eq!(m.itl_s.len(), 4);
+    }
+
+    #[test]
+    fn occupancy() {
+        let mut m = MetricsCollector::new();
+        m.active_slot_steps = 30;
+        m.total_slot_steps = 40;
+        assert!((m.occupancy() - 0.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,23 @@
+//! L3 coordinator: the serving side of the paper's workflow (the role
+//! vLLM/SGLang play in §2.3), implemented as a continuous-batching engine
+//! over AOT prefill/decode artifacts.
+//!
+//! Architecture:
+//!   - `engine`  — single-threaded core loop owning the PJRT runtime,
+//!     model weights (as device literals) and the KV cache; commands
+//!     arrive over a channel, tokens stream back per request.
+//!   - `batcher` — admission queue + slot assignment policy.
+//!   - `kvslots` — batch-slot bookkeeping (the static-shape analog of
+//!     vLLM's block tables; DESIGN.md §4).
+//!   - `metrics` — TTFT / TPOT / ITL / throughput accounting (Table 1).
+//!   - `server`  — TCP JSON-lines front-end + client.
+
+pub mod batcher;
+pub mod engine;
+pub mod kvslots;
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use engine::{Engine, EngineConfig, EngineHandle};
+pub use request::{Event, FinishInfo, SubmitReq};

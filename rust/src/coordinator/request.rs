@@ -1,0 +1,55 @@
+//! Request/response types crossing the engine boundary.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// A generation request submitted to the engine.
+pub struct SubmitReq {
+    pub id: u64,
+    pub prompt_tokens: Vec<u32>,
+    pub max_new_tokens: usize,
+    /// sampling temperature; 0.0 = greedy
+    pub temperature: f32,
+    pub seed: u64,
+    /// token stream back to the caller
+    pub tx: Sender<Event>,
+    pub submitted_at: Instant,
+}
+
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// One generated token.
+    Token(u32),
+    /// Generation finished (EOS, length cap, or context cap).
+    Done(FinishInfo),
+    Error(String),
+}
+
+#[derive(Debug, Clone)]
+pub struct FinishInfo {
+    pub id: u64,
+    pub n_prompt: usize,
+    pub n_generated: usize,
+    pub ttft_s: f64,
+    /// mean time per output token (TPOT)
+    pub tpot_s: f64,
+    pub total_s: f64,
+    pub reason: FinishReason,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    Eos,
+    Length,
+    ContextFull,
+}
+
+impl FinishReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Eos => "eos",
+            FinishReason::Length => "length",
+            FinishReason::ContextFull => "context_full",
+        }
+    }
+}

@@ -1,0 +1,220 @@
+//! TCP JSON-lines front-end (the OpenAI-compatible-server analog) and a
+//! matching client used by examples and the Table 1 bench client.
+//!
+//! Protocol: one JSON object per line.
+//!   request:  {"id": 1, "prompt": "...", "max_new_tokens": 32,
+//!              "temperature": 0.0}
+//!   response: {"id": 1, "token": "<text>"}            (streamed)
+//!             {"id": 1, "done": true, "n_generated": 32,
+//!              "ttft_ms": ..., "tpot_ms": ..., "reason": "length"}
+//!             {"id": 1, "error": "..."}
+
+use super::engine::EngineHandle;
+use super::request::{Event, SubmitReq};
+use crate::tokenizer::Tokenizer;
+use crate::util::json::{self, Value};
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Instant;
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Serve until the process is killed (or, with `max_conns`, until that
+/// many client connections have completed — used by tests/examples).
+pub fn serve(
+    addr: &str,
+    engine: EngineHandle,
+    tokenizer: Arc<Tokenizer>,
+    max_conns: Option<usize>,
+) -> Result<()> {
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    crate::info!("ao server listening on {addr}");
+    let mut served = 0usize;
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let engine = engine.clone();
+        let tok = tokenizer.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = handle_conn(stream, engine, tok) {
+                crate::warn!("connection error: {e:#}");
+            }
+        });
+        served += 1;
+        if let Some(max) = max_conns {
+            if served >= max {
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    engine: EngineHandle,
+    tok: Arc<Tokenizer>,
+) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    crate::debug!("client connected: {peer}");
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req = match Value::parse(&line) {
+            Ok(v) => v,
+            Err(e) => {
+                writeln!(
+                    writer,
+                    "{}",
+                    json::obj(vec![("error", json::s(&format!("bad json: {e}")))])
+                        .to_string()
+                )?;
+                continue;
+            }
+        };
+        let id = req
+            .get("id")
+            .and_then(|v| v.as_i64())
+            .map(|v| v as u64)
+            .unwrap_or_else(|| NEXT_ID.fetch_add(1, Ordering::Relaxed));
+        let prompt = req.get("prompt").and_then(|v| v.as_str()).unwrap_or("");
+        let max_new = req
+            .get("max_new_tokens")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(32);
+        let temperature = req
+            .get("temperature")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0) as f32;
+
+        let (tx, rx) = channel();
+        engine.submit(SubmitReq {
+            id,
+            prompt_tokens: tok.encode(prompt),
+            max_new_tokens: max_new,
+            temperature,
+            seed: id,
+            tx,
+            submitted_at: Instant::now(),
+        })?;
+        // stream events back
+        for ev in rx {
+            match ev {
+                Event::Token(t) => {
+                    let text = tok.decode(&[t]);
+                    writeln!(
+                        writer,
+                        "{}",
+                        json::obj(vec![
+                            ("id", json::num(id as f64)),
+                            ("token", json::s(&text)),
+                            ("token_id", json::num(t as f64)),
+                        ])
+                        .to_string()
+                    )?;
+                }
+                Event::Done(info) => {
+                    writeln!(
+                        writer,
+                        "{}",
+                        json::obj(vec![
+                            ("id", json::num(id as f64)),
+                            ("done", Value::Bool(true)),
+                            ("n_generated", json::num(info.n_generated as f64)),
+                            ("ttft_ms", json::num(info.ttft_s * 1e3)),
+                            ("tpot_ms", json::num(info.tpot_s * 1e3)),
+                            ("reason", json::s(info.reason.as_str())),
+                        ])
+                        .to_string()
+                    )?;
+                    break;
+                }
+                Event::Error(e) => {
+                    writeln!(
+                        writer,
+                        "{}",
+                        json::obj(vec![
+                            ("id", json::num(id as f64)),
+                            ("error", json::s(&e)),
+                        ])
+                        .to_string()
+                    )?;
+                    break;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Blocking client for one generation call over TCP.
+pub struct Client {
+    stream: TcpStream,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct Generation {
+    pub text: String,
+    pub n_generated: usize,
+    pub ttft_ms: f64,
+    pub tpot_ms: f64,
+    pub reason: String,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        Ok(Client {
+            stream: TcpStream::connect(addr)
+                .with_context(|| format!("connect {addr}"))?,
+        })
+    }
+
+    pub fn generate(
+        &mut self,
+        prompt: &str,
+        max_new_tokens: usize,
+        temperature: f32,
+    ) -> Result<Generation> {
+        let req = json::obj(vec![
+            ("prompt", json::s(prompt)),
+            ("max_new_tokens", json::num(max_new_tokens as f64)),
+            ("temperature", json::num(temperature as f64)),
+        ]);
+        writeln!(self.stream, "{}", req.to_string())?;
+        let mut out = Generation::default();
+        let reader = BufReader::new(self.stream.try_clone()?);
+        for line in reader.lines() {
+            let v = Value::parse(&line?)
+                .map_err(|e| anyhow::anyhow!("bad server json: {e}"))?;
+            if let Some(err) = v.get("error").and_then(|e| e.as_str()) {
+                anyhow::bail!("server error: {err}");
+            }
+            if v.get("done").and_then(|d| d.as_bool()).unwrap_or(false) {
+                out.n_generated =
+                    v.get("n_generated").and_then(|x| x.as_usize()).unwrap_or(0);
+                out.ttft_ms =
+                    v.get("ttft_ms").and_then(|x| x.as_f64()).unwrap_or(0.0);
+                out.tpot_ms =
+                    v.get("tpot_ms").and_then(|x| x.as_f64()).unwrap_or(0.0);
+                out.reason = v
+                    .get("reason")
+                    .and_then(|x| x.as_str())
+                    .unwrap_or("")
+                    .to_string();
+                return Ok(out);
+            }
+            if let Some(t) = v.get("token").and_then(|t| t.as_str()) {
+                out.text.push_str(t);
+            }
+        }
+        anyhow::bail!("server closed the stream early")
+    }
+}

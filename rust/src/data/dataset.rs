@@ -1,0 +1,89 @@
+//! LM dataset: tokenize a corpus, pack into fixed-length next-token
+//! prediction batches (the TorchTitan-style packed pre-training input).
+
+use crate::tokenizer::Tokenizer;
+use crate::util::rng::Rng;
+
+pub struct PackedDataset {
+    pub ids: Vec<u32>,
+    pub seq: usize,
+}
+
+impl PackedDataset {
+    pub fn from_text(tok: &Tokenizer, text: &str, seq: usize) -> PackedDataset {
+        PackedDataset { ids: tok.encode(text), seq }
+    }
+
+    /// Number of non-overlapping windows of seq+1 tokens.
+    pub fn n_windows(&self) -> usize {
+        self.ids.len().saturating_sub(1) / self.seq
+    }
+
+    /// Sample a batch [b, seq+1] of i32 token ids (random windows).
+    pub fn sample_batch(&self, rng: &mut Rng, b: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(b * (self.seq + 1));
+        let max_start = self.ids.len() - self.seq - 1;
+        for _ in 0..b {
+            let start = rng.below(max_start.max(1));
+            out.extend(
+                self.ids[start..start + self.seq + 1]
+                    .iter()
+                    .map(|&t| t as i32),
+            );
+        }
+        out
+    }
+
+    /// Deterministic sequential batches for evaluation; returns None when
+    /// exhausted. `cursor` advances by b windows each call.
+    pub fn eval_batch(&self, cursor: &mut usize, b: usize) -> Option<Vec<i32>> {
+        if *cursor + b > self.n_windows() {
+            return None;
+        }
+        let mut out = Vec::with_capacity(b * (self.seq + 1));
+        for i in 0..b {
+            let start = (*cursor + i) * self.seq;
+            out.extend(
+                self.ids[start..start + self.seq + 1]
+                    .iter()
+                    .map(|&t| t as i32),
+            );
+        }
+        *cursor += b;
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::standard_corpus;
+
+    #[test]
+    fn batches_have_right_shape() {
+        let c = standard_corpus(1, 16 * 1024, 0);
+        let tok = Tokenizer::byte_level();
+        let ds = PackedDataset::from_text(&tok, &c.train, 32);
+        let mut rng = Rng::new(0);
+        let b = ds.sample_batch(&mut rng, 4);
+        assert_eq!(b.len(), 4 * 33);
+        assert!(b.iter().all(|&t| t >= 0));
+    }
+
+    #[test]
+    fn eval_batches_cover_sequentially() {
+        let c = standard_corpus(1, 8 * 1024, 0);
+        let tok = Tokenizer::byte_level();
+        let ds = PackedDataset::from_text(&tok, &c.train, 16);
+        let mut cursor = 0;
+        let b1 = ds.eval_batch(&mut cursor, 2).unwrap();
+        let b2 = ds.eval_batch(&mut cursor, 2).unwrap();
+        assert_ne!(b1, b2);
+        assert_eq!(cursor, 4);
+        let mut n = 2;
+        while ds.eval_batch(&mut cursor, 2).is_some() {
+            n += 1;
+        }
+        assert_eq!(n, ds.n_windows() / 2);
+    }
+}

@@ -1,0 +1,8 @@
+//! Data substrate: deterministic synthetic corpus, LM batching, the
+//! ShareGPT-like serving workload, and the hellaswag-proxy eval task
+//! (DESIGN.md §3 substitutions).
+
+pub mod corpus;
+pub mod dataset;
+pub mod evaltask;
+pub mod workload;

@@ -1,0 +1,133 @@
+//! ShareGPT-like serving workload generator (Table 1 client).
+//!
+//! The public ShareGPT trace used by the vLLM benchmark has lognormal-ish
+//! prompt/output token lengths (median prompt ~25 tokens, long tail; median
+//! output ~150 tokens, capped). We reproduce that *shape* with a seeded
+//! lognormal mixture, scaled down to this testbed's max_seq (DESIGN.md §3).
+
+use crate::data::corpus::CorpusGen;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: String,
+    pub max_new_tokens: usize,
+    /// offset from workload start at which the client submits, seconds.
+    pub arrival_s: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub n_requests: usize,
+    pub max_prompt_tokens: usize,
+    pub max_output_tokens: usize,
+    /// mean request arrival rate (req/s); f64::INFINITY = all at t=0
+    /// (the paper's `num_prompts` batch mode).
+    pub arrival_rate: f64,
+    pub seed: u64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            n_requests: 32,
+            max_prompt_tokens: 96,
+            max_output_tokens: 64,
+            arrival_rate: f64::INFINITY,
+            seed: 0xA0,
+        }
+    }
+}
+
+pub fn generate(spec: &WorkloadSpec) -> Vec<Request> {
+    let gen = CorpusGen::new(spec.seed ^ 0x5417);
+    let mut rng = Rng::new(spec.seed);
+    let mut out = Vec::with_capacity(spec.n_requests);
+    let mut t = 0.0f64;
+    for id in 0..spec.n_requests {
+        // ShareGPT-shaped lengths: lognormal, clipped to the testbed caps.
+        let p_len = (rng.lognormal(3.0, 0.8) as usize)
+            .clamp(4, spec.max_prompt_tokens);
+        let o_len = (rng.lognormal(3.4, 0.9) as usize)
+            .clamp(4, spec.max_output_tokens);
+        let mut prompt = String::new();
+        while prompt.len() < p_len {
+            // byte-level tokenizer: bytes == tokens
+            prompt.push_str(&gen.sentence(&mut rng));
+        }
+        prompt.truncate(p_len);
+        if spec.arrival_rate.is_finite() {
+            // Poisson arrivals
+            t += -rng.f64().max(1e-12).ln() / spec.arrival_rate;
+        }
+        out.push(Request {
+            id: id as u64,
+            prompt,
+            max_new_tokens: o_len,
+            arrival_s: t,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let spec = WorkloadSpec::default();
+        let a = generate(&spec);
+        let b = generate(&spec);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+        }
+    }
+
+    #[test]
+    fn lengths_respect_caps() {
+        let spec = WorkloadSpec {
+            n_requests: 200, max_prompt_tokens: 50, max_output_tokens: 30,
+            ..Default::default()
+        };
+        for r in generate(&spec) {
+            assert!(r.prompt.len() <= 50 && r.prompt.len() >= 4);
+            assert!(r.max_new_tokens <= 30 && r.max_new_tokens >= 4);
+        }
+    }
+
+    #[test]
+    fn lengths_are_skewed() {
+        let spec = WorkloadSpec {
+            n_requests: 500, max_prompt_tokens: 2048,
+            max_output_tokens: 2048, ..Default::default()
+        };
+        let reqs = generate(&spec);
+        let mut lens: Vec<usize> = reqs.iter().map(|r| r.prompt.len()).collect();
+        lens.sort_unstable();
+        let median = lens[lens.len() / 2];
+        let p95 = lens[lens.len() * 95 / 100];
+        assert!(p95 as f64 > median as f64 * 2.0, "lognormal tail expected");
+    }
+
+    #[test]
+    fn poisson_arrivals_increase() {
+        let spec = WorkloadSpec {
+            n_requests: 50, arrival_rate: 10.0, ..Default::default()
+        };
+        let reqs = generate(&spec);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+        assert!(reqs.last().unwrap().arrival_s > 0.0);
+    }
+
+    #[test]
+    fn batch_mode_all_at_zero() {
+        let reqs = generate(&WorkloadSpec::default());
+        assert!(reqs.iter().all(|r| r.arrival_s == 0.0));
+    }
+}

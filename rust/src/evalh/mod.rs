@@ -1,0 +1,207 @@
+//! Evaluation harness: wikitext-proxy perplexity and hellaswag-proxy
+//! accuracy over the `nll` artifacts (Tables 2 and 4).
+
+use crate::ckpt::Checkpoint;
+use crate::data::evaltask::McItem;
+use crate::runtime::Runtime;
+use crate::tensor::HostTensor;
+use crate::tokenizer::Tokenizer;
+use anyhow::{bail, Context, Result};
+use xla::PjRtBuffer;
+
+use crate::runtime::OwnedBuffer;
+
+pub struct Evaluator<'rt> {
+    runtime: &'rt Runtime,
+    nll_name: String,
+    /// weights uploaded once as device buffers (leak-free execute_b path)
+    params: Vec<OwnedBuffer>,
+    batch: usize,
+    seq: usize,
+}
+
+impl<'rt> Evaluator<'rt> {
+    pub fn new(
+        runtime: &'rt Runtime,
+        model: &str,
+        scheme: &str,
+        ckpt: &Checkpoint,
+    ) -> Result<Evaluator<'rt>> {
+        let spec = runtime
+            .manifest
+            .find("nll", model, Some(scheme))
+            .first()
+            .map(|s| (*s).clone())
+            .with_context(|| {
+                format!("no nll artifact for model={model} scheme={scheme}")
+            })?;
+        let mut params = Vec::new();
+        for s in &spec.inputs {
+            if let Some(pname) = s.name.strip_prefix("params.") {
+                let t = ckpt.get(pname)?;
+                if t.shape != s.shape {
+                    bail!(
+                        "ckpt '{pname}' shape {:?} != artifact {:?}",
+                        t.shape, s.shape
+                    );
+                }
+                params.push(runtime.to_buffer(t.to_literal()?)?);
+            }
+        }
+        Ok(Evaluator {
+            runtime,
+            nll_name: spec.name.clone(),
+            params,
+            batch: spec.batch,
+            seq: spec.seq,
+        })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn seq(&self) -> usize {
+        self.seq
+    }
+
+    /// Sum NLL + token counts for one padded batch.
+    /// tokens [batch, seq]; lens/prefix_lens [batch].
+    pub fn nll_batch(
+        &self,
+        tokens: Vec<i32>,
+        lens: Vec<i32>,
+        prefix_lens: Vec<i32>,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let extra = [
+            self.runtime.to_buffer(
+                HostTensor::s32(vec![self.batch, self.seq], tokens)
+                    .to_literal()?,
+            )?,
+            self.runtime.to_buffer(
+                HostTensor::s32(vec![self.batch], lens).to_literal()?,
+            )?,
+            self.runtime.to_buffer(
+                HostTensor::s32(vec![self.batch], prefix_lens).to_literal()?,
+            )?,
+        ];
+        let mut inputs: Vec<&PjRtBuffer> =
+            self.params.iter().map(|o| &o.buffer).collect();
+        inputs.extend(extra.iter().map(|o| &o.buffer));
+        let outs = self.runtime.run_buffers(&self.nll_name, &inputs)?;
+        let s = HostTensor::from_literal(&outs[0])?;
+        let c = HostTensor::from_literal(&outs[1])?;
+        Ok((s.as_f32()?.to_vec(), c.as_f32()?.to_vec()))
+    }
+
+    /// Token perplexity + word perplexity over a token stream.
+    pub fn perplexity(
+        &self,
+        ids: &[u32],
+        n_words: usize,
+        max_batches: usize,
+    ) -> Result<PplReport> {
+        let win = self.seq;
+        let mut total_nll = 0f64;
+        let mut total_tok = 0f64;
+        let n_windows = ids.len().saturating_sub(1) / (win - 1);
+        let mut processed = 0usize;
+        'outer: for bi in 0..max_batches {
+            let mut tokens = vec![0i32; self.batch * win];
+            let mut lens = vec![1i32; self.batch];
+            let mut any = false;
+            for r in 0..self.batch {
+                let w = bi * self.batch + r;
+                if w >= n_windows {
+                    break;
+                }
+                let start = w * (win - 1);
+                let end = (start + win).min(ids.len());
+                for (j, &t) in ids[start..end].iter().enumerate() {
+                    tokens[r * win + j] = t as i32;
+                }
+                lens[r] = (end - start) as i32;
+                any = true;
+                processed += 1;
+            }
+            if !any {
+                break 'outer;
+            }
+            let (s, c) =
+                self.nll_batch(tokens, lens, vec![0i32; self.batch])?;
+            total_nll += s.iter().map(|&x| x as f64).sum::<f64>();
+            total_tok += c.iter().map(|&x| x as f64).sum::<f64>();
+        }
+        let token_ppl = (total_nll / total_tok.max(1.0)).exp();
+        // Word perplexity (what the paper's wikitext column reports):
+        // exp(total corpus NLL / number of words). Scale by the fraction
+        // of the corpus actually evaluated.
+        let frac = (processed.max(1) * (win - 1)) as f64 / ids.len() as f64;
+        let word_ppl =
+            (total_nll / (n_words as f64 * frac.min(1.0)).max(1.0)).exp();
+        Ok(PplReport { token_ppl, word_ppl, n_tokens: total_tok as usize })
+    }
+
+    /// hellaswag-proxy accuracy: length-normalized continuation NLL,
+    /// lowest wins.
+    pub fn hellaswag(
+        &self,
+        items: &[McItem],
+        tok: &Tokenizer,
+    ) -> Result<f64> {
+        let per_batch = self.batch / 4;
+        if per_batch == 0 {
+            bail!("nll batch {} too small for 4-way scoring", self.batch);
+        }
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let mut i = 0;
+        while i < items.len() {
+            let group = &items[i..(i + per_batch).min(items.len())];
+            let mut tokens = vec![0i32; self.batch * self.seq];
+            let mut lens = vec![1i32; self.batch];
+            let mut plens = vec![0i32; self.batch];
+            for (gi, item) in group.iter().enumerate() {
+                let ctx = tok.encode(&item.context);
+                for (ci, choice) in item.choices.iter().enumerate() {
+                    let row = gi * 4 + ci;
+                    let cont = tok.encode(choice);
+                    let mut seqv: Vec<u32> = ctx.clone();
+                    seqv.extend(&cont);
+                    seqv.truncate(self.seq);
+                    for (j, &t) in seqv.iter().enumerate() {
+                        tokens[row * self.seq + j] = t as i32;
+                    }
+                    lens[row] = seqv.len() as i32;
+                    plens[row] = ctx.len().min(self.seq) as i32;
+                }
+            }
+            let (s, c) = self.nll_batch(tokens, lens, plens)?;
+            for (gi, item) in group.iter().enumerate() {
+                let mut best = 0usize;
+                let mut best_score = f64::INFINITY;
+                for ci in 0..4 {
+                    let row = gi * 4 + ci;
+                    let score = s[row] as f64 / (c[row] as f64).max(1.0);
+                    if score < best_score {
+                        best_score = score;
+                        best = ci;
+                    }
+                }
+                if best == item.answer {
+                    correct += 1;
+                }
+                total += 1;
+            }
+            i += per_batch;
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PplReport {
+    pub token_ppl: f64,
+    pub word_ppl: f64,
+    pub n_tokens: usize,
+}

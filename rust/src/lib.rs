@@ -1,0 +1,50 @@
+//! # AO — training-to-serving model optimization, three-layer edition
+//!
+//! A reproduction of *TorchAO: PyTorch-Native Training-to-Serving Model
+//! Optimization* (ICML 2025 CODEML) as a Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)**: serving engine (continuous batching, KV-cache
+//!   slots, prefill/decode scheduling), training driver, checkpoint
+//!   quantizer, eval harness, perf model, CLI — Python never runs on the
+//!   request path.
+//! - **L2 (python/compile)**: JAX transformer + quantize_ config API +
+//!   FP8/QAT training recipes, AOT-lowered to `artifacts/*.hlo.txt`.
+//! - **L1 (python/compile/kernels)**: Pallas quantization/sparsity kernels
+//!   with pure-jnp oracles.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod benchsupport;
+pub mod ckpt;
+pub mod coordinator;
+pub mod data;
+pub mod evalh;
+pub mod modelcfg;
+pub mod perfmodel;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod tokenizer;
+pub mod train;
+pub mod util;
+
+/// Repo-relative default artifact directory.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::env::var("AO_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+}
+
+/// Default runs/output directory (loss curves, bench CSVs, checkpoints).
+pub fn runs_dir() -> std::path::PathBuf {
+    let dir = std::env::var("AO_RUNS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("runs")
+        });
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}

@@ -1,0 +1,312 @@
+//! `ao` — the launcher. Subcommands cover the paper's whole workflow:
+//!
+//!   ao gen-data   --model small                 # corpus + tokenizer
+//!   ao train      --model small --recipe bf16 --steps 100
+//!   ao quantize   --ckpt runs/small.aockpt --scheme int4wo-64
+//!   ao eval       --ckpt runs/small_int4wo-64.aockpt --scheme int4wo-64
+//!   ao serve      --ckpt ... --scheme fp8dq_row --addr 127.0.0.1:7433
+//!   ao bench-client --addr 127.0.0.1:7433 --n 16
+//!   ao perfmodel  [--kernels]                   # H100/Fig3 + L1 estimates
+
+use anyhow::{bail, Context, Result};
+use ao::coordinator::{engine, server};
+use ao::data::{corpus, dataset::PackedDataset, evaltask, workload};
+use ao::evalh::Evaluator;
+use ao::quant::QuantConfig;
+use ao::runtime::Runtime;
+use ao::tokenizer::Tokenizer;
+use ao::train::Trainer;
+use ao::util::cli::Args;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn main() {
+    ao::util::log::init();
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "gen-data" => cmd_gen_data(&args),
+        "train" => cmd_train(&args),
+        "quantize" => cmd_quantize(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "bench-client" => cmd_bench_client(&args),
+        "perfmodel" => cmd_perfmodel(&args),
+        "artifacts" => cmd_artifacts(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "ao — TorchAO-style training-to-serving model optimization\n\
+         commands: gen-data, train, quantize, eval, serve, bench-client,\n\
+         \x20          perfmodel, artifacts"
+    );
+}
+
+fn runs_path(name: &str) -> PathBuf {
+    ao::runs_dir().join(name)
+}
+
+/// gen-data: synth corpus + tokenizer, saved under runs/.
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let train_kb = args.usize_or("train-kb", 512);
+    let val_kb = args.usize_or("val-kb", 64);
+    let seed = args.usize_or("seed", 7) as u64;
+    let c = corpus::standard_corpus(seed, train_kb * 1024, val_kb * 1024);
+    std::fs::write(runs_path("corpus_train.txt"), &c.train)?;
+    std::fs::write(runs_path("corpus_val.txt"), &c.val)?;
+    let tok = Tokenizer::byte_level();
+    tok.save(&runs_path("tokenizer.json"))?;
+    println!(
+        "wrote runs/corpus_train.txt ({} KiB), runs/corpus_val.txt ({} KiB), \
+         runs/tokenizer.json (vocab {})",
+        c.train.len() / 1024,
+        c.val.len() / 1024,
+        tok.vocab_size
+    );
+    Ok(())
+}
+
+fn load_corpus() -> Result<(String, String)> {
+    let train = std::fs::read_to_string(runs_path("corpus_train.txt"))
+        .context("run `ao gen-data` first")?;
+    let val = std::fs::read_to_string(runs_path("corpus_val.txt"))?;
+    Ok((train, val))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "small");
+    let recipe = args.str_or("recipe", "bf16");
+    let steps = args.usize_or("steps", 100);
+    let seed = args.usize_or("seed", 0) as i32;
+    let out = args.str_or("out", &format!("{model}_{recipe}.aockpt"));
+    let artifacts = ao::default_artifacts_dir();
+    let (train_text, _) = load_corpus()?;
+    let tok = Tokenizer::byte_level();
+
+    let mut trainer = Trainer::new(&artifacts, &model, &recipe, seed)?;
+    let ds = PackedDataset::from_text(&tok, &train_text, trainer.seq());
+    println!(
+        "training model={model} recipe={recipe} steps={steps} \
+         batch={} seq={}",
+        trainer.batch(),
+        trainer.seq()
+    );
+    let mut loss_log = String::from("step,loss,seconds\n");
+    let report = trainer.run(&ds, steps, 0xA0, |i, loss, dt| {
+        loss_log.push_str(&format!("{i},{loss},{dt:.4}\n"));
+        if i % 10 == 0 || i + 1 == steps {
+            println!("  step {i:>4}  loss {loss:.4}  ({dt:.2}s)");
+        }
+    })?;
+    std::fs::write(
+        runs_path(&format!("loss_{model}_{recipe}.csv")),
+        &loss_log,
+    )?;
+    let ckpt = trainer.export_checkpoint()?;
+    let ckpt_path = runs_path(&out);
+    ckpt.save(&ckpt_path)?;
+    println!(
+        "final loss {:.4}; median {:.1} tok/s; peak RSS {} MiB\n\
+         checkpoint -> {}",
+        report.final_loss(),
+        report.median_tok_per_s(),
+        report.peak_rss_bytes / (1024 * 1024),
+        ckpt_path.display()
+    );
+    Ok(())
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let ckpt_path = PathBuf::from(
+        args.get("ckpt").context("--ckpt <master.aockpt> required")?,
+    );
+    let scheme = args.str_or("scheme", "int4wo-64");
+    let cfg = QuantConfig::parse(&scheme)?;
+    let master = ao::ckpt::Checkpoint::load(&ckpt_path)?;
+    let (packed, report) = ao::quant::quantize_checkpoint(&master, cfg)?;
+    let stem = ckpt_path
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("model");
+    let out = args.str_or("out", &format!("{stem}_{scheme}.aockpt"));
+    let out_path = ckpt_path.with_file_name(&out);
+    packed.save(&out_path)?;
+    println!(
+        "quantized {} -> {}\n  scheme {scheme}: {:.2} MiB -> {:.2} MiB \
+         ({:.2}x smaller)",
+        ckpt_path.display(),
+        out_path.display(),
+        report.f32_bytes as f64 / (1024.0 * 1024.0),
+        report.packed_bytes as f64 / (1024.0 * 1024.0),
+        report.ratio()
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let ckpt_path = PathBuf::from(
+        args.get("ckpt").context("--ckpt <ckpt.aockpt> required")?,
+    );
+    let model = args.str_or("model", "small");
+    let scheme = args.str_or("scheme", "f32");
+    let n_items = args.usize_or("hellaswag-items", 64);
+    let max_batches = args.usize_or("ppl-batches", 8);
+    let artifacts = ao::default_artifacts_dir();
+    let (_, val_text) = load_corpus()?;
+    let tok = Tokenizer::byte_level();
+    let runtime = Runtime::open(&artifacts)?;
+    let ckpt = ao::ckpt::Checkpoint::load(&ckpt_path)?;
+    let ev = Evaluator::new(&runtime, &model, &scheme, &ckpt)?;
+    let ids = tok.encode(&val_text);
+    let n_words = val_text.split_whitespace().count();
+    let ppl = ev.perplexity(&ids, n_words, max_batches)?;
+    let items = evaltask::generate(0xE7A1, n_items, 2);
+    let acc = ev.hellaswag(&items, &tok)?;
+    println!(
+        "eval model={model} scheme={scheme}\n  token ppl {:.3}  word ppl \
+         {:.3}  ({} tokens)\n  hellaswag-proxy acc {:.1}% ({} items)",
+        ppl.token_ppl,
+        ppl.word_ppl,
+        ppl.n_tokens,
+        acc * 100.0,
+        n_items
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let ckpt_path = PathBuf::from(
+        args.get("ckpt").context("--ckpt <packed.aockpt> required")?,
+    );
+    let model = args.str_or("model", "small");
+    let scheme = args.str_or("scheme", "f32");
+    let addr = args.str_or("addr", "127.0.0.1:7433");
+    let max_conns = args.get("max-conns").map(|v| v.parse().unwrap());
+    let cfg = engine::EngineConfig {
+        artifacts_dir: ao::default_artifacts_dir(),
+        ckpt_path,
+        model,
+        scheme,
+        eos_token: None,
+    };
+    let (handle, join) = engine::spawn(cfg);
+    let tok = Arc::new(Tokenizer::byte_level());
+    server::serve(&addr, handle.clone(), tok, max_conns)?;
+    handle.shutdown();
+    match join.join() {
+        Ok(Ok(metrics)) => println!("{}", metrics.report("serve")),
+        Ok(Err(e)) => bail!("engine failed: {e:#}"),
+        Err(_) => bail!("engine thread panicked"),
+    }
+    Ok(())
+}
+
+fn cmd_bench_client(args: &Args) -> Result<()> {
+    let addr = args.str_or("addr", "127.0.0.1:7433");
+    let n = args.usize_or("n", 16);
+    let max_new = args.usize_or("max-new", 32);
+    let spec = workload::WorkloadSpec {
+        n_requests: n,
+        max_output_tokens: max_new,
+        ..Default::default()
+    };
+    let reqs = workload::generate(&spec);
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for r in reqs {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || -> Result<(usize, f64, f64)> {
+            let mut client = server::Client::connect(&addr)?;
+            let g = client.generate(&r.prompt, r.max_new_tokens, 0.0)?;
+            Ok((g.n_generated, g.ttft_ms, g.tpot_ms))
+        }));
+    }
+    let mut total_tokens = 0usize;
+    let mut ttfts = Vec::new();
+    let mut tpots = Vec::new();
+    for h in handles {
+        let (n_gen, ttft, tpot) = h.join().unwrap()?;
+        total_tokens += n_gen;
+        ttfts.push(ttft);
+        if tpot > 0.0 {
+            tpots.push(tpot);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let s_ttft = ao::util::stats::summarize(&ttfts);
+    let s_tpot = ao::util::stats::summarize(&tpots);
+    println!(
+        "bench-client: {n} requests, {total_tokens} output tokens in \
+         {wall:.2}s\n  throughput {:.1} tok/s  TTFT p50 {:.0}ms  TPOT p50 \
+         {:.2}ms",
+        total_tokens as f64 / wall,
+        s_ttft.p50,
+        s_tpot.p50
+    );
+    Ok(())
+}
+
+fn cmd_perfmodel(args: &Args) -> Result<()> {
+    use ao::perfmodel::{fig3_speedup, kernel_report, table3_speedup, H100};
+    if args.flag("kernels") {
+        println!("L1 kernel estimates (TPU-v4-like core, VMEM 16 MiB):");
+        println!(
+            "{:<22} {:>6} {:>6} {:>6} {:>10} {:>10} {:>8}",
+            "kernel", "bm", "bn", "K", "VMEM KiB", "flop/B", "MXU"
+        );
+        for k in kernel_report() {
+            println!(
+                "{:<22} {:>6} {:>6} {:>6} {:>10} {:>10.1} {:>7.0}%",
+                k.name, k.block_m, k.block_n, k.k,
+                k.vmem_bytes / 1024, k.intensity, k.mxu_util * 100.0
+            );
+        }
+        return Ok(());
+    }
+    println!("model: H100 FP8-vs-BF16 speedup (Fig 3 grid):");
+    let sizes = [1024usize, 2048, 4096, 8192, 16384];
+    print!("{:>8} {:>8} |", "M", "K");
+    for n in sizes {
+        print!(" {n:>7}");
+    }
+    println!();
+    for m in sizes {
+        for k in sizes {
+            print!("{m:>8} {k:>8} |");
+            for n in sizes {
+                print!(" {:>7.2}", fig3_speedup(&H100, m, k, n));
+            }
+            println!();
+        }
+    }
+    println!("\nmodel: Table 3 training-step speedups (Llama3-8B dims):");
+    for r in ["fp8_tensorwise", "fp8_rowwise", "fp8_rowwise_gw_hp"] {
+        println!("  {r:<20} {:.2}x", table3_speedup(&H100, r));
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let runtime = Runtime::open(&ao::default_artifacts_dir())?;
+    let filter = args.get("kind");
+    println!("{} artifacts:", runtime.manifest.artifacts.len());
+    for a in runtime.manifest.artifacts.values() {
+        if filter.map_or(true, |k| a.kind == k) {
+            println!(
+                "  {:<44} kind={:<8} inputs={} outputs={}",
+                a.name, a.kind, a.inputs.len(), a.outputs.len()
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Rust mirror of python/compile/model.py's MODEL_SIZES (used where a
+//! model config is needed before any manifest exists, e.g. `ao gen-data`).
+
+#[derive(Debug, Clone, Copy)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn param_count(&self) -> usize {
+        let (d, f, v) = (self.d_model, self.d_ff, self.vocab);
+        let h = self.n_heads * self.head_dim();
+        let hkv = self.n_kv_heads * self.head_dim();
+        let per_layer = d * h + 2 * d * hkv + h * d + 2 * d * f + f * d + 2 * d;
+        v * d + self.n_layers * per_layer + d + v * d
+    }
+}
+
+pub const TINY: ModelConfig = ModelConfig {
+    name: "tiny", vocab: 256, d_model: 64, n_layers: 2, n_heads: 4,
+    n_kv_heads: 2, d_ff: 192, max_seq: 128,
+};
+
+pub const SMALL: ModelConfig = ModelConfig {
+    name: "small", vocab: 512, d_model: 256, n_layers: 4, n_heads: 8,
+    n_kv_heads: 4, d_ff: 704, max_seq: 256,
+};
+
+pub const BASE: ModelConfig = ModelConfig {
+    name: "base", vocab: 1024, d_model: 512, n_layers: 8, n_heads: 8,
+    n_kv_heads: 4, d_ff: 1408, max_seq: 256,
+};
+
+pub fn by_name(name: &str) -> Option<ModelConfig> {
+    match name {
+        "tiny" => Some(TINY),
+        "small" => Some(SMALL),
+        "base" => Some(BASE),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_are_plausible() {
+        assert!(TINY.param_count() < 1_000_000);
+        assert!(SMALL.param_count() > 3_000_000);
+        assert!(BASE.param_count() > 20_000_000);
+    }
+
+    #[test]
+    fn lookup() {
+        assert_eq!(by_name("small").unwrap().d_model, 256);
+        assert!(by_name("huge").is_none());
+    }
+}

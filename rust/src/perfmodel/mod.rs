@@ -1,0 +1,272 @@
+//! H100 / TPU-MXU roofline performance model.
+//!
+//! This testbed is a single CPU core, so the paper's tensor-core-bound
+//! claims (Fig 3's FP8-vs-BF16 speedup grid, Table 3's 1.25x) are
+//! reproduced through this analytic model while byte-bound claims are
+//! measured directly. Every model-derived number printed by the benches is
+//! labeled `model:`.
+//!
+//! The model is a classic two-resource roofline plus quantization
+//! overhead: a GEMM costs max(flops/peak, bytes/bw) with a size-dependent
+//! efficiency factor (small GEMMs can't fill the tensor cores), and
+//! dynamic FP8 scaling pays a memory-bound pass over the operands.
+
+/// H100 SXM5 (the paper's testbed), dense rates.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuSpec {
+    pub bf16_flops: f64,
+    pub fp8_flops: f64,
+    pub hbm_bw: f64,
+    /// achievable fraction of peak for large GEMMs
+    pub gemm_eff: f64,
+    /// per-kernel-launch overhead, seconds
+    pub launch_s: f64,
+}
+
+pub const H100: GpuSpec = GpuSpec {
+    bf16_flops: 989.0e12,
+    fp8_flops: 1979.0e12,
+    hbm_bw: 3.35e12,
+    gemm_eff: 0.72,
+    launch_s: 6.0e-6,
+};
+
+impl GpuSpec {
+    /// Size-dependent tensor-core efficiency: small GEMMs underfill the
+    /// 132-SM launch grid. Calibrated so eff(k=1024)≈0.35, eff(k>=8192)≈1.
+    fn size_eff(&self, m: usize, k: usize, n: usize) -> f64 {
+        let work = (m as f64) * (k as f64) * (n as f64);
+        let full = 8192.0f64 * 8192.0 * 8192.0;
+        (work / full).powf(0.18).clamp(0.25, 1.0)
+    }
+
+    /// One GEMM C[m,n] = A[m,k] @ B[k,n] in the given element width.
+    pub fn gemm_s(&self, m: usize, k: usize, n: usize, fp8: bool) -> f64 {
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let peak = if fp8 { self.fp8_flops } else { self.bf16_flops };
+        let elem = 2.0; // operands resident in bf16 before cast
+        let bytes =
+            elem * (m * k + k * n) as f64 + 2.0 * (m * n) as f64;
+        let compute = flops / (peak * self.gemm_eff * self.size_eff(m, k, n));
+        let memory = bytes / self.hbm_bw;
+        compute.max(memory) + self.launch_s
+    }
+
+    /// Dynamic-scaling overhead for casting an [r, c] operand to FP8:
+    /// amax reduction (1 read) + scaled cast (1 read + 1 fp8 write).
+    pub fn quant_overhead_s(&self, r: usize, c: usize) -> f64 {
+        let bytes = (r * c) as f64 * (2.0 + 2.0 + 1.0);
+        bytes / self.hbm_bw + self.launch_s
+    }
+
+    /// Elementwise op over an [r, c] bf16 tensor (read + write).
+    pub fn elemwise_s(&self, r: usize, c: usize) -> f64 {
+        (r * c) as f64 * 4.0 / self.hbm_bw + self.launch_s
+    }
+}
+
+/// Fig 3 cell: LayerNorm -> Linear -> Sigmoid, forward + backward, FP8
+/// speedup over BF16 for forward shape (M, K, N).
+pub fn fig3_speedup(spec: &GpuSpec, m: usize, k: usize, n: usize) -> f64 {
+    // three GEMMs: fwd y=x@w.T (m,k,n); dx = g@w (m,n,k); dw = g.T@x (n,m,k)
+    let gemms = [(m, k, n), (m, n, k), (n, m, k)];
+    let bf16_gemm: f64 =
+        gemms.iter().map(|&(a, b, c)| spec.gemm_s(a, b, c, false)).sum();
+    let fp8_gemm: f64 =
+        gemms.iter().map(|&(a, b, c)| spec.gemm_s(a, b, c, true)).sum();
+    // per-GEMM dynamic quantization of both operands
+    let quant: f64 = gemms
+        .iter()
+        .map(|&(a, b, c)| {
+            spec.quant_overhead_s(a, b) + spec.quant_overhead_s(c, b)
+        })
+        .sum();
+    // layernorm + sigmoid fwd+bwd are identical in both variants
+    let elem = 2.0 * spec.elemwise_s(m, k) + 2.0 * spec.elemwise_s(m, n);
+    (bf16_gemm + elem) / (fp8_gemm + quant + elem)
+}
+
+/// Table 3 projection: FP8 training-step speedup for a transformer layer
+/// stack of the paper's Llama3-8B-ish dims under a recipe.
+pub fn table3_speedup(spec: &GpuSpec, recipe: &str) -> f64 {
+    // Llama3-8B: d=4096, ff=14336, heads 32/8, seq 8192, batch 1
+    let (d, ff, s) = (4096usize, 14336usize, 8192usize);
+    let gemms = [
+        (s, d, d),       // wq
+        (s, d, d / 4),   // wk (GQA)
+        (s, d, d / 4),   // wv
+        (s, d, d),       // wo
+        (s, d, ff),      // w1
+        (s, d, ff),      // w3
+        (s, ff, d),      // w2
+    ];
+    let mut t_bf16 = 0.0;
+    let mut t_fp8 = 0.0;
+    for &(m, k, n) in &gemms {
+        // fwd + dx + dw
+        for &(a, b, c) in &[(m, k, n), (m, n, k), (n, m, k)] {
+            t_bf16 += spec.gemm_s(a, b, c, false);
+            let hp_gw = recipe == "fp8_rowwise_gw_hp" && (a, b, c) == (n, m, k);
+            if hp_gw {
+                // dL/dW stays in bf16 under this recipe: no cast, no quant
+                t_fp8 += spec.gemm_s(a, b, c, false);
+                continue;
+            }
+            t_fp8 += spec.gemm_s(a, b, c, true);
+            t_fp8 += spec.quant_overhead_s(a, b) + spec.quant_overhead_s(c, b);
+            if recipe.starts_with("fp8_rowwise") {
+                // rowwise scales: extra reduction granularity ~ one more
+                // memory pass over the output
+                t_fp8 += (a * c) as f64 * 2.0 / spec.hbm_bw;
+            }
+        }
+    }
+    // attention + elementwise ~25% of step time in bf16, unchanged by fp8
+    let other = t_bf16 * 0.33;
+    (t_bf16 + other) / (t_fp8 + other)
+}
+
+// ---------------------------------------------------------------------------
+// L1 kernel VMEM/MXU estimates (the Pallas side of the perf deliverable)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct KernelEstimate {
+    pub name: String,
+    pub block_m: usize,
+    pub block_n: usize,
+    pub k: usize,
+    pub vmem_bytes: usize,
+    /// arithmetic intensity, flops/HBM-byte
+    pub intensity: f64,
+    /// estimated MXU utilization on a TPU-v4-like core
+    pub mxu_util: f64,
+}
+
+/// TPU-v4-ish balance point: 275 TFLOPs bf16 / 1.2 TB/s HBM ≈ 229 flops/B.
+const TPU_BALANCE: f64 = 229.0;
+/// VMEM budget per core.
+pub const VMEM_BUDGET: usize = 16 * 1024 * 1024;
+
+/// Estimate one (bm x bn x K) matmul-kernel tile. `w_bytes_per_elem` is
+/// the packed weight width (0.5 for int4, 1 for int8/fp8, 4 for f32).
+pub fn estimate_kernel(
+    name: &str,
+    bm: usize,
+    bn: usize,
+    k: usize,
+    w_bytes_per_elem: f64,
+    extra_vmem: usize,
+) -> KernelEstimate {
+    let x_bytes = bm * k * 4;
+    let w_bytes = (bn as f64 * k as f64 * w_bytes_per_elem) as usize;
+    let o_bytes = bm * bn * 4;
+    let vmem = x_bytes + w_bytes + o_bytes + extra_vmem;
+    let flops = 2.0 * bm as f64 * bn as f64 * k as f64;
+    let hbm = x_bytes as f64 + w_bytes as f64 + o_bytes as f64;
+    let intensity = flops / hbm;
+    KernelEstimate {
+        name: name.to_string(),
+        block_m: bm,
+        block_n: bn,
+        k,
+        vmem_bytes: vmem,
+        intensity,
+        mxu_util: (intensity / TPU_BALANCE).min(1.0),
+    }
+}
+
+/// Report for the repo's kernels at serving shapes (decode M=8, prefill
+/// M=1024) against a d_model=512 / d_ff=1408 layer.
+pub fn kernel_report() -> Vec<KernelEstimate> {
+    let shapes = [(8usize, 128usize), (1024, 128)];
+    let mut out = Vec::new();
+    for (m, bn) in shapes {
+        let bm = m.min(128);
+        let k = 512;
+        let tag = if m <= 8 { "decode" } else { "prefill" };
+        out.push(estimate_kernel(
+            &format!("w4a16[{tag}]"), bm, bn, k, 0.5,
+            bn * (k / 64) * 8,
+        ));
+        out.push(estimate_kernel(
+            &format!("w8a8_dyn[{tag}]"), bm, bn, k, 1.0, bm * 4,
+        ));
+        out.push(estimate_kernel(
+            &format!("fp8_rowwise[{tag}]"), bm, bn, k, 1.0, (bm + bn) * 4,
+        ));
+        out.push(estimate_kernel(
+            &format!("sparse24[{tag}]"), bm, bn, k, 2.0 + 0.25,
+            bn * k * 4 / 2,
+        ));
+        out.push(estimate_kernel(
+            &format!("f32_dense[{tag}]"), bm, bn, k, 4.0, 0,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_shape_matches_paper() {
+        // paper Fig 3: small shapes lose (<1), big shapes win (>1.3),
+        // monotone-ish growth along K and N
+        let s = fig3_speedup(&H100, 1024, 1024, 1024);
+        let l = fig3_speedup(&H100, 16384, 8192, 8192);
+        assert!(s < 1.0, "small shapes should not win: {s}");
+        assert!(l > 1.3, "large shapes should win: {l}");
+        assert!(l > s);
+    }
+
+    #[test]
+    fn fig3_grows_with_size() {
+        let mut prev = 0.0;
+        for k in [1024, 2048, 4096, 8192, 16384] {
+            let v = fig3_speedup(&H100, 8192, k, 8192);
+            assert!(v >= prev * 0.95, "roughly monotone along K");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn table3_ordering() {
+        // paper Table 3: tensorwise 1.25x > rowwise 1.10x > 1.0
+        let tw = table3_speedup(&H100, "fp8_tensorwise");
+        let rw = table3_speedup(&H100, "fp8_rowwise");
+        assert!(tw > rw, "tensorwise faster than rowwise: {tw} vs {rw}");
+        assert!(rw > 1.0, "rowwise still wins vs bf16: {rw}");
+        assert!(tw > 1.1 && tw < 1.6, "tensorwise in a plausible band: {tw}");
+    }
+
+    #[test]
+    fn kernels_fit_vmem() {
+        for k in kernel_report() {
+            assert!(
+                k.vmem_bytes < VMEM_BUDGET,
+                "{} exceeds VMEM: {} bytes", k.name, k.vmem_bytes
+            );
+        }
+    }
+
+    #[test]
+    fn quantized_kernels_have_higher_intensity() {
+        let report = kernel_report();
+        let f32i = report
+            .iter()
+            .find(|k| k.name == "f32_dense[prefill]")
+            .unwrap()
+            .intensity;
+        let int4 = report
+            .iter()
+            .find(|k| k.name == "w4a16[prefill]")
+            .unwrap()
+            .intensity;
+        assert!(
+            int4 > f32i,
+            "packed weights raise arithmetic intensity: {int4} vs {f32i}"
+        );
+    }
+}

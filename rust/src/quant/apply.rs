@@ -1,0 +1,535 @@
+//! Checkpoint quantizer: the Rust implementation of `quantize_`.
+//!
+//! Takes an f32 master checkpoint (AOCKPT) and a `QuantConfig`, and emits a
+//! packed quantized checkpoint whose tensors bind 1:1 to the quantized
+//! serving artifacts' `params.*` inputs. The math mirrors
+//! python/compile/quant_api.py::quantize_weight *exactly* (including
+//! round-ties-even and argsort tie-breaking); tests/golden_quant.json pins
+//! the two implementations together.
+
+use super::config::{QuantConfig, QuantKind};
+use super::formats::{
+    int_asymmetric_qparams, int_symmetric_scale,
+    pack_int4, E4M3,
+};
+use crate::ckpt::Checkpoint;
+use crate::tensor::HostTensor;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Names of per-layer linear weights in a model checkpoint (stacked [L,N,K]).
+pub const LAYER_LINEARS: [&str; 7] =
+    ["wq", "wk", "wv", "wo", "w1", "w2", "w3"];
+
+/// One linear's packed representation: leaf-name suffix -> tensor.
+pub type PackedWeight = BTreeMap<&'static str, HostTensor>;
+
+fn round_ties_even(x: f32) -> f32 {
+    x.round_ties_even()
+}
+
+// ---------------------------------------------------------------------------
+// Per-scheme weight packing ([n, k] f32 -> packed leaves)
+// ---------------------------------------------------------------------------
+
+pub fn quant_int8_channelwise(w: &[f32], n: usize, k: usize) -> (Vec<i8>, Vec<f32>) {
+    let mut q = vec![0i8; n * k];
+    let mut scales = vec![0f32; n];
+    for i in 0..n {
+        let row = &w[i * k..(i + 1) * k];
+        let amax = row.iter().fold(0f32, |a, &x| a.max(x.abs()));
+        let s = int_symmetric_scale(amax, 8);
+        scales[i] = s;
+        for j in 0..k {
+            q[i * k + j] = round_ties_even(row[j] / s).clamp(-127.0, 127.0) as i8;
+        }
+    }
+    (q, scales)
+}
+
+pub fn quant_int4_group_asym(
+    w: &[f32], n: usize, k: usize, g: usize,
+) -> (Vec<u8>, Vec<f32>, Vec<f32>) {
+    let ng = k / g;
+    let mut q = vec![0i8; n * k];
+    let mut scales = vec![0f32; n * ng];
+    let mut zps = vec![0f32; n * ng];
+    for i in 0..n {
+        for gi in 0..ng {
+            let grp = &w[i * k + gi * g..i * k + (gi + 1) * g];
+            let mn = grp.iter().fold(f32::INFINITY, |a, &x| a.min(x));
+            let mx = grp.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+            let (s, zp) = int_asymmetric_qparams(mn, mx, 4);
+            scales[i * ng + gi] = s;
+            zps[i * ng + gi] = zp;
+            for (j, &x) in grp.iter().enumerate() {
+                let v = (round_ties_even(x / s) + zp).clamp(0.0, 15.0);
+                q[i * k + gi * g + j] = v as i8;
+            }
+        }
+    }
+    (pack_int4(&q), scales, zps)
+}
+
+pub fn quant_int4_group_sym(
+    w: &[f32], n: usize, k: usize, g: usize,
+) -> (Vec<u8>, Vec<f32>) {
+    let ng = k / g;
+    let mut q = vec![0i8; n * k];
+    let mut scales = vec![0f32; n * ng];
+    for i in 0..n {
+        for gi in 0..ng {
+            let grp = &w[i * k + gi * g..i * k + (gi + 1) * g];
+            let amax = grp.iter().fold(0f32, |a, &x| a.max(x.abs()));
+            let s = int_symmetric_scale(amax, 4);
+            scales[i * ng + gi] = s;
+            for (j, &x) in grp.iter().enumerate() {
+                q[i * k + gi * g + j] =
+                    round_ties_even(x / s).clamp(-8.0, 7.0) as i8;
+            }
+        }
+    }
+    (pack_int4(&q), scales)
+}
+
+/// NF4 (QLoRA): block-64 absmax scaling, nearest-quantile lookup.
+pub const NF4_TABLE: [f32; 16] = [
+    -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+    -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+    0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+    0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+    0.7229568362236023, 1.0,
+];
+
+pub const NF4_BLOCK: usize = 64;
+
+pub fn quant_nf4(w: &[f32], n: usize, k: usize) -> (Vec<u8>, Vec<f32>) {
+    assert!(k % NF4_BLOCK == 0);
+    let nb = k / NF4_BLOCK;
+    let mut codes = vec![0i8; n * k];
+    let mut scales = vec![0f32; n * nb];
+    for i in 0..n {
+        for bi in 0..nb {
+            let blk = &w[i * k + bi * NF4_BLOCK..i * k + (bi + 1) * NF4_BLOCK];
+            let amax = blk.iter().fold(0f32, |a, &x| a.max(x.abs())).max(1e-12);
+            scales[i * nb + bi] = amax;
+            for (j, &x) in blk.iter().enumerate() {
+                let norm = x / amax;
+                let mut best = 0usize;
+                let mut bestd = f32::INFINITY;
+                for (ci, &t) in NF4_TABLE.iter().enumerate() {
+                    let d = (norm - t).abs();
+                    if d < bestd {
+                        bestd = d;
+                        best = ci;
+                    }
+                }
+                codes[i * k + bi * NF4_BLOCK + j] = best as i8;
+            }
+        }
+    }
+    (pack_int4(&codes), scales)
+}
+
+pub fn quant_fp8_rowwise(w: &[f32], n: usize, k: usize) -> (Vec<u8>, Vec<f32>) {
+    let mut codes = vec![0u8; n * k];
+    let mut scales = vec![0f32; n];
+    for i in 0..n {
+        let row = &w[i * k..(i + 1) * k];
+        let amax = row.iter().fold(0f32, |a, &x| a.max(x.abs()));
+        let s = E4M3.max_val / amax.max(1e-12);
+        scales[i] = s;
+        for j in 0..k {
+            codes[i * k + j] = E4M3.encode(row[j] * s);
+        }
+    }
+    (codes, scales)
+}
+
+pub fn quant_fp8_tensorwise(w: &[f32]) -> (Vec<u8>, f32) {
+    let amax = w.iter().fold(0f32, |a, &x| a.max(x.abs()));
+    let s = E4M3.max_val / amax.max(1e-12);
+    (w.iter().map(|&x| E4M3.encode(x * s)).collect(), s)
+}
+
+/// 2:4 prune + compress, mirroring jnp's stable-argsort tie-breaking: the
+/// two *largest* |w| of each group of 4 are kept; among equal magnitudes
+/// the later index wins (ascending stable sort ranks earlier ties lower).
+pub fn sparse24_compress(
+    w: &[f32], n: usize, k: usize,
+) -> (Vec<f32>, Vec<u8>) {
+    assert!(k % 4 == 0);
+    let mut vals = vec![0f32; n * k / 2];
+    let mut idx = vec![0u8; n * k / 2];
+    for i in 0..n {
+        for gi in 0..k / 4 {
+            let grp = &w[i * k + gi * 4..i * k + gi * 4 + 4];
+            // ranks via stable ascending argsort of |grp|
+            let mut order = [0usize, 1, 2, 3];
+            order.sort_by(|&a, &b| {
+                grp[a].abs().partial_cmp(&grp[b].abs()).unwrap()
+                    .then(a.cmp(&b))
+            });
+            let mut keep = [false; 4];
+            keep[order[2]] = true;
+            keep[order[3]] = true;
+            let mut slot = 0usize;
+            for p in 0..4 {
+                if keep[p] {
+                    vals[i * k / 2 + gi * 2 + slot] = grp[p];
+                    idx[i * k / 2 + gi * 2 + slot] = p as u8;
+                    slot += 1;
+                }
+            }
+        }
+    }
+    (vals, idx)
+}
+
+// ---------------------------------------------------------------------------
+// Packed-leaf assembly (matches quant_api.quantize_weight's dict keys)
+// ---------------------------------------------------------------------------
+
+/// Quantize one weight plane. `shape` is [n, k] or stacked [l, n, k] —
+/// stacked planes are quantized layer by layer, mirroring the vmap in
+/// quantize_params, and the leaves get a leading l dim.
+pub fn quantize_weight(
+    w: &HostTensor, cfg: QuantConfig,
+) -> Result<PackedWeight> {
+    let (l, n, k) = match w.shape.len() {
+        2 => (1usize, w.shape[0], w.shape[1]),
+        3 => (w.shape[0], w.shape[1], w.shape[2]),
+        _ => bail!("weight must be [n,k] or [l,n,k], got {:?}", w.shape),
+    };
+    let stacked = w.shape.len() == 3;
+    let data = w.as_f32()?;
+    let g = cfg.group_size;
+    let lead = |mut v: Vec<usize>| -> Vec<usize> {
+        if stacked {
+            v.insert(0, l);
+        }
+        v
+    };
+    let mut out = PackedWeight::new();
+    match cfg.kind {
+        QuantKind::F32 => {
+            out.insert("w", w.clone());
+        }
+        QuantKind::Int8WeightOnly | QuantKind::Int8Dynamic => {
+            let mut qs = Vec::with_capacity(l * n * k);
+            let mut ss = Vec::with_capacity(l * n);
+            for li in 0..l {
+                let (q, s) =
+                    quant_int8_channelwise(&data[li * n * k..(li + 1) * n * k], n, k);
+                qs.extend(q);
+                ss.extend(s);
+            }
+            out.insert("q", HostTensor::s8(lead(vec![n, k]), qs));
+            out.insert("s", HostTensor::f32(lead(vec![n]), ss));
+        }
+        QuantKind::Int4WeightOnly => {
+            let ng = k / g;
+            let (mut ps, mut ss, mut zs) = (Vec::new(), Vec::new(), Vec::new());
+            for li in 0..l {
+                let (p, s, z) = quant_int4_group_asym(
+                    &data[li * n * k..(li + 1) * n * k], n, k, g,
+                );
+                ps.extend(p);
+                ss.extend(s);
+                zs.extend(z);
+            }
+            out.insert("p", HostTensor::u8(lead(vec![n, k / 2]), ps));
+            out.insert("s", HostTensor::f32(lead(vec![n, ng]), ss));
+            out.insert("zp", HostTensor::f32(lead(vec![n, ng]), zs));
+        }
+        QuantKind::Int8DynAct4Weight => {
+            let ng = k / g;
+            let (mut ps, mut ss) = (Vec::new(), Vec::new());
+            for li in 0..l {
+                let (p, s) = quant_int4_group_sym(
+                    &data[li * n * k..(li + 1) * n * k], n, k, g,
+                );
+                ps.extend(p);
+                ss.extend(s);
+            }
+            out.insert("p", HostTensor::u8(lead(vec![n, k / 2]), ps));
+            out.insert("s", HostTensor::f32(lead(vec![n, ng]), ss));
+        }
+        QuantKind::Fp8WeightOnly | QuantKind::Fp8DynamicRow => {
+            let (mut cs, mut ss) = (Vec::new(), Vec::new());
+            for li in 0..l {
+                let (c, s) =
+                    quant_fp8_rowwise(&data[li * n * k..(li + 1) * n * k], n, k);
+                cs.extend(c);
+                ss.extend(s);
+            }
+            out.insert("c", HostTensor::u8(lead(vec![n, k]), cs));
+            out.insert("s", HostTensor::f32(lead(vec![n]), ss));
+        }
+        QuantKind::Fp8DynamicTensor => {
+            let (mut cs, mut ss) = (Vec::new(), Vec::new());
+            for li in 0..l {
+                let (c, s) =
+                    quant_fp8_tensorwise(&data[li * n * k..(li + 1) * n * k]);
+                cs.extend(c);
+                ss.push(s);
+            }
+            out.insert("c", HostTensor::u8(lead(vec![n, k]), cs));
+            out.insert("s", HostTensor::f32(lead(vec![1]), ss));
+        }
+        QuantKind::Nf4 => {
+            let nb = k / NF4_BLOCK;
+            let (mut ps, mut ss) = (Vec::new(), Vec::new());
+            for li in 0..l {
+                let (p, s) =
+                    quant_nf4(&data[li * n * k..(li + 1) * n * k], n, k);
+                ps.extend(p);
+                ss.extend(s);
+            }
+            out.insert("p", HostTensor::u8(lead(vec![n, k / 2]), ps));
+            out.insert("s", HostTensor::f32(lead(vec![n, nb]), ss));
+        }
+        QuantKind::Sparse24 => {
+            let (mut vs, mut is_) = (Vec::new(), Vec::new());
+            for li in 0..l {
+                let (v, i) =
+                    sparse24_compress(&data[li * n * k..(li + 1) * n * k], n, k);
+                vs.extend(v);
+                is_.extend(i);
+            }
+            out.insert("v", HostTensor::f32(lead(vec![n, k / 2]), vs));
+            out.insert("i", HostTensor::u8(lead(vec![n, k / 2]), is_));
+        }
+        QuantKind::Int8DynSparse24 => {
+            let (mut qs, mut is_, mut ss) = (Vec::new(), Vec::new(), Vec::new());
+            for li in 0..l {
+                let (v, i) =
+                    sparse24_compress(&data[li * n * k..(li + 1) * n * k], n, k);
+                // per-channel int8 quant of the kept values
+                for r in 0..n {
+                    let row = &v[r * k / 2..(r + 1) * k / 2];
+                    let amax = row.iter().fold(0f32, |a, &x| a.max(x.abs()));
+                    let s = amax.max(1e-12) / 127.0;
+                    ss.push(s);
+                    qs.extend(row.iter().map(|&x| {
+                        round_ties_even(x / s).clamp(-127.0, 127.0) as i8
+                    }));
+                }
+                is_.extend(i);
+            }
+            out.insert("v", HostTensor::s8(lead(vec![n, k / 2]), qs));
+            out.insert("i", HostTensor::u8(lead(vec![n, k / 2]), is_));
+            out.insert("s", HostTensor::f32(lead(vec![n]), ss));
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Whole-checkpoint quantization
+// ---------------------------------------------------------------------------
+
+/// Size report for `ao quantize` and Table 4's model-size column.
+#[derive(Debug, Clone)]
+pub struct SizeReport {
+    pub f32_bytes: usize,
+    pub packed_bytes: usize,
+}
+
+impl SizeReport {
+    pub fn ratio(&self) -> f64 {
+        self.f32_bytes as f64 / self.packed_bytes.max(1) as f64
+    }
+}
+
+/// Quantize a master checkpoint. Linear weights (`layers.<lin>.w` and
+/// `lm_head.w`) are packed; embeddings and norms pass through — exactly the
+/// coverage quantize_params has in Python.
+pub fn quantize_checkpoint(
+    master: &Checkpoint, cfg: QuantConfig,
+) -> Result<(Checkpoint, SizeReport)> {
+    let mut out = Checkpoint::new();
+    out.meta = master.meta.clone();
+    if let crate::util::json::Value::Obj(ref mut o) = out.meta {
+        o.insert(
+            "quant".into(),
+            crate::util::json::s(&cfg.tag()),
+        );
+    }
+    let mut f32_bytes = 0usize;
+    let mut packed_bytes = 0usize;
+    for name in &master.names {
+        let t = &master.tensors[name];
+        f32_bytes += t.byte_size();
+        let is_linear = name == "lm_head.w"
+            || LAYER_LINEARS
+                .iter()
+                .any(|l| name == &format!("layers.{l}.w"));
+        if is_linear && cfg.is_quantized() {
+            let base = name.trim_end_matches(".w");
+            let packed = quantize_weight(t, cfg)?;
+            for (suffix, tensor) in packed {
+                packed_bytes += tensor.byte_size();
+                out.insert(&format!("{base}.{suffix}"), tensor);
+            }
+        } else {
+            packed_bytes += t.byte_size();
+            out.insert(name, t.clone());
+        }
+    }
+    Ok((out, SizeReport { f32_bytes, packed_bytes }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_w(n: usize, k: usize, seed: u64) -> HostTensor {
+        let mut rng = Rng::new(seed);
+        HostTensor::f32(
+            vec![n, k],
+            (0..n * k).map(|_| rng.normal() as f32).collect(),
+        )
+    }
+
+    #[test]
+    fn int8_roundtrip_error_bounded() {
+        let w = rand_w(16, 64, 1);
+        let (q, s) = quant_int8_channelwise(w.as_f32().unwrap(), 16, 64);
+        for i in 0..16 {
+            for j in 0..64 {
+                let d = q[i * 64 + j] as f32 * s[i];
+                let orig = w.as_f32().unwrap()[i * 64 + j];
+                assert!((d - orig).abs() <= s[i] * 0.5 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn int4_asym_roundtrip_error_bounded() {
+        let w = rand_w(8, 64, 2);
+        let (p, s, zp) = quant_int4_group_asym(w.as_f32().unwrap(), 8, 64, 32);
+        let un = super::super::formats::unpack_int4_unsigned(&p);
+        for i in 0..8 {
+            for j in 0..64 {
+                let gi = j / 32;
+                let d = (un[i * 64 + j] as f32 - zp[i * 2 + gi]) * s[i * 2 + gi];
+                let orig = w.as_f32().unwrap()[i * 64 + j];
+                assert!(
+                    (d - orig).abs() <= s[i * 2 + gi] * 0.5 + 1e-5,
+                    "{i},{j}: {d} vs {orig}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fp8_rowwise_decodes_near_original() {
+        let w = rand_w(8, 32, 3);
+        let (c, s) = quant_fp8_rowwise(w.as_f32().unwrap(), 8, 32);
+        for i in 0..8 {
+            for j in 0..32 {
+                let d = E4M3.decode(c[i * 32 + j]) / s[i];
+                let orig = w.as_f32().unwrap()[i * 32 + j];
+                // e4m3 relative error ~2^-4 worst case
+                assert!((d - orig).abs() <= orig.abs() * 0.07 + 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse24_keeps_two_largest() {
+        let w = HostTensor::f32(
+            vec![1, 8],
+            vec![0.1, -3.0, 0.2, 2.0, 1.0, 1.0, -1.0, 0.5],
+        );
+        let (v, i) = sparse24_compress(w.as_f32().unwrap(), 1, 8);
+        assert_eq!(i[0], 1);
+        assert_eq!(i[1], 3);
+        assert_eq!(v[0], -3.0);
+        assert_eq!(v[1], 2.0);
+        // tie group: |1.0|,|1.0|,|−1.0|,|0.5| -> stable ascending argsort
+        // of [1.0,1.0,1.0,0.5] ranks idx0 lowest of the ties; keeps 1,2
+        assert_eq!((i[2], i[3]), (1, 2));
+    }
+
+    #[test]
+    fn quantize_weight_stacked_shapes() {
+        let mut rng = Rng::new(5);
+        let w = HostTensor::f32(
+            vec![2, 8, 64],
+            (0..2 * 8 * 64).map(|_| rng.normal() as f32).collect(),
+        );
+        let p = quantize_weight(&w, QuantConfig::parse("int4wo-32").unwrap())
+            .unwrap();
+        assert_eq!(p["p"].shape, vec![2, 8, 32]);
+        assert_eq!(p["s"].shape, vec![2, 8, 2]);
+        assert_eq!(p["zp"].shape, vec![2, 8, 2]);
+    }
+
+    #[test]
+    fn quantize_checkpoint_compresses() {
+        let mut master = Checkpoint::new();
+        master.insert("tok_emb", rand_w(64, 32, 7));
+        master.insert("layers.wq.w", {
+            let mut rng = Rng::new(8);
+            HostTensor::f32(
+                vec![2, 32, 32],
+                (0..2 * 32 * 32).map(|_| rng.normal() as f32).collect(),
+            )
+        });
+        master.insert("lm_head.w", rand_w(64, 32, 9));
+        let (q, report) =
+            quantize_checkpoint(&master, QuantConfig::parse("int4wo-32").unwrap())
+                .unwrap();
+        assert!(report.packed_bytes < report.f32_bytes);
+        assert!(q.tensors.contains_key("layers.wq.p"));
+        assert!(q.tensors.contains_key("lm_head.p"));
+        assert!(q.tensors.contains_key("tok_emb")); // embeddings untouched
+        assert_eq!(q.meta.req_str("quant").unwrap(), "int4wo-32");
+    }
+
+    #[test]
+    fn golden_quant_matches_python() {
+        let path = concat!(
+            env!("CARGO_MANIFEST_DIR"), "/tests/golden_quant.json"
+        );
+        let Ok(text) = std::fs::read_to_string(path) else {
+            eprintln!("golden_quant.json missing; run pytest first (skipping)");
+            return;
+        };
+        let v = crate::util::json::Value::parse(&text).unwrap();
+        let n = v.req_usize("n").unwrap();
+        let k = v.req_usize("k").unwrap();
+        let w: Vec<f32> = v.get("w").unwrap().as_arr().unwrap()
+            .iter().map(|x| x.as_f64().unwrap() as f32).collect();
+        let wt = HostTensor::f32(vec![n, k], w);
+        for (tag, leaves) in v.get("schemes").unwrap().as_obj().unwrap() {
+            let cfg = QuantConfig::parse(tag).unwrap();
+            let packed = quantize_weight(&wt, cfg).unwrap();
+            for (leaf, expected) in leaves.as_obj().unwrap() {
+                let got = &packed[leaf.as_str()];
+                let exp: Vec<f64> = expected.as_arr().unwrap()
+                    .iter().map(|x| x.as_f64().unwrap()).collect();
+                assert_eq!(got.numel(), exp.len(), "{tag}.{leaf} count");
+                let gotv: Vec<f64> = match &got.data {
+                    crate::tensor::Data::F32(d) =>
+                        d.iter().map(|&x| x as f64).collect(),
+                    crate::tensor::Data::S8(d) =>
+                        d.iter().map(|&x| x as f64).collect(),
+                    crate::tensor::Data::U8(d) =>
+                        d.iter().map(|&x| x as f64).collect(),
+                    crate::tensor::Data::S32(d) =>
+                        d.iter().map(|&x| x as f64).collect(),
+                };
+                for (i, (a, b)) in gotv.iter().zip(exp.iter()).enumerate() {
+                    assert!(
+                        (a - b).abs() < 1e-5,
+                        "{tag}.{leaf}[{i}]: rust {a} != python {b}"
+                    );
+                }
+            }
+        }
+    }
+}

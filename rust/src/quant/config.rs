@@ -1,0 +1,201 @@
+//! The quantization-config vocabulary — the Rust mirror of
+//! python/compile/quant_api.py's config classes. One tag string names each
+//! scheme across the whole stack: CLI, checkpoint quantizer, artifact
+//! names, serving engine.
+
+use anyhow::{bail, Result};
+use std::fmt;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantKind {
+    F32,
+    Int8WeightOnly,
+    Int4WeightOnly,
+    Fp8WeightOnly,
+    Fp8DynamicRow,
+    Fp8DynamicTensor,
+    Int8Dynamic,
+    Int8DynAct4Weight, // "8da4w": the QAT / ExecuTorch mobile target
+    Sparse24,
+    Int8DynSparse24,
+    /// QLoRA NormalFloat-4 (block-64 absmax)
+    Nf4,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuantConfig {
+    pub kind: QuantKind,
+    pub group_size: usize,
+}
+
+impl QuantConfig {
+    pub const fn new(kind: QuantKind, group_size: usize) -> Self {
+        QuantConfig { kind, group_size }
+    }
+
+    /// Parse a scheme tag ("int4wo-64", "fp8dq_row", "f32", ...).
+    pub fn parse(tag: &str) -> Result<QuantConfig> {
+        let (head, group) = match tag.rsplit_once('-') {
+            Some((h, g)) if g.chars().all(|c| c.is_ascii_digit()) => {
+                (h, g.parse::<usize>().unwrap())
+            }
+            _ => (tag, 64),
+        };
+        let kind = match head {
+            "f32" | "bf16" | "none" => QuantKind::F32,
+            "int8wo" => QuantKind::Int8WeightOnly,
+            "int4wo" => QuantKind::Int4WeightOnly,
+            "fp8wo" | "float8wo" => QuantKind::Fp8WeightOnly,
+            "fp8dq_row" | "float8dq_row" => QuantKind::Fp8DynamicRow,
+            "fp8dq_tensor" | "float8dq_tensor" => QuantKind::Fp8DynamicTensor,
+            "int8dq" => QuantKind::Int8Dynamic,
+            "8da4w" => QuantKind::Int8DynAct4Weight,
+            "nf4" => QuantKind::Nf4,
+            "sparse24" => QuantKind::Sparse24,
+            "int8dq_sparse24" => QuantKind::Int8DynSparse24,
+            other => bail!("unknown quantization scheme '{other}'"),
+        };
+        let group = match kind {
+            QuantKind::Int8DynAct4Weight if head == tag => 32,
+            _ => group,
+        };
+        Ok(QuantConfig { kind, group_size: group })
+    }
+
+    /// Canonical tag — must match `QuantScheme.tag()` in model.py so the
+    /// artifact names line up.
+    pub fn tag(&self) -> String {
+        match self.kind {
+            QuantKind::F32 => "f32".into(),
+            QuantKind::Int8WeightOnly => "int8wo".into(),
+            QuantKind::Int4WeightOnly => format!("int4wo-{}", self.group_size),
+            QuantKind::Fp8WeightOnly => "fp8wo".into(),
+            QuantKind::Fp8DynamicRow => "fp8dq_row".into(),
+            QuantKind::Fp8DynamicTensor => "fp8dq_tensor".into(),
+            QuantKind::Int8Dynamic => "int8dq".into(),
+            QuantKind::Int8DynAct4Weight => format!("8da4w-{}", self.group_size),
+            QuantKind::Nf4 => "nf4".into(),
+            QuantKind::Sparse24 => "sparse24".into(),
+            QuantKind::Int8DynSparse24 => "int8dq_sparse24".into(),
+        }
+    }
+
+    /// Paper-style display name (Table 4 rows).
+    pub fn display(&self) -> String {
+        match self.kind {
+            QuantKind::F32 => "None (BF16)".into(),
+            QuantKind::Int4WeightOnly => format!("int4wo-{}", self.group_size),
+            QuantKind::Fp8DynamicRow => "float8dq (PerRow)".into(),
+            QuantKind::Fp8DynamicTensor => "float8dq (PerTensor)".into(),
+            QuantKind::Fp8WeightOnly => "float8wo".into(),
+            _ => self.tag(),
+        }
+    }
+
+    /// Bits per weight element for size accounting (scales/zps/metadata
+    /// included via `weight_bytes`, this is just the element payload).
+    pub fn weight_bits(&self) -> f64 {
+        match self.kind {
+            QuantKind::F32 => 32.0,
+            QuantKind::Int8WeightOnly
+            | QuantKind::Int8Dynamic => 8.0,
+            QuantKind::Int4WeightOnly
+            | QuantKind::Int8DynAct4Weight
+            | QuantKind::Nf4 => 4.0,
+            QuantKind::Fp8WeightOnly
+            | QuantKind::Fp8DynamicRow
+            | QuantKind::Fp8DynamicTensor => 8.0,
+            QuantKind::Sparse24 => 16.0 + 4.0, // half the f32 values + 2bit idx/elem... see weight_bytes
+            QuantKind::Int8DynSparse24 => 4.0 + 4.0,
+        }
+    }
+
+    /// Exact packed byte count for an [n, k] weight under this config —
+    /// the number `ao quantize` reports and Table 4's model-size column.
+    pub fn weight_bytes(&self, n: usize, k: usize) -> usize {
+        let g = self.group_size;
+        match self.kind {
+            QuantKind::F32 => n * k * 4,
+            QuantKind::Int8WeightOnly | QuantKind::Int8Dynamic => {
+                n * k + n * 4 // int8 plane + per-channel f32 scale
+            }
+            QuantKind::Int4WeightOnly => {
+                n * k / 2 + 2 * (n * (k / g) * 4) // nibbles + scale + zp
+            }
+            QuantKind::Int8DynAct4Weight => n * k / 2 + n * (k / g) * 4,
+            QuantKind::Nf4 => n * k / 2 + n * (k / 64) * 4,
+            QuantKind::Fp8WeightOnly
+            | QuantKind::Fp8DynamicRow => n * k + n * 4,
+            QuantKind::Fp8DynamicTensor => n * k + 4,
+            QuantKind::Sparse24 => {
+                // kept values (f32) + 2-bit positions packed 4/byte
+                n * (k / 2) * 4 + n * (k / 2).div_ceil(4)
+            }
+            QuantKind::Int8DynSparse24 => {
+                n * (k / 2) + n * (k / 2).div_ceil(4) + n * 4
+            }
+        }
+    }
+
+    pub fn is_quantized(&self) -> bool {
+        self.kind != QuantKind::F32
+    }
+}
+
+impl fmt::Display for QuantConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.tag())
+    }
+}
+
+/// The Table-4 sweep, in paper order.
+pub fn table4_configs() -> Vec<QuantConfig> {
+    vec![
+        QuantConfig::parse("f32").unwrap(),
+        QuantConfig::parse("int4wo-64").unwrap(),
+        QuantConfig::parse("int8wo").unwrap(),
+        QuantConfig::parse("fp8wo").unwrap(),
+        QuantConfig::parse("fp8dq_row").unwrap(),
+        QuantConfig::parse("fp8dq_tensor").unwrap(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for tag in [
+            "f32", "int8wo", "int4wo-64", "int4wo-32", "fp8wo", "fp8dq_row",
+            "fp8dq_tensor", "int8dq", "8da4w-32", "sparse24",
+            "int8dq_sparse24", "nf4",
+        ] {
+            let c = QuantConfig::parse(tag).unwrap();
+            assert_eq!(c.tag(), tag, "{tag}");
+        }
+    }
+
+    #[test]
+    fn parse_default_groups() {
+        assert_eq!(QuantConfig::parse("8da4w").unwrap().group_size, 32);
+        assert_eq!(QuantConfig::parse("int4wo").unwrap().group_size, 64);
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(QuantConfig::parse("int2wo").is_err());
+    }
+
+    #[test]
+    fn size_accounting_compresses() {
+        let f32b = QuantConfig::parse("f32").unwrap().weight_bytes(512, 512);
+        for tag in ["int8wo", "int4wo-64", "fp8wo", "8da4w-32"] {
+            let qb = QuantConfig::parse(tag).unwrap().weight_bytes(512, 512);
+            assert!(qb < f32b, "{tag}: {qb} !< {f32b}");
+        }
+        // int4 ~ 8x smaller modulo scale overhead
+        let int4 = QuantConfig::parse("int4wo-64").unwrap().weight_bytes(512, 512);
+        assert!((f32b as f64 / int4 as f64) > 6.0);
+    }
+}

@@ -1,0 +1,294 @@
+//! Rust-side bit-exact numeric formats, mirroring python/compile/formats.py.
+//!
+//! The Rust checkpoint quantizer packs weights with this module; the
+//! Python kernels decode them in-graph. The two implementations are pinned
+//! to each other by tests/golden_formats.json (written by
+//! `pytest python/tests/test_formats.py`).
+
+/// Miniature float format: 1 sign bit, `ebits` exponent (bias 2^(e-1)-1),
+/// `mbits` mantissa, saturating, subnormals, no inf/nan codes used.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FloatFormat {
+    pub name: &'static str,
+    pub ebits: u32,
+    pub mbits: u32,
+    pub max_val: f32,
+}
+
+pub const E4M3: FloatFormat =
+    FloatFormat { name: "e4m3", ebits: 4, mbits: 3, max_val: 448.0 };
+pub const E5M2: FloatFormat =
+    FloatFormat { name: "e5m2", ebits: 5, mbits: 2, max_val: 57344.0 };
+pub const E2M3: FloatFormat =
+    FloatFormat { name: "e2m3", ebits: 2, mbits: 3, max_val: 7.5 };
+pub const E3M2: FloatFormat =
+    FloatFormat { name: "e3m2", ebits: 3, mbits: 2, max_val: 28.0 };
+pub const E2M1: FloatFormat =
+    FloatFormat { name: "e2m1", ebits: 2, mbits: 1, max_val: 6.0 };
+
+pub const ALL_FORMATS: [FloatFormat; 5] = [E4M3, E5M2, E2M3, E3M2, E2M1];
+
+pub fn format_by_name(name: &str) -> Option<FloatFormat> {
+    ALL_FORMATS.iter().copied().find(|f| f.name == name)
+}
+
+impl FloatFormat {
+    pub fn bias(&self) -> i32 {
+        (1 << (self.ebits - 1)) - 1
+    }
+
+    pub fn min_normal(&self) -> f32 {
+        (2.0f32).powi(1 - self.bias())
+    }
+
+    pub fn bits(&self) -> u32 {
+        1 + self.ebits + self.mbits
+    }
+
+    /// Round `x` to the nearest representable value (ties-to-even via the
+    /// platform's default rounding on `round_ties_even`).
+    pub fn cast(&self, x: f32) -> f32 {
+        let sgn = if x < 0.0 { -1.0 } else { 1.0 };
+        let ax = x.abs().min(self.max_val);
+        let min_normal = self.min_normal();
+        let e = ax.max(min_normal).log2().floor();
+        let quantum = if ax < min_normal {
+            min_normal / (1 << self.mbits) as f32
+        } else {
+            (2.0f32).powf(e - self.mbits as f32)
+        };
+        let q = ((ax / quantum).round_ties_even() * quantum).min(self.max_val);
+        sgn * q
+    }
+
+    /// Encode a grid value to its bit pattern (low `bits()` bits of a u8).
+    pub fn encode(&self, x: f32) -> u8 {
+        let x = self.cast(x);
+        // zero always encodes as +0, matching formats.py
+        let neg = x < 0.0;
+        let ax = x.abs();
+        let min_normal = self.min_normal();
+        let is_sub = ax < min_normal;
+        let e = ax.max(min_normal).log2().floor() as i32;
+        let mant_scale = if is_sub {
+            (1 << self.mbits) as f32 / min_normal
+        } else {
+            (2.0f32).powi(self.mbits as i32 - e)
+        };
+        let mut mant = (ax * mant_scale).round_ties_even() as i32;
+        let mut exp_field = if is_sub { 0 } else { e + self.bias() };
+        if !is_sub {
+            mant -= 1 << self.mbits; // hidden bit
+        }
+        if mant >= (1 << self.mbits) {
+            mant = 0;
+            exp_field += 1;
+        }
+        let sign_bit = (neg as i32) << (self.ebits + self.mbits);
+        (sign_bit | (exp_field << self.mbits) | mant) as u8
+    }
+
+    /// Decode a bit pattern back to f32 (clamped like the python decoder).
+    pub fn decode(&self, code: u8) -> f32 {
+        let code = code as i32;
+        let sgn = if (code >> (self.ebits + self.mbits)) & 1 == 1 {
+            -1.0
+        } else {
+            1.0
+        };
+        let exp_field = (code >> self.mbits) & ((1 << self.ebits) - 1);
+        let mant = (code & ((1 << self.mbits) - 1)) as f32;
+        let min_normal = self.min_normal();
+        let val = if exp_field == 0 {
+            mant * (min_normal / (1 << self.mbits) as f32)
+        } else {
+            (2.0f32).powi(exp_field - self.bias())
+                * (1.0 + mant / (1 << self.mbits) as f32)
+        };
+        sgn * val.min(self.max_val)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// E8M0 shared scales (MX)
+// ---------------------------------------------------------------------------
+
+pub const E8M0_BIAS: i32 = 127;
+pub const MX_BLOCK: usize = 32;
+
+/// MX shared scale: 2^(floor(log2(amax)) - emax_elem), clamped.
+pub fn e8m0_scale_from_amax(amax: f32, fmt: FloatFormat) -> f32 {
+    let emax_elem = fmt.max_val.log2().floor();
+    let safe = amax.max((2.0f32).powi(-120));
+    let e = (safe.log2().floor() - emax_elem)
+        .clamp(-(E8M0_BIAS as f32), (E8M0_BIAS + 1) as f32);
+    (2.0f32).powf(e)
+}
+
+// ---------------------------------------------------------------------------
+// Integer affine quantization parameter math (mirrors formats.py)
+// ---------------------------------------------------------------------------
+
+pub fn int_symmetric_scale(amax: f32, nbits: u32) -> f32 {
+    let qmax = ((1 << (nbits - 1)) - 1) as f32;
+    amax.max(1e-12) / qmax
+}
+
+pub fn int_asymmetric_qparams(xmin: f32, xmax: f32, nbits: u32) -> (f32, f32) {
+    let qmax = ((1u32 << nbits) - 1) as f32;
+    let xmin = xmin.min(0.0);
+    let xmax = xmax.max(0.0);
+    let scale = (xmax - xmin).max(1e-12) / qmax;
+    let zp = (-xmin / scale).round_ties_even().clamp(0.0, qmax);
+    (scale, zp)
+}
+
+/// Pack int4 values (stored in i8, range [-8,15]) two per byte; even index
+/// in the low nibble — the layout `ref.pack_int4` uses.
+pub fn pack_int4(vals: &[i8]) -> Vec<u8> {
+    assert!(vals.len() % 2 == 0, "int4 pack needs even length");
+    vals.chunks_exact(2)
+        .map(|c| ((c[0] as u8) & 0xF) | (((c[1] as u8) & 0xF) << 4))
+        .collect()
+}
+
+pub fn unpack_int4_signed(packed: &[u8]) -> Vec<i8> {
+    let mut out = Vec::with_capacity(packed.len() * 2);
+    for &b in packed {
+        let lo = (b & 0xF) as i8;
+        let hi = ((b >> 4) & 0xF) as i8;
+        out.push(if lo >= 8 { lo - 16 } else { lo });
+        out.push(if hi >= 8 { hi - 16 } else { hi });
+    }
+    out
+}
+
+pub fn unpack_int4_unsigned(packed: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(packed.len() * 2);
+    for &b in packed {
+        out.push(b & 0xF);
+        out.push((b >> 4) & 0xF);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e2m1_value_table() {
+        let mut vals: Vec<f32> = (0..8).map(|c| E2M1.decode(c)).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(vals, vec![0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn cast_saturates() {
+        assert_eq!(E4M3.cast(1e9), 448.0);
+        assert_eq!(E4M3.cast(-1e9), -448.0);
+        assert_eq!(E5M2.cast(1e9), 57344.0);
+    }
+
+    #[test]
+    fn cast_idempotent() {
+        for fmt in ALL_FORMATS {
+            for i in 0..200 {
+                let x = (i as f32 - 100.0) * 0.37;
+                let c = fmt.cast(x);
+                assert_eq!(fmt.cast(c), c, "{} {}", fmt.name, x);
+            }
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for fmt in ALL_FORMATS {
+            for i in 0..1000 {
+                let x = (i as f32 - 500.0) * 0.11;
+                let g = fmt.cast(x);
+                let rt = fmt.decode(fmt.encode(g));
+                assert!(
+                    (rt - g).abs() < 1e-9,
+                    "{}: {} -> {} -> {}", fmt.name, x, g, rt
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn golden_vectors_match_python() {
+        // Written by python/tests/test_formats.py::test_golden_vectors_for_rust
+        let path = concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/tests/golden_formats.json"
+        );
+        let Ok(text) = std::fs::read_to_string(path) else {
+            eprintln!("golden_formats.json missing; run pytest first (skipping)");
+            return;
+        };
+        let v = crate::util::json::Value::parse(&text).unwrap();
+        let input: Vec<f32> = v
+            .get("input").unwrap().as_arr().unwrap()
+            .iter().map(|x| x.as_f64().unwrap() as f32).collect();
+        for (name, entry) in v.get("formats").unwrap().as_obj().unwrap() {
+            let fmt = format_by_name(name).unwrap();
+            let values: Vec<f32> = entry
+                .get("values").unwrap().as_arr().unwrap()
+                .iter().map(|x| x.as_f64().unwrap() as f32).collect();
+            let codes: Vec<u8> = entry
+                .get("codes").unwrap().as_arr().unwrap()
+                .iter().map(|x| x.as_f64().unwrap() as u8).collect();
+            for i in 0..input.len() {
+                let c = fmt.cast(input[i]);
+                assert!(
+                    (c - values[i]).abs() <= 1e-9,
+                    "{name} cast({}) = {} != python {}", input[i], c, values[i]
+                );
+                assert_eq!(
+                    fmt.encode(input[i]), codes[i],
+                    "{name} encode({}) mismatch", input[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn int4_pack_roundtrip() {
+        let vals: Vec<i8> = (-8..8).collect();
+        let packed = pack_int4(&vals);
+        assert_eq!(packed.len(), 8);
+        assert_eq!(unpack_int4_signed(&packed), vals);
+    }
+
+    #[test]
+    fn uint4_pack_roundtrip() {
+        let vals: Vec<i8> = (0..16).collect();
+        let packed = pack_int4(&vals);
+        let un = unpack_int4_unsigned(&packed);
+        assert_eq!(un, (0..16).map(|x| x as u8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn e8m0_power_of_two() {
+        for amax in [0.001f32, 0.7, 3.0, 447.0, 1e6] {
+            let s = e8m0_scale_from_amax(amax, E4M3);
+            assert_eq!(s.log2().fract(), 0.0, "{amax} -> {s}");
+        }
+    }
+
+    #[test]
+    fn symmetric_scale() {
+        assert!((int_symmetric_scale(127.0, 8) - 1.0).abs() < 1e-6);
+        assert!((int_symmetric_scale(7.0, 4) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn asymmetric_covers_range() {
+        let (s, zp) = int_asymmetric_qparams(-1.0, 2.0, 4);
+        let q = |x: f32| ((x / s) + zp).round_ties_even().clamp(0.0, 15.0);
+        let dq = |q: f32| (q - zp) * s;
+        assert!((dq(q(-1.0)) - (-1.0)).abs() <= s);
+        assert!((dq(q(2.0)) - 2.0).abs() <= s);
+    }
+}

@@ -1,0 +1,9 @@
+//! Quantization: numeric formats, config vocabulary, and the checkpoint
+//! quantizer (`quantize_` analog). See DESIGN.md §1.
+
+pub mod apply;
+pub mod config;
+pub mod formats;
+
+pub use apply::{quantize_checkpoint, quantize_weight, SizeReport};
+pub use config::{table4_configs, QuantConfig, QuantKind};

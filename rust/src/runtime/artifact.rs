@@ -1,0 +1,234 @@
+//! manifest.json parsing: the aot.py <-> Rust contract.
+
+use crate::util::json::Value;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub model: Option<String>,
+    pub scheme: Option<String>,
+    pub recipe: Option<String>,
+    pub batch: usize,
+    pub seq: usize,
+    pub smax: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactSpec {
+    /// Indices of inputs whose name starts with `prefix.`.
+    pub fn input_indices(&self, prefix: &str) -> Vec<usize> {
+        self.inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| {
+                s.name == prefix || s.name.starts_with(&format!("{prefix}."))
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| {
+                anyhow!("artifact '{}' has no input '{name}'", self.name)
+            })
+    }
+
+    pub fn output_index(&self, suffix: &str) -> Option<usize> {
+        self.outputs.iter().position(|s| s.name.ends_with(suffix))
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub head_dim: usize,
+    pub param_count: usize,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelInfo>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn io_specs(v: &Value) -> Result<Vec<IoSpec>> {
+    v.as_arr()
+        .context("io list not an array")?
+        .iter()
+        .map(|e| {
+            Ok(IoSpec {
+                name: e.req_str("name")?.to_string(),
+                shape: e
+                    .req("shape")?
+                    .as_arr()
+                    .context("shape not arr")?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap())
+                    .collect(),
+                dtype: e.req_str("dtype")?.to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path).with_context(|| {
+            format!(
+                "read {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Value::parse(text)
+            .map_err(|e| anyhow!("manifest json: {e}"))?;
+        let mut models = BTreeMap::new();
+        for (name, m) in v.req("models")?.as_obj().context("models")? {
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    vocab: m.req_usize("vocab")?,
+                    d_model: m.req_usize("d_model")?,
+                    n_layers: m.req_usize("n_layers")?,
+                    n_heads: m.req_usize("n_heads")?,
+                    n_kv_heads: m.req_usize("n_kv_heads")?,
+                    d_ff: m.req_usize("d_ff")?,
+                    max_seq: m.req_usize("max_seq")?,
+                    head_dim: m.req_usize("head_dim")?,
+                    param_count: m.req_usize("param_count")?,
+                },
+            );
+        }
+        let mut artifacts = BTreeMap::new();
+        for a in v.req("artifacts")?.as_arr().context("artifacts")? {
+            let spec = ArtifactSpec {
+                name: a.req_str("name")?.to_string(),
+                file: a.req_str("file")?.to_string(),
+                kind: a.req_str("kind")?.to_string(),
+                model: a.get("model").and_then(|x| x.as_str()).map(String::from),
+                scheme: a.get("scheme").and_then(|x| x.as_str()).map(String::from),
+                recipe: a.get("recipe").and_then(|x| x.as_str()).map(String::from),
+                batch: a.get("batch").and_then(|x| x.as_usize()).unwrap_or(0),
+                seq: a.get("seq").and_then(|x| x.as_usize()).unwrap_or(0),
+                smax: a.get("smax").and_then(|x| x.as_usize()).unwrap_or(0),
+                inputs: io_specs(a.req("inputs")?)?,
+                outputs: io_specs(a.req("outputs")?)?,
+            };
+            artifacts.insert(spec.name.clone(), spec);
+        }
+        Ok(Manifest { models, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow!(
+                "no artifact '{name}' in manifest (have: {})",
+                self.artifacts
+                    .keys()
+                    .take(8)
+                    .cloned()
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("no model '{name}' in manifest"))
+    }
+
+    /// Find artifacts by (kind, model, scheme/recipe).
+    pub fn find(
+        &self,
+        kind: &str,
+        model: &str,
+        tag: Option<&str>,
+    ) -> Vec<&ArtifactSpec> {
+        self.artifacts
+            .values()
+            .filter(|a| {
+                a.kind == kind
+                    && a.model.as_deref() == Some(model)
+                    && tag.map_or(true, |t| {
+                        a.scheme.as_deref() == Some(t)
+                            || a.recipe.as_deref() == Some(t)
+                    })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "models": {"tiny": {"vocab": 256, "d_model": 64, "n_layers": 2,
+        "n_heads": 4, "n_kv_heads": 2, "d_ff": 192, "max_seq": 128,
+        "head_dim": 16, "rope_theta": 10000.0, "norm_eps": 1e-5,
+        "param_count": 12345}},
+      "artifacts": [
+        {"name": "decode_f32_tiny_b2", "file": "d.hlo.txt", "kind": "decode",
+         "model": "tiny", "scheme": "f32", "batch": 2, "smax": 128,
+         "inputs": [
+            {"name": "params.tok_emb", "shape": [256, 64], "dtype": "f32"},
+            {"name": "params.layers.wq.w", "shape": [2,64,64], "dtype": "f32"},
+            {"name": "kcache", "shape": [2,2,2,128,16], "dtype": "f32"},
+            {"name": "token", "shape": [2], "dtype": "s32"}],
+         "outputs": [{"name": "out.0", "shape": [2,256], "dtype": "f32"}]}
+      ]}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.models["tiny"].d_model, 64);
+        let a = m.artifact("decode_f32_tiny_b2").unwrap();
+        assert_eq!(a.batch, 2);
+        assert_eq!(a.inputs.len(), 4);
+        assert_eq!(a.input_indices("params").len(), 2);
+        assert_eq!(a.input_index("kcache").unwrap(), 2);
+    }
+
+    #[test]
+    fn find_filters() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.find("decode", "tiny", Some("f32")).len(), 1);
+        assert_eq!(m.find("decode", "tiny", Some("int8wo")).len(), 0);
+        assert_eq!(m.find("prefill", "tiny", None).len(), 0);
+    }
+
+    #[test]
+    fn missing_artifact_error_is_helpful() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let err = m.artifact("nope").unwrap_err().to_string();
+        assert!(err.contains("decode_f32_tiny_b2"));
+    }
+}

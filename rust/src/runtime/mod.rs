@@ -1,0 +1,176 @@
+//! PJRT runtime: manifest-driven artifact loading and execution.
+//!
+//! `make artifacts` produces `artifacts/manifest.json` + `*.hlo.txt`; this
+//! module is the only place that touches the `xla` crate's execution API.
+//! Artifacts are compiled lazily and cached; inputs bind positionally in
+//! manifest order (== jax pytree flatten order, the aot.py contract).
+
+pub mod artifact;
+
+use crate::tensor::HostTensor;
+use anyhow::{anyhow, Context, Result};
+use artifact::{ArtifactSpec, Manifest};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+/// A device buffer together with the host literal backing its (possibly
+/// still in-flight) upload. Keep this alive as long as the buffer is used.
+pub struct OwnedBuffer {
+    _source: Literal,
+    pub buffer: PjRtBuffer,
+}
+
+pub struct Runtime {
+    client: PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    /// cumulative time spent inside XLA execute calls (perf accounting)
+    pub xla_seconds: RefCell<f64>,
+}
+
+impl Runtime {
+    /// Open an artifact directory (must contain manifest.json).
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            xla_seconds: RefCell::new(0.0),
+        })
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest.artifact(name)
+    }
+
+    /// Compile (or fetch cached) an executable.
+    pub fn load(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let path = self.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parse HLO {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        crate::info!(
+            "compiled artifact '{name}' in {:.2}s", t0.elapsed().as_secs_f64()
+        );
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Upload a literal to a device buffer owned by the caller.
+    ///
+    /// NOTE 1: the `xla` crate's `execute::<Literal>` path leaks its
+    /// internally-created input buffers (xla_rs.cc `execute` releases them
+    /// and never frees) — every run through AO goes through `execute_b`
+    /// with buffers created here, which ARE dropped.
+    ///
+    /// NOTE 2: `BufferFromHostLiteral` transfers asynchronously: the
+    /// source literal MUST stay alive until the buffer has been consumed
+    /// by an execution (or synced). `OwnedBuffer` bundles the two.
+    pub fn to_buffer(&self, lit: Literal) -> Result<OwnedBuffer> {
+        let buffer = self
+            .client
+            .buffer_from_host_literal(None, &lit)
+            .map_err(|e| anyhow!("upload literal: {e:?}"))?;
+        Ok(OwnedBuffer { _source: lit, buffer })
+    }
+
+    /// Execute with device-buffer inputs; returns the decomposed output
+    /// tuple as host literals. Use this with cached `to_buffer` uploads for
+    /// inputs that do not change between calls (weights).
+    pub fn run_buffers(
+        &self,
+        name: &str,
+        inputs: &[&PjRtBuffer],
+    ) -> Result<Vec<Literal>> {
+        let spec = self.manifest.artifact(name)?;
+        if inputs.len() != spec.inputs.len() {
+            anyhow::bail!(
+                "artifact '{name}' expects {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let exe = self.load(name)?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute_b::<&PjRtBuffer>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result {name}: {e:?}"))?;
+        *self.xla_seconds.borrow_mut() += t0.elapsed().as_secs_f64();
+        tuple
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decompose result {name}: {e:?}"))
+    }
+
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    pub fn run(&self, name: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let bufs: Vec<PjRtBuffer> = inputs
+            .iter()
+            .map(|l| {
+                self.client
+                    .buffer_from_host_literal(None, l)
+                    .map_err(|e| anyhow!("upload literal: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        // `inputs` outlives the execution below, so the async uploads are
+        // safe here without OwnedBuffer.
+        let refs: Vec<&PjRtBuffer> = bufs.iter().collect();
+        self.run_buffers(name, &refs)
+    }
+
+    /// Execute with host tensors (convenience for tests/CLI paths).
+    pub fn run_host(
+        &self,
+        name: &str,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let lits: Vec<Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let outs = self.run(name, &lits)?;
+        outs.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Validate that host inputs match the manifest spec (debug aid).
+    pub fn check_inputs(
+        &self,
+        name: &str,
+        inputs: &[HostTensor],
+    ) -> Result<()> {
+        let spec = self.manifest.artifact(name)?;
+        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if t.shape != s.shape || t.dtype().name() != s.dtype {
+                anyhow::bail!(
+                    "input {i} ('{}') mismatch: artifact wants {:?} {}, got \
+                     {:?} {}",
+                    s.name, s.shape, s.dtype, t.shape, t.dtype().name()
+                );
+            }
+        }
+        Ok(())
+    }
+}

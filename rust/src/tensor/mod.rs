@@ -1,0 +1,299 @@
+//! Host-side tensors and Literal bridging.
+//!
+//! `HostTensor` is the repo's CPU tensor: a shape plus typed storage for
+//! the four dtypes that cross the PJRT boundary (f32, s32, s8, u8). It is
+//! deliberately minimal — XLA does the math; Rust only packs, routes, and
+//! measures.
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{ElementType, Literal};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    S32,
+    S8,
+    U8,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "s32" | "i32" => DType::S32,
+            "s8" | "i8" => DType::S8,
+            "u8" => DType::U8,
+            other => bail!("unsupported dtype '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::S32 => "s32",
+            DType::S8 => "s8",
+            DType::U8 => "u8",
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        match self {
+            DType::F32 | DType::S32 => 4,
+            DType::S8 | DType::U8 => 1,
+        }
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        match self {
+            DType::F32 => ElementType::F32,
+            DType::S32 => ElementType::S32,
+            DType::S8 => ElementType::S8,
+            DType::U8 => ElementType::U8,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    S32(Vec<i32>),
+    S8(Vec<i8>),
+    U8(Vec<u8>),
+}
+
+impl Data {
+    pub fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::S32(v) => v.len(),
+            Data::S8(v) => v.len(),
+            Data::U8(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Data::F32(_) => DType::F32,
+            Data::S32(_) => DType::S32,
+            Data::S8(_) => DType::S8,
+            Data::U8(_) => DType::U8,
+        }
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        // Safety: plain-old-data reinterpretation, alignment 1 <= source.
+        unsafe {
+            match self {
+                Data::F32(v) => std::slice::from_raw_parts(
+                    v.as_ptr() as *const u8, v.len() * 4,
+                ),
+                Data::S32(v) => std::slice::from_raw_parts(
+                    v.as_ptr() as *const u8, v.len() * 4,
+                ),
+                Data::S8(v) => std::slice::from_raw_parts(
+                    v.as_ptr() as *const u8, v.len(),
+                ),
+                Data::U8(v) => v.as_slice(),
+            }
+        }
+    }
+
+    pub fn from_bytes(dtype: DType, bytes: &[u8]) -> Result<Data> {
+        Ok(match dtype {
+            DType::F32 => {
+                if bytes.len() % 4 != 0 {
+                    bail!("byte length not a multiple of 4");
+                }
+                Data::F32(
+                    bytes
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                )
+            }
+            DType::S32 => Data::S32(
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+            DType::S8 => Data::S8(bytes.iter().map(|&b| b as i8).collect()),
+            DType::U8 => Data::U8(bytes.to_vec()),
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Data) -> Result<HostTensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!(
+                "shape {:?} ({} elems) does not match data length {}",
+                shape, n, data.len()
+            );
+        }
+        Ok(HostTensor { shape, data })
+    }
+
+    pub fn f32(shape: Vec<usize>, v: Vec<f32>) -> HostTensor {
+        HostTensor::new(shape, Data::F32(v)).unwrap()
+    }
+
+    pub fn s32(shape: Vec<usize>, v: Vec<i32>) -> HostTensor {
+        HostTensor::new(shape, Data::S32(v)).unwrap()
+    }
+
+    pub fn s8(shape: Vec<usize>, v: Vec<i8>) -> HostTensor {
+        HostTensor::new(shape, Data::S8(v)).unwrap()
+    }
+
+    pub fn u8(shape: Vec<usize>, v: Vec<u8>) -> HostTensor {
+        HostTensor::new(shape, Data::U8(v)).unwrap()
+    }
+
+    pub fn zeros(dtype: DType, shape: Vec<usize>) -> HostTensor {
+        let n: usize = shape.iter().product();
+        let data = match dtype {
+            DType::F32 => Data::F32(vec![0.0; n]),
+            DType::S32 => Data::S32(vec![0; n]),
+            DType::S8 => Data::S8(vec![0; n]),
+            DType::U8 => Data::U8(vec![0; n]),
+        };
+        HostTensor { shape, data }
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::f32(vec![], vec![v])
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.data.dtype()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.numel() * self.dtype().size()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is {:?}, not f32", self.dtype())),
+        }
+    }
+
+    pub fn as_s32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::S32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is {:?}, not s32", self.dtype())),
+        }
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        match &self.data {
+            Data::U8(v) => Ok(v),
+            _ => Err(anyhow!("tensor is {:?}, not u8", self.dtype())),
+        }
+    }
+
+    pub fn as_s8(&self) -> Result<&[i8]> {
+        match &self.data {
+            Data::S8(v) => Ok(v),
+            _ => Err(anyhow!("tensor is {:?}, not s8", self.dtype())),
+        }
+    }
+
+    /// Host -> XLA literal (copies).
+    pub fn to_literal(&self) -> Result<Literal> {
+        Literal::create_from_shape_and_untyped_data(
+            self.dtype().element_type(),
+            &self.shape,
+            self.data.bytes(),
+        )
+        .map_err(|e| anyhow!("literal creation failed: {e:?}"))
+    }
+
+    /// XLA literal -> host (copies).
+    pub fn from_literal(lit: &Literal) -> Result<HostTensor> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow!("literal has no array shape: {e:?}"))?;
+        let dims: Vec<usize> =
+            shape.dims().iter().map(|&d| d as usize).collect();
+        let dtype = match shape.ty() {
+            ElementType::F32 => DType::F32,
+            ElementType::S32 => DType::S32,
+            ElementType::S8 => DType::S8,
+            ElementType::U8 => DType::U8,
+            other => bail!("unsupported literal dtype {other:?}"),
+        };
+        let data = match dtype {
+            DType::F32 => Data::F32(
+                lit.to_vec::<f32>()
+                    .map_err(|e| anyhow!("to_vec f32: {e:?}"))?,
+            ),
+            DType::S32 => Data::S32(
+                lit.to_vec::<i32>()
+                    .map_err(|e| anyhow!("to_vec i32: {e:?}"))?,
+            ),
+            DType::S8 => Data::S8(
+                lit.to_vec::<i8>().map_err(|e| anyhow!("to_vec i8: {e:?}"))?,
+            ),
+            DType::U8 => Data::U8(
+                lit.to_vec::<u8>().map_err(|e| anyhow!("to_vec u8: {e:?}"))?,
+            ),
+        };
+        HostTensor::new(dims, data).context("literal shape mismatch")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_validation() {
+        assert!(HostTensor::new(vec![2, 3], Data::F32(vec![0.0; 6])).is_ok());
+        assert!(HostTensor::new(vec![2, 3], Data::F32(vec![0.0; 5])).is_err());
+    }
+
+    #[test]
+    fn bytes_roundtrip_f32() {
+        let t = HostTensor::f32(vec![3], vec![1.0, -2.5, 3.25]);
+        let d = Data::from_bytes(DType::F32, t.data.bytes()).unwrap();
+        assert_eq!(d, t.data);
+    }
+
+    #[test]
+    fn bytes_roundtrip_s8() {
+        let t = HostTensor::s8(vec![4], vec![-1, 2, -3, 127]);
+        let d = Data::from_bytes(DType::S8, t.data.bytes()).unwrap();
+        assert_eq!(d, t.data);
+    }
+
+    #[test]
+    fn byte_size() {
+        assert_eq!(HostTensor::zeros(DType::F32, vec![2, 2]).byte_size(), 16);
+        assert_eq!(HostTensor::zeros(DType::U8, vec![2, 2]).byte_size(), 4);
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("f32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("u8").unwrap(), DType::U8);
+        assert!(DType::parse("f64").is_err());
+    }
+}

@@ -1,0 +1,215 @@
+//! Tokenization substrate: a byte-level base vocabulary plus a trainable
+//! BPE layer (the repo's stand-in for Llama's tokenizer; DESIGN.md §3).
+//!
+//! Token ids: 0 = PAD, 1 = BOS, 2 = EOS, 3..259 = raw bytes, 259.. = BPE
+//! merges. The merge table is trained greedily on the synthetic corpus and
+//! serialized as JSON so the Rust server and eval harness share one vocab.
+
+use crate::util::json::{self, Value};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+pub const BYTE_BASE: u32 = 3;
+pub const N_SPECIAL: u32 = 3;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    /// merge list in training order: (left, right) -> new id.
+    pub merges: Vec<(u32, u32)>,
+    merge_map: BTreeMap<(u32, u32), u32>,
+    pub vocab_size: usize,
+}
+
+impl Tokenizer {
+    /// Byte-level tokenizer with no merges (vocab 259).
+    pub fn byte_level() -> Tokenizer {
+        Tokenizer {
+            merges: Vec::new(),
+            merge_map: BTreeMap::new(),
+            vocab_size: (BYTE_BASE + 256) as usize,
+        }
+    }
+
+    /// Train `n_merges` BPE merges on the corpus (greedy highest-frequency
+    /// adjacent-pair, the standard algorithm).
+    pub fn train(corpus: &str, vocab_size: usize) -> Tokenizer {
+        let mut tok = Tokenizer::byte_level();
+        let target = vocab_size.max(tok.vocab_size);
+        let mut ids: Vec<u32> = corpus
+            .bytes()
+            .map(|b| BYTE_BASE + b as u32)
+            .collect();
+        while tok.vocab_size < target {
+            let mut counts: BTreeMap<(u32, u32), usize> = BTreeMap::new();
+            for w in ids.windows(2) {
+                *counts.entry((w[0], w[1])).or_default() += 1;
+            }
+            let Some((&pair, &cnt)) =
+                counts.iter().max_by_key(|(p, &c)| (c, std::cmp::Reverse(*p)))
+            else {
+                break;
+            };
+            if cnt < 2 {
+                break;
+            }
+            let new_id = tok.vocab_size as u32;
+            tok.merges.push(pair);
+            tok.merge_map.insert(pair, new_id);
+            tok.vocab_size += 1;
+            // apply the merge
+            let mut out = Vec::with_capacity(ids.len());
+            let mut i = 0;
+            while i < ids.len() {
+                if i + 1 < ids.len() && (ids[i], ids[i + 1]) == pair {
+                    out.push(new_id);
+                    i += 2;
+                } else {
+                    out.push(ids[i]);
+                    i += 1;
+                }
+            }
+            ids = out;
+        }
+        tok
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut ids: Vec<u32> =
+            text.bytes().map(|b| BYTE_BASE + b as u32).collect();
+        // apply merges in training order (classic BPE inference)
+        for (rank, &pair) in self.merges.iter().enumerate() {
+            let new_id = (self.vocab_size - self.merges.len() + rank) as u32;
+            if ids.len() < 2 {
+                break;
+            }
+            let mut out = Vec::with_capacity(ids.len());
+            let mut i = 0;
+            while i < ids.len() {
+                if i + 1 < ids.len() && (ids[i], ids[i + 1]) == pair {
+                    out.push(new_id);
+                    i += 2;
+                } else {
+                    out.push(ids[i]);
+                    i += 1;
+                }
+            }
+            ids = out;
+        }
+        ids
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            self.expand(id, &mut bytes);
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    fn expand(&self, id: u32, out: &mut Vec<u8>) {
+        if id < N_SPECIAL {
+            return; // specials render as nothing
+        }
+        if id < BYTE_BASE + 256 {
+            out.push((id - BYTE_BASE) as u8);
+            return;
+        }
+        let idx = (id as usize) - (BYTE_BASE as usize + 256);
+        if let Some(&(l, r)) = self.merges.get(idx) {
+            self.expand(l, out);
+            self.expand(r, out);
+        }
+    }
+
+    // -- serialization -----------------------------------------------------
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let v = json::obj(vec![
+            ("vocab_size", json::num(self.vocab_size as f64)),
+            (
+                "merges",
+                json::arr(
+                    self.merges
+                        .iter()
+                        .map(|&(l, r)| {
+                            json::arr(vec![
+                                json::num(l as f64),
+                                json::num(r as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        std::fs::write(path, v.to_string())
+            .with_context(|| format!("write {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Tokenizer> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let v = Value::parse(&text)
+            .map_err(|e| anyhow::anyhow!("bad tokenizer json: {e}"))?;
+        let mut tok = Tokenizer::byte_level();
+        for m in v.req("merges")?.as_arr().context("merges not arr")? {
+            let a = m.as_arr().context("merge not pair")?;
+            let pair = (
+                a[0].as_usize().unwrap() as u32,
+                a[1].as_usize().unwrap() as u32,
+            );
+            let new_id = tok.vocab_size as u32;
+            tok.merges.push(pair);
+            tok.merge_map.insert(pair, new_id);
+            tok.vocab_size += 1;
+        }
+        Ok(tok)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_roundtrip() {
+        let tok = Tokenizer::byte_level();
+        let s = "hello, world! déjà";
+        assert_eq!(tok.decode(&tok.encode(s)), s);
+    }
+
+    #[test]
+    fn bpe_roundtrip_and_compresses() {
+        let corpus = "the cat sat on the mat. the cat ran. the mat sat."
+            .repeat(20);
+        let tok = Tokenizer::train(&corpus, 300);
+        assert!(tok.vocab_size > Tokenizer::byte_level().vocab_size);
+        let s = "the cat sat on the mat.";
+        let ids = tok.encode(s);
+        assert_eq!(tok.decode(&ids), s);
+        assert!(ids.len() < s.len(), "bpe should compress common text");
+    }
+
+    #[test]
+    fn save_load_identical() {
+        let corpus = "aa bb aa bb aa bb cc".repeat(30);
+        let tok = Tokenizer::train(&corpus, 280);
+        let dir = std::env::temp_dir().join("ao_tok_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tok.json");
+        tok.save(&path).unwrap();
+        let tok2 = Tokenizer::load(&path).unwrap();
+        assert_eq!(tok2.merges, tok.merges);
+        let s = "aa bb cc dd";
+        assert_eq!(tok.encode(s), tok2.encode(s));
+    }
+
+    #[test]
+    fn specials_decode_empty() {
+        let tok = Tokenizer::byte_level();
+        assert_eq!(tok.decode(&[PAD, BOS, EOS]), "");
+    }
+}

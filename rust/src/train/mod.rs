@@ -1,0 +1,203 @@
+//! Training driver: the TorchTitan/TorchTune role (paper §2.1, §3.1).
+//!
+//! The entire train step — forward, backward, AdamW — is one AOT artifact;
+//! this driver is a pure execution loop: feed (state, step, batch), get
+//! (state', loss) back, keep the state as device literals between steps.
+//! It records the Table 2/3 measurables: median tok/s, peak RSS, loss
+//! curve.
+
+use crate::ckpt::Checkpoint;
+use crate::data::dataset::PackedDataset;
+use crate::runtime::Runtime;
+use crate::tensor::HostTensor;
+use crate::util::rng::Rng;
+use crate::util::stats::{peak_rss_bytes, summarize};
+use anyhow::{anyhow, bail, Context, Result};
+use std::time::Instant;
+use xla::Literal;
+
+pub struct TrainReport {
+    pub losses: Vec<f32>,
+    pub step_seconds: Vec<f64>,
+    pub tokens_per_step: usize,
+    pub peak_rss_bytes: u64,
+}
+
+impl TrainReport {
+    pub fn median_tok_per_s(&self) -> f64 {
+        let s = summarize(&self.step_seconds);
+        self.tokens_per_step as f64 / s.p50
+    }
+
+    pub fn final_loss(&self) -> f32 {
+        *self.losses.last().unwrap_or(&f32::NAN)
+    }
+}
+
+pub struct Trainer {
+    pub runtime: Runtime,
+    model: String,
+    recipe: String,
+    train_name: String,
+    batch: usize,
+    seq: usize,
+    n_state: usize,
+    /// flattened (params…, m…, v…) in artifact order
+    state: Vec<Literal>,
+    step: usize,
+}
+
+impl Trainer {
+    /// Create a trainer; initial state comes from the init artifact
+    /// (deterministic given `seed`).
+    pub fn new(
+        artifacts_dir: &std::path::Path,
+        model: &str,
+        recipe: &str,
+        seed: i32,
+    ) -> Result<Trainer> {
+        let runtime = Runtime::open(artifacts_dir)?;
+        let train_spec = runtime
+            .manifest
+            .find("train", model, Some(recipe))
+            .first()
+            .map(|s| (*s).clone())
+            .with_context(|| {
+                format!("no train artifact for model={model} recipe={recipe}")
+            })?;
+        let train_name = train_spec.name.clone();
+        let n_params = train_spec.input_indices("params").len();
+        let n_m = train_spec.input_indices("m").len();
+        let n_v = train_spec.input_indices("v").len();
+        if n_params != n_m || n_m != n_v {
+            bail!("param/opt-state count mismatch in '{train_name}'");
+        }
+        let n_state = n_params + n_m + n_v;
+
+        let variant = if train_spec.name.contains("lora") {
+            "lora"
+        } else {
+            "dense"
+        };
+        let init_name = format!("init_{variant}_{model}");
+        let seed_t = HostTensor::s32(vec![1], vec![seed]);
+        let state = runtime.run(&init_name, &[seed_t.to_literal()?])?;
+        if state.len() != n_state {
+            bail!(
+                "init artifact '{init_name}' produced {} tensors, train \
+                 wants {n_state}",
+                state.len()
+            );
+        }
+        Ok(Trainer {
+            runtime,
+            model: model.to_string(),
+            recipe: recipe.to_string(),
+            train_name,
+            batch: train_spec.batch,
+            seq: train_spec.seq,
+            n_state,
+            state,
+            step: 0,
+        })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn seq(&self) -> usize {
+        self.seq
+    }
+
+    /// Run one step on the given token batch [batch, seq+1]; returns loss.
+    pub fn step_on(&mut self, tokens: Vec<i32>) -> Result<f32> {
+        if tokens.len() != self.batch * (self.seq + 1) {
+            bail!(
+                "batch must be {}x{}, got {} tokens",
+                self.batch, self.seq + 1, tokens.len()
+            );
+        }
+        self.step += 1;
+        let step_lit =
+            HostTensor::scalar_f32(self.step as f32).to_literal()?;
+        let tok_lit =
+            HostTensor::s32(vec![self.batch, self.seq + 1], tokens)
+                .to_literal()?;
+        let mut inputs: Vec<Literal> = Vec::with_capacity(self.n_state + 2);
+        for lit in &self.state {
+            inputs.push(lit.clone());
+        }
+        inputs.push(step_lit);
+        inputs.push(tok_lit);
+        let mut outs = self.runtime.run(&self.train_name, &inputs)?;
+        let loss_lit = outs
+            .pop()
+            .ok_or_else(|| anyhow!("train artifact returned no outputs"))?;
+        if outs.len() != self.n_state {
+            bail!(
+                "train artifact returned {} state tensors, expected {}",
+                outs.len(), self.n_state
+            );
+        }
+        self.state = outs;
+        let loss = HostTensor::from_literal(&loss_lit)?;
+        Ok(loss.as_f32()?[0])
+    }
+
+    /// Train for `steps` steps sampling batches from `ds`.
+    pub fn run(
+        &mut self,
+        ds: &PackedDataset,
+        steps: usize,
+        seed: u64,
+        mut on_step: impl FnMut(usize, f32, f64),
+    ) -> Result<TrainReport> {
+        let mut rng = Rng::new(seed);
+        let mut losses = Vec::with_capacity(steps);
+        let mut times = Vec::with_capacity(steps);
+        for i in 0..steps {
+            let batch = ds.sample_batch(&mut rng, self.batch);
+            let t0 = Instant::now();
+            let loss = self.step_on(batch)?;
+            let dt = t0.elapsed().as_secs_f64();
+            losses.push(loss);
+            times.push(dt);
+            on_step(i, loss, dt);
+        }
+        Ok(TrainReport {
+            losses,
+            step_seconds: times,
+            tokens_per_step: self.batch * self.seq,
+            peak_rss_bytes: peak_rss_bytes().unwrap_or(0),
+        })
+    }
+
+    /// Extract the current parameters as an f32 master checkpoint whose
+    /// tensor names match the serving artifacts' `params.*` inputs.
+    pub fn export_checkpoint(&self) -> Result<Checkpoint> {
+        let spec = self.runtime.spec(&self.train_name)?;
+        let mut ckpt = Checkpoint::new();
+        ckpt.meta = crate::util::json::obj(vec![
+            ("model", crate::util::json::s(&self.model)),
+            ("recipe", crate::util::json::s(&self.recipe)),
+            ("steps", crate::util::json::num(self.step as f64)),
+        ]);
+        for (i, idx) in spec.input_indices("params").iter().enumerate() {
+            let name = spec.inputs[*idx]
+                .name
+                .strip_prefix("params.")
+                .unwrap()
+                .to_string();
+            // LoRA adapters (a/b leaves) ride along under their own names;
+            // serving artifacts simply don't bind them.
+            let t = HostTensor::from_literal(&self.state[i])?;
+            ckpt.insert(&name, t);
+        }
+        Ok(ckpt)
+    }
+
+    pub fn xla_seconds(&self) -> f64 {
+        *self.runtime.xla_seconds.borrow()
+    }
+}

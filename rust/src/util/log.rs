@@ -1,0 +1,50 @@
+//! Leveled stderr logging with wall-clock offsets. Set `AO_LOG=debug` for
+//! verbose output; default level is info.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+static LEVEL: AtomicU8 = AtomicU8::new(1); // 0=debug 1=info 2=warn 3=error
+static START: OnceLock<Instant> = OnceLock::new();
+
+pub fn init() {
+    START.get_or_init(Instant::now);
+    let lvl = std::env::var("AO_LOG").unwrap_or_default();
+    LEVEL.store(
+        match lvl.as_str() {
+            "debug" => 0,
+            "warn" => 2,
+            "error" => 3,
+            _ => 1,
+        },
+        Ordering::Relaxed,
+    );
+}
+
+pub fn enabled(level: u8) -> bool {
+    level >= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn emit(level: u8, tag: &str, msg: &str) {
+    if !enabled(level) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    eprintln!("[{t:9.3}s {tag}] {msg}");
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::util::log::emit(0, "dbg", &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::log::emit(1, "inf", &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::util::log::emit(2, "wrn", &format!($($arg)*)) };
+}

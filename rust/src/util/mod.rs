@@ -1,0 +1,10 @@
+//! From-scratch substrate utilities: JSON, PRNG, CLI, stats, logging,
+//! property testing. The offline crate registry only carries `xla` and
+//! `anyhow`, so everything else AO needs is implemented here.
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,140 @@
+//! Mini property-testing harness (proptest is not in the offline registry).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` on `cases` random inputs from
+//! `gen`; on failure it performs greedy shrinking via the input's `Shrink`
+//! implementation and panics with the minimal counterexample.
+
+use super::rng::Rng;
+use std::fmt::Debug;
+
+pub trait Shrink: Sized {
+    /// Candidate "smaller" versions of self, in decreasing aggressiveness.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for f32 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0.0 {
+            return vec![];
+        }
+        vec![0.0, self / 2.0, self.trunc()]
+    }
+}
+
+impl<T: Shrink + Clone> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[1..].to_vec());
+        out.push(self[..self.len() - 1].to_vec());
+        // element-wise shrink of the first element
+        if let Some(first_shrunk) = self[0].shrink().into_iter().next() {
+            let mut v = self.clone();
+            v[0] = first_shrunk;
+            out.push(v);
+        }
+        out
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Run a property over random cases with shrinking.
+pub fn check<T, G, P>(name: &str, cases: usize, mut gen: G, prop: P)
+where
+    T: Shrink + Clone + Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let seed = std::env::var("AO_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xA0_5EED);
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // shrink
+            let mut best = (input, msg);
+            let mut improved = true;
+            let mut rounds = 0;
+            while improved && rounds < 200 {
+                improved = false;
+                rounds += 1;
+                for cand in best.0.shrink() {
+                    if let Err(m2) = prop(&cand) {
+                        best = (cand, m2);
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}):\n  \
+                 input: {:?}\n  error: {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Generators.
+pub fn vec_f32(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+    (0..len).map(|_| (rng.normal() as f32) * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add-commutes", 50, |r| (r.below(100), r.below(100)),
+              |&(a, b)| {
+                  if a + b == b + a { Ok(()) } else { Err("!".into()) }
+              });
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk-to-zero")]
+    fn failing_property_shrinks() {
+        check("always-fails", 10, |r| r.below(1000) + 1, |&n| {
+            if n == 0 {
+                Ok(())
+            } else if n <= 1 {
+                Err("shrunk-to-zero".into())
+            } else {
+                Err("big".into())
+            }
+        });
+    }
+}

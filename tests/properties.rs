@@ -1,0 +1,367 @@
+//! Property-based tests over the Rust substrates (mini-proptest harness,
+//! `ao::util::proptest`): invariants that must hold for arbitrary inputs.
+
+use ao::coordinator::kvslots::{Slot, SlotTable};
+use ao::quant::apply::{
+    quant_int4_group_asym, quant_int4_group_sym, quant_int8_channelwise,
+    quant_fp8_rowwise, sparse24_compress,
+};
+use ao::quant::formats::{
+    pack_int4, unpack_int4_signed, unpack_int4_unsigned, E4M3,
+    ALL_FORMATS,
+};
+use ao::tokenizer::Tokenizer;
+use ao::util::json::Value;
+use ao::util::proptest::{check, vec_f32};
+use ao::util::rng::Rng;
+use ao::util::stats::{percentile, summarize};
+
+#[test]
+fn prop_int8_quant_error_bounded() {
+    check(
+        "int8-quant-error",
+        40,
+        |r| {
+            let n = 1 + r.below(8);
+            let k = 8 * (1 + r.below(8));
+            (vec![n, k], vec_f32(r, n * k, 3.0))
+        },
+        |(shape, w)| {
+            let (n, k) = (shape[0], shape[1]);
+            let (q, s) = quant_int8_channelwise(w, n, k);
+            for i in 0..n {
+                for j in 0..k {
+                    let d = q[i * k + j] as f32 * s[i];
+                    let err = (d - w[i * k + j]).abs();
+                    if err > s[i] * 0.5 + 1e-5 {
+                        return Err(format!(
+                            "err {err} > half-scale {} at ({i},{j})", s[i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_int4_asym_dequant_in_range() {
+    check(
+        "int4-asym-range",
+        30,
+        |r| {
+            let n = 1 + r.below(6);
+            let g = [16usize, 32][r.below(2)];
+            let k = g * (1 + r.below(4));
+            (vec![n, k, g], vec_f32(r, n * k, 2.0))
+        },
+        |(meta, w)| {
+            let (n, k, g) = (meta[0], meta[1], meta[2]);
+            let (p, s, zp) = quant_int4_group_asym(w, n, k, g);
+            let un = unpack_int4_unsigned(&p);
+            let ng = k / g;
+            for i in 0..n {
+                for j in 0..k {
+                    let gi = j / g;
+                    let (sc, z) = (s[i * ng + gi], zp[i * ng + gi]);
+                    let d = (un[i * k + j] as f32 - z) * sc;
+                    // dequantized value stays within the group's [min,max]
+                    // extended by one quantum
+                    let grp = &w[i * k + gi * g..i * k + (gi + 1) * g];
+                    let mn = grp.iter().cloned().fold(f32::INFINITY, f32::min);
+                    let mx =
+                        grp.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    if d < mn.min(0.0) - sc || d > mx.max(0.0) + sc {
+                        return Err(format!("dequant {d} outside [{mn},{mx}]"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_int4_pack_roundtrip() {
+    check(
+        "int4-pack-roundtrip",
+        50,
+        |r| {
+            let len = 2 * (1 + r.below(64));
+            (0..len)
+                .map(|_| (r.below(16) as i8) - 8)
+                .collect::<Vec<i8>>()
+                .iter()
+                .map(|&v| v as f32)
+                .collect::<Vec<f32>>()
+        },
+        |vals| {
+            let as_i8: Vec<i8> = vals.iter().map(|&v| v as i8).collect();
+            let rt = unpack_int4_signed(&pack_int4(&as_i8));
+            if rt == as_i8 {
+                Ok(())
+            } else {
+                Err(format!("{as_i8:?} != {rt:?}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_fp8_cast_idempotent_and_bounded() {
+    check(
+        "fp8-cast",
+        60,
+        |r| vec_f32(r, 32, 50.0),
+        |xs| {
+            for fmt in ALL_FORMATS {
+                for &x in xs {
+                    let c = fmt.cast(x);
+                    if fmt.cast(c) != c {
+                        return Err(format!("{}: cast not idempotent at {x}", fmt.name));
+                    }
+                    if c.abs() > fmt.max_val {
+                        return Err(format!("{}: |{c}| > max", fmt.name));
+                    }
+                    // relative error bound for values in range (normals)
+                    let xa = x.abs();
+                    if xa >= fmt.min_normal() && xa <= fmt.max_val {
+                        let rel = (c - x).abs() / xa;
+                        let bound = 0.5 / (1 << fmt.mbits) as f32 * 1.01;
+                        if rel > bound {
+                            return Err(format!(
+                                "{}: rel err {rel} > {bound} at {x}", fmt.name
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fp8_rowwise_decode_recovers() {
+    check(
+        "fp8-rowwise-roundtrip",
+        30,
+        |r| {
+            let n = 1 + r.below(6);
+            let k = 8 * (1 + r.below(6));
+            (vec![n, k], vec_f32(r, n * k, 4.0))
+        },
+        |(shape, w)| {
+            let (n, k) = (shape[0], shape[1]);
+            let (codes, scales) = quant_fp8_rowwise(w, n, k);
+            for i in 0..n {
+                for j in 0..k {
+                    let d = E4M3.decode(codes[i * k + j]) / scales[i];
+                    let orig = w[i * k + j];
+                    if (d - orig).abs() > orig.abs() * 0.07 + 1e-4 {
+                        return Err(format!("({i},{j}): {d} vs {orig}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sparse24_exactly_two_per_group() {
+    check(
+        "sparse24-2of4",
+        30,
+        |r| {
+            let n = 1 + r.below(6);
+            let k = 4 * (1 + r.below(16));
+            (vec![n, k], vec_f32(r, n * k, 1.0))
+        },
+        |(shape, w)| {
+            let (n, k) = (shape[0], shape[1]);
+            let (vals, idx) = sparse24_compress(w, n, k);
+            for i in 0..n {
+                for gi in 0..k / 4 {
+                    let a = idx[i * k / 2 + gi * 2] as usize;
+                    let b = idx[i * k / 2 + gi * 2 + 1] as usize;
+                    if a >= 4 || b >= 4 || a >= b {
+                        return Err(format!("bad idx pair ({a},{b})"));
+                    }
+                    // kept values carry their original entries
+                    let grp = &w[i * k + gi * 4..i * k + gi * 4 + 4];
+                    if vals[i * k / 2 + gi * 2] != grp[a]
+                        || vals[i * k / 2 + gi * 2 + 1] != grp[b]
+                    {
+                        return Err("values don't match positions".into());
+                    }
+                    // kept magnitude >= every dropped magnitude
+                    let kept_min = grp[a].abs().min(grp[b].abs());
+                    for (p, &v) in grp.iter().enumerate() {
+                        if p != a && p != b && v.abs() > kept_min + 1e-7 {
+                            return Err(format!(
+                                "dropped {v} larger than kept {kept_min}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_8da4w_group_scale_quantizes_within_range() {
+    check(
+        "8da4w-sym-range",
+        30,
+        |r| {
+            let n = 1 + r.below(4);
+            let k = 32 * (1 + r.below(4));
+            (vec![n, k], vec_f32(r, n * k, 2.0))
+        },
+        |(shape, w)| {
+            let (n, k) = (shape[0], shape[1]);
+            let (p, _s) = quant_int4_group_sym(w, n, k, 32);
+            for v in unpack_int4_signed(&p) {
+                if !(-8..=7).contains(&v) {
+                    return Err(format!("int4 value {v} out of range"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn gen_value(r: &mut Rng, depth: usize) -> Value {
+        match if depth == 0 { r.below(4) } else { r.below(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(r.chance(0.5)),
+            2 => Value::Num((r.normal() * 100.0 * 8.0).round() / 8.0),
+            3 => {
+                let len = r.below(12);
+                Value::Str(
+                    (0..len)
+                        .map(|_| {
+                            let opts = ['a', 'é', '"', '\\', '\n', '7', ' '];
+                            opts[r.below(opts.len())]
+                        })
+                        .collect(),
+                )
+            }
+            4 => Value::Arr(
+                (0..r.below(4)).map(|_| gen_value(r, depth - 1)).collect(),
+            ),
+            _ => Value::Obj(
+                (0..r.below(4))
+                    .map(|i| (format!("k{i}"), gen_value(r, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    let mut rng = Rng::new(0x150);
+    for _ in 0..200 {
+        let v = gen_value(&mut rng, 3);
+        let rt = Value::parse(&v.to_string()).expect("reparse");
+        assert_eq!(rt, v);
+    }
+}
+
+#[test]
+fn prop_tokenizer_roundtrip_ascii() {
+    let corpus = "the cat sat on the mat and the dog ran far ".repeat(30);
+    let tok = Tokenizer::train(&corpus, 300);
+    check(
+        "bpe-roundtrip",
+        60,
+        |r| {
+            let len = r.below(40);
+            (0..len)
+                .map(|_| (32 + r.below(95)) as u8 as char as u32 as f32)
+                .collect::<Vec<f32>>()
+        },
+        |chars| {
+            let s: String =
+                chars.iter().map(|&c| (c as u8) as char).collect();
+            let rt = tok.decode(&tok.encode(&s));
+            if rt == s {
+                Ok(())
+            } else {
+                Err(format!("{s:?} -> {rt:?}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_slot_table_never_double_allocates() {
+    let mut rng = Rng::new(0x51_07);
+    for _ in 0..50 {
+        let b = 1 + rng.below(8);
+        let mut table = SlotTable::new(b, 64);
+        let mut live: Vec<usize> = Vec::new();
+        for op in 0..200 {
+            if rng.chance(0.55) {
+                if let Some(idx) = table.claim(Slot {
+                    request_id: op as u64,
+                    pos: 1,
+                    n_prompt: 1,
+                    n_generated: 0,
+                    max_new_tokens: 4,
+                    temperature: 0.0,
+                    rng_state: 0,
+                }) {
+                    assert!(
+                        !live.contains(&idx),
+                        "slot {idx} double-allocated"
+                    );
+                    live.push(idx);
+                }
+            } else if !live.is_empty() {
+                let pick = rng.below(live.len());
+                let idx = live.swap_remove(pick);
+                assert!(table.release(idx).is_some());
+            }
+            assert_eq!(table.n_active(), live.len());
+            assert!(table.n_active() <= b);
+        }
+    }
+}
+
+#[test]
+fn prop_percentiles_ordered() {
+    check(
+        "percentile-order",
+        50,
+        |r| {
+            let len = 1 + r.below(100);
+            vec_f32(r, len, 10.0)
+        },
+        |xs| {
+            let v: Vec<f64> = xs.iter().map(|&x| x as f64).collect();
+            let s = summarize(&v);
+            let mut sorted = v.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let checks = [
+                (s.min <= s.p50, "min<=p50"),
+                (s.p50 <= s.p90, "p50<=p90"),
+                (s.p90 <= s.p99, "p90<=p99"),
+                (s.p99 <= s.max, "p99<=max"),
+                (
+                    percentile(&sorted, 0.0) == s.min,
+                    "p0==min",
+                ),
+            ];
+            for (ok, name) in checks {
+                if !ok {
+                    return Err(name.into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
