@@ -1,0 +1,30 @@
+# Tier-1 gate + build conveniences. `make verify` is what CI runs.
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: verify build test fmt artifacts python-test clean
+
+## tier-1 gate: release build, test suite, formatting
+verify: build test fmt
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+fmt:
+	$(CARGO) fmt --check
+
+## AOT-lower the JAX model into artifacts/ (manifest.json + *.hlo.txt);
+## the Rust runtime and the integration tests consume these
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
+
+python-test:
+	cd python && $(PYTHON) -m pytest tests -q
+
+clean:
+	$(CARGO) clean
+	rm -rf artifacts runs

@@ -12,6 +12,7 @@
 //! (DESIGN.md §2).
 
 use ao::benchsupport as bs;
+use ao::coordinator::metrics::fmt_bytes;
 use ao::data::workload::WorkloadSpec;
 use ao::perfmodel;
 
@@ -41,6 +42,7 @@ fn main() -> anyhow::Result<()> {
         "TTFT (ms)",
     ]);
     let mut baseline: Option<(f64, f64, f64)> = None;
+    let mut xfer_lines = Vec::new();
     for scheme in ["f32", "fp8dq_tensor", "fp8dq_row"] {
         let ckpt = if scheme == "f32" {
             master.clone()
@@ -48,6 +50,16 @@ fn main() -> anyhow::Result<()> {
             bs::quantized_ckpt(&master, scheme)?.0
         };
         let m = bs::serve_workload("small", scheme, &ckpt, &spec)?;
+        // device-resident cache: per decode step only logits come down
+        xfer_lines.push(format!(
+            "  {scheme}: host xfer h2d={} d2h={}; per decode step \
+             h2d={} d2h={} ({} steps)",
+            fmt_bytes(m.h2d_bytes),
+            fmt_bytes(m.d2h_bytes),
+            fmt_bytes(m.decode_h2d_per_step() as u64),
+            fmt_bytes(m.decode_d2h_per_step() as u64),
+            m.decode_steps,
+        ));
         let tput = m.output_tok_per_s();
         let tpot = m.tpot().mean * 1e3;
         let itl = m.itl().mean * 1e3;
@@ -82,6 +94,10 @@ fn main() -> anyhow::Result<()> {
     }
     println!("measured (CPU, emulated FP8 — quant math adds ALU work):");
     table.print();
+    println!("\nhost-transfer accounting (cache stays device-resident):");
+    for line in &xfer_lines {
+        println!("{line}");
+    }
 
     // H100 projection: decode GEMVs are memory-bound; fp8 halves the weight
     // bytes streamed per token. Paper-scale dims (Llama3.1-8B, batch-1

@@ -84,7 +84,9 @@ pub fn quantized_ckpt(
     Ok((path, report))
 }
 
-/// Run a full serving workload in-process; returns engine metrics.
+/// Run a full serving workload in-process; returns engine metrics
+/// (including host↔device transfer bytes — set AO_BENCH_REPORT=1 to
+/// print the full engine report line per run).
 pub fn serve_workload(
     model: &str,
     scheme: &str,
@@ -122,7 +124,14 @@ pub fn serve_workload(
         }
     }
     handle.shutdown();
-    join.join().expect("engine thread")
+    let metrics = join.join().expect("engine thread")?;
+    let report_on = std::env::var("AO_BENCH_REPORT")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    if report_on {
+        eprintln!("{}", metrics.report(&format!("{model}/{scheme}")));
+    }
+    Ok(metrics)
 }
 
 /// Evaluate (hellaswag-proxy acc, word ppl, token ppl) for a checkpoint.

@@ -6,9 +6,25 @@
 //!     prefetched together in one prefill call (they must share a sequence
 //!     bucket; the shortest-bucket-that-fits is chosen per group).
 //!   - Decode proceeds every iteration over all active slots.
+//!
+//! `take_prefill_group` distinguishes "the head prompt was rejected, retry
+//! admission now" from "nothing admissible" so one oversized prompt never
+//! stalls the requests queued behind it for a decode step.
 
 use super::request::SubmitReq;
 use std::collections::VecDeque;
+
+/// Outcome of one admission attempt.
+pub enum PrefillTake {
+    /// Up to `n_free` requests sharing one prefill bucket.
+    Group { bucket: usize, group: Vec<SubmitReq> },
+    /// The queue head fit no bucket: it was popped and answered with an
+    /// error event. The queue advanced — the caller should retry admission
+    /// in the same iteration.
+    HeadRejected,
+    /// Queue empty or no free slots: nothing to admit this iteration.
+    Idle,
+}
 
 pub struct Batcher {
     pub queue: VecDeque<SubmitReq>,
@@ -35,12 +51,11 @@ impl Batcher {
         self.buckets.iter().copied().find(|&b| b >= len)
     }
 
-    /// Pop up to `n_free` requests that share one bucket (the bucket of the
-    /// queue head, FCFS). Returns (bucket, requests); empty if none fit.
-    pub fn take_prefill_group(&mut self, n_free: usize) -> (usize, Vec<SubmitReq>) {
-        let mut group = Vec::new();
+    /// Pop up to `n_free` requests that share one bucket (the bucket of
+    /// the queue head, FCFS).
+    pub fn take_prefill_group(&mut self, n_free: usize) -> PrefillTake {
         if n_free == 0 || self.queue.is_empty() {
-            return (0, group);
+            return PrefillTake::Idle;
         }
         let head_len = self.queue[0].prompt_tokens.len();
         let Some(bucket) = self.bucket_for(head_len) else {
@@ -51,8 +66,9 @@ impl Batcher {
                  bucket ({})",
                 self.buckets.last().copied().unwrap_or(0)
             )));
-            return (0, group);
+            return PrefillTake::HeadRejected;
         };
+        let mut group = Vec::new();
         while group.len() < n_free {
             match self.queue.front() {
                 Some(r)
@@ -66,7 +82,7 @@ impl Batcher {
                 _ => break,
             }
         }
-        (bucket, group)
+        PrefillTake::Group { bucket, group }
     }
 }
 
@@ -92,6 +108,14 @@ mod tests {
         )
     }
 
+    fn expect_group(take: PrefillTake) -> (usize, Vec<SubmitReq>) {
+        match take {
+            PrefillTake::Group { bucket, group } => (bucket, group),
+            PrefillTake::HeadRejected => panic!("unexpected HeadRejected"),
+            PrefillTake::Idle => panic!("unexpected Idle"),
+        }
+    }
+
     #[test]
     fn bucket_selection() {
         let b = Batcher::new(vec![128, 32]);
@@ -112,10 +136,10 @@ mod tests {
         b.push(r2);
         b.push(r3);
         b.push(r4);
-        let (bucket, group) = b.take_prefill_group(8);
+        let (bucket, group) = expect_group(b.take_prefill_group(8));
         assert_eq!(bucket, 32);
         assert_eq!(group.len(), 2, "stops at the 128-bucket request");
-        let (bucket2, group2) = b.take_prefill_group(8);
+        let (bucket2, group2) = expect_group(b.take_prefill_group(8));
         assert_eq!(bucket2, 128);
         assert_eq!(group2.len(), 1);
     }
@@ -128,9 +152,19 @@ mod tests {
             std::mem::forget(rx);
             b.push(r);
         }
-        let (_, group) = b.take_prefill_group(3);
+        let (_, group) = expect_group(b.take_prefill_group(3));
         assert_eq!(group.len(), 3);
         assert_eq!(b.pending(), 2);
+    }
+
+    #[test]
+    fn idle_when_empty_or_no_slots() {
+        let mut b = Batcher::new(vec![32]);
+        assert!(matches!(b.take_prefill_group(4), PrefillTake::Idle));
+        let (r, _rx) = req(8);
+        b.push(r);
+        assert!(matches!(b.take_prefill_group(0), PrefillTake::Idle));
+        assert_eq!(b.pending(), 1);
     }
 
     #[test]
@@ -138,8 +172,10 @@ mod tests {
         let mut b = Batcher::new(vec![32]);
         let (r, rx) = req(100);
         b.push(r);
-        let (_, group) = b.take_prefill_group(4);
-        assert!(group.is_empty());
+        assert!(matches!(
+            b.take_prefill_group(4),
+            PrefillTake::HeadRejected
+        ));
         assert_eq!(b.pending(), 0);
         match rx.try_recv().unwrap() {
             super::super::request::Event::Error(e) => {
@@ -147,5 +183,29 @@ mod tests {
             }
             _ => panic!("expected error event"),
         }
+    }
+
+    #[test]
+    fn rejected_head_does_not_stall_followers() {
+        // regression: an oversized head must not turn the whole admission
+        // attempt into a no-op — the very next call admits the followers.
+        let mut b = Batcher::new(vec![32]);
+        let (bad, bad_rx) = req(100);
+        let (ok1, _k1) = req(8);
+        let (ok2, _k2) = req(8);
+        b.push(bad);
+        b.push(ok1);
+        b.push(ok2);
+        assert!(matches!(
+            b.take_prefill_group(4),
+            PrefillTake::HeadRejected
+        ));
+        let (bucket, group) = expect_group(b.take_prefill_group(4));
+        assert_eq!(bucket, 32);
+        assert_eq!(group.len(), 2, "followers admitted right away");
+        assert!(matches!(
+            bad_rx.try_recv().unwrap(),
+            super::super::request::Event::Error(_)
+        ));
     }
 }

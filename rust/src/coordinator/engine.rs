@@ -1,5 +1,5 @@
 //! The serving engine: continuous batching over AOT prefill/decode
-//! artifacts with a persistent KV cache.
+//! artifacts with a device-resident KV cache.
 //!
 //! One OS thread owns everything PJRT (the runtime is deliberately
 //! `!Send`); the rest of the process talks to it through an
@@ -11,25 +11,42 @@
 //!   3. run one decode step over the full static batch; sample a token for
 //!      every active slot, stream it out, retire finished requests
 //!
-//! KV caches live as XLA literals and flow output->input between steps —
-//! the engine never reinterprets their bytes except when splicing freshly
-//! prefilled rows into the persistent cache.
+//! ## What lives where
+//!
+//! Weights are uploaded to device buffers once at startup. The KV caches
+//! (`kcache`/`vcache`, shape `[L, B, Hkv, Smax, Dh]` f32) are uploaded
+//! once as zeros and then live on the device: each decode step takes the
+//! previous step's output buffers as inputs and produces fresh ones —
+//! the cache never crosses the host boundary on the token hot path. The
+//! only per-token transfers are two `[B]` s32 vectors up (token, pos) and
+//! one `[B, vocab]` logits matrix down, which the transfer metrics in the
+//! engine report make auditable.
+//!
+//! ## When host splicing happens
+//!
+//! Admission is the one place the cache visits the host: a prefill
+//! artifact returns whole-cache tensors holding the freshly prefilled
+//! rows, which must be scattered into the rows the new requests claimed.
+//! The engine downloads the cache at most once per admission *burst*
+//! (however many prefill groups are admitted between two decode steps),
+//! splices every new row on host, and re-uploads once. Moving that
+//! scatter on-device (per-slot dynamic-update-slice) and donating the
+//! cache buffers step-to-step are the next optimizations this layout
+//! unlocks (see ROADMAP).
 
-use super::batcher::Batcher;
+use super::batcher::{Batcher, PrefillTake};
 use super::kvslots::{Slot, SlotTable};
 use super::metrics::MetricsCollector;
 use super::request::{Event, FinishInfo, FinishReason, SubmitReq};
 use crate::ckpt::Checkpoint;
-use crate::runtime::Runtime;
+use crate::runtime::{OwnedBuffer, Runtime};
 use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::time::Instant;
-use xla::{Literal, PjRtBuffer};
-
-use crate::runtime::OwnedBuffer;
+use xla::PjRtBuffer;
 
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -110,9 +127,11 @@ pub struct Engine {
     slots: SlotTable,
     batch: usize,
     smax: usize,
-    kcache: Literal,
-    vcache: Literal,
-    /// host mirror shapes for cache splicing
+    /// persistent KV cache, device-resident between decode steps: each
+    /// step's output buffers become the next step's inputs
+    kcache: OwnedBuffer,
+    vcache: OwnedBuffer,
+    /// cache dims for host splicing during admission
     kv_dims: (usize, usize, usize, usize, usize), // l, b, h, s, d
     batcher: Batcher,
     requests: Vec<Option<ActiveRequest>>,
@@ -178,16 +197,16 @@ impl Engine {
                     t.shape, t.dtype().name(), spec.shape, spec.dtype
                 );
             }
-            decode_params.push(runtime.to_buffer(t.to_literal()?)?);
+            decode_params.push(runtime.upload(t)?);
         }
 
-        let kcache = HostTensor::zeros(
+        // the cache is uploaded once as zeros and stays device-resident
+        let kcache = runtime.upload(&HostTensor::zeros(
             crate::tensor::DType::F32,
             kshape.clone(),
-        )
-        .to_literal()?;
-        let vcache = HostTensor::zeros(crate::tensor::DType::F32, kshape)
-            .to_literal()?;
+        ))?;
+        let vcache = runtime
+            .upload(&HostTensor::zeros(crate::tensor::DType::F32, kshape))?;
 
         let buckets = prefill_names.iter().map(|(s, _)| *s).collect();
         Ok(Engine {
@@ -252,20 +271,15 @@ impl Engine {
             {
                 break;
             }
-            // 2. admission via batched prefill
-            while self.slots.n_free() > 0 && self.batcher.pending() > 0 {
-                let (bucket, group) =
-                    self.batcher.take_prefill_group(self.slots.n_free());
-                if group.is_empty() {
-                    break;
-                }
-                self.prefill(bucket, group)?;
-            }
+            // 2. admission via batched prefill (one cache round-trip per
+            //    burst, not per group or per token)
+            self.admit_pending()?;
             // 3. one decode step over the batch
             if !self.slots.is_empty() {
                 self.decode_step()?;
             }
         }
+        self.sync_transfer_metrics();
         self.metrics.finish();
         Ok(())
     }
@@ -277,6 +291,7 @@ impl Engine {
                 true
             }
             Command::Report(tx) => {
+                self.sync_transfer_metrics();
                 let _ = tx.send(self.metrics.report("engine"));
                 true
             }
@@ -287,9 +302,57 @@ impl Engine {
         }
     }
 
+    fn sync_transfer_metrics(&mut self) {
+        let s = self.runtime.transfer_stats();
+        self.metrics.h2d_bytes = s.h2d_bytes;
+        self.metrics.d2h_bytes = s.d2h_bytes;
+    }
+
+    /// Admit as many waiting requests as free slots allow. A rejected
+    /// head prompt advances the queue and admission retries immediately —
+    /// one bad request never costs the queue behind it a decode step.
+    /// The device cache is downloaded lazily (only if a group is actually
+    /// admitted) and re-uploaded once at the end of the burst.
+    fn admit_pending(&mut self) -> Result<()> {
+        let mut host_kv: Option<(HostTensor, HostTensor)> = None;
+        while self.slots.n_free() > 0 && self.batcher.pending() > 0 {
+            match self.batcher.take_prefill_group(self.slots.n_free()) {
+                PrefillTake::Group { bucket, group } => {
+                    self.prefill(bucket, group, &mut host_kv)?;
+                }
+                PrefillTake::HeadRejected => {
+                    self.metrics.record_rejected();
+                    continue;
+                }
+                PrefillTake::Idle => break,
+            }
+        }
+        if let Some((khost, vhost)) = host_kv {
+            let t0 = Instant::now();
+            self.kcache = self.runtime.upload(&khost)?;
+            self.vcache = self.runtime.upload(&vhost)?;
+            self.overhead_s += t0.elapsed().as_secs_f64();
+        }
+        Ok(())
+    }
+
+    /// One metered D2H fetch of both persistent caches (burst-level).
+    fn download_cache(&self) -> Result<(HostTensor, HostTensor)> {
+        Ok((
+            self.runtime.fetch_tensor(&self.kcache.buffer)?,
+            self.runtime.fetch_tensor(&self.vcache.buffer)?,
+        ))
+    }
+
     /// Run one batched prefill for `group`, splice their KV rows into the
-    /// persistent cache, sample + stream each request's first token.
-    fn prefill(&mut self, bucket: usize, group: Vec<SubmitReq>) -> Result<()> {
+    /// host mirror of the persistent cache (downloaded at most once per
+    /// admission burst), sample + stream each request's first token.
+    fn prefill(
+        &mut self,
+        bucket: usize,
+        group: Vec<SubmitReq>,
+        host_kv: &mut Option<(HostTensor, HostTensor)>,
+    ) -> Result<()> {
         let t_overhead = Instant::now();
         let name = self
             .prefill_names
@@ -309,11 +372,9 @@ impl Engine {
             lens[row] = n as i32;
         }
         let extra = [
-            self.runtime.to_buffer(
-                HostTensor::s32(vec![b, bucket], tokens).to_literal()?,
-            )?,
             self.runtime
-                .to_buffer(HostTensor::s32(vec![b], lens).to_literal()?)?,
+                .upload(&HostTensor::s32(vec![b, bucket], tokens))?,
+            self.runtime.upload(&HostTensor::s32(vec![b], lens))?,
         ];
         let mut inputs: Vec<&PjRtBuffer> =
             self.decode_params.iter().map(|o| &o.buffer).collect();
@@ -327,8 +388,10 @@ impl Engine {
         let logits = HostTensor::from_literal(&outs[0])?;
         let knew = HostTensor::from_literal(&outs[1])?;
         let vnew = HostTensor::from_literal(&outs[2])?;
-        let mut khost = HostTensor::from_literal(&self.kcache)?;
-        let mut vhost = HostTensor::from_literal(&self.vcache)?;
+        if host_kv.is_none() {
+            *host_kv = Some(self.download_cache()?);
+        }
+        let (khost, vhost) = host_kv.as_mut().unwrap();
 
         for (row, req) in group.into_iter().enumerate() {
             let n_prompt = req.prompt_tokens.len().min(bucket);
@@ -347,8 +410,8 @@ impl Engine {
                 .claim(slot)
                 .ok_or_else(|| anyhow!("slot table full during prefill"))?;
             // splice this row's fresh KV into the persistent cache row idx
-            splice_kv(&mut khost, &knew, self.kv_dims, row, idx)?;
-            splice_kv(&mut vhost, &vnew, self.kv_dims, row, idx)?;
+            splice_kv(khost, &knew, self.kv_dims, row, idx)?;
+            splice_kv(vhost, &vnew, self.kv_dims, row, idx)?;
             // first output token comes straight from the prefill logits
             let vocab = logits.shape[1];
             let lrow = &logits.as_f32()?[row * vocab..(row + 1) * vocab];
@@ -368,8 +431,6 @@ impl Engine {
             self.requests[idx] = Some(active);
             self.apply_sampled_token(idx, tok)?;
         }
-        self.kcache = khost.to_literal()?;
-        self.vcache = vhost.to_literal()?;
         self.overhead_s += t_overhead.elapsed().as_secs_f64();
         Ok(())
     }
@@ -378,23 +439,21 @@ impl Engine {
     /// next decode step (it is written into `pending_tokens`). Finishes the
     /// request if limits are reached.
     fn apply_sampled_token(&mut self, idx: usize, tok: u32) -> Result<()> {
+        let has_room = self.slots.has_context_room(idx);
         let slot = self.slots.get_mut(idx).unwrap();
         slot.n_generated += 1;
-        let eos_hit = self.cfg.eos_token == Some(tok);
-        let len_hit = slot.n_generated >= slot.max_new_tokens;
-        let ctx_hit = slot.pos + 1 >= self.smax;
-        if eos_hit || len_hit || ctx_hit {
-            let reason = if eos_hit {
-                FinishReason::Eos
-            } else if len_hit {
-                FinishReason::Length
-            } else {
-                FinishReason::ContextFull
-            };
-            self.finish_slot(idx, reason);
-        } else {
+        let n_generated = slot.n_generated;
+        let max_new_tokens = slot.max_new_tokens;
+        match finish_reason(
+            tok,
+            self.cfg.eos_token,
+            n_generated,
+            max_new_tokens,
+            has_room,
+        ) {
+            Some(reason) => self.finish_slot(idx, reason),
             // token enters the cache on the next decode step
-            self.pending_token(idx, tok);
+            None => self.pending_token(idx, tok),
         }
         Ok(())
     }
@@ -435,9 +494,12 @@ impl Engine {
         }
     }
 
-    /// One decode step over the full static batch.
+    /// One decode step over the full static batch. The KV cache never
+    /// leaves the device: the previous step's output buffers go straight
+    /// back in as inputs, and only the logits come down to the host.
     fn decode_step(&mut self) -> Result<()> {
         let t_overhead = Instant::now();
+        let xfer0 = self.runtime.transfer_stats();
         let b = self.batch;
         let mut tokens = vec![0i32; b];
         let mut pos = vec![0i32; b];
@@ -447,28 +509,49 @@ impl Engine {
             pos[i] = self.slots.get(i).unwrap().pos as i32;
         }
         let extra = [
-            self.runtime.to_buffer(self.kcache.clone())?,
-            self.runtime.to_buffer(self.vcache.clone())?,
-            self.runtime
-                .to_buffer(HostTensor::s32(vec![b], tokens).to_literal()?)?,
-            self.runtime
-                .to_buffer(HostTensor::s32(vec![b], pos).to_literal()?)?,
+            self.runtime.upload(&HostTensor::s32(vec![b], tokens))?,
+            self.runtime.upload(&HostTensor::s32(vec![b], pos))?,
         ];
         let mut inputs: Vec<&PjRtBuffer> =
             self.decode_params.iter().map(|o| &o.buffer).collect();
+        inputs.push(&self.kcache.buffer);
+        inputs.push(&self.vcache.buffer);
         inputs.extend(extra.iter().map(|o| &o.buffer));
         self.overhead_s += t_overhead.elapsed().as_secs_f64();
 
         let decode_name = self.decode_name.clone();
-        let outs = self.runtime.run_buffers(&decode_name, &inputs)?;
+        let mut outs =
+            self.runtime.run_buffers_device(&decode_name, &inputs)?;
+        drop(inputs);
+        if outs.len() != 3 {
+            bail!(
+                "decode artifact '{decode_name}' must output \
+                 (logits, kcache, vcache); manifest declares {} outputs",
+                outs.len()
+            );
+        }
         self.metrics.decode_steps += 1;
         self.metrics.total_slot_steps += b;
         self.metrics.active_slot_steps += active.len();
 
         let t_overhead = Instant::now();
-        let logits = HostTensor::from_literal(&outs[0])?;
-        self.kcache = outs[1].clone();
-        self.vcache = outs[2].clone();
+        let vnew = outs.pop().unwrap();
+        let knew = outs.pop().unwrap();
+        let logits_buf = outs.pop().unwrap();
+        // the ONLY per-token download: one [B, vocab] logits matrix
+        let logits = HostTensor::from_literal(&self.runtime.fetch_output(
+            &decode_name,
+            0,
+            &logits_buf.buffer,
+        )?)?;
+        // the fresh cache buffers become the next step's inputs; the
+        // previous step's buffers are dropped on device
+        self.kcache = knew;
+        self.vcache = vnew;
+        let xfer1 = self.runtime.transfer_stats();
+        self.metrics.decode_h2d_bytes += xfer1.h2d_bytes - xfer0.h2d_bytes;
+        self.metrics.decode_d2h_bytes += xfer1.d2h_bytes - xfer0.d2h_bytes;
+
         let vocab = logits.shape[1];
         let now = Instant::now();
         for i in active {
@@ -499,6 +582,30 @@ impl Engine {
     }
 }
 
+/// Decide whether a request is finished after sampling a token.
+///
+/// `has_context_room` mirrors `SlotTable::has_context_room`: a request
+/// may continue whenever the next cache position to write is `< smax`.
+/// (The earlier check `pos + 1 >= smax` finished one step early, so every
+/// context-capped request lost the last usable cache slot.)
+fn finish_reason(
+    tok: u32,
+    eos_token: Option<u32>,
+    n_generated: usize,
+    max_new_tokens: usize,
+    has_context_room: bool,
+) -> Option<FinishReason> {
+    if eos_token == Some(tok) {
+        Some(FinishReason::Eos)
+    } else if n_generated >= max_new_tokens {
+        Some(FinishReason::Length)
+    } else if !has_context_room {
+        Some(FinishReason::ContextFull)
+    } else {
+        None
+    }
+}
+
 /// Copy row `src_row` of a freshly prefilled KV tensor into row `dst_row`
 /// of the persistent cache. Layout [L, B, H, S, D] — row (l, b) is the
 /// contiguous H*S*D block at (l*B + b).
@@ -514,7 +621,7 @@ fn splice_kv(
     if fresh.shape != vec![l, b, h, s, d] {
         bail!("prefill kv shape {:?} != cache {:?}", fresh.shape, dims);
     }
-    let src = fresh.as_f32()?.to_vec();
+    let src = fresh.as_f32()?;
     let dst = match &mut cache.data {
         crate::tensor::Data::F32(v) => v,
         _ => bail!("kv cache must be f32"),
@@ -528,35 +635,59 @@ fn splice_kv(
 }
 
 /// Sample a token from logits (greedy at temperature 0, else softmax with
-/// temperature).
+/// temperature). Non-finite logits (NaN, ±inf) are treated as masked out
+/// and can never be sampled; a row with no finite logit falls back to
+/// index 0 instead of silently returning the last vocab entry.
 pub fn sample(logits: &[f32], temperature: f32, rng: &mut Rng) -> u32 {
     if temperature <= 0.0 {
         return argmax(logits) as u32;
     }
-    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let max = logits
+        .iter()
+        .copied()
+        .filter(|x| x.is_finite())
+        .fold(f32::NEG_INFINITY, f32::max);
+    if !max.is_finite() {
+        return argmax(logits) as u32;
+    }
     let exps: Vec<f64> = logits
         .iter()
-        .map(|&l| (((l - max) / temperature) as f64).exp())
+        .map(|&l| {
+            if l.is_finite() {
+                (((l - max) / temperature) as f64).exp()
+            } else {
+                0.0
+            }
+        })
         .collect();
     let z: f64 = exps.iter().sum();
+    if !z.is_finite() || z <= 0.0 {
+        return argmax(logits) as u32;
+    }
     let mut target = rng.f64() * z;
-    for (i, e) in exps.iter().enumerate() {
+    let mut last_sampleable = 0usize;
+    for (i, &e) in exps.iter().enumerate() {
+        if e <= 0.0 {
+            continue;
+        }
+        last_sampleable = i;
         target -= e;
         if target <= 0.0 {
             return i as u32;
         }
     }
-    (logits.len() - 1) as u32
+    // float-rounding tail: land on the last index with any mass
+    last_sampleable as u32
 }
 
 fn argmax(v: &[f32]) -> usize {
-    let mut best = 0;
+    let mut best: Option<usize> = None;
     for (i, &x) in v.iter().enumerate() {
-        if x > v[best] {
-            best = i;
+        if x.is_finite() && best.map_or(true, |b: usize| x > v[b]) {
+            best = Some(i);
         }
     }
-    best
+    best.unwrap_or(0)
 }
 
 #[cfg(test)]
@@ -578,6 +709,96 @@ mod tests {
             seen.insert(sample(&logits, 1.0, &mut rng));
         }
         assert!(seen.len() > 1, "uniform logits should mix");
+    }
+
+    #[test]
+    fn sample_skips_nan_logits() {
+        // regression: a NaN logit made z NaN and the scan fell through to
+        // the last vocab index every time
+        let logits = [f32::NAN, 2.0, f32::NAN, 1.0, f32::NAN];
+        let mut rng = Rng::new(7);
+        for _ in 0..64 {
+            let t = sample(&logits, 1.0, &mut rng);
+            assert!(t == 1 || t == 3, "sampled masked index {t}");
+        }
+        assert_eq!(sample(&logits, 0.0, &mut rng), 1, "greedy skips NaN");
+    }
+
+    #[test]
+    fn sample_skips_neg_inf_logits() {
+        let logits = [f32::NEG_INFINITY, f32::NEG_INFINITY, 0.5];
+        let mut rng = Rng::new(3);
+        for _ in 0..32 {
+            assert_eq!(sample(&logits, 1.0, &mut rng), 2);
+        }
+        assert_eq!(sample(&logits, 0.0, &mut rng), 2);
+    }
+
+    #[test]
+    fn sample_all_non_finite_falls_back_to_zero() {
+        let logits = [f32::NAN, f32::NEG_INFINITY, f32::INFINITY];
+        let mut rng = Rng::new(1);
+        assert_eq!(sample(&logits, 1.0, &mut rng), 0);
+        assert_eq!(sample(&logits, 0.0, &mut rng), 0);
+    }
+
+    #[test]
+    fn argmax_ignores_nan_head() {
+        // regression: NaN at index 0 poisoned every comparison and argmax
+        // returned the NaN index
+        assert_eq!(argmax(&[f32::NAN, 1.0, 3.0, 2.0]), 2);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+    }
+
+    #[test]
+    fn finish_reason_priority_and_paths() {
+        // eos beats length beats context
+        assert_eq!(
+            finish_reason(7, Some(7), 8, 8, false),
+            Some(FinishReason::Eos)
+        );
+        assert_eq!(
+            finish_reason(1, Some(7), 8, 8, false),
+            Some(FinishReason::Length)
+        );
+        assert_eq!(
+            finish_reason(1, Some(7), 2, 8, false),
+            Some(FinishReason::ContextFull)
+        );
+        assert_eq!(finish_reason(1, Some(7), 2, 8, true), None);
+        assert_eq!(finish_reason(1, None, 2, 8, true), None);
+    }
+
+    #[test]
+    fn context_check_allows_writing_the_last_cache_slot() {
+        // regression for the off-by-one: with the cache's next write
+        // position at smax-1 there is still room — the old `pos + 1 >=
+        // smax` bound finished here and wasted one token of context.
+        let smax = 8;
+        let mut t = SlotTable::new(1, smax);
+        let idx = t
+            .claim(Slot {
+                request_id: 1,
+                pos: smax - 1, // e.g. a prompt of smax-1 tokens
+                n_prompt: smax - 1,
+                n_generated: 1,
+                max_new_tokens: 100,
+                temperature: 0.0,
+                rng_state: 0,
+            })
+            .unwrap();
+        assert!(t.has_context_room(idx));
+        assert_eq!(
+            finish_reason(1, None, 1, 100, t.has_context_room(idx)),
+            None,
+            "pos = smax-1 must keep generating"
+        );
+        // one decode step later the write position hits smax: now full
+        t.get_mut(idx).unwrap().pos = smax;
+        assert_eq!(
+            finish_reason(1, None, 2, 100, t.has_context_room(idx)),
+            Some(FinishReason::ContextFull)
+        );
     }
 
     #[test]

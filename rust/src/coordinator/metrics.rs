@@ -1,5 +1,7 @@
 //! Serving metrics: the quantities Table 1 reports (output token
-//! throughput, time per output token, inter-token latency) plus TTFT.
+//! throughput, time per output token, inter-token latency) plus TTFT and
+//! host↔device transfer accounting (the device-resident-cache win shows
+//! up as decode-step D2H shrinking to logits-only).
 
 use crate::util::stats::{summarize, Summary};
 use std::time::Instant;
@@ -15,11 +17,21 @@ pub struct MetricsCollector {
     pub n_output_tokens: usize,
     pub n_prompt_tokens: usize,
     pub n_requests: usize,
+    /// requests answered with an error before claiming a slot (oversized
+    /// prompts); they never produce a first token, so no TTFT is recorded
+    pub n_rejected: usize,
     /// engine-side accounting
     pub decode_steps: usize,
     pub prefill_calls: usize,
     pub active_slot_steps: usize,
     pub total_slot_steps: usize,
+    /// whole-run host↔device traffic (weights, prefill, decode, caches)
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+    /// decode-hot-path slice of the totals: with the device-resident KV
+    /// cache, per step this is two s32 vectors up and one logits row down
+    pub decode_h2d_bytes: u64,
+    pub decode_d2h_bytes: u64,
 }
 
 impl MetricsCollector {
@@ -61,6 +73,11 @@ impl MetricsCollector {
         }
     }
 
+    /// A request rejected before admission (no slot, no tokens, no TTFT).
+    pub fn record_rejected(&mut self) {
+        self.n_rejected += 1;
+    }
+
     /// Output token throughput (tok/s) over the whole run.
     pub fn output_tok_per_s(&self) -> f64 {
         self.n_output_tokens as f64 / self.wall_s().max(1e-9)
@@ -83,22 +100,55 @@ impl MetricsCollector {
         self.active_slot_steps as f64 / self.total_slot_steps.max(1) as f64
     }
 
+    /// Mean decode-step D2H bytes (logits-only when the cache is resident).
+    pub fn decode_d2h_per_step(&self) -> f64 {
+        self.decode_d2h_bytes as f64 / self.decode_steps.max(1) as f64
+    }
+
+    /// Mean decode-step H2D bytes (token + pos vectors only).
+    pub fn decode_h2d_per_step(&self) -> f64 {
+        self.decode_h2d_bytes as f64 / self.decode_steps.max(1) as f64
+    }
+
     pub fn report(&self, label: &str) -> String {
+        // empty summaries are NaN; a zero-request report must stay readable
+        let ms = |x: f64| if x.is_finite() { x * 1e3 } else { 0.0 };
         format!(
-            "[{label}] requests={} out_tokens={} wall={:.2}s \
+            "[{label}] requests={} rejected={} out_tokens={} wall={:.2}s \
              tput={:.1} tok/s  TPOT={:.2}ms  ITL={:.2}ms  TTFT={:.1}ms  \
-             occupancy={:.0}%  (decode_steps={} prefills={})",
+             occupancy={:.0}%  (decode_steps={} prefills={})  \
+             xfer h2d={} d2h={} decode[h2d={} d2h={}]",
             self.n_requests,
+            self.n_rejected,
             self.n_output_tokens,
             self.wall_s(),
             self.output_tok_per_s(),
-            self.tpot().mean * 1e3,
-            self.itl().mean * 1e3,
-            self.ttft().mean * 1e3,
+            ms(self.tpot().mean),
+            ms(self.itl().mean),
+            ms(self.ttft().mean),
             self.occupancy() * 100.0,
             self.decode_steps,
             self.prefill_calls,
+            fmt_bytes(self.h2d_bytes),
+            fmt_bytes(self.d2h_bytes),
+            fmt_bytes(self.decode_h2d_bytes),
+            fmt_bytes(self.decode_d2h_bytes),
         )
+    }
+}
+
+/// Human byte count (B/KiB/MiB/GiB, one decimal above bytes).
+pub fn fmt_bytes(b: u64) -> String {
+    const K: f64 = 1024.0;
+    let b = b as f64;
+    if b < K {
+        format!("{b:.0}B")
+    } else if b < K * K {
+        format!("{:.1}KiB", b / K)
+    } else if b < K * K * K {
+        format!("{:.1}MiB", b / (K * K))
+    } else {
+        format!("{:.1}GiB", b / (K * K * K))
     }
 }
 
@@ -127,5 +177,66 @@ mod tests {
         m.active_slot_steps = 30;
         m.total_slot_steps = 40;
         assert!((m.occupancy() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wall_clock_runs_before_finish() {
+        let mut m = MetricsCollector::new();
+        assert_eq!(m.wall_s(), 0.0, "no begin -> no wall clock");
+        m.begin();
+        let w1 = m.wall_s();
+        let w2 = m.wall_s();
+        assert!(w1 >= 0.0);
+        assert!(w2 >= w1, "wall clock advances while running");
+        m.finish();
+        let frozen = m.wall_s();
+        assert_eq!(m.wall_s(), frozen, "finish() freezes the clock");
+    }
+
+    #[test]
+    fn report_with_zero_requests_has_no_nan() {
+        let mut m = MetricsCollector::new();
+        m.begin();
+        m.finish();
+        let r = m.report("empty");
+        assert!(r.contains("requests=0"), "{r}");
+        assert!(!r.contains("NaN"), "empty summaries must render as 0: {r}");
+    }
+
+    #[test]
+    fn rejected_requests_record_no_ttft() {
+        let mut m = MetricsCollector::new();
+        m.begin();
+        m.record_rejected();
+        m.finish();
+        assert_eq!(m.n_rejected, 1);
+        assert_eq!(m.n_requests, 0);
+        assert!(
+            m.ttft_s.is_empty(),
+            "a request that errors before its first token has no TTFT"
+        );
+        assert!(m.report("e").contains("rejected=1"));
+    }
+
+    #[test]
+    fn transfer_bytes_in_report() {
+        let mut m = MetricsCollector::new();
+        m.h2d_bytes = 3 * 1024 * 1024;
+        m.d2h_bytes = 2048;
+        m.decode_steps = 4;
+        m.decode_d2h_bytes = 1024;
+        assert!((m.decode_d2h_per_step() - 256.0).abs() < 1e-12);
+        let r = m.report("x");
+        assert!(r.contains("h2d=3.0MiB"), "{r}");
+        assert!(r.contains("d2h=2.0KiB"), "{r}");
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(0), "0B");
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(1536), "1.5KiB");
+        assert_eq!(fmt_bytes(5 * 1024 * 1024), "5.0MiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024 * 1024), "3.0GiB");
     }
 }

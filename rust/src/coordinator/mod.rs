@@ -4,8 +4,9 @@
 //!
 //! Architecture:
 //!   - `engine`  — single-threaded core loop owning the PJRT runtime,
-//!     model weights (as device literals) and the KV cache; commands
-//!     arrive over a channel, tokens stream back per request.
+//!     model weights and the device-resident KV cache (all as device
+//!     buffers); commands arrive over a channel, tokens stream back per
+//!     request.
 //!   - `batcher` — admission queue + slot assignment policy.
 //!   - `kvslots` — batch-slot bookkeeping (the static-shape analog of
 //!     vLLM's block tables; DESIGN.md §4).
@@ -20,4 +21,4 @@ pub mod request;
 pub mod server;
 
 pub use engine::{Engine, EngineConfig, EngineHandle};
-pub use request::{Event, FinishInfo, SubmitReq};
+pub use request::{Event, FinishInfo, FinishReason, SubmitReq};

@@ -45,7 +45,7 @@ impl<'rt> Evaluator<'rt> {
                         t.shape, s.shape
                     );
                 }
-                params.push(runtime.to_buffer(t.to_literal()?)?);
+                params.push(runtime.upload(t)?);
             }
         }
         Ok(Evaluator {
@@ -74,16 +74,14 @@ impl<'rt> Evaluator<'rt> {
         prefix_lens: Vec<i32>,
     ) -> Result<(Vec<f32>, Vec<f32>)> {
         let extra = [
-            self.runtime.to_buffer(
-                HostTensor::s32(vec![self.batch, self.seq], tokens)
-                    .to_literal()?,
-            )?,
-            self.runtime.to_buffer(
-                HostTensor::s32(vec![self.batch], lens).to_literal()?,
-            )?,
-            self.runtime.to_buffer(
-                HostTensor::s32(vec![self.batch], prefix_lens).to_literal()?,
-            )?,
+            self.runtime.upload(&HostTensor::s32(
+                vec![self.batch, self.seq],
+                tokens,
+            ))?,
+            self.runtime
+                .upload(&HostTensor::s32(vec![self.batch], lens))?,
+            self.runtime
+                .upload(&HostTensor::s32(vec![self.batch], prefix_lens))?,
         ];
         let mut inputs: Vec<&PjRtBuffer> =
             self.params.iter().map(|o| &o.buffer).collect();

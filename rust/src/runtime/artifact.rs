@@ -12,6 +12,15 @@ pub struct IoSpec {
     pub dtype: String,
 }
 
+impl IoSpec {
+    /// Logical payload size in bytes; None when the dtype is not one the
+    /// host tensor layer knows (transfer metering then skips it).
+    pub fn byte_size(&self) -> Option<usize> {
+        let dt = crate::tensor::DType::parse(&self.dtype).ok()?;
+        Some(self.shape.iter().product::<usize>() * dt.size())
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
     pub name: String,
@@ -223,6 +232,22 @@ mod tests {
         assert_eq!(m.find("decode", "tiny", Some("f32")).len(), 1);
         assert_eq!(m.find("decode", "tiny", Some("int8wo")).len(), 0);
         assert_eq!(m.find("prefill", "tiny", None).len(), 0);
+    }
+
+    #[test]
+    fn io_byte_size() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.artifact("decode_f32_tiny_b2").unwrap();
+        // params.tok_emb [256, 64] f32
+        assert_eq!(a.inputs[0].byte_size(), Some(256 * 64 * 4));
+        // token [2] s32
+        assert_eq!(a.inputs[3].byte_size(), Some(8));
+        let weird = IoSpec {
+            name: "x".into(),
+            shape: vec![2],
+            dtype: "f64".into(),
+        };
+        assert_eq!(weird.byte_size(), None);
     }
 
     #[test]

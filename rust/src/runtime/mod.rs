@@ -4,6 +4,21 @@
 //! module is the only place that touches the `xla` crate's execution API.
 //! Artifacts are compiled lazily and cached; inputs bind positionally in
 //! manifest order (== jax pytree flatten order, the aot.py contract).
+//!
+//! Two execution paths, chosen by where the caller wants the outputs:
+//!
+//! - **Literal path** (`run`, `run_buffers`, `run_host`): every output is
+//!   downloaded to a host `Literal`. Right for training steps and eval,
+//!   where the host consumes everything anyway.
+//! - **Device path** (`run_buffers_device`): outputs stay on device as
+//!   owned `PjRtBuffer`s the caller can feed straight back into the next
+//!   execution. This is what keeps the serving engine's KV cache resident
+//!   across decode steps — only the logits are fetched per token, via
+//!   `fetch_output`. See `coordinator::engine` for the dataflow.
+//!
+//! All host↔device traffic initiated through this module is metered in
+//! `TransferStats` (logical payload bytes, not PJRT-padded sizes), so the
+//! serving report can prove the decode hot path moves logits only.
 
 pub mod artifact;
 
@@ -19,9 +34,24 @@ use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
 /// A device buffer together with the host literal backing its (possibly
 /// still in-flight) upload. Keep this alive as long as the buffer is used.
+/// Buffers produced by an execution have no host source (`from_device`).
 pub struct OwnedBuffer {
-    _source: Literal,
+    _source: Option<Literal>,
     pub buffer: PjRtBuffer,
+}
+
+impl OwnedBuffer {
+    /// Wrap an execution output: device-resident, no host backing needed.
+    pub fn from_device(buffer: PjRtBuffer) -> OwnedBuffer {
+        OwnedBuffer { _source: None, buffer }
+    }
+}
+
+/// Cumulative host↔device transfer accounting (logical payload bytes).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TransferStats {
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
 }
 
 pub struct Runtime {
@@ -31,6 +61,9 @@ pub struct Runtime {
     cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
     /// cumulative time spent inside XLA execute calls (perf accounting)
     pub xla_seconds: RefCell<f64>,
+    transfers: RefCell<TransferStats>,
+    /// artifacts that already warned about the packed-tuple fallback
+    warned_packed: RefCell<std::collections::HashSet<String>>,
 }
 
 impl Runtime {
@@ -45,11 +78,26 @@ impl Runtime {
             manifest,
             cache: RefCell::new(HashMap::new()),
             xla_seconds: RefCell::new(0.0),
+            transfers: RefCell::new(TransferStats::default()),
+            warned_packed: RefCell::new(std::collections::HashSet::new()),
         })
     }
 
     pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
         self.manifest.artifact(name)
+    }
+
+    /// Snapshot of the cumulative transfer counters.
+    pub fn transfer_stats(&self) -> TransferStats {
+        *self.transfers.borrow()
+    }
+
+    fn note_h2d(&self, bytes: usize) {
+        self.transfers.borrow_mut().h2d_bytes += bytes as u64;
+    }
+
+    fn note_d2h(&self, bytes: usize) {
+        self.transfers.borrow_mut().d2h_bytes += bytes as u64;
     }
 
     /// Compile (or fetch cached) an executable.
@@ -87,46 +135,201 @@ impl Runtime {
     /// NOTE 2: `BufferFromHostLiteral` transfers asynchronously: the
     /// source literal MUST stay alive until the buffer has been consumed
     /// by an execution (or synced). `OwnedBuffer` bundles the two.
+    ///
+    /// This raw path is not metered (the literal's size is opaque here);
+    /// prefer `upload` when the source is a `HostTensor`.
     pub fn to_buffer(&self, lit: Literal) -> Result<OwnedBuffer> {
         let buffer = self
             .client
             .buffer_from_host_literal(None, &lit)
             .map_err(|e| anyhow!("upload literal: {e:?}"))?;
-        Ok(OwnedBuffer { _source: lit, buffer })
+        Ok(OwnedBuffer { _source: Some(lit), buffer })
     }
 
-    /// Execute with device-buffer inputs; returns the decomposed output
-    /// tuple as host literals. Use this with cached `to_buffer` uploads for
-    /// inputs that do not change between calls (weights).
+    /// Upload a host tensor, counting its bytes as H2D traffic.
+    pub fn upload(&self, t: &HostTensor) -> Result<OwnedBuffer> {
+        self.note_h2d(t.byte_size());
+        self.to_buffer(t.to_literal()?)
+    }
+
+    /// Download one device buffer to a host literal, counting `bytes` of
+    /// D2H traffic (the caller knows the logical payload size).
+    pub fn fetch_sized(
+        &self,
+        buf: &PjRtBuffer,
+        bytes: usize,
+    ) -> Result<Literal> {
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch buffer: {e:?}"))?;
+        self.note_d2h(bytes);
+        Ok(lit)
+    }
+
+    /// Download a device buffer as a host tensor, metered by the actual
+    /// payload size (works for any dtype the tensor layer knows).
+    pub fn fetch_tensor(&self, buf: &PjRtBuffer) -> Result<HostTensor> {
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch buffer: {e:?}"))?;
+        let t = HostTensor::from_literal(&lit)?;
+        self.note_d2h(t.byte_size());
+        Ok(t)
+    }
+
+    /// Download output `idx` of artifact `name`, metered with the size
+    /// the manifest declares for that output.
+    pub fn fetch_output(
+        &self,
+        name: &str,
+        idx: usize,
+        buf: &PjRtBuffer,
+    ) -> Result<Literal> {
+        let spec = self.manifest.artifact(name)?;
+        let io = spec.outputs.get(idx).ok_or_else(|| {
+            anyhow!("artifact '{name}' has no output {idx}")
+        })?;
+        self.fetch_sized(buf, io.byte_size().unwrap_or(0))
+    }
+
+    fn check_arity(&self, spec: &ArtifactSpec, n_inputs: usize) -> Result<()> {
+        if n_inputs != spec.inputs.len() {
+            anyhow::bail!(
+                "artifact '{}' expects {} inputs, got {}",
+                spec.name,
+                spec.inputs.len(),
+                n_inputs
+            );
+        }
+        Ok(())
+    }
+
+    /// Execute with device-buffer inputs; returns all outputs as host
+    /// literals. Use this with cached `upload`s for inputs that do not
+    /// change between calls (weights). Handles both binding behaviors:
+    /// per-element output buffers, or the whole tuple packed into one
+    /// buffer (decomposed on host after download).
     pub fn run_buffers(
         &self,
         name: &str,
         inputs: &[&PjRtBuffer],
     ) -> Result<Vec<Literal>> {
         let spec = self.manifest.artifact(name)?;
-        if inputs.len() != spec.inputs.len() {
-            anyhow::bail!(
-                "artifact '{name}' expects {} inputs, got {}",
-                spec.inputs.len(),
-                inputs.len()
-            );
-        }
+        self.check_arity(spec, inputs.len())?;
+        let n_out = spec.outputs.len();
+        let fetched: usize =
+            spec.outputs.iter().filter_map(|s| s.byte_size()).sum();
         let exe = self.load(name)?;
         let t0 = Instant::now();
         let result = exe
             .execute_b::<&PjRtBuffer>(inputs)
             .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
-        let mut tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result {name}: {e:?}"))?;
+        if result.is_empty() || result[0].is_empty() {
+            anyhow::bail!("execute {name}: no output buffers");
+        }
+        let outs = &result[0];
+        let lits = if outs.len() == n_out && n_out > 1 {
+            // binding untupled the result: download each element
+            outs.iter()
+                .map(|b| {
+                    b.to_literal_sync()
+                        .map_err(|e| anyhow!("fetch result {name}: {e:?}"))
+                })
+                .collect::<Result<Vec<Literal>>>()?
+        } else {
+            let mut tuple = outs[0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch result {name}: {e:?}"))?;
+            match tuple.decompose_tuple() {
+                Ok(parts) => parts,
+                // a single-output artifact may come back as a bare array
+                Err(_) if n_out == 1 => vec![tuple],
+                Err(e) => {
+                    return Err(anyhow!("decompose result {name}: {e:?}"))
+                }
+            }
+        };
         *self.xla_seconds.borrow_mut() += t0.elapsed().as_secs_f64();
-        tuple
-            .decompose_tuple()
-            .map_err(|e| anyhow!("decompose result {name}: {e:?}"))
+        self.note_d2h(fetched);
+        Ok(lits)
+    }
+
+    /// Execute with device-buffer inputs; outputs STAY on device and are
+    /// returned as owned buffers in manifest output order. No host
+    /// transfer happens here — callers fetch the (usually few, small)
+    /// outputs they need via `fetch_output` and feed the rest back into
+    /// the next execution. This is the serving engine's decode hot path.
+    ///
+    /// If the binding hands back the whole output tuple as one packed
+    /// buffer instead of per-element buffers, fall back to a single
+    /// (metered) host round-trip to split it — correct everywhere, fast
+    /// where the binding cooperates.
+    pub fn run_buffers_device(
+        &self,
+        name: &str,
+        inputs: &[&PjRtBuffer],
+    ) -> Result<Vec<OwnedBuffer>> {
+        let spec = self.manifest.artifact(name)?;
+        self.check_arity(spec, inputs.len())?;
+        let n_out = spec.outputs.len();
+        let exe = self.load(name)?;
+        let t0 = Instant::now();
+        let mut result = exe
+            .execute_b::<&PjRtBuffer>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        *self.xla_seconds.borrow_mut() += t0.elapsed().as_secs_f64();
+        if result.is_empty() || result[0].is_empty() {
+            anyhow::bail!("execute {name}: no output buffers");
+        }
+        let outs = result.swap_remove(0);
+        if outs.len() == n_out {
+            return Ok(outs.into_iter().map(OwnedBuffer::from_device).collect());
+        }
+        if outs.len() == 1 && n_out > 1 {
+            // Packed tuple: one round-trip, split on host, re-upload.
+            // Correct, but it defeats device residency — every output
+            // (including large caches) crosses the host boundary. Warn
+            // once per artifact so a degraded transfer metric has an
+            // explanation in the log.
+            if self.warned_packed.borrow_mut().insert(name.to_string()) {
+                crate::warn!(
+                    "artifact '{name}': binding returned a packed tuple; \
+                     device-resident outputs degrade to a host round-trip"
+                );
+            }
+            let total: usize =
+                spec.outputs.iter().filter_map(|s| s.byte_size()).sum();
+            let mut tuple = self.fetch_sized(&outs[0], total)?;
+            let parts = tuple
+                .decompose_tuple()
+                .map_err(|e| anyhow!("decompose result {name}: {e:?}"))?;
+            if parts.len() != n_out {
+                anyhow::bail!(
+                    "artifact '{name}' tuple has {} elements, manifest \
+                     declares {n_out}",
+                    parts.len()
+                );
+            }
+            return parts
+                .into_iter()
+                .zip(&spec.outputs)
+                .map(|(lit, io)| {
+                    self.note_h2d(io.byte_size().unwrap_or(0));
+                    self.to_buffer(lit)
+                })
+                .collect();
+        }
+        anyhow::bail!(
+            "artifact '{name}' returned {} buffers, manifest declares {n_out}",
+            outs.len()
+        )
     }
 
     /// Execute with literal inputs; returns the decomposed output tuple.
     pub fn run(&self, name: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let spec = self.manifest.artifact(name)?;
+        let uploaded: usize =
+            spec.inputs.iter().filter_map(|s| s.byte_size()).sum();
         let bufs: Vec<PjRtBuffer> = inputs
             .iter()
             .map(|l| {
@@ -135,6 +338,7 @@ impl Runtime {
                     .map_err(|e| anyhow!("upload literal: {e:?}"))
             })
             .collect::<Result<_>>()?;
+        self.note_h2d(uploaded);
         // `inputs` outlives the execution below, so the async uploads are
         // safe here without OwnedBuffer.
         let refs: Vec<&PjRtBuffer> = bufs.iter().collect();

@@ -4,7 +4,7 @@
 //! `cargo test` stays usable before the first AOT build.
 
 use ao::ckpt::Checkpoint;
-use ao::coordinator::{engine, Event, SubmitReq};
+use ao::coordinator::{engine, Event, FinishReason, SubmitReq};
 use ao::data::corpus::standard_corpus;
 use ao::data::dataset::PackedDataset;
 use ao::evalh::Evaluator;
@@ -214,6 +214,232 @@ fn engine_greedy_decode_is_deterministic() {
     let b = run_once();
     assert_eq!(a, b, "greedy decode must be deterministic");
     assert_eq!(a.len(), 8);
+}
+
+/// Tentpole acceptance: with the KV cache device-resident, the decode hot
+/// path's host traffic is exactly one logits matrix down and two s32
+/// vectors (token, pos) up per step — never the cache.
+#[test]
+fn decode_host_traffic_is_logits_only() {
+    let Some(dir) = artifacts_dir() else { return };
+    let master = tiny_master_ckpt(&dir);
+    let tmp = std::env::temp_dir().join("ao_int_tests");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let ckpt_path = tmp.join("tiny_f32_xfer.aockpt");
+    master.save(&ckpt_path).unwrap();
+
+    let runtime = Runtime::open(&dir).unwrap();
+    let decode = runtime.manifest.find("decode", "tiny", Some("f32"))[0];
+    let logits_bytes = decode.outputs[0].byte_size().unwrap() as u64;
+    let batch = decode.batch as u64;
+    let cache_bytes = decode.inputs[decode.input_index("kcache").unwrap()]
+        .byte_size()
+        .unwrap() as u64;
+    drop(runtime);
+
+    let (handle, join) = engine::spawn(engine::EngineConfig {
+        artifacts_dir: dir,
+        ckpt_path,
+        model: "tiny".into(),
+        scheme: "f32".into(),
+        eos_token: None,
+    });
+    let mut rxs = Vec::new();
+    for i in 0..3u64 {
+        let (tx, rx) = channel();
+        handle
+            .submit(SubmitReq {
+                id: i,
+                prompt_tokens: vec![40 + i as u32; 6],
+                max_new_tokens: 8,
+                temperature: 0.0,
+                seed: i,
+                tx,
+                submitted_at: Instant::now(),
+            })
+            .unwrap();
+        rxs.push(rx);
+    }
+    for rx in rxs {
+        for ev in rx {
+            if matches!(ev, Event::Done(_) | Event::Error(_)) {
+                break;
+            }
+        }
+    }
+    handle.shutdown();
+    let m = join.join().unwrap().unwrap();
+    assert!(m.decode_steps > 0);
+    assert_eq!(
+        m.decode_d2h_bytes,
+        m.decode_steps as u64 * logits_bytes,
+        "per decode step, exactly one [B, vocab] logits download"
+    );
+    assert_eq!(
+        m.decode_h2d_bytes,
+        m.decode_steps as u64 * 2 * batch * 4,
+        "per decode step, exactly token + pos vectors uploaded"
+    );
+    assert!(
+        m.decode_d2h_per_step() < cache_bytes as f64,
+        "decode must not round-trip the cache"
+    );
+}
+
+/// Regression (off-by-one): a prompt of smax-1 tokens still has one cache
+/// position to write — the request must generate until the cache is
+/// actually full, then finish with ContextFull.
+#[test]
+fn context_cap_grants_the_last_cache_slot() {
+    let Some(dir) = artifacts_dir() else { return };
+    let master = tiny_master_ckpt(&dir);
+    let tmp = std::env::temp_dir().join("ao_int_tests");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let ckpt_path = tmp.join("tiny_f32_ctx.aockpt");
+    master.save(&ckpt_path).unwrap();
+
+    let runtime = Runtime::open(&dir).unwrap();
+    let decode = runtime.manifest.find("decode", "tiny", Some("f32"))[0];
+    let smax = decode.smax;
+    let max_bucket = runtime
+        .manifest
+        .find("prefill", "tiny", Some("f32"))
+        .iter()
+        .map(|s| s.seq)
+        .max()
+        .unwrap();
+    drop(runtime);
+    let n_prompt = (smax - 1).min(max_bucket);
+
+    let (handle, join) = engine::spawn(engine::EngineConfig {
+        artifacts_dir: dir,
+        ckpt_path,
+        model: "tiny".into(),
+        scheme: "f32".into(),
+        eos_token: None,
+    });
+    let (tx, rx) = channel();
+    handle
+        .submit(SubmitReq {
+            id: 1,
+            prompt_tokens: vec![66; n_prompt],
+            max_new_tokens: smax,
+            temperature: 0.0,
+            seed: 1,
+            tx,
+            submitted_at: Instant::now(),
+        })
+        .unwrap();
+    let mut n_tokens = 0usize;
+    let mut finish = None;
+    for ev in rx {
+        match ev {
+            Event::Token(_) => n_tokens += 1,
+            Event::Done(info) => {
+                finish = Some(info);
+                break;
+            }
+            Event::Error(e) => panic!("error: {e}"),
+        }
+    }
+    handle.shutdown();
+    join.join().unwrap().unwrap();
+    let info = finish.expect("request never finished");
+    assert_eq!(info.reason, FinishReason::ContextFull);
+    // prompt fills positions 0..n_prompt; generation writes the rest plus
+    // samples one final token off the full cache
+    assert_eq!(info.n_generated, smax - n_prompt + 1);
+    assert_eq!(info.n_generated, n_tokens);
+}
+
+/// Regression (admission stall): an oversized head prompt is rejected and
+/// the requests queued behind it are admitted in the same burst.
+#[test]
+fn oversized_head_does_not_stall_admission() {
+    let Some(dir) = artifacts_dir() else { return };
+    let master = tiny_master_ckpt(&dir);
+    let tmp = std::env::temp_dir().join("ao_int_tests");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let ckpt_path = tmp.join("tiny_f32_stall.aockpt");
+    master.save(&ckpt_path).unwrap();
+
+    let runtime = Runtime::open(&dir).unwrap();
+    let max_bucket = runtime
+        .manifest
+        .find("prefill", "tiny", Some("f32"))
+        .iter()
+        .map(|s| s.seq)
+        .max()
+        .unwrap();
+    drop(runtime);
+
+    let (handle, join) = engine::spawn(engine::EngineConfig {
+        artifacts_dir: dir,
+        ckpt_path,
+        model: "tiny".into(),
+        scheme: "f32".into(),
+        eos_token: None,
+    });
+    // head: too long for any bucket; followers: ordinary prompts
+    let (bad_tx, bad_rx) = channel();
+    handle
+        .submit(SubmitReq {
+            id: 0,
+            prompt_tokens: vec![65; max_bucket + 1],
+            max_new_tokens: 4,
+            temperature: 0.0,
+            seed: 0,
+            tx: bad_tx,
+            submitted_at: Instant::now(),
+        })
+        .unwrap();
+    let mut rxs = Vec::new();
+    for i in 1..3u64 {
+        let (tx, rx) = channel();
+        handle
+            .submit(SubmitReq {
+                id: i,
+                prompt_tokens: vec![70 + i as u32; 5],
+                max_new_tokens: 4,
+                temperature: 0.0,
+                seed: i,
+                tx,
+                submitted_at: Instant::now(),
+            })
+            .unwrap();
+        rxs.push(rx);
+    }
+    let mut saw_error = false;
+    for ev in bad_rx {
+        if let Event::Error(e) = ev {
+            assert!(e.contains("exceeds"));
+            saw_error = true;
+            break;
+        }
+    }
+    assert!(saw_error, "oversized prompt must be answered with an error");
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let mut done = false;
+        for ev in rx {
+            match ev {
+                Event::Done(info) => {
+                    assert_eq!(info.n_generated, 4, "req {i}");
+                    done = true;
+                }
+                Event::Error(e) => panic!("req {i} error: {e}"),
+                Event::Token(_) => {}
+            }
+        }
+        assert!(done, "follower {i} stalled behind rejected head");
+    }
+    handle.shutdown();
+    let m = join.join().unwrap().unwrap();
+    assert_eq!(m.n_rejected, 1);
+    assert_eq!(m.n_requests, 2);
+    assert!(
+        m.ttft_s.len() == 2,
+        "rejected request must not record a TTFT"
+    );
 }
 
 #[test]
