@@ -60,6 +60,7 @@ fn main() -> anyhow::Result<()> {
         model: "small".into(),
         scheme: "fp8dq_tensor".into(),
         eos_token: None,
+        host_admission: false,
     });
     let srv_handle = handle.clone();
     let srv = std::thread::spawn(move || {

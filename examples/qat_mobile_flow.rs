@@ -71,6 +71,7 @@ fn main() -> anyhow::Result<()> {
         model: "small".into(),
         scheme: "8da4w-32".into(),
         eos_token: None,
+        host_admission: false,
     });
     let (tx, rx) = channel();
     handle.submit(SubmitReq {

@@ -64,6 +64,7 @@ fn main() -> anyhow::Result<()> {
         model: "tiny".into(),
         scheme: "8da4w-32".into(),
         eos_token: None,
+        host_admission: false,
     });
     let tok = Tokenizer::byte_level();
     let (tx, rx) = channel();

@@ -27,6 +27,7 @@ from .model import (
     MODEL_SIZES,
     ModelConfig,
     QuantScheme,
+    admit,
     decode_step,
     init_params,
     nll,
@@ -112,10 +113,15 @@ class Exporter:
             "param_count": cfg.param_count(),
         }
 
-    def export(self, name, fn, args_tree, arg_prefixes, meta):
+    def export(self, name, fn, args_tree, arg_prefixes, meta, donate=None):
         """Lower fn(*args) and write {name}.hlo.txt + manifest entry.
 
         args_tree: tuple of pytrees; arg_prefixes: name prefix per element.
+        donate: optional {output_index: input_name} declaring which flat
+        inputs the runtime may donate into which outputs (XLA
+        input-output aliasing); recorded in the manifest as
+        ``"donate": [[out_idx, in_idx], ...]`` — the Rust runtime injects
+        the alias at compile time when the PJRT client supports it.
         """
         path = os.path.join(self.out_dir, f"{name}.hlo.txt")
         inputs = []
@@ -128,6 +134,12 @@ class Exporter:
             {"name": name, "file": f"{name}.hlo.txt",
              "inputs": inputs, "outputs": outputs}
         )
+        if donate:
+            by_name = {spec["name"]: i for i, spec in enumerate(inputs)}
+            entry["donate"] = sorted(
+                [out_idx, by_name[in_name]]
+                for out_idx, in_name in donate.items()
+            )
         self.manifest["artifacts"].append(entry)
         if os.path.exists(path) and not self.force:
             print(f"  [skip] {name}")
@@ -171,6 +183,7 @@ def export_serving(ex, cfg, scheme_tag, batch, prefill_seqs, smax):
     for seq in prefill_seqs:
         tokens = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
         lens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+        slot_ids = jax.ShapeDtypeStruct((batch,), jnp.int32)
         ex.export(
             f"prefill_{scheme_tag}_{cfg.name}_b{batch}_s{seq}",
             lambda p, t, l: prefill(p, t, l, cfg, scheme, smax),
@@ -178,6 +191,19 @@ def export_serving(ex, cfg, scheme_tag, batch, prefill_seqs, smax):
             ("params", "tokens", "lens"),
             {"kind": "prefill", "model": cfg.name, "scheme": scheme_tag,
              "batch": batch, "seq": seq, "smax": smax},
+        )
+        # device-resident admission: prefill + per-slot scatter into the
+        # persistent cache, so admission never round-trips the cache
+        ex.export(
+            f"admit_{scheme_tag}_{cfg.name}_b{batch}_s{seq}",
+            lambda p, k, v, t, l, s: admit(
+                p, k, v, t, l, s, cfg, scheme, smax
+            ),
+            (params, kc, vc, tokens, lens, slot_ids),
+            ("params", "kcache", "vcache", "tokens", "lens", "slot_ids"),
+            {"kind": "admit", "model": cfg.name, "scheme": scheme_tag,
+             "batch": batch, "seq": seq, "smax": smax},
+            donate={1: "kcache", 2: "vcache"},
         )
 
     token = jax.ShapeDtypeStruct((batch,), jnp.int32)
@@ -189,6 +215,7 @@ def export_serving(ex, cfg, scheme_tag, batch, prefill_seqs, smax):
         ("params", "kcache", "vcache", "token", "pos"),
         {"kind": "decode", "model": cfg.name, "scheme": scheme_tag,
          "batch": batch, "smax": smax},
+        donate={1: "kcache", 2: "vcache"},
     )
 
     t_eval = jax.ShapeDtypeStruct((batch, smax), jnp.int32)

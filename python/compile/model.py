@@ -8,10 +8,14 @@ is how the paper's "same config from training to serving" property is kept.
 
 Graphs exported by aot.py:
   - prefill:      (params…, tokens[B,S], lens[B]) -> (last-token logits, K, V)
+  - admit:        (params…, K, V, tokens[B,S], lens[B], slot_ids[B])
+                  -> (logits, K', V') — prefill + on-device scatter of the
+                  fresh rows into the persistent cache (serving admission)
   - decode_step:  (params…, K, V, token[B], pos[B]) -> (logits, K', V')
   - nll:          (params…, tokens[B,T], lens[B]) -> (sum_nll[B], ntok[B])
 KV caches are [L, B, Hkv, Smax, Dh] and functionally updated — the Rust
-engine keeps them device-resident between steps (`execute_b`).
+engine keeps them device-resident between steps (`execute_b`); with the
+admit graph the cache never visits the host at all.
 
 Everything is f32: this testbed's CPU PJRT has no bf16 arithmetic advantage,
 so f32 stands in for the paper's BF16 baseline (DESIGN.md §2).
@@ -293,6 +297,33 @@ def prefill(params, tokens, lens, cfg: ModelConfig, scheme: QuantScheme,
     ks = jnp.pad(ks, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
     vs = jnp.pad(vs, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
     return logits, ks, vs
+
+
+# ---------------------------------------------------------------------------
+# Admission (prefill + on-device per-slot KV scatter)
+# ---------------------------------------------------------------------------
+
+
+def admit(params, kcache, vcache, tokens, lens, slot_ids, cfg: ModelConfig,
+          scheme: QuantScheme, smax: int):
+    """Prefill `tokens` and scatter each row's fresh KV into the persistent
+    cache rows the engine claimed — the device-resident admission path.
+
+    kcache/vcache [L,B,Hkv,Smax,Dh]; tokens [B,S] right-padded; lens [B];
+    slot_ids [B] int32 maps prefill row b -> cache row slot_ids[b]. Rows
+    that carry no request use an out-of-range id (>= B): the scatter drops
+    them, so idle cache rows are never clobbered. Returns
+    (last-token logits [B,V], K', V').
+
+    The scatter is a per-row cache update (XLA lowers the batched
+    one-row-per-index scatter to dynamic-update-slice where indices allow),
+    which is what lets the Rust engine feed its live cache buffers in and
+    swap the returned ones — no whole-cache host splice.
+    """
+    logits, ks, vs = prefill(params, tokens, lens, cfg, scheme, smax)
+    kcache = kcache.at[:, slot_ids].set(ks, mode="drop")
+    vcache = vcache.at[:, slot_ids].set(vs, mode="drop")
+    return logits, kcache, vcache
 
 
 # ---------------------------------------------------------------------------

@@ -81,3 +81,45 @@ def test_decode_kv_shapes(exported):
         model["n_layers"], dec["batch"], model["n_kv_heads"],
         dec["smax"], model["head_dim"],
     ]
+
+
+def test_admit_artifact_contract(exported):
+    """Every prefill bucket ships a matching admit artifact whose trailing
+    inputs and cache-shaped outputs follow the engine's binding order."""
+    _, manifest = exported
+    prefills = [a for a in manifest["artifacts"] if a["kind"] == "prefill"]
+    admits = {
+        (a["model"], a.get("scheme"), a["seq"]): a
+        for a in manifest["artifacts"]
+        if a["kind"] == "admit"
+    }
+    assert admits, "exporter must emit admit artifacts"
+    for p in prefills:
+        a = admits[(p["model"], p.get("scheme"), p["seq"])]
+        names = [i["name"] for i in a["inputs"]]
+        assert names[-5:] == [
+            "kcache", "vcache", "tokens", "lens", "slot_ids"
+        ], a["name"]
+        by_name = {i["name"]: i for i in a["inputs"]}
+        kshape = by_name["kcache"]["shape"]
+        assert by_name["vcache"]["shape"] == kshape
+        assert by_name["tokens"]["shape"] == [a["batch"], a["seq"]]
+        assert by_name["slot_ids"]["shape"] == [a["batch"]]
+        assert by_name["slot_ids"]["dtype"] == "s32"
+        # outputs: (logits, kcache', vcache') with cache shapes preserved
+        assert len(a["outputs"]) == 3
+        assert a["outputs"][1]["shape"] == kshape
+        assert a["outputs"][2]["shape"] == kshape
+
+
+def test_donation_metadata(exported):
+    """decode/admit declare cache donation pairs the runtime can alias."""
+    _, manifest = exported
+    for a in manifest["artifacts"]:
+        if a["kind"] not in ("decode", "admit"):
+            assert "donate" not in a
+            continue
+        by_name = {i["name"]: idx for idx, i in enumerate(a["inputs"])}
+        assert a["donate"] == [
+            [1, by_name["kcache"]], [2, by_name["vcache"]]
+        ], a["name"]

@@ -9,6 +9,7 @@ import pytest
 from compile.model import (
     MODEL_SIZES,
     QuantScheme,
+    admit,
     decode_step,
     init_params,
     linear_shapes,
@@ -78,6 +79,51 @@ def test_decode_matches_prefill(params, rng):
         np.testing.assert_allclose(
             np.asarray(logits), np.asarray(ref_logits), atol=2e-4
         )
+
+
+def test_admit_scatter_matches_host_splice(params, rng):
+    """admit == prefill + per-row splice into the claimed cache rows.
+
+    This is the Python half of the parity contract the Rust engine's
+    `splice_kv` fallback relies on (rust engine test:
+    `scatter_matches_splice_kv`)."""
+    sch = QuantScheme("f32")
+    b, s = 3, 8
+    toks = _toks(rng, b, s)
+    lens = jnp.asarray([8, 5, 1], jnp.int32)
+    shape = (CFG.n_layers, b, CFG.n_kv_heads, SMAX, CFG.head_dim)
+    kc = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    # rows 0/1 go to slots 2/0; row 2 is a dummy (out-of-range id -> drop)
+    sids = jnp.asarray([2, 0, b], jnp.int32)
+    lg, ka, va = admit(params, kc, vc, toks, lens, sids, CFG, sch, SMAX)
+    lp, ks, vs = prefill(params, toks, lens, CFG, sch, SMAX)
+    kr, vr = np.asarray(kc).copy(), np.asarray(vc).copy()
+    for row, dst in [(0, 2), (1, 0)]:
+        kr[:, dst] = np.asarray(ks)[:, row]
+        vr[:, dst] = np.asarray(vs)[:, row]
+    np.testing.assert_array_equal(np.asarray(ka), kr)
+    np.testing.assert_array_equal(np.asarray(va), vr)
+    np.testing.assert_array_equal(np.asarray(lg), np.asarray(lp))
+    # the untouched slot (row 1) must be bit-identical to the old cache
+    np.testing.assert_array_equal(np.asarray(ka)[:, 1], np.asarray(kc)[:, 1])
+
+
+def test_admit_dummy_rows_never_clobber(params, rng):
+    """A burst with no live rows (all ids out of range) is a cache no-op."""
+    sch = QuantScheme("f32")
+    b, s = 2, 4
+    toks = _toks(rng, b, s)
+    lens = jnp.asarray([1, 1], jnp.int32)
+    shape = (CFG.n_layers, b, CFG.n_kv_heads, SMAX, CFG.head_dim)
+    kc = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    sids = jnp.asarray([b, b], jnp.int32)
+    _, ka, va = jax.jit(
+        lambda p, k, v, t, l, s_: admit(p, k, v, t, l, s_, CFG, sch, SMAX)
+    )(params, kc, vc, toks, lens, sids)
+    np.testing.assert_array_equal(np.asarray(ka), np.asarray(kc))
+    np.testing.assert_array_equal(np.asarray(va), np.asarray(vc))
 
 
 def test_nll_masking(params, rng):

@@ -50,15 +50,21 @@ fn main() -> anyhow::Result<()> {
             bs::quantized_ckpt(&master, scheme)?.0
         };
         let m = bs::serve_workload("small", scheme, &ckpt, &spec)?;
-        // device-resident cache: per decode step only logits come down
+        // device-resident cache: per decode step only logits come down,
+        // and per admission prefill only the row vectors go up
         xfer_lines.push(format!(
             "  {scheme}: host xfer h2d={} d2h={}; per decode step \
-             h2d={} d2h={} ({} steps)",
+             h2d={} d2h={} ({} steps); per prefill h2d={} d2h={} \
+             ({} prefills, {} host splices)",
             fmt_bytes(m.h2d_bytes),
             fmt_bytes(m.d2h_bytes),
             fmt_bytes(m.decode_h2d_per_step() as u64),
             fmt_bytes(m.decode_d2h_per_step() as u64),
             m.decode_steps,
+            fmt_bytes(m.admit_h2d_per_prefill() as u64),
+            fmt_bytes(m.admit_d2h_per_prefill() as u64),
+            m.prefill_calls,
+            m.host_splice_bursts,
         ));
         let tput = m.output_tok_per_s();
         let tpot = m.tpot().mean * 1e3;

@@ -101,6 +101,9 @@ pub fn serve_workload(
         model: model.into(),
         scheme: scheme.into(),
         eos_token: None,
+        // AO_HOST_ADMISSION=1 A/Bs the admission paths in any bench
+        host_admission: std::env::var("AO_HOST_ADMISSION")
+            .map_or(false, |v| v == "1"),
     });
     let mut rxs = Vec::new();
     for r in &reqs {

@@ -58,6 +58,16 @@ impl Batcher {
             return PrefillTake::Idle;
         }
         let head_len = self.queue[0].prompt_tokens.len();
+        if head_len == 0 {
+            // a live row with lens = 0 would attend to zero positions and
+            // produce NaN logits (dummy rows get lens = 1 for exactly this
+            // reason) — reject before it can reach a prefill
+            let req = self.queue.pop_front().unwrap();
+            let _ = req.tx.send(super::request::Event::Error(
+                "empty prompt: prefill needs at least one token".into(),
+            ));
+            return PrefillTake::HeadRejected;
+        }
         let Some(bucket) = self.bucket_for(head_len) else {
             // head cannot fit any bucket: reject it so the queue advances
             let req = self.queue.pop_front().unwrap();
@@ -71,11 +81,15 @@ impl Batcher {
         let mut group = Vec::new();
         while group.len() < n_free {
             match self.queue.front() {
+                // empty prompts never join a group (bucket_for(0) matches
+                // the smallest bucket): left at the front, the next
+                // admission attempt rejects them through the head path
                 Some(r)
-                    if self
-                        .bucket_for(r.prompt_tokens.len())
-                        .map(|b| b == bucket)
-                        .unwrap_or(false) =>
+                    if !r.prompt_tokens.is_empty()
+                        && self
+                            .bucket_for(r.prompt_tokens.len())
+                            .map(|b| b == bucket)
+                            .unwrap_or(false) =>
                 {
                     group.push(self.queue.pop_front().unwrap());
                 }
@@ -183,6 +197,62 @@ mod tests {
             }
             _ => panic!("expected error event"),
         }
+    }
+
+    #[test]
+    fn empty_prompt_behind_head_never_joins_group() {
+        // regression (review): bucket_for(0) matches the smallest bucket,
+        // so an empty prompt queued BEHIND a live head used to join its
+        // group and trip the engine's prompt-fit invariant (killing the
+        // engine thread). It must stay queued and be rejected as the next
+        // head instead.
+        let mut b = Batcher::new(vec![32]);
+        let (ok, _k) = req(8);
+        let (bad, bad_rx) = req(0);
+        let (ok2, _k2) = req(8);
+        b.push(ok);
+        b.push(bad);
+        b.push(ok2);
+        let (_, group) = expect_group(b.take_prefill_group(4));
+        assert_eq!(group.len(), 1, "group stops at the empty prompt");
+        assert!(
+            group.iter().all(|r| !r.prompt_tokens.is_empty()),
+            "no empty prompt may reach a prefill group"
+        );
+        assert!(matches!(
+            b.take_prefill_group(4),
+            PrefillTake::HeadRejected
+        ));
+        assert!(matches!(
+            bad_rx.try_recv().unwrap(),
+            super::super::request::Event::Error(_)
+        ));
+        let (_, group2) = expect_group(b.take_prefill_group(4));
+        assert_eq!(group2.len(), 1, "follower admitted after the rejection");
+    }
+
+    #[test]
+    fn empty_prompt_rejected() {
+        // regression: a zero-token prompt used to be admitted with
+        // lens[row] = 0 -> a live row attending to nothing -> NaN logits
+        let mut b = Batcher::new(vec![32]);
+        let (bad, bad_rx) = req(0);
+        let (ok, _k) = req(8);
+        b.push(bad);
+        b.push(ok);
+        assert!(matches!(
+            b.take_prefill_group(4),
+            PrefillTake::HeadRejected
+        ));
+        match bad_rx.try_recv().unwrap() {
+            super::super::request::Event::Error(e) => {
+                assert!(e.contains("empty prompt"), "{e}")
+            }
+            _ => panic!("expected error event"),
+        }
+        // the follower is admitted on the immediate retry
+        let (_, group) = expect_group(b.take_prefill_group(4));
+        assert_eq!(group.len(), 1);
     }
 
     #[test]

@@ -20,19 +20,28 @@
 //! the cache never crosses the host boundary on the token hot path. The
 //! only per-token transfers are two `[B]` s32 vectors up (token, pos) and
 //! one `[B, vocab]` logits matrix down, which the transfer metrics in the
-//! engine report make auditable.
+//! engine report make auditable. When the runtime's donation probe
+//! passes, the cache arguments are additionally compiled as input-output
+//! aliases, so each step reuses the previous cache allocation instead of
+//! alloc+free (see `runtime`).
 //!
-//! ## When host splicing happens
+//! ## Admission dataflow
 //!
-//! Admission is the one place the cache visits the host: a prefill
-//! artifact returns whole-cache tensors holding the freshly prefilled
-//! rows, which must be scattered into the rows the new requests claimed.
-//! The engine downloads the cache at most once per admission *burst*
-//! (however many prefill groups are admitted between two decode steps),
-//! splices every new row on host, and re-uploads once. Moving that
-//! scatter on-device (per-slot dynamic-update-slice) and donating the
-//! cache buffers step-to-step are the next optimizations this layout
-//! unlocks (see ROADMAP).
+//! Admission no longer host-splices. With an `admit` artifact (exported
+//! per prefill bucket), the engine claims slot rows first, uploads only
+//! the `[B, S]` token matrix and two `[B]` vectors (lens, slot_ids), and
+//! the artifact prefills *and* scatters each fresh row into the claimed
+//! cache rows on device (per-slot dynamic-update-slice). The returned
+//! cache buffers replace the engine's handles, and only the prefill
+//! logits come down — the persistent cache never crosses the host
+//! boundary.
+//!
+//! The PR-1 path is kept as an explicit fallback (`host_admission`, or a
+//! manifest without admit artifacts): run the prefill artifact, download
+//! the cache at most once per admission *burst*, `splice_kv` every new
+//! row on host, re-upload once. The two paths write identical rows
+//! (parity-tested) and are metered separately — `admit[h2d/d2h
+//! host_splices]` in the engine report keeps the fallback visible.
 
 use super::batcher::{Batcher, PrefillTake};
 use super::kvslots::{Slot, SlotTable};
@@ -41,12 +50,12 @@ use super::request::{Event, FinishInfo, FinishReason, SubmitReq};
 use crate::ckpt::Checkpoint;
 use crate::runtime::{OwnedBuffer, Runtime};
 use crate::tensor::HostTensor;
-use crate::util::rng::Rng;
+use crate::util::rng::{mix_seed, Rng};
+use crate::xb::PjRtBuffer;
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::time::Instant;
-use xla::PjRtBuffer;
 
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -56,6 +65,9 @@ pub struct EngineConfig {
     pub scheme: String,
     /// stop generating a sequence when this token appears (None = never)
     pub eos_token: Option<u32>,
+    /// force the host download/splice/upload admission fallback even when
+    /// admit artifacts exist (parity tests, A/B transfer accounting)
+    pub host_admission: bool,
 }
 
 pub enum Command {
@@ -124,6 +136,9 @@ pub struct Engine {
     decode_name: String,
     /// per-bucket prefill artifact names
     prefill_names: Vec<(usize, String)>, // (seq, name)
+    /// per-bucket admit artifact names (device-resident admission);
+    /// empty -> every admission uses the host splice fallback
+    admit_names: Vec<(usize, String)>, // (seq, name)
     slots: SlotTable,
     batch: usize,
     smax: usize,
@@ -175,6 +190,51 @@ impl Engine {
             bail!("no prefill artifacts for {}/{}", cfg.model, cfg.scheme);
         }
 
+        // Device-resident admission artifacts (one per prefill bucket). An
+        // admit entry that breaks the binding contract would scatter rows
+        // into the wrong cache slots, so validation failures are fatal —
+        // except under forced host admission, where the artifacts are
+        // never bound and must not be able to block the fallback they are
+        // being bypassed for.
+        let mut admit_names: Vec<(usize, String)> = Vec::new();
+        if cfg.host_admission {
+            crate::info!("host_admission forced: admit artifacts ignored");
+        } else {
+            let scheme = Some(cfg.scheme.as_str());
+            for spec in runtime.manifest.find("admit", &cfg.model, scheme) {
+                spec.validate_admit().with_context(|| {
+                    format!("manifest entry '{}' is unusable", spec.name)
+                })?;
+                // internally consistent is not enough: the admit artifact
+                // consumes the DECODE artifact's cache buffers, so their
+                // geometry must match or the first admission dies with an
+                // opaque PJRT shape error mid-serving
+                let ki = spec.input_index("kcache")?;
+                if spec.batch != batch
+                    || spec.smax != smax
+                    || spec.inputs[ki].shape != kshape
+                {
+                    bail!(
+                        "admit artifact '{}' (batch={}, smax={}, kcache \
+                         {:?}) does not match decode artifact '{}' \
+                         (batch={batch}, smax={smax}, kcache {kshape:?})",
+                        spec.name, spec.batch, spec.smax,
+                        spec.inputs[ki].shape, decode_name
+                    );
+                }
+                admit_names.push((spec.seq, spec.name.clone()));
+            }
+            admit_names.sort();
+            if admit_names.is_empty() {
+                crate::info!(
+                    "no admit artifacts for {}/{}: admission falls back to \
+                     the host splice path (re-run `make artifacts` for \
+                     on-device admission)",
+                    cfg.model, cfg.scheme
+                );
+            }
+        }
+
         // Load weights once, in decode-artifact order.
         let ckpt = Checkpoint::load(&cfg.ckpt_path)?;
         let decode_spec = runtime.spec(&decode_name)?.clone();
@@ -214,6 +274,7 @@ impl Engine {
             decode_params,
             decode_name,
             prefill_names,
+            admit_names,
             slots: SlotTable::new(batch, smax),
             batch,
             smax,
@@ -309,16 +370,36 @@ impl Engine {
     }
 
     /// Admit as many waiting requests as free slots allow. A rejected
-    /// head prompt advances the queue and admission retries immediately —
-    /// one bad request never costs the queue behind it a decode step.
-    /// The device cache is downloaded lazily (only if a group is actually
-    /// admitted) and re-uploaded once at the end of the burst.
+    /// head prompt (oversized or empty) advances the queue and admission
+    /// retries immediately — one bad request never costs the queue behind
+    /// it a decode step.
+    ///
+    /// Each group goes through the device-resident admit artifact when
+    /// one exists for its bucket; otherwise through the host splice
+    /// fallback, whose cache mirror is downloaded lazily (only if some
+    /// group actually needs it) and re-uploaded once at the end of the
+    /// burst. Once the host mirror exists the rest of the burst stays on
+    /// the host path: a device-side scatter after the download would be
+    /// clobbered by the final re-upload.
     fn admit_pending(&mut self) -> Result<()> {
+        let xfer0 = self.runtime.transfer_stats();
         let mut host_kv: Option<(HostTensor, HostTensor)> = None;
         while self.slots.n_free() > 0 && self.batcher.pending() > 0 {
             match self.batcher.take_prefill_group(self.slots.n_free()) {
                 PrefillTake::Group { bucket, group } => {
-                    self.prefill(bucket, group, &mut host_kv)?;
+                    let admit = if host_kv.is_none() {
+                        self.admit_artifact(bucket)
+                    } else {
+                        None
+                    };
+                    match admit {
+                        Some(name) => {
+                            self.admit_device(&name, bucket, group)?
+                        }
+                        None => {
+                            self.prefill_host(bucket, group, &mut host_kv)?
+                        }
+                    }
                 }
                 PrefillTake::HeadRejected => {
                     self.metrics.record_rejected();
@@ -332,8 +413,24 @@ impl Engine {
             self.kcache = self.runtime.upload(&khost)?;
             self.vcache = self.runtime.upload(&vhost)?;
             self.overhead_s += t0.elapsed().as_secs_f64();
+            self.metrics.host_splice_bursts += 1;
         }
+        let xfer1 = self.runtime.transfer_stats();
+        self.metrics.admit_h2d_bytes += xfer1.h2d_bytes - xfer0.h2d_bytes;
+        self.metrics.admit_d2h_bytes += xfer1.d2h_bytes - xfer0.d2h_bytes;
         Ok(())
+    }
+
+    /// Admit artifact to use for `bucket`, unless the host fallback is
+    /// forced or no artifact was exported for that bucket.
+    fn admit_artifact(&self, bucket: usize) -> Option<String> {
+        if self.cfg.host_admission {
+            return None;
+        }
+        self.admit_names
+            .iter()
+            .find(|(s, _)| *s == bucket)
+            .map(|(_, n)| n.clone())
     }
 
     /// One metered D2H fetch of both persistent caches (burst-level).
@@ -344,10 +441,100 @@ impl Engine {
         ))
     }
 
-    /// Run one batched prefill for `group`, splice their KV rows into the
-    /// host mirror of the persistent cache (downloaded at most once per
-    /// admission burst), sample + stream each request's first token.
-    fn prefill(
+    /// Device-resident admission for `group`: claim slot rows, feed the
+    /// live cache buffers plus (tokens, lens, slot_ids) into the admit
+    /// artifact, swap in the returned cache buffers, and sample + stream
+    /// each request's first token from the (only) fetched output. The
+    /// persistent cache never crosses the host boundary.
+    fn admit_device(
+        &mut self,
+        name: &str,
+        bucket: usize,
+        group: Vec<SubmitReq>,
+    ) -> Result<()> {
+        let t_overhead = Instant::now();
+        let b = self.batch;
+        let mut tokens = vec![0i32; b * bucket];
+        let mut lens = vec![1i32; b]; // dummy rows attend to 1 pad token
+        // dummy rows scatter out of range (>= B): the artifact drops them
+        let mut slot_ids = vec![b as i32; b];
+        let mut claimed: Vec<(usize, SubmitReq)> =
+            Vec::with_capacity(group.len());
+        for (row, req) in group.into_iter().enumerate() {
+            let n_prompt = req.prompt_tokens.len();
+            check_prompt_fits(n_prompt, bucket)?;
+            for (j, &t) in req.prompt_tokens.iter().enumerate() {
+                tokens[row * bucket + j] = t as i32;
+            }
+            lens[row] = n_prompt as i32;
+            let slot = Slot {
+                request_id: req.id,
+                pos: n_prompt,
+                n_prompt,
+                n_generated: 0,
+                max_new_tokens: req.max_new_tokens,
+                temperature: req.temperature,
+                rng_state: 0,
+            };
+            let idx = self
+                .slots
+                .claim(slot)
+                .ok_or_else(|| anyhow!("slot table full during admission"))?;
+            slot_ids[row] = idx as i32;
+            claimed.push((idx, req));
+        }
+        let extra = [
+            self.runtime
+                .upload(&HostTensor::s32(vec![b, bucket], tokens))?,
+            self.runtime.upload(&HostTensor::s32(vec![b], lens))?,
+            self.runtime.upload(&HostTensor::s32(vec![b], slot_ids))?,
+        ];
+        let mut inputs: Vec<&PjRtBuffer> =
+            self.decode_params.iter().map(|o| &o.buffer).collect();
+        inputs.push(&self.kcache.buffer);
+        inputs.push(&self.vcache.buffer);
+        inputs.extend(extra.iter().map(|o| &o.buffer));
+        self.overhead_s += t_overhead.elapsed().as_secs_f64();
+
+        let mut outs = self.runtime.run_buffers_device(name, &inputs)?;
+        drop(inputs);
+        if outs.len() != 3 {
+            bail!(
+                "admit artifact '{name}' must output (logits, kcache, \
+                 vcache); got {} outputs",
+                outs.len()
+            );
+        }
+        self.metrics.prefill_calls += 1;
+
+        let t_overhead = Instant::now();
+        let vnew = outs.pop().unwrap();
+        let knew = outs.pop().unwrap();
+        let logits_buf = outs.pop().unwrap();
+        // the ONLY admission download: one [B, vocab] logits matrix
+        let logits = HostTensor::from_literal(&self.runtime.fetch_output(
+            name,
+            0,
+            &logits_buf.buffer,
+        )?)?;
+        self.kcache = knew;
+        self.vcache = vnew;
+
+        let vocab = logits.shape[1];
+        for (row, (idx, req)) in claimed.into_iter().enumerate() {
+            self.start_request(idx, row, req, &logits, vocab)?;
+        }
+        self.overhead_s += t_overhead.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    /// Host-fallback admission for `group` (no admit artifact for the
+    /// bucket, or `host_admission` forced): run the prefill artifact,
+    /// splice the fresh KV rows into a host mirror of the persistent
+    /// cache (downloaded at most once per admission burst; re-uploaded
+    /// once by `admit_pending`), sample + stream each request's first
+    /// token.
+    fn prefill_host(
         &mut self,
         bucket: usize,
         group: Vec<SubmitReq>,
@@ -365,8 +552,9 @@ impl Engine {
         let mut tokens = vec![0i32; b * bucket];
         let mut lens = vec![1i32; b]; // dummy rows attend to 1 pad token
         for (row, req) in group.iter().enumerate() {
-            let n = req.prompt_tokens.len().min(bucket);
-            for (j, &t) in req.prompt_tokens[..n].iter().enumerate() {
+            let n = req.prompt_tokens.len();
+            check_prompt_fits(n, bucket)?;
+            for (j, &t) in req.prompt_tokens.iter().enumerate() {
                 tokens[row * bucket + j] = t as i32;
             }
             lens[row] = n as i32;
@@ -393,9 +581,9 @@ impl Engine {
         }
         let (khost, vhost) = host_kv.as_mut().unwrap();
 
+        let vocab = logits.shape[1];
         for (row, req) in group.into_iter().enumerate() {
-            let n_prompt = req.prompt_tokens.len().min(bucket);
-            let seed = req.seed ^ req.id;
+            let n_prompt = req.prompt_tokens.len();
             let slot = Slot {
                 request_id: req.id,
                 pos: n_prompt,
@@ -403,7 +591,7 @@ impl Engine {
                 n_generated: 0,
                 max_new_tokens: req.max_new_tokens,
                 temperature: req.temperature,
-                rng_state: seed,
+                rng_state: 0,
             };
             let idx = self
                 .slots
@@ -412,27 +600,44 @@ impl Engine {
             // splice this row's fresh KV into the persistent cache row idx
             splice_kv(khost, &knew, self.kv_dims, row, idx)?;
             splice_kv(vhost, &vnew, self.kv_dims, row, idx)?;
-            // first output token comes straight from the prefill logits
-            let vocab = logits.shape[1];
-            let lrow = &logits.as_f32()?[row * vocab..(row + 1) * vocab];
-            let mut rng = Rng::new(seed);
-            let tok = sample(lrow, req.temperature, &mut rng);
-            self.slots.get_mut(idx).unwrap().rng_state = rng.next_u64();
-
-            let now = Instant::now();
-            let active = ActiveRequest {
-                tx: req.tx,
-                submitted_at: req.submitted_at,
-                first_token_at: Some(now),
-                last_token_at: Some(now),
-                token_gaps: Vec::new(),
-            };
-            let _ = active.tx.send(Event::Token(tok));
-            self.requests[idx] = Some(active);
-            self.apply_sampled_token(idx, tok)?;
+            self.start_request(idx, row, req, &logits, vocab)?;
         }
         self.overhead_s += t_overhead.elapsed().as_secs_f64();
         Ok(())
+    }
+
+    /// Shared admission tail: derive the request's RNG stream (a proper
+    /// hash over user seed and request id — `seed ^ id` collapsed to one
+    /// stream whenever seed == id), sample + stream the first token off
+    /// the prefill logits, and register the active request. The slot
+    /// index deliberately stays OUT of the hash: it depends on concurrent
+    /// load, and a fixed (seed, id) pair must reproduce the same stream
+    /// regardless of which batch row the request lands in.
+    fn start_request(
+        &mut self,
+        idx: usize,
+        row: usize,
+        req: SubmitReq,
+        logits: &HostTensor,
+        vocab: usize,
+    ) -> Result<()> {
+        let seed = mix_seed(&[req.seed, req.id]);
+        let lrow = &logits.as_f32()?[row * vocab..(row + 1) * vocab];
+        let mut rng = Rng::new(seed);
+        let tok = sample(lrow, req.temperature, &mut rng);
+        self.slots.get_mut(idx).unwrap().rng_state = rng.next_u64();
+
+        let now = Instant::now();
+        let active = ActiveRequest {
+            tx: req.tx,
+            submitted_at: req.submitted_at,
+            first_token_at: Some(now),
+            last_token_at: Some(now),
+            token_gaps: Vec::new(),
+        };
+        let _ = active.tx.send(Event::Token(tok));
+        self.requests[idx] = Some(active);
+        self.apply_sampled_token(idx, tok)
     }
 
     /// Record a sampled token for slot `idx`: the token will be fed to the
@@ -604,6 +809,27 @@ fn finish_reason(
     } else {
         None
     }
+}
+
+/// Admission invariant: the batcher only forms groups whose prompts fit
+/// the chosen bucket, and it rejects empty prompts before grouping. A
+/// violation here is a batcher bug — erroring out (instead of the old
+/// silent `.min(bucket)` truncation) keeps a future batcher change from
+/// quietly dropping prompt tokens or admitting a NaN-producing empty row.
+fn check_prompt_fits(n_prompt: usize, bucket: usize) -> Result<()> {
+    if n_prompt == 0 {
+        bail!(
+            "prefill group contains an empty prompt — admission must \
+             reject zero-token prompts before grouping"
+        );
+    }
+    if n_prompt > bucket {
+        bail!(
+            "prompt of {n_prompt} tokens does not fit prefill bucket \
+             {bucket}; refusing to truncate"
+        );
+    }
+    Ok(())
 }
 
 /// Copy row `src_row` of a freshly prefilled KV tensor into row `dst_row`
@@ -799,6 +1025,83 @@ mod tests {
             finish_reason(1, None, 2, 100, t.has_context_room(idx)),
             Some(FinishReason::ContextFull)
         );
+    }
+
+    /// Host model of the admit artifact's scatter: fresh row `b` lands in
+    /// cache row `slot_ids[b]`; out-of-range ids are dropped. This is the
+    /// same contract as `model.admit` (see python test
+    /// `test_admit_scatter_matches_host_splice`).
+    fn scatter_kv_rows(
+        cache: &mut HostTensor,
+        fresh: &HostTensor,
+        dims: (usize, usize, usize, usize, usize),
+        slot_ids: &[i32],
+    ) -> Result<()> {
+        let b = dims.1;
+        for (row, &dst) in slot_ids.iter().enumerate() {
+            if dst < 0 || dst as usize >= b {
+                continue;
+            }
+            splice_kv(cache, fresh, dims, row, dst as usize)?;
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn scatter_matches_splice_kv() {
+        // parity contract: the device path's per-slot scatter and the host
+        // fallback's per-row splice_kv write identical rows
+        let dims = (2usize, 3usize, 2usize, 4usize, 2usize);
+        let n = 2 * 3 * 2 * 4 * 2;
+        let base: Vec<f32> = (0..n).map(|i| (i as f32).sin()).collect();
+        let fresh = HostTensor::f32(
+            vec![2, 3, 2, 4, 2],
+            (0..n).map(|i| 1000.0 + i as f32).collect(),
+        );
+        // device-style scatter: rows 0/1 -> slots 2/0, row 2 is a dummy
+        let mut scattered = HostTensor::f32(vec![2, 3, 2, 4, 2], base.clone());
+        scatter_kv_rows(&mut scattered, &fresh, dims, &[2, 0, 3]).unwrap();
+        // host-style splice of the same admissions
+        let mut spliced = HostTensor::f32(vec![2, 3, 2, 4, 2], base);
+        splice_kv(&mut spliced, &fresh, dims, 0, 2).unwrap();
+        splice_kv(&mut spliced, &fresh, dims, 1, 0).unwrap();
+        assert_eq!(scattered, spliced);
+        // the dummy row's destination (nothing) left slot 1 untouched
+        let block = 2 * 4 * 2;
+        let s = scattered.as_f32().unwrap();
+        assert!((0..block)
+            .all(|i| s[block + i] == ((block + i) as f32).sin()));
+    }
+
+    #[test]
+    fn prompt_fit_invariant() {
+        assert!(check_prompt_fits(1, 32).is_ok());
+        assert!(check_prompt_fits(32, 32).is_ok());
+        let e = check_prompt_fits(33, 32).unwrap_err().to_string();
+        assert!(e.contains("refusing to truncate"), "{e}");
+        let e = check_prompt_fits(0, 32).unwrap_err().to_string();
+        assert!(e.contains("empty prompt"), "{e}");
+    }
+
+    #[test]
+    fn admission_seeds_never_collapse() {
+        // regression: the engine derived `seed ^ id`, and the server
+        // submits seed = id — every sampled request shared one stream.
+        // The admission hash must differ across (seed, id) even in that
+        // degenerate case, while staying slot-independent so an explicit
+        // seed reproduces the same stream under any concurrent load.
+        let logits: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin()).collect();
+        let stream = |seed: u64, id: u64| -> Vec<u32> {
+            let mut rng = Rng::new(mix_seed(&[seed, id]));
+            (0..32).map(|_| sample(&logits, 1.0, &mut rng)).collect()
+        };
+        assert_ne!(
+            stream(1, 1),
+            stream(2, 2),
+            "seed == id must not collapse two requests onto one stream"
+        );
+        assert_ne!(stream(7, 1), stream(7, 2), "distinct ids diverge");
+        assert_eq!(stream(7, 1), stream(7, 1), "and stay reproducible");
     }
 
     #[test]

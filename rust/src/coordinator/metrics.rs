@@ -32,6 +32,14 @@ pub struct MetricsCollector {
     /// cache, per step this is two s32 vectors up and one logits row down
     pub decode_h2d_bytes: u64,
     pub decode_d2h_bytes: u64,
+    /// admission-path slice of the totals: on the device path (admit
+    /// artifact) this is token/len/slot-id vectors up and one logits
+    /// matrix down per prefill — never the cache; the host-splice
+    /// fallback shows up here as whole-cache traffic
+    pub admit_h2d_bytes: u64,
+    pub admit_d2h_bytes: u64,
+    /// admission bursts that fell back to the host download/splice/upload
+    pub host_splice_bursts: usize,
 }
 
 impl MetricsCollector {
@@ -110,6 +118,17 @@ impl MetricsCollector {
         self.decode_h2d_bytes as f64 / self.decode_steps.max(1) as f64
     }
 
+    /// Mean admission D2H bytes per prefill call (logits-only on the
+    /// device path; cache-sized when the host splice fallback ran).
+    pub fn admit_d2h_per_prefill(&self) -> f64 {
+        self.admit_d2h_bytes as f64 / self.prefill_calls.max(1) as f64
+    }
+
+    /// Mean admission H2D bytes per prefill call.
+    pub fn admit_h2d_per_prefill(&self) -> f64 {
+        self.admit_h2d_bytes as f64 / self.prefill_calls.max(1) as f64
+    }
+
     pub fn report(&self, label: &str) -> String {
         // empty summaries are NaN; a zero-request report must stay readable
         let ms = |x: f64| if x.is_finite() { x * 1e3 } else { 0.0 };
@@ -117,7 +136,8 @@ impl MetricsCollector {
             "[{label}] requests={} rejected={} out_tokens={} wall={:.2}s \
              tput={:.1} tok/s  TPOT={:.2}ms  ITL={:.2}ms  TTFT={:.1}ms  \
              occupancy={:.0}%  (decode_steps={} prefills={})  \
-             xfer h2d={} d2h={} decode[h2d={} d2h={}]",
+             xfer h2d={} d2h={} decode[h2d={} d2h={}] \
+             admit[h2d={} d2h={} host_splices={}]",
             self.n_requests,
             self.n_rejected,
             self.n_output_tokens,
@@ -133,6 +153,9 @@ impl MetricsCollector {
             fmt_bytes(self.d2h_bytes),
             fmt_bytes(self.decode_h2d_bytes),
             fmt_bytes(self.decode_d2h_bytes),
+            fmt_bytes(self.admit_h2d_bytes),
+            fmt_bytes(self.admit_d2h_bytes),
+            self.host_splice_bursts,
         )
     }
 }
@@ -229,6 +252,22 @@ mod tests {
         let r = m.report("x");
         assert!(r.contains("h2d=3.0MiB"), "{r}");
         assert!(r.contains("d2h=2.0KiB"), "{r}");
+    }
+
+    #[test]
+    fn admission_transfer_accounting() {
+        let mut m = MetricsCollector::new();
+        m.prefill_calls = 2;
+        m.admit_h2d_bytes = 512;
+        m.admit_d2h_bytes = 4096;
+        m.host_splice_bursts = 1;
+        assert!((m.admit_h2d_per_prefill() - 256.0).abs() < 1e-12);
+        assert!((m.admit_d2h_per_prefill() - 2048.0).abs() < 1e-12);
+        let r = m.report("x");
+        assert!(r.contains("admit[h2d=512B d2h=4.0KiB host_splices=1]"), "{r}");
+        // zero prefills must not divide by zero
+        let empty = MetricsCollector::new();
+        assert_eq!(empty.admit_d2h_per_prefill(), 0.0);
     }
 
     #[test]

@@ -3,11 +3,19 @@
 //!
 //! Protocol: one JSON object per line.
 //!   request:  {"id": 1, "prompt": "...", "max_new_tokens": 32,
-//!              "temperature": 0.0}
+//!              "temperature": 0.0, "seed": 7}
 //!   response: {"id": 1, "token": "<text>"}            (streamed)
 //!             {"id": 1, "done": true, "n_generated": 32,
 //!              "ttft_ms": ..., "tpot_ms": ..., "reason": "length"}
 //!             {"id": 1, "error": "..."}
+//!
+//! `"prompt"` is required (a missing prompt is answered with an error,
+//! never treated as ""); `"seed"` is optional and defaults to the request
+//! id — the engine hashes it together with the request id, so two
+//! sampled requests never share an RNG stream even at equal seeds. A
+//! fixed ("seed", "id") pair reproduces the same stream regardless of
+//! concurrent load; with an auto-assigned id, reproduction requires
+//! pinning "id" too.
 
 use super::engine::EngineHandle;
 use super::request::{Event, SubmitReq};
@@ -85,7 +93,20 @@ fn handle_conn(
             .and_then(|v| v.as_i64())
             .map(|v| v as u64)
             .unwrap_or_else(|| NEXT_ID.fetch_add(1, Ordering::Relaxed));
-        let prompt = req.get("prompt").and_then(|v| v.as_str()).unwrap_or("");
+        let Some(prompt) = req.get("prompt").and_then(|v| v.as_str()) else {
+            // a missing prompt used to silently default to "" and reach
+            // the engine as a zero-token prefill — answer it here instead
+            writeln!(
+                writer,
+                "{}",
+                json::obj(vec![
+                    ("id", json::num(id as f64)),
+                    ("error", json::s("missing \"prompt\" field")),
+                ])
+                .to_string()
+            )?;
+            continue;
+        };
         let max_new = req
             .get("max_new_tokens")
             .and_then(|v| v.as_usize())
@@ -94,6 +115,11 @@ fn handle_conn(
             .get("temperature")
             .and_then(|v| v.as_f64())
             .unwrap_or(0.0) as f32;
+        let seed = req
+            .get("seed")
+            .and_then(|v| v.as_i64())
+            .map(|v| v as u64)
+            .unwrap_or(id);
 
         let (tx, rx) = channel();
         engine.submit(SubmitReq {
@@ -101,7 +127,7 @@ fn handle_conn(
             prompt_tokens: tok.encode(prompt),
             max_new_tokens: max_new,
             temperature,
-            seed: id,
+            seed,
             tx,
             submitted_at: Instant::now(),
         })?;

@@ -7,7 +7,7 @@ use crate::runtime::Runtime;
 use crate::tensor::HostTensor;
 use crate::tokenizer::Tokenizer;
 use anyhow::{bail, Context, Result};
-use xla::PjRtBuffer;
+use crate::xb::PjRtBuffer;
 
 use crate::runtime::OwnedBuffer;
 

@@ -15,6 +15,28 @@
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for
 //! paper-vs-measured results.
 
+// XLA backend selection. Everything PJRT goes through `crate::xb`: the
+// real `xla` crate by default, or the vendored no-op shim when built with
+// `--no-default-features --features stub-xla` (environments without
+// libxla — the shim compiles and the host-only unit tests run; anything
+// that actually executes an artifact returns a clear error).
+#[cfg(all(feature = "xla", not(feature = "stub-xla")))]
+pub use ::xla as xb;
+#[cfg(all(feature = "stub-xla", not(feature = "xla")))]
+pub use ::xla_stub as xb;
+#[cfg(not(any(feature = "xla", feature = "stub-xla")))]
+compile_error!(
+    "enable either the `xla` backend feature (default) or `stub-xla`"
+);
+// Both at once would silently run 'tier-1' against the no-op shim on a
+// real-backend machine — force the documented invocation instead:
+// `--no-default-features --features stub-xla`.
+#[cfg(all(feature = "xla", feature = "stub-xla"))]
+compile_error!(
+    "`stub-xla` requires --no-default-features (the real `xla` backend \
+     and the stub are mutually exclusive)"
+);
+
 pub mod benchsupport;
 pub mod ckpt;
 pub mod coordinator;

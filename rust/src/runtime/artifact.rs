@@ -34,6 +34,10 @@ pub struct ArtifactSpec {
     pub smax: usize,
     pub inputs: Vec<IoSpec>,
     pub outputs: Vec<IoSpec>,
+    /// `(output_tuple_index, parameter_number)` pairs the runtime may
+    /// compile as XLA input-output aliases (buffer donation) — the
+    /// exporter declares them for the KV cache arguments of decode/admit.
+    pub donate: Vec<(usize, usize)>,
 }
 
 impl ArtifactSpec {
@@ -61,6 +65,88 @@ impl ArtifactSpec {
     pub fn output_index(&self, suffix: &str) -> Option<usize> {
         self.outputs.iter().position(|s| s.name.ends_with(suffix))
     }
+
+    /// Validate the `admit` artifact contract the serving engine binds to:
+    /// trailing inputs `(kcache, vcache, tokens, lens, slot_ids)` after
+    /// the params block, outputs `(logits, kcache', vcache')`, and cache
+    /// shapes consistent with `batch`/`seq`/`smax`. A manifest entry that
+    /// fails this check would make the engine scatter rows into the wrong
+    /// place, so callers should treat an error as fatal.
+    pub fn validate_admit(&self) -> Result<()> {
+        if self.kind != "admit" {
+            anyhow::bail!("artifact '{}' is not kind=admit", self.name);
+        }
+        let ctx = |what: &str| {
+            format!("admit artifact '{}': {what}", self.name)
+        };
+        // The engine binds buffers POSITIONALLY (params..., kcache,
+        // vcache, tokens, lens, slot_ids), so the trailing five inputs
+        // must sit at exactly those positions — lens/slot_ids share a
+        // shape and kcache/vcache are identical, so a name-only check
+        // would let a reordered manifest scatter rows into garbage slots.
+        if self.inputs.len() < 5 {
+            anyhow::bail!(ctx("fewer than 5 inputs"));
+        }
+        let base = self.inputs.len() - 5;
+        for (off, want) in ["kcache", "vcache", "tokens", "lens", "slot_ids"]
+            .iter()
+            .enumerate()
+        {
+            let got = self.inputs[base + off].name.as_str();
+            if got != *want {
+                anyhow::bail!(
+                    "{} (position {} is '{got}', expected '{want}')",
+                    ctx("trailing inputs must be (kcache, vcache, tokens, \
+                         lens, slot_ids) in that order"),
+                    base + off
+                );
+            }
+        }
+        if let Some(bad) = self.inputs[..base]
+            .iter()
+            .find(|s| !s.name.starts_with("params."))
+        {
+            anyhow::bail!(
+                "{} ('{}' is not)",
+                ctx("all inputs before the cache block must be params"),
+                bad.name
+            );
+        }
+        let (k, v, t, l, s) = (base, base + 1, base + 2, base + 3, base + 4);
+        let kshape = &self.inputs[k].shape;
+        if kshape.len() != 5 || kshape[1] != self.batch
+            || kshape[3] != self.smax
+        {
+            anyhow::bail!(
+                "{} (got {kshape:?}, batch={}, smax={})",
+                ctx("kcache must be [L, batch, Hkv, smax, Dh]"),
+                self.batch, self.smax
+            );
+        }
+        if self.inputs[v].shape != *kshape {
+            anyhow::bail!(ctx("vcache shape differs from kcache"));
+        }
+        if self.inputs[t].shape != [self.batch, self.seq] {
+            anyhow::bail!(ctx("tokens must be [batch, seq]"));
+        }
+        if self.inputs[l].shape != [self.batch]
+            || self.inputs[s].shape != [self.batch]
+        {
+            anyhow::bail!(ctx("lens/slot_ids must be [batch]"));
+        }
+        if self.inputs[s].dtype != "s32" {
+            anyhow::bail!(ctx("slot_ids must be s32"));
+        }
+        if self.outputs.len() != 3 {
+            anyhow::bail!(ctx("outputs must be (logits, kcache', vcache')"));
+        }
+        if self.outputs[1].shape != *kshape
+            || self.outputs[2].shape != *kshape
+        {
+            anyhow::bail!(ctx("output cache shapes differ from inputs"));
+        }
+        Ok(())
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -80,6 +166,26 @@ pub struct ModelInfo {
 pub struct Manifest {
     pub models: BTreeMap<String, ModelInfo>,
     pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+/// Parse a manifest `"donate": [[out_idx, in_idx], ...]` list (absent ->
+/// empty: donation is strictly opt-in per artifact).
+fn donate_pairs(v: Option<&Value>) -> Result<Vec<(usize, usize)>> {
+    let Some(v) = v else { return Ok(Vec::new()) };
+    v.as_arr()
+        .context("donate not an array")?
+        .iter()
+        .map(|p| {
+            let pair = p.as_arr().context("donate entry not a pair")?;
+            if pair.len() != 2 {
+                anyhow::bail!("donate entry must be [out_idx, in_idx]");
+            }
+            Ok((
+                pair[0].as_usize().context("donate out_idx")?,
+                pair[1].as_usize().context("donate in_idx")?,
+            ))
+        })
+        .collect()
 }
 
 fn io_specs(v: &Value) -> Result<Vec<IoSpec>> {
@@ -147,6 +253,7 @@ impl Manifest {
                 smax: a.get("smax").and_then(|x| x.as_usize()).unwrap_or(0),
                 inputs: io_specs(a.req("inputs")?)?,
                 outputs: io_specs(a.req("outputs")?)?,
+                donate: donate_pairs(a.get("donate"))?,
             };
             artifacts.insert(spec.name.clone(), spec);
         }
@@ -255,5 +362,95 @@ mod tests {
         let m = Manifest::parse(SAMPLE).unwrap();
         let err = m.artifact("nope").unwrap_err().to_string();
         assert!(err.contains("decode_f32_tiny_b2"));
+    }
+
+    const ADMIT_SAMPLE: &str = r#"{
+      "version": 1,
+      "models": {},
+      "artifacts": [
+        {"name": "admit_f32_tiny_b2_s16", "file": "a.hlo.txt",
+         "kind": "admit", "model": "tiny", "scheme": "f32",
+         "batch": 2, "seq": 16, "smax": 128,
+         "donate": [[1, 1], [2, 2]],
+         "inputs": [
+            {"name": "params.tok_emb", "shape": [256, 64], "dtype": "f32"},
+            {"name": "kcache", "shape": [2,2,2,128,16], "dtype": "f32"},
+            {"name": "vcache", "shape": [2,2,2,128,16], "dtype": "f32"},
+            {"name": "tokens", "shape": [2, 16], "dtype": "s32"},
+            {"name": "lens", "shape": [2], "dtype": "s32"},
+            {"name": "slot_ids", "shape": [2], "dtype": "s32"}],
+         "outputs": [
+            {"name": "out.0", "shape": [2, 256], "dtype": "f32"},
+            {"name": "out.1", "shape": [2,2,2,128,16], "dtype": "f32"},
+            {"name": "out.2", "shape": [2,2,2,128,16], "dtype": "f32"}]}
+      ]}"#;
+
+    #[test]
+    fn parses_admit_and_donate() {
+        let m = Manifest::parse(ADMIT_SAMPLE).unwrap();
+        let a = m.artifact("admit_f32_tiny_b2_s16").unwrap();
+        assert_eq!(a.kind, "admit");
+        assert_eq!(a.donate, vec![(1, 1), (2, 2)]);
+        a.validate_admit().unwrap();
+        // artifacts without a donate field parse to an empty list
+        let m2 = Manifest::parse(SAMPLE).unwrap();
+        assert!(m2.artifact("decode_f32_tiny_b2").unwrap().donate.is_empty());
+    }
+
+    #[test]
+    fn validate_admit_catches_contract_breaks() {
+        let m = Manifest::parse(ADMIT_SAMPLE).unwrap();
+        let good = m.artifact("admit_f32_tiny_b2_s16").unwrap();
+
+        let mut missing = good.clone();
+        missing.inputs.retain(|s| s.name != "slot_ids");
+        assert!(missing.validate_admit().is_err(), "slot_ids required");
+
+        let mut wrong_dtype = good.clone();
+        wrong_dtype
+            .inputs
+            .iter_mut()
+            .find(|s| s.name == "slot_ids")
+            .unwrap()
+            .dtype = "f32".into();
+        assert!(wrong_dtype.validate_admit().is_err());
+
+        let mut wrong_out = good.clone();
+        wrong_out.outputs[1].shape = vec![2, 2, 2, 64, 16];
+        assert!(wrong_out.validate_admit().is_err(), "cache shape drift");
+
+        let mut wrong_kind = good.clone();
+        wrong_kind.kind = "prefill".into();
+        assert!(wrong_kind.validate_admit().is_err());
+
+        let mut wrong_batch = good.clone();
+        wrong_batch.batch = 4;
+        assert!(wrong_batch.validate_admit().is_err());
+
+        // regression (review): the engine binds positionally, and
+        // lens/slot_ids share shape+dtype — a reordered manifest must NOT
+        // pass just because every name exists somewhere
+        let mut swapped = good.clone();
+        let n = swapped.inputs.len();
+        swapped.inputs.swap(n - 1, n - 2); // (..., slot_ids, lens)
+        let e = swapped.validate_admit().unwrap_err().to_string();
+        assert!(e.contains("in that order"), "{e}");
+
+        let mut kv_swapped = good.clone();
+        kv_swapped.inputs.swap(n - 5, n - 4); // (vcache, kcache, ...)
+        assert!(kv_swapped.validate_admit().is_err());
+
+        let mut interloper = good.clone();
+        interloper.inputs[0].name = "weights.tok_emb".into();
+        let e = interloper.validate_admit().unwrap_err().to_string();
+        assert!(e.contains("must be params"), "{e}");
+    }
+
+    #[test]
+    fn donate_parse_rejects_malformed() {
+        let bad = ADMIT_SAMPLE.replace("[[1, 1], [2, 2]]", "[[1], [2, 2]]");
+        assert!(Manifest::parse(&bad).is_err());
+        let not_arr = ADMIT_SAMPLE.replace("[[1, 1], [2, 2]]", "7");
+        assert!(Manifest::parse(&not_arr).is_err());
     }
 }

@@ -19,18 +19,30 @@
 //! All host↔device traffic initiated through this module is metered in
 //! `TransferStats` (logical payload bytes, not PJRT-padded sizes), so the
 //! serving report can prove the decode hot path moves logits only.
+//!
+//! **Buffer donation.** Artifacts whose manifest entry carries a
+//! `donate` list (decode and admit: the KV cache arguments) are compiled
+//! with an `input_output_alias` injected into their HLO header, so XLA
+//! reuses the input cache allocation for the output instead of
+//! alloc+free per step. Support is discovered by a one-time capability
+//! probe (`donation_supported`); when the parser or PJRT client rejects
+//! the annotation, the artifact silently falls back to the plain copy
+//! path — identical results, two extra allocations per step.
 
 pub mod artifact;
 
 use crate::tensor::HostTensor;
+use crate::xb::{
+    HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable,
+    XlaComputation,
+};
 use anyhow::{anyhow, Context, Result};
 use artifact::{ArtifactSpec, Manifest};
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 use std::time::Instant;
-use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
 /// A device buffer together with the host literal backing its (possibly
 /// still in-flight) upload. Keep this alive as long as the buffer is used.
@@ -64,6 +76,11 @@ pub struct Runtime {
     transfers: RefCell<TransferStats>,
     /// artifacts that already warned about the packed-tuple fallback
     warned_packed: RefCell<std::collections::HashSet<String>>,
+    /// one-time capability probe result: does this parser/client accept
+    /// `input_output_alias` (buffer donation)?
+    donation_ok: Cell<Option<bool>>,
+    /// artifacts whose executable was compiled with cache donation
+    donated: RefCell<std::collections::HashSet<String>>,
 }
 
 impl Runtime {
@@ -80,6 +97,8 @@ impl Runtime {
             xla_seconds: RefCell::new(0.0),
             transfers: RefCell::new(TransferStats::default()),
             warned_packed: RefCell::new(std::collections::HashSet::new()),
+            donation_ok: Cell::new(None),
+            donated: RefCell::new(std::collections::HashSet::new()),
         })
     }
 
@@ -100,7 +119,10 @@ impl Runtime {
         self.transfers.borrow_mut().d2h_bytes += bytes as u64;
     }
 
-    /// Compile (or fetch cached) an executable.
+    /// Compile (or fetch cached) an executable. When the manifest declares
+    /// donation pairs for the artifact and the capability probe passes,
+    /// the HLO is compiled with the aliases injected; any failure on that
+    /// path falls back to the plain (copy) compilation.
     pub fn load(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
         if let Some(exe) = self.cache.borrow().get(name) {
             return Ok(exe.clone());
@@ -108,21 +130,100 @@ impl Runtime {
         let spec = self.manifest.artifact(name)?;
         let path = self.dir.join(&spec.file);
         let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .map_err(|e| anyhow!("parse HLO {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let mut exe = None;
+        if !spec.donate.is_empty() && self.donation_supported() {
+            let attempt = std::fs::read_to_string(&path)
+                .with_context(|| format!("read HLO {}", path.display()))
+                .and_then(|text| inject_input_output_alias(&text, &spec.donate))
+                .and_then(|aliased| self.compile_text(&aliased, name));
+            match attempt {
+                Ok(e) => {
+                    self.donated.borrow_mut().insert(name.to_string());
+                    exe = Some(e);
+                }
+                Err(err) => crate::warn!(
+                    "artifact '{name}': donation rejected ({err:#}); \
+                     falling back to the copy path"
+                ),
+            }
+        }
+        let exe = match exe {
+            Some(e) => e,
+            None => self.compile_file(&path, name)?,
+        };
         crate::info!(
-            "compiled artifact '{name}' in {:.2}s", t0.elapsed().as_secs_f64()
+            "compiled artifact '{name}' in {:.2}s{}",
+            t0.elapsed().as_secs_f64(),
+            if self.donation_active(name) { " (cache donated)" } else { "" }
         );
         let exe = Rc::new(exe);
         self.cache.borrow_mut().insert(name.to_string(), exe.clone());
         Ok(exe)
+    }
+
+    fn compile_file(
+        &self,
+        path: &Path,
+        name: &str,
+    ) -> Result<PjRtLoadedExecutable> {
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parse HLO {}: {e:?}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))
+    }
+
+    /// Compile HLO text. The binding only parses from a file, so the text
+    /// takes a detour through a temp file — keyed by pid AND a process-wide
+    /// counter, because parallel test harnesses run several `Runtime`s in
+    /// one process and a (pid, name)-only path would race write/parse
+    /// against remove.
+    fn compile_text(
+        &self,
+        text: &str,
+        name: &str,
+    ) -> Result<PjRtLoadedExecutable> {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+        let tmp = std::env::temp_dir().join(format!(
+            "ao_hlo_{}_{}_{name}.hlo.txt",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, text)
+            .with_context(|| format!("write {}", tmp.display()))?;
+        let out = self.compile_file(&tmp, name);
+        let _ = std::fs::remove_file(&tmp);
+        out
+    }
+
+    /// Whether this parser + PJRT client accept `input_output_alias`
+    /// (buffer donation). Probed once by compiling a minimal aliased
+    /// module; `AO_NO_DONATION=1` forces the copy path.
+    pub fn donation_supported(&self) -> bool {
+        if std::env::var("AO_NO_DONATION").map_or(false, |v| v == "1") {
+            return false;
+        }
+        if let Some(ok) = self.donation_ok.get() {
+            return ok;
+        }
+        let ok = self.compile_text(DONATION_PROBE_HLO, "donation_probe").is_ok();
+        if !ok {
+            crate::warn!(
+                "input_output_alias probe failed; decode/admit run without \
+                 buffer donation (alloc+free per step)"
+            );
+        }
+        self.donation_ok.set(Some(ok));
+        ok
+    }
+
+    /// Whether `name` was compiled with its cache arguments donated.
+    pub fn donation_active(&self, name: &str) -> bool {
+        self.donated.borrow().contains(name)
     }
 
     /// Upload a literal to a device buffer owned by the caller.
@@ -376,5 +477,99 @@ impl Runtime {
             }
         }
         Ok(())
+    }
+}
+
+/// Minimal module with an input-output alias: compiles iff the HLO parser
+/// and the PJRT client both accept donation annotations.
+const DONATION_PROBE_HLO: &str = "\
+HloModule ao_donation_probe, input_output_alias={ {0}: (0, {}, may-alias) }
+
+ENTRY main {
+  p0 = f32[4]{0} parameter(0)
+  a0 = f32[4]{0} add(p0, p0)
+  ROOT t0 = (f32[4]{0}) tuple(a0)
+}
+";
+
+/// Rewrite the `HloModule` header line to carry an `input_output_alias`
+/// attribute for the given `(output_tuple_index, parameter_number)` pairs.
+/// Text already carrying an alias (a future exporter may bake it in) is
+/// returned unchanged.
+fn inject_input_output_alias(
+    text: &str,
+    pairs: &[(usize, usize)],
+) -> Result<String> {
+    let nl = text.find('\n').context("empty HLO text")?;
+    let header = &text[..nl];
+    if !header.starts_with("HloModule") {
+        anyhow::bail!("HLO text does not start with an HloModule header");
+    }
+    if header.contains("input_output_alias") {
+        return Ok(text.to_string());
+    }
+    let alias = pairs
+        .iter()
+        .map(|(out, input)| format!("{{{out}}}: ({input}, {{}}, may-alias)"))
+        .collect::<Vec<_>>()
+        .join(", ");
+    Ok(format!(
+        "{header}, input_output_alias={{ {alias} }}{}",
+        &text[nl..]
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alias_injection_rewrites_header_only() {
+        let text = "HloModule decode_f32\n\nENTRY main {\n}\n";
+        let out =
+            inject_input_output_alias(text, &[(1, 17), (2, 18)]).unwrap();
+        let header = out.lines().next().unwrap();
+        assert_eq!(
+            header,
+            "HloModule decode_f32, input_output_alias={ {1}: (17, {}, \
+             may-alias), {2}: (18, {}, may-alias) }"
+        );
+        // body untouched
+        assert!(out.ends_with("\n\nENTRY main {\n}\n"));
+    }
+
+    #[test]
+    fn alias_injection_keeps_existing_attributes() {
+        let text = "HloModule m, entry_computation_layout={(f32[2]{0})->\
+                    f32[2]{0}}\nENTRY main {\n}\n";
+        let out = inject_input_output_alias(text, &[(0, 0)]).unwrap();
+        assert!(out.starts_with(
+            "HloModule m, entry_computation_layout={(f32[2]{0})->f32[2]{0}}, \
+             input_output_alias={ {0}: (0, {}, may-alias) }"
+        ));
+    }
+
+    #[test]
+    fn alias_injection_is_idempotent() {
+        let text = "HloModule m, input_output_alias={ {0}: (0, {}, \
+                    may-alias) }\nENTRY main {\n}\n";
+        let out = inject_input_output_alias(text, &[(1, 3)]).unwrap();
+        assert_eq!(out, text, "pre-aliased text passes through unchanged");
+    }
+
+    #[test]
+    fn alias_injection_rejects_non_hlo() {
+        assert!(inject_input_output_alias("", &[(0, 0)]).is_err());
+        assert!(
+            inject_input_output_alias("func @main()\n", &[(0, 0)]).is_err()
+        );
+    }
+
+    #[test]
+    fn donation_probe_hlo_is_well_formed() {
+        // the probe itself must carry the annotation the probe tests for
+        assert!(DONATION_PROBE_HLO.starts_with("HloModule"));
+        assert!(DONATION_PROBE_HLO.contains("input_output_alias"));
+        assert!(DONATION_PROBE_HLO.contains("ROOT"));
     }
 }

@@ -5,8 +5,8 @@
 //! deliberately minimal — XLA does the math; Rust only packs, routes, and
 //! measures.
 
+use crate::xb::{ElementType, Literal};
 use anyhow::{anyhow, bail, Context, Result};
-use xla::{ElementType, Literal};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {

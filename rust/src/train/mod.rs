@@ -14,7 +14,7 @@ use crate::util::rng::Rng;
 use crate::util::stats::{peak_rss_bytes, summarize};
 use anyhow::{anyhow, bail, Context, Result};
 use std::time::Instant;
-use xla::Literal;
+use crate::xb::Literal;
 
 pub struct TrainReport {
     pub losses: Vec<f32>,

@@ -117,6 +117,21 @@ impl Rng {
     }
 }
 
+/// Hash-combine values into one well-mixed 64-bit seed (splitmix64
+/// chain). Unlike a plain XOR — which collapses to 0 whenever two parts
+/// are equal (the PR-2 seed bug: `seed ^ id` with `seed == id`) — every
+/// part passes through a full avalanche round, and the combination is
+/// order-sensitive, so `(a, b)` and `(b, a)` derive different streams.
+pub fn mix_seed(parts: &[u64]) -> u64 {
+    let mut state = 0u64;
+    let mut out = 0u64;
+    for &p in parts {
+        state ^= p;
+        out = out.rotate_left(23) ^ splitmix64(&mut state);
+    }
+    out
+}
+
 /// Precompute the generalized harmonic number used by `zipf`.
 pub fn harmonic(n: usize, s: f64) -> f64 {
     (1..=n).map(|k| 1.0 / (k as f64).powf(s)).sum()
@@ -173,6 +188,37 @@ mod tests {
             / n as f64;
         assert!(mean.abs() < 0.02, "{mean}");
         assert!((var - 1.0).abs() < 0.05, "{var}");
+    }
+
+    #[test]
+    fn mix_seed_no_xor_collapse() {
+        // regression: `seed ^ id` was 0 for every request where seed == id
+        // (the server submits seed = id), collapsing all sampled requests
+        // onto one RNG stream
+        let mut seen = std::collections::BTreeSet::new();
+        for id in 0..64u64 {
+            assert!(
+                seen.insert(mix_seed(&[id, id, 0])),
+                "equal parts must still derive distinct seeds (id={id})"
+            );
+        }
+    }
+
+    #[test]
+    fn mix_seed_is_deterministic_and_order_sensitive() {
+        assert_eq!(mix_seed(&[1, 2, 3]), mix_seed(&[1, 2, 3]));
+        assert_ne!(mix_seed(&[1, 2, 3]), mix_seed(&[3, 2, 1]));
+        assert_ne!(mix_seed(&[1, 2, 3]), mix_seed(&[1, 2, 4]));
+        assert_ne!(mix_seed(&[0, 0, 0]), mix_seed(&[0, 0, 1]));
+    }
+
+    #[test]
+    fn mix_seed_streams_diverge() {
+        // two requests with distinct ids but identical user seeds must
+        // produce different sample streams
+        let mut a = Rng::new(mix_seed(&[7, 1, 0]));
+        let mut b = Rng::new(mix_seed(&[7, 2, 0]));
+        assert!((0..8).any(|_| a.next_u64() != b.next_u64()));
     }
 
     #[test]

@@ -130,6 +130,7 @@ fn engine_serves_batched_requests() {
         model: "tiny".into(),
         scheme: "f32".into(),
         eos_token: None,
+        host_admission: false,
     });
 
     let mut rxs = Vec::new();
@@ -187,6 +188,7 @@ fn engine_greedy_decode_is_deterministic() {
             model: "tiny".into(),
             scheme: "f32".into(),
             eos_token: None,
+            host_admission: false,
         });
         let (tx, rx) = channel();
         handle
@@ -243,6 +245,7 @@ fn decode_host_traffic_is_logits_only() {
         model: "tiny".into(),
         scheme: "f32".into(),
         eos_token: None,
+        host_admission: false,
     });
     let mut rxs = Vec::new();
     for i in 0..3u64 {
@@ -317,6 +320,7 @@ fn context_cap_grants_the_last_cache_slot() {
         model: "tiny".into(),
         scheme: "f32".into(),
         eos_token: None,
+        host_admission: false,
     });
     let (tx, rx) = channel();
     handle
@@ -379,6 +383,7 @@ fn oversized_head_does_not_stall_admission() {
         model: "tiny".into(),
         scheme: "f32".into(),
         eos_token: None,
+        host_admission: false,
     });
     // head: too long for any bucket; followers: ordinary prompts
     let (bad_tx, bad_rx) = channel();
@@ -440,6 +445,306 @@ fn oversized_head_does_not_stall_admission() {
         m.ttft_s.len() == 2,
         "rejected request must not record a TTFT"
     );
+}
+
+/// Tentpole acceptance: with an admit artifact, a prefill burst performs
+/// ZERO whole-cache host transfers — admission uploads only the
+/// token/len/slot-id vectors and downloads only one logits matrix per
+/// prefill call. (Requires artifacts exported with the admit kind; skips
+/// on older artifact dirs.)
+#[test]
+fn admission_host_traffic_is_rows_only() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = Runtime::open(&dir).unwrap();
+    let admits = runtime.manifest.find("admit", "tiny", Some("f32"));
+    if admits.is_empty() {
+        eprintln!("[skip] no admit artifacts; re-run `make artifacts`");
+        return;
+    }
+    let bucket = runtime
+        .manifest
+        .find("prefill", "tiny", Some("f32"))
+        .iter()
+        .map(|s| s.seq)
+        .filter(|&b| b >= 6)
+        .min()
+        .unwrap();
+    let admit = runtime
+        .manifest
+        .find("admit", "tiny", Some("f32"))
+        .into_iter()
+        .find(|s| s.seq == bucket)
+        .expect("admit artifact for every prefill bucket")
+        .clone();
+    let logits_bytes = admit.outputs[0].byte_size().unwrap() as u64;
+    let batch = admit.batch as u64;
+    let cache_bytes = admit.inputs[admit.input_index("kcache").unwrap()]
+        .byte_size()
+        .unwrap() as u64;
+    drop(runtime);
+
+    let master = tiny_master_ckpt(&dir);
+    let tmp = std::env::temp_dir().join("ao_int_tests");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let ckpt_path = tmp.join("tiny_f32_admit.aockpt");
+    master.save(&ckpt_path).unwrap();
+
+    let (handle, join) = engine::spawn(engine::EngineConfig {
+        artifacts_dir: dir,
+        ckpt_path,
+        model: "tiny".into(),
+        scheme: "f32".into(),
+        eos_token: None,
+        host_admission: false,
+    });
+    let mut rxs = Vec::new();
+    for i in 0..3u64 {
+        let (tx, rx) = channel();
+        handle
+            .submit(SubmitReq {
+                id: i,
+                prompt_tokens: vec![50 + i as u32; 6],
+                max_new_tokens: 5,
+                temperature: 0.0,
+                seed: i,
+                tx,
+                submitted_at: Instant::now(),
+            })
+            .unwrap();
+        rxs.push(rx);
+    }
+    for rx in rxs {
+        for ev in rx {
+            if matches!(ev, Event::Done(_) | Event::Error(_)) {
+                break;
+            }
+        }
+    }
+    handle.shutdown();
+    let m = join.join().unwrap().unwrap();
+    assert!(m.prefill_calls > 0);
+    assert_eq!(m.host_splice_bursts, 0, "device path must not host-splice");
+    assert_eq!(
+        m.admit_d2h_bytes,
+        m.prefill_calls as u64 * logits_bytes,
+        "per prefill call, exactly one [B, vocab] logits download — the \
+         cache never comes down"
+    );
+    assert_eq!(
+        m.admit_h2d_bytes,
+        m.prefill_calls as u64 * (batch * bucket as u64 + 2 * batch) * 4,
+        "admission uploads only the token matrix + len/slot-id vectors"
+    );
+    assert!(
+        m.admit_d2h_bytes < cache_bytes,
+        "cache-sized admission D2H means the splice fallback ran"
+    );
+}
+
+/// The device scatter and the host splice fallback are interchangeable:
+/// the same greedy workload produces identical token streams on both
+/// paths (and the fallback really is exercised when forced).
+#[test]
+fn admission_device_and_host_paths_agree() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = Runtime::open(&dir).unwrap();
+    if runtime.manifest.find("admit", "tiny", Some("f32")).is_empty() {
+        eprintln!("[skip] no admit artifacts; re-run `make artifacts`");
+        return;
+    }
+    drop(runtime);
+    let master = tiny_master_ckpt(&dir);
+    let tmp = std::env::temp_dir().join("ao_int_tests");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let ckpt_path = tmp.join("tiny_f32_parity.aockpt");
+    master.save(&ckpt_path).unwrap();
+
+    let run = |host_admission: bool| -> (Vec<Vec<u32>>, usize) {
+        let (handle, join) = engine::spawn(engine::EngineConfig {
+            artifacts_dir: dir.clone(),
+            ckpt_path: ckpt_path.clone(),
+            model: "tiny".into(),
+            scheme: "f32".into(),
+            eos_token: None,
+            host_admission,
+        });
+        let mut rxs = Vec::new();
+        for i in 0..4u64 {
+            let (tx, rx) = channel();
+            handle
+                .submit(SubmitReq {
+                    id: i,
+                    prompt_tokens: vec![30 + 7 * i as u32; 3 + i as usize],
+                    max_new_tokens: 6,
+                    temperature: 0.0,
+                    seed: i,
+                    tx,
+                    submitted_at: Instant::now(),
+                })
+                .unwrap();
+            rxs.push(rx);
+        }
+        let streams = rxs
+            .into_iter()
+            .map(|rx| {
+                let mut toks = Vec::new();
+                for ev in rx {
+                    match ev {
+                        Event::Token(t) => toks.push(t),
+                        Event::Done(_) => break,
+                        Event::Error(e) => panic!("error: {e}"),
+                    }
+                }
+                toks
+            })
+            .collect();
+        handle.shutdown();
+        let m = join.join().unwrap().unwrap();
+        (streams, m.host_splice_bursts)
+    };
+    let (device_streams, device_splices) = run(false);
+    let (host_streams, host_splices) = run(true);
+    assert_eq!(device_splices, 0, "device path must not splice");
+    assert!(host_splices > 0, "forced fallback must actually splice");
+    assert_eq!(
+        device_streams, host_streams,
+        "both admission paths must write identical cache rows"
+    );
+}
+
+/// Regression (seed collapse): the engine derived `seed ^ id` per
+/// request, which is 0 whenever seed == id (exactly what the server
+/// submits) — every temperature-sampled request shared one RNG stream.
+#[test]
+fn sampled_requests_diverge() {
+    let Some(dir) = artifacts_dir() else { return };
+    let master = tiny_master_ckpt(&dir);
+    let tmp = std::env::temp_dir().join("ao_int_tests");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let ckpt_path = tmp.join("tiny_f32_seed.aockpt");
+    master.save(&ckpt_path).unwrap();
+
+    let (handle, join) = engine::spawn(engine::EngineConfig {
+        artifacts_dir: dir,
+        ckpt_path,
+        model: "tiny".into(),
+        scheme: "f32".into(),
+        eos_token: None,
+        host_admission: false,
+    });
+    // identical prompts, temperature 1.0, seed == id (the collapsing case)
+    let mut rxs = Vec::new();
+    for id in 1..=2u64 {
+        let (tx, rx) = channel();
+        handle
+            .submit(SubmitReq {
+                id,
+                prompt_tokens: vec![77; 4],
+                max_new_tokens: 16,
+                temperature: 1.0,
+                seed: id,
+                tx,
+                submitted_at: Instant::now(),
+            })
+            .unwrap();
+        rxs.push(rx);
+    }
+    let streams: Vec<Vec<u32>> = rxs
+        .into_iter()
+        .map(|rx| {
+            let mut toks = Vec::new();
+            for ev in rx {
+                match ev {
+                    Event::Token(t) => toks.push(t),
+                    Event::Done(_) => break,
+                    Event::Error(e) => panic!("error: {e}"),
+                }
+            }
+            toks
+        })
+        .collect();
+    handle.shutdown();
+    join.join().unwrap().unwrap();
+    assert_eq!(streams[0].len(), 16);
+    assert_ne!(
+        streams[0], streams[1],
+        "two sampled requests with distinct ids must draw from distinct \
+         RNG streams"
+    );
+}
+
+/// Regression (NaN logits): a zero-token prompt produced lens[row] = 0 —
+/// a live row attending to zero positions. It must be rejected at
+/// admission with an error event, and not stall the requests behind it.
+#[test]
+fn empty_prompt_is_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let master = tiny_master_ckpt(&dir);
+    let tmp = std::env::temp_dir().join("ao_int_tests");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let ckpt_path = tmp.join("tiny_f32_empty.aockpt");
+    master.save(&ckpt_path).unwrap();
+
+    let (handle, join) = engine::spawn(engine::EngineConfig {
+        artifacts_dir: dir,
+        ckpt_path,
+        model: "tiny".into(),
+        scheme: "f32".into(),
+        eos_token: None,
+        host_admission: false,
+    });
+    let (bad_tx, bad_rx) = channel();
+    handle
+        .submit(SubmitReq {
+            id: 0,
+            prompt_tokens: vec![],
+            max_new_tokens: 4,
+            temperature: 0.0,
+            seed: 0,
+            tx: bad_tx,
+            submitted_at: Instant::now(),
+        })
+        .unwrap();
+    let (ok_tx, ok_rx) = channel();
+    handle
+        .submit(SubmitReq {
+            id: 1,
+            prompt_tokens: vec![42; 5],
+            max_new_tokens: 4,
+            temperature: 0.0,
+            seed: 1,
+            tx: ok_tx,
+            submitted_at: Instant::now(),
+        })
+        .unwrap();
+    let mut saw_error = false;
+    for ev in bad_rx {
+        match ev {
+            Event::Error(e) => {
+                assert!(e.contains("empty prompt"), "{e}");
+                saw_error = true;
+                break;
+            }
+            ev => panic!("empty prompt must error, got {ev:?}"),
+        }
+    }
+    assert!(saw_error);
+    let mut done = false;
+    for ev in ok_rx {
+        match ev {
+            Event::Done(info) => {
+                assert_eq!(info.n_generated, 4);
+                done = true;
+            }
+            Event::Error(e) => panic!("follower error: {e}"),
+            Event::Token(_) => {}
+        }
+    }
+    assert!(done, "follower stalled behind the rejected empty prompt");
+    handle.shutdown();
+    let m = join.join().unwrap().unwrap();
+    assert_eq!(m.n_rejected, 1);
+    assert_eq!(m.n_requests, 1);
 }
 
 #[test]

@@ -1,0 +1,249 @@
+//! Vendored no-op shim for the `xla` crate (feature `stub-xla`).
+//!
+//! Mirrors exactly the API subset `ao` uses so the whole workspace
+//! compiles and the host-only unit tests run in environments without a
+//! libxla distribution (offline CI, plain laptops). `Literal` is a real
+//! host-side implementation (shape + bytes) because the tensor layer
+//! round-trips through it; everything that would touch PJRT — clients,
+//! buffers, executables, HLO parsing — returns a uniform error instead.
+//!
+//! Selected by `ao`'s `stub-xla` cargo feature:
+//! `cargo test --no-default-features --features stub-xla`.
+
+use std::fmt;
+
+/// Error type matching the real binding's usage sites (`{e:?}` only).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn no_xla(what: &str) -> Error {
+    Error(format!(
+        "stub-xla: {what} requires the real `xla` backend (build without \
+         --features stub-xla and provide libxla)"
+    ))
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+impl ElementType {
+    fn byte_size(&self) -> Option<usize> {
+        Some(match self {
+            ElementType::Pred | ElementType::S8 | ElementType::U8 => 1,
+            ElementType::F16 | ElementType::Bf16 => 2,
+            ElementType::S32 | ElementType::U32 | ElementType::F32 => 4,
+            ElementType::S64 | ElementType::F64 => 8,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Host-side literal: a dtype, dims, and little-endian bytes. Functional
+/// (unlike the device types below) because checkpoint/tensor code creates
+/// and reads literals without ever touching a device.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    data: Vec<u8>,
+}
+
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn from_le_bytes(b: &[u8]) -> Self;
+}
+
+macro_rules! native {
+    ($t:ty, $ty:expr) => {
+        impl NativeType for $t {
+            const TY: ElementType = $ty;
+            fn from_le_bytes(b: &[u8]) -> Self {
+                <$t>::from_le_bytes(b.try_into().unwrap())
+            }
+        }
+    };
+}
+
+native!(f32, ElementType::F32);
+native!(f64, ElementType::F64);
+native!(i32, ElementType::S32);
+native!(i64, ElementType::S64);
+native!(i8, ElementType::S8);
+native!(u8, ElementType::U8);
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let n: usize = dims.iter().product();
+        let want = ty
+            .byte_size()
+            .map(|s| s * n)
+            .ok_or_else(|| no_xla("unsized element type"))?;
+        if data.len() != want {
+            return Err(Error(format!(
+                "stub-xla: literal data is {} bytes, shape {dims:?} {ty:?} \
+                 wants {want}",
+                data.len()
+            )));
+        }
+        Ok(Literal {
+            ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            data: data.to_vec(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { ty: self.ty, dims: self.dims.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::TY {
+            return Err(Error(format!(
+                "stub-xla: literal is {:?}, asked for {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        let sz = self.ty.byte_size().unwrap();
+        Ok(self.data.chunks_exact(sz).map(T::from_le_bytes).collect())
+    }
+
+    /// The stub never produces tuple literals, so there is nothing to
+    /// decompose.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(no_xla("Literal::decompose_tuple"))
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(no_xla("PjRtClient::cpu"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(no_xla("buffer_from_host_literal"))
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(no_xla("PjRtClient::compile"))
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(no_xla("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(no_xla("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(no_xla("HloModuleProto::from_text_file"))
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let data: Vec<u8> = [1.0f32, -2.5, 3.25]
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect();
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[3],
+            &data,
+        )
+        .unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[3]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, -2.5, 3.25]);
+        assert!(lit.to_vec::<i32>().is_err(), "dtype mismatch must error");
+    }
+
+    #[test]
+    fn literal_size_validation() {
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::S32,
+            &[2],
+            &[0u8; 7],
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn device_paths_error() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(PjRtBuffer.to_literal_sync().is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+    }
+}
