@@ -14,7 +14,9 @@ CARGOFLAGS ?=
 verify: build test fmt
 
 ## tier-1 gate on the vendored no-op XLA shim (no libxla required);
-## integration tests self-skip, host-only unit tests all run
+## integration tests self-skip, host-only unit tests all run — including
+## the quant-cache suite (quant::kvcache, the dtype-dispatched splice_kv
+## and the int8 scatter/splice parity tests in coordinator::engine)
 verify-stub:
 	$(MAKE) verify CARGOFLAGS="--no-default-features --features stub-xla"
 

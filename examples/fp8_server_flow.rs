@@ -59,6 +59,7 @@ fn main() -> anyhow::Result<()> {
         ckpt_path: fp8_path,
         model: "small".into(),
         scheme: "fp8dq_tensor".into(),
+        cache_scheme: engine::CacheScheme::F32,
         eos_token: None,
         host_admission: false,
     });

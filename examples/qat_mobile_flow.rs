@@ -70,6 +70,7 @@ fn main() -> anyhow::Result<()> {
         ckpt_path: packed_path,
         model: "small".into(),
         scheme: "8da4w-32".into(),
+        cache_scheme: engine::CacheScheme::F32,
         eos_token: None,
         host_admission: false,
     });

@@ -24,11 +24,14 @@ import jax.numpy as jnp
 from jax._src.lib import xla_client as xc
 
 from .model import (
+    CACHE_SCHEMES,
     MODEL_SIZES,
     ModelConfig,
     QuantScheme,
     admit,
+    admit_kv8,
     decode_step,
+    decode_step_kv8,
     init_params,
     nll,
     prefill,
@@ -171,7 +174,8 @@ def serving_args(cfg, scheme, batch, seq):
     return params, tokens, lens
 
 
-def export_serving(ex, cfg, scheme_tag, batch, prefill_seqs, smax):
+def export_serving(ex, cfg, scheme_tag, batch, prefill_seqs, smax,
+                   cache_schemes=("f32",)):
     scheme = QuantScheme.parse(scheme_tag)
     params, _, _ = serving_args(cfg, scheme, batch, 8)
     kvshape = (
@@ -179,11 +183,27 @@ def export_serving(ex, cfg, scheme_tag, batch, prefill_seqs, smax):
     )
     kc = jax.ShapeDtypeStruct(kvshape, jnp.float32)
     vc = jax.ShapeDtypeStruct(kvshape, jnp.float32)
+    # int8 cache scheme: value tensors in int8 plus per-(layer, slot,
+    # head, position) absmax scales with the head_dim axis reduced away
+    kc8 = jax.ShapeDtypeStruct(kvshape, jnp.int8)
+    vc8 = jax.ShapeDtypeStruct(kvshape, jnp.int8)
+    ks8 = jax.ShapeDtypeStruct(kvshape[:4], jnp.float32)
+    vs8 = jax.ShapeDtypeStruct(kvshape[:4], jnp.float32)
+    # the engine binds cache buffers positionally in this order; scales
+    # ride directly behind their value tensor so both donate cleanly
+    cache_args = {
+        "f32": ((kc, vc), ("kcache", "vcache")),
+        "int8": ((kc8, ks8, vc8, vs8),
+                 ("kcache", "kscale", "vcache", "vscale")),
+    }
+    cache_suffix = {"f32": "", "int8": "_kv8"}
 
     for seq in prefill_seqs:
         tokens = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
         lens = jax.ShapeDtypeStruct((batch,), jnp.int32)
         slot_ids = jax.ShapeDtypeStruct((batch,), jnp.int32)
+        # prefill is cache-scheme agnostic (fresh K/V leave in f32; the
+        # admit graphs / host fallback quantize on write)
         ex.export(
             f"prefill_{scheme_tag}_{cfg.name}_b{batch}_s{seq}",
             lambda p, t, l: prefill(p, t, l, cfg, scheme, smax),
@@ -194,29 +214,46 @@ def export_serving(ex, cfg, scheme_tag, batch, prefill_seqs, smax):
         )
         # device-resident admission: prefill + per-slot scatter into the
         # persistent cache, so admission never round-trips the cache
-        ex.export(
-            f"admit_{scheme_tag}_{cfg.name}_b{batch}_s{seq}",
-            lambda p, k, v, t, l, s: admit(
-                p, k, v, t, l, s, cfg, scheme, smax
-            ),
-            (params, kc, vc, tokens, lens, slot_ids),
-            ("params", "kcache", "vcache", "tokens", "lens", "slot_ids"),
-            {"kind": "admit", "model": cfg.name, "scheme": scheme_tag,
-             "batch": batch, "seq": seq, "smax": smax},
-            donate={1: "kcache", 2: "vcache"},
-        )
+        for ctag in cache_schemes:
+            (cargs, cnames) = cache_args[ctag]
+            fn = (
+                (lambda p, k, ks, v, vs, t, l, s: admit_kv8(
+                    p, k, ks, v, vs, t, l, s, cfg, scheme, smax))
+                if ctag == "int8"
+                else (lambda p, k, v, t, l, s: admit(
+                    p, k, v, t, l, s, cfg, scheme, smax))
+            )
+            ex.export(
+                f"admit_{scheme_tag}_{cfg.name}_b{batch}_s{seq}"
+                f"{cache_suffix[ctag]}",
+                fn,
+                (params,) + cargs + (tokens, lens, slot_ids),
+                ("params",) + cnames + ("tokens", "lens", "slot_ids"),
+                {"kind": "admit", "model": cfg.name, "scheme": scheme_tag,
+                 "batch": batch, "seq": seq, "smax": smax, "cache": ctag},
+                donate={i + 1: n for i, n in enumerate(cnames)},
+            )
 
     token = jax.ShapeDtypeStruct((batch,), jnp.int32)
     pos = jax.ShapeDtypeStruct((batch,), jnp.int32)
-    ex.export(
-        f"decode_{scheme_tag}_{cfg.name}_b{batch}",
-        lambda p, k, v, t, q: decode_step(p, k, v, t, q, cfg, scheme),
-        (params, kc, vc, token, pos),
-        ("params", "kcache", "vcache", "token", "pos"),
-        {"kind": "decode", "model": cfg.name, "scheme": scheme_tag,
-         "batch": batch, "smax": smax},
-        donate={1: "kcache", 2: "vcache"},
-    )
+    for ctag in cache_schemes:
+        (cargs, cnames) = cache_args[ctag]
+        fn = (
+            (lambda p, k, ks, v, vs, t, q: decode_step_kv8(
+                p, k, ks, v, vs, t, q, cfg, scheme))
+            if ctag == "int8"
+            else (lambda p, k, v, t, q: decode_step(
+                p, k, v, t, q, cfg, scheme))
+        )
+        ex.export(
+            f"decode_{scheme_tag}_{cfg.name}_b{batch}{cache_suffix[ctag]}",
+            fn,
+            (params,) + cargs + (token, pos),
+            ("params",) + cnames + ("token", "pos"),
+            {"kind": "decode", "model": cfg.name, "scheme": scheme_tag,
+             "batch": batch, "smax": smax, "cache": ctag},
+            donate={i + 1: n for i, n in enumerate(cnames)},
+        )
 
     t_eval = jax.ShapeDtypeStruct((batch, smax), jnp.int32)
     lens_b = jax.ShapeDtypeStruct((batch,), jnp.int32)
@@ -354,6 +391,9 @@ def main():
                     help="model sizes that get the full serving scheme set")
     ap.add_argument("--schemes", default=",".join(DEFAULT_SCHEMES))
     ap.add_argument("--recipes", default=",".join(DEFAULT_RECIPES))
+    ap.add_argument("--kv-cache", default="f32,int8",
+                    help="comma list of KV-cache schemes to export "
+                         "decode/admit artifacts for (f32, int8)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--train-batch", type=int, default=4)
     ap.add_argument("--train-seq", type=int, default=64)
@@ -367,6 +407,11 @@ def main():
     schemes = [s for s in args.schemes.split(",") if s]
     recipes = [r for r in args.recipes.split(",") if r]
     prefill_seqs = [int(s) for s in args.prefill_seqs.split(",")]
+    cache_schemes = tuple(c for c in args.kv_cache.split(",") if c)
+    for c in cache_schemes:
+        if c not in CACHE_SCHEMES:
+            ap.error(f"unknown --kv-cache scheme '{c}' "
+                     f"(expected one of {', '.join(CACHE_SCHEMES)})")
 
     t0 = time.time()
     for size in sizes:
@@ -376,9 +421,11 @@ def main():
         size_schemes = (
             schemes if size in args.serve_size.split(",") else ["f32", "8da4w-32"]
         )
-        print(f"[{size}] serving schemes: {size_schemes}")
+        print(f"[{size}] serving schemes: {size_schemes} "
+              f"(kv-cache: {list(cache_schemes)})")
         for tag in size_schemes:
-            export_serving(ex, cfg, tag, args.batch, prefill_seqs, smax)
+            export_serving(ex, cfg, tag, args.batch, prefill_seqs, smax,
+                           cache_schemes)
         print(f"[{size}] training recipes: {recipes}")
         for recipe in recipes:
             export_training(

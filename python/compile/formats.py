@@ -183,6 +183,37 @@ def dequantize_affine(q, scale, zp):
 
 
 # ---------------------------------------------------------------------------
+# Int8 KV-cache quantization (serving): symmetric absmax over the last axis.
+#
+# The serving engine's int8 `CacheScheme` stores the KV cache as an int8
+# value tensor plus an f32 scale tensor with the head_dim axis reduced away
+# — one scale per (layer, slot, head, position). These helpers are the
+# single definition of that numeric contract; the Rust host-splice fallback
+# mirrors them bit-for-bit in `rust/src/quant/kvcache.rs` (both sides use
+# round-half-to-even and the same 1e-12 amax floor, so the device scatter
+# and the host splice write identical bytes).
+# ---------------------------------------------------------------------------
+
+KV_QMAX = 127
+
+
+def kv_quantize(x):
+    """x [..., Dh] f32 -> (q int8 [..., Dh], scale f32 [...]).
+
+    Symmetric per-row absmax: scale = max(|x|)/127 over the last axis.
+    """
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scale = int_symmetric_qparams(amax, 8)
+    q = jnp.clip(jnp.round(x / scale[..., None]), -KV_QMAX, KV_QMAX)
+    return q.astype(jnp.int8), scale
+
+
+def kv_dequantize(q, scale):
+    """Inverse of kv_quantize (up to rounding): q * scale."""
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+# ---------------------------------------------------------------------------
 # NF4 — the QLoRA "NormalFloat-4" data type (paper §1: "TorchAO also
 # provides the NF4 data type for QLoRA"). 16 fixed quantiles of a standard
 # normal, scaled per block by absmax. Values from Dettmers et al. 2023.

@@ -17,6 +17,13 @@ KV caches are [L, B, Hkv, Smax, Dh] and functionally updated — the Rust
 engine keeps them device-resident between steps (`execute_b`); with the
 admit graph the cache never visits the host at all.
 
+Quantized KV cache (`CacheScheme` int8): `admit_kv8` / `decode_step_kv8`
+are the same graphs with the persistent cache held as an int8 value tensor
+[L,B,Hkv,Smax,Dh] plus an f32 absmax scale tensor [L,B,Hkv,Smax] (one
+scale per head per position, formats.kv_quantize). Writes quantize, the
+attention read dequantizes — resident cache bytes and admission splice
+traffic shrink ~4x while prefill/nll stay f32 and scheme-agnostic.
+
 Everything is f32: this testbed's CPU PJRT has no bf16 arithmetic advantage,
 so f32 stands in for the paper's BF16 baseline (DESIGN.md §2).
 """
@@ -27,7 +34,14 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from . import formats as F
 from . import kernels as K
+
+# KV-cache storage schemes the serving stack understands (mirrors the Rust
+# engine's `CacheScheme`): f32 keeps the paired decode/admit contract of
+# (kcache, vcache); int8 stores (kcache i8, kscale f32, vcache i8, vscale
+# f32) with kv_quantize/kv_dequantize at the write/read boundaries.
+CACHE_SCHEMES = ("f32", "int8")
 
 # ---------------------------------------------------------------------------
 # Config
@@ -326,6 +340,27 @@ def admit(params, kcache, vcache, tokens, lens, slot_ids, cfg: ModelConfig,
     return logits, kcache, vcache
 
 
+def admit_kv8(params, kcache, kscale, vcache, vscale, tokens, lens, slot_ids,
+              cfg: ModelConfig, scheme: QuantScheme, smax: int):
+    """`admit` for the int8 cache scheme: prefill in f32, quantize the
+    fresh rows per (layer, row, head, position) with absmax scales, and
+    scatter values + scales into the claimed cache rows.
+
+    kcache/vcache [L,B,Hkv,Smax,Dh] int8; kscale/vscale [L,B,Hkv,Smax]
+    f32. Dummy rows (slot_ids[b] >= B) are dropped from both tensors, so
+    an idle slot keeps its values AND its scales. Returns
+    (logits, K', Ks', V', Vs').
+    """
+    logits, ks, vs = prefill(params, tokens, lens, cfg, scheme, smax)
+    qk, sk = F.kv_quantize(ks)
+    qv, sv = F.kv_quantize(vs)
+    kcache = kcache.at[:, slot_ids].set(qk, mode="drop")
+    kscale = kscale.at[:, slot_ids].set(sk, mode="drop")
+    vcache = vcache.at[:, slot_ids].set(qv, mode="drop")
+    vscale = vscale.at[:, slot_ids].set(sv, mode="drop")
+    return logits, kcache, kscale, vcache, vscale
+
+
 # ---------------------------------------------------------------------------
 # Decode
 # ---------------------------------------------------------------------------
@@ -340,8 +375,29 @@ def decode_step(params, kcache, vcache, token, pos, cfg: ModelConfig,
     Slots whose pos is stale simply produce logits that the Rust engine
     ignores — static shapes are the serving contract (DESIGN.md §4).
     """
+    return _decode_impl(
+        params, (kcache, vcache), token, pos, cfg, scheme, quantized=False
+    )
+
+
+def decode_step_kv8(params, kcache, kscale, vcache, vscale, token, pos,
+                    cfg: ModelConfig, scheme: QuantScheme):
+    """`decode_step` for the int8 cache scheme.
+
+    kcache/vcache [L,B,Hkv,Smax,Dh] int8, kscale/vscale [L,B,Hkv,Smax]
+    f32. The fresh K/V row is quantized on write (per-head absmax over
+    Dh); the attention read dequantizes the whole layer cache. Returns
+    (logits [B,V], K', Ks', V', Vs').
+    """
+    return _decode_impl(
+        params, (kcache, kscale, vcache, vscale), token, pos, cfg, scheme,
+        quantized=True,
+    )
+
+
+def _decode_impl(params, cache, token, pos, cfg, scheme, quantized):
     b = token.shape[0]
-    smax = kcache.shape[3]
+    smax = cache[0].shape[3]
     x = params["tok_emb"][token][:, None]  # [B,1,D]
     cos, sin = rope_tables(cfg, pos)  # [B, Dh/2]
     cos, sin = cos[:, None], sin[:, None]  # [B,1,Dh/2]
@@ -352,18 +408,33 @@ def decode_step(params, kcache, vcache, token, pos, cfg: ModelConfig,
     barange = jnp.arange(b)
 
     def layer_fn(h, carry):
-        lp, kc, vc = carry
+        lp = carry[0]
         hn = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
         q = _project(hn, lp["wq"], scheme, cfg, cfg.n_heads)  # [B,H,1,Dh]
         kk = _project(hn, lp["wk"], scheme, cfg, cfg.n_kv_heads)
         vv = _project(hn, lp["wv"], scheme, cfg, cfg.n_kv_heads)
         q = apply_rope(q, cos[:, :, None], sin[:, :, None])
         kk = apply_rope(kk, cos[:, :, None], sin[:, :, None])
-        kc = kc.at[barange, :, pos].set(kk[:, :, 0])
-        vc = vc.at[barange, :, pos].set(vv[:, :, 0])
+        if quantized:
+            kc, ksc, vc, vsc = carry[1:]
+            qk, sk = F.kv_quantize(kk[:, :, 0])  # [B,Hkv,Dh] / [B,Hkv]
+            qv, sv = F.kv_quantize(vv[:, :, 0])
+            kc = kc.at[barange, :, pos].set(qk)
+            ksc = ksc.at[barange, :, pos].set(sk)
+            vc = vc.at[barange, :, pos].set(qv)
+            vsc = vsc.at[barange, :, pos].set(sv)
+            keys = F.kv_dequantize(kc, ksc)  # [B,Hkv,Smax,Dh]
+            vals = F.kv_dequantize(vc, vsc)
+            cache_out = (kc, ksc, vc, vsc)
+        else:
+            kc, vc = carry[1:]
+            kc = kc.at[barange, :, pos].set(kk[:, :, 0])
+            vc = vc.at[barange, :, pos].set(vv[:, :, 0])
+            keys, vals = kc, vc
+            cache_out = (kc, vc)
         rep = cfg.n_heads // cfg.n_kv_heads
-        keys_r = jnp.repeat(kc, rep, axis=1)  # [B,H,Smax,Dh]
-        vals_r = jnp.repeat(vc, rep, axis=1)
+        keys_r = jnp.repeat(keys, rep, axis=1)  # [B,H,Smax,Dh]
+        vals_r = jnp.repeat(vals, rep, axis=1)
         scores = jnp.einsum("bhsd,bhtd->bhst", q, keys_r) / cfg.head_dim**0.5
         scores = scores + mask
         attn = jax.nn.softmax(scores, axis=-1)
@@ -374,14 +445,14 @@ def decode_step(params, kcache, vcache, token, pos, cfg: ModelConfig,
         ).reshape(b, 1, -1)
         h = h + a
         h = h + mlp_block(h, lp, scheme, cfg)
-        return h, (kc, vc)
+        return h, cache_out
 
-    x, (kout, vout) = jax.lax.scan(
-        layer_fn, x, (params["layers"], kcache, vcache)
+    x, cache_out = jax.lax.scan(
+        layer_fn, x, (params["layers"],) + cache
     )
     x = rms_norm(x[:, 0], params["out_norm"], cfg.norm_eps)
     logits = quantized_linear(x, params["lm_head"], scheme)
-    return logits, kout, vout
+    return (logits,) + cache_out
 
 
 # ---------------------------------------------------------------------------

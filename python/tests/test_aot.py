@@ -21,7 +21,7 @@ def exported(tmp_path_factory):
             "--schemes", "f32,int8wo",
             "--recipes", "bf16",
             "--batch", "2", "--train-batch", "2", "--train-seq", "16",
-            "--prefill-seqs", "16", "--no-fig3",
+            "--prefill-seqs", "16", "--kv-cache", "f32,int8", "--no-fig3",
         ],
         cwd=ROOT, capture_output=True, text=True, timeout=560,
     )
@@ -74,52 +74,77 @@ def test_train_artifact_roundtrip_structure(exported):
 
 def test_decode_kv_shapes(exported):
     _, manifest = exported
-    dec = [a for a in manifest["artifacts"] if a["kind"] == "decode"][0]
-    kc = [i for i in dec["inputs"] if i["name"] == "kcache"][0]
-    model = manifest["models"][dec["model"]]
-    assert kc["shape"] == [
-        model["n_layers"], dec["batch"], model["n_kv_heads"],
-        dec["smax"], model["head_dim"],
-    ]
+    decodes = [a for a in manifest["artifacts"] if a["kind"] == "decode"]
+    assert {a.get("cache", "f32") for a in decodes} == {"f32", "int8"}
+    for dec in decodes:
+        kc = [i for i in dec["inputs"] if i["name"] == "kcache"][0]
+        model = manifest["models"][dec["model"]]
+        kvshape = [
+            model["n_layers"], dec["batch"], model["n_kv_heads"],
+            dec["smax"], model["head_dim"],
+        ]
+        assert kc["shape"] == kvshape
+        if dec.get("cache", "f32") == "int8":
+            assert kc["dtype"] == "s8"
+            ks = [i for i in dec["inputs"] if i["name"] == "kscale"][0]
+            assert ks["shape"] == kvshape[:4]
+            assert ks["dtype"] == "f32"
+        else:
+            assert kc["dtype"] == "f32"
 
 
 def test_admit_artifact_contract(exported):
-    """Every prefill bucket ships a matching admit artifact whose trailing
-    inputs and cache-shaped outputs follow the engine's binding order."""
+    """Every prefill bucket ships a matching admit artifact per cache
+    scheme whose trailing inputs and cache-shaped outputs follow the
+    engine's binding order."""
     _, manifest = exported
     prefills = [a for a in manifest["artifacts"] if a["kind"] == "prefill"]
     admits = {
-        (a["model"], a.get("scheme"), a["seq"]): a
+        (a["model"], a.get("scheme"), a["seq"], a.get("cache", "f32")): a
         for a in manifest["artifacts"]
         if a["kind"] == "admit"
     }
     assert admits, "exporter must emit admit artifacts"
+    cache_inputs = {
+        "f32": ["kcache", "vcache"],
+        "int8": ["kcache", "kscale", "vcache", "vscale"],
+    }
     for p in prefills:
-        a = admits[(p["model"], p.get("scheme"), p["seq"])]
-        names = [i["name"] for i in a["inputs"]]
-        assert names[-5:] == [
-            "kcache", "vcache", "tokens", "lens", "slot_ids"
-        ], a["name"]
-        by_name = {i["name"]: i for i in a["inputs"]}
-        kshape = by_name["kcache"]["shape"]
-        assert by_name["vcache"]["shape"] == kshape
-        assert by_name["tokens"]["shape"] == [a["batch"], a["seq"]]
-        assert by_name["slot_ids"]["shape"] == [a["batch"]]
-        assert by_name["slot_ids"]["dtype"] == "s32"
-        # outputs: (logits, kcache', vcache') with cache shapes preserved
-        assert len(a["outputs"]) == 3
-        assert a["outputs"][1]["shape"] == kshape
-        assert a["outputs"][2]["shape"] == kshape
+        for cache, cnames in cache_inputs.items():
+            a = admits[(p["model"], p.get("scheme"), p["seq"], cache)]
+            names = [i["name"] for i in a["inputs"]]
+            trailing = cnames + ["tokens", "lens", "slot_ids"]
+            assert names[-len(trailing):] == trailing, a["name"]
+            by_name = {i["name"]: i for i in a["inputs"]}
+            kshape = by_name["kcache"]["shape"]
+            assert by_name["vcache"]["shape"] == kshape
+            assert by_name["tokens"]["shape"] == [a["batch"], a["seq"]]
+            assert by_name["slot_ids"]["shape"] == [a["batch"]]
+            assert by_name["slot_ids"]["dtype"] == "s32"
+            # outputs: (logits, caches') with cache shapes preserved
+            assert len(a["outputs"]) == 1 + len(cnames)
+            for i, n in enumerate(cnames):
+                assert a["outputs"][1 + i]["shape"] == by_name[n]["shape"]
+                assert a["outputs"][1 + i]["dtype"] == by_name[n]["dtype"]
+            if cache == "int8":
+                assert by_name["kcache"]["dtype"] == "s8"
+                assert by_name["kscale"]["shape"] == kshape[:4]
 
 
 def test_donation_metadata(exported):
-    """decode/admit declare cache donation pairs the runtime can alias."""
+    """decode/admit declare cache donation pairs (values AND scales under
+    int8) the runtime can alias."""
     _, manifest = exported
+    cache_inputs = {
+        "f32": ["kcache", "vcache"],
+        "int8": ["kcache", "kscale", "vcache", "vscale"],
+    }
     for a in manifest["artifacts"]:
         if a["kind"] not in ("decode", "admit"):
             assert "donate" not in a
             continue
         by_name = {i["name"]: idx for idx, i in enumerate(a["inputs"])}
-        assert a["donate"] == [
-            [1, by_name["kcache"]], [2, by_name["vcache"]]
-        ], a["name"]
+        cnames = cache_inputs[a.get("cache", "f32")]
+        assert a["donate"] == sorted(
+            [i + 1, by_name[n]] for i, n in enumerate(cnames)
+        ), a["name"]

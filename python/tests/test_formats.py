@@ -6,6 +6,10 @@ import os
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# hypothesis is an optional dev dependency: skip the property sweeps (not
+# error the whole module) where it is absent. CI's python job installs it.
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

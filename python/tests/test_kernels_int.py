@@ -5,6 +5,10 @@ Hypothesis sweeps shapes/group sizes; fixed-seed numpy drives the data.
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+# hypothesis is optional: skip (don't error) when missing
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

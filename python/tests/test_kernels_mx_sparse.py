@@ -3,6 +3,9 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# hypothesis is optional: skip (don't error) when missing
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

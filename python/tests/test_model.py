@@ -6,11 +6,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from compile import formats as F
 from compile.model import (
     MODEL_SIZES,
     QuantScheme,
     admit,
+    admit_kv8,
     decode_step,
+    decode_step_kv8,
     init_params,
     linear_shapes,
     nll,
@@ -173,6 +176,108 @@ def test_quantized_prefill_close_to_f32(params, rng, tag):
     # top-1 prediction should rarely change on 4+ bit quantization of a
     # random-init tiny model; allow a loose numeric band
     assert float(jnp.abs(pq - pf).mean()) < 0.5
+
+
+def test_kv_quantize_roundtrip_bounded(rng):
+    """Per-head absmax int8: reconstruction error <= scale/2 per element
+    (mirrors the Rust proptest `prop_kv_int8_roundtrip_error_bounded`)."""
+    x = jnp.asarray(rng.normal(size=(4, 3, 8, 16)) * 2.5, jnp.float32)
+    q, s = F.kv_quantize(x)
+    assert q.dtype == jnp.int8
+    assert s.shape == x.shape[:-1]
+    err = np.abs(np.asarray(F.kv_dequantize(q, s)) - np.asarray(x))
+    bound = np.asarray(s)[..., None] * 0.5 + 1e-7
+    assert (err <= bound).all(), float((err - bound).max())
+    # zero rows quantize to exact zeros (the padded cache region)
+    qz, sz = F.kv_quantize(jnp.zeros((2, 4)))
+    np.testing.assert_array_equal(np.asarray(qz), 0)
+    assert not bool(jnp.isnan(sz).any())
+
+
+def test_decode_step_kv8_close_to_f32(params, rng):
+    """The int8 cache scheme is a numerics change, not a model change:
+    decode logits stay near the f32-cache logits on the same state."""
+    sch = QuantScheme("f32")
+    toks = _toks(rng, 2, 16)
+    lens = jnp.asarray([12, 9], jnp.int32)
+    logits, k, v = prefill(params, toks, lens, CFG, sch, SMAX)
+    qk, sk = F.kv_quantize(k)
+    qv, sv = F.kv_quantize(v)
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    lf, _, _ = decode_step(params, k, v, nxt, lens, CFG, sch)
+    lq, k2, s2, v2, u2 = decode_step_kv8(
+        params, qk, sk, qv, sv, nxt, lens, CFG, sch
+    )
+    assert k2.dtype == jnp.int8 and s2.dtype == jnp.float32
+    assert not bool(jnp.isnan(lq).any())
+    dq = jax.nn.log_softmax(lq)
+    df = jax.nn.log_softmax(lf)
+    assert float(jnp.abs(dq - df).mean()) < 0.05
+
+
+def test_admit_kv8_scatter_matches_host_splice(params, rng):
+    """int8 variant of the admission parity contract: admit_kv8 ==
+    prefill + kv_quantize + per-row splice of values AND scales — the
+    exact bytes the Rust engine's quantized `splice_kv` fallback writes
+    (rust test: `quantized_scatter_matches_splice`)."""
+    sch = QuantScheme("f32")
+    b, s = 3, 8
+    toks = _toks(rng, b, s)
+    lens = jnp.asarray([8, 5, 1], jnp.int32)
+    shape = (CFG.n_layers, b, CFG.n_kv_heads, SMAX, CFG.head_dim)
+    kc = jnp.asarray(
+        rng.integers(-127, 128, size=shape), jnp.int8
+    )
+    vc = jnp.asarray(rng.integers(-127, 128, size=shape), jnp.int8)
+    ks0 = jnp.asarray(rng.uniform(0.01, 1.0, size=shape[:4]), jnp.float32)
+    vs0 = jnp.asarray(rng.uniform(0.01, 1.0, size=shape[:4]), jnp.float32)
+    sids = jnp.asarray([2, 0, b], jnp.int32)
+    lg, ka, ksa, va, vsa = admit_kv8(
+        params, kc, ks0, vc, vs0, toks, lens, sids, CFG, sch, SMAX
+    )
+    lp, ks, vs = prefill(params, toks, lens, CFG, sch, SMAX)
+    qk, sk = F.kv_quantize(ks)
+    qv, sv = F.kv_quantize(vs)
+    kr, sr = np.asarray(kc).copy(), np.asarray(ks0).copy()
+    vr, ur = np.asarray(vc).copy(), np.asarray(vs0).copy()
+    for row, dst in [(0, 2), (1, 0)]:
+        kr[:, dst] = np.asarray(qk)[:, row]
+        sr[:, dst] = np.asarray(sk)[:, row]
+        vr[:, dst] = np.asarray(qv)[:, row]
+        ur[:, dst] = np.asarray(sv)[:, row]
+    np.testing.assert_array_equal(np.asarray(ka), kr)
+    np.testing.assert_array_equal(np.asarray(ksa), sr)
+    np.testing.assert_array_equal(np.asarray(va), vr)
+    np.testing.assert_array_equal(np.asarray(vsa), ur)
+    np.testing.assert_array_equal(np.asarray(lg), np.asarray(lp))
+    # the dummy row (slot b) left values and scales of slot 1 untouched
+    np.testing.assert_array_equal(np.asarray(ka)[:, 1], np.asarray(kc)[:, 1])
+    np.testing.assert_array_equal(
+        np.asarray(ksa)[:, 1], np.asarray(ks0)[:, 1]
+    )
+
+
+def test_kv8_greedy_decode_matches_f32_stream(params, rng):
+    """Scripted parity: a short greedy rollout under the int8 cache
+    produces the same token stream as the f32 cache (the python half of
+    the integration test `kv_cache_schemes_agree`)."""
+    sch = QuantScheme("f32")
+    toks = _toks(rng, 2, 16)
+    lens = jnp.asarray([12, 9], jnp.int32)
+    logits, k, v = prefill(params, toks, lens, CFG, sch, SMAX)
+    qk, sk = F.kv_quantize(k)
+    qv, sv = F.kv_quantize(v)
+    lf, lq = logits, logits
+    pos = lens
+    for _ in range(4):
+        nf = jnp.argmax(lf, -1).astype(jnp.int32)
+        nq = jnp.argmax(lq, -1).astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(nf), np.asarray(nq))
+        lf, k, v = decode_step(params, k, v, nf, pos, CFG, sch)
+        lq, qk, sk, qv, sv = decode_step_kv8(
+            params, qk, sk, qv, sv, nq, pos, CFG, sch
+        )
+        pos = pos + 1
 
 
 def test_quantized_decode_runs(params, rng):

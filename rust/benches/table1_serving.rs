@@ -15,6 +15,7 @@ use ao::benchsupport as bs;
 use ao::coordinator::metrics::fmt_bytes;
 use ao::data::workload::WorkloadSpec;
 use ao::perfmodel;
+use ao::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
     ao::util::log::init();
@@ -23,8 +24,13 @@ fn main() -> anyhow::Result<()> {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(12usize);
+    let kv_cache = bs::bench_cache_scheme()?;
     println!("=== Table 1: serving FP8 vs BF16 ===");
-    println!("model=small, {n_requests} ShareGPT-shaped requests, greedy\n");
+    println!(
+        "model=small, {n_requests} ShareGPT-shaped requests, greedy, \
+         kv-cache={} (AO_KV_CACHE to switch)\n",
+        kv_cache.tag()
+    );
 
     let (master, _) = bs::trained_ckpt("small", "bf16", steps)?;
     let spec = WorkloadSpec {
@@ -53,9 +59,11 @@ fn main() -> anyhow::Result<()> {
         // device-resident cache: per decode step only logits come down,
         // and per admission prefill only the row vectors go up
         xfer_lines.push(format!(
-            "  {scheme}: host xfer h2d={} d2h={}; per decode step \
-             h2d={} d2h={} ({} steps); per prefill h2d={} d2h={} \
-             ({} prefills, {} host splices)",
+            "  {scheme}: cache[{} resident={}] host xfer h2d={} d2h={}; \
+             per decode step h2d={} d2h={} ({} steps); per prefill \
+             h2d={} d2h={} ({} prefills, {} host splices)",
+            m.cache_scheme,
+            fmt_bytes(m.cache_resident_bytes),
             fmt_bytes(m.h2d_bytes),
             fmt_bytes(m.d2h_bytes),
             fmt_bytes(m.decode_h2d_per_step() as u64),
@@ -103,6 +111,42 @@ fn main() -> anyhow::Result<()> {
     println!("\nhost-transfer accounting (cache stays device-resident):");
     for line in &xfer_lines {
         println!("{line}");
+    }
+
+    // KV-cache bytes by scheme, straight from the manifest the engine
+    // binds: "resident" is the device allocation (values + scales), and
+    // the host-admission splice fallback moves exactly those bytes down
+    // and back up per burst. This is where the int8 scheme's ~4x lands
+    // (Dh=32 for `small`: f32 4*Dh vs int8 Dh+4 bytes per position).
+    println!("\nKV-cache accounting by scheme (decode artifact, f32 weights):");
+    let runtime = Runtime::open(&ao::default_artifacts_dir())?;
+    let mut resident: Vec<(String, u64)> = Vec::new();
+    for spec in runtime.manifest.find("decode", "small", Some("f32")) {
+        let bytes: u64 = spec
+            .cache_input_names()?
+            .iter()
+            .map(|n| -> anyhow::Result<u64> {
+                let idx = spec.input_index(n)?;
+                Ok(spec.inputs[idx].byte_size().unwrap_or(0) as u64)
+            })
+            .sum::<anyhow::Result<u64>>()?;
+        println!(
+            "  {:<5} resident={} splice-burst traffic={} (down+up)",
+            spec.cache,
+            fmt_bytes(bytes),
+            fmt_bytes(2 * bytes),
+        );
+        resident.push((spec.cache.clone(), bytes));
+    }
+    let get = |tag: &str| {
+        resident.iter().find(|(c, _)| c == tag).map(|&(_, b)| b)
+    };
+    if let (Some(f32b), Some(i8b)) = (get("f32"), get("int8")) {
+        println!(
+            "  f32/int8 ratio: {:.2}x smaller resident cache and \
+             per-burst splice traffic",
+            f32b as f64 / i8b as f64
+        );
     }
 
     // H100 projection: decode GEMVs are memory-bound; fp8 halves the weight

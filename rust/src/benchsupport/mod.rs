@@ -6,7 +6,7 @@
 //! tiny table printer.
 
 use crate::ckpt::Checkpoint;
-use crate::coordinator::engine::{self, EngineConfig};
+use crate::coordinator::engine::{self, CacheScheme, EngineConfig};
 use crate::coordinator::metrics::MetricsCollector;
 use crate::coordinator::request::{Event, SubmitReq};
 use crate::data::corpus::standard_corpus;
@@ -84,6 +84,14 @@ pub fn quantized_ckpt(
     Ok((path, report))
 }
 
+/// KV-cache scheme benches serve with: AO_KV_CACHE (f32 default).
+pub fn bench_cache_scheme() -> Result<CacheScheme> {
+    match std::env::var("AO_KV_CACHE") {
+        Ok(v) if !v.is_empty() => CacheScheme::parse(&v),
+        _ => Ok(CacheScheme::F32),
+    }
+}
+
 /// Run a full serving workload in-process; returns engine metrics
 /// (including host↔device transfer bytes — set AO_BENCH_REPORT=1 to
 /// print the full engine report line per run).
@@ -100,6 +108,9 @@ pub fn serve_workload(
         ckpt_path: ckpt_path.clone(),
         model: model.into(),
         scheme: scheme.into(),
+        // AO_KV_CACHE=int8 serves the same workload on the quantized
+        // cache, so both schemes are benchable from one binary
+        cache_scheme: bench_cache_scheme()?,
         eos_token: None,
         // AO_HOST_ADMISSION=1 A/Bs the admission paths in any bench
         host_admission: std::env::var("AO_HOST_ADMISSION")

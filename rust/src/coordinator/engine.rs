@@ -13,17 +13,28 @@
 //!
 //! ## What lives where
 //!
-//! Weights are uploaded to device buffers once at startup. The KV caches
-//! (`kcache`/`vcache`, shape `[L, B, Hkv, Smax, Dh]` f32) are uploaded
-//! once as zeros and then live on the device: each decode step takes the
-//! previous step's output buffers as inputs and produces fresh ones —
-//! the cache never crosses the host boundary on the token hot path. The
-//! only per-token transfers are two `[B]` s32 vectors up (token, pos) and
-//! one `[B, vocab]` logits matrix down, which the transfer metrics in the
-//! engine report make auditable. When the runtime's donation probe
-//! passes, the cache arguments are additionally compiled as input-output
-//! aliases, so each step reuses the previous cache allocation instead of
-//! alloc+free (see `runtime`).
+//! Weights are uploaded to device buffers once at startup. The KV cache
+//! is uploaded once as zeros and then lives on the device: each decode
+//! step takes the previous step's output buffers as inputs and produces
+//! fresh ones — the cache never crosses the host boundary on the token
+//! hot path. Its storage is picked by `EngineConfig::cache_scheme`:
+//!
+//! - `f32`: `kcache`/`vcache` `[L, B, Hkv, Smax, Dh]` f32 (the paired
+//!   two-buffer contract of PR 1/2);
+//! - `int8`: the same shapes in int8 plus f32 absmax scale tensors
+//!   `[L, B, Hkv, Smax]` (one scale per head per position) — ~4x fewer
+//!   resident cache bytes and ~4x less traffic on every path that still
+//!   moves the cache (the host-admission fallback). The graphs quantize
+//!   on write and dequantize on the attention read
+//!   (`model.decode_step_kv8`); numerics are shared bit-for-bit with the
+//!   host splice via `quant::kvcache`.
+//!
+//! The only per-token transfers are two `[B]` s32 vectors up (token,
+//! pos) and one `[B, vocab]` logits matrix down, which the transfer
+//! metrics in the engine report make auditable. When the runtime's
+//! donation probe passes, the cache arguments (values AND scales) are
+//! additionally compiled as input-output aliases, so each step reuses
+//! the previous cache allocation instead of alloc+free (see `runtime`).
 //!
 //! ## Admission dataflow
 //!
@@ -57,12 +68,47 @@ use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::time::Instant;
 
+/// How the device-resident KV cache is stored (see the module docs).
+/// Mirrors the exporter's `--kv-cache` vocabulary: artifacts carry a
+/// `cache` tag and the engine binds only matching decode/admit entries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CacheScheme {
+    /// paired f32 value tensors (kcache, vcache) — the parity baseline
+    #[default]
+    F32,
+    /// int8 value tensors + f32 per-(layer, slot, head, position) absmax
+    /// scales (kcache, kscale, vcache, vscale)
+    Int8,
+}
+
+impl CacheScheme {
+    pub fn parse(s: &str) -> Result<CacheScheme> {
+        match s {
+            "f32" => Ok(CacheScheme::F32),
+            "int8" => Ok(CacheScheme::Int8),
+            other => bail!(
+                "unknown KV-cache scheme '{other}' (expected f32 or int8)"
+            ),
+        }
+    }
+
+    /// The manifest `cache` tag this scheme binds to.
+    pub fn tag(self) -> &'static str {
+        match self {
+            CacheScheme::F32 => "f32",
+            CacheScheme::Int8 => "int8",
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     pub artifacts_dir: PathBuf,
     pub ckpt_path: PathBuf,
     pub model: String,
     pub scheme: String,
+    /// KV-cache storage scheme (CLI `--kv-cache`, bench env AO_KV_CACHE)
+    pub cache_scheme: CacheScheme,
     /// stop generating a sequence when this token appears (None = never)
     pub eos_token: Option<u32>,
     /// force the host download/splice/upload admission fallback even when
@@ -127,6 +173,82 @@ struct ActiveRequest {
     token_gaps: Vec<f64>,
 }
 
+/// The device-resident KV cache as the artifacts bind it: buffers in
+/// positional order — `[kcache, vcache]` (f32) or `[kcache, kscale,
+/// vcache, vscale]` (int8). Each execute consumes them and the returned
+/// buffers replace them wholesale, so values and scales can never skew.
+struct KvCache {
+    bufs: Vec<OwnedBuffer>,
+}
+
+impl KvCache {
+    fn n(&self) -> usize {
+        self.bufs.len()
+    }
+
+    fn push_inputs<'a>(&'a self, inputs: &mut Vec<&'a PjRtBuffer>) {
+        for b in &self.bufs {
+            inputs.push(&b.buffer);
+        }
+    }
+}
+
+/// Host mirror of the cache for the admission splice fallback: scale
+/// tensors ride along only under the int8 scheme.
+struct HostKv {
+    k: HostTensor,
+    v: HostTensor,
+    kscale: Option<HostTensor>,
+    vscale: Option<HostTensor>,
+}
+
+impl HostKv {
+    // ORDER CONTRACT: `download` and `to_buffers` are the only two
+    // places that spell the buffer binding order outside
+    // `ArtifactSpec::cache_input_names` — (kcache, vcache) for f32,
+    // (kcache, kscale, vcache, vscale) for int8. They live side by
+    // side so they can only change together.
+
+    /// One metered D2H fetch of the persistent device cache.
+    fn download(
+        runtime: &Runtime,
+        cache: &KvCache,
+        scheme: CacheScheme,
+    ) -> Result<HostKv> {
+        let fetch = |i: usize| -> Result<HostTensor> {
+            runtime.fetch_tensor(&cache.bufs[i].buffer)
+        };
+        Ok(match scheme {
+            CacheScheme::F32 => HostKv {
+                k: fetch(0)?,
+                v: fetch(1)?,
+                kscale: None,
+                vscale: None,
+            },
+            CacheScheme::Int8 => HostKv {
+                k: fetch(0)?,
+                kscale: Some(fetch(1)?),
+                v: fetch(2)?,
+                vscale: Some(fetch(3)?),
+            },
+        })
+    }
+
+    /// Metered H2D re-upload of the mirror, in `download`'s order.
+    fn to_buffers(&self, runtime: &Runtime) -> Result<Vec<OwnedBuffer>> {
+        let mut bufs = Vec::with_capacity(4);
+        bufs.push(runtime.upload(&self.k)?);
+        if let Some(ks) = &self.kscale {
+            bufs.push(runtime.upload(ks)?);
+        }
+        bufs.push(runtime.upload(&self.v)?);
+        if let Some(vs) = &self.vscale {
+            bufs.push(runtime.upload(vs)?);
+        }
+        Ok(bufs)
+    }
+}
+
 pub struct Engine {
     pub runtime: Runtime,
     cfg: EngineConfig,
@@ -144,8 +266,7 @@ pub struct Engine {
     smax: usize,
     /// persistent KV cache, device-resident between decode steps: each
     /// step's output buffers become the next step's inputs
-    kcache: OwnedBuffer,
-    vcache: OwnedBuffer,
+    cache: KvCache,
     /// cache dims for host splicing during admission
     kv_dims: (usize, usize, usize, usize, usize), // l, b, h, s, d
     batcher: Batcher,
@@ -161,21 +282,62 @@ pub struct Engine {
 impl Engine {
     pub fn new(cfg: EngineConfig) -> Result<Engine> {
         let runtime = Runtime::open(&cfg.artifacts_dir)?;
+        let cache_tag = cfg.cache_scheme.tag();
         let decode_specs =
             runtime.manifest.find("decode", &cfg.model, Some(&cfg.scheme));
         let decode = decode_specs
-            .first()
+            .iter()
+            .find(|s| s.cache == cache_tag)
+            .copied()
             .with_context(|| {
                 format!(
-                    "no decode artifact for model={} scheme={}",
+                    "no decode artifact for model={} scheme={} \
+                     kv-cache={cache_tag} (re-run `make artifacts`; the \
+                     exporter emits --kv-cache=f32,int8 by default)",
                     cfg.model, cfg.scheme
                 )
             })?;
         let decode_name = decode.name.clone();
         let batch = decode.batch;
         let smax = decode.smax;
-        let kidx = decode.input_index("kcache")?;
-        let kshape = decode.inputs[kidx].shape.clone();
+        // the cache block in binding order: (kcache, vcache), or with
+        // int8 also the scale tensors riding behind each value tensor
+        let cache_names = decode.cache_input_names()?;
+        let mut cache_specs = Vec::with_capacity(cache_names.len());
+        for name in cache_names {
+            let idx = decode.input_index(name)?;
+            cache_specs.push(decode.inputs[idx].clone());
+        }
+        let kshape = cache_specs[0].shape.clone();
+        if kshape.len() != 5 {
+            bail!(
+                "decode artifact '{decode_name}' kcache must be \
+                 [L, B, Hkv, Smax, Dh], got {kshape:?}"
+            );
+        }
+        // validate EVERY cache input (values and scales), not just
+        // kcache: these buffers bind positionally, so a mis-exported
+        // vcache/kscale spec would otherwise surface as an opaque PJRT
+        // shape error on the first decode step instead of at startup
+        let want_values = match cfg.cache_scheme {
+            CacheScheme::F32 => "f32",
+            CacheScheme::Int8 => "s8",
+        };
+        for (name, spec) in cache_names.iter().zip(&cache_specs) {
+            let (want_dt, want_shape) = if name.ends_with("scale") {
+                ("f32", &kshape[..4])
+            } else {
+                (want_values, &kshape[..])
+            };
+            if spec.dtype != want_dt || spec.shape != want_shape {
+                bail!(
+                    "decode artifact '{decode_name}' (cache={cache_tag}) \
+                     binds {name} as {:?} {} (expected {want_shape:?} \
+                     {want_dt})",
+                    spec.shape, spec.dtype
+                );
+            }
+        }
         let kv_dims =
             (kshape[0], kshape[1], kshape[2], kshape[3], kshape[4]);
 
@@ -202,34 +364,46 @@ impl Engine {
         } else {
             let scheme = Some(cfg.scheme.as_str());
             for spec in runtime.manifest.find("admit", &cfg.model, scheme) {
+                if spec.cache != cache_tag {
+                    continue;
+                }
                 spec.validate_admit().with_context(|| {
                     format!("manifest entry '{}' is unusable", spec.name)
                 })?;
                 // internally consistent is not enough: the admit artifact
                 // consumes the DECODE artifact's cache buffers, so their
-                // geometry must match or the first admission dies with an
-                // opaque PJRT shape error mid-serving
-                let ki = spec.input_index("kcache")?;
-                if spec.batch != batch
-                    || spec.smax != smax
-                    || spec.inputs[ki].shape != kshape
-                {
+                // geometry (values AND scales) must match or the first
+                // admission dies with an opaque PJRT shape error
+                // mid-serving
+                if spec.batch != batch || spec.smax != smax {
                     bail!(
-                        "admit artifact '{}' (batch={}, smax={}, kcache \
-                         {:?}) does not match decode artifact '{}' \
-                         (batch={batch}, smax={smax}, kcache {kshape:?})",
-                        spec.name, spec.batch, spec.smax,
-                        spec.inputs[ki].shape, decode_name
+                        "admit artifact '{}' (batch={}, smax={}) does not \
+                         match decode artifact '{decode_name}' \
+                         (batch={batch}, smax={smax})",
+                        spec.name, spec.batch, spec.smax
                     );
+                }
+                for (name, dspec) in cache_names.iter().zip(&cache_specs) {
+                    let ai = spec.input_index(name)?;
+                    let aspec = &spec.inputs[ai];
+                    if aspec.shape != dspec.shape || aspec.dtype != dspec.dtype
+                    {
+                        bail!(
+                            "admit artifact '{}' {name} is {:?} {} but \
+                             decode artifact '{decode_name}' binds {:?} {}",
+                            spec.name, aspec.shape, aspec.dtype,
+                            dspec.shape, dspec.dtype
+                        );
+                    }
                 }
                 admit_names.push((spec.seq, spec.name.clone()));
             }
             admit_names.sort();
             if admit_names.is_empty() {
                 crate::info!(
-                    "no admit artifacts for {}/{}: admission falls back to \
-                     the host splice path (re-run `make artifacts` for \
-                     on-device admission)",
+                    "no admit artifacts for {}/{} (kv-cache {cache_tag}): \
+                     admission falls back to the host splice path (re-run \
+                     `make artifacts` for on-device admission)",
                     cfg.model, cfg.scheme
                 );
             }
@@ -260,13 +434,25 @@ impl Engine {
             decode_params.push(runtime.upload(t)?);
         }
 
-        // the cache is uploaded once as zeros and stays device-resident
-        let kcache = runtime.upload(&HostTensor::zeros(
-            crate::tensor::DType::F32,
-            kshape.clone(),
-        ))?;
-        let vcache = runtime
-            .upload(&HostTensor::zeros(crate::tensor::DType::F32, kshape))?;
+        // the cache is uploaded once as zeros and stays device-resident;
+        // its true (dtype-aware) resident footprint goes into the report,
+        // which is where the int8 scheme's ~4x shows up
+        let mut cache_bufs = Vec::with_capacity(cache_specs.len());
+        let mut cache_resident_bytes = 0u64;
+        for spec in &cache_specs {
+            let dt = crate::tensor::DType::parse(&spec.dtype)?;
+            let zeros = HostTensor::zeros(dt, spec.shape.clone());
+            cache_resident_bytes += zeros.byte_size() as u64;
+            cache_bufs.push(runtime.upload(&zeros)?);
+        }
+        let mut metrics = MetricsCollector::new();
+        metrics.cache_scheme = cache_tag.to_string();
+        metrics.cache_resident_bytes = cache_resident_bytes;
+
+        // surface the untupled-outputs capability up front: when the
+        // binding packs tuples, every "device-resident" path below is
+        // silently a metered host round-trip (see runtime)
+        runtime.untupled_outputs();
 
         let buckets = prefill_names.iter().map(|(s, _)| *s).collect();
         Ok(Engine {
@@ -278,13 +464,12 @@ impl Engine {
             slots: SlotTable::new(batch, smax),
             batch,
             smax,
-            kcache,
-            vcache,
+            cache: KvCache { bufs: cache_bufs },
             kv_dims,
             batcher: Batcher::new(buckets),
             requests: (0..batch).map(|_| None).collect(),
             pending: vec![0; batch],
-            metrics: MetricsCollector::new(),
+            metrics,
             _rng: Rng::new(0xE1_61_4E),
             overhead_s: 0.0,
             cfg,
@@ -383,7 +568,7 @@ impl Engine {
     /// clobbered by the final re-upload.
     fn admit_pending(&mut self) -> Result<()> {
         let xfer0 = self.runtime.transfer_stats();
-        let mut host_kv: Option<(HostTensor, HostTensor)> = None;
+        let mut host_kv: Option<HostKv> = None;
         while self.slots.n_free() > 0 && self.batcher.pending() > 0 {
             match self.batcher.take_prefill_group(self.slots.n_free()) {
                 PrefillTake::Group { bucket, group } => {
@@ -408,10 +593,12 @@ impl Engine {
                 PrefillTake::Idle => break,
             }
         }
-        if let Some((khost, vhost)) = host_kv {
+        if let Some(host) = host_kv {
             let t0 = Instant::now();
-            self.kcache = self.runtime.upload(&khost)?;
-            self.vcache = self.runtime.upload(&vhost)?;
+            // under int8 the whole mirror is ~4x smaller than the f32
+            // cache would be, so the metered fallback traffic shrinks by
+            // the same factor
+            self.cache = KvCache { bufs: host.to_buffers(&self.runtime)? };
             self.overhead_s += t0.elapsed().as_secs_f64();
             self.metrics.host_splice_bursts += 1;
         }
@@ -433,12 +620,10 @@ impl Engine {
             .map(|(_, n)| n.clone())
     }
 
-    /// One metered D2H fetch of both persistent caches (burst-level).
-    fn download_cache(&self) -> Result<(HostTensor, HostTensor)> {
-        Ok((
-            self.runtime.fetch_tensor(&self.kcache.buffer)?,
-            self.runtime.fetch_tensor(&self.vcache.buffer)?,
-        ))
+    /// One metered D2H fetch of the persistent cache (burst-level):
+    /// value tensors, plus their scale tensors under int8.
+    fn download_cache(&self) -> Result<HostKv> {
+        HostKv::download(&self.runtime, &self.cache, self.cfg.cache_scheme)
     }
 
     /// Device-resident admission for `group`: claim slot rows, feed the
@@ -489,27 +674,26 @@ impl Engine {
             self.runtime.upload(&HostTensor::s32(vec![b], lens))?,
             self.runtime.upload(&HostTensor::s32(vec![b], slot_ids))?,
         ];
+        let n_cache = self.cache.n();
         let mut inputs: Vec<&PjRtBuffer> =
             self.decode_params.iter().map(|o| &o.buffer).collect();
-        inputs.push(&self.kcache.buffer);
-        inputs.push(&self.vcache.buffer);
+        self.cache.push_inputs(&mut inputs);
         inputs.extend(extra.iter().map(|o| &o.buffer));
         self.overhead_s += t_overhead.elapsed().as_secs_f64();
 
         let mut outs = self.runtime.run_buffers_device(name, &inputs)?;
         drop(inputs);
-        if outs.len() != 3 {
+        if outs.len() != 1 + n_cache {
             bail!(
-                "admit artifact '{name}' must output (logits, kcache, \
-                 vcache); got {} outputs",
+                "admit artifact '{name}' must output (logits, {n_cache} \
+                 cache buffers); got {} outputs",
                 outs.len()
             );
         }
         self.metrics.prefill_calls += 1;
 
         let t_overhead = Instant::now();
-        let vnew = outs.pop().unwrap();
-        let knew = outs.pop().unwrap();
+        let cache_out = outs.split_off(1);
         let logits_buf = outs.pop().unwrap();
         // the ONLY admission download: one [B, vocab] logits matrix
         let logits = HostTensor::from_literal(&self.runtime.fetch_output(
@@ -517,8 +701,7 @@ impl Engine {
             0,
             &logits_buf.buffer,
         )?)?;
-        self.kcache = knew;
-        self.vcache = vnew;
+        self.cache = KvCache { bufs: cache_out };
 
         let vocab = logits.shape[1];
         for (row, (idx, req)) in claimed.into_iter().enumerate() {
@@ -533,12 +716,14 @@ impl Engine {
     /// splice the fresh KV rows into a host mirror of the persistent
     /// cache (downloaded at most once per admission burst; re-uploaded
     /// once by `admit_pending`), sample + stream each request's first
-    /// token.
+    /// token. Under the int8 scheme the fresh f32 rows are quantized on
+    /// the way in (`splice_kv_quantized`) with the same numerics the
+    /// admit graph uses, so both paths write identical bytes.
     fn prefill_host(
         &mut self,
         bucket: usize,
         group: Vec<SubmitReq>,
-        host_kv: &mut Option<(HostTensor, HostTensor)>,
+        host_kv: &mut Option<HostKv>,
     ) -> Result<()> {
         let t_overhead = Instant::now();
         let name = self
@@ -579,7 +764,7 @@ impl Engine {
         if host_kv.is_none() {
             *host_kv = Some(self.download_cache()?);
         }
-        let (khost, vhost) = host_kv.as_mut().unwrap();
+        let host = host_kv.as_mut().unwrap();
 
         let vocab = logits.shape[1];
         for (row, req) in group.into_iter().enumerate() {
@@ -597,9 +782,22 @@ impl Engine {
                 .slots
                 .claim(slot)
                 .ok_or_else(|| anyhow!("slot table full during prefill"))?;
-            // splice this row's fresh KV into the persistent cache row idx
-            splice_kv(khost, &knew, self.kv_dims, row, idx)?;
-            splice_kv(vhost, &vnew, self.kv_dims, row, idx)?;
+            // splice this row's fresh KV into the persistent cache row
+            // idx, quantizing on the way in when the cache is int8
+            match (&mut host.kscale, &mut host.vscale) {
+                (Some(ks), Some(vs)) => {
+                    splice_kv_quantized(
+                        &mut host.k, ks, &knew, self.kv_dims, row, idx,
+                    )?;
+                    splice_kv_quantized(
+                        &mut host.v, vs, &vnew, self.kv_dims, row, idx,
+                    )?;
+                }
+                _ => {
+                    splice_kv(&mut host.k, &knew, self.kv_dims, row, idx)?;
+                    splice_kv(&mut host.v, &vnew, self.kv_dims, row, idx)?;
+                }
+            }
             self.start_request(idx, row, req, &logits, vocab)?;
         }
         self.overhead_s += t_overhead.elapsed().as_secs_f64();
@@ -717,10 +915,10 @@ impl Engine {
             self.runtime.upload(&HostTensor::s32(vec![b], tokens))?,
             self.runtime.upload(&HostTensor::s32(vec![b], pos))?,
         ];
+        let n_cache = self.cache.n();
         let mut inputs: Vec<&PjRtBuffer> =
             self.decode_params.iter().map(|o| &o.buffer).collect();
-        inputs.push(&self.kcache.buffer);
-        inputs.push(&self.vcache.buffer);
+        self.cache.push_inputs(&mut inputs);
         inputs.extend(extra.iter().map(|o| &o.buffer));
         self.overhead_s += t_overhead.elapsed().as_secs_f64();
 
@@ -728,10 +926,10 @@ impl Engine {
         let mut outs =
             self.runtime.run_buffers_device(&decode_name, &inputs)?;
         drop(inputs);
-        if outs.len() != 3 {
+        if outs.len() != 1 + n_cache {
             bail!(
-                "decode artifact '{decode_name}' must output \
-                 (logits, kcache, vcache); manifest declares {} outputs",
+                "decode artifact '{decode_name}' must output (logits, \
+                 {n_cache} cache buffers); manifest declares {} outputs",
                 outs.len()
             );
         }
@@ -740,8 +938,7 @@ impl Engine {
         self.metrics.active_slot_steps += active.len();
 
         let t_overhead = Instant::now();
-        let vnew = outs.pop().unwrap();
-        let knew = outs.pop().unwrap();
+        let cache_out = outs.split_off(1);
         let logits_buf = outs.pop().unwrap();
         // the ONLY per-token download: one [B, vocab] logits matrix
         let logits = HostTensor::from_literal(&self.runtime.fetch_output(
@@ -751,8 +948,7 @@ impl Engine {
         )?)?;
         // the fresh cache buffers become the next step's inputs; the
         // previous step's buffers are dropped on device
-        self.kcache = knew;
-        self.vcache = vnew;
+        self.cache = KvCache { bufs: cache_out };
         let xfer1 = self.runtime.transfer_stats();
         self.metrics.decode_h2d_bytes += xfer1.h2d_bytes - xfer0.h2d_bytes;
         self.metrics.decode_d2h_bytes += xfer1.d2h_bytes - xfer0.d2h_bytes;
@@ -832,9 +1028,29 @@ fn check_prompt_fits(n_prompt: usize, bucket: usize) -> Result<()> {
     Ok(())
 }
 
+/// Copy the contiguous per-layer row blocks `(l, src_row)` of `src` into
+/// `(l, dst_row)` of `dst` ([L, B, ...] layout, `block` elements per row).
+fn copy_kv_rows<T: Copy>(
+    dst: &mut [T],
+    src: &[T],
+    l: usize,
+    b: usize,
+    block: usize,
+    src_row: usize,
+    dst_row: usize,
+) {
+    for li in 0..l {
+        let so = (li * b + src_row) * block;
+        let doff = (li * b + dst_row) * block;
+        dst[doff..doff + block].copy_from_slice(&src[so..so + block]);
+    }
+}
+
 /// Copy row `src_row` of a freshly prefilled KV tensor into row `dst_row`
 /// of the persistent cache. Layout [L, B, H, S, D] — row (l, b) is the
-/// contiguous H*S*D block at (l*B + b).
+/// contiguous H*S*D block at (l*B + b). Dispatches on the cache dtype:
+/// f32 and s8 caches copy same-dtype rows; anything else (or a dtype
+/// mismatch between fresh and cache) is a contract break and errors.
 fn splice_kv(
     cache: &mut HostTensor,
     fresh: &HostTensor,
@@ -847,15 +1063,72 @@ fn splice_kv(
     if fresh.shape != vec![l, b, h, s, d] {
         bail!("prefill kv shape {:?} != cache {:?}", fresh.shape, dims);
     }
+    use crate::tensor::Data;
+    match (&mut cache.data, &fresh.data) {
+        (Data::F32(dst), Data::F32(src)) => {
+            copy_kv_rows(dst, src, l, b, block, src_row, dst_row)
+        }
+        (Data::S8(dst), Data::S8(src)) => {
+            copy_kv_rows(dst, src, l, b, block, src_row, dst_row)
+        }
+        (dst, src) => bail!(
+            "splice_kv: unsupported kv cache dtype pair {} -> {} \
+             (supported: f32 -> f32, s8 -> s8; f32 -> s8 goes through \
+             splice_kv_quantized)",
+            src.dtype().name(),
+            dst.dtype().name()
+        ),
+    }
+    Ok(())
+}
+
+/// Quantize row `src_row` of a freshly prefilled f32 KV tensor and write
+/// it into row `dst_row` of the persistent int8 cache: value bytes into
+/// `cache_q` ([L, B, H, S, D] s8) and one absmax scale per (head,
+/// position) into `cache_s` ([L, B, H, S] f32). The numerics are
+/// `quant::kvcache` — identical to the `admit_kv8` graph's on-device
+/// scatter, which is what keeps the two admission paths byte-for-byte
+/// interchangeable under int8.
+fn splice_kv_quantized(
+    cache_q: &mut HostTensor,
+    cache_s: &mut HostTensor,
+    fresh: &HostTensor,
+    dims: (usize, usize, usize, usize, usize),
+    src_row: usize,
+    dst_row: usize,
+) -> Result<()> {
+    let (l, b, h, s, d) = dims;
+    let block = h * s * d;
+    let sblock = h * s;
+    if fresh.shape != vec![l, b, h, s, d] {
+        bail!("prefill kv shape {:?} != cache {:?}", fresh.shape, dims);
+    }
+    if cache_s.shape != vec![l, b, h, s] {
+        bail!(
+            "kv scale cache shape {:?} != [L, B, H, S] of {:?}",
+            cache_s.shape, dims
+        );
+    }
     let src = fresh.as_f32()?;
-    let dst = match &mut cache.data {
-        crate::tensor::Data::F32(v) => v,
-        _ => bail!("kv cache must be f32"),
+    use crate::tensor::Data;
+    let (Data::S8(dst_q), Data::F32(dst_s)) =
+        (&mut cache_q.data, &mut cache_s.data)
+    else {
+        bail!(
+            "splice_kv_quantized: cache must be (s8 values, f32 scales), \
+             got ({}, {})",
+            cache_q.dtype().name(),
+            cache_s.dtype().name()
+        );
     };
     for li in 0..l {
         let so = (li * b + src_row) * block;
+        let (q, scales) =
+            crate::quant::kvcache::quantize_groups(&src[so..so + block], d);
         let doff = (li * b + dst_row) * block;
-        dst[doff..doff + block].copy_from_slice(&src[so..so + block]);
+        dst_q[doff..doff + block].copy_from_slice(&q);
+        let sdoff = (li * b + dst_row) * sblock;
+        dst_s[sdoff..sdoff + sblock].copy_from_slice(&scales);
     }
     Ok(())
 }
@@ -1071,6 +1344,136 @@ mod tests {
         let s = scattered.as_f32().unwrap();
         assert!((0..block)
             .all(|i| s[block + i] == ((block + i) as f32).sin()));
+    }
+
+    #[test]
+    fn cache_scheme_parse_and_tags() {
+        assert_eq!(CacheScheme::parse("f32").unwrap(), CacheScheme::F32);
+        assert_eq!(CacheScheme::parse("int8").unwrap(), CacheScheme::Int8);
+        assert_eq!(CacheScheme::Int8.tag(), "int8");
+        let e = CacheScheme::parse("fp8").unwrap_err().to_string();
+        assert!(e.contains("unknown KV-cache scheme"), "{e}");
+        assert_eq!(CacheScheme::default(), CacheScheme::F32);
+    }
+
+    #[test]
+    fn splice_kv_moves_one_s8_row() {
+        // the dtype-dispatched splice handles the int8 value cache with
+        // the same row arithmetic as f32
+        let dims = (2usize, 3usize, 2usize, 4usize, 2usize);
+        let n = 2 * 3 * 2 * 4 * 2;
+        let mut cache = HostTensor::s8(vec![2, 3, 2, 4, 2], vec![0; n]);
+        let fresh = HostTensor::s8(
+            vec![2, 3, 2, 4, 2],
+            (0..n).map(|i| (i % 127) as i8).collect(),
+        );
+        splice_kv(&mut cache, &fresh, dims, 1, 2).unwrap();
+        let c = cache.as_s8().unwrap();
+        let f = fresh.as_s8().unwrap();
+        let block = 2 * 4 * 2;
+        assert_eq!(&c[2 * block..3 * block], &f[block..2 * block]);
+        assert!(c[block..2 * block].iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn splice_kv_rejects_unsupported_dtype_pairs() {
+        // regression for the old hard bail ("kv cache must be f32"): the
+        // dispatch must name the offending pair and the supported ones
+        let dims = (1usize, 1usize, 1usize, 2usize, 2usize);
+        let fresh_f32 = HostTensor::f32(vec![1, 1, 1, 2, 2], vec![0.0; 4]);
+        let mut cache_s8 = HostTensor::s8(vec![1, 1, 1, 2, 2], vec![0; 4]);
+        let e = splice_kv(&mut cache_s8, &fresh_f32, dims, 0, 0)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("unsupported kv cache dtype pair f32 -> s8"), "{e}");
+        assert!(e.contains("splice_kv_quantized"), "{e}");
+        let mut cache_s32 =
+            HostTensor::s32(vec![1, 1, 1, 2, 2], vec![0; 4]);
+        let e = splice_kv(&mut cache_s32, &fresh_f32, dims, 0, 0)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("f32 -> s32"), "{e}");
+    }
+
+    #[test]
+    fn quantized_scatter_matches_splice() {
+        // int8 parity contract (rust half of the python test
+        // `test_admit_kv8_scatter_matches_host_splice`): quantizing the
+        // whole fresh tensor then copying rows == quantizing row-by-row
+        // in splice_kv_quantized, for values AND scales
+        let dims = (2usize, 3usize, 2usize, 4usize, 2usize);
+        let (l, b, h, s, d) = dims;
+        let n = l * b * h * s * d;
+        let fresh = HostTensor::f32(
+            vec![l, b, h, s, d],
+            (0..n).map(|i| ((i as f32) * 0.83).sin() * 3.0).collect(),
+        );
+        // device-model: quantize everything, then scatter rows 0/1 ->
+        // slots 2/0 with plain s8 row copies
+        let (q_all, s_all) =
+            crate::quant::kvcache::quantize_groups(fresh.as_f32().unwrap(), d);
+        let qfresh = HostTensor::s8(vec![l, b, h, s, d], q_all);
+        let sfresh = HostTensor::f32(vec![l, b, h, s], s_all);
+        let mut dev_q = HostTensor::s8(vec![l, b, h, s, d], vec![7; n]);
+        let mut dev_s =
+            HostTensor::f32(vec![l, b, h, s], vec![0.5; l * b * h * s]);
+        for (row, dst) in [(0usize, 2usize), (1, 0)] {
+            splice_kv(&mut dev_q, &qfresh, dims, row, dst).unwrap();
+            copy_kv_rows(
+                match &mut dev_s.data {
+                    crate::tensor::Data::F32(v) => v.as_mut_slice(),
+                    _ => unreachable!(),
+                },
+                sfresh.as_f32().unwrap(),
+                l, b, h * s, row, dst,
+            );
+        }
+        // host path: splice_kv_quantized quantizes per row on the way in
+        let mut host_q = HostTensor::s8(vec![l, b, h, s, d], vec![7; n]);
+        let mut host_s =
+            HostTensor::f32(vec![l, b, h, s], vec![0.5; l * b * h * s]);
+        for (row, dst) in [(0usize, 2usize), (1, 0)] {
+            splice_kv_quantized(
+                &mut host_q, &mut host_s, &fresh, dims, row, dst,
+            )
+            .unwrap();
+        }
+        assert_eq!(host_q, dev_q);
+        assert_eq!(host_s, dev_s);
+        // untouched slot 1 keeps its sentinel values and scales
+        let block = h * s * d;
+        assert!(host_q.as_s8().unwrap()[block..2 * block]
+            .iter()
+            .all(|&x| x == 7));
+        assert!(host_s.as_f32().unwrap()[h * s..2 * h * s]
+            .iter()
+            .all(|&x| x == 0.5));
+    }
+
+    #[test]
+    fn splice_kv_quantized_validates_shapes_and_dtypes() {
+        let dims = (1usize, 2usize, 1usize, 2usize, 2usize);
+        let fresh = HostTensor::f32(vec![1, 2, 1, 2, 2], vec![1.0; 8]);
+        let mut q = HostTensor::s8(vec![1, 2, 1, 2, 2], vec![0; 8]);
+        let mut bad_scales = HostTensor::f32(vec![1, 2, 1, 3], vec![0.0; 6]);
+        assert!(splice_kv_quantized(
+            &mut q, &mut bad_scales, &fresh, dims, 0, 1
+        )
+        .is_err());
+        let mut f32_cache = HostTensor::f32(vec![1, 2, 1, 2, 2], vec![0.0; 8]);
+        let mut scales = HostTensor::f32(vec![1, 2, 1, 2], vec![0.0; 4]);
+        let e = splice_kv_quantized(
+            &mut f32_cache, &mut scales, &fresh, dims, 0, 1,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("s8 values, f32 scales"), "{e}");
+        // the happy path writes absmax scales where it spliced
+        splice_kv_quantized(&mut q, &mut scales, &fresh, dims, 0, 1).unwrap();
+        let sc = scales.as_f32().unwrap();
+        assert!(sc[0] == 0.0 && sc[1] == 0.0, "source row untouched");
+        assert!((sc[2] - 1.0 / 127.0).abs() < 1e-9);
+        assert_eq!(&q.as_s8().unwrap()[4..8], &[127, 127, 127, 127]);
     }
 
     #[test]

@@ -40,6 +40,13 @@ pub struct MetricsCollector {
     pub admit_d2h_bytes: u64,
     /// admission bursts that fell back to the host download/splice/upload
     pub host_splice_bursts: usize,
+    /// KV-cache storage scheme the engine is serving with ("f32"/"int8";
+    /// empty means an engine predating the field, i.e. f32)
+    pub cache_scheme: String,
+    /// device-resident KV-cache footprint (values + scales, logical
+    /// bytes) — the int8 scheme's ~4x shows up here and in the per-burst
+    /// host-splice traffic, which moves exactly these bytes each way
+    pub cache_resident_bytes: u64,
 }
 
 impl MetricsCollector {
@@ -132,10 +139,16 @@ impl MetricsCollector {
     pub fn report(&self, label: &str) -> String {
         // empty summaries are NaN; a zero-request report must stay readable
         let ms = |x: f64| if x.is_finite() { x * 1e3 } else { 0.0 };
+        let cache_scheme = if self.cache_scheme.is_empty() {
+            "f32"
+        } else {
+            self.cache_scheme.as_str()
+        };
         format!(
             "[{label}] requests={} rejected={} out_tokens={} wall={:.2}s \
              tput={:.1} tok/s  TPOT={:.2}ms  ITL={:.2}ms  TTFT={:.1}ms  \
              occupancy={:.0}%  (decode_steps={} prefills={})  \
+             cache[{cache_scheme} resident={}]  \
              xfer h2d={} d2h={} decode[h2d={} d2h={}] \
              admit[h2d={} d2h={} host_splices={}]",
             self.n_requests,
@@ -149,6 +162,7 @@ impl MetricsCollector {
             self.occupancy() * 100.0,
             self.decode_steps,
             self.prefill_calls,
+            fmt_bytes(self.cache_resident_bytes),
             fmt_bytes(self.h2d_bytes),
             fmt_bytes(self.d2h_bytes),
             fmt_bytes(self.decode_h2d_bytes),
@@ -268,6 +282,18 @@ mod tests {
         // zero prefills must not divide by zero
         let empty = MetricsCollector::new();
         assert_eq!(empty.admit_d2h_per_prefill(), 0.0);
+    }
+
+    #[test]
+    fn cache_accounting_in_report() {
+        let mut m = MetricsCollector::new();
+        m.cache_scheme = "int8".into();
+        m.cache_resident_bytes = 9 * 1024 * 1024;
+        let r = m.report("x");
+        assert!(r.contains("cache[int8 resident=9.0MiB]"), "{r}");
+        // a collector that never learned its scheme reads as the default
+        let empty = MetricsCollector::new();
+        assert!(empty.report("y").contains("cache[f32 resident=0B]"));
     }
 
     #[test]

@@ -20,5 +20,5 @@ pub mod metrics;
 pub mod request;
 pub mod server;
 
-pub use engine::{Engine, EngineConfig, EngineHandle};
+pub use engine::{CacheScheme, Engine, EngineConfig, EngineHandle};
 pub use request::{Event, FinishInfo, FinishReason, SubmitReq};

@@ -5,6 +5,7 @@
 //!   ao quantize   --ckpt runs/small.aockpt --scheme int4wo-64
 //!   ao eval       --ckpt runs/small_int4wo-64.aockpt --scheme int4wo-64
 //!   ao serve      --ckpt ... --scheme fp8dq_row --addr 127.0.0.1:7433
+//!                 [--kv-cache int8]   # quantized (int8+scales) KV cache
 //!                 [--host-admission]  # force the host splice fallback
 //!   ao bench-client --addr 127.0.0.1:7433 --n 16
 //!   ao perfmodel  [--kernels]                   # H100/Fig3 + L1 estimates
@@ -198,6 +199,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ckpt_path,
         model,
         scheme,
+        cache_scheme: engine::CacheScheme::parse(
+            &args.str_or("kv-cache", "f32"),
+        )?,
         eos_token: None,
         host_admission: args.flag("host-admission"),
     };

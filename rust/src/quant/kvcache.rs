@@ -1,0 +1,80 @@
+//! Int8 KV-cache quantization: the host half of the serving engine's
+//! `CacheScheme::Int8`.
+//!
+//! The cache is stored as an int8 value tensor `[L, B, Hkv, Smax, Dh]`
+//! plus an f32 absmax scale tensor `[L, B, Hkv, Smax]` — one symmetric
+//! scale per (layer, slot, head, position), i.e. per contiguous `Dh`
+//! lane group. This module mirrors `python/compile/formats.py`'s
+//! `kv_quantize`/`kv_dequantize` bit-for-bit (same 1e-12 amax floor,
+//! same round-half-to-even), so the host-admission splice fallback
+//! writes exactly the bytes the on-device `admit_kv8` scatter would.
+
+/// Symmetric int8 range: values quantize into [-127, 127].
+pub const KV_QMAX: f32 = 127.0;
+
+/// Quantize `x` in contiguous groups of `group` lanes (the head_dim
+/// axis): per group, scale = max(|x|, 1e-12)/127 and q = round(x/scale)
+/// clamped to ±127. Returns (values, one scale per group).
+///
+/// One "channel" per group is exactly the checkpoint quantizer's int8
+/// channelwise recipe, so this delegates to it — the repo has ONE copy
+/// of the int8 symmetric quantization contract, and the python-parity
+/// tests pin it once.
+pub fn quantize_groups(x: &[f32], group: usize) -> (Vec<i8>, Vec<f32>) {
+    assert!(group > 0 && x.len() % group == 0, "len {} % group {group}", x.len());
+    super::apply::quant_int8_channelwise(x, x.len() / group, group)
+}
+
+/// Inverse of `quantize_groups` up to rounding: q * scale per group.
+pub fn dequantize_groups(q: &[i8], scales: &[f32], group: usize) -> Vec<f32> {
+    assert!(group > 0 && q.len() == scales.len() * group);
+    q.iter()
+        .enumerate()
+        .map(|(i, &v)| v as f32 * scales[i / group])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_error_within_half_scale() {
+        let x: Vec<f32> = (0..64).map(|i| ((i as f32) * 0.7).sin() * 3.0).collect();
+        let (q, s) = quantize_groups(&x, 16);
+        assert_eq!(q.len(), 64);
+        assert_eq!(s.len(), 4);
+        let d = dequantize_groups(&q, &s, 16);
+        for (i, (&orig, &rec)) in x.iter().zip(&d).enumerate() {
+            let bound = s[i / 16] * 0.5 + 1e-7;
+            assert!((orig - rec).abs() <= bound, "elem {i}: {orig} vs {rec}");
+        }
+    }
+
+    #[test]
+    fn zero_group_quantizes_to_zero() {
+        // the padded cache region is all-zero; its scale must stay finite
+        // and its values exact
+        let (q, s) = quantize_groups(&[0.0; 8], 8);
+        assert!(q.iter().all(|&v| v == 0));
+        assert!(s[0].is_finite() && s[0] > 0.0);
+        assert!(dequantize_groups(&q, &s, 8).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn absmax_element_hits_full_range() {
+        let x = [1.0f32, -4.0, 2.0, 0.5];
+        let (q, s) = quantize_groups(&x, 4);
+        assert_eq!(q[1], -127, "the absmax element maps to ±127");
+        assert!((s[0] - 4.0 / 127.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn groups_are_independent() {
+        let x = [100.0f32, 0.0, 0.01, 0.005];
+        let (q, s) = quantize_groups(&x, 2);
+        // a huge first group must not flatten the tiny second group
+        assert_eq!(q[2], 127);
+        assert!(s[1] < s[0]);
+    }
+}

@@ -4,6 +4,7 @@
 pub mod apply;
 pub mod config;
 pub mod formats;
+pub mod kvcache;
 
 pub use apply::{quantize_checkpoint, quantize_weight, SizeReport};
 pub use config::{table4_configs, QuantConfig, QuantKind};

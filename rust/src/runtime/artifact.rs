@@ -38,6 +38,9 @@ pub struct ArtifactSpec {
     /// compile as XLA input-output aliases (buffer donation) — the
     /// exporter declares them for the KV cache arguments of decode/admit.
     pub donate: Vec<(usize, usize)>,
+    /// KV-cache storage scheme of decode/admit artifacts ("f32" or
+    /// "int8"); manifests predating the field mean f32.
+    pub cache: String,
 }
 
 impl ArtifactSpec {
@@ -66,10 +69,28 @@ impl ArtifactSpec {
         self.outputs.iter().position(|s| s.name.ends_with(suffix))
     }
 
+    /// Names of the cache inputs this artifact binds, in binding order:
+    /// `(kcache, vcache)` for the f32 scheme, `(kcache, kscale, vcache,
+    /// vscale)` for int8. Errors on an unknown cache tag.
+    pub fn cache_input_names(&self) -> Result<&'static [&'static str]> {
+        match self.cache.as_str() {
+            "f32" => Ok(&["kcache", "vcache"]),
+            "int8" => Ok(&["kcache", "kscale", "vcache", "vscale"]),
+            other => anyhow::bail!(
+                "artifact '{}' declares unsupported KV-cache scheme \
+                 '{other}' (expected f32 or int8)",
+                self.name
+            ),
+        }
+    }
+
     /// Validate the `admit` artifact contract the serving engine binds to:
-    /// trailing inputs `(kcache, vcache, tokens, lens, slot_ids)` after
-    /// the params block, outputs `(logits, kcache', vcache')`, and cache
-    /// shapes consistent with `batch`/`seq`/`smax`. A manifest entry that
+    /// trailing inputs `(cache block…, tokens, lens, slot_ids)` after the
+    /// params block, outputs `(logits, cache block…')`, and cache shapes
+    /// consistent with `batch`/`seq`/`smax`. The cache block is dictated
+    /// by the artifact's `cache` scheme: `(kcache, vcache)` f32 tensors,
+    /// or `(kcache, kscale, vcache, vscale)` with int8 values and f32
+    /// per-(layer, slot, head, position) scales. A manifest entry that
     /// fails this check would make the engine scatter rows into the wrong
     /// place, so callers should treat an error as fatal.
     pub fn validate_admit(&self) -> Result<()> {
@@ -79,25 +100,31 @@ impl ArtifactSpec {
         let ctx = |what: &str| {
             format!("admit artifact '{}': {what}", self.name)
         };
-        // The engine binds buffers POSITIONALLY (params..., kcache,
-        // vcache, tokens, lens, slot_ids), so the trailing five inputs
-        // must sit at exactly those positions — lens/slot_ids share a
-        // shape and kcache/vcache are identical, so a name-only check
-        // would let a reordered manifest scatter rows into garbage slots.
-        if self.inputs.len() < 5 {
-            anyhow::bail!(ctx("fewer than 5 inputs"));
+        let cache_names = self.cache_input_names()?;
+        let quantized = self.cache == "int8";
+        // The engine binds buffers POSITIONALLY (params..., cache block,
+        // tokens, lens, slot_ids), so the trailing inputs must sit at
+        // exactly those positions — lens/slot_ids share a shape and
+        // kcache/vcache are identical, so a name-only check would let a
+        // reordered manifest scatter rows into garbage slots.
+        let mut trailing: Vec<&str> = cache_names.to_vec();
+        trailing.extend(["tokens", "lens", "slot_ids"]);
+        if self.inputs.len() < trailing.len() {
+            anyhow::bail!(ctx(&format!(
+                "fewer than {} inputs",
+                trailing.len()
+            )));
         }
-        let base = self.inputs.len() - 5;
-        for (off, want) in ["kcache", "vcache", "tokens", "lens", "slot_ids"]
-            .iter()
-            .enumerate()
-        {
+        let base = self.inputs.len() - trailing.len();
+        for (off, want) in trailing.iter().enumerate() {
             let got = self.inputs[base + off].name.as_str();
             if got != *want {
                 anyhow::bail!(
                     "{} (position {} is '{got}', expected '{want}')",
-                    ctx("trailing inputs must be (kcache, vcache, tokens, \
-                         lens, slot_ids) in that order"),
+                    ctx(&format!(
+                        "trailing inputs must be ({}) in that order",
+                        trailing.join(", ")
+                    )),
                     base + off
                 );
             }
@@ -112,8 +139,12 @@ impl ArtifactSpec {
                 bad.name
             );
         }
-        let (k, v, t, l, s) = (base, base + 1, base + 2, base + 3, base + 4);
-        let kshape = &self.inputs[k].shape;
+        let n_cache = cache_names.len();
+        let input = |name: &str| -> &IoSpec {
+            &self.inputs[base + trailing.iter().position(|n| *n == name).unwrap()]
+        };
+        let k = input("kcache");
+        let kshape = &k.shape;
         if kshape.len() != 5 || kshape[1] != self.batch
             || kshape[3] != self.smax
         {
@@ -123,27 +154,61 @@ impl ArtifactSpec {
                 self.batch, self.smax
             );
         }
-        if self.inputs[v].shape != *kshape {
-            anyhow::bail!(ctx("vcache shape differs from kcache"));
+        let want_values = if quantized { "s8" } else { "f32" };
+        if k.dtype != want_values {
+            anyhow::bail!(
+                "{} (got {})",
+                ctx(&format!(
+                    "{} cache values must be {want_values}",
+                    self.cache
+                )),
+                k.dtype
+            );
         }
-        if self.inputs[t].shape != [self.batch, self.seq] {
+        let v = input("vcache");
+        if v.shape != *kshape || v.dtype != k.dtype {
+            anyhow::bail!(ctx("vcache shape/dtype differs from kcache"));
+        }
+        if quantized {
+            for name in ["kscale", "vscale"] {
+                let s = input(name);
+                if s.shape != kshape[..4] || s.dtype != "f32" {
+                    anyhow::bail!(
+                        "{} (got {:?} {})",
+                        ctx(&format!(
+                            "{name} must be f32 [L, batch, Hkv, smax]"
+                        )),
+                        s.shape, s.dtype
+                    );
+                }
+            }
+        }
+        if input("tokens").shape != [self.batch, self.seq] {
             anyhow::bail!(ctx("tokens must be [batch, seq]"));
         }
-        if self.inputs[l].shape != [self.batch]
-            || self.inputs[s].shape != [self.batch]
+        if input("lens").shape != [self.batch]
+            || input("slot_ids").shape != [self.batch]
         {
             anyhow::bail!(ctx("lens/slot_ids must be [batch]"));
         }
-        if self.inputs[s].dtype != "s32" {
+        if input("slot_ids").dtype != "s32" {
             anyhow::bail!(ctx("slot_ids must be s32"));
         }
-        if self.outputs.len() != 3 {
-            anyhow::bail!(ctx("outputs must be (logits, kcache', vcache')"));
+        if self.outputs.len() != 1 + n_cache {
+            anyhow::bail!(ctx(&format!(
+                "outputs must be (logits, {}')",
+                cache_names.join("', ")
+            )));
         }
-        if self.outputs[1].shape != *kshape
-            || self.outputs[2].shape != *kshape
-        {
-            anyhow::bail!(ctx("output cache shapes differ from inputs"));
+        for (i, name) in cache_names.iter().enumerate() {
+            let out = &self.outputs[1 + i];
+            let inp = input(name);
+            if out.shape != inp.shape || out.dtype != inp.dtype {
+                anyhow::bail!(ctx(&format!(
+                    "output {} ({name}') shape/dtype differs from input",
+                    1 + i
+                )));
+            }
         }
         Ok(())
     }
@@ -254,6 +319,11 @@ impl Manifest {
                 inputs: io_specs(a.req("inputs")?)?,
                 outputs: io_specs(a.req("outputs")?)?,
                 donate: donate_pairs(a.get("donate"))?,
+                cache: a
+                    .get("cache")
+                    .and_then(|x| x.as_str())
+                    .unwrap_or("f32")
+                    .to_string(),
             };
             artifacts.insert(spec.name.clone(), spec);
         }
@@ -444,6 +514,81 @@ mod tests {
         interloper.inputs[0].name = "weights.tok_emb".into();
         let e = interloper.validate_admit().unwrap_err().to_string();
         assert!(e.contains("must be params"), "{e}");
+    }
+
+    const ADMIT_KV8_SAMPLE: &str = r#"{
+      "version": 1,
+      "models": {},
+      "artifacts": [
+        {"name": "admit_f32_tiny_b2_s16_kv8", "file": "a8.hlo.txt",
+         "kind": "admit", "model": "tiny", "scheme": "f32",
+         "cache": "int8", "batch": 2, "seq": 16, "smax": 128,
+         "donate": [[1, 1], [2, 2], [3, 3], [4, 4]],
+         "inputs": [
+            {"name": "params.tok_emb", "shape": [256, 64], "dtype": "f32"},
+            {"name": "kcache", "shape": [2,2,2,128,16], "dtype": "s8"},
+            {"name": "kscale", "shape": [2,2,2,128], "dtype": "f32"},
+            {"name": "vcache", "shape": [2,2,2,128,16], "dtype": "s8"},
+            {"name": "vscale", "shape": [2,2,2,128], "dtype": "f32"},
+            {"name": "tokens", "shape": [2, 16], "dtype": "s32"},
+            {"name": "lens", "shape": [2], "dtype": "s32"},
+            {"name": "slot_ids", "shape": [2], "dtype": "s32"}],
+         "outputs": [
+            {"name": "out.0", "shape": [2, 256], "dtype": "f32"},
+            {"name": "out.1", "shape": [2,2,2,128,16], "dtype": "s8"},
+            {"name": "out.2", "shape": [2,2,2,128], "dtype": "f32"},
+            {"name": "out.3", "shape": [2,2,2,128,16], "dtype": "s8"},
+            {"name": "out.4", "shape": [2,2,2,128], "dtype": "f32"}]}
+      ]}"#;
+
+    #[test]
+    fn parses_and_validates_int8_admit() {
+        let m = Manifest::parse(ADMIT_KV8_SAMPLE).unwrap();
+        let a = m.artifact("admit_f32_tiny_b2_s16_kv8").unwrap();
+        assert_eq!(a.cache, "int8");
+        assert_eq!(
+            a.cache_input_names().unwrap(),
+            &["kcache", "kscale", "vcache", "vscale"]
+        );
+        a.validate_admit().unwrap();
+        // manifests predating the cache field mean f32
+        let old = Manifest::parse(ADMIT_SAMPLE).unwrap();
+        let oa = old.artifact("admit_f32_tiny_b2_s16").unwrap();
+        assert_eq!(oa.cache, "f32");
+        assert_eq!(oa.cache_input_names().unwrap(), &["kcache", "vcache"]);
+    }
+
+    #[test]
+    fn validate_admit_int8_catches_contract_breaks() {
+        let m = Manifest::parse(ADMIT_KV8_SAMPLE).unwrap();
+        let good = m.artifact("admit_f32_tiny_b2_s16_kv8").unwrap();
+
+        // int8 cache values must really be s8 (an f32 kcache would make
+        // the engine upload 4x the bytes it metered)
+        let mut wrong_values = good.clone();
+        wrong_values.inputs[1].dtype = "f32".into();
+        let e = wrong_values.validate_admit().unwrap_err().to_string();
+        assert!(e.contains("must be s8"), "{e}");
+
+        // scales carry the head axis reduced away
+        let mut wrong_scale = good.clone();
+        wrong_scale.inputs[2].shape = vec![2, 2, 2, 128, 16];
+        let e = wrong_scale.validate_admit().unwrap_err().to_string();
+        assert!(e.contains("kscale"), "{e}");
+
+        let mut missing_scale = good.clone();
+        missing_scale.inputs.remove(2);
+        assert!(missing_scale.validate_admit().is_err());
+
+        // scale outputs must round-trip like the value outputs
+        let mut wrong_out = good.clone();
+        wrong_out.outputs[2].shape = vec![2, 2, 2, 64];
+        assert!(wrong_out.validate_admit().is_err());
+
+        let mut unknown = good.clone();
+        unknown.cache = "fp8".into();
+        let e = unknown.validate_admit().unwrap_err().to_string();
+        assert!(e.contains("unsupported KV-cache scheme"), "{e}");
     }
 
     #[test]

@@ -79,6 +79,11 @@ pub struct Runtime {
     /// one-time capability probe result: does this parser/client accept
     /// `input_output_alias` (buffer donation)?
     donation_ok: Cell<Option<bool>>,
+    /// one-time capability probe result: does `execute_b` return one
+    /// buffer per tuple element (untupled outputs)? When it does, the
+    /// packed-tuple host round-trip in `run_buffers_device` can never be
+    /// the path taken.
+    untuple_ok: Cell<Option<bool>>,
     /// artifacts whose executable was compiled with cache donation
     donated: RefCell<std::collections::HashSet<String>>,
 }
@@ -98,6 +103,7 @@ impl Runtime {
             transfers: RefCell::new(TransferStats::default()),
             warned_packed: RefCell::new(std::collections::HashSet::new()),
             donation_ok: Cell::new(None),
+            untuple_ok: Cell::new(None),
             donated: RefCell::new(std::collections::HashSet::new()),
         })
     }
@@ -224,6 +230,41 @@ impl Runtime {
     /// Whether `name` was compiled with its cache arguments donated.
     pub fn donation_active(&self, name: &str) -> bool {
         self.donated.borrow().contains(name)
+    }
+
+    /// Whether the binding's execute path returns one device buffer per
+    /// output tuple element (the `ExecuteOptions.untuple_result`
+    /// behavior). Probed once by running a minimal two-output module:
+    /// when this holds, `run_buffers_device` keeps every output on
+    /// device and the metered packed-tuple fallback is provably dead
+    /// code for this process — the
+    /// `decode_host_traffic_is_logits_only` /
+    /// `admission_host_traffic_is_rows_only` integration gates then pin
+    /// the transfer totals the untupled path implies.
+    pub fn untupled_outputs(&self) -> bool {
+        if let Some(ok) = self.untuple_ok.get() {
+            return ok;
+        }
+        let ok = self.probe_untuple().unwrap_or(false);
+        if !ok {
+            crate::warn!(
+                "execute returns packed tuple outputs; device-resident \
+                 decode/admission degrade to metered host round-trips"
+            );
+        }
+        self.untuple_ok.set(Some(ok));
+        ok
+    }
+
+    fn probe_untuple(&self) -> Result<bool> {
+        let exe = self.compile_text(UNTUPLE_PROBE_HLO, "untuple_probe")?;
+        // unmetered: probe traffic is not workload traffic
+        let input = HostTensor::f32(vec![4], vec![1.0, 2.0, 3.0, 4.0]);
+        let buf = self.to_buffer(input.to_literal()?)?;
+        let result = exe
+            .execute_b::<&PjRtBuffer>(&[&buf.buffer])
+            .map_err(|e| anyhow!("untuple probe execute: {e:?}"))?;
+        Ok(result.first().map_or(false, |outs| outs.len() == 2))
     }
 
     /// Upload a literal to a device buffer owned by the caller.
@@ -492,6 +533,21 @@ ENTRY main {
 }
 ";
 
+/// Minimal two-output module: executed once to observe whether the
+/// binding hands back one buffer per tuple element or a single packed
+/// tuple buffer (the untupled behavior is what keeps the serving cache
+/// device-resident).
+const UNTUPLE_PROBE_HLO: &str = "\
+HloModule ao_untuple_probe
+
+ENTRY main {
+  p0 = f32[4]{0} parameter(0)
+  a0 = f32[4]{0} add(p0, p0)
+  m0 = f32[4]{0} multiply(p0, p0)
+  ROOT t0 = (f32[4]{0}, f32[4]{0}) tuple(a0, m0)
+}
+";
+
 /// Rewrite the `HloModule` header line to carry an `input_output_alias`
 /// attribute for the given `(output_tuple_index, parameter_number)` pairs.
 /// Text already carrying an alias (a future exporter may bake it in) is
@@ -571,5 +627,14 @@ mod tests {
         assert!(DONATION_PROBE_HLO.starts_with("HloModule"));
         assert!(DONATION_PROBE_HLO.contains("input_output_alias"));
         assert!(DONATION_PROBE_HLO.contains("ROOT"));
+    }
+
+    #[test]
+    fn untuple_probe_hlo_is_well_formed() {
+        // the probe must produce a genuine multi-element tuple, or a
+        // binding that always packs would still "pass" with one buffer
+        assert!(UNTUPLE_PROBE_HLO.starts_with("HloModule"));
+        assert!(UNTUPLE_PROBE_HLO
+            .contains("ROOT t0 = (f32[4]{0}, f32[4]{0}) tuple(a0, m0)"));
     }
 }

@@ -4,7 +4,7 @@
 //! `cargo test` stays usable before the first AOT build.
 
 use ao::ckpt::Checkpoint;
-use ao::coordinator::{engine, Event, FinishReason, SubmitReq};
+use ao::coordinator::{engine, CacheScheme, Event, FinishReason, SubmitReq};
 use ao::data::corpus::standard_corpus;
 use ao::data::dataset::PackedDataset;
 use ao::evalh::Evaluator;
@@ -129,6 +129,7 @@ fn engine_serves_batched_requests() {
         ckpt_path,
         model: "tiny".into(),
         scheme: "f32".into(),
+        cache_scheme: CacheScheme::F32,
         eos_token: None,
         host_admission: false,
     });
@@ -187,6 +188,7 @@ fn engine_greedy_decode_is_deterministic() {
             ckpt_path: ckpt_path.clone(),
             model: "tiny".into(),
             scheme: "f32".into(),
+            cache_scheme: CacheScheme::F32,
             eos_token: None,
             host_admission: false,
         });
@@ -244,6 +246,7 @@ fn decode_host_traffic_is_logits_only() {
         ckpt_path,
         model: "tiny".into(),
         scheme: "f32".into(),
+        cache_scheme: CacheScheme::F32,
         eos_token: None,
         host_admission: false,
     });
@@ -319,6 +322,7 @@ fn context_cap_grants_the_last_cache_slot() {
         ckpt_path,
         model: "tiny".into(),
         scheme: "f32".into(),
+        cache_scheme: CacheScheme::F32,
         eos_token: None,
         host_admission: false,
     });
@@ -382,6 +386,7 @@ fn oversized_head_does_not_stall_admission() {
         ckpt_path,
         model: "tiny".into(),
         scheme: "f32".into(),
+        cache_scheme: CacheScheme::F32,
         eos_token: None,
         host_admission: false,
     });
@@ -447,20 +452,36 @@ fn oversized_head_does_not_stall_admission() {
     );
 }
 
-/// Tentpole acceptance: with an admit artifact, a prefill burst performs
-/// ZERO whole-cache host transfers — admission uploads only the
+/// True when the artifact dir carries admit artifacts for (tiny, f32)
+/// under `cache_scheme`; otherwise prints a skip notice.
+fn has_admit_artifacts(dir: &PathBuf, cache_scheme: CacheScheme) -> bool {
+    let runtime = Runtime::open(dir).unwrap();
+    let found = runtime
+        .manifest
+        .find("admit", "tiny", Some("f32"))
+        .iter()
+        .any(|s| s.cache == cache_scheme.tag());
+    if !found {
+        eprintln!(
+            "[skip] no admit artifacts for kv-cache {}; re-run `make \
+             artifacts`",
+            cache_scheme.tag()
+        );
+    }
+    found
+}
+
+/// Tentpole acceptance body: with an admit artifact, a prefill burst
+/// performs ZERO whole-cache host transfers — admission uploads only the
 /// token/len/slot-id vectors and downloads only one logits matrix per
-/// prefill call. (Requires artifacts exported with the admit kind; skips
-/// on older artifact dirs.)
-#[test]
-fn admission_host_traffic_is_rows_only() {
+/// prefill call, REGARDLESS of the cache scheme. (Requires artifacts
+/// exported with the admit kind; skips on older artifact dirs.)
+fn admission_rows_only_under(cache_scheme: CacheScheme) {
     let Some(dir) = artifacts_dir() else { return };
-    let runtime = Runtime::open(&dir).unwrap();
-    let admits = runtime.manifest.find("admit", "tiny", Some("f32"));
-    if admits.is_empty() {
-        eprintln!("[skip] no admit artifacts; re-run `make artifacts`");
+    if !has_admit_artifacts(&dir, cache_scheme) {
         return;
     }
+    let runtime = Runtime::open(&dir).unwrap();
     let bucket = runtime
         .manifest
         .find("prefill", "tiny", Some("f32"))
@@ -473,20 +494,28 @@ fn admission_host_traffic_is_rows_only() {
         .manifest
         .find("admit", "tiny", Some("f32"))
         .into_iter()
-        .find(|s| s.seq == bucket)
+        .find(|s| s.seq == bucket && s.cache == cache_scheme.tag())
         .expect("admit artifact for every prefill bucket")
         .clone();
     let logits_bytes = admit.outputs[0].byte_size().unwrap() as u64;
     let batch = admit.batch as u64;
-    let cache_bytes = admit.inputs[admit.input_index("kcache").unwrap()]
-        .byte_size()
-        .unwrap() as u64;
+    let cache_bytes: u64 = admit
+        .cache_input_names()
+        .unwrap()
+        .iter()
+        .map(|n| {
+            admit.inputs[admit.input_index(n).unwrap()]
+                .byte_size()
+                .unwrap() as u64
+        })
+        .sum();
     drop(runtime);
 
     let master = tiny_master_ckpt(&dir);
     let tmp = std::env::temp_dir().join("ao_int_tests");
     std::fs::create_dir_all(&tmp).unwrap();
-    let ckpt_path = tmp.join("tiny_f32_admit.aockpt");
+    let ckpt_path =
+        tmp.join(format!("tiny_f32_admit_{}.aockpt", cache_scheme.tag()));
     master.save(&ckpt_path).unwrap();
 
     let (handle, join) = engine::spawn(engine::EngineConfig {
@@ -494,6 +523,7 @@ fn admission_host_traffic_is_rows_only() {
         ckpt_path,
         model: "tiny".into(),
         scheme: "f32".into(),
+        cache_scheme,
         eos_token: None,
         host_admission: false,
     });
@@ -539,24 +569,37 @@ fn admission_host_traffic_is_rows_only() {
         m.admit_d2h_bytes < cache_bytes,
         "cache-sized admission D2H means the splice fallback ran"
     );
+    assert_eq!(m.cache_scheme, cache_scheme.tag());
 }
 
-/// The device scatter and the host splice fallback are interchangeable:
-/// the same greedy workload produces identical token streams on both
-/// paths (and the fallback really is exercised when forced).
 #[test]
-fn admission_device_and_host_paths_agree() {
+fn admission_host_traffic_is_rows_only() {
+    admission_rows_only_under(CacheScheme::F32);
+}
+
+/// The int8 cache shrinks the resident allocation, it must not grow the
+/// admission traffic: the rows-only gate holds bit-identically.
+#[test]
+fn admission_host_traffic_is_rows_only_under_int8() {
+    admission_rows_only_under(CacheScheme::Int8);
+}
+
+/// The device scatter and the host splice fallback are interchangeable
+/// under either cache scheme: the same greedy workload produces
+/// identical token streams on both paths (and the fallback really is
+/// exercised when forced). Under int8 this pins the host-side
+/// `splice_kv_quantized` numerics to the admit graph's on-device
+/// quantize+scatter.
+fn admission_paths_agree_under(cache_scheme: CacheScheme) {
     let Some(dir) = artifacts_dir() else { return };
-    let runtime = Runtime::open(&dir).unwrap();
-    if runtime.manifest.find("admit", "tiny", Some("f32")).is_empty() {
-        eprintln!("[skip] no admit artifacts; re-run `make artifacts`");
+    if !has_admit_artifacts(&dir, cache_scheme) {
         return;
     }
-    drop(runtime);
     let master = tiny_master_ckpt(&dir);
     let tmp = std::env::temp_dir().join("ao_int_tests");
     std::fs::create_dir_all(&tmp).unwrap();
-    let ckpt_path = tmp.join("tiny_f32_parity.aockpt");
+    let ckpt_path =
+        tmp.join(format!("tiny_f32_parity_{}.aockpt", cache_scheme.tag()));
     master.save(&ckpt_path).unwrap();
 
     let run = |host_admission: bool| -> (Vec<Vec<u32>>, usize) {
@@ -565,6 +608,7 @@ fn admission_device_and_host_paths_agree() {
             ckpt_path: ckpt_path.clone(),
             model: "tiny".into(),
             scheme: "f32".into(),
+            cache_scheme,
             eos_token: None,
             host_admission,
         });
@@ -612,6 +656,108 @@ fn admission_device_and_host_paths_agree() {
     );
 }
 
+#[test]
+fn admission_device_and_host_paths_agree() {
+    admission_paths_agree_under(CacheScheme::F32);
+}
+
+#[test]
+fn admission_device_and_host_paths_agree_under_int8() {
+    admission_paths_agree_under(CacheScheme::Int8);
+}
+
+/// Tentpole acceptance (quantized KV cache): the same scripted greedy
+/// workload served under the f32 and int8 cache schemes produces
+/// identical token streams, while the int8 cache's resident footprint is
+/// a fraction of the f32 one (Dh+4 vs 4*Dh bytes per cached position —
+/// ~3.2x on tiny's Dh=16, ~3.6x on small's Dh=32; the table1 bench
+/// prints the per-scheme accounting).
+#[test]
+fn kv_cache_schemes_agree() {
+    let Some(dir) = artifacts_dir() else { return };
+    if !has_admit_artifacts(&dir, CacheScheme::Int8) {
+        return;
+    }
+    let master = tiny_master_ckpt(&dir);
+    let tmp = std::env::temp_dir().join("ao_int_tests");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let ckpt_path = tmp.join("tiny_f32_kv8.aockpt");
+    master.save(&ckpt_path).unwrap();
+
+    let run = |cache_scheme: CacheScheme| -> (Vec<Vec<u32>>, u64) {
+        let (handle, join) = engine::spawn(engine::EngineConfig {
+            artifacts_dir: dir.clone(),
+            ckpt_path: ckpt_path.clone(),
+            model: "tiny".into(),
+            scheme: "f32".into(),
+            cache_scheme,
+            eos_token: None,
+            host_admission: false,
+        });
+        let mut rxs = Vec::new();
+        for i in 0..5u64 {
+            let (tx, rx) = channel();
+            handle
+                .submit(SubmitReq {
+                    id: i,
+                    prompt_tokens: vec![20 + 9 * i as u32; 3 + i as usize],
+                    max_new_tokens: 8,
+                    temperature: 0.0,
+                    seed: i,
+                    tx,
+                    submitted_at: Instant::now(),
+                })
+                .unwrap();
+            rxs.push(rx);
+        }
+        let streams = rxs
+            .into_iter()
+            .map(|rx| {
+                let mut toks = Vec::new();
+                for ev in rx {
+                    match ev {
+                        Event::Token(t) => toks.push(t),
+                        Event::Done(_) => break,
+                        Event::Error(e) => panic!("error: {e}"),
+                    }
+                }
+                toks
+            })
+            .collect();
+        handle.shutdown();
+        let m = join.join().unwrap().unwrap();
+        (streams, m.cache_resident_bytes)
+    };
+    let (f32_streams, f32_bytes) = run(CacheScheme::F32);
+    let (int8_streams, int8_bytes) = run(CacheScheme::Int8);
+    assert_eq!(
+        f32_streams, int8_streams,
+        "int8 KV quantization must not change the greedy token streams \
+         of this workload"
+    );
+    assert!(
+        int8_bytes * 3 <= f32_bytes,
+        "int8 cache must be at least 3x smaller resident: {int8_bytes} \
+         vs {f32_bytes}"
+    );
+}
+
+/// ROADMAP "untupled execution outputs": the binding must hand back one
+/// buffer per output tuple element, otherwise the device-resident decode
+/// and admission paths silently degrade to metered host round-trips (the
+/// transfer gates above would catch the bytes; this pins the capability
+/// itself).
+#[test]
+fn runtime_untuples_execution_outputs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = Runtime::open(&dir).unwrap();
+    assert!(
+        runtime.untupled_outputs(),
+        "execute_b returned a packed tuple; probe ExecuteOptions/\
+         untuple_result support in the binding"
+    );
+}
+
 /// Regression (seed collapse): the engine derived `seed ^ id` per
 /// request, which is 0 whenever seed == id (exactly what the server
 /// submits) — every temperature-sampled request shared one RNG stream.
@@ -629,6 +775,7 @@ fn sampled_requests_diverge() {
         ckpt_path,
         model: "tiny".into(),
         scheme: "f32".into(),
+        cache_scheme: CacheScheme::F32,
         eos_token: None,
         host_admission: false,
     });
@@ -690,6 +837,7 @@ fn empty_prompt_is_rejected() {
         ckpt_path,
         model: "tiny".into(),
         scheme: "f32".into(),
+        cache_scheme: CacheScheme::F32,
         eos_token: None,
         host_admission: false,
     });

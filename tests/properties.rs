@@ -10,6 +10,7 @@ use ao::quant::formats::{
     pack_int4, unpack_int4_signed, unpack_int4_unsigned, E4M3,
     ALL_FORMATS,
 };
+use ao::quant::kvcache::{dequantize_groups, quantize_groups};
 use ao::tokenizer::Tokenizer;
 use ao::util::json::Value;
 use ao::util::proptest::{check, vec_f32};
@@ -36,6 +37,53 @@ fn prop_int8_quant_error_bounded() {
                     if err > s[i] * 0.5 + 1e-5 {
                         return Err(format!(
                             "err {err} > half-scale {} at ({i},{j})", s[i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_kv_int8_roundtrip_error_bounded() {
+    // per-head int8 KV reconstruction (the serving cache's int8 scheme):
+    // every element round-trips within half a quantization step of its
+    // head group's absmax scale, values stay in [-127, 127], and the
+    // group absmax element is reconstructed to its own magnitude
+    check(
+        "kv-int8-roundtrip",
+        40,
+        |r| {
+            let d = [8usize, 16, 32][r.below(3)]; // head_dim
+            let rows = 1 + r.below(6); // (layer, slot, head, pos) groups
+            (vec![rows, d], vec_f32(r, rows * d, 2.5))
+        },
+        |(shape, x)| {
+            let d = shape[1];
+            let (q, s) = quantize_groups(x, d);
+            if q.iter().any(|&v| !(-127..=127).contains(&(v as i32))) {
+                return Err("int8 value out of range".into());
+            }
+            let rec = dequantize_groups(&q, &s, d);
+            for (i, (&orig, &r2)) in x.iter().zip(&rec).enumerate() {
+                let bound = s[i / d] * 0.5 + 1e-7;
+                if (orig - r2).abs() > bound {
+                    return Err(format!(
+                        "elem {i}: |{orig} - {r2}| > half-scale {bound}"
+                    ));
+                }
+            }
+            for (g, chunk) in x.chunks_exact(d).enumerate() {
+                let amax =
+                    chunk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                if amax > 1e-6 {
+                    let expect = amax / 127.0;
+                    if (s[g] - expect).abs() > expect * 1e-5 {
+                        return Err(format!(
+                            "group {g}: scale {} != absmax/127 {expect}",
+                            s[g]
                         ));
                     }
                 }
