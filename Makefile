@@ -8,15 +8,17 @@ PYTHON ?= python3
 # (or `make verify-stub`). See vendor/xla-stub.
 CARGOFLAGS ?=
 
-.PHONY: verify verify-stub build test fmt artifacts python-test clean
+.PHONY: verify verify-stub build test fmt clippy artifacts python-test clean
 
-## tier-1 gate: release build, test suite, formatting
-verify: build test fmt
+## tier-1 gate: release build, test suite, formatting, lints
+verify: build test fmt clippy
 
 ## tier-1 gate on the vendored no-op XLA shim (no libxla required);
 ## integration tests self-skip, host-only unit tests all run — including
-## the quant-cache suite (quant::kvcache, the dtype-dispatched splice_kv
-## and the int8 scatter/splice parity tests in coordinator::engine)
+## the pager/batcher suites and the quant-cache suite (quant::kvcache,
+## the dtype-dispatched splice_kv and the int8 scatter/splice parity
+## tests in coordinator::engine). Runs the same test + fmt + clippy trio
+## CI's blocking tier1-stub job runs.
 verify-stub:
 	$(MAKE) verify CARGOFLAGS="--no-default-features --features stub-xla"
 
@@ -28,6 +30,9 @@ test:
 
 fmt:
 	$(CARGO) fmt --check
+
+clippy:
+	$(CARGO) clippy -q --all-targets $(CARGOFLAGS) -- -D warnings
 
 ## AOT-lower the JAX model into artifacts/ (manifest.json + *.hlo.txt);
 ## the Rust runtime and the integration tests consume these

@@ -60,6 +60,7 @@ fn main() -> anyhow::Result<()> {
         model: "small".into(),
         scheme: "fp8dq_tensor".into(),
         cache_scheme: engine::CacheScheme::F32,
+        kv_layout: engine::KvLayout::Static,
         eos_token: None,
         host_admission: false,
     });

@@ -71,6 +71,7 @@ fn main() -> anyhow::Result<()> {
         model: "small".into(),
         scheme: "8da4w-32".into(),
         cache_scheme: engine::CacheScheme::F32,
+        kv_layout: engine::KvLayout::Static,
         eos_token: None,
         host_admission: false,
     });

@@ -25,13 +25,18 @@ from jax._src.lib import xla_client as xc
 
 from .model import (
     CACHE_SCHEMES,
+    KV_LAYOUTS,
     MODEL_SIZES,
     ModelConfig,
     QuantScheme,
     admit,
     admit_kv8,
+    admit_paged,
+    admit_paged_kv8,
     decode_step,
     decode_step_kv8,
+    decode_step_paged,
+    decode_step_paged_kv8,
     init_params,
     nll,
     prefill,
@@ -174,36 +179,64 @@ def serving_args(cfg, scheme, batch, seq):
     return params, tokens, lens
 
 
+def _cache_arg_specs(cfg, batch, smax, n_pages, page_size):
+    """(args, names) of the cache block per (layout, cache scheme), in the
+    positional order the engine binds: values first, each scale tensor
+    riding directly behind its value tensor so both donate cleanly.
+
+    static: values [L, B, Hkv, Smax, Dh] (+ scales [L, B, Hkv, Smax]);
+    paged:  value pages [L, n_pages, Hkv, page_size, Dh] (+ scale pages
+    [L, n_pages, Hkv, page_size]) — CacheScheme picks the bytes inside a
+    page, the layout picks how pages are addressed.
+    """
+    out = {}
+    for ltag, kvshape in (
+        ("static", (cfg.n_layers, batch, cfg.n_kv_heads, smax,
+                    cfg.head_dim)),
+        ("paged", (cfg.n_layers, n_pages, cfg.n_kv_heads, page_size,
+                   cfg.head_dim)),
+    ):
+        kc = jax.ShapeDtypeStruct(kvshape, jnp.float32)
+        vc = jax.ShapeDtypeStruct(kvshape, jnp.float32)
+        kc8 = jax.ShapeDtypeStruct(kvshape, jnp.int8)
+        vc8 = jax.ShapeDtypeStruct(kvshape, jnp.int8)
+        ks8 = jax.ShapeDtypeStruct(kvshape[:4], jnp.float32)
+        vs8 = jax.ShapeDtypeStruct(kvshape[:4], jnp.float32)
+        out[(ltag, "f32")] = ((kc, vc), ("kcache", "vcache"))
+        out[(ltag, "int8")] = (
+            (kc8, ks8, vc8, vs8),
+            ("kcache", "kscale", "vcache", "vscale"),
+        )
+    return out
+
+
+CACHE_SUFFIX = {"f32": "", "int8": "_kv8"}
+LAYOUT_SUFFIX = {"static": "", "paged": "_paged"}
+
+
 def export_serving(ex, cfg, scheme_tag, batch, prefill_seqs, smax,
-                   cache_schemes=("f32",)):
+                   cache_schemes=("f32",), kv_layouts=("static",),
+                   page_size=16, n_pages=0):
     scheme = QuantScheme.parse(scheme_tag)
     params, _, _ = serving_args(cfg, scheme, batch, 8)
-    kvshape = (
-        cfg.n_layers, batch, cfg.n_kv_heads, smax, cfg.head_dim
-    )
-    kc = jax.ShapeDtypeStruct(kvshape, jnp.float32)
-    vc = jax.ShapeDtypeStruct(kvshape, jnp.float32)
-    # int8 cache scheme: value tensors in int8 plus per-(layer, slot,
-    # head, position) absmax scales with the head_dim axis reduced away
-    kc8 = jax.ShapeDtypeStruct(kvshape, jnp.int8)
-    vc8 = jax.ShapeDtypeStruct(kvshape, jnp.int8)
-    ks8 = jax.ShapeDtypeStruct(kvshape[:4], jnp.float32)
-    vs8 = jax.ShapeDtypeStruct(kvshape[:4], jnp.float32)
-    # the engine binds cache buffers positionally in this order; scales
-    # ride directly behind their value tensor so both donate cleanly
-    cache_args = {
-        "f32": ((kc, vc), ("kcache", "vcache")),
-        "int8": ((kc8, ks8, vc8, vs8),
-                 ("kcache", "kscale", "vcache", "vscale")),
-    }
-    cache_suffix = {"f32": "", "int8": "_kv8"}
+    cache_args = _cache_arg_specs(cfg, batch, smax, n_pages, page_size)
+
+    def layout_meta(ltag):
+        meta = {"layout": ltag}
+        if ltag == "paged":
+            meta.update({"page_size": page_size, "n_pages": n_pages})
+        return meta
 
     for seq in prefill_seqs:
         tokens = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
         lens = jax.ShapeDtypeStruct((batch,), jnp.int32)
         slot_ids = jax.ShapeDtypeStruct((batch,), jnp.int32)
-        # prefill is cache-scheme agnostic (fresh K/V leave in f32; the
-        # admit graphs / host fallback quantize on write)
+        # one block-table row per prefill row, covering the bucket; the
+        # engine fills unallocated tail blocks with the hole sentinel
+        admit_blocks = -(-seq // page_size)
+        admit_bt = jax.ShapeDtypeStruct((batch, admit_blocks), jnp.int32)
+        # prefill is cache-scheme and layout agnostic (fresh K/V leave in
+        # f32; the admit graphs / host fallback quantize + place on write)
         ex.export(
             f"prefill_{scheme_tag}_{cfg.name}_b{batch}_s{seq}",
             lambda p, t, l: prefill(p, t, l, cfg, scheme, smax),
@@ -212,48 +245,90 @@ def export_serving(ex, cfg, scheme_tag, batch, prefill_seqs, smax,
             {"kind": "prefill", "model": cfg.name, "scheme": scheme_tag,
              "batch": batch, "seq": seq, "smax": smax},
         )
-        # device-resident admission: prefill + per-slot scatter into the
-        # persistent cache, so admission never round-trips the cache
-        for ctag in cache_schemes:
-            (cargs, cnames) = cache_args[ctag]
-            fn = (
-                (lambda p, k, ks, v, vs, t, l, s: admit_kv8(
-                    p, k, ks, v, vs, t, l, s, cfg, scheme, smax))
-                if ctag == "int8"
-                else (lambda p, k, v, t, l, s: admit(
-                    p, k, v, t, l, s, cfg, scheme, smax))
-            )
-            ex.export(
-                f"admit_{scheme_tag}_{cfg.name}_b{batch}_s{seq}"
-                f"{cache_suffix[ctag]}",
-                fn,
-                (params,) + cargs + (tokens, lens, slot_ids),
-                ("params",) + cnames + ("tokens", "lens", "slot_ids"),
-                {"kind": "admit", "model": cfg.name, "scheme": scheme_tag,
-                 "batch": batch, "seq": seq, "smax": smax, "cache": ctag},
-                donate={i + 1: n for i, n in enumerate(cnames)},
-            )
+        # device-resident admission: prefill + scatter into the
+        # persistent cache (per-slot rows, or per-slot pages), so
+        # admission never round-trips the cache
+        for ltag in kv_layouts:
+            for ctag in cache_schemes:
+                (cargs, cnames) = cache_args[(ltag, ctag)]
+                fn = {
+                    ("static", "f32"): lambda p, k, v, t, l, s: admit(
+                        p, k, v, t, l, s, cfg, scheme, smax),
+                    ("static", "int8"):
+                        lambda p, k, ks, v, vs, t, l, s: admit_kv8(
+                            p, k, ks, v, vs, t, l, s, cfg, scheme, smax),
+                    ("paged", "f32"): lambda p, k, v, t, l, bt: admit_paged(
+                        p, k, v, t, l, bt, cfg, scheme, smax),
+                    ("paged", "int8"):
+                        lambda p, k, ks, v, vs, t, l, bt: admit_paged_kv8(
+                            p, k, ks, v, vs, t, l, bt, cfg, scheme, smax),
+                }[(ltag, ctag)]
+                extra = (
+                    (tokens, lens, admit_bt)
+                    if ltag == "paged"
+                    else (tokens, lens, slot_ids)
+                )
+                extra_names = (
+                    ("tokens", "lens", "block_tables")
+                    if ltag == "paged"
+                    else ("tokens", "lens", "slot_ids")
+                )
+                meta = {"kind": "admit", "model": cfg.name,
+                        "scheme": scheme_tag, "batch": batch, "seq": seq,
+                        "smax": smax, "cache": ctag}
+                meta.update(layout_meta(ltag))
+                ex.export(
+                    f"admit_{scheme_tag}_{cfg.name}_b{batch}_s{seq}"
+                    f"{CACHE_SUFFIX[ctag]}{LAYOUT_SUFFIX[ltag]}",
+                    fn,
+                    (params,) + cargs + extra,
+                    ("params",) + cnames + extra_names,
+                    meta,
+                    donate={i + 1: n for i, n in enumerate(cnames)},
+                )
 
     token = jax.ShapeDtypeStruct((batch,), jnp.int32)
     pos = jax.ShapeDtypeStruct((batch,), jnp.int32)
-    for ctag in cache_schemes:
-        (cargs, cnames) = cache_args[ctag]
-        fn = (
-            (lambda p, k, ks, v, vs, t, q: decode_step_kv8(
-                p, k, ks, v, vs, t, q, cfg, scheme))
-            if ctag == "int8"
-            else (lambda p, k, v, t, q: decode_step(
-                p, k, v, t, q, cfg, scheme))
-        )
-        ex.export(
-            f"decode_{scheme_tag}_{cfg.name}_b{batch}{cache_suffix[ctag]}",
-            fn,
-            (params,) + cargs + (token, pos),
-            ("params",) + cnames + ("token", "pos"),
-            {"kind": "decode", "model": cfg.name, "scheme": scheme_tag,
-             "batch": batch, "smax": smax, "cache": ctag},
-            donate={i + 1: n for i, n in enumerate(cnames)},
-        )
+    decode_bt = jax.ShapeDtypeStruct(
+        (batch, smax // page_size), jnp.int32
+    )
+    for ltag in kv_layouts:
+        for ctag in cache_schemes:
+            (cargs, cnames) = cache_args[(ltag, ctag)]
+            fn = {
+                ("static", "f32"): lambda p, k, v, t, q: decode_step(
+                    p, k, v, t, q, cfg, scheme),
+                ("static", "int8"):
+                    lambda p, k, ks, v, vs, t, q: decode_step_kv8(
+                        p, k, ks, v, vs, t, q, cfg, scheme),
+                ("paged", "f32"):
+                    lambda p, k, v, t, q, bt: decode_step_paged(
+                        p, k, v, t, q, bt, cfg, scheme),
+                ("paged", "int8"):
+                    lambda p, k, ks, v, vs, t, q, bt: decode_step_paged_kv8(
+                        p, k, ks, v, vs, t, q, bt, cfg, scheme),
+            }[(ltag, ctag)]
+            extra = (
+                (token, pos, decode_bt) if ltag == "paged" else (token, pos)
+            )
+            extra_names = (
+                ("token", "pos", "block_tables")
+                if ltag == "paged"
+                else ("token", "pos")
+            )
+            meta = {"kind": "decode", "model": cfg.name,
+                    "scheme": scheme_tag, "batch": batch, "smax": smax,
+                    "cache": ctag}
+            meta.update(layout_meta(ltag))
+            ex.export(
+                f"decode_{scheme_tag}_{cfg.name}_b{batch}"
+                f"{CACHE_SUFFIX[ctag]}{LAYOUT_SUFFIX[ltag]}",
+                fn,
+                (params,) + cargs + extra,
+                ("params",) + cnames + extra_names,
+                meta,
+                donate={i + 1: n for i, n in enumerate(cnames)},
+            )
 
     t_eval = jax.ShapeDtypeStruct((batch, smax), jnp.int32)
     lens_b = jax.ShapeDtypeStruct((batch,), jnp.int32)
@@ -394,6 +469,16 @@ def main():
     ap.add_argument("--kv-cache", default="f32,int8",
                     help="comma list of KV-cache schemes to export "
                          "decode/admit artifacts for (f32, int8)")
+    ap.add_argument("--kv-layout", default="static,paged",
+                    help="comma list of KV-cache layouts to export "
+                         "decode/admit artifacts for (static, paged)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="positions per KV page for the paged layout "
+                         "(must divide every exported model's max_seq)")
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="page-pool size for the paged layout; 0 = auto "
+                         "(half the worst-case batch*smax footprint, "
+                         "floor one full-context reservation)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--train-batch", type=int, default=4)
     ap.add_argument("--train-seq", type=int, default=64)
@@ -412,20 +497,52 @@ def main():
         if c not in CACHE_SCHEMES:
             ap.error(f"unknown --kv-cache scheme '{c}' "
                      f"(expected one of {', '.join(CACHE_SCHEMES)})")
+    kv_layouts = tuple(l for l in args.kv_layout.split(",") if l)
+    for l in kv_layouts:
+        if l not in KV_LAYOUTS:
+            ap.error(f"unknown --kv-layout '{l}' "
+                     f"(expected one of {', '.join(KV_LAYOUTS)})")
+    if args.page_size <= 0:
+        ap.error("--page-size must be positive")
+    if args.kv_pages < 0:
+        ap.error("--kv-pages must be >= 0 (0 = auto)")
 
     t0 = time.time()
     for size in sizes:
         cfg = MODEL_SIZES[size]
         ex.add_model(cfg)
         smax = cfg.max_seq
+        if "paged" in kv_layouts and smax % args.page_size != 0:
+            ap.error(f"--page-size {args.page_size} does not divide "
+                     f"max_seq {smax} of model '{size}'")
+        if "paged" in kv_layouts and smax // args.page_size < 2:
+            # one block per slot degenerates to the static footprint:
+            # the auto pool would equal B*blocks and paging saves nothing
+            ap.error(f"--page-size {args.page_size} leaves fewer than 2 "
+                     f"blocks per slot for model '{size}' (max_seq "
+                     f"{smax}); paging needs page_size <= max_seq/2")
+        # auto pool size: half of the worst-case B*Smax footprint — the
+        # point of paging is that resident bytes track live context, and
+        # admission backpressure absorbs bursts beyond the pool. Floor at
+        # one FULL-context reservation (blocks_per_slot), or a request
+        # spanning the whole window could never be admitted at all; at
+        # batch 1 that floor means the auto pool saves nothing (pass
+        # --kv-pages to trade max context for memory explicitly).
+        blocks_per_slot = smax // args.page_size
+        n_pages = args.kv_pages or max(
+            blocks_per_slot, args.batch * blocks_per_slot // 2
+        )
         size_schemes = (
             schemes if size in args.serve_size.split(",") else ["f32", "8da4w-32"]
         )
         print(f"[{size}] serving schemes: {size_schemes} "
-              f"(kv-cache: {list(cache_schemes)})")
+              f"(kv-cache: {list(cache_schemes)}, kv-layout: "
+              f"{list(kv_layouts)}, page_size={args.page_size}, "
+              f"n_pages={n_pages})")
         for tag in size_schemes:
             export_serving(ex, cfg, tag, args.batch, prefill_seqs, smax,
-                           cache_schemes)
+                           cache_schemes, kv_layouts, args.page_size,
+                           n_pages)
         print(f"[{size}] training recipes: {recipes}")
         for recipe in recipes:
             export_training(

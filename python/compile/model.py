@@ -24,6 +24,14 @@ scale per head per position, formats.kv_quantize). Writes quantize, the
 attention read dequantizes — resident cache bytes and admission splice
 traffic shrink ~4x while prefill/nll stay f32 and scheme-agnostic.
 
+Paged KV cache (`KvLayout` paged): `admit_paged` / `decode_step_paged`
+(+ `_kv8` variants) replace the per-slot [B, Smax] rows with a page pool
+[L, n_pages, Hkv, page_size, Dh] addressed through a per-slot block-table
+input — the Rust pager allocates pages, the graphs gather/scatter through
+the table (out-of-range ids are holes: writes drop, reads clamp+mask).
+Paging composes with CacheScheme: a page is a (values block, scales
+block) pair, so int8 pages carry f32 scale pages of the same addressing.
+
 Everything is f32: this testbed's CPU PJRT has no bf16 arithmetic advantage,
 so f32 stands in for the paper's BF16 baseline (DESIGN.md §2).
 """
@@ -42,6 +50,14 @@ from . import kernels as K
 # (kcache, vcache); int8 stores (kcache i8, kscale f32, vcache i8, vscale
 # f32) with kv_quantize/kv_dequantize at the write/read boundaries.
 CACHE_SCHEMES = ("f32", "int8")
+
+# KV-cache layouts (mirrors the Rust engine's `KvLayout`): "static"
+# reserves a [B, Smax] row per slot; "paged" stores pages
+# [L, n_pages, Hkv, page_size, Dh] indexed by per-slot block tables, so
+# resident bytes scale with live context instead of worst-case context.
+# A page is a (values block, scales block) pair — CacheScheme dictates
+# the bytes inside a page, the layout dictates how pages are addressed.
+KV_LAYOUTS = ("static", "paged")
 
 # ---------------------------------------------------------------------------
 # Config
@@ -453,6 +469,201 @@ def _decode_impl(params, cache, token, pos, cfg, scheme, quantized):
     x = rms_norm(x[:, 0], params["out_norm"], cfg.norm_eps)
     logits = quantized_linear(x, params["lm_head"], scheme)
     return (logits,) + cache_out
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache (block-table paging, composed with CacheScheme)
+# ---------------------------------------------------------------------------
+#
+# The paged layout stores the cache as a pool of fixed-size pages
+# [L, n_pages, Hkv, page_size, Dh] (+ scale pages [L, n_pages, Hkv,
+# page_size] under int8) instead of one [B, Smax] row per slot. A per-slot
+# block table [B, n_blocks] of physical page ids is an ordinary graph
+# input: the Rust pager owns the allocation and uploads a fresh table
+# with every call, the graphs only gather/scatter through it.
+#
+# Sentinel convention: a block-table entry >= n_pages is a hole (an
+# unallocated block, or an idle/dummy row). Writes drop (`mode="drop"`),
+# reads clamp (`mode="clip"`) — the clamped garbage is always masked out
+# of attention because a hole only covers positions > the slot's pos.
+
+
+def _gather_pages(pages, block_tables):
+    """pages [P, Hkv, ps, Dh(or nothing)] gathered through block_tables
+    [B, nb] into logical position order [B, Hkv, nb*ps, ...]. Out-of-range
+    ids (holes) clamp — NEVER use the default fill mode, a NaN fill would
+    poison the masked softmax."""
+    g = jnp.take(pages, block_tables, axis=0, mode="clip")
+    if g.ndim == 5:  # values [B, nb, Hkv, ps, Dh]
+        b, nb, h, ps, dh = g.shape
+        return g.transpose(0, 2, 1, 3, 4).reshape(b, h, nb * ps, dh)
+    b, nb, h, ps = g.shape  # scales [B, nb, Hkv, ps]
+    return g.transpose(0, 2, 1, 3).reshape(b, h, nb * ps)
+
+
+def decode_step_paged(params, kpages, vpages, token, pos, block_tables,
+                      cfg: ModelConfig, scheme: QuantScheme):
+    """`decode_step` over the paged layout.
+
+    kpages/vpages [L, n_pages, Hkv, page_size, Dh]; token/pos [B] int32;
+    block_tables [B, n_blocks] int32 physical page ids (>= n_pages =
+    hole). The fresh row is scattered into (block_tables[b, pos//ps],
+    pos%ps); attention gathers the slot's pages into logical order.
+    Returns (logits [B,V], K', V')."""
+    return _decode_paged_impl(
+        params, (kpages, vpages), token, pos, block_tables, cfg, scheme,
+        quantized=False,
+    )
+
+
+def decode_step_paged_kv8(params, kpages, kscale, vpages, vscale, token,
+                          pos, block_tables, cfg: ModelConfig,
+                          scheme: QuantScheme):
+    """`decode_step_paged` for the int8 cache scheme: value pages int8
+    plus f32 absmax scale pages [L, n_pages, Hkv, page_size] — the same
+    per-(head, position) scales as the static int8 layout, paged with
+    their value block. Returns (logits, K', Ks', V', Vs')."""
+    return _decode_paged_impl(
+        params, (kpages, kscale, vpages, vscale), token, pos, block_tables,
+        cfg, scheme, quantized=True,
+    )
+
+
+def _decode_paged_impl(params, cache, token, pos, block_tables, cfg,
+                       scheme, quantized):
+    b = token.shape[0]
+    ps = cache[0].shape[3]
+    nb = block_tables.shape[1]
+    seff = nb * ps
+    x = params["tok_emb"][token][:, None]  # [B,1,D]
+    cos, sin = rope_tables(cfg, pos)  # [B, Dh/2]
+    cos, sin = cos[:, None], sin[:, None]  # [B,1,Dh/2]
+    tpos = jnp.arange(seff)
+    mask01 = (tpos[None, :] <= pos[:, None]).astype(jnp.float32)
+    mask = jnp.where(mask01 > 0, 0.0, -1e9)[:, None, None, :]  # [B,1,1,Seff]
+    barange = jnp.arange(b)
+    # the page each slot writes this token into, and the offset inside it
+    page_idx = block_tables[barange, pos // ps]  # [B]
+    off = pos % ps  # [B]
+
+    def layer_fn(h, carry):
+        lp = carry[0]
+        hn = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        q = _project(hn, lp["wq"], scheme, cfg, cfg.n_heads)  # [B,H,1,Dh]
+        kk = _project(hn, lp["wk"], scheme, cfg, cfg.n_kv_heads)
+        vv = _project(hn, lp["wv"], scheme, cfg, cfg.n_kv_heads)
+        q = apply_rope(q, cos[:, :, None], sin[:, :, None])
+        kk = apply_rope(kk, cos[:, :, None], sin[:, :, None])
+        if quantized:
+            kc, ksc, vc, vsc = carry[1:]
+            qk, sk = F.kv_quantize(kk[:, :, 0])  # [B,Hkv,Dh] / [B,Hkv]
+            qv, sv = F.kv_quantize(vv[:, :, 0])
+            kc = kc.at[page_idx, :, off].set(qk, mode="drop")
+            ksc = ksc.at[page_idx, :, off].set(sk, mode="drop")
+            vc = vc.at[page_idx, :, off].set(qv, mode="drop")
+            vsc = vsc.at[page_idx, :, off].set(sv, mode="drop")
+            keys = F.kv_dequantize(
+                _gather_pages(kc, block_tables),
+                _gather_pages(ksc, block_tables),
+            )
+            vals = F.kv_dequantize(
+                _gather_pages(vc, block_tables),
+                _gather_pages(vsc, block_tables),
+            )
+            cache_out = (kc, ksc, vc, vsc)
+        else:
+            kc, vc = carry[1:]
+            kc = kc.at[page_idx, :, off].set(kk[:, :, 0], mode="drop")
+            vc = vc.at[page_idx, :, off].set(vv[:, :, 0], mode="drop")
+            keys = _gather_pages(kc, block_tables)  # [B,Hkv,Seff,Dh]
+            vals = _gather_pages(vc, block_tables)
+            cache_out = (kc, vc)
+        rep = cfg.n_heads // cfg.n_kv_heads
+        keys_r = jnp.repeat(keys, rep, axis=1)  # [B,H,Seff,Dh]
+        vals_r = jnp.repeat(vals, rep, axis=1)
+        scores = jnp.einsum("bhsd,bhtd->bhst", q, keys_r) / cfg.head_dim**0.5
+        scores = scores + mask
+        attn = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhst,bhtd->bhsd", attn, vals_r)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b, 1, -1)
+        a = quantized_linear(
+            ctx.reshape(b, -1), lp["wo"], scheme
+        ).reshape(b, 1, -1)
+        h = h + a
+        h = h + mlp_block(h, lp, scheme, cfg)
+        return h, cache_out
+
+    x, cache_out = jax.lax.scan(
+        layer_fn, x, (params["layers"],) + cache
+    )
+    x = rms_norm(x[:, 0], params["out_norm"], cfg.norm_eps)
+    logits = quantized_linear(x, params["lm_head"], scheme)
+    return (logits,) + cache_out
+
+
+def _page_value_blocks(x, ab, ps):
+    """Fresh KV [L, B, Hkv, S>=ab*ps, Dh] chopped into per-row page blocks
+    [L, B*ab, Hkv, ps, Dh] (row b's block j lands at flat index b*ab+j)."""
+    l, b, h, _, dh = x.shape
+    xb = x[:, :, :, : ab * ps].reshape(l, b, h, ab, ps, dh)
+    return xb.transpose(0, 1, 3, 2, 4, 5).reshape(l, b * ab, h, ps, dh)
+
+
+def _page_scale_blocks(s, ab, ps):
+    """Fresh scales [L, B, Hkv, S>=ab*ps] -> [L, B*ab, Hkv, ps]."""
+    l, b, h, _ = s.shape
+    sb = s[:, :, :, : ab * ps].reshape(l, b, h, ab, ps)
+    return sb.transpose(0, 1, 3, 2, 4).reshape(l, b * ab, h, ps)
+
+
+def admit_paged(params, kpages, vpages, tokens, lens, block_tables,
+                cfg: ModelConfig, scheme: QuantScheme, smax: int):
+    """`admit` over the paged layout: prefill and scatter each row's
+    fresh KV blocks into the pages the engine's pager assigned it.
+
+    block_tables [B, ceil(S/page_size)] int32: row b's block j goes to
+    page block_tables[b, j]. Holes (ids >= n_pages) drop — a dummy row is
+    all holes, a short prompt leaves its unallocated tail blocks as
+    holes. Returns (last-token logits [B,V], K', V')."""
+    logits, ks, vs = prefill(params, tokens, lens, cfg, scheme, smax)
+    ps = kpages.shape[3]
+    ab = block_tables.shape[1]
+    flat = block_tables.reshape(-1)
+    kpages = kpages.at[:, flat].set(
+        _page_value_blocks(ks, ab, ps), mode="drop"
+    )
+    vpages = vpages.at[:, flat].set(
+        _page_value_blocks(vs, ab, ps), mode="drop"
+    )
+    return logits, kpages, vpages
+
+
+def admit_paged_kv8(params, kpages, kscale, vpages, vscale, tokens, lens,
+                    block_tables, cfg: ModelConfig, scheme: QuantScheme,
+                    smax: int):
+    """`admit_paged` for the int8 cache scheme: prefill in f32, quantize
+    per (layer, row, head, position), scatter value blocks AND their
+    scale blocks into the assigned pages. Returns
+    (logits, K', Ks', V', Vs')."""
+    logits, ks, vs = prefill(params, tokens, lens, cfg, scheme, smax)
+    qk, sk = F.kv_quantize(ks)
+    qv, sv = F.kv_quantize(vs)
+    ps = kpages.shape[3]
+    ab = block_tables.shape[1]
+    flat = block_tables.reshape(-1)
+    kpages = kpages.at[:, flat].set(
+        _page_value_blocks(qk, ab, ps), mode="drop"
+    )
+    kscale = kscale.at[:, flat].set(
+        _page_scale_blocks(sk, ab, ps), mode="drop"
+    )
+    vpages = vpages.at[:, flat].set(
+        _page_value_blocks(qv, ab, ps), mode="drop"
+    )
+    vscale = vscale.at[:, flat].set(
+        _page_scale_blocks(sv, ab, ps), mode="drop"
+    )
+    return logits, kpages, kscale, vpages, vscale
 
 
 # ---------------------------------------------------------------------------

@@ -21,7 +21,9 @@ def exported(tmp_path_factory):
             "--schemes", "f32,int8wo",
             "--recipes", "bf16",
             "--batch", "2", "--train-batch", "2", "--train-seq", "16",
-            "--prefill-seqs", "16", "--kv-cache", "f32,int8", "--no-fig3",
+            "--prefill-seqs", "16", "--kv-cache", "f32,int8",
+            "--kv-layout", "static,paged", "--page-size", "8",
+            "--no-fig3",
         ],
         cwd=ROOT, capture_output=True, text=True, timeout=560,
     )
@@ -76,13 +78,22 @@ def test_decode_kv_shapes(exported):
     _, manifest = exported
     decodes = [a for a in manifest["artifacts"] if a["kind"] == "decode"]
     assert {a.get("cache", "f32") for a in decodes} == {"f32", "int8"}
+    assert {a.get("layout", "static") for a in decodes} == {
+        "static", "paged",
+    }
     for dec in decodes:
         kc = [i for i in dec["inputs"] if i["name"] == "kcache"][0]
         model = manifest["models"][dec["model"]]
-        kvshape = [
-            model["n_layers"], dec["batch"], model["n_kv_heads"],
-            dec["smax"], model["head_dim"],
-        ]
+        if dec.get("layout", "static") == "paged":
+            kvshape = [
+                model["n_layers"], dec["n_pages"], model["n_kv_heads"],
+                dec["page_size"], model["head_dim"],
+            ]
+        else:
+            kvshape = [
+                model["n_layers"], dec["batch"], model["n_kv_heads"],
+                dec["smax"], model["head_dim"],
+            ]
         assert kc["shape"] == kvshape
         if dec.get("cache", "f32") == "int8":
             assert kc["dtype"] == "s8"
@@ -93,14 +104,64 @@ def test_decode_kv_shapes(exported):
             assert kc["dtype"] == "f32"
 
 
+def test_paged_artifact_contract(exported):
+    """Paged decode/admit artifacts: the manifest carries the paging
+    geometry (layout/page_size/n_pages), the block-table input covers
+    blocks-per-slot (decode) or the prefill bucket (admit), and the pool
+    is smaller than the worst-case static footprint — that is the point
+    of paging."""
+    _, manifest = exported
+    paged = [
+        a for a in manifest["artifacts"]
+        if a.get("layout") == "paged"
+    ]
+    assert paged, "exporter must emit paged artifacts"
+    for a in paged:
+        assert a["kind"] in ("decode", "admit")
+        ps, n_pages = a["page_size"], a["n_pages"]
+        assert a["smax"] % ps == 0
+        blocks_per_slot = a["smax"] // ps
+        # auto pool: strictly below the static B*Smax footprint for any
+        # real batch, never below one full-context reservation
+        assert n_pages >= blocks_per_slot
+        if a["batch"] > 1:
+            assert n_pages < a["batch"] * blocks_per_slot, (
+                "auto pool must be smaller than the static footprint"
+            )
+        by_name = {i["name"]: i for i in a["inputs"]}
+        bt = by_name["block_tables"]
+        assert bt["dtype"] == "s32"
+        if a["kind"] == "decode":
+            assert bt["shape"] == [a["batch"], blocks_per_slot]
+            assert a["inputs"][-1]["name"] == "block_tables"
+            assert a["inputs"][-3]["name"] == "token"
+        else:
+            admit_blocks = -(-a["seq"] // ps)
+            assert bt["shape"] == [a["batch"], admit_blocks]
+            assert a["inputs"][-1]["name"] == "block_tables"
+            assert a["inputs"][-3]["name"] == "tokens"
+        kshape = by_name["kcache"]["shape"]
+        assert kshape[1] == n_pages and kshape[3] == ps
+        if a.get("cache", "f32") == "int8":
+            assert by_name["kscale"]["shape"] == kshape[:4]
+    # static entries carry no paging geometry
+    for a in manifest["artifacts"]:
+        if a["kind"] in ("decode", "admit") and a.get("layout") == "static":
+            assert "page_size" not in a and "n_pages" not in a
+            assert not any(
+                i["name"] == "block_tables" for i in a["inputs"]
+            )
+
+
 def test_admit_artifact_contract(exported):
-    """Every prefill bucket ships a matching admit artifact per cache
-    scheme whose trailing inputs and cache-shaped outputs follow the
-    engine's binding order."""
+    """Every prefill bucket ships a matching admit artifact per (cache
+    scheme, layout) whose trailing inputs and cache-shaped outputs follow
+    the engine's binding order."""
     _, manifest = exported
     prefills = [a for a in manifest["artifacts"] if a["kind"] == "prefill"]
     admits = {
-        (a["model"], a.get("scheme"), a["seq"], a.get("cache", "f32")): a
+        (a["model"], a.get("scheme"), a["seq"], a.get("cache", "f32"),
+         a.get("layout", "static")): a
         for a in manifest["artifacts"]
         if a["kind"] == "admit"
     }
@@ -109,26 +170,34 @@ def test_admit_artifact_contract(exported):
         "f32": ["kcache", "vcache"],
         "int8": ["kcache", "kscale", "vcache", "vscale"],
     }
+    layout_trailing = {
+        "static": ["tokens", "lens", "slot_ids"],
+        "paged": ["tokens", "lens", "block_tables"],
+    }
     for p in prefills:
         for cache, cnames in cache_inputs.items():
-            a = admits[(p["model"], p.get("scheme"), p["seq"], cache)]
-            names = [i["name"] for i in a["inputs"]]
-            trailing = cnames + ["tokens", "lens", "slot_ids"]
-            assert names[-len(trailing):] == trailing, a["name"]
-            by_name = {i["name"]: i for i in a["inputs"]}
-            kshape = by_name["kcache"]["shape"]
-            assert by_name["vcache"]["shape"] == kshape
-            assert by_name["tokens"]["shape"] == [a["batch"], a["seq"]]
-            assert by_name["slot_ids"]["shape"] == [a["batch"]]
-            assert by_name["slot_ids"]["dtype"] == "s32"
-            # outputs: (logits, caches') with cache shapes preserved
-            assert len(a["outputs"]) == 1 + len(cnames)
-            for i, n in enumerate(cnames):
-                assert a["outputs"][1 + i]["shape"] == by_name[n]["shape"]
-                assert a["outputs"][1 + i]["dtype"] == by_name[n]["dtype"]
-            if cache == "int8":
-                assert by_name["kcache"]["dtype"] == "s8"
-                assert by_name["kscale"]["shape"] == kshape[:4]
+            for layout, tail in layout_trailing.items():
+                a = admits[
+                    (p["model"], p.get("scheme"), p["seq"], cache, layout)
+                ]
+                names = [i["name"] for i in a["inputs"]]
+                trailing = cnames + tail
+                assert names[-len(trailing):] == trailing, a["name"]
+                by_name = {i["name"]: i for i in a["inputs"]}
+                kshape = by_name["kcache"]["shape"]
+                assert by_name["vcache"]["shape"] == kshape
+                assert by_name["tokens"]["shape"] == [a["batch"], a["seq"]]
+                assert by_name[tail[-1]]["dtype"] == "s32"
+                if layout == "static":
+                    assert by_name["slot_ids"]["shape"] == [a["batch"]]
+                # outputs: (logits, caches') with cache shapes preserved
+                assert len(a["outputs"]) == 1 + len(cnames)
+                for i, n in enumerate(cnames):
+                    assert a["outputs"][1 + i]["shape"] == by_name[n]["shape"]
+                    assert a["outputs"][1 + i]["dtype"] == by_name[n]["dtype"]
+                if cache == "int8":
+                    assert by_name["kcache"]["dtype"] == "s8"
+                    assert by_name["kscale"]["shape"] == kshape[:4]
 
 
 def test_donation_metadata(exported):

@@ -12,8 +12,12 @@ from compile.model import (
     QuantScheme,
     admit,
     admit_kv8,
+    admit_paged,
+    admit_paged_kv8,
     decode_step,
     decode_step_kv8,
+    decode_step_paged,
+    decode_step_paged_kv8,
     init_params,
     linear_shapes,
     nll,
@@ -277,6 +281,258 @@ def test_kv8_greedy_decode_matches_f32_stream(params, rng):
         lq, qk, sk, qv, sv = decode_step_kv8(
             params, qk, sk, qv, sv, nq, pos, CFG, sch
         )
+        pos = pos + 1
+
+
+# ---------------------------------------------------------------------------
+# Paged layout (block-table paging over the same CacheScheme bytes)
+# ---------------------------------------------------------------------------
+
+PS = 8  # page size used by the paged tests (divides SMAX = 32)
+NB = SMAX // PS  # blocks per slot
+
+
+def _pages_from_static(x, n_pages, perm):
+    """Static cache [L, B, Hkv, SMAX, Dh(opt)] re-laid as pages: slot b's
+    block j lands in physical page perm[b*NB + j]."""
+    l, b, h = x.shape[:3]
+    tail = x.shape[4:]  # (Dh,) for values, () for scales
+    blocks = x.reshape((l, b, h, NB, PS) + tail)
+    axes = (0, 1, 3, 2, 4) + tuple(range(5, 5 + len(tail)))
+    blocks = blocks.transpose(axes).reshape((l, b * NB, h, PS) + tail)
+    pages = jnp.zeros((l, n_pages, h, PS) + tail, x.dtype)
+    return pages.at[:, jnp.asarray(perm, jnp.int32)].set(blocks)
+
+
+def _identity_pages(x, n_pages):
+    """`_pages_from_static` with the identity table (page == block id)."""
+    return _pages_from_static(x, n_pages, np.arange(x.shape[1] * NB))
+
+
+def _identity_table(b):
+    return jnp.asarray(
+        [[r * NB + j for j in range(NB)] for r in range(b)], jnp.int32
+    )
+
+
+def test_decode_step_paged_matches_static(params, rng):
+    """The paged decode graph is the static graph under a change of
+    addressing: with an identity block table the logits and the written
+    rows are bit-identical, step after step."""
+    sch = QuantScheme("f32")
+    b = 2
+    toks = _toks(rng, b, 16)
+    lens = jnp.asarray([12, 9], jnp.int32)
+    logits, k, v = prefill(params, toks, lens, CFG, sch, SMAX)
+    n_pages = b * NB + 1  # one spare page the slots never touch
+    kp, vp = _identity_pages(k, n_pages), _identity_pages(v, n_pages)
+    bt = _identity_table(b)
+    pos = lens
+    lf, lp = logits, logits
+    for _ in range(3):
+        nxt = jnp.argmax(lf, -1).astype(jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(nxt), np.asarray(jnp.argmax(lp, -1))
+        )
+        lf, k, v = decode_step(params, k, v, nxt, pos, CFG, sch)
+        lp, kp, vp = decode_step_paged(
+            params, kp, vp, nxt, pos, bt, CFG, sch
+        )
+        np.testing.assert_array_equal(np.asarray(lf), np.asarray(lp))
+        pos = pos + 1
+    # the pages hold exactly the static cache's rows, block by block
+    np.testing.assert_array_equal(
+        np.asarray(kp)[:, : b * NB], np.asarray(_identity_pages(k, b * NB))
+    )
+
+
+def test_decode_step_paged_matches_static_with_shuffled_pages(params, rng):
+    """The gather/scatter must respect the block table, not the physical
+    page order: with slots' blocks scattered across a shuffled page
+    permutation (interleaved between slots, out of order within a slot),
+    paged decode still reproduces the static logits bit-for-bit. An
+    axis-order bug in the page gather would pass the identity-table test
+    and fail here."""
+    sch = QuantScheme("f32")
+    b = 2
+    toks = _toks(rng, b, 16)
+    lens = jnp.asarray([12, 9], jnp.int32)
+    logits, k, v = prefill(params, toks, lens, CFG, sch, SMAX)
+    n_pages = b * NB + 3
+    perm = rng.permutation(n_pages)[: b * NB]
+    kp = _pages_from_static(k, n_pages, perm)
+    vp = _pages_from_static(v, n_pages, perm)
+    bt = jnp.asarray(perm.reshape(b, NB), jnp.int32)
+    pos = lens
+    lf, lp = logits, logits
+    for _ in range(3):
+        nxt = jnp.argmax(lf, -1).astype(jnp.int32)
+        lf, k, v = decode_step(params, k, v, nxt, pos, CFG, sch)
+        lp, kp, vp = decode_step_paged(
+            params, kp, vp, nxt, pos, bt, CFG, sch
+        )
+        np.testing.assert_array_equal(np.asarray(lf), np.asarray(lp))
+        pos = pos + 1
+    # the shuffled pages hold exactly the static cache's blocks
+    np.testing.assert_array_equal(
+        np.asarray(kp), np.asarray(_pages_from_static(k, n_pages, perm))
+    )
+    # pages outside the permutation stayed zero
+    unused = [p for p in range(n_pages) if p not in set(perm.tolist())]
+    assert unused, "test needs spare pages to prove isolation"
+    np.testing.assert_array_equal(
+        np.asarray(vp)[:, unused], 0.0 * np.asarray(vp)[:, unused]
+    )
+
+
+def test_decode_paged_sentinel_rows_never_write(params, rng):
+    """An idle slot's all-hole block-table row drops its write and leaves
+    every page untouched (the engine idles rows this way)."""
+    sch = QuantScheme("f32")
+    b = 2
+    toks = _toks(rng, b, 8)
+    lens = jnp.asarray([8, 5], jnp.int32)
+    _, k, v = prefill(params, toks, lens, CFG, sch, SMAX)
+    n_pages = b * NB
+    kp, vp = _identity_pages(k, n_pages), _identity_pages(v, n_pages)
+    bt = _identity_table(b).at[1].set(n_pages)  # row 1 idle: all holes
+    token = jnp.asarray([3, 4], jnp.int32)
+    pos = jnp.asarray([8, 0], jnp.int32)
+    lg, kp2, vp2 = decode_step_paged(params, kp, vp, token, pos, bt, CFG, sch)
+    assert not bool(jnp.isnan(lg).any()), "clamped hole reads must not NaN"
+    # row 1's pages (NB..2*NB) are bit-untouched
+    np.testing.assert_array_equal(
+        np.asarray(kp2)[:, NB:], np.asarray(kp)[:, NB:]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(vp2)[:, NB:], np.asarray(vp)[:, NB:]
+    )
+    # row 0 wrote its token at pos 8 -> block 1 -> page 1, offset 0
+    assert not np.array_equal(
+        np.asarray(kp2)[:, 1], np.asarray(kp)[:, 1]
+    )
+    # ...and nowhere else in its own pages
+    for page in (0, 2, 3):
+        np.testing.assert_array_equal(
+            np.asarray(kp2)[:, page], np.asarray(kp)[:, page]
+        )
+
+
+def test_admit_paged_scatter_matches_host_blocks(params, rng):
+    """admit_paged == prefill + per-block page writes: the python half of
+    the parity contract the Rust engine's paged admission relies on."""
+    sch = QuantScheme("f32")
+    b, s = 2, 16
+    ab = s // PS  # admit blocks per row
+    toks = _toks(rng, b, s)
+    lens = jnp.asarray([16, 9], jnp.int32)
+    n_pages = 6
+    shape = (CFG.n_layers, n_pages, CFG.n_kv_heads, PS, CFG.head_dim)
+    kc = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    # row 0 -> pages (3, 1); row 1 is a dummy (all holes)
+    bt = jnp.asarray([[3, 1], [n_pages, n_pages]], jnp.int32)
+    lg, ka, va = admit_paged(params, kc, vc, toks, lens, bt, CFG, sch, SMAX)
+    lp, ks, vs = prefill(params, toks, lens, CFG, sch, SMAX)
+    kr, vr = np.asarray(kc).copy(), np.asarray(vc).copy()
+    for j, page in enumerate([3, 1]):
+        kr[:, page] = np.asarray(ks)[:, 0, :, j * PS:(j + 1) * PS]
+        vr[:, page] = np.asarray(vs)[:, 0, :, j * PS:(j + 1) * PS]
+    np.testing.assert_array_equal(np.asarray(ka), kr)
+    np.testing.assert_array_equal(np.asarray(va), vr)
+    np.testing.assert_array_equal(np.asarray(lg), np.asarray(lp))
+    # pages not in any table row are untouched
+    for page in (0, 2, 4, 5):
+        np.testing.assert_array_equal(
+            np.asarray(ka)[:, page], np.asarray(kc)[:, page]
+        )
+    assert ab == 2  # the block table covers exactly the bucket
+
+
+def test_admit_paged_kv8_scatter_matches_host_blocks(params, rng):
+    """int8 x paged composition: admit_paged_kv8 writes the same
+    quantized bytes AND scales per page as quantizing the fresh rows on
+    the host and copying block by block."""
+    sch = QuantScheme("f32")
+    b, s = 2, 16
+    toks = _toks(rng, b, s)
+    lens = jnp.asarray([12, 7], jnp.int32)
+    n_pages = 7
+    vshape = (CFG.n_layers, n_pages, CFG.n_kv_heads, PS, CFG.head_dim)
+    kc = jnp.asarray(rng.integers(-127, 128, size=vshape), jnp.int8)
+    vc = jnp.asarray(rng.integers(-127, 128, size=vshape), jnp.int8)
+    ks0 = jnp.asarray(rng.uniform(0.01, 1.0, size=vshape[:4]), jnp.float32)
+    vs0 = jnp.asarray(rng.uniform(0.01, 1.0, size=vshape[:4]), jnp.float32)
+    # row 0 -> pages (5, 2); row 1 -> pages (0, hole): a short prompt's
+    # unallocated tail block must drop, not clobber
+    bt = jnp.asarray([[5, 2], [0, n_pages]], jnp.int32)
+    lg, ka, ksa, va, vsa = admit_paged_kv8(
+        params, kc, ks0, vc, vs0, toks, lens, bt, CFG, sch, SMAX
+    )
+    lp, ks, vs = prefill(params, toks, lens, CFG, sch, SMAX)
+    qk, sk = F.kv_quantize(ks)
+    qv, sv = F.kv_quantize(vs)
+    kr, sr = np.asarray(kc).copy(), np.asarray(ks0).copy()
+    vr, ur = np.asarray(vc).copy(), np.asarray(vs0).copy()
+    for row, j, page in [(0, 0, 5), (0, 1, 2), (1, 0, 0)]:
+        kr[:, page] = np.asarray(qk)[:, row, :, j * PS:(j + 1) * PS]
+        sr[:, page] = np.asarray(sk)[:, row, :, j * PS:(j + 1) * PS]
+        vr[:, page] = np.asarray(qv)[:, row, :, j * PS:(j + 1) * PS]
+        ur[:, page] = np.asarray(sv)[:, row, :, j * PS:(j + 1) * PS]
+    np.testing.assert_array_equal(np.asarray(ka), kr)
+    np.testing.assert_array_equal(np.asarray(ksa), sr)
+    np.testing.assert_array_equal(np.asarray(va), vr)
+    np.testing.assert_array_equal(np.asarray(vsa), ur)
+    np.testing.assert_array_equal(np.asarray(lg), np.asarray(lp))
+    # untouched pages keep values AND scales
+    for page in (1, 3, 4, 6):
+        np.testing.assert_array_equal(
+            np.asarray(ka)[:, page], np.asarray(kc)[:, page]
+        )
+        np.testing.assert_array_equal(
+            np.asarray(ksa)[:, page], np.asarray(ks0)[:, page]
+        )
+
+
+def test_paged_greedy_stream_matches_static_both_schemes(params, rng):
+    """Scripted parity: greedy rollouts agree static-vs-paged under both
+    cache schemes (the python half of the integration test
+    `kv_layouts_agree`)."""
+    sch = QuantScheme("f32")
+    b = 2
+    toks = _toks(rng, b, 16)
+    lens = jnp.asarray([12, 9], jnp.int32)
+    logits, k, v = prefill(params, toks, lens, CFG, sch, SMAX)
+    n_pages = b * NB
+    kp, vp = _identity_pages(k, n_pages), _identity_pages(v, n_pages)
+    qk, sk = F.kv_quantize(k)
+    qv, sv = F.kv_quantize(v)
+    qkp, skp = _identity_pages(qk, n_pages), _identity_pages(sk, n_pages)
+    qvp, svp = _identity_pages(qv, n_pages), _identity_pages(sv, n_pages)
+    bt = _identity_table(b)
+    pos = lens
+    ls, lp8, l8 = logits, logits, logits
+    lp = logits
+    for _ in range(4):
+        streams = [
+            jnp.argmax(x, -1).astype(jnp.int32) for x in (ls, lp, l8, lp8)
+        ]
+        for got in streams[1:]:
+            np.testing.assert_array_equal(
+                np.asarray(streams[0]), np.asarray(got)
+            )
+        nxt = streams[0]
+        ls, k, v = decode_step(params, k, v, nxt, pos, CFG, sch)
+        lp, kp, vp = decode_step_paged(params, kp, vp, nxt, pos, bt, CFG, sch)
+        l8, qk, sk, qv, sv = decode_step_kv8(
+            params, qk, sk, qv, sv, nxt, pos, CFG, sch
+        )
+        lp8, qkp, skp, qvp, svp = decode_step_paged_kv8(
+            params, qkp, skp, qvp, svp, nxt, pos, bt, CFG, sch
+        )
+        # paged is bit-identical to static within each scheme
+        np.testing.assert_array_equal(np.asarray(ls), np.asarray(lp))
+        np.testing.assert_array_equal(np.asarray(l8), np.asarray(lp8))
         pos = pos + 1
 
 

@@ -25,11 +25,14 @@ fn main() -> anyhow::Result<()> {
         .and_then(|v| v.parse().ok())
         .unwrap_or(12usize);
     let kv_cache = bs::bench_cache_scheme()?;
+    let kv_layout = bs::bench_kv_layout()?;
     println!("=== Table 1: serving FP8 vs BF16 ===");
     println!(
         "model=small, {n_requests} ShareGPT-shaped requests, greedy, \
-         kv-cache={} (AO_KV_CACHE to switch)\n",
-        kv_cache.tag()
+         kv-cache={} (AO_KV_CACHE to switch), kv-layout={} (AO_KV_LAYOUT \
+         to switch)\n",
+        kv_cache.tag(),
+        kv_layout.tag()
     );
 
     let (master, _) = bs::trained_ckpt("small", "bf16", steps)?;
@@ -58,11 +61,20 @@ fn main() -> anyhow::Result<()> {
         let m = bs::serve_workload("small", scheme, &ckpt, &spec)?;
         // device-resident cache: per decode step only logits come down,
         // and per admission prefill only the row vectors go up
+        let pages = if m.kv_layout == "paged" {
+            format!(
+                " pages[total={} used={} hwm={}]",
+                m.pages_total, m.pages_used, m.pages_hwm
+            )
+        } else {
+            String::new()
+        };
         xfer_lines.push(format!(
-            "  {scheme}: cache[{} resident={}] host xfer h2d={} d2h={}; \
-             per decode step h2d={} d2h={} ({} steps); per prefill \
+            "  {scheme}: cache[{} {} resident={}]{pages} host xfer h2d={} \
+             d2h={}; per decode step h2d={} d2h={} ({} steps); per prefill \
              h2d={} d2h={} ({} prefills, {} host splices)",
             m.cache_scheme,
+            m.kv_layout,
             fmt_bytes(m.cache_resident_bytes),
             fmt_bytes(m.h2d_bytes),
             fmt_bytes(m.d2h_bytes),
@@ -113,14 +125,19 @@ fn main() -> anyhow::Result<()> {
         println!("{line}");
     }
 
-    // KV-cache bytes by scheme, straight from the manifest the engine
-    // binds: "resident" is the device allocation (values + scales), and
-    // the host-admission splice fallback moves exactly those bytes down
-    // and back up per burst. This is where the int8 scheme's ~4x lands
-    // (Dh=32 for `small`: f32 4*Dh vs int8 Dh+4 bytes per position).
-    println!("\nKV-cache accounting by scheme (decode artifact, f32 weights):");
+    // KV-cache bytes by (scheme, layout), straight from the manifest the
+    // engine binds: "resident" is the device allocation (values +
+    // scales). The int8 scheme's ~4x lands across a row (Dh=32 for
+    // `small`: f32 4*Dh vs int8 Dh+4 bytes per position); the paged
+    // layout's saving lands down a column — same batch, same context
+    // window, but the page pool only covers the live fraction of it and
+    // admission backpressures past that.
+    println!(
+        "\nKV-cache accounting by scheme x layout (decode artifact, f32 \
+         weights):"
+    );
     let runtime = Runtime::open(&ao::default_artifacts_dir())?;
-    let mut resident: Vec<(String, u64)> = Vec::new();
+    let mut resident: Vec<(String, String, u64)> = Vec::new();
     for spec in runtime.manifest.find("decode", "small", Some("f32")) {
         let bytes: u64 = spec
             .cache_input_names()?
@@ -130,23 +147,46 @@ fn main() -> anyhow::Result<()> {
                 Ok(spec.inputs[idx].byte_size().unwrap_or(0) as u64)
             })
             .sum::<anyhow::Result<u64>>()?;
+        let note = if spec.layout == "paged" {
+            format!(
+                "{} pages of {} positions",
+                spec.n_pages, spec.page_size
+            )
+        } else {
+            format!("splice-burst traffic={} (down+up)", fmt_bytes(2 * bytes))
+        };
         println!(
-            "  {:<5} resident={} splice-burst traffic={} (down+up)",
+            "  {:<5} {:<7} resident={:<9} {note}",
             spec.cache,
+            spec.layout,
             fmt_bytes(bytes),
-            fmt_bytes(2 * bytes),
         );
-        resident.push((spec.cache.clone(), bytes));
+        resident.push((spec.cache.clone(), spec.layout.clone(), bytes));
     }
-    let get = |tag: &str| {
-        resident.iter().find(|(c, _)| c == tag).map(|&(_, b)| b)
+    let get = |cache: &str, layout: &str| {
+        resident
+            .iter()
+            .find(|(c, l, _)| c == cache && l == layout)
+            .map(|&(_, _, b)| b)
     };
-    if let (Some(f32b), Some(i8b)) = (get("f32"), get("int8")) {
+    if let (Some(f32b), Some(i8b)) = (get("f32", "static"), get("int8", "static")) {
         println!(
             "  f32/int8 ratio: {:.2}x smaller resident cache and \
              per-burst splice traffic",
             f32b as f64 / i8b as f64
         );
+    }
+    for cache in ["f32", "int8"] {
+        if let (Some(st), Some(pg)) = (get(cache, "static"), get(cache, "paged"))
+        {
+            println!(
+                "  {cache} static/paged ratio: {:.2}x smaller resident \
+                 cache at equal batch (paged resident {} < static {})",
+                st as f64 / pg as f64,
+                fmt_bytes(pg),
+                fmt_bytes(st),
+            );
+        }
     }
 
     // H100 projection: decode GEMVs are memory-bound; fp8 halves the weight

@@ -6,7 +6,7 @@
 //! tiny table printer.
 
 use crate::ckpt::Checkpoint;
-use crate::coordinator::engine::{self, CacheScheme, EngineConfig};
+use crate::coordinator::engine::{self, CacheScheme, EngineConfig, KvLayout};
 use crate::coordinator::metrics::MetricsCollector;
 use crate::coordinator::request::{Event, SubmitReq};
 use crate::data::corpus::standard_corpus;
@@ -15,8 +15,8 @@ use crate::data::workload::{self, WorkloadSpec};
 use crate::quant::{quantize_checkpoint, QuantConfig};
 use crate::tokenizer::Tokenizer;
 use crate::train::{TrainReport, Trainer};
-use anyhow::Result;
-use std::path::PathBuf;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
 use std::sync::mpsc::channel;
 use std::time::Instant;
 
@@ -72,7 +72,7 @@ pub fn trained_ckpt(
 
 /// Quantize a master ckpt into runs/ (cached) and return its path + sizes.
 pub fn quantized_ckpt(
-    master_path: &PathBuf,
+    master_path: &Path,
     tag: &str,
 ) -> Result<(PathBuf, crate::quant::SizeReport)> {
     let cfg = QuantConfig::parse(tag)?;
@@ -84,12 +84,36 @@ pub fn quantized_ckpt(
     Ok((path, report))
 }
 
-/// KV-cache scheme benches serve with: AO_KV_CACHE (f32 default).
-pub fn bench_cache_scheme() -> Result<CacheScheme> {
-    match std::env::var("AO_KV_CACHE") {
-        Ok(v) if !v.is_empty() => CacheScheme::parse(&v),
+/// Parse an optional AO_KV_CACHE value (None/"" -> f32 default). Split
+/// from the env read so the error contract — name the variable, list the
+/// valid values, exit non-zero through the bench's `?` — is unit-testable.
+pub fn cache_scheme_from(var: Option<&str>) -> Result<CacheScheme> {
+    match var {
+        Some(v) if !v.is_empty() => {
+            CacheScheme::parse(v).context("AO_KV_CACHE")
+        }
         _ => Ok(CacheScheme::F32),
     }
+}
+
+/// Parse an optional AO_KV_LAYOUT value (None/"" -> static default).
+pub fn kv_layout_from(var: Option<&str>) -> Result<KvLayout> {
+    match var {
+        Some(v) if !v.is_empty() => {
+            KvLayout::parse(v).context("AO_KV_LAYOUT")
+        }
+        _ => Ok(KvLayout::Static),
+    }
+}
+
+/// KV-cache scheme benches serve with: AO_KV_CACHE (f32 default).
+pub fn bench_cache_scheme() -> Result<CacheScheme> {
+    cache_scheme_from(std::env::var("AO_KV_CACHE").ok().as_deref())
+}
+
+/// KV-cache layout benches serve with: AO_KV_LAYOUT (static default).
+pub fn bench_kv_layout() -> Result<KvLayout> {
+    kv_layout_from(std::env::var("AO_KV_LAYOUT").ok().as_deref())
 }
 
 /// Run a full serving workload in-process; returns engine metrics
@@ -98,19 +122,21 @@ pub fn bench_cache_scheme() -> Result<CacheScheme> {
 pub fn serve_workload(
     model: &str,
     scheme: &str,
-    ckpt_path: &PathBuf,
+    ckpt_path: &Path,
     spec: &WorkloadSpec,
 ) -> Result<MetricsCollector> {
     let reqs = workload::generate(spec);
     let tok = Tokenizer::byte_level();
     let (handle, join) = engine::spawn(EngineConfig {
         artifacts_dir: crate::default_artifacts_dir(),
-        ckpt_path: ckpt_path.clone(),
+        ckpt_path: ckpt_path.to_path_buf(),
         model: model.into(),
         scheme: scheme.into(),
-        // AO_KV_CACHE=int8 serves the same workload on the quantized
-        // cache, so both schemes are benchable from one binary
+        // AO_KV_CACHE=int8 / AO_KV_LAYOUT=paged serve the same workload
+        // on the quantized / paged cache, so every (scheme, layout)
+        // combination is benchable from one binary
         cache_scheme: bench_cache_scheme()?,
+        kv_layout: bench_kv_layout()?,
         eos_token: None,
         // AO_HOST_ADMISSION=1 A/Bs the admission paths in any bench
         host_admission: std::env::var("AO_HOST_ADMISSION")
@@ -152,7 +178,7 @@ pub fn serve_workload(
 pub fn eval_ckpt(
     model: &str,
     scheme: &str,
-    ckpt_path: &PathBuf,
+    ckpt_path: &Path,
     n_items: usize,
     ppl_batches: usize,
 ) -> Result<(f64, f64, f64)> {
@@ -216,5 +242,36 @@ impl Table {
         for row in &self.rows {
             line(row);
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_selectors_default_when_unset() {
+        assert_eq!(cache_scheme_from(None).unwrap(), CacheScheme::F32);
+        assert_eq!(cache_scheme_from(Some("")).unwrap(), CacheScheme::F32);
+        assert_eq!(
+            cache_scheme_from(Some("int8")).unwrap(),
+            CacheScheme::Int8
+        );
+        assert_eq!(kv_layout_from(None).unwrap(), KvLayout::Static);
+        assert_eq!(kv_layout_from(Some("")).unwrap(), KvLayout::Static);
+        assert_eq!(kv_layout_from(Some("paged")).unwrap(), KvLayout::Paged);
+    }
+
+    #[test]
+    fn env_selector_errors_name_the_variable_and_valid_values() {
+        // satellite contract: a typo'd AO_KV_CACHE / AO_KV_LAYOUT must
+        // say which variable failed and what it accepts, and benches
+        // propagate it through `?` so the process exits non-zero
+        let e = format!("{:#}", cache_scheme_from(Some("fp4")).unwrap_err());
+        assert!(e.contains("AO_KV_CACHE"), "{e}");
+        assert!(e.contains("valid values: f32, int8"), "{e}");
+        let e = format!("{:#}", kv_layout_from(Some("vpaged")).unwrap_err());
+        assert!(e.contains("AO_KV_LAYOUT"), "{e}");
+        assert!(e.contains("valid values: static, paged"), "{e}");
     }
 }

@@ -42,6 +42,16 @@ impl Batcher {
         self.queue.push_back(req);
     }
 
+    /// Return not-yet-admitted requests to the FRONT of the queue in
+    /// their original order. Used by the engine's page backpressure: when
+    /// the pager cannot cover the tail of a prefill group, the tail goes
+    /// back here and FCFS order is preserved for the next attempt.
+    pub fn requeue_front(&mut self, reqs: Vec<SubmitReq>) {
+        for req in reqs.into_iter().rev() {
+            self.queue.push_front(req);
+        }
+    }
+
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
@@ -53,16 +63,27 @@ impl Batcher {
 
     /// Pop up to `n_free` requests that share one bucket (the bucket of
     /// the queue head, FCFS).
+    ///
+    /// Every take is pattern-matched — no `pop_front().unwrap()` — so a
+    /// future scheduling change that races the queue (or a requeue path
+    /// that leaves it shorter than a stale length suggested) degrades to
+    /// `Idle` instead of panicking the serving loop.
     pub fn take_prefill_group(&mut self, n_free: usize) -> PrefillTake {
-        if n_free == 0 || self.queue.is_empty() {
+        if n_free == 0 {
             return PrefillTake::Idle;
         }
-        let head_len = self.queue[0].prompt_tokens.len();
+        let Some(head_len) =
+            self.queue.front().map(|r| r.prompt_tokens.len())
+        else {
+            return PrefillTake::Idle;
+        };
         if head_len == 0 {
             // a live row with lens = 0 would attend to zero positions and
             // produce NaN logits (dummy rows get lens = 1 for exactly this
             // reason) — reject before it can reach a prefill
-            let req = self.queue.pop_front().unwrap();
+            let Some(req) = self.queue.pop_front() else {
+                return PrefillTake::Idle;
+            };
             let _ = req.tx.send(super::request::Event::Error(
                 "empty prompt: prefill needs at least one token".into(),
             ));
@@ -70,7 +91,9 @@ impl Batcher {
         }
         let Some(bucket) = self.bucket_for(head_len) else {
             // head cannot fit any bucket: reject it so the queue advances
-            let req = self.queue.pop_front().unwrap();
+            let Some(req) = self.queue.pop_front() else {
+                return PrefillTake::Idle;
+            };
             let _ = req.tx.send(super::request::Event::Error(format!(
                 "prompt of {head_len} tokens exceeds the largest prefill \
                  bucket ({})",
@@ -80,21 +103,18 @@ impl Batcher {
         };
         let mut group = Vec::new();
         while group.len() < n_free {
-            match self.queue.front() {
-                // empty prompts never join a group (bucket_for(0) matches
-                // the smallest bucket): left at the front, the next
-                // admission attempt rejects them through the head path
-                Some(r)
-                    if !r.prompt_tokens.is_empty()
-                        && self
-                            .bucket_for(r.prompt_tokens.len())
-                            .map(|b| b == bucket)
-                            .unwrap_or(false) =>
-                {
-                    group.push(self.queue.pop_front().unwrap());
-                }
-                _ => break,
+            // empty prompts never join a group (bucket_for(0) matches
+            // the smallest bucket): left at the front, the next
+            // admission attempt rejects them through the head path
+            let joins = self.queue.front().is_some_and(|r| {
+                !r.prompt_tokens.is_empty()
+                    && self.bucket_for(r.prompt_tokens.len()) == Some(bucket)
+            });
+            if !joins {
+                break;
             }
+            let Some(req) = self.queue.pop_front() else { break };
+            group.push(req);
         }
         PrefillTake::Group { bucket, group }
     }
@@ -169,6 +189,56 @@ mod tests {
         let (_, group) = expect_group(b.take_prefill_group(3));
         assert_eq!(group.len(), 3);
         assert_eq!(b.pending(), 2);
+    }
+
+    #[test]
+    fn empty_queue_paths_never_panic() {
+        // regression (satellite): the old code pop_front().unwrap()'d
+        // after peeking — safe today, a panic in the serving loop the
+        // moment a scheduling change races the peek and the pop. Every
+        // take must degrade to Idle on an empty queue, repeatedly, from
+        // every entry path.
+        let mut b = Batcher::new(vec![32]);
+        for n_free in [0usize, 1, 4] {
+            assert!(matches!(b.take_prefill_group(n_free), PrefillTake::Idle));
+            assert!(matches!(b.take_prefill_group(n_free), PrefillTake::Idle));
+        }
+        // drain to empty through the rejection paths, then take again
+        let (bad, _brx) = req(0);
+        b.push(bad);
+        assert!(matches!(b.take_prefill_group(4), PrefillTake::HeadRejected));
+        assert!(matches!(b.take_prefill_group(4), PrefillTake::Idle));
+        let (big, _grx) = req(100);
+        b.push(big);
+        assert!(matches!(b.take_prefill_group(4), PrefillTake::HeadRejected));
+        assert!(matches!(b.take_prefill_group(4), PrefillTake::Idle));
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn requeue_front_preserves_fcfs() {
+        // page backpressure hands a group's tail back; the next take must
+        // see the requeued requests first, in their original order
+        let mut b = Batcher::new(vec![32]);
+        let mut rxs = Vec::new();
+        for len in [3usize, 4, 5, 6] {
+            let (mut r, rx) = req(len);
+            r.id = len as u64;
+            b.push(r);
+            rxs.push(rx);
+        }
+        let (_, mut group) = expect_group(b.take_prefill_group(4));
+        assert_eq!(group.len(), 4);
+        // the pager covered only the first request: requeue the tail
+        let tail = group.split_off(1);
+        b.requeue_front(tail);
+        assert_eq!(b.pending(), 3);
+        let (_, group2) = expect_group(b.take_prefill_group(4));
+        assert_eq!(
+            group2.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![4, 5, 6],
+            "requeued tail comes back first, original order"
+        );
     }
 
     #[test]

@@ -29,8 +29,22 @@
 //!   (`model.decode_step_kv8`); numerics are shared bit-for-bit with the
 //!   host splice via `quant::kvcache`.
 //!
+//! Orthogonally, `EngineConfig::kv_layout` picks how the cache is
+//! *addressed*:
+//!
+//! - `static`: one `[Smax]` row per batch slot — simple, but one
+//!   long-context bucket dictates resident bytes for every slot;
+//! - `paged`: a pool of `[n_pages, page_size]` pages indexed by per-slot
+//!   block tables (see `pager`). Resident bytes track live context; the
+//!   block table rides up as one tiny `[B, blocks]` s32 input per call,
+//!   and admission applies backpressure through the batcher when the
+//!   pool cannot cover a request's worst-case reservation. A page pairs
+//!   a values block with its scale block, so paging composes with the
+//!   int8 scheme unchanged.
+//!
 //! The only per-token transfers are two `[B]` s32 vectors up (token,
-//! pos) and one `[B, vocab]` logits matrix down, which the transfer
+//! pos; plus the `[B, blocks]` block table under the paged layout) and
+//! one `[B, vocab]` logits matrix down, which the transfer
 //! metrics in the engine report make auditable. When the runtime's
 //! donation probe passes, the cache arguments (values AND scales) are
 //! additionally compiled as input-output aliases, so each step reuses
@@ -57,6 +71,7 @@
 use super::batcher::{Batcher, PrefillTake};
 use super::kvslots::{Slot, SlotTable};
 use super::metrics::MetricsCollector;
+use super::pager::Pager;
 use super::request::{Event, FinishInfo, FinishReason, SubmitReq};
 use crate::ckpt::Checkpoint;
 use crate::runtime::{OwnedBuffer, Runtime};
@@ -87,7 +102,8 @@ impl CacheScheme {
             "f32" => Ok(CacheScheme::F32),
             "int8" => Ok(CacheScheme::Int8),
             other => bail!(
-                "unknown KV-cache scheme '{other}' (expected f32 or int8)"
+                "unknown KV-cache scheme '{other}' \
+                 (valid values: f32, int8)"
             ),
         }
     }
@@ -101,6 +117,43 @@ impl CacheScheme {
     }
 }
 
+/// How the device-resident KV cache is addressed. `Static` reserves a
+/// whole `[Smax]` row per batch slot; `Paged` stores fixed-size pages
+/// `[L, n_pages, Hkv, page_size, Dh]` addressed through per-slot block
+/// tables owned by the `Pager` — resident bytes then track live context
+/// instead of worst-case context, with admission backpressure when the
+/// pool runs dry. Orthogonal to `CacheScheme`: the layout picks how
+/// pages/rows are addressed, the scheme picks the bytes inside them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KvLayout {
+    /// per-slot `[B, Smax]` rows — the parity baseline
+    #[default]
+    Static,
+    /// block-table paging over a `[n_pages, page_size]` pool
+    Paged,
+}
+
+impl KvLayout {
+    pub fn parse(s: &str) -> Result<KvLayout> {
+        match s {
+            "static" => Ok(KvLayout::Static),
+            "paged" => Ok(KvLayout::Paged),
+            other => bail!(
+                "unknown KV layout '{other}' \
+                 (valid values: static, paged)"
+            ),
+        }
+    }
+
+    /// The manifest `layout` tag this layout binds to.
+    pub fn tag(self) -> &'static str {
+        match self {
+            KvLayout::Static => "static",
+            KvLayout::Paged => "paged",
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     pub artifacts_dir: PathBuf,
@@ -109,6 +162,8 @@ pub struct EngineConfig {
     pub scheme: String,
     /// KV-cache storage scheme (CLI `--kv-cache`, bench env AO_KV_CACHE)
     pub cache_scheme: CacheScheme,
+    /// KV-cache layout (CLI `--kv-layout`, bench env AO_KV_LAYOUT)
+    pub kv_layout: KvLayout,
     /// stop generating a sequence when this token appears (None = never)
     pub eos_token: Option<u32>,
     /// force the host download/splice/upload admission fallback even when
@@ -267,8 +322,12 @@ pub struct Engine {
     /// persistent KV cache, device-resident between decode steps: each
     /// step's output buffers become the next step's inputs
     cache: KvCache,
-    /// cache dims for host splicing during admission
-    kv_dims: (usize, usize, usize, usize, usize), // l, b, h, s, d
+    /// cache dims for host splicing during admission (static layout:
+    /// l, b, h, s, d; under the paged layout b/s are n_pages/page_size
+    /// and the host splice path is never taken)
+    kv_dims: (usize, usize, usize, usize, usize),
+    /// page allocator — present exactly under `KvLayout::Paged`
+    pager: Option<Pager>,
     batcher: Batcher,
     requests: Vec<Option<ActiveRequest>>,
     /// token sampled last step per slot, to be consumed by the next decode
@@ -283,17 +342,28 @@ impl Engine {
     pub fn new(cfg: EngineConfig) -> Result<Engine> {
         let runtime = Runtime::open(&cfg.artifacts_dir)?;
         let cache_tag = cfg.cache_scheme.tag();
+        let layout_tag = cfg.kv_layout.tag();
+        if cfg.kv_layout == KvLayout::Paged && cfg.host_admission {
+            bail!(
+                "host admission is not supported under --kv-layout=paged \
+                 (the host splice fallback addresses per-slot rows, not \
+                 pages); drop --host-admission or serve \
+                 --kv-layout=static"
+            );
+        }
         let decode_specs =
             runtime.manifest.find("decode", &cfg.model, Some(&cfg.scheme));
         let decode = decode_specs
             .iter()
-            .find(|s| s.cache == cache_tag)
+            .find(|s| s.cache == cache_tag && s.layout == layout_tag)
             .copied()
             .with_context(|| {
                 format!(
                     "no decode artifact for model={} scheme={} \
-                     kv-cache={cache_tag} (re-run `make artifacts`; the \
-                     exporter emits --kv-cache=f32,int8 by default)",
+                     kv-cache={cache_tag} kv-layout={layout_tag} (re-run \
+                     `make artifacts`; the exporter emits \
+                     --kv-cache=f32,int8 --kv-layout=static,paged by \
+                     default)",
                     cfg.model, cfg.scheme
                 )
             })?;
@@ -308,13 +378,77 @@ impl Engine {
             let idx = decode.input_index(name)?;
             cache_specs.push(decode.inputs[idx].clone());
         }
+        // the engine binds buffers POSITIONALLY (params..., cache block,
+        // token, pos[, block_tables]) — mirror validate_admit's order
+        // check here, or a reordered manifest passes every name lookup
+        // and dies with an opaque PJRT shape error on the first step
+        let mut trailing: Vec<&str> = cache_names.to_vec();
+        trailing.extend(decode.layout_trailing_inputs()?);
+        if decode.inputs.len() < trailing.len() {
+            bail!(
+                "decode artifact '{decode_name}' has fewer than {} inputs",
+                trailing.len()
+            );
+        }
+        let base = decode.inputs.len() - trailing.len();
+        for (off, want) in trailing.iter().enumerate() {
+            let got = decode.inputs[base + off].name.as_str();
+            if got != *want {
+                bail!(
+                    "decode artifact '{decode_name}' trailing inputs must \
+                     be ({}) in that order — position {} is '{got}', \
+                     expected '{want}'",
+                    trailing.join(", "),
+                    base + off
+                );
+            }
+        }
+        if let Some(bad) = decode.inputs[..base]
+            .iter()
+            .find(|s| !s.name.starts_with("params."))
+        {
+            bail!(
+                "decode artifact '{decode_name}': all inputs before the \
+                 cache block must be params ('{}' is not)",
+                bad.name
+            );
+        }
         let kshape = cache_specs[0].shape.clone();
         if kshape.len() != 5 {
             bail!(
                 "decode artifact '{decode_name}' kcache must be \
-                 [L, B, Hkv, Smax, Dh], got {kshape:?}"
+                 [L, B|n_pages, Hkv, Smax|page_size, Dh], got {kshape:?}"
             );
         }
+        // Paged layout: check the declared pool geometry against the
+        // bound page tensors + block-table input, then build the pager
+        // that owns allocation for the engine's lifetime.
+        let pager = match cfg.kv_layout {
+            KvLayout::Static => None,
+            KvLayout::Paged => {
+                decode.check_paged_geometry(&kshape).with_context(|| {
+                    format!(
+                        "decode artifact '{decode_name}' is unusable"
+                    )
+                })?;
+                let blocks = smax / decode.page_size;
+                let bt = &decode.inputs[decode.input_index("block_tables")?];
+                if bt.shape != [batch, blocks] || bt.dtype != "s32" {
+                    bail!(
+                        "paged decode artifact '{decode_name}' \
+                         block_tables must be s32 [{batch}, {blocks}], \
+                         got {:?} {}",
+                        bt.shape, bt.dtype
+                    );
+                }
+                Some(Pager::new(
+                    decode.n_pages,
+                    decode.page_size,
+                    batch,
+                    blocks,
+                ))
+            }
+        };
         // validate EVERY cache input (values and scales), not just
         // kcache: these buffers bind positionally, so a mis-exported
         // vcache/kscale spec would otherwise surface as an opaque PJRT
@@ -364,7 +498,7 @@ impl Engine {
         } else {
             let scheme = Some(cfg.scheme.as_str());
             for spec in runtime.manifest.find("admit", &cfg.model, scheme) {
-                if spec.cache != cache_tag {
+                if spec.cache != cache_tag || spec.layout != layout_tag {
                     continue;
                 }
                 spec.validate_admit().with_context(|| {
@@ -399,7 +533,24 @@ impl Engine {
                 admit_names.push((spec.seq, spec.name.clone()));
             }
             admit_names.sort();
-            if admit_names.is_empty() {
+            if cfg.kv_layout == KvLayout::Paged {
+                // the host splice fallback addresses rows, not pages, so
+                // paged admission is device-only — EVERY prefill bucket
+                // must have a paged admit artifact up front, or a stale
+                // artifact dir would serve fine until the first request
+                // landing in the uncovered bucket killed the engine
+                for (seq, _) in &prefill_names {
+                    if !admit_names.iter().any(|(s, _)| s == seq) {
+                        bail!(
+                            "prefill bucket {seq} of {}/{} has no paged \
+                             admit artifact (kv-cache {cache_tag}) and \
+                             the paged layout has no host admission \
+                             fallback — re-run `make artifacts`",
+                            cfg.model, cfg.scheme
+                        );
+                    }
+                }
+            } else if admit_names.is_empty() {
                 crate::info!(
                     "no admit artifacts for {}/{} (kv-cache {cache_tag}): \
                      admission falls back to the host splice path (re-run \
@@ -447,7 +598,11 @@ impl Engine {
         }
         let mut metrics = MetricsCollector::new();
         metrics.cache_scheme = cache_tag.to_string();
+        metrics.kv_layout = layout_tag.to_string();
         metrics.cache_resident_bytes = cache_resident_bytes;
+        if let Some(p) = &pager {
+            metrics.pages_total = p.n_pages();
+        }
 
         // surface the untupled-outputs capability up front: when the
         // binding packs tuples, every "device-resident" path below is
@@ -466,6 +621,7 @@ impl Engine {
             smax,
             cache: KvCache { bufs: cache_bufs },
             kv_dims,
+            pager,
             batcher: Batcher::new(buckets),
             requests: (0..batch).map(|_| None).collect(),
             pending: vec![0; batch],
@@ -552,6 +708,11 @@ impl Engine {
         let s = self.runtime.transfer_stats();
         self.metrics.h2d_bytes = s.h2d_bytes;
         self.metrics.d2h_bytes = s.d2h_bytes;
+        if let Some(p) = &self.pager {
+            self.metrics.pages_total = p.n_pages();
+            self.metrics.pages_used = p.used_pages();
+            self.metrics.pages_hwm = p.hwm();
+        }
     }
 
     /// Admit as many waiting requests as free slots allow. A rejected
@@ -566,12 +727,31 @@ impl Engine {
     /// burst. Once the host mirror exists the rest of the burst stays on
     /// the host path: a device-side scatter after the download would be
     /// clobbered by the final re-upload.
+    ///
+    /// Under the paged layout admission is device-only and additionally
+    /// gated by the pager: a group member whose worst-case page
+    /// reservation does not fit is requeued (with everything behind it)
+    /// and the burst ends — backpressure through the batcher, resolved
+    /// as decoding requests finish and release pages.
     fn admit_pending(&mut self) -> Result<()> {
         let xfer0 = self.runtime.transfer_stats();
         let mut host_kv: Option<HostKv> = None;
         while self.slots.n_free() > 0 && self.batcher.pending() > 0 {
             match self.batcher.take_prefill_group(self.slots.n_free()) {
                 PrefillTake::Group { bucket, group } => {
+                    if self.pager.is_some() {
+                        let name =
+                            self.admit_artifact(bucket).ok_or_else(|| {
+                                anyhow!(
+                                    "no paged admit artifact for bucket \
+                                     {bucket}"
+                                )
+                            })?;
+                        if self.admit_device_paged(&name, bucket, group)? {
+                            break; // page backpressure: burst over
+                        }
+                        continue;
+                    }
                     let admit = if host_kv.is_none() {
                         self.admit_artifact(bucket)
                     } else {
@@ -626,6 +806,54 @@ impl Engine {
         HostKv::download(&self.runtime, &self.cache, self.cfg.cache_scheme)
     }
 
+    /// Shared device-admission tail for both layouts: run the admit
+    /// artifact over (params, live cache, `extra` uploads), swap in the
+    /// returned cache buffers, fetch the one logits matrix — the ONLY
+    /// admission download — and sample + stream each claimed request's
+    /// first token. Prefill row `r` of the logits belongs to
+    /// `claimed[r]`; the persistent cache never crosses the host
+    /// boundary.
+    fn run_admit_artifact(
+        &mut self,
+        name: &str,
+        extra: &[OwnedBuffer],
+        claimed: Vec<(usize, SubmitReq)>,
+    ) -> Result<()> {
+        let n_cache = self.cache.n();
+        let mut inputs: Vec<&PjRtBuffer> =
+            self.decode_params.iter().map(|o| &o.buffer).collect();
+        self.cache.push_inputs(&mut inputs);
+        inputs.extend(extra.iter().map(|o| &o.buffer));
+
+        let mut outs = self.runtime.run_buffers_device(name, &inputs)?;
+        drop(inputs);
+        if outs.len() != 1 + n_cache {
+            bail!(
+                "admit artifact '{name}' must output (logits, {n_cache} \
+                 cache buffers); got {} outputs",
+                outs.len()
+            );
+        }
+        self.metrics.prefill_calls += 1;
+
+        let t_overhead = Instant::now();
+        let cache_out = outs.split_off(1);
+        let logits_buf = outs.pop().unwrap();
+        let logits = HostTensor::from_literal(&self.runtime.fetch_output(
+            name,
+            0,
+            &logits_buf.buffer,
+        )?)?;
+        self.cache = KvCache { bufs: cache_out };
+
+        let vocab = logits.shape[1];
+        for (row, (idx, req)) in claimed.into_iter().enumerate() {
+            self.start_request(idx, row, req, &logits, vocab)?;
+        }
+        self.overhead_s += t_overhead.elapsed().as_secs_f64();
+        Ok(())
+    }
+
     /// Device-resident admission for `group`: claim slot rows, feed the
     /// live cache buffers plus (tokens, lens, slot_ids) into the admit
     /// artifact, swap in the returned cache buffers, and sample + stream
@@ -674,41 +902,112 @@ impl Engine {
             self.runtime.upload(&HostTensor::s32(vec![b], lens))?,
             self.runtime.upload(&HostTensor::s32(vec![b], slot_ids))?,
         ];
-        let n_cache = self.cache.n();
-        let mut inputs: Vec<&PjRtBuffer> =
-            self.decode_params.iter().map(|o| &o.buffer).collect();
-        self.cache.push_inputs(&mut inputs);
-        inputs.extend(extra.iter().map(|o| &o.buffer));
         self.overhead_s += t_overhead.elapsed().as_secs_f64();
+        self.run_admit_artifact(name, &extra, claimed)
+    }
 
-        let mut outs = self.runtime.run_buffers_device(name, &inputs)?;
-        drop(inputs);
-        if outs.len() != 1 + n_cache {
-            bail!(
-                "admit artifact '{name}' must output (logits, {n_cache} \
-                 cache buffers); got {} outputs",
-                outs.len()
-            );
-        }
-        self.metrics.prefill_calls += 1;
-
+    /// Paged admission for `group`: returns true when page backpressure
+    /// requeued part of it (the admission burst should end).
+    ///
+    /// Per request, FCFS: reject outright if its worst-case reservation
+    /// exceeds the whole pool (it could never run); requeue it — and
+    /// everything behind it, order preserved — if the reservation does
+    /// not fit right now; otherwise claim a slot, reserve + allocate
+    /// pages, and take a row in the burst. The admit artifact prefills
+    /// and scatters each row's fresh KV blocks into its assigned pages
+    /// through the uploaded block table; holes (unallocated tail blocks,
+    /// unused rows) carry the out-of-range sentinel and are dropped on
+    /// device. Host traffic is the same rows-only contract as the static
+    /// device path, plus the tiny `[B, blocks]` table.
+    fn admit_device_paged(
+        &mut self,
+        name: &str,
+        bucket: usize,
+        group: Vec<SubmitReq>,
+    ) -> Result<bool> {
         let t_overhead = Instant::now();
-        let cache_out = outs.split_off(1);
-        let logits_buf = outs.pop().unwrap();
-        // the ONLY admission download: one [B, vocab] logits matrix
-        let logits = HostTensor::from_literal(&self.runtime.fetch_output(
-            name,
-            0,
-            &logits_buf.buffer,
-        )?)?;
-        self.cache = KvCache { bufs: cache_out };
-
-        let vocab = logits.shape[1];
-        for (row, (idx, req)) in claimed.into_iter().enumerate() {
-            self.start_request(idx, row, req, &logits, vocab)?;
+        let b = self.batch;
+        let smax = self.smax;
+        let mut tokens = vec![0i32; b * bucket];
+        let mut lens = vec![1i32; b]; // dummy rows attend to 1 pad token
+        let mut claimed: Vec<(usize, SubmitReq)> =
+            Vec::with_capacity(group.len());
+        let mut queue: std::collections::VecDeque<SubmitReq> = group.into();
+        while let Some(req) = queue.pop_front() {
+            let n_prompt = req.prompt_tokens.len();
+            check_prompt_fits(n_prompt, bucket)?;
+            let want = reserve_len(n_prompt, req.max_new_tokens, smax);
+            let pager = self.pager.as_mut().expect("paged admission");
+            if pager.impossible(want) {
+                // no amount of waiting frees enough pages: answer now
+                // instead of deadlocking the queue
+                let _ = req.tx.send(Event::Error(format!(
+                    "request needs {} KV pages worst-case but the pool \
+                     has {}; lower max_new_tokens or export a larger \
+                     --kv-pages pool",
+                    pager.blocks_for(want),
+                    pager.n_pages()
+                )));
+                self.metrics.record_rejected();
+                continue;
+            }
+            if !pager.can_admit(want) {
+                // backpressure: this request (and everything behind it,
+                // FCFS) waits for decoding requests to release pages
+                queue.push_front(req);
+                break;
+            }
+            let row = claimed.len();
+            for (j, &t) in req.prompt_tokens.iter().enumerate() {
+                tokens[row * bucket + j] = t as i32;
+            }
+            lens[row] = n_prompt as i32;
+            let slot = Slot {
+                request_id: req.id,
+                pos: n_prompt,
+                n_prompt,
+                n_generated: 0,
+                max_new_tokens: req.max_new_tokens,
+                temperature: req.temperature,
+                rng_state: 0,
+            };
+            let idx = self
+                .slots
+                .claim(slot)
+                .ok_or_else(|| anyhow!("slot table full during admission"))?;
+            self.pager
+                .as_mut()
+                .expect("paged admission")
+                .admit(idx, n_prompt, want)?;
+            claimed.push((idx, req));
         }
+        let backpressured = !queue.is_empty();
+        if backpressured {
+            self.batcher.requeue_front(queue.into_iter().collect());
+        }
+        if claimed.is_empty() {
+            self.overhead_s += t_overhead.elapsed().as_secs_f64();
+            return Ok(backpressured);
+        }
+
+        // block-table input [B, ceil(bucket/page_size)]: row r lists the
+        // pages claimed for request r, hole-padded; unused rows are all
+        // holes so their prefill garbage is dropped on device
+        let pager = self.pager.as_ref().expect("paged admission");
+        let admit_blocks = bucket.div_ceil(pager.page_size());
+        let slot_of_row: Vec<usize> =
+            claimed.iter().map(|(idx, _)| *idx).collect();
+        let bt = pager.fill_block_tables_for(&slot_of_row, b, admit_blocks);
+        let extra = [
+            self.runtime
+                .upload(&HostTensor::s32(vec![b, bucket], tokens))?,
+            self.runtime.upload(&HostTensor::s32(vec![b], lens))?,
+            self.runtime
+                .upload(&HostTensor::s32(vec![b, admit_blocks], bt))?,
+        ];
         self.overhead_s += t_overhead.elapsed().as_secs_f64();
-        Ok(())
+        self.run_admit_artifact(name, &extra, claimed)?;
+        Ok(backpressured)
     }
 
     /// Host-fallback admission for `group` (no admit artifact for the
@@ -866,6 +1165,9 @@ impl Engine {
     }
 
     fn finish_slot(&mut self, idx: usize, reason: FinishReason) {
+        if let Some(pager) = self.pager.as_mut() {
+            pager.release(idx);
+        }
         let slot = self.slots.release(idx).unwrap();
         if let Some(req) = self.requests[idx].take() {
             let now = Instant::now();
@@ -909,12 +1211,29 @@ impl Engine {
         let active = self.slots.active_indices();
         for &i in &active {
             tokens[i] = self.pending[i];
-            pos[i] = self.slots.get(i).unwrap().pos as i32;
+            let p = self.slots.get(i).unwrap().pos;
+            pos[i] = p as i32;
+            if let Some(pager) = self.pager.as_mut() {
+                // allocate the page this write lands in when the slot
+                // crosses a boundary; reserved at admission, so an error
+                // here is a bookkeeping bug, not pool pressure
+                pager.grow(i, p).with_context(|| {
+                    format!("decode write for slot {i}")
+                })?;
+            }
         }
-        let extra = [
+        let mut extra = vec![
             self.runtime.upload(&HostTensor::s32(vec![b], tokens))?,
             self.runtime.upload(&HostTensor::s32(vec![b], pos))?,
         ];
+        if let Some(pager) = &self.pager {
+            let blocks = pager.blocks_per_slot();
+            let bt = pager.fill_block_tables(blocks);
+            extra.push(
+                self.runtime
+                    .upload(&HostTensor::s32(vec![b, blocks], bt))?,
+            );
+        }
         let n_cache = self.cache.n();
         let mut inputs: Vec<&PjRtBuffer> =
             self.decode_params.iter().map(|o| &o.buffer).collect();
@@ -1005,6 +1324,19 @@ fn finish_reason(
     } else {
         None
     }
+}
+
+/// Worst-case cache positions a request can write: the prompt plus every
+/// generated token except the last (the final sample is streamed but
+/// never enters the cache), capped by the context window. The pager
+/// reserves this many positions at admission, which is what guarantees
+/// decode-time page growth can never exhaust the pool.
+fn reserve_len(n_prompt: usize, max_new_tokens: usize, smax: usize) -> usize {
+    // saturating: max_new_tokens is client-supplied and may be huge; the
+    // smax cap makes the exact value past the window irrelevant
+    n_prompt
+        .saturating_add(max_new_tokens.max(1) - 1)
+        .min(smax)
 }
 
 /// Admission invariant: the batcher only forms groups whose prompts fit
@@ -1354,6 +1686,48 @@ mod tests {
         let e = CacheScheme::parse("fp8").unwrap_err().to_string();
         assert!(e.contains("unknown KV-cache scheme"), "{e}");
         assert_eq!(CacheScheme::default(), CacheScheme::F32);
+    }
+
+    #[test]
+    fn cache_scheme_parse_error_lists_valid_values() {
+        // CLI/env contract (--kv-cache, AO_KV_CACHE): a typo must name
+        // every accepted value, not just reject
+        let e = CacheScheme::parse("int4").unwrap_err().to_string();
+        assert!(e.contains("valid values: f32, int8"), "{e}");
+        assert!(e.contains("'int4'"), "{e}");
+    }
+
+    #[test]
+    fn kv_layout_parse_and_tags() {
+        assert_eq!(KvLayout::parse("static").unwrap(), KvLayout::Static);
+        assert_eq!(KvLayout::parse("paged").unwrap(), KvLayout::Paged);
+        assert_eq!(KvLayout::Paged.tag(), "paged");
+        assert_eq!(KvLayout::default(), KvLayout::Static);
+    }
+
+    #[test]
+    fn kv_layout_parse_error_lists_valid_values() {
+        // CLI/env contract (--kv-layout, AO_KV_LAYOUT)
+        let e = KvLayout::parse("ragged").unwrap_err().to_string();
+        assert!(e.contains("unknown KV layout 'ragged'"), "{e}");
+        assert!(e.contains("valid values: static, paged"), "{e}");
+    }
+
+    #[test]
+    fn reserve_len_covers_every_written_position() {
+        // prompt 5, 3 new tokens: writes at 0..4 (prompt) then 5, 6 (the
+        // 3rd sample is streamed, never written) -> 7 positions
+        assert_eq!(reserve_len(5, 3, 100), 7);
+        // one-token generation writes nothing beyond the prompt
+        assert_eq!(reserve_len(5, 1, 100), 5);
+        // max_new 0 is treated as 1 (a request always samples once)
+        assert_eq!(reserve_len(5, 0, 100), 5);
+        // the context window caps the reservation
+        assert_eq!(reserve_len(5, 1000, 16), 16);
+        // client-supplied max_new_tokens may be absurd: saturate, never
+        // wrap into an under-sized reservation
+        assert_eq!(reserve_len(5, usize::MAX, 16), 16);
+        assert_eq!(reserve_len(usize::MAX, usize::MAX, 16), 16);
     }
 
     #[test]

@@ -1,12 +1,13 @@
-//! Batch-slot bookkeeping for the static-shape KV cache.
+//! Batch-slot bookkeeping: a slot is one batch row of the decode
+//! artifact's fixed batch B.
 //!
-//! The decode artifact operates on a fixed batch B with caches
-//! [L, B, Hkv, Smax, Dh]; a slot is one batch row. This is the
-//! static-shape analog of vLLM's block tables: admission = claiming a
-//! free row, completion = releasing it. Idle rows still flow through the
-//! GEMMs (their logits are ignored) — that wasted compute is exactly the
-//! trade the paper's serving stack makes for static shapes on
-//! non-paged backends.
+//! Admission = claiming a free row, completion = releasing it. Idle rows
+//! still flow through the GEMMs (their logits are ignored) — that wasted
+//! compute is the trade the paper's serving stack makes for static
+//! shapes. What a slot's row *addresses* is the cache layout's business:
+//! a whole `[Smax]` cache row under `KvLayout::Static`, or a block table
+//! of pages owned by `pager::Pager` under `KvLayout::Paged` (the real
+//! vLLM-style block tables this module used to only be the analog of).
 
 #[derive(Debug, Clone)]
 pub struct Slot {

@@ -43,10 +43,20 @@ pub struct MetricsCollector {
     /// KV-cache storage scheme the engine is serving with ("f32"/"int8";
     /// empty means an engine predating the field, i.e. f32)
     pub cache_scheme: String,
+    /// KV-cache layout the engine is serving with ("static"/"paged";
+    /// empty means an engine predating the field, i.e. static)
+    pub kv_layout: String,
     /// device-resident KV-cache footprint (values + scales, logical
     /// bytes) — the int8 scheme's ~4x shows up here and in the per-burst
-    /// host-splice traffic, which moves exactly these bytes each way
+    /// host-splice traffic, which moves exactly these bytes each way;
+    /// under the paged layout this is the page pool, the allocation whose
+    /// size paging decouples from worst-case B*Smax
     pub cache_resident_bytes: u64,
+    /// paged layout only: page-pool size, pages currently allocated, and
+    /// the allocation high-water mark (0/0/0 under static)
+    pub pages_total: usize,
+    pub pages_used: usize,
+    pub pages_hwm: usize,
 }
 
 impl MetricsCollector {
@@ -144,11 +154,26 @@ impl MetricsCollector {
         } else {
             self.cache_scheme.as_str()
         };
+        let kv_layout = if self.kv_layout.is_empty() {
+            "static"
+        } else {
+            self.kv_layout.as_str()
+        };
+        // page accounting only exists under the paged layout; a static
+        // report carries no pages[...] field at all
+        let pages = if kv_layout == "paged" {
+            format!(
+                "  pages[total={} used={} hwm={}]",
+                self.pages_total, self.pages_used, self.pages_hwm
+            )
+        } else {
+            String::new()
+        };
         format!(
             "[{label}] requests={} rejected={} out_tokens={} wall={:.2}s \
              tput={:.1} tok/s  TPOT={:.2}ms  ITL={:.2}ms  TTFT={:.1}ms  \
              occupancy={:.0}%  (decode_steps={} prefills={})  \
-             cache[{cache_scheme} resident={}]  \
+             cache[{cache_scheme} {kv_layout} resident={}]{pages}  \
              xfer h2d={} d2h={} decode[h2d={} d2h={}] \
              admit[h2d={} d2h={} host_splices={}]",
             self.n_requests,
@@ -290,10 +315,30 @@ mod tests {
         m.cache_scheme = "int8".into();
         m.cache_resident_bytes = 9 * 1024 * 1024;
         let r = m.report("x");
-        assert!(r.contains("cache[int8 resident=9.0MiB]"), "{r}");
-        // a collector that never learned its scheme reads as the default
+        assert!(r.contains("cache[int8 static resident=9.0MiB]"), "{r}");
+        // a collector that never learned its scheme/layout reads as the
+        // defaults
         let empty = MetricsCollector::new();
-        assert!(empty.report("y").contains("cache[f32 resident=0B]"));
+        assert!(
+            empty.report("y").contains("cache[f32 static resident=0B]")
+        );
+    }
+
+    #[test]
+    fn page_accounting_in_report() {
+        let mut m = MetricsCollector::new();
+        m.cache_scheme = "f32".into();
+        m.kv_layout = "paged".into();
+        m.cache_resident_bytes = 2 * 1024 * 1024;
+        m.pages_total = 64;
+        m.pages_used = 10;
+        m.pages_hwm = 23;
+        let r = m.report("x");
+        assert!(r.contains("cache[f32 paged resident=2.0MiB]"), "{r}");
+        assert!(r.contains("pages[total=64 used=10 hwm=23]"), "{r}");
+        // static engines never grow a pages field
+        m.kv_layout = "static".into();
+        assert!(!m.report("x").contains("pages["), "{}", m.report("x"));
     }
 
     #[test]

@@ -8,8 +8,10 @@
 //!     buffers); commands arrive over a channel, tokens stream back per
 //!     request.
 //!   - `batcher` — admission queue + slot assignment policy.
-//!   - `kvslots` — batch-slot bookkeeping (the static-shape analog of
-//!     vLLM's block tables; DESIGN.md §4).
+//!   - `kvslots` — batch-slot bookkeeping (one slot = one batch row).
+//!   - `pager`   — KV page pool + per-slot block tables (vLLM-style
+//!     paging for `KvLayout::Paged`; resident cache bytes track live
+//!     context, admission backpressures when the pool runs dry).
 //!   - `metrics` — TTFT / TPOT / ITL / throughput accounting (Table 1).
 //!   - `server`  — TCP JSON-lines front-end + client.
 
@@ -17,8 +19,9 @@ pub mod batcher;
 pub mod engine;
 pub mod kvslots;
 pub mod metrics;
+pub mod pager;
 pub mod request;
 pub mod server;
 
-pub use engine::{CacheScheme, Engine, EngineConfig, EngineHandle};
+pub use engine::{CacheScheme, Engine, EngineConfig, EngineHandle, KvLayout};
 pub use request::{Event, FinishInfo, FinishReason, SubmitReq};

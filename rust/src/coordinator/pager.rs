@@ -1,0 +1,374 @@
+//! KV page pool + per-slot block tables: the paging subsystem behind
+//! `KvLayout::Paged` (the real block tables `kvslots.rs` only alluded
+//! to).
+//!
+//! The paged device cache is a pool of `n_pages` fixed-size pages
+//! `[L, n_pages, Hkv, page_size, Dh]` (a page is a values block plus,
+//! under the int8 cache scheme, its scale block — `CacheScheme` dictates
+//! the bytes inside a page, this module dictates which page a position
+//! lives in). The `Pager` owns the allocation state on the host: a LIFO
+//! free list, a page→slot ownership mirror, and one block table per
+//! batch slot mapping logical block `j` (positions `j*page_size ..`) to
+//! a physical page. The engine uploads the table as an ordinary `[B,
+//! n_blocks]` s32 graph input each call; the graphs gather/scatter
+//! through it and never see the allocator.
+//!
+//! ## Reservation discipline (admission backpressure)
+//!
+//! Pages are allocated on demand as a sequence grows, but admission
+//! *reserves* the worst case up front: `blocks_for(min(n_prompt +
+//! max_new - 1, smax))`. `can_admit` says whether the pool can cover a
+//! new reservation on top of every outstanding one; when it cannot, the
+//! engine leaves the request queued (backpressure through the batcher)
+//! instead of admitting work it might have to abandon mid-decode. The
+//! payoff: `grow` during decode can never exhaust the pool — an `Err`
+//! from it means a bookkeeping bug, not an unlucky workload — while
+//! short requests reserve little, so a mixed short/long workload packs
+//! far more live context into the pool than worst-case `[B, Smax]`
+//! provisioning would.
+//!
+//! ## Hole sentinel
+//!
+//! Block-table entries for unallocated blocks (and idle/dummy rows) use
+//! `hole()` == `n_pages` — deliberately out of range. The graphs scatter
+//! with `mode="drop"` (hole writes vanish) and gather with clamping
+//! (hole reads land on an arbitrary page and are always masked, because
+//! a hole only ever covers positions beyond the slot's `pos`).
+
+use anyhow::{bail, Result};
+
+#[derive(Debug)]
+pub struct Pager {
+    page_size: usize,
+    blocks_per_slot: usize,
+    /// LIFO free list of physical page ids
+    free: Vec<u32>,
+    /// page -> owning slot; the invariant mirror of `tables`
+    owner: Vec<Option<usize>>,
+    /// per-slot block tables, logical block order
+    tables: Vec<Vec<u32>>,
+    /// per-slot reserved block budget (0 = slot not admitted)
+    reserved: Vec<usize>,
+    /// most pages ever allocated at once (monotone)
+    hwm: usize,
+}
+
+impl Pager {
+    pub fn new(
+        n_pages: usize,
+        page_size: usize,
+        batch: usize,
+        blocks_per_slot: usize,
+    ) -> Pager {
+        // LIFO: lowest page ids hand out first (nice for debugging)
+        let free: Vec<u32> = (0..n_pages as u32).rev().collect();
+        Pager {
+            page_size,
+            blocks_per_slot,
+            free,
+            owner: vec![None; n_pages],
+            tables: vec![Vec::new(); batch],
+            reserved: vec![0; batch],
+            hwm: 0,
+        }
+    }
+
+    pub fn n_pages(&self) -> usize {
+        self.owner.len()
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn blocks_per_slot(&self) -> usize {
+        self.blocks_per_slot
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.n_pages() - self.free.len()
+    }
+
+    /// High-water mark of `used_pages` over the pager's lifetime.
+    pub fn hwm(&self) -> usize {
+        self.hwm
+    }
+
+    /// The out-of-range block-table sentinel for unallocated blocks and
+    /// idle rows (writes drop, reads clamp+mask).
+    pub fn hole(&self) -> i32 {
+        self.n_pages() as i32
+    }
+
+    /// Pages needed to cover `len` positions (at least one block: even a
+    /// one-token prompt owns the page it writes).
+    pub fn blocks_for(&self, len: usize) -> usize {
+        len.div_ceil(self.page_size).clamp(1, self.blocks_per_slot)
+    }
+
+    /// Blocks reserved but not yet allocated, across all slots.
+    fn outstanding(&self) -> usize {
+        self.tables
+            .iter()
+            .zip(&self.reserved)
+            .map(|(t, &r)| r - t.len())
+            .sum()
+    }
+
+    /// Can a new request reserving `reserve_len` positions be admitted
+    /// on top of every outstanding reservation?
+    pub fn can_admit(&self, reserve_len: usize) -> bool {
+        self.blocks_for(reserve_len) + self.outstanding() <= self.free.len()
+    }
+
+    /// True when `reserve_len` could never be admitted, even into an
+    /// empty pool — the request must be rejected, not queued.
+    pub fn impossible(&self, reserve_len: usize) -> bool {
+        self.blocks_for(reserve_len) > self.n_pages()
+    }
+
+    fn alloc_page(&mut self, slot: usize) -> Result<u32> {
+        let Some(page) = self.free.pop() else {
+            bail!(
+                "KV page pool exhausted ({} pages, all allocated) — \
+                 admission reservations should have prevented this",
+                self.n_pages()
+            );
+        };
+        debug_assert!(self.owner[page as usize].is_none());
+        self.owner[page as usize] = Some(slot);
+        self.tables[slot].push(page);
+        self.hwm = self.hwm.max(self.used_pages());
+        Ok(page)
+    }
+
+    /// Admit slot `slot`: reserve `blocks_for(reserve_len)` pages for its
+    /// worst-case growth and allocate the `blocks_for(prompt_len)` its
+    /// prompt needs right now. Call `can_admit(reserve_len)` first; an
+    /// error here means the caller skipped it (or double-admitted).
+    pub fn admit(
+        &mut self,
+        slot: usize,
+        prompt_len: usize,
+        reserve_len: usize,
+    ) -> Result<()> {
+        if !self.tables[slot].is_empty() || self.reserved[slot] != 0 {
+            bail!("slot {slot} admitted twice (pages not released)");
+        }
+        let need_res = self.blocks_for(reserve_len.max(prompt_len));
+        if !self.can_admit(reserve_len.max(prompt_len)) {
+            bail!(
+                "page pool cannot cover a {need_res}-block reservation \
+                 ({} free, {} outstanding) — caller must check can_admit",
+                self.free.len(),
+                self.outstanding()
+            );
+        }
+        self.reserved[slot] = need_res;
+        for _ in 0..self.blocks_for(prompt_len) {
+            self.alloc_page(slot)?;
+        }
+        Ok(())
+    }
+
+    /// Ensure slot `slot` owns the page covering a write at position
+    /// `pos`, allocating from its reservation when the sequence crosses
+    /// a page boundary. Errors only on invariant breaks (write past the
+    /// reservation / into an unadmitted slot).
+    pub fn grow(&mut self, slot: usize, pos: usize) -> Result<()> {
+        if self.reserved[slot] == 0 {
+            bail!("grow on unadmitted slot {slot}");
+        }
+        let need = (pos / self.page_size) + 1;
+        if need > self.reserved[slot] {
+            bail!(
+                "slot {slot} write at pos {pos} needs block {} but only \
+                 {} were reserved at admission",
+                need - 1,
+                self.reserved[slot]
+            );
+        }
+        while self.tables[slot].len() < need {
+            self.alloc_page(slot)?;
+        }
+        Ok(())
+    }
+
+    /// Release every page and the reservation of `slot`; returns how
+    /// many pages went back to the pool.
+    pub fn release(&mut self, slot: usize) -> usize {
+        let pages = std::mem::take(&mut self.tables[slot]);
+        for &p in &pages {
+            debug_assert_eq!(self.owner[p as usize], Some(slot));
+            self.owner[p as usize] = None;
+            self.free.push(p);
+        }
+        self.reserved[slot] = 0;
+        pages.len()
+    }
+
+    /// The slot's block table (allocated blocks, logical order).
+    pub fn block_table(&self, slot: usize) -> &[u32] {
+        &self.tables[slot]
+    }
+
+    /// Flattened `[batch, n_blocks]` s32 block-table input: each slot's
+    /// allocated pages, then `hole()` for unallocated tail blocks and
+    /// everything in idle rows (row == slot, the decode binding).
+    pub fn fill_block_tables(&self, n_blocks: usize) -> Vec<i32> {
+        let slots: Vec<usize> = (0..self.tables.len()).collect();
+        self.fill_block_tables_for(&slots, self.tables.len(), n_blocks)
+    }
+
+    /// Flattened `[rows, n_blocks]` s32 block-table input for an explicit
+    /// row→slot mapping (admission: burst row `r` carries `slots[r]`).
+    /// Unallocated tail blocks and unmapped rows are holes. This is the
+    /// ONE encoder of the graph-side block-table contract.
+    pub fn fill_block_tables_for(
+        &self,
+        slots: &[usize],
+        rows: usize,
+        n_blocks: usize,
+    ) -> Vec<i32> {
+        let hole = self.hole();
+        let mut out = vec![hole; rows * n_blocks];
+        for (row, &slot) in slots.iter().enumerate() {
+            let table = &self.tables[slot];
+            for (j, &page) in table.iter().take(n_blocks).enumerate() {
+                out[row * n_blocks + j] = page as i32;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pager() -> Pager {
+        // 8 pages of 4 positions; 2 slots, up to 4 blocks (smax 16) each
+        Pager::new(8, 4, 2, 4)
+    }
+
+    #[test]
+    fn admit_allocates_prompt_blocks_and_reserves_growth() {
+        let mut p = pager();
+        assert!(p.can_admit(10));
+        p.admit(0, 5, 10).unwrap(); // 2 blocks now, 3 reserved
+        assert_eq!(p.block_table(0), &[0, 1]);
+        assert_eq!(p.used_pages(), 2);
+        assert_eq!(p.free_pages(), 6);
+        // growth inside the prompt's blocks is a no-op
+        p.grow(0, 6).unwrap();
+        assert_eq!(p.used_pages(), 2);
+        // crossing the boundary allocates the reserved third block
+        p.grow(0, 8).unwrap();
+        assert_eq!(p.block_table(0), &[0, 1, 2]);
+        // past the reservation is an invariant break, not an alloc
+        let e = p.grow(0, 12).unwrap_err().to_string();
+        assert!(e.contains("reserved at admission"), "{e}");
+    }
+
+    #[test]
+    fn reservations_backpressure_admission() {
+        let mut p = pager();
+        p.admit(0, 2, 16).unwrap(); // 1 block now, 4 reserved
+        assert_eq!(p.used_pages(), 1);
+        // 7 pages free but only 4 uncommitted: a 16-position request
+        // (4 blocks) fits, a second would not once slot 1 takes them
+        assert!(p.can_admit(16));
+        p.admit(1, 16, 16).unwrap();
+        assert_eq!(p.used_pages(), 5);
+        // free pages remain (3) but they back slot 0's reservation
+        assert_eq!(p.free_pages(), 3);
+        assert!(!p.can_admit(4));
+        // the reserved growth always succeeds
+        p.grow(0, 15).unwrap();
+        assert_eq!(p.block_table(0).len(), 4);
+    }
+
+    #[test]
+    fn release_returns_pages_and_reservation() {
+        let mut p = pager();
+        p.admit(0, 16, 16).unwrap();
+        p.admit(1, 4, 16).unwrap();
+        assert!(!p.can_admit(1));
+        assert_eq!(p.release(0), 4);
+        assert_eq!(p.used_pages(), 1);
+        assert!(p.can_admit(16), "released pages admit the next request");
+        // slot 0 can be admitted again from a clean slate
+        p.admit(0, 1, 4).unwrap();
+        assert_eq!(p.block_table(0).len(), 1);
+    }
+
+    #[test]
+    fn double_admit_is_an_error() {
+        let mut p = pager();
+        p.admit(0, 4, 8).unwrap();
+        let e = p.admit(0, 4, 8).unwrap_err().to_string();
+        assert!(e.contains("admitted twice"), "{e}");
+        let e = p.grow(1, 0).unwrap_err().to_string();
+        assert!(e.contains("unadmitted"), "{e}");
+    }
+
+    #[test]
+    fn admit_without_capacity_is_an_error() {
+        // 6 pages: one full-context slot (4 blocks) leaves room for 2
+        let mut p = Pager::new(6, 4, 2, 4);
+        p.admit(0, 16, 16).unwrap();
+        assert!(!p.can_admit(16));
+        let e = p.admit(1, 16, 16).unwrap_err().to_string();
+        assert!(e.contains("can_admit"), "{e}");
+        assert!(p.can_admit(8), "a 2-block request still fits");
+        // an impossible request is distinguishable from backpressure
+        let small = Pager::new(2, 4, 1, 4);
+        assert!(small.impossible(16), "4 blocks > 2-page pool");
+        assert!(!small.impossible(8));
+        assert!(!p.impossible(16), "backpressure is not impossibility");
+    }
+
+    #[test]
+    fn block_tables_fill_with_holes() {
+        let mut p = pager();
+        p.admit(0, 6, 10).unwrap(); // pages [0, 1]
+        let bt = p.fill_block_tables(4);
+        assert_eq!(bt.len(), 8);
+        assert_eq!(&bt[..4], &[0, 1, 8, 8], "tail blocks are holes");
+        assert_eq!(&bt[4..], &[8, 8, 8, 8], "idle row is all holes");
+        assert_eq!(p.hole(), 8);
+        // admission variant: an explicit row -> slot mapping (row 0
+        // carries slot 1's pages), unmapped rows all holes
+        p.admit(1, 3, 6).unwrap(); // page [2]
+        let abt = p.fill_block_tables_for(&[1], 2, 2);
+        assert_eq!(abt, vec![2, 8, 8, 8]);
+    }
+
+    #[test]
+    fn blocks_for_rounds_up_and_clamps() {
+        let p = pager();
+        assert_eq!(p.blocks_for(0), 1, "even empty owns one block");
+        assert_eq!(p.blocks_for(1), 1);
+        assert_eq!(p.blocks_for(4), 1);
+        assert_eq!(p.blocks_for(5), 2);
+        assert_eq!(p.blocks_for(16), 4);
+        assert_eq!(p.blocks_for(999), 4, "clamped to blocks_per_slot");
+    }
+
+    #[test]
+    fn hwm_is_monotone() {
+        let mut p = pager();
+        p.admit(0, 16, 16).unwrap();
+        assert_eq!(p.hwm(), 4);
+        p.release(0);
+        assert_eq!(p.hwm(), 4, "release must not lower the high-water mark");
+        p.admit(1, 4, 8).unwrap();
+        assert_eq!(p.hwm(), 4);
+        p.admit(0, 16, 16).unwrap();
+        assert_eq!(p.hwm(), 5);
+    }
+}

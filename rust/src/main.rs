@@ -6,6 +6,7 @@
 //!   ao eval       --ckpt runs/small_int4wo-64.aockpt --scheme int4wo-64
 //!   ao serve      --ckpt ... --scheme fp8dq_row --addr 127.0.0.1:7433
 //!                 [--kv-cache int8]   # quantized (int8+scales) KV cache
+//!                 [--kv-layout paged] # block-table paged KV cache
 //!                 [--host-admission]  # force the host splice fallback
 //!   ao bench-client --addr 127.0.0.1:7433 --n 16
 //!   ao perfmodel  [--kernels]                   # H100/Fig3 + L1 estimates
@@ -193,7 +194,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let model = args.str_or("model", "small");
     let scheme = args.str_or("scheme", "f32");
     let addr = args.str_or("addr", "127.0.0.1:7433");
-    let max_conns = args.get("max-conns").map(|v| v.parse().unwrap());
+    let max_conns = args
+        .get("max-conns")
+        .map(|v| {
+            v.parse()
+                .with_context(|| format!("--max-conns '{v}' is not a number"))
+        })
+        .transpose()?;
     let cfg = engine::EngineConfig {
         artifacts_dir: ao::default_artifacts_dir(),
         ckpt_path,
@@ -201,7 +208,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         scheme,
         cache_scheme: engine::CacheScheme::parse(
             &args.str_or("kv-cache", "f32"),
-        )?,
+        )
+        .context("--kv-cache")?,
+        kv_layout: engine::KvLayout::parse(
+            &args.str_or("kv-layout", "static"),
+        )
+        .context("--kv-layout")?,
         eos_token: None,
         host_admission: args.flag("host-admission"),
     };

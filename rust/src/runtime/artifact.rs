@@ -41,6 +41,13 @@ pub struct ArtifactSpec {
     /// KV-cache storage scheme of decode/admit artifacts ("f32" or
     /// "int8"); manifests predating the field mean f32.
     pub cache: String,
+    /// KV-cache layout of decode/admit artifacts ("static" or "paged");
+    /// manifests predating the field mean static.
+    pub layout: String,
+    /// Positions per page ("paged" layout only; 0 otherwise).
+    pub page_size: usize,
+    /// Page-pool size ("paged" layout only; 0 otherwise).
+    pub n_pages: usize,
 }
 
 impl ArtifactSpec {
@@ -84,12 +91,68 @@ impl ArtifactSpec {
         }
     }
 
+    /// The trailing non-param inputs this decode/admit artifact binds
+    /// after the cache block, dictated by its layout: the static layout
+    /// addresses cache rows directly, the paged layout addresses pages
+    /// through a per-slot block table.
+    pub fn layout_trailing_inputs(&self) -> Result<&'static [&'static str]> {
+        match (self.kind.as_str(), self.layout.as_str()) {
+            ("admit", "static") => Ok(&["tokens", "lens", "slot_ids"]),
+            ("admit", "paged") => Ok(&["tokens", "lens", "block_tables"]),
+            ("decode", "static") => Ok(&["token", "pos"]),
+            ("decode", "paged") => Ok(&["token", "pos", "block_tables"]),
+            (_, other) => anyhow::bail!(
+                "artifact '{}' declares unsupported KV layout '{other}' \
+                 (valid values: static, paged)",
+                self.name
+            ),
+        }
+    }
+
+    /// Validate the paged-layout geometry fields against the kcache
+    /// spec: `page_size`/`n_pages` present and consistent with the page
+    /// tensor `[L, n_pages, Hkv, page_size, Dh]`, and `page_size`
+    /// dividing `smax` (the block table's logical extent). Shared by
+    /// `validate_admit` and the engine's decode-artifact startup check.
+    pub fn check_paged_geometry(&self, kshape: &[usize]) -> Result<()> {
+        let ctx = |what: &str| {
+            format!("paged artifact '{}': {what}", self.name)
+        };
+        if self.page_size == 0 || self.n_pages == 0 {
+            anyhow::bail!(ctx(
+                "manifest must declare page_size and n_pages"
+            ));
+        }
+        if self.smax == 0 || self.smax % self.page_size != 0 {
+            anyhow::bail!(
+                "{} (smax={}, page_size={})",
+                ctx("page_size must divide smax"),
+                self.smax,
+                self.page_size
+            );
+        }
+        if kshape.len() != 5
+            || kshape[1] != self.n_pages
+            || kshape[3] != self.page_size
+        {
+            anyhow::bail!(
+                "{} (got {kshape:?}, n_pages={}, page_size={})",
+                ctx("kcache must be [L, n_pages, Hkv, page_size, Dh]"),
+                self.n_pages,
+                self.page_size
+            );
+        }
+        Ok(())
+    }
+
     /// Validate the `admit` artifact contract the serving engine binds to:
     /// trailing inputs `(cache block…, tokens, lens, slot_ids)` after the
-    /// params block, outputs `(logits, cache block…')`, and cache shapes
-    /// consistent with `batch`/`seq`/`smax`. The cache block is dictated
-    /// by the artifact's `cache` scheme: `(kcache, vcache)` f32 tensors,
-    /// or `(kcache, kscale, vcache, vscale)` with int8 values and f32
+    /// params block (`block_tables` instead of `slot_ids` under the paged
+    /// layout), outputs `(logits, cache block…')`, and cache shapes
+    /// consistent with `batch`/`seq`/`smax` (static) or
+    /// `n_pages`/`page_size` (paged). The cache block is dictated by the
+    /// artifact's `cache` scheme: `(kcache, vcache)` f32 tensors, or
+    /// `(kcache, kscale, vcache, vscale)` with int8 values and f32
     /// per-(layer, slot, head, position) scales. A manifest entry that
     /// fails this check would make the engine scatter rows into the wrong
     /// place, so callers should treat an error as fatal.
@@ -102,13 +165,14 @@ impl ArtifactSpec {
         };
         let cache_names = self.cache_input_names()?;
         let quantized = self.cache == "int8";
+        let paged = self.layout == "paged";
         // The engine binds buffers POSITIONALLY (params..., cache block,
-        // tokens, lens, slot_ids), so the trailing inputs must sit at
-        // exactly those positions — lens/slot_ids share a shape and
-        // kcache/vcache are identical, so a name-only check would let a
-        // reordered manifest scatter rows into garbage slots.
+        // tokens, lens, slot_ids|block_tables), so the trailing inputs
+        // must sit at exactly those positions — lens/slot_ids share a
+        // shape and kcache/vcache are identical, so a name-only check
+        // would let a reordered manifest scatter rows into garbage slots.
         let mut trailing: Vec<&str> = cache_names.to_vec();
-        trailing.extend(["tokens", "lens", "slot_ids"]);
+        trailing.extend(self.layout_trailing_inputs()?);
         if self.inputs.len() < trailing.len() {
             anyhow::bail!(ctx(&format!(
                 "fewer than {} inputs",
@@ -145,7 +209,10 @@ impl ArtifactSpec {
         };
         let k = input("kcache");
         let kshape = &k.shape;
-        if kshape.len() != 5 || kshape[1] != self.batch
+        if paged {
+            self.check_paged_geometry(kshape)?;
+        } else if kshape.len() != 5
+            || kshape[1] != self.batch
             || kshape[3] != self.smax
         {
             anyhow::bail!(
@@ -176,7 +243,7 @@ impl ArtifactSpec {
                     anyhow::bail!(
                         "{} (got {:?} {})",
                         ctx(&format!(
-                            "{name} must be f32 [L, batch, Hkv, smax]"
+                            "{name} must be f32 (values shape minus Dh)"
                         )),
                         s.shape, s.dtype
                     );
@@ -186,13 +253,32 @@ impl ArtifactSpec {
         if input("tokens").shape != [self.batch, self.seq] {
             anyhow::bail!(ctx("tokens must be [batch, seq]"));
         }
-        if input("lens").shape != [self.batch]
-            || input("slot_ids").shape != [self.batch]
-        {
-            anyhow::bail!(ctx("lens/slot_ids must be [batch]"));
+        if input("lens").shape != [self.batch] {
+            anyhow::bail!(ctx("lens must be [batch]"));
         }
-        if input("slot_ids").dtype != "s32" {
-            anyhow::bail!(ctx("slot_ids must be s32"));
+        if paged {
+            let bt = input("block_tables");
+            let admit_blocks = self.seq.div_ceil(self.page_size);
+            if bt.shape != [self.batch, admit_blocks] {
+                anyhow::bail!(
+                    "{} (got {:?})",
+                    ctx(&format!(
+                        "block_tables must be [batch, {admit_blocks}] \
+                         (ceil(seq/page_size) blocks per row)"
+                    )),
+                    bt.shape
+                );
+            }
+            if bt.dtype != "s32" {
+                anyhow::bail!(ctx("block_tables must be s32"));
+            }
+        } else {
+            if input("slot_ids").shape != [self.batch] {
+                anyhow::bail!(ctx("slot_ids must be [batch]"));
+            }
+            if input("slot_ids").dtype != "s32" {
+                anyhow::bail!(ctx("slot_ids must be s32"));
+            }
         }
         if self.outputs.len() != 1 + n_cache {
             anyhow::bail!(ctx(&format!(
@@ -324,6 +410,19 @@ impl Manifest {
                     .and_then(|x| x.as_str())
                     .unwrap_or("f32")
                     .to_string(),
+                layout: a
+                    .get("layout")
+                    .and_then(|x| x.as_str())
+                    .unwrap_or("static")
+                    .to_string(),
+                page_size: a
+                    .get("page_size")
+                    .and_then(|x| x.as_usize())
+                    .unwrap_or(0),
+                n_pages: a
+                    .get("n_pages")
+                    .and_then(|x| x.as_usize())
+                    .unwrap_or(0),
             };
             artifacts.insert(spec.name.clone(), spec);
         }
@@ -589,6 +688,160 @@ mod tests {
         unknown.cache = "fp8".into();
         let e = unknown.validate_admit().unwrap_err().to_string();
         assert!(e.contains("unsupported KV-cache scheme"), "{e}");
+    }
+
+    const PAGED_SAMPLE: &str = r#"{
+      "version": 1,
+      "models": {},
+      "artifacts": [
+        {"name": "admit_f32_tiny_b2_s16_paged", "file": "ap.hlo.txt",
+         "kind": "admit", "model": "tiny", "scheme": "f32",
+         "layout": "paged", "page_size": 8, "n_pages": 6,
+         "batch": 2, "seq": 16, "smax": 128,
+         "donate": [[1, 1], [2, 2]],
+         "inputs": [
+            {"name": "params.tok_emb", "shape": [256, 64], "dtype": "f32"},
+            {"name": "kcache", "shape": [2,6,2,8,16], "dtype": "f32"},
+            {"name": "vcache", "shape": [2,6,2,8,16], "dtype": "f32"},
+            {"name": "tokens", "shape": [2, 16], "dtype": "s32"},
+            {"name": "lens", "shape": [2], "dtype": "s32"},
+            {"name": "block_tables", "shape": [2, 2], "dtype": "s32"}],
+         "outputs": [
+            {"name": "out.0", "shape": [2, 256], "dtype": "f32"},
+            {"name": "out.1", "shape": [2,6,2,8,16], "dtype": "f32"},
+            {"name": "out.2", "shape": [2,6,2,8,16], "dtype": "f32"}]},
+        {"name": "admit_f32_tiny_b2_s16_kv8_paged", "file": "ap8.hlo.txt",
+         "kind": "admit", "model": "tiny", "scheme": "f32",
+         "cache": "int8", "layout": "paged", "page_size": 8, "n_pages": 6,
+         "batch": 2, "seq": 16, "smax": 128,
+         "donate": [[1, 1], [2, 2], [3, 3], [4, 4]],
+         "inputs": [
+            {"name": "params.tok_emb", "shape": [256, 64], "dtype": "f32"},
+            {"name": "kcache", "shape": [2,6,2,8,16], "dtype": "s8"},
+            {"name": "kscale", "shape": [2,6,2,8], "dtype": "f32"},
+            {"name": "vcache", "shape": [2,6,2,8,16], "dtype": "s8"},
+            {"name": "vscale", "shape": [2,6,2,8], "dtype": "f32"},
+            {"name": "tokens", "shape": [2, 16], "dtype": "s32"},
+            {"name": "lens", "shape": [2], "dtype": "s32"},
+            {"name": "block_tables", "shape": [2, 2], "dtype": "s32"}],
+         "outputs": [
+            {"name": "out.0", "shape": [2, 256], "dtype": "f32"},
+            {"name": "out.1", "shape": [2,6,2,8,16], "dtype": "s8"},
+            {"name": "out.2", "shape": [2,6,2,8], "dtype": "f32"},
+            {"name": "out.3", "shape": [2,6,2,8,16], "dtype": "s8"},
+            {"name": "out.4", "shape": [2,6,2,8], "dtype": "f32"}]},
+        {"name": "decode_f32_tiny_b2_paged", "file": "dp.hlo.txt",
+         "kind": "decode", "model": "tiny", "scheme": "f32",
+         "layout": "paged", "page_size": 8, "n_pages": 6,
+         "batch": 2, "smax": 128,
+         "inputs": [
+            {"name": "params.tok_emb", "shape": [256, 64], "dtype": "f32"},
+            {"name": "kcache", "shape": [2,6,2,8,16], "dtype": "f32"},
+            {"name": "vcache", "shape": [2,6,2,8,16], "dtype": "f32"},
+            {"name": "token", "shape": [2], "dtype": "s32"},
+            {"name": "pos", "shape": [2], "dtype": "s32"},
+            {"name": "block_tables", "shape": [2, 16], "dtype": "s32"}],
+         "outputs": [
+            {"name": "out.0", "shape": [2, 256], "dtype": "f32"},
+            {"name": "out.1", "shape": [2,6,2,8,16], "dtype": "f32"},
+            {"name": "out.2", "shape": [2,6,2,8,16], "dtype": "f32"}]}
+      ]}"#;
+
+    #[test]
+    fn parses_and_validates_paged_artifacts() {
+        let m = Manifest::parse(PAGED_SAMPLE).unwrap();
+        let a = m.artifact("admit_f32_tiny_b2_s16_paged").unwrap();
+        assert_eq!(a.layout, "paged");
+        assert_eq!((a.page_size, a.n_pages), (8, 6));
+        assert_eq!(
+            a.layout_trailing_inputs().unwrap(),
+            &["tokens", "lens", "block_tables"]
+        );
+        a.validate_admit().unwrap();
+        let a8 = m.artifact("admit_f32_tiny_b2_s16_kv8_paged").unwrap();
+        assert_eq!(a8.cache, "int8");
+        a8.validate_admit().unwrap();
+        let d = m.artifact("decode_f32_tiny_b2_paged").unwrap();
+        assert_eq!(
+            d.layout_trailing_inputs().unwrap(),
+            &["token", "pos", "block_tables"]
+        );
+        // manifests predating the layout field mean static
+        let old = Manifest::parse(ADMIT_SAMPLE).unwrap();
+        let oa = old.artifact("admit_f32_tiny_b2_s16").unwrap();
+        assert_eq!(oa.layout, "static");
+        assert_eq!((oa.page_size, oa.n_pages), (0, 0));
+        assert_eq!(
+            oa.layout_trailing_inputs().unwrap(),
+            &["tokens", "lens", "slot_ids"]
+        );
+    }
+
+    #[test]
+    fn validate_admit_paged_catches_contract_breaks() {
+        let m = Manifest::parse(PAGED_SAMPLE).unwrap();
+        let good = m.artifact("admit_f32_tiny_b2_s16_paged").unwrap();
+
+        // block table must cover exactly ceil(seq/page_size) blocks
+        let mut bad_bt = good.clone();
+        bad_bt
+            .inputs
+            .iter_mut()
+            .find(|s| s.name == "block_tables")
+            .unwrap()
+            .shape = vec![2, 3];
+        let e = bad_bt.validate_admit().unwrap_err().to_string();
+        assert!(e.contains("block_tables must be [batch, 2]"), "{e}");
+
+        let mut bad_dtype = bad_bt.clone();
+        bad_dtype
+            .inputs
+            .iter_mut()
+            .find(|s| s.name == "block_tables")
+            .unwrap()
+            .shape = vec![2, 2];
+        bad_dtype
+            .inputs
+            .iter_mut()
+            .find(|s| s.name == "block_tables")
+            .unwrap()
+            .dtype = "f32".into();
+        assert!(bad_dtype.validate_admit().is_err());
+
+        // page tensor must match the declared pool geometry
+        let mut bad_pages = good.clone();
+        bad_pages.n_pages = 7;
+        let e = bad_pages.validate_admit().unwrap_err().to_string();
+        assert!(e.contains("[L, n_pages, Hkv, page_size, Dh]"), "{e}");
+
+        // missing paging geometry is fatal, not silently static
+        let mut no_geom = good.clone();
+        no_geom.page_size = 0;
+        let e = no_geom.validate_admit().unwrap_err().to_string();
+        assert!(e.contains("must declare page_size and n_pages"), "{e}");
+
+        // page_size must tile the logical context
+        let mut bad_tile = good.clone();
+        bad_tile.smax = 100;
+        let e = bad_tile.validate_admit().unwrap_err().to_string();
+        assert!(e.contains("page_size must divide smax"), "{e}");
+
+        // the static trailing contract must not pass for a paged entry
+        let mut renamed = good.clone();
+        renamed
+            .inputs
+            .iter_mut()
+            .find(|s| s.name == "block_tables")
+            .unwrap()
+            .name = "slot_ids".into();
+        let e = renamed.validate_admit().unwrap_err().to_string();
+        assert!(e.contains("in that order"), "{e}");
+
+        // an unknown layout names the valid values
+        let mut unknown = good.clone();
+        unknown.layout = "ragged".into();
+        let e = unknown.validate_admit().unwrap_err().to_string();
+        assert!(e.contains("valid values: static, paged"), "{e}");
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //! `cargo test` stays usable before the first AOT build.
 
 use ao::ckpt::Checkpoint;
-use ao::coordinator::{engine, CacheScheme, Event, FinishReason, SubmitReq};
+use ao::coordinator::{
+    engine, CacheScheme, Event, FinishReason, KvLayout, SubmitReq,
+};
 use ao::data::corpus::standard_corpus;
 use ao::data::dataset::PackedDataset;
 use ao::evalh::Evaluator;
@@ -13,7 +15,7 @@ use ao::runtime::Runtime;
 use ao::tensor::HostTensor;
 use ao::tokenizer::Tokenizer;
 use ao::train::Trainer;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::mpsc::channel;
 use std::time::Instant;
 
@@ -27,7 +29,7 @@ fn artifacts_dir() -> Option<PathBuf> {
     }
 }
 
-fn tiny_master_ckpt(dir: &PathBuf) -> Checkpoint {
+fn tiny_master_ckpt(dir: &Path) -> Checkpoint {
     // deterministic init without any training
     let trainer = Trainer::new(dir, "tiny", "bf16", 1).expect("trainer");
     trainer.export_checkpoint().expect("export")
@@ -130,6 +132,7 @@ fn engine_serves_batched_requests() {
         model: "tiny".into(),
         scheme: "f32".into(),
         cache_scheme: CacheScheme::F32,
+        kv_layout: KvLayout::Static,
         eos_token: None,
         host_admission: false,
     });
@@ -189,6 +192,7 @@ fn engine_greedy_decode_is_deterministic() {
             model: "tiny".into(),
             scheme: "f32".into(),
             cache_scheme: CacheScheme::F32,
+            kv_layout: KvLayout::Static,
             eos_token: None,
             host_admission: false,
         });
@@ -247,6 +251,7 @@ fn decode_host_traffic_is_logits_only() {
         model: "tiny".into(),
         scheme: "f32".into(),
         cache_scheme: CacheScheme::F32,
+        kv_layout: KvLayout::Static,
         eos_token: None,
         host_admission: false,
     });
@@ -323,6 +328,7 @@ fn context_cap_grants_the_last_cache_slot() {
         model: "tiny".into(),
         scheme: "f32".into(),
         cache_scheme: CacheScheme::F32,
+        kv_layout: KvLayout::Static,
         eos_token: None,
         host_admission: false,
     });
@@ -387,6 +393,7 @@ fn oversized_head_does_not_stall_admission() {
         model: "tiny".into(),
         scheme: "f32".into(),
         cache_scheme: CacheScheme::F32,
+        kv_layout: KvLayout::Static,
         eos_token: None,
         host_admission: false,
     });
@@ -454,7 +461,7 @@ fn oversized_head_does_not_stall_admission() {
 
 /// True when the artifact dir carries admit artifacts for (tiny, f32)
 /// under `cache_scheme`; otherwise prints a skip notice.
-fn has_admit_artifacts(dir: &PathBuf, cache_scheme: CacheScheme) -> bool {
+fn has_admit_artifacts(dir: &Path, cache_scheme: CacheScheme) -> bool {
     let runtime = Runtime::open(dir).unwrap();
     let found = runtime
         .manifest
@@ -524,6 +531,7 @@ fn admission_rows_only_under(cache_scheme: CacheScheme) {
         model: "tiny".into(),
         scheme: "f32".into(),
         cache_scheme,
+        kv_layout: KvLayout::Static,
         eos_token: None,
         host_admission: false,
     });
@@ -609,6 +617,7 @@ fn admission_paths_agree_under(cache_scheme: CacheScheme) {
             model: "tiny".into(),
             scheme: "f32".into(),
             cache_scheme,
+            kv_layout: KvLayout::Static,
             eos_token: None,
             host_admission,
         });
@@ -691,6 +700,7 @@ fn kv_cache_schemes_agree() {
             model: "tiny".into(),
             scheme: "f32".into(),
             cache_scheme,
+            kv_layout: KvLayout::Static,
             eos_token: None,
             host_admission: false,
         });
@@ -742,6 +752,127 @@ fn kv_cache_schemes_agree() {
     );
 }
 
+/// True when the artifact dir carries paged decode+admit artifacts for
+/// (tiny, f32) under `cache_scheme`; otherwise prints a skip notice.
+fn has_paged_artifacts(dir: &Path, cache_scheme: CacheScheme) -> bool {
+    let runtime = Runtime::open(dir).unwrap();
+    let found = ["decode", "admit"].iter().all(|&kind| {
+        runtime
+            .manifest
+            .find(kind, "tiny", Some("f32"))
+            .iter()
+            .any(|s| s.cache == cache_scheme.tag() && s.layout == "paged")
+    });
+    if !found {
+        eprintln!(
+            "[skip] no paged artifacts for kv-cache {}; re-run `make \
+             artifacts`",
+            cache_scheme.tag()
+        );
+    }
+    found
+}
+
+/// Tentpole acceptance (paged KV cache): the same scripted greedy
+/// workload produces identical token streams under --kv-layout=static
+/// and --kv-layout=paged for BOTH cache schemes, while the paged page
+/// pool is resident-smaller than the static [B, Smax] reservation and
+/// the pager actually cycled pages (hwm > 0, all released at the end).
+#[test]
+fn kv_layouts_agree() {
+    let Some(dir) = artifacts_dir() else { return };
+    for cache_scheme in [CacheScheme::F32, CacheScheme::Int8] {
+        if !has_admit_artifacts(&dir, cache_scheme)
+            || !has_paged_artifacts(&dir, cache_scheme)
+        {
+            return;
+        }
+        let master = tiny_master_ckpt(&dir);
+        let tmp = std::env::temp_dir().join("ao_int_tests");
+        std::fs::create_dir_all(&tmp).unwrap();
+        let ckpt_path =
+            tmp.join(format!("tiny_f32_layout_{}.aockpt", cache_scheme.tag()));
+        master.save(&ckpt_path).unwrap();
+
+        let run = |kv_layout: KvLayout| {
+            let (handle, join) = engine::spawn(engine::EngineConfig {
+                artifacts_dir: dir.clone(),
+                ckpt_path: ckpt_path.clone(),
+                model: "tiny".into(),
+                scheme: "f32".into(),
+                cache_scheme,
+                kv_layout,
+                eos_token: None,
+                host_admission: false,
+            });
+            let mut rxs = Vec::new();
+            // mixed short/long greedy workload, more requests than fit at
+            // once so slots (and pages) are recycled
+            for i in 0..10u64 {
+                let (tx, rx) = channel();
+                handle
+                    .submit(SubmitReq {
+                        id: i,
+                        prompt_tokens: vec![
+                            15 + 5 * i as u32;
+                            2 + (3 * i as usize) % 11
+                        ],
+                        max_new_tokens: 4 + (i as usize % 3) * 3,
+                        temperature: 0.0,
+                        seed: i,
+                        tx,
+                        submitted_at: Instant::now(),
+                    })
+                    .unwrap();
+                rxs.push(rx);
+            }
+            let streams: Vec<Vec<u32>> = rxs
+                .into_iter()
+                .map(|rx| {
+                    let mut toks = Vec::new();
+                    for ev in rx {
+                        match ev {
+                            Event::Token(t) => toks.push(t),
+                            Event::Done(_) => break,
+                            Event::Error(e) => panic!("error: {e}"),
+                        }
+                    }
+                    toks
+                })
+                .collect();
+            handle.shutdown();
+            let m = join.join().unwrap().unwrap();
+            (streams, m)
+        };
+        let (static_streams, static_m) = run(KvLayout::Static);
+        let (paged_streams, paged_m) = run(KvLayout::Paged);
+        assert_eq!(
+            static_streams,
+            paged_streams,
+            "paging must not change the greedy token streams \
+             (kv-cache {})",
+            cache_scheme.tag()
+        );
+        assert!(
+            paged_m.cache_resident_bytes < static_m.cache_resident_bytes,
+            "the page pool must be resident-smaller than the static \
+             cache: {} vs {}",
+            paged_m.cache_resident_bytes,
+            static_m.cache_resident_bytes
+        );
+        assert!(paged_m.pages_total > 0);
+        assert!(
+            paged_m.pages_hwm > 0,
+            "the pager must actually have allocated pages"
+        );
+        assert_eq!(
+            paged_m.pages_used, 0,
+            "every page returns to the pool once the workload drains"
+        );
+        assert_eq!(static_m.pages_total, 0, "static engines have no pool");
+    }
+}
+
 /// ROADMAP "untupled execution outputs": the binding must hand back one
 /// buffer per output tuple element, otherwise the device-resident decode
 /// and admission paths silently degrade to metered host round-trips (the
@@ -776,6 +907,7 @@ fn sampled_requests_diverge() {
         model: "tiny".into(),
         scheme: "f32".into(),
         cache_scheme: CacheScheme::F32,
+        kv_layout: KvLayout::Static,
         eos_token: None,
         host_admission: false,
     });
@@ -838,6 +970,7 @@ fn empty_prompt_is_rejected() {
         model: "tiny".into(),
         scheme: "f32".into(),
         cache_scheme: CacheScheme::F32,
+        kv_layout: KvLayout::Static,
         eos_token: None,
         host_admission: false,
     });

@@ -2,6 +2,7 @@
 //! `ao::util::proptest`): invariants that must hold for arbitrary inputs.
 
 use ao::coordinator::kvslots::{Slot, SlotTable};
+use ao::coordinator::pager::Pager;
 use ao::quant::apply::{
     quant_int4_group_asym, quant_int4_group_sym, quant_int8_channelwise,
     quant_fp8_rowwise, sparse24_compress,
@@ -377,6 +378,102 @@ fn prop_slot_table_never_double_allocates() {
             assert_eq!(table.n_active(), live.len());
             assert!(table.n_active() <= b);
         }
+    }
+}
+
+#[test]
+fn prop_pager_invariants() {
+    // The paged-KV allocator under random admit/grow/release traffic:
+    //   - a page is never owned by two slots at once
+    //   - occupancy == the sum of per-slot block-table lengths
+    //   - freed pages return to the pool (drained pager == fresh pager)
+    //   - the high-water mark is monotone and bounds current usage
+    //   - reservations make growth infallible up to the reserved length
+    let mut rng = Rng::new(0x9A_6E);
+    for case in 0..30 {
+        let page_size = [4usize, 8][rng.below(2)];
+        let blocks_per_slot = 1 + rng.below(4);
+        let smax = page_size * blocks_per_slot;
+        let batch = 1 + rng.below(4);
+        // pools from starved to over-provisioned
+        let n_pages = 1 + rng.below(batch * blocks_per_slot + 2);
+        let mut p = Pager::new(n_pages, page_size, batch, blocks_per_slot);
+        let mut live: Vec<Option<usize>> = vec![None; batch]; // reserve_len
+        let mut last_hwm = 0usize;
+        for op in 0..200 {
+            match rng.below(3) {
+                0 => {
+                    if let Some(slot) =
+                        (0..batch).find(|&s| live[s].is_none())
+                    {
+                        let prompt = 1 + rng.below(smax);
+                        let reserve =
+                            (prompt + rng.below(smax)).min(smax);
+                        if p.can_admit(reserve) {
+                            p.admit(slot, prompt, reserve).unwrap();
+                            live[slot] = Some(reserve);
+                        } else {
+                            assert!(
+                                p.admit(slot, prompt, reserve).is_err(),
+                                "admit past can_admit must fail \
+                                 (case {case} op {op})"
+                            );
+                        }
+                    }
+                }
+                1 => {
+                    let live_slots: Vec<usize> = (0..batch)
+                        .filter(|&s| live[s].is_some())
+                        .collect();
+                    if !live_slots.is_empty() {
+                        let slot = live_slots[rng.below(live_slots.len())];
+                        let reserve = live[slot].unwrap();
+                        // any position inside the reservation must grow
+                        // without ever exhausting the pool
+                        let pos = rng.below(reserve);
+                        p.grow(slot, pos).unwrap();
+                    }
+                }
+                _ => {
+                    let live_slots: Vec<usize> = (0..batch)
+                        .filter(|&s| live[s].is_some())
+                        .collect();
+                    if !live_slots.is_empty() {
+                        let slot = live_slots[rng.below(live_slots.len())];
+                        p.release(slot);
+                        live[slot] = None;
+                    }
+                }
+            }
+            // exclusive ownership + occupancy accounting
+            let mut seen = std::collections::BTreeSet::new();
+            let mut total_blocks = 0usize;
+            for s in 0..batch {
+                let table = p.block_table(s);
+                if live[s].is_none() {
+                    assert!(table.is_empty(), "idle slot owns pages");
+                }
+                for &page in table {
+                    assert!((page as usize) < n_pages, "page id in range");
+                    assert!(
+                        seen.insert(page),
+                        "page {page} owned by two slots (case {case})"
+                    );
+                }
+                total_blocks += table.len();
+            }
+            assert_eq!(p.used_pages(), total_blocks);
+            assert_eq!(p.used_pages() + p.free_pages(), n_pages);
+            assert!(p.hwm() >= p.used_pages());
+            assert!(p.hwm() >= last_hwm, "hwm must be monotone");
+            last_hwm = p.hwm();
+        }
+        // drain: every page returns to the pool
+        for s in 0..batch {
+            p.release(s);
+        }
+        assert_eq!(p.used_pages(), 0);
+        assert_eq!(p.free_pages(), n_pages);
     }
 }
 
