@@ -7,20 +7,24 @@ PYTHON ?= python3
 #   make verify CARGOFLAGS="--no-default-features --features stub-xla"
 # (or `make verify-stub`). See vendor/xla-stub.
 CARGOFLAGS ?=
+# Which tier a verify run exercised, echoed on success so local runs are
+# self-describing: xla (full tier-1), stub (vendored shim), python.
+TIER ?= xla
 
 .PHONY: verify verify-stub build test fmt clippy artifacts python-test clean
 
 ## tier-1 gate: release build, test suite, formatting, lints
 verify: build test fmt clippy
+	@echo "[verify] tier ran: $(TIER) (cargo build+test+fmt+clippy$(if $(CARGOFLAGS), with $(CARGOFLAGS)))"
 
 ## tier-1 gate on the vendored no-op XLA shim (no libxla required);
 ## integration tests self-skip, host-only unit tests all run — including
-## the pager/batcher suites and the quant-cache suite (quant::kvcache,
-## the dtype-dispatched splice_kv and the int8 scatter/splice parity
-## tests in coordinator::engine). Runs the same test + fmt + clippy trio
-## CI's blocking tier1-stub job runs.
+## the pager/prefixcache/batcher suites and the quant-cache suite
+## (quant::kvcache, the dtype-dispatched splice_kv and the int8
+## scatter/splice parity tests in coordinator::engine). Runs the same
+## test + fmt + clippy trio CI's blocking tier1-stub job runs.
 verify-stub:
-	$(MAKE) verify CARGOFLAGS="--no-default-features --features stub-xla"
+	$(MAKE) verify TIER=stub CARGOFLAGS="--no-default-features --features stub-xla"
 
 build:
 	$(CARGO) build --release $(CARGOFLAGS)
@@ -41,6 +45,7 @@ artifacts:
 
 python-test:
 	cd python && $(PYTHON) -m pytest tests -q
+	@echo "[verify] tier ran: python (pytest python/tests — model graphs incl. prefix-cache suffix prefill, kernels, exporter)"
 
 clean:
 	$(CARGO) clean

@@ -63,6 +63,7 @@ fn main() -> anyhow::Result<()> {
         kv_layout: engine::KvLayout::Static,
         eos_token: None,
         host_admission: false,
+        prefix_cache: true,
     });
     let srv_handle = handle.clone();
     let srv = std::thread::spawn(move || {

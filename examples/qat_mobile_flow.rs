@@ -74,6 +74,7 @@ fn main() -> anyhow::Result<()> {
         kv_layout: engine::KvLayout::Static,
         eos_token: None,
         host_admission: false,
+        prefix_cache: true,
     });
     let (tx, rx) = channel();
     handle.submit(SubmitReq {

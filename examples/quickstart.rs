@@ -67,6 +67,7 @@ fn main() -> anyhow::Result<()> {
         kv_layout: engine::KvLayout::Static,
         eos_token: None,
         host_admission: false,
+        prefix_cache: true,
     });
     let tok = Tokenizer::byte_level();
     let (tx, rx) = channel();

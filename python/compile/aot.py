@@ -33,6 +33,8 @@ from .model import (
     admit_kv8,
     admit_paged,
     admit_paged_kv8,
+    admit_suffix_paged,
+    admit_suffix_paged_kv8,
     decode_step,
     decode_step_kv8,
     decode_step_paged,
@@ -214,9 +216,39 @@ CACHE_SUFFIX = {"f32": "", "int8": "_kv8"}
 LAYOUT_SUFFIX = {"static": "", "paged": "_paged"}
 
 
+def validate_page_geometry(page_size, kv_pages, smax, size):
+    """Up-front CLI validation of the paged-layout geometry for one
+    model size. Returns an error message naming the offending flag and
+    its valid range, or None when the geometry is usable. Mirrored by
+    `rust/src/runtime/artifact.rs::check_paged_geometry`, so a manifest
+    that slips past one side still fails the other."""
+    max_ps = smax // 2
+    if page_size <= 0:
+        return (f"--page-size must be >= 1 (got {page_size}); valid "
+                f"range for model '{size}': 1..{max_ps}")
+    if page_size > max_ps:
+        # one block per slot degenerates to the static footprint (and
+        # page_size > smax could not even hold one context)
+        return (f"--page-size {page_size} is too large for model "
+                f"'{size}' (max_seq {smax}); valid range: 1..{max_ps} "
+                f"(paging needs at least 2 blocks per slot)")
+    if smax % page_size != 0:
+        return (f"--page-size {page_size} does not divide max_seq "
+                f"{smax} of model '{size}'; pick a divisor in "
+                f"1..{max_ps}")
+    blocks_per_slot = smax // page_size
+    if kv_pages and kv_pages < blocks_per_slot:
+        return (f"--kv-pages {kv_pages} is below one full-context "
+                f"reservation for model '{size}' (max_seq {smax} / "
+                f"page-size {page_size} = {blocks_per_slot} pages): a "
+                f"window-spanning request could never be admitted; "
+                f"pass >= {blocks_per_slot}, or 0 for auto")
+    return None
+
+
 def export_serving(ex, cfg, scheme_tag, batch, prefill_seqs, smax,
                    cache_schemes=("f32",), kv_layouts=("static",),
-                   page_size=16, n_pages=0):
+                   page_size=16, n_pages=0, prefix_cache=True):
     scheme = QuantScheme.parse(scheme_tag)
     params, _, _ = serving_args(cfg, scheme, batch, 8)
     cache_args = _cache_arg_specs(cfg, batch, smax, n_pages, page_size)
@@ -284,6 +316,40 @@ def export_serving(ex, cfg, scheme_tag, batch, prefill_seqs, smax,
                     (params,) + cargs + extra,
                     ("params",) + cnames + extra_names,
                     meta,
+                    donate={i + 1: n for i, n in enumerate(cnames)},
+                )
+                # prefix-cache admission: suffix-only prefill at a
+                # per-row start offset, attending through a full-window
+                # block table that maps the shared prefix pages. Paged
+                # only — the static layout has no pages to share.
+                if ltag != "paged" or not prefix_cache:
+                    continue
+                window_bt = jax.ShapeDtypeStruct(
+                    (batch, smax // page_size), jnp.int32
+                )
+                start_lens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+                sfn = {
+                    "f32": lambda p, k, v, t, l, st, bt: admit_suffix_paged(
+                        p, k, v, t, l, st, bt, cfg, scheme, smax),
+                    "int8":
+                        lambda p, k, ks, v, vs, t, l, st, bt:
+                        admit_suffix_paged_kv8(
+                            p, k, ks, v, vs, t, l, st, bt, cfg, scheme,
+                            smax),
+                }[ctag]
+                smeta = {"kind": "admit_suffix", "model": cfg.name,
+                         "scheme": scheme_tag, "batch": batch,
+                         "seq": seq, "smax": smax, "cache": ctag}
+                smeta.update(layout_meta(ltag))
+                ex.export(
+                    f"admit_suffix_{scheme_tag}_{cfg.name}_b{batch}"
+                    f"_s{seq}{CACHE_SUFFIX[ctag]}{LAYOUT_SUFFIX[ltag]}",
+                    sfn,
+                    (params,) + cargs
+                    + (tokens, lens, start_lens, window_bt),
+                    ("params",) + cnames
+                    + ("tokens", "lens", "start_lens", "block_tables"),
+                    smeta,
                     donate={i + 1: n for i, n in enumerate(cnames)},
                 )
 
@@ -479,6 +545,11 @@ def main():
                     help="page-pool size for the paged layout; 0 = auto "
                          "(half the worst-case batch*smax footprint, "
                          "floor one full-context reservation)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="export admit_suffix artifacts (suffix-only "
+                         "prefill over shared prefix pages) alongside "
+                         "every paged admit bucket")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--train-batch", type=int, default=4)
     ap.add_argument("--train-seq", type=int, default=64)
@@ -502,7 +573,7 @@ def main():
         if l not in KV_LAYOUTS:
             ap.error(f"unknown --kv-layout '{l}' "
                      f"(expected one of {', '.join(KV_LAYOUTS)})")
-    if args.page_size <= 0:
+    if "paged" not in kv_layouts and args.page_size <= 0:
         ap.error("--page-size must be positive")
     if args.kv_pages < 0:
         ap.error("--kv-pages must be >= 0 (0 = auto)")
@@ -512,15 +583,12 @@ def main():
         cfg = MODEL_SIZES[size]
         ex.add_model(cfg)
         smax = cfg.max_seq
-        if "paged" in kv_layouts and smax % args.page_size != 0:
-            ap.error(f"--page-size {args.page_size} does not divide "
-                     f"max_seq {smax} of model '{size}'")
-        if "paged" in kv_layouts and smax // args.page_size < 2:
-            # one block per slot degenerates to the static footprint:
-            # the auto pool would equal B*blocks and paging saves nothing
-            ap.error(f"--page-size {args.page_size} leaves fewer than 2 "
-                     f"blocks per slot for model '{size}' (max_seq "
-                     f"{smax}); paging needs page_size <= max_seq/2")
+        if "paged" in kv_layouts:
+            err = validate_page_geometry(
+                args.page_size, args.kv_pages, smax, size
+            )
+            if err:
+                ap.error(err)
         # auto pool size: half of the worst-case B*Smax footprint — the
         # point of paging is that resident bytes track live context, and
         # admission backpressure absorbs bursts beyond the pool. Floor at
@@ -542,7 +610,7 @@ def main():
         for tag in size_schemes:
             export_serving(ex, cfg, tag, args.batch, prefill_seqs, smax,
                            cache_schemes, kv_layouts, args.page_size,
-                           n_pages)
+                           n_pages, args.prefix_cache)
         print(f"[{size}] training recipes: {recipes}")
         for recipe in recipes:
             export_training(

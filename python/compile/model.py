@@ -32,6 +32,13 @@ the table (out-of-range ids are holes: writes drop, reads clamp+mask).
 Paging composes with CacheScheme: a page is a (values block, scales
 block) pair, so int8 pages carry f32 scale pages of the same addressing.
 
+Prefix cache (`--prefix-cache`, paged layout only): `admit_suffix_paged`
+(+`_kv8`) prefills only the uncached suffix of a prompt at a per-row
+`start_lens` position offset, attending through a full-window block
+table that maps the shared prefix pages — the Rust prefix index decides
+what is cached, the graph reads shared pages and writes only the
+suffix's private pages (docs/prefix_cache.md).
+
 Everything is f32: this testbed's CPU PJRT has no bf16 arithmetic advantage,
 so f32 stands in for the paper's BF16 baseline (DESIGN.md §2).
 """
@@ -598,6 +605,147 @@ def _decode_paged_impl(params, cache, token, pos, block_tables, cfg,
     )
     x = rms_norm(x[:, 0], params["out_norm"], cfg.norm_eps)
     logits = quantized_linear(x, params["lm_head"], scheme)
+    return (logits,) + cache_out
+
+
+def admit_suffix_paged(params, kpages, vpages, tokens, lens, start_lens,
+                       block_tables, cfg: ModelConfig, scheme: QuantScheme,
+                       smax: int):
+    """Suffix-only prefill over the paged layout: the prefix-cache
+    admission graph.
+
+    Row b's prompt already has `start_lens[b]` tokens resident in the
+    shared prefix pages its block table maps (a whole number of full
+    pages — the engine's prefix index shares at full-page granularity
+    only); `tokens[b, :lens[b]]` are the remaining suffix tokens. The
+    graph embeds the suffix at absolute positions `start_lens[b] + i`,
+    attends through the block table to the cached prefix AND the fresh
+    suffix, and scatters only the suffix KV into the private pages the
+    pager assigned — the shared prefix pages are read, never written.
+
+    kpages/vpages [L, n_pages, Hkv, page_size, Dh]; tokens [B, S]
+    right-padded; lens/start_lens [B] int32; block_tables
+    [B, smax/page_size] int32 covering the FULL context window (prefix
+    pages first, then the suffix's private pages; holes elsewhere). With
+    start_lens == 0 this degenerates to `admit_paged` over a
+    whole-window table, which is how miss rows ride along in a mixed
+    burst. Returns (last-token logits [B, V], K', V')."""
+    return _admit_suffix_impl(
+        params, (kpages, vpages), tokens, lens, start_lens, block_tables,
+        cfg, scheme, smax, quantized=False,
+    )
+
+
+def admit_suffix_paged_kv8(params, kpages, kscale, vpages, vscale, tokens,
+                           lens, start_lens, block_tables,
+                           cfg: ModelConfig, scheme: QuantScheme,
+                           smax: int):
+    """`admit_suffix_paged` for the int8 cache scheme: the suffix is
+    prefilled in f32 while the attention read dequantizes the cached
+    prefix pages (value pages int8 + f32 absmax scale pages), and the
+    fresh suffix KV quantizes on write with the same per-(layer, row,
+    head, position) scales as every other int8 write path. Returns
+    (logits, K', Ks', V', Vs')."""
+    return _admit_suffix_impl(
+        params, (kpages, kscale, vpages, vscale), tokens, lens, start_lens,
+        block_tables, cfg, scheme, smax, quantized=True,
+    )
+
+
+def _admit_suffix_impl(params, cache, tokens, lens, start_lens,
+                       block_tables, cfg, scheme, smax, quantized):
+    b, s = tokens.shape
+    ps = cache[0].shape[3]
+    n_pages = cache[0].shape[1]
+    nb = block_tables.shape[1]
+    seff = nb * ps
+    x = params["tok_emb"][tokens]  # [B,S,D]
+    # absolute positions of the suffix tokens: the cached prefix shifts
+    # every RoPE angle and every causal bound by start_lens[b]
+    pos = start_lens[:, None] + jnp.arange(s)[None, :]  # [B,S]
+    cos, sin = rope_tables(cfg, pos)  # [B,S,Dh/2]
+    # suffix query i sees the whole cached prefix plus suffix keys <= i
+    tpos = jnp.arange(seff)
+    mask01 = (tpos[None, None, :] <= pos[:, :, None]).astype(jnp.float32)
+    mask = jnp.where(mask01 > 0, 0.0, -1e9)[:, None]  # [B,1,S,Seff]
+    # scatter targets: suffix token i writes absolute position pos[b,i].
+    # Padded tail positions (i >= lens[b]) become holes so their garbage
+    # drops on device; the clamp only keeps the table index legal for
+    # those soon-to-be-holes (live positions satisfy pos < smax by the
+    # engine's admission invariant start + suffix <= smax).
+    valid = jnp.arange(s)[None, :] < lens[:, None]
+    wpos = jnp.minimum(pos, smax - 1)
+    page_idx = jnp.take_along_axis(block_tables, wpos // ps, axis=1)
+    page_idx = jnp.where(valid, page_idx, n_pages)  # [B,S]
+    off = wpos % ps  # [B,S]
+
+    def layer_fn(h, carry):
+        lp = carry[0]
+        hn = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        q = _project(hn, lp["wq"], scheme, cfg, cfg.n_heads)  # [B,H,S,Dh]
+        kk = _project(hn, lp["wk"], scheme, cfg, cfg.n_kv_heads)
+        vv = _project(hn, lp["wv"], scheme, cfg, cfg.n_kv_heads)
+        q = apply_rope(q, cos[:, None], sin[:, None])
+        kk = apply_rope(kk, cos[:, None], sin[:, None])
+        if quantized:
+            kc, ksc, vc, vsc = carry[1:]
+            qk, sk = F.kv_quantize(kk)  # [B,Hkv,S,Dh] / [B,Hkv,S]
+            qv, sv = F.kv_quantize(vv)
+            kc = kc.at[page_idx, :, off].set(
+                qk.transpose(0, 2, 1, 3), mode="drop"
+            )
+            ksc = ksc.at[page_idx, :, off].set(
+                sk.transpose(0, 2, 1), mode="drop"
+            )
+            vc = vc.at[page_idx, :, off].set(
+                qv.transpose(0, 2, 1, 3), mode="drop"
+            )
+            vsc = vsc.at[page_idx, :, off].set(
+                sv.transpose(0, 2, 1), mode="drop"
+            )
+            keys = F.kv_dequantize(
+                _gather_pages(kc, block_tables),
+                _gather_pages(ksc, block_tables),
+            )
+            vals = F.kv_dequantize(
+                _gather_pages(vc, block_tables),
+                _gather_pages(vsc, block_tables),
+            )
+            cache_out = (kc, ksc, vc, vsc)
+        else:
+            kc, vc = carry[1:]
+            kc = kc.at[page_idx, :, off].set(
+                kk.transpose(0, 2, 1, 3), mode="drop"
+            )
+            vc = vc.at[page_idx, :, off].set(
+                vv.transpose(0, 2, 1, 3), mode="drop"
+            )
+            keys = _gather_pages(kc, block_tables)  # [B,Hkv,Seff,Dh]
+            vals = _gather_pages(vc, block_tables)
+            cache_out = (kc, vc)
+        rep = cfg.n_heads // cfg.n_kv_heads
+        keys_r = jnp.repeat(keys, rep, axis=1)  # [B,H,Seff,Dh]
+        vals_r = jnp.repeat(vals, rep, axis=1)
+        scores = jnp.einsum("bhsd,bhtd->bhst", q, keys_r) / cfg.head_dim**0.5
+        scores = scores + mask
+        attn = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhst,bhtd->bhsd", attn, vals_r)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, -1)
+        a = quantized_linear(
+            ctx.reshape(b * s, -1), lp["wo"], scheme
+        ).reshape(b, s, -1)
+        h = h + a
+        h = h + mlp_block(h, lp, scheme, cfg)
+        return h, cache_out
+
+    x, cache_out = jax.lax.scan(
+        layer_fn, x, (params["layers"],) + cache
+    )
+    x = rms_norm(x, params["out_norm"], cfg.norm_eps)
+    last = jnp.take_along_axis(
+        x, (lens - 1)[:, None, None].astype(jnp.int32), axis=1
+    )[:, 0]  # [B, D]
+    logits = quantized_linear(last, params["lm_head"], scheme)
     return (logits,) + cache_out
 
 

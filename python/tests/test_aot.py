@@ -117,7 +117,7 @@ def test_paged_artifact_contract(exported):
     ]
     assert paged, "exporter must emit paged artifacts"
     for a in paged:
-        assert a["kind"] in ("decode", "admit")
+        assert a["kind"] in ("decode", "admit", "admit_suffix")
         ps, n_pages = a["page_size"], a["n_pages"]
         assert a["smax"] % ps == 0
         blocks_per_slot = a["smax"] // ps
@@ -135,11 +135,16 @@ def test_paged_artifact_contract(exported):
             assert bt["shape"] == [a["batch"], blocks_per_slot]
             assert a["inputs"][-1]["name"] == "block_tables"
             assert a["inputs"][-3]["name"] == "token"
-        else:
+        elif a["kind"] == "admit":
             admit_blocks = -(-a["seq"] // ps)
             assert bt["shape"] == [a["batch"], admit_blocks]
             assert a["inputs"][-1]["name"] == "block_tables"
             assert a["inputs"][-3]["name"] == "tokens"
+        else:  # admit_suffix attends through the full context window
+            assert bt["shape"] == [a["batch"], blocks_per_slot]
+            assert a["inputs"][-1]["name"] == "block_tables"
+            assert a["inputs"][-2]["name"] == "start_lens"
+            assert a["inputs"][-4]["name"] == "tokens"
         kshape = by_name["kcache"]["shape"]
         assert kshape[1] == n_pages and kshape[3] == ps
         if a.get("cache", "f32") == "int8":
@@ -200,6 +205,83 @@ def test_admit_artifact_contract(exported):
                     assert by_name["kscale"]["shape"] == kshape[:4]
 
 
+def test_admit_suffix_artifact_contract(exported):
+    """Every paged admit bucket ships a matching admit_suffix artifact
+    per cache scheme: trailing inputs (tokens, lens, start_lens,
+    block_tables) with a FULL-WINDOW block table (smax/page_size
+    blocks, not the admit bucket's ceil(seq/ps)), same cache block and
+    outputs as the admit it shadows."""
+    _, manifest = exported
+    suffixes = {
+        (a["model"], a.get("scheme"), a["seq"], a.get("cache", "f32")): a
+        for a in manifest["artifacts"]
+        if a["kind"] == "admit_suffix"
+    }
+    assert suffixes, "exporter must emit admit_suffix artifacts"
+    paged_admits = [
+        a for a in manifest["artifacts"]
+        if a["kind"] == "admit" and a.get("layout") == "paged"
+    ]
+    assert paged_admits
+    for adm in paged_admits:
+        key = (adm["model"], adm.get("scheme"), adm["seq"],
+               adm.get("cache", "f32"))
+        sfx = suffixes[key]
+        assert sfx["layout"] == "paged"
+        assert sfx["page_size"] == adm["page_size"]
+        assert sfx["n_pages"] == adm["n_pages"]
+        names = [i["name"] for i in sfx["inputs"]]
+        assert names[-4:] == ["tokens", "lens", "start_lens",
+                              "block_tables"], sfx["name"]
+        by_name = {i["name"]: i for i in sfx["inputs"]}
+        assert by_name["tokens"]["shape"] == [sfx["batch"], sfx["seq"]]
+        assert by_name["start_lens"]["shape"] == [sfx["batch"]]
+        assert by_name["start_lens"]["dtype"] == "s32"
+        window = sfx["smax"] // sfx["page_size"]
+        assert by_name["block_tables"]["shape"] == [sfx["batch"], window]
+        # cache block and outputs mirror the admit artifact exactly
+        adm_by_name = {i["name"]: i for i in adm["inputs"]}
+        for n in ("kcache", "vcache"):
+            assert by_name[n]["shape"] == adm_by_name[n]["shape"]
+            assert by_name[n]["dtype"] == adm_by_name[n]["dtype"]
+        assert len(sfx["outputs"]) == len(adm["outputs"])
+        assert sfx["donate"] == adm["donate"]
+    # suffix artifacts exist only for the paged layout
+    assert all(a["layout"] == "paged" for a in suffixes.values())
+
+
+def test_validate_page_geometry_messages():
+    """The up-front CLI validation names the offending flag AND its
+    valid range (satellite contract; artifact.rs mirrors the same
+    floors on the Rust side)."""
+    from compile.aot import validate_page_geometry
+
+    assert validate_page_geometry(16, 0, 128, "tiny") is None
+    assert validate_page_geometry(16, 8, 128, "tiny") is None
+
+    e = validate_page_geometry(0, 0, 128, "tiny")
+    assert "--page-size" in e and ">= 1" in e and "1..64" in e, e
+    e = validate_page_geometry(-3, 0, 128, "tiny")
+    assert "--page-size" in e and "1..64" in e, e
+
+    e = validate_page_geometry(256, 0, 128, "tiny")
+    assert "--page-size" in e and "too large" in e, e
+    assert "1..64" in e and "tiny" in e, e
+    # page_size == smax leaves one block per slot: also rejected
+    e = validate_page_geometry(128, 0, 128, "tiny")
+    assert "too large" in e and "2 blocks per slot" in e, e
+
+    e = validate_page_geometry(12, 0, 128, "tiny")
+    assert "does not divide" in e and "max_seq 128" in e, e
+
+    e = validate_page_geometry(16, 4, 128, "tiny")
+    assert "--kv-pages 4" in e, e
+    assert "full-context reservation" in e and "8 pages" in e, e
+    assert "0 for auto" in e, e
+    # exactly one full-context reservation is the floor, not an error
+    assert validate_page_geometry(16, 8, 128, "tiny") is None
+
+
 def test_donation_metadata(exported):
     """decode/admit declare cache donation pairs (values AND scales under
     int8) the runtime can alias."""
@@ -209,7 +291,7 @@ def test_donation_metadata(exported):
         "int8": ["kcache", "kscale", "vcache", "vscale"],
     }
     for a in manifest["artifacts"]:
-        if a["kind"] not in ("decode", "admit"):
+        if a["kind"] not in ("decode", "admit", "admit_suffix"):
             assert "donate" not in a
             continue
         by_name = {i["name"]: idx for idx, i in enumerate(a["inputs"])}

@@ -14,6 +14,8 @@ from compile.model import (
     admit_kv8,
     admit_paged,
     admit_paged_kv8,
+    admit_suffix_paged,
+    admit_suffix_paged_kv8,
     decode_step,
     decode_step_kv8,
     decode_step_paged,
@@ -533,6 +535,205 @@ def test_paged_greedy_stream_matches_static_both_schemes(params, rng):
         # paged is bit-identical to static within each scheme
         np.testing.assert_array_equal(np.asarray(ls), np.asarray(lp))
         np.testing.assert_array_equal(np.asarray(l8), np.asarray(lp8))
+        pos = pos + 1
+
+
+# ---------------------------------------------------------------------------
+# Prefix cache (suffix-only prefill over shared prefix pages)
+# ---------------------------------------------------------------------------
+
+
+def test_admit_suffix_paged_matches_whole_prompt(params, rng):
+    """Suffix-only prefill == whole-prompt admission: with row 0's first
+    page already resident (the cached prefix), prefilling only the
+    suffix at a start offset reproduces the whole-prompt logits and
+    suffix pages, while the shared prefix page is read but NEVER
+    written (the full-page-only sharing invariant). Row 1 rides along
+    with start 0 (a miss row: the degenerate whole-prompt case) and row
+    2 is a dummy."""
+    sch = QuantScheme("f32")
+    b, s = 3, 16
+    toks = _toks(rng, b, s)
+    lens = jnp.asarray([12, 10, 1], jnp.int32)
+    # reference: whole-prompt paged admission of rows 0 and 1
+    n_pages = 8
+    shape = (CFG.n_layers, n_pages, CFG.n_kv_heads, PS, CFG.head_dim)
+    base = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    vbase = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    ref_bt = jnp.asarray(
+        [[0, 1], [2, 3], [n_pages, n_pages]], jnp.int32
+    )
+    ref_lg, ref_k, ref_v = admit_paged(
+        params, base, vbase, toks, lens, ref_bt, CFG, sch, SMAX
+    )
+    # suffix run: a fresh pool where page 4 carries row 0's cached
+    # prefix (positions 0..PS-1, exactly what the reference admission
+    # wrote) and everything else is the untouched base
+    kc = base.at[:, 4].set(ref_k[:, 0])
+    vc = vbase.at[:, 4].set(ref_v[:, 0])
+    # full-window tables (NB = SMAX // PS blocks): row 0 = cached prefix
+    # page + private suffix page, row 1 = two private pages, row 2 dummy
+    bt = jnp.asarray(
+        [
+            [4, 5] + [n_pages] * (NB - 2),
+            [6, 7] + [n_pages] * (NB - 2),
+            [n_pages] * NB,
+        ],
+        jnp.int32,
+    )
+    suffix = jnp.concatenate(
+        [toks[0, PS:], jnp.zeros((PS,), jnp.int32)]
+    )[None]
+    stoks = jnp.concatenate([suffix, toks[1:]], axis=0)
+    slens = jnp.asarray([12 - PS, 10, 1], jnp.int32)
+    starts = jnp.asarray([PS, 0, 0], jnp.int32)
+    lg, ka, va = admit_suffix_paged(
+        params, kc, vc, stoks, slens, starts, bt, CFG, sch, SMAX
+    )
+    np.testing.assert_allclose(
+        np.asarray(lg)[:2], np.asarray(ref_lg)[:2], atol=2e-4
+    )
+    # the shared prefix page is bit-untouched: suffix admission must
+    # never write a shared page
+    np.testing.assert_array_equal(np.asarray(ka)[:, 4], np.asarray(kc)[:, 4])
+    np.testing.assert_array_equal(np.asarray(va)[:, 4], np.asarray(vc)[:, 4])
+    # the suffix page holds the whole-prompt run's second block (the
+    # suffix KV attends through the cached prefix, so only float
+    # reduction order differs)
+    np.testing.assert_allclose(
+        np.asarray(ka)[:, 5, :, : 12 - PS],
+        np.asarray(ref_k)[:, 1, :, : 12 - PS],
+        atol=2e-4,
+    )
+    # the start=0 row is the whole-prompt computation over a window table
+    np.testing.assert_allclose(
+        np.asarray(ka)[:, 6], np.asarray(ref_k)[:, 2], atol=2e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(ka)[:, 7, :, : 10 - PS],
+        np.asarray(ref_k)[:, 3, :, : 10 - PS],
+        atol=2e-4,
+    )
+    # greedy choice is unchanged, dummy row produced finite logits, and
+    # pages outside every table stayed bit-identical
+    np.testing.assert_array_equal(
+        np.asarray(jnp.argmax(lg[:2], -1)),
+        np.asarray(jnp.argmax(ref_lg[:2], -1)),
+    )
+    assert not bool(jnp.isnan(lg).any())
+    for page in (0, 1, 2, 3):
+        np.testing.assert_array_equal(
+            np.asarray(ka)[:, page], np.asarray(kc)[:, page]
+        )
+        np.testing.assert_array_equal(
+            np.asarray(va)[:, page], np.asarray(vc)[:, page]
+        )
+
+
+def test_admit_suffix_paged_kv8_matches_whole_prompt(params, rng):
+    """int8 x prefix-cache composition: the suffix graph dequantizes the
+    cached prefix pages for attention and quantizes the fresh suffix on
+    write — scales included, shared pages (values AND scales)
+    bit-untouched. The int8 prefix read is lossy where the whole-prompt
+    reference attended to exact f32 activations, so values compare
+    loosely but the greedy choice must hold."""
+    sch = QuantScheme("f32")
+    b, s = 2, 16
+    toks = _toks(rng, b, s)
+    lens = jnp.asarray([12, 1], jnp.int32)
+    n_pages = 6
+    vshape = (CFG.n_layers, n_pages, CFG.n_kv_heads, PS, CFG.head_dim)
+    kc0 = jnp.asarray(rng.integers(-127, 128, size=vshape), jnp.int8)
+    vc0 = jnp.asarray(rng.integers(-127, 128, size=vshape), jnp.int8)
+    ks0 = jnp.asarray(rng.uniform(0.01, 1.0, size=vshape[:4]), jnp.float32)
+    vs0 = jnp.asarray(rng.uniform(0.01, 1.0, size=vshape[:4]), jnp.float32)
+    ref_bt = jnp.asarray([[0, 1], [n_pages, n_pages]], jnp.int32)
+    ref = admit_paged_kv8(
+        params, kc0, ks0, vc0, vs0, toks, lens, ref_bt, CFG, sch, SMAX
+    )
+    ref_lg, ref_k, ref_ks, ref_v, ref_vs = ref
+    # fresh pool: page 2 carries the quantized cached prefix
+    kc = kc0.at[:, 2].set(ref_k[:, 0])
+    ks = ks0.at[:, 2].set(ref_ks[:, 0])
+    vc = vc0.at[:, 2].set(ref_v[:, 0])
+    vs = vs0.at[:, 2].set(ref_vs[:, 0])
+    bt = jnp.asarray(
+        [[2, 3] + [n_pages] * (NB - 2), [n_pages] * NB], jnp.int32
+    )
+    suffix = jnp.concatenate(
+        [toks[0, PS:], jnp.zeros((PS,), jnp.int32)]
+    )[None]
+    stoks = jnp.concatenate([suffix, toks[1:]], axis=0)
+    slens = jnp.asarray([12 - PS, 1], jnp.int32)
+    starts = jnp.asarray([PS, 0], jnp.int32)
+    lg, ka, ksa, va, vsa = admit_suffix_paged_kv8(
+        params, kc, ks, vc, vs, stoks, slens, starts, bt, CFG, sch, SMAX
+    )
+    # shared prefix page: values AND scales bit-untouched
+    for got, init in [(ka, kc), (ksa, ks), (va, vc), (vsa, vs)]:
+        np.testing.assert_array_equal(
+            np.asarray(got)[:, 2], np.asarray(init)[:, 2]
+        )
+    # greedy parity despite the lossy int8 prefix read
+    np.testing.assert_array_equal(
+        np.asarray(jnp.argmax(lg[:1], -1)),
+        np.asarray(jnp.argmax(ref_lg[:1], -1)),
+    )
+    np.testing.assert_allclose(
+        np.asarray(lg)[0], np.asarray(ref_lg)[0], atol=0.05
+    )
+    # suffix page carries quantized suffix KV close to the reference's
+    suffix_n = 12 - PS
+    np.testing.assert_allclose(
+        np.asarray(F.kv_dequantize(ka, ksa))[:, 3, :, :suffix_n],
+        np.asarray(F.kv_dequantize(ref_k, ref_ks))[:, 1, :, :suffix_n],
+        atol=0.05,
+    )
+    # untouched pages keep their values and scales
+    for page in (0, 1, 4, 5):
+        np.testing.assert_array_equal(
+            np.asarray(ka)[:, page], np.asarray(kc)[:, page]
+        )
+        np.testing.assert_array_equal(
+            np.asarray(ksa)[:, page], np.asarray(ks)[:, page]
+        )
+
+
+def test_admit_suffix_greedy_stream_matches_whole_prompt(params, rng):
+    """End-to-end prefix-cache parity (python half of the integration
+    test `prefix_cache_agrees`): admitting via cached-prefix + suffix
+    and then decoding greedily produces the same token stream as the
+    whole-prompt admission."""
+    sch = QuantScheme("f32")
+    toks = _toks(rng, 1, 16)
+    lens = jnp.asarray([13], jnp.int32)
+    n_pages = NB + 2
+    shape = (CFG.n_layers, n_pages, CFG.n_kv_heads, PS, CFG.head_dim)
+    zeros = jnp.zeros(shape, jnp.float32)
+    ref_bt = jnp.asarray([[0, 1] + [n_pages] * (NB - 2)], jnp.int32)
+    ref_lg, ref_k, ref_v = admit_paged(
+        params, zeros, zeros, toks, lens, ref_bt, CFG, sch, SMAX
+    )
+    kc = zeros.at[:, 2].set(ref_k[:, 0])
+    vc = zeros.at[:, 2].set(ref_v[:, 0])
+    bt = jnp.asarray([[2, 3] + [n_pages] * (NB - 2)], jnp.int32)
+    stoks = jnp.concatenate(
+        [toks[:, PS:], jnp.zeros((1, PS), jnp.int32)], axis=1
+    )
+    lg, ka, va = admit_suffix_paged(
+        params, kc, vc, stoks, jnp.asarray([13 - PS], jnp.int32),
+        jnp.asarray([PS], jnp.int32), bt, CFG, sch, SMAX
+    )
+    pos = lens
+    lr, ls = ref_lg, lg
+    for _ in range(4):
+        nr = jnp.argmax(lr, -1).astype(jnp.int32)
+        ns = jnp.argmax(ls, -1).astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(nr), np.asarray(ns))
+        lr, ref_k, ref_v = decode_step_paged(
+            params, ref_k, ref_v, nr, pos, ref_bt, CFG, sch
+        )
+        ls, ka, va = decode_step_paged(params, ka, va, ns, pos, bt, CFG, sch)
         pos = pos + 1
 
 

@@ -116,6 +116,23 @@ pub fn bench_kv_layout() -> Result<KvLayout> {
     kv_layout_from(std::env::var("AO_KV_LAYOUT").ok().as_deref())
 }
 
+/// Parse an optional AO_PREFIX_CACHE value (None/"" -> enabled: the
+/// prefix cache is a paged-layout no-op unless suffix artifacts exist).
+pub fn prefix_cache_from(var: Option<&str>) -> Result<bool> {
+    match var {
+        Some("0") => Ok(false),
+        Some("1") | Some("") | None => Ok(true),
+        Some(other) => anyhow::bail!(
+            "AO_PREFIX_CACHE: unknown value '{other}' (valid values: 0, 1)"
+        ),
+    }
+}
+
+/// Prefix-cache toggle benches serve with: AO_PREFIX_CACHE (on default).
+pub fn bench_prefix_cache() -> Result<bool> {
+    prefix_cache_from(std::env::var("AO_PREFIX_CACHE").ok().as_deref())
+}
+
 /// Run a full serving workload in-process; returns engine metrics
 /// (including host↔device transfer bytes — set AO_BENCH_REPORT=1 to
 /// print the full engine report line per run).
@@ -124,6 +141,18 @@ pub fn serve_workload(
     scheme: &str,
     ckpt_path: &Path,
     spec: &WorkloadSpec,
+) -> Result<MetricsCollector> {
+    serve_workload_with(model, scheme, ckpt_path, spec, bench_prefix_cache()?)
+}
+
+/// `serve_workload` with an explicit prefix-cache toggle (the table1
+/// shared-system-prompt scenario A/Bs it in one process).
+pub fn serve_workload_with(
+    model: &str,
+    scheme: &str,
+    ckpt_path: &Path,
+    spec: &WorkloadSpec,
+    prefix_cache: bool,
 ) -> Result<MetricsCollector> {
     let reqs = workload::generate(spec);
     let tok = Tokenizer::byte_level();
@@ -141,6 +170,8 @@ pub fn serve_workload(
         // AO_HOST_ADMISSION=1 A/Bs the admission paths in any bench
         host_admission: std::env::var("AO_HOST_ADMISSION")
             .map_or(false, |v| v == "1"),
+        // AO_PREFIX_CACHE=0 A/Bs prefix sharing under the paged layout
+        prefix_cache,
     });
     let mut rxs = Vec::new();
     for r in &reqs {
@@ -260,6 +291,13 @@ mod tests {
         assert_eq!(kv_layout_from(None).unwrap(), KvLayout::Static);
         assert_eq!(kv_layout_from(Some("")).unwrap(), KvLayout::Static);
         assert_eq!(kv_layout_from(Some("paged")).unwrap(), KvLayout::Paged);
+        assert!(prefix_cache_from(None).unwrap());
+        assert!(prefix_cache_from(Some("")).unwrap());
+        assert!(prefix_cache_from(Some("1")).unwrap());
+        assert!(!prefix_cache_from(Some("0")).unwrap());
+        let e = prefix_cache_from(Some("yes")).unwrap_err().to_string();
+        assert!(e.contains("AO_PREFIX_CACHE"), "{e}");
+        assert!(e.contains("valid values: 0, 1"), "{e}");
     }
 
     #[test]

@@ -67,13 +67,31 @@
 //! row on host, re-upload once. The two paths write identical rows
 //! (parity-tested) and are metered separately — `admit[h2d/d2h
 //! host_splices]` in the engine report keeps the fallback visible.
+//!
+//! ## Prefix cache (paged layout)
+//!
+//! With `EngineConfig::prefix_cache` (default on) and `admit_suffix`
+//! artifacts, paged admission first consults a prompt-prefix index
+//! (`prefixcache::PrefixIndex` over the ref-counted `pager`): full pages
+//! of an earlier request's prompt KV are mapped straight into the new
+//! slot's block table and only the uncached suffix is prefilled, at a
+//! per-row `start_lens` position offset. Sharing is full-page-only — the
+//! partial tail page stays private and at least one suffix token is
+//! always recomputed — so shared pages are never written and
+//! copy-on-write is unnecessary by construction. Zero-ref shared pages
+//! park on an LRU inside the pager and are reclaimed under pool pressure
+//! before admission backpressures. `prefix[lookups hits pages_shared
+//! tokens_saved]` in the report accounts for the reuse; see
+//! docs/prefix_cache.md.
 
 use super::batcher::{Batcher, PrefillTake};
 use super::kvslots::{Slot, SlotTable};
 use super::metrics::MetricsCollector;
 use super::pager::Pager;
+use super::prefixcache::{identity_salt, PrefixIndex};
 use super::request::{Event, FinishInfo, FinishReason, SubmitReq};
 use crate::ckpt::Checkpoint;
+use crate::runtime::artifact::{ArtifactSpec, IoSpec};
 use crate::runtime::{OwnedBuffer, Runtime};
 use crate::tensor::HostTensor;
 use crate::util::rng::{mix_seed, Rng};
@@ -169,6 +187,12 @@ pub struct EngineConfig {
     /// force the host download/splice/upload admission fallback even when
     /// admit artifacts exist (parity tests, A/B transfer accounting)
     pub host_admission: bool,
+    /// prefix cache (paged layout only): share full prompt-prefix pages
+    /// across requests and prefill only the uncached suffix. A no-op
+    /// under the static layout or when no admit_suffix artifacts were
+    /// exported (CLI `ao serve --no-prefix-cache` disables, bench env
+    /// AO_PREFIX_CACHE=0).
+    pub prefix_cache: bool,
 }
 
 pub enum Command {
@@ -316,6 +340,9 @@ pub struct Engine {
     /// per-bucket admit artifact names (device-resident admission);
     /// empty -> every admission uses the host splice fallback
     admit_names: Vec<(usize, String)>, // (seq, name)
+    /// per-bucket suffix-prefill artifact names (prefix-cache admission
+    /// over the paged layout); empty -> whole-prompt admission only
+    admit_suffix_names: Vec<(usize, String)>, // (seq, name)
     slots: SlotTable,
     batch: usize,
     smax: usize,
@@ -328,6 +355,9 @@ pub struct Engine {
     kv_dims: (usize, usize, usize, usize, usize),
     /// page allocator — present exactly under `KvLayout::Paged`
     pager: Option<Pager>,
+    /// prompt-prefix -> shared-page index — present exactly when the
+    /// prefix cache is live (paged + admit_suffix artifacts + enabled)
+    prefix: Option<PrefixIndex>,
     batcher: Batcher,
     requests: Vec<Option<ActiveRequest>>,
     /// token sampled last step per slot, to be consumed by the next decode
@@ -501,35 +531,10 @@ impl Engine {
                 if spec.cache != cache_tag || spec.layout != layout_tag {
                     continue;
                 }
-                spec.validate_admit().with_context(|| {
-                    format!("manifest entry '{}' is unusable", spec.name)
-                })?;
-                // internally consistent is not enough: the admit artifact
-                // consumes the DECODE artifact's cache buffers, so their
-                // geometry (values AND scales) must match or the first
-                // admission dies with an opaque PJRT shape error
-                // mid-serving
-                if spec.batch != batch || spec.smax != smax {
-                    bail!(
-                        "admit artifact '{}' (batch={}, smax={}) does not \
-                         match decode artifact '{decode_name}' \
-                         (batch={batch}, smax={smax})",
-                        spec.name, spec.batch, spec.smax
-                    );
-                }
-                for (name, dspec) in cache_names.iter().zip(&cache_specs) {
-                    let ai = spec.input_index(name)?;
-                    let aspec = &spec.inputs[ai];
-                    if aspec.shape != dspec.shape || aspec.dtype != dspec.dtype
-                    {
-                        bail!(
-                            "admit artifact '{}' {name} is {:?} {} but \
-                             decode artifact '{decode_name}' binds {:?} {}",
-                            spec.name, aspec.shape, aspec.dtype,
-                            dspec.shape, dspec.dtype
-                        );
-                    }
-                }
+                check_admission_spec(
+                    spec, &decode_name, batch, smax, cache_names,
+                    &cache_specs,
+                )?;
                 admit_names.push((spec.seq, spec.name.clone()));
             }
             admit_names.sort();
@@ -555,6 +560,38 @@ impl Engine {
                     "no admit artifacts for {}/{} (kv-cache {cache_tag}): \
                      admission falls back to the host splice path (re-run \
                      `make artifacts` for on-device admission)",
+                    cfg.model, cfg.scheme
+                );
+            }
+        }
+
+        // Prefix-cache suffix-prefill artifacts (paged only). A broken
+        // suffix entry would prefill at the wrong position offset or
+        // attend through the wrong table, so validation failures are
+        // fatal; a missing artifact merely keeps that bucket on
+        // whole-prompt admission.
+        let mut admit_suffix_names: Vec<(usize, String)> = Vec::new();
+        if cfg.kv_layout == KvLayout::Paged && cfg.prefix_cache {
+            let scheme = Some(cfg.scheme.as_str());
+            for spec in
+                runtime.manifest.find("admit_suffix", &cfg.model, scheme)
+            {
+                if spec.cache != cache_tag || spec.layout != layout_tag {
+                    continue;
+                }
+                check_admission_spec(
+                    spec, &decode_name, batch, smax, cache_names,
+                    &cache_specs,
+                )?;
+                admit_suffix_names.push((spec.seq, spec.name.clone()));
+            }
+            admit_suffix_names.sort();
+            if admit_suffix_names.is_empty() {
+                crate::info!(
+                    "prefix cache requested but no admit_suffix \
+                     artifacts for {}/{} (kv-cache {cache_tag}): every \
+                     admission stays whole-prompt (re-run `make \
+                     artifacts` for suffix-only prefill)",
                     cfg.model, cfg.scheme
                 );
             }
@@ -603,6 +640,30 @@ impl Engine {
         if let Some(p) = &pager {
             metrics.pages_total = p.n_pages();
         }
+        // the prefix index is live exactly when suffix-prefill artifacts
+        // exist for this (model, scheme, cache, layout): without them a
+        // shared page could never be exploited — the whole-prompt admit
+        // graph would rewrite it, breaking the never-write invariant —
+        // so the index stays off rather than half-on. The salt keys the
+        // hash chain to the engine identity.
+        let prefix = match &pager {
+            Some(p) if !admit_suffix_names.is_empty() => {
+                Some(PrefixIndex::new(
+                    p.page_size(),
+                    identity_salt(
+                        &[
+                            cfg.model.as_str(),
+                            cfg.scheme.as_str(),
+                            cache_tag,
+                            layout_tag,
+                        ],
+                        p.page_size(),
+                    ),
+                ))
+            }
+            _ => None,
+        };
+        metrics.prefix_enabled = prefix.is_some();
 
         // surface the untupled-outputs capability up front: when the
         // binding packs tuples, every "device-resident" path below is
@@ -616,12 +677,14 @@ impl Engine {
             decode_name,
             prefill_names,
             admit_names,
+            admit_suffix_names,
             slots: SlotTable::new(batch, smax),
             batch,
             smax,
             cache: KvCache { bufs: cache_bufs },
             kv_dims,
             pager,
+            prefix,
             batcher: Batcher::new(buckets),
             requests: (0..batch).map(|_| None).collect(),
             pending: vec![0; batch],
@@ -825,20 +888,13 @@ impl Engine {
         self.cache.push_inputs(&mut inputs);
         inputs.extend(extra.iter().map(|o| &o.buffer));
 
-        let mut outs = self.runtime.run_buffers_device(name, &inputs)?;
+        let outs = self.runtime.run_buffers_device(name, &inputs)?;
         drop(inputs);
-        if outs.len() != 1 + n_cache {
-            bail!(
-                "admit artifact '{name}' must output (logits, {n_cache} \
-                 cache buffers); got {} outputs",
-                outs.len()
-            );
-        }
         self.metrics.prefill_calls += 1;
 
         let t_overhead = Instant::now();
-        let cache_out = outs.split_off(1);
-        let logits_buf = outs.pop().unwrap();
+        let (logits_buf, cache_out) =
+            split_logits_and_cache(outs, n_cache, name)?;
         let logits = HostTensor::from_literal(&self.runtime.fetch_output(
             name,
             0,
@@ -913,12 +969,16 @@ impl Engine {
     /// exceeds the whole pool (it could never run); requeue it — and
     /// everything behind it, order preserved — if the reservation does
     /// not fit right now; otherwise claim a slot, reserve + allocate
-    /// pages, and take a row in the burst. The admit artifact prefills
-    /// and scatters each row's fresh KV blocks into its assigned pages
-    /// through the uploaded block table; holes (unallocated tail blocks,
-    /// unused rows) carry the out-of-range sentinel and are dropped on
-    /// device. Host traffic is the same rows-only contract as the static
-    /// device path, plus the tiny `[B, blocks]` table.
+    /// pages, and take a row in the burst. With a live prefix index the
+    /// request's prompt is looked up first: cached full-page prefixes
+    /// are mapped into the slot's block table (`Pager::admit_shared`)
+    /// and only the suffix is prefilled, through the `admit_suffix`
+    /// artifact; a burst with no hit keeps the whole-prompt admit graph
+    /// (miss rows in a mixed burst ride the suffix graph with start 0).
+    /// Holes (unallocated tail blocks, unused rows) carry the
+    /// out-of-range sentinel and are dropped on device. Host traffic is
+    /// the same rows-only contract as the static device path, plus the
+    /// tiny block-table (and start-offset) uploads.
     fn admit_device_paged(
         &mut self,
         name: &str,
@@ -928,40 +988,55 @@ impl Engine {
         let t_overhead = Instant::now();
         let b = self.batch;
         let smax = self.smax;
-        let mut tokens = vec![0i32; b * bucket];
-        let mut lens = vec![1i32; b]; // dummy rows attend to 1 pad token
+        let suffix_name = self.admit_suffix_artifact(bucket);
+        let ps = self.pager.as_ref().expect("paged admission").page_size();
         let mut claimed: Vec<(usize, SubmitReq)> =
             Vec::with_capacity(group.len());
+        // per claimed row: prompt tokens already covered by shared pages
+        let mut start_lens: Vec<usize> = Vec::with_capacity(group.len());
         let mut queue: std::collections::VecDeque<SubmitReq> = group.into();
         while let Some(req) = queue.pop_front() {
             let n_prompt = req.prompt_tokens.len();
             check_prompt_fits(n_prompt, bucket)?;
             let want = reserve_len(n_prompt, req.max_new_tokens, smax);
-            let pager = self.pager.as_mut().expect("paged admission");
-            if pager.impossible(want) {
-                // no amount of waiting frees enough pages: answer now
-                // instead of deadlocking the queue
-                let _ = req.tx.send(Event::Error(format!(
-                    "request needs {} KV pages worst-case but the pool \
-                     has {}; lower max_new_tokens or export a larger \
-                     --kv-pages pool",
-                    pager.blocks_for(want),
-                    pager.n_pages()
-                )));
-                self.metrics.record_rejected();
-                continue;
-            }
-            if !pager.can_admit(want) {
+            // prefix lookup before the capacity check: shared pages
+            // shrink the reservation's cost, so a hit can admit where a
+            // miss would backpressure. Lookup only when this bucket can
+            // actually run a suffix prefill — mapping shared pages into
+            // a whole-prompt admission would rewrite them. None =
+            // index not consulted (vs Some(empty) = consulted, missed).
+            let looked_up: Option<Vec<u32>> =
+                match (&self.prefix, &suffix_name) {
+                    (Some(index), Some(_)) => {
+                        let pager =
+                            self.pager.as_ref().expect("paged admission");
+                        Some(index.lookup(&req.prompt_tokens, |p| {
+                            pager.page_is_shareable(p)
+                        }))
+                    }
+                    _ => None,
+                };
+            let shared: &[u32] = looked_up.as_deref().unwrap_or(&[]);
+            let pager = self.pager.as_ref().expect("paged admission");
+            // a request that could NEVER fit would deadlock the queue,
+            // but none can exist here: reserve_len caps at smax,
+            // blocks_for clamps to blocks_per_slot, and
+            // check_paged_geometry floors every pool at one
+            // full-context reservation (n_pages >= smax/page_size) at
+            // startup — so impossibility is a debug net, not a path
+            debug_assert!(
+                !pager.impossible(want),
+                "reservation of {want} positions exceeds the whole pool \
+                 despite the full-context floor"
+            );
+            if !pager.can_admit_shared(want, shared) {
                 // backpressure: this request (and everything behind it,
-                // FCFS) waits for decoding requests to release pages
+                // FCFS) waits for decoding requests to release pages —
+                // and retries its lookup next burst, so the prefix
+                // metrics below count admissions, not retries
                 queue.push_front(req);
                 break;
             }
-            let row = claimed.len();
-            for (j, &t) in req.prompt_tokens.iter().enumerate() {
-                tokens[row * bucket + j] = t as i32;
-            }
-            lens[row] = n_prompt as i32;
             let slot = Slot {
                 request_id: req.id,
                 pos: n_prompt,
@@ -978,7 +1053,22 @@ impl Engine {
             self.pager
                 .as_mut()
                 .expect("paged admission")
-                .admit(idx, n_prompt, want)?;
+                .admit_shared(idx, shared, n_prompt, want)?;
+            // an allocation may have reclaimed cached pages off the
+            // LRU: forget them before the next request's lookup
+            self.drain_page_evictions();
+            // counted only on the admission that sticks — a
+            // backpressure-requeued request re-looks-up on retry and
+            // must not inflate the lookup/hit accounting
+            if looked_up.is_some() {
+                self.metrics.prefix_lookups += 1;
+                if !shared.is_empty() {
+                    self.metrics.prefix_hits += 1;
+                }
+            }
+            self.metrics.prefix_pages_shared += shared.len();
+            self.metrics.prefix_tokens_saved += shared.len() * ps;
+            start_lens.push(shared.len() * ps);
             claimed.push((idx, req));
         }
         let backpressured = !queue.is_empty();
@@ -990,24 +1080,187 @@ impl Engine {
             return Ok(backpressured);
         }
 
-        // block-table input [B, ceil(bucket/page_size)]: row r lists the
-        // pages claimed for request r, hole-padded; unused rows are all
-        // holes so their prefill garbage is dropped on device
+        // Pick the graph: any shared prefix forces the suffix artifact
+        // (miss rows ride along with start 0 — the degenerate
+        // whole-prompt case); an all-miss burst keeps the admit graph,
+        // whose attention spans only the bucket instead of the window.
+        let use_suffix =
+            suffix_name.is_some() && start_lens.iter().any(|&s| s > 0);
         let pager = self.pager.as_ref().expect("paged admission");
-        let admit_blocks = bucket.div_ceil(pager.page_size());
         let slot_of_row: Vec<usize> =
             claimed.iter().map(|(idx, _)| *idx).collect();
-        let bt = pager.fill_block_tables_for(&slot_of_row, b, admit_blocks);
-        let extra = [
-            self.runtime
-                .upload(&HostTensor::s32(vec![b, bucket], tokens))?,
-            self.runtime.upload(&HostTensor::s32(vec![b], lens))?,
-            self.runtime
-                .upload(&HostTensor::s32(vec![b, admit_blocks], bt))?,
-        ];
+        let (artifact, extra) = if use_suffix {
+            // suffix-only prefill, RE-BUCKETED by suffix length: the
+            // batcher grouped these rows by their FULL prompt, but the
+            // uncached suffixes can be far shorter — running them
+            // through the smallest exported suffix bucket that fits is
+            // where the admission-compute saving actually lands (the
+            // attention span stays the full window either way, because
+            // the suffix must attend through the cached prefix pages).
+            let max_suffix = claimed
+                .iter()
+                .enumerate()
+                .map(|(row, (_, req))| {
+                    req.prompt_tokens.len() - start_lens[row]
+                })
+                .max()
+                .unwrap_or(1);
+            let (sbucket, sname) = self
+                .admit_suffix_names
+                .iter()
+                .find(|(s, _)| *s >= max_suffix)
+                .map(|(s, n)| (*s, n.clone()))
+                .unwrap_or((
+                    bucket,
+                    suffix_name.clone().expect("use_suffix implies artifact"),
+                ));
+            let mut tokens = vec![0i32; b * sbucket];
+            let mut lens = vec![1i32; b]; // dummy rows attend to 1 pad
+            let mut starts = vec![0i32; b];
+            for (row, (_, req)) in claimed.iter().enumerate() {
+                let suffix = &req.prompt_tokens[start_lens[row]..];
+                for (j, &t) in suffix.iter().enumerate() {
+                    tokens[row * sbucket + j] = t as i32;
+                }
+                lens[row] = suffix.len() as i32;
+                starts[row] = start_lens[row] as i32;
+            }
+            let window = smax / ps;
+            let bt = pager.fill_block_tables_for(&slot_of_row, b, window);
+            (
+                sname,
+                vec![
+                    self.runtime
+                        .upload(&HostTensor::s32(vec![b, sbucket], tokens))?,
+                    self.runtime.upload(&HostTensor::s32(vec![b], lens))?,
+                    self.runtime.upload(&HostTensor::s32(vec![b], starts))?,
+                    self.runtime
+                        .upload(&HostTensor::s32(vec![b, window], bt))?,
+                ],
+            )
+        } else {
+            // whole-prompt admission: block table [B,
+            // ceil(bucket/page_size)] — row r lists the pages claimed
+            // for request r, hole-padded; unused rows are all holes so
+            // their prefill garbage is dropped on device
+            let mut tokens = vec![0i32; b * bucket];
+            let mut lens = vec![1i32; b]; // dummy rows attend to 1 pad
+            for (row, (_, req)) in claimed.iter().enumerate() {
+                for (j, &t) in req.prompt_tokens.iter().enumerate() {
+                    tokens[row * bucket + j] = t as i32;
+                }
+                lens[row] = req.prompt_tokens.len() as i32;
+            }
+            let admit_blocks = bucket.div_ceil(ps);
+            let bt =
+                pager.fill_block_tables_for(&slot_of_row, b, admit_blocks);
+            (
+                name.to_string(),
+                vec![
+                    self.runtime
+                        .upload(&HostTensor::s32(vec![b, bucket], tokens))?,
+                    self.runtime.upload(&HostTensor::s32(vec![b], lens))?,
+                    self.runtime
+                        .upload(&HostTensor::s32(vec![b, admit_blocks], bt))?,
+                ],
+            )
+        };
+        // full-page prompt prefixes to publish into the index once the
+        // admission has written them; rows whose prompt spans no full
+        // page have nothing shareable and are dropped here (not cloned)
+        let publish: Vec<(usize, Vec<u32>)> = if self.prefix.is_some() {
+            claimed
+                .iter()
+                .filter_map(|(idx, req)| {
+                    let full = req.prompt_tokens.len() / ps;
+                    (full > 0).then(|| {
+                        (*idx, req.prompt_tokens[..full * ps].to_vec())
+                    })
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
         self.overhead_s += t_overhead.elapsed().as_secs_f64();
-        self.run_admit_artifact(name, &extra, claimed)?;
+        self.run_admit_artifact(&artifact, &extra, claimed)?;
+        self.publish_admitted_prefixes(publish, ps)?;
         Ok(backpressured)
+    }
+
+    /// Register the freshly written full prompt pages of an admission
+    /// burst in the prefix index (flipping them shared in the pager), so
+    /// later prompts with the same prefix can map them. Rows whose
+    /// request already finished (max_new_tokens == 1 finishes inside
+    /// `run_admit_artifact`) released their pages and are skipped, and
+    /// publishing stops at the first depth the index already serves —
+    /// for two identical prompts in one burst the winner's chain is
+    /// indexed once and the loser's pages stay private, instead of
+    /// becoming shared pages no lookup can ever reach.
+    fn publish_admitted_prefixes(
+        &mut self,
+        publish: Vec<(usize, Vec<u32>)>,
+        ps: usize,
+    ) -> Result<()> {
+        if publish.is_empty() {
+            return Ok(());
+        }
+        let t_overhead = Instant::now();
+        for (idx, prompt) in publish {
+            if self.slots.get(idx).is_none() {
+                continue; // finished during admission: pages are gone
+            }
+            let full_pages = prompt.len() / ps;
+            let n_publish = {
+                let pager = self.pager.as_ref().expect("paged admission");
+                let index = self
+                    .prefix
+                    .as_ref()
+                    .expect("publish implies a prefix index");
+                // the slot's leading shared blocks came FROM the index;
+                // publish only depths it does not serve yet (a shared
+                // run must stay contiguous, so stop at the first dup)
+                (pager.shared_blocks(idx)..full_pages)
+                    .find(|&j| index.contains(&prompt[..(j + 1) * ps]))
+                    .unwrap_or(full_pages)
+            };
+            let fresh = self
+                .pager
+                .as_mut()
+                .expect("paged admission")
+                .publish_prefix(idx, n_publish)?;
+            let index = self
+                .prefix
+                .as_mut()
+                .expect("publish implies a prefix index");
+            for (j, page) in fresh {
+                index.insert(&prompt[..(j + 1) * ps], page);
+            }
+        }
+        self.overhead_s += t_overhead.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    /// Suffix-prefill artifact for `bucket`, when one was exported.
+    fn admit_suffix_artifact(&self, bucket: usize) -> Option<String> {
+        self.admit_suffix_names
+            .iter()
+            .find(|(s, _)| *s == bucket)
+            .map(|(_, n)| n.clone())
+    }
+
+    /// Forward pages the pager reclaimed from its cached LRU to the
+    /// prefix index. Must run before the next lookup: a reclaimed page
+    /// can be re-published under a new prefix, and a stale entry that
+    /// still looked live would map wrong KV into a block table.
+    fn drain_page_evictions(&mut self) {
+        if let (Some(pager), Some(index)) =
+            (self.pager.as_mut(), self.prefix.as_mut())
+        {
+            let evicted = pager.take_evicted();
+            if !evicted.is_empty() {
+                index.forget_pages(&evicted);
+            }
+        }
     }
 
     /// Host-fallback admission for `group` (no admit artifact for the
@@ -1122,7 +1375,26 @@ impl Engine {
         let lrow = &logits.as_f32()?[row * vocab..(row + 1) * vocab];
         let mut rng = Rng::new(seed);
         let tok = sample(lrow, req.temperature, &mut rng);
-        self.slots.get_mut(idx).unwrap().rng_state = rng.next_u64();
+        let Some(slot) = self.slots.get_mut(idx) else {
+            // the slot this admission just claimed is gone: a slot-
+            // accounting bug. Answer the one affected request with an
+            // error instead of killing the serving loop for everyone.
+            crate::info!(
+                "slot {idx} vanished between claim and first sample \
+                 (request {}): answering with an error",
+                req.id
+            );
+            let _ = req.tx.send(Event::Error(format!(
+                "internal slot-accounting error admitting request {}",
+                req.id
+            )));
+            if let Some(pager) = self.pager.as_mut() {
+                pager.release(idx);
+            }
+            self.metrics.record_rejected();
+            return Ok(());
+        };
+        slot.rng_state = rng.next_u64();
 
         let now = Instant::now();
         let active = ActiveRequest {
@@ -1142,7 +1414,12 @@ impl Engine {
     /// request if limits are reached.
     fn apply_sampled_token(&mut self, idx: usize, tok: u32) -> Result<()> {
         let has_room = self.slots.has_context_room(idx);
-        let slot = self.slots.get_mut(idx).unwrap();
+        let Some(slot) = self.slots.get_mut(idx) else {
+            // slot-accounting bug: fail the one request mapped to this
+            // row instead of panicking the serving loop
+            self.fail_slot(idx, "slot vanished while applying a token");
+            return Ok(());
+        };
         slot.n_generated += 1;
         let n_generated = slot.n_generated;
         let max_new_tokens = slot.max_new_tokens;
@@ -1164,11 +1441,38 @@ impl Engine {
         self.pending[idx] = tok as i32;
     }
 
+    /// Degrade a slot-accounting bug on row `idx` to a request-level
+    /// error: the mapped request (if any) gets an Error event, the
+    /// row's pages and slot entry are released, and the serving loop
+    /// keeps running for everyone else. Idempotent — a row can trip
+    /// both decode loops in one step, and only the call that actually
+    /// answers a request logs and counts it.
+    fn fail_slot(&mut self, idx: usize, why: &str) {
+        if let Some(pager) = self.pager.as_mut() {
+            pager.release(idx);
+        }
+        self.slots.release(idx);
+        if fail_request(&mut self.requests, idx, why) {
+            crate::info!("slot {idx}: {why} — failed the mapped request");
+            self.metrics.record_rejected();
+        }
+    }
+
     fn finish_slot(&mut self, idx: usize, reason: FinishReason) {
         if let Some(pager) = self.pager.as_mut() {
             pager.release(idx);
         }
-        let slot = self.slots.release(idx).unwrap();
+        let Some(slot) = self.slots.release(idx) else {
+            // finishing an already-vacated slot is a slot-accounting
+            // bug; the request (if any is still mapped) gets an error
+            // instead of the loop getting a panic
+            fail_request(
+                &mut self.requests,
+                idx,
+                "slot vanished before its finish event",
+            );
+            return;
+        };
         if let Some(req) = self.requests[idx].take() {
             let now = Instant::now();
             let ttft = req
@@ -1211,7 +1515,14 @@ impl Engine {
         let active = self.slots.active_indices();
         for &i in &active {
             tokens[i] = self.pending[i];
-            let p = self.slots.get(i).unwrap().pos;
+            // active_indices lists only live slots; a missing one is a
+            // slot-accounting bug, degraded to an idle row (token 0,
+            // pos 0: its logits are ignored) instead of a panic
+            let Some(slot) = self.slots.get(i) else {
+                self.fail_slot(i, "active slot vanished before decode");
+                continue;
+            };
+            let p = slot.pos;
             pos[i] = p as i32;
             if let Some(pager) = self.pager.as_mut() {
                 // allocate the page this write lands in when the slot
@@ -1222,6 +1533,9 @@ impl Engine {
                 })?;
             }
         }
+        // growth may have reclaimed cached prefix pages: keep the index
+        // honest before the next admission's lookups
+        self.drain_page_evictions();
         let mut extra = vec![
             self.runtime.upload(&HostTensor::s32(vec![b], tokens))?,
             self.runtime.upload(&HostTensor::s32(vec![b], pos))?,
@@ -1242,23 +1556,16 @@ impl Engine {
         self.overhead_s += t_overhead.elapsed().as_secs_f64();
 
         let decode_name = self.decode_name.clone();
-        let mut outs =
+        let outs =
             self.runtime.run_buffers_device(&decode_name, &inputs)?;
         drop(inputs);
-        if outs.len() != 1 + n_cache {
-            bail!(
-                "decode artifact '{decode_name}' must output (logits, \
-                 {n_cache} cache buffers); manifest declares {} outputs",
-                outs.len()
-            );
-        }
         self.metrics.decode_steps += 1;
         self.metrics.total_slot_steps += b;
         self.metrics.active_slot_steps += active.len();
 
         let t_overhead = Instant::now();
-        let cache_out = outs.split_off(1);
-        let logits_buf = outs.pop().unwrap();
+        let (logits_buf, cache_out) =
+            split_logits_and_cache(outs, n_cache, &decode_name)?;
         // the ONLY per-token download: one [B, vocab] logits matrix
         let logits = HostTensor::from_literal(&self.runtime.fetch_output(
             &decode_name,
@@ -1275,13 +1582,18 @@ impl Engine {
         let vocab = logits.shape[1];
         let now = Instant::now();
         for i in active {
-            let slot = self.slots.get_mut(i).unwrap();
+            let Some(slot) = self.slots.get_mut(i) else {
+                // a slot that decoded this step but vanished before
+                // sampling: fail its request, keep the loop alive
+                self.fail_slot(i, "active slot vanished after decode");
+                continue;
+            };
             slot.pos += 1;
             let mut rng = Rng::new(slot.rng_state);
             let temp = slot.temperature;
             let lrow = &logits.as_f32()?[i * vocab..(i + 1) * vocab];
             let tok = sample(lrow, temp, &mut rng);
-            self.slots.get_mut(i).unwrap().rng_state = rng.next_u64();
+            slot.rng_state = rng.next_u64();
             if let Some(req) = self.requests[i].as_mut() {
                 if let Some(last) = req.last_token_at {
                     req.token_gaps.push((now - last).as_secs_f64());
@@ -1358,6 +1670,92 @@ fn check_prompt_fits(n_prompt: usize, bucket: usize) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// Startup cross-check shared by the admit and admit_suffix discovery
+/// loops: the artifact must pass its own contract validation AND bind
+/// the SAME cache buffers as the decode artifact — internally
+/// consistent is not enough, because an admission consumes the decode
+/// artifact's live cache buffers and a geometry mismatch (values or
+/// scales) would die as an opaque PJRT shape error mid-serving.
+fn check_admission_spec(
+    spec: &ArtifactSpec,
+    decode_name: &str,
+    batch: usize,
+    smax: usize,
+    cache_names: &[&str],
+    cache_specs: &[IoSpec],
+) -> Result<()> {
+    match spec.kind.as_str() {
+        "admit" => spec.validate_admit(),
+        "admit_suffix" => spec.validate_admit_suffix(),
+        other => bail!("'{}' is not an admission kind", other),
+    }
+    .with_context(|| format!("manifest entry '{}' is unusable", spec.name))?;
+    if spec.batch != batch || spec.smax != smax {
+        bail!(
+            "{} artifact '{}' (batch={}, smax={}) does not match decode \
+             artifact '{decode_name}' (batch={batch}, smax={smax})",
+            spec.kind, spec.name, spec.batch, spec.smax
+        );
+    }
+    for (name, dspec) in cache_names.iter().zip(cache_specs) {
+        let ai = spec.input_index(name)?;
+        let aspec = &spec.inputs[ai];
+        if aspec.shape != dspec.shape || aspec.dtype != dspec.dtype {
+            bail!(
+                "{} artifact '{}' {name} is {:?} {} but decode artifact \
+                 '{decode_name}' binds {:?} {}",
+                spec.kind, spec.name, aspec.shape, aspec.dtype,
+                dspec.shape, dspec.dtype
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Split an execute's output buffers into (logits, cache block),
+/// validating the count. Replaces the old `outs.pop().unwrap()` tails of
+/// the decode/admit paths: a miscounted output list — a manifest bug or
+/// a binding regression — now surfaces as a contextual error instead of
+/// a panic that kills the serving thread. Generic so the contract is
+/// unit-testable without device buffers.
+fn split_logits_and_cache<T>(
+    mut outs: Vec<T>,
+    n_cache: usize,
+    name: &str,
+) -> Result<(T, Vec<T>)> {
+    if outs.len() != 1 + n_cache {
+        bail!(
+            "artifact '{name}' must output (logits, {n_cache} cache \
+             buffers); got {} outputs",
+            outs.len()
+        );
+    }
+    let cache = outs.split_off(1);
+    let Some(logits) = outs.pop() else {
+        bail!("artifact '{name}' returned no logits output");
+    };
+    Ok((logits, cache))
+}
+
+/// Answer the request registered at row `idx` (if any) with a
+/// contextual error and unregister it; returns whether a request was
+/// actually answered (so repeated failures of one row count once).
+/// Split out of `Engine::fail_slot` so the degrade-don't-panic
+/// contract is unit-testable without a runtime.
+fn fail_request(
+    requests: &mut [Option<ActiveRequest>],
+    idx: usize,
+    why: &str,
+) -> bool {
+    let Some(req) = requests.get_mut(idx).and_then(Option::take) else {
+        return false;
+    };
+    let _ = req
+        .tx
+        .send(Event::Error(format!("internal serving error: {why}")));
+    true
 }
 
 /// Copy the contiguous per-layer row blocks `(l, src_row)` of `src` into
@@ -1848,6 +2246,62 @@ mod tests {
         assert!(sc[0] == 0.0 && sc[1] == 0.0, "source row untouched");
         assert!((sc[2] - 1.0 / 127.0).abs() < 1e-9);
         assert_eq!(&q.as_s8().unwrap()[4..8], &[127, 127, 127, 127]);
+    }
+
+    #[test]
+    fn split_logits_and_cache_degrades_to_errors() {
+        // regression (satellite): the decode/admit tails pop()'d the
+        // logits buffer with unwrap — a miscounted output list panicked
+        // the serving thread. Now it is a contextual error.
+        let (logits, cache) =
+            split_logits_and_cache(vec![10, 20, 30], 2, "d").unwrap();
+        assert_eq!(logits, 10);
+        assert_eq!(cache, vec![20, 30]);
+        let e = split_logits_and_cache(vec![1, 2], 2, "decode_x")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("decode_x"), "{e}");
+        assert!(e.contains("2 cache buffers"), "{e}");
+        assert!(e.contains("got 2 outputs"), "{e}");
+        let e = split_logits_and_cache(Vec::<u8>::new(), 0, "empty")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("got 0 outputs"), "{e}");
+    }
+
+    #[test]
+    fn fail_request_errors_the_mapped_request_only() {
+        // regression (satellite): slot-accounting bugs used to unwrap a
+        // vacated slot and kill the whole serving loop; the degrade path
+        // answers exactly the affected request with an error event.
+        use std::sync::mpsc::channel;
+        let (tx, rx) = channel();
+        let (tx2, rx2) = channel();
+        let now = Instant::now();
+        let mk = |tx| ActiveRequest {
+            tx,
+            submitted_at: now,
+            first_token_at: None,
+            last_token_at: None,
+            token_gaps: Vec::new(),
+        };
+        let mut requests = vec![Some(mk(tx)), Some(mk(tx2)), None];
+        assert!(fail_request(&mut requests, 0, "slot vanished mid-step"));
+        assert!(requests[0].is_none(), "failed request is unregistered");
+        match rx.try_recv().unwrap() {
+            Event::Error(e) => {
+                assert!(e.contains("internal serving error"), "{e}");
+                assert!(e.contains("slot vanished"), "{e}");
+            }
+            ev => panic!("expected an error event, got {ev:?}"),
+        }
+        // neighbours are untouched; empty, out-of-range, and repeated
+        // rows report false so one incident is counted exactly once
+        assert!(requests[1].is_some());
+        assert!(rx2.try_recv().is_err());
+        assert!(!fail_request(&mut requests, 2, "x"));
+        assert!(!fail_request(&mut requests, 99, "x"));
+        assert!(!fail_request(&mut requests, 0, "x"));
     }
 
     #[test]

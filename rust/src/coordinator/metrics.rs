@@ -57,6 +57,23 @@ pub struct MetricsCollector {
     pub pages_total: usize,
     pub pages_used: usize,
     pub pages_hwm: usize,
+    /// prefix cache (paged layout + admit_suffix artifacts): set when
+    /// the engine serves with a prefix index, which also turns on the
+    /// report's prefix[...] field
+    pub prefix_enabled: bool,
+    /// admissions that consulted the prefix index
+    pub prefix_lookups: usize,
+    /// lookups that mapped at least one shared prefix page
+    pub prefix_hits: usize,
+    /// shared prefix pages mapped into block tables (cumulative; one
+    /// physical page reused by N requests counts N times)
+    pub prefix_pages_shared: usize,
+    /// prompt tokens covered by shared pages: KV the admission never
+    /// re-wrote, and — when the suffix re-buckets into a smaller
+    /// prefill — per-token projection/MLP compute it never re-ran
+    /// (the suffix's attention still spans the full window, since it
+    /// must read the cached prefix pages)
+    pub prefix_tokens_saved: usize,
 }
 
 impl MetricsCollector {
@@ -146,6 +163,34 @@ impl MetricsCollector {
         self.admit_h2d_bytes as f64 / self.prefill_calls.max(1) as f64
     }
 
+    /// The report's `pages[...]` field — empty under the static layout,
+    /// which has no pool. The ONE formatter of the page accounting,
+    /// shared with the bench output so the two cannot drift.
+    pub fn pages_field(&self) -> String {
+        if self.kv_layout != "paged" {
+            return String::new();
+        }
+        format!(
+            "pages[total={} used={} hwm={}]",
+            self.pages_total, self.pages_used, self.pages_hwm
+        )
+    }
+
+    /// The report's `prefix[...]` field — empty unless the engine served
+    /// with a live prefix index. Shared with the bench output.
+    pub fn prefix_field(&self) -> String {
+        if !self.prefix_enabled {
+            return String::new();
+        }
+        format!(
+            "prefix[lookups={} hits={} pages_shared={} tokens_saved={}]",
+            self.prefix_lookups,
+            self.prefix_hits,
+            self.prefix_pages_shared,
+            self.prefix_tokens_saved
+        )
+    }
+
     pub fn report(&self, label: &str) -> String {
         // empty summaries are NaN; a zero-request report must stay readable
         let ms = |x: f64| if x.is_finite() { x * 1e3 } else { 0.0 };
@@ -159,21 +204,23 @@ impl MetricsCollector {
         } else {
             self.kv_layout.as_str()
         };
-        // page accounting only exists under the paged layout; a static
-        // report carries no pages[...] field at all
-        let pages = if kv_layout == "paged" {
-            format!(
-                "  pages[total={} used={} hwm={}]",
-                self.pages_total, self.pages_used, self.pages_hwm
-            )
-        } else {
-            String::new()
+        // page accounting only exists under the paged layout and prefix
+        // accounting only on engines with a live index; a report never
+        // carries an empty pages[...]/prefix[...] field
+        let field = |f: String| {
+            if f.is_empty() {
+                f
+            } else {
+                format!("  {f}")
+            }
         };
+        let pages = field(self.pages_field());
+        let prefix = field(self.prefix_field());
         format!(
             "[{label}] requests={} rejected={} out_tokens={} wall={:.2}s \
              tput={:.1} tok/s  TPOT={:.2}ms  ITL={:.2}ms  TTFT={:.1}ms  \
              occupancy={:.0}%  (decode_steps={} prefills={})  \
-             cache[{cache_scheme} {kv_layout} resident={}]{pages}  \
+             cache[{cache_scheme} {kv_layout} resident={}]{pages}{prefix}  \
              xfer h2d={} d2h={} decode[h2d={} d2h={}] \
              admit[h2d={} d2h={} host_splices={}]",
             self.n_requests,
@@ -339,6 +386,30 @@ mod tests {
         // static engines never grow a pages field
         m.kv_layout = "static".into();
         assert!(!m.report("x").contains("pages["), "{}", m.report("x"));
+    }
+
+    #[test]
+    fn prefix_accounting_in_report() {
+        let mut m = MetricsCollector::new();
+        m.kv_layout = "paged".into();
+        m.prefix_enabled = true;
+        m.prefix_lookups = 9;
+        m.prefix_hits = 4;
+        m.prefix_pages_shared = 7;
+        m.prefix_tokens_saved = 112;
+        let r = m.report("x");
+        assert!(
+            r.contains(
+                "prefix[lookups=9 hits=4 pages_shared=7 tokens_saved=112]"
+            ),
+            "{r}"
+        );
+        // engines without a prefix index never grow a prefix field —
+        // including paged ones serving with --no-prefix-cache
+        m.prefix_enabled = false;
+        assert!(!m.report("x").contains("prefix["), "{}", m.report("x"));
+        let empty = MetricsCollector::new();
+        assert!(!empty.report("y").contains("prefix["));
     }
 
     #[test]

@@ -12,6 +12,9 @@
 //!   - `pager`   — KV page pool + per-slot block tables (vLLM-style
 //!     paging for `KvLayout::Paged`; resident cache bytes track live
 //!     context, admission backpressures when the pool runs dry).
+//!   - `prefixcache` — hash-chain index from prompt prefixes to shared
+//!     KV pages (ref-counted in the pager); admission maps hits into the
+//!     slot's block table and prefills only the uncached suffix.
 //!   - `metrics` — TTFT / TPOT / ITL / throughput accounting (Table 1).
 //!   - `server`  — TCP JSON-lines front-end + client.
 
@@ -20,6 +23,7 @@ pub mod engine;
 pub mod kvslots;
 pub mod metrics;
 pub mod pager;
+pub mod prefixcache;
 pub mod request;
 pub mod server;
 

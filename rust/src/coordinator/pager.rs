@@ -7,11 +7,33 @@
 //! under the int8 cache scheme, its scale block — `CacheScheme` dictates
 //! the bytes inside a page, this module dictates which page a position
 //! lives in). The `Pager` owns the allocation state on the host: a LIFO
-//! free list, a page→slot ownership mirror, and one block table per
-//! batch slot mapping logical block `j` (positions `j*page_size ..`) to
-//! a physical page. The engine uploads the table as an ordinary `[B,
-//! n_blocks]` s32 graph input each call; the graphs gather/scatter
-//! through it and never see the allocator.
+//! free list, a page-state mirror, and one block table per batch slot
+//! mapping logical block `j` (positions `j*page_size ..`) to a physical
+//! page. The engine uploads the table as an ordinary `[B, n_blocks]` s32
+//! graph input each call; the graphs gather/scatter through it and never
+//! see the allocator.
+//!
+//! ## Page states (prefix sharing)
+//!
+//! With the prefix cache (`coordinator::prefixcache`), a page is in one
+//! of four states:
+//!
+//! - **Free**: on the free list, contents meaningless.
+//! - **Private(slot)**: exclusively owned by one slot's block table —
+//!   the only state the graphs ever *write* (decode growth, suffix
+//!   prefill).
+//! - **Shared{refs}**: an immutable full page of prompt KV referenced by
+//!   `refs` block tables. The invariant `refs == number of block tables
+//!   containing the page` is what the proptests pin. Shared pages are
+//!   never written: sharing is full-page-only, the partial tail page of
+//!   a prompt stays private, and decode writes land strictly past the
+//!   prompt — so copy-on-write is unnecessary by construction.
+//! - **Cached**: a zero-ref shared page whose contents are retained for
+//!   prefix reuse. Cached pages live on an LRU; `alloc` reclaims the
+//!   oldest of them only once the free list is empty (and logs the
+//!   eviction so the prefix index can forget the page), which means the
+//!   prefix cache is reclaimed under pool pressure *before* admission
+//!   backpressures.
 //!
 //! ## Reservation discipline (admission backpressure)
 //!
@@ -20,12 +42,13 @@
 //! max_new - 1, smax))`. `can_admit` says whether the pool can cover a
 //! new reservation on top of every outstanding one; when it cannot, the
 //! engine leaves the request queued (backpressure through the batcher)
-//! instead of admitting work it might have to abandon mid-decode. The
-//! payoff: `grow` during decode can never exhaust the pool — an `Err`
-//! from it means a bookkeeping bug, not an unlucky workload — while
-//! short requests reserve little, so a mixed short/long workload packs
-//! far more live context into the pool than worst-case `[B, Smax]`
-//! provisioning would.
+//! instead of admitting work it might have to abandon mid-decode. Shared
+//! prefix pages that are already live (refs > 0) cost the reservation
+//! nothing; reviving a Cached page costs exactly one page of
+//! availability (it stops being reclaimable), so the accounting treats
+//! it like an allocation. The payoff: `grow` during decode can never
+//! exhaust the pool — an `Err` from it means a bookkeeping bug, not an
+//! unlucky workload.
 //!
 //! ## Hole sentinel
 //!
@@ -36,6 +59,21 @@
 //! a hole only ever covers positions beyond the slot's `pos`).
 
 use anyhow::{bail, Result};
+use std::collections::VecDeque;
+
+/// Allocation state of one physical page (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PageState {
+    /// on the free list
+    Free,
+    /// exclusively owned by one slot's block table (the only writable
+    /// state)
+    Private(usize),
+    /// immutable prompt-prefix page referenced by `refs` block tables
+    Shared { refs: u32 },
+    /// zero-ref shared page retained on the cached LRU for prefix reuse
+    Cached,
+}
 
 #[derive(Debug)]
 pub struct Pager {
@@ -43,13 +81,20 @@ pub struct Pager {
     blocks_per_slot: usize,
     /// LIFO free list of physical page ids
     free: Vec<u32>,
-    /// page -> owning slot; the invariant mirror of `tables`
-    owner: Vec<Option<usize>>,
+    /// page -> state; the invariant mirror of `tables`
+    state: Vec<PageState>,
+    /// zero-ref shared pages, oldest-released first (eviction order)
+    cached_lru: VecDeque<u32>,
+    /// pages reclaimed from the cached LRU since the last
+    /// `take_evicted` — the prefix index must forget them
+    evicted: Vec<u32>,
     /// per-slot block tables, logical block order
     tables: Vec<Vec<u32>>,
+    /// per-slot count of leading shared (prefix) blocks in `tables`
+    shared_prefix: Vec<usize>,
     /// per-slot reserved block budget (0 = slot not admitted)
     reserved: Vec<usize>,
-    /// most pages ever allocated at once (monotone)
+    /// most pages ever live (Private + Shared) at once (monotone)
     hwm: usize,
 }
 
@@ -66,15 +111,18 @@ impl Pager {
             page_size,
             blocks_per_slot,
             free,
-            owner: vec![None; n_pages],
+            state: vec![PageState::Free; n_pages],
+            cached_lru: VecDeque::new(),
+            evicted: Vec::new(),
             tables: vec![Vec::new(); batch],
+            shared_prefix: vec![0; batch],
             reserved: vec![0; batch],
             hwm: 0,
         }
     }
 
     pub fn n_pages(&self) -> usize {
-        self.owner.len()
+        self.state.len()
     }
 
     pub fn page_size(&self) -> usize {
@@ -89,8 +137,21 @@ impl Pager {
         self.free.len()
     }
 
+    /// Zero-ref shared pages retained for prefix reuse (reclaimable).
+    pub fn cached_pages(&self) -> usize {
+        self.cached_lru.len()
+    }
+
+    /// Pages an admission reservation can draw on: the free list plus
+    /// the cached LRU (reclaimed before the batcher backpressures).
+    pub fn available_pages(&self) -> usize {
+        self.free.len() + self.cached_lru.len()
+    }
+
+    /// Live pages: referenced by at least one block table (Private or
+    /// Shared). Cached pages are neither live nor free.
     pub fn used_pages(&self) -> usize {
-        self.n_pages() - self.free.len()
+        self.n_pages() - self.free.len() - self.cached_lru.len()
     }
 
     /// High-water mark of `used_pages` over the pager's lifetime.
@@ -110,6 +171,28 @@ impl Pager {
         len.div_ceil(self.page_size).clamp(1, self.blocks_per_slot)
     }
 
+    /// True when `page` may be mapped as a shared prefix page right now
+    /// (live-shared or retained on the cached LRU). The prefix index
+    /// validates every lookup hit through this, so a stale index entry
+    /// can never map a reallocated page.
+    pub fn page_is_shareable(&self, page: u32) -> bool {
+        matches!(
+            self.state.get(page as usize),
+            Some(PageState::Shared { .. }) | Some(PageState::Cached)
+        )
+    }
+
+    /// Block tables referencing `page`: `refs` for shared pages, 1 for
+    /// private, 0 for free/cached. Exposed for the sharing invariants in
+    /// `tests/properties.rs`.
+    pub fn refs(&self, page: u32) -> u32 {
+        match self.state[page as usize] {
+            PageState::Shared { refs } => refs,
+            PageState::Private(_) => 1,
+            PageState::Free | PageState::Cached => 0,
+        }
+    }
+
     /// Blocks reserved but not yet allocated, across all slots.
     fn outstanding(&self) -> usize {
         self.tables
@@ -119,10 +202,35 @@ impl Pager {
             .sum()
     }
 
+    /// Pages of availability a request reserving `reserve_len` positions
+    /// with `shared` prefix pages consumes: live-shared pages (refs > 0)
+    /// are free to map; a Cached page leaves the reclaimable pool, so it
+    /// costs exactly like a fresh allocation.
+    fn admit_cost(&self, reserve_len: usize, shared: &[u32]) -> usize {
+        let live = shared
+            .iter()
+            .filter(|&&p| {
+                matches!(
+                    self.state.get(p as usize),
+                    Some(PageState::Shared { .. })
+                )
+            })
+            .count();
+        self.blocks_for(reserve_len) - live.min(self.blocks_for(reserve_len))
+    }
+
     /// Can a new request reserving `reserve_len` positions be admitted
     /// on top of every outstanding reservation?
     pub fn can_admit(&self, reserve_len: usize) -> bool {
-        self.blocks_for(reserve_len) + self.outstanding() <= self.free.len()
+        self.can_admit_shared(reserve_len, &[])
+    }
+
+    /// `can_admit` for a request mapping `shared` prefix pages from the
+    /// prefix index: the shared pages shrink (live) or keep (cached) the
+    /// reservation's cost, never grow it.
+    pub fn can_admit_shared(&self, reserve_len: usize, shared: &[u32]) -> bool {
+        self.admit_cost(reserve_len, shared) + self.outstanding()
+            <= self.available_pages()
     }
 
     /// True when `reserve_len` could never be admitted, even into an
@@ -132,18 +240,50 @@ impl Pager {
     }
 
     fn alloc_page(&mut self, slot: usize) -> Result<u32> {
-        let Some(page) = self.free.pop() else {
-            bail!(
-                "KV page pool exhausted ({} pages, all allocated) — \
-                 admission reservations should have prevented this",
-                self.n_pages()
-            );
+        let page = match self.free.pop() {
+            Some(p) => p,
+            None => {
+                // pool pressure: reclaim the least-recently-released
+                // cached page before failing — the prefix cache yields
+                // to live traffic, the engine forgets the index entry
+                // via take_evicted
+                let Some(p) = self.cached_lru.pop_front() else {
+                    bail!(
+                        "KV page pool exhausted ({} pages, all live) — \
+                         admission reservations should have prevented \
+                         this",
+                        self.n_pages()
+                    );
+                };
+                debug_assert_eq!(self.state[p as usize], PageState::Cached);
+                self.evicted.push(p);
+                p
+            }
         };
-        debug_assert!(self.owner[page as usize].is_none());
-        self.owner[page as usize] = Some(slot);
+        self.state[page as usize] = PageState::Private(slot);
         self.tables[slot].push(page);
         self.hwm = self.hwm.max(self.used_pages());
         Ok(page)
+    }
+
+    /// Drain the pages reclaimed from the cached LRU since the last
+    /// call. The engine forwards them to `PrefixIndex::forget_page`, so
+    /// the index never advertises a page the pool took back.
+    pub fn take_evicted(&mut self) -> Vec<u32> {
+        std::mem::take(&mut self.evicted)
+    }
+
+    /// Evict every cached page back to the free list (returned ids must
+    /// be forgotten by the prefix index). Used by tests to prove a
+    /// drained pool equals a fresh one; not on any serving path.
+    pub fn evict_all_cached(&mut self) -> Vec<u32> {
+        let out: Vec<u32> = self.cached_lru.drain(..).collect();
+        for &p in &out {
+            debug_assert_eq!(self.state[p as usize], PageState::Cached);
+            self.state[p as usize] = PageState::Free;
+            self.free.push(p);
+        }
+        out
     }
 
     /// Admit slot `slot`: reserve `blocks_for(reserve_len)` pages for its
@@ -156,23 +296,159 @@ impl Pager {
         prompt_len: usize,
         reserve_len: usize,
     ) -> Result<()> {
+        self.admit_shared(slot, &[], prompt_len, reserve_len)
+    }
+
+    /// `admit` with a shared prefix: the leading `shared` block-table
+    /// entries map existing prefix pages (live-shared pages gain a ref,
+    /// cached pages are revived off the LRU), and only the remaining
+    /// private prompt blocks are freshly allocated. The shared prefix
+    /// must be strictly shorter than the prompt's block count — the
+    /// partial (or final) prompt page is always private, which is what
+    /// keeps shared pages write-free without copy-on-write.
+    pub fn admit_shared(
+        &mut self,
+        slot: usize,
+        shared: &[u32],
+        prompt_len: usize,
+        reserve_len: usize,
+    ) -> Result<()> {
         if !self.tables[slot].is_empty() || self.reserved[slot] != 0 {
             bail!("slot {slot} admitted twice (pages not released)");
         }
         let need_res = self.blocks_for(reserve_len.max(prompt_len));
-        if !self.can_admit(reserve_len.max(prompt_len)) {
+        let prompt_blocks = self.blocks_for(prompt_len);
+        if shared.len() >= prompt_blocks {
+            bail!(
+                "shared prefix of {} pages must leave at least one \
+                 private block of a {prompt_blocks}-block prompt (the \
+                 tail page is never shared)",
+                shared.len()
+            );
+        }
+        if !self.can_admit_shared(reserve_len.max(prompt_len), shared) {
             bail!(
                 "page pool cannot cover a {need_res}-block reservation \
-                 ({} free, {} outstanding) — caller must check can_admit",
+                 ({} free, {} cached, {} outstanding) — caller must \
+                 check can_admit",
                 self.free.len(),
+                self.cached_lru.len(),
                 self.outstanding()
             );
         }
+        // validate EVERY shared page before mutating any state: a bail
+        // after a partial mapping would strand refcounts/LRU entries
+        // with the slot's bookkeeping still zeroed (unrecoverable
+        // corruption the error path is documented NOT to cause)
+        for &p in shared {
+            if !self.page_is_shareable(p) {
+                bail!(
+                    "shared prefix page {p} is not shareable ({:?})",
+                    self.state.get(p as usize)
+                );
+            }
+        }
+        for &p in shared {
+            match self.state.get(p as usize).copied() {
+                Some(PageState::Shared { refs }) => {
+                    self.state[p as usize] =
+                        PageState::Shared { refs: refs + 1 };
+                }
+                Some(PageState::Cached) => {
+                    self.cached_lru.retain(|&c| c != p);
+                    self.state[p as usize] = PageState::Shared { refs: 1 };
+                }
+                // just validated; no mutation can interleave here
+                other => bail!("page {p} changed state mid-admit ({other:?})"),
+            }
+            self.tables[slot].push(p);
+        }
+        self.shared_prefix[slot] = shared.len();
         self.reserved[slot] = need_res;
-        for _ in 0..self.blocks_for(prompt_len) {
+        self.hwm = self.hwm.max(self.used_pages());
+        while self.tables[slot].len() < prompt_blocks {
             self.alloc_page(slot)?;
         }
         Ok(())
+    }
+
+    /// Flip the leading `n_blocks` of `slot`'s table to shared state so
+    /// the prefix index can advertise them: already-shared blocks are
+    /// untouched, private blocks become `Shared{1}`. Returns the newly
+    /// published `(block_index, page)` pairs (the caller registers each
+    /// under its prompt prefix). `n_blocks` must cover only pages whose
+    /// every position holds prompt KV — full pages, never the tail.
+    pub fn publish_prefix(
+        &mut self,
+        slot: usize,
+        n_blocks: usize,
+    ) -> Result<Vec<(usize, u32)>> {
+        if n_blocks > self.tables[slot].len() {
+            bail!(
+                "cannot publish {n_blocks} blocks of slot {slot}: table \
+                 has {}",
+                self.tables[slot].len()
+            );
+        }
+        // validate the whole range before flipping anything: a bail
+        // after a partial publish would leave Shared pages below a
+        // shared_prefix that still excludes them (release would then
+        // leak their refcounts)
+        for j in self.shared_prefix[slot]..n_blocks {
+            let page = self.tables[slot][j];
+            match self.state[page as usize] {
+                PageState::Private(s) if s == slot => {}
+                other => bail!(
+                    "publish of slot {slot} block {j}: page {page} is \
+                     {other:?}, not Private({slot})"
+                ),
+            }
+        }
+        let mut out = Vec::new();
+        for j in self.shared_prefix[slot]..n_blocks {
+            let page = self.tables[slot][j];
+            self.state[page as usize] = PageState::Shared { refs: 1 };
+            out.push((j, page));
+        }
+        self.shared_prefix[slot] = self.shared_prefix[slot].max(n_blocks);
+        Ok(out)
+    }
+
+    /// Release every page and the reservation of `slot`: private pages
+    /// return to the free list, shared pages drop one ref (reaching
+    /// zero refs parks them on the cached LRU, contents retained for
+    /// prefix reuse). Returns how many pages left the slot's table.
+    pub fn release(&mut self, slot: usize) -> usize {
+        let pages = std::mem::take(&mut self.tables[slot]);
+        let n_shared = self.shared_prefix[slot];
+        for (j, &p) in pages.iter().enumerate() {
+            match self.state[p as usize] {
+                PageState::Shared { refs } if j < n_shared => {
+                    if refs <= 1 {
+                        self.state[p as usize] = PageState::Cached;
+                        self.cached_lru.push_back(p);
+                    } else {
+                        self.state[p as usize] =
+                            PageState::Shared { refs: refs - 1 };
+                    }
+                }
+                PageState::Private(s) => {
+                    debug_assert_eq!(s, slot);
+                    self.state[p as usize] = PageState::Free;
+                    self.free.push(p);
+                }
+                other => {
+                    debug_assert!(
+                        false,
+                        "release slot {slot} block {j}: page {p} in \
+                         unexpected state {other:?}"
+                    );
+                }
+            }
+        }
+        self.shared_prefix[slot] = 0;
+        self.reserved[slot] = 0;
+        pages.len()
     }
 
     /// Ensure slot `slot` owns the page covering a write at position
@@ -198,22 +474,14 @@ impl Pager {
         Ok(())
     }
 
-    /// Release every page and the reservation of `slot`; returns how
-    /// many pages went back to the pool.
-    pub fn release(&mut self, slot: usize) -> usize {
-        let pages = std::mem::take(&mut self.tables[slot]);
-        for &p in &pages {
-            debug_assert_eq!(self.owner[p as usize], Some(slot));
-            self.owner[p as usize] = None;
-            self.free.push(p);
-        }
-        self.reserved[slot] = 0;
-        pages.len()
-    }
-
     /// The slot's block table (allocated blocks, logical order).
     pub fn block_table(&self, slot: usize) -> &[u32] {
         &self.tables[slot]
+    }
+
+    /// Leading shared (prefix) blocks in the slot's table.
+    pub fn shared_blocks(&self, slot: usize) -> usize {
+        self.shared_prefix[slot]
     }
 
     /// Flattened `[batch, n_blocks]` s32 block-table input: each slot's
@@ -370,5 +638,205 @@ mod tests {
         assert_eq!(p.hwm(), 4);
         p.admit(0, 16, 16).unwrap();
         assert_eq!(p.hwm(), 5);
+    }
+
+    // -- prefix sharing ---------------------------------------------------
+
+    #[test]
+    fn publish_release_caches_and_revives_prefix_pages() {
+        let mut p = pager();
+        // slot 0: 6-token prompt = 1 full page + 1 partial
+        p.admit(0, 6, 10).unwrap();
+        let published = p.publish_prefix(0, 1).unwrap();
+        assert_eq!(published, vec![(0usize, 0u32)]);
+        assert_eq!(p.refs(0), 1, "one table references the shared page");
+        assert_eq!(p.shared_blocks(0), 1);
+        assert_eq!(p.used_pages(), 2);
+        // publishing again is a no-op (already shared)
+        assert!(p.publish_prefix(0, 1).unwrap().is_empty());
+        // release: the shared page parks on the cached LRU, the private
+        // tail goes back to the free list
+        p.release(0);
+        assert_eq!(p.cached_pages(), 1);
+        assert_eq!(p.used_pages(), 0);
+        assert!(p.page_is_shareable(0));
+        assert_eq!(p.refs(0), 0);
+        // a new request revives the cached page as its shared prefix
+        p.admit_shared(1, &[0], 6, 10).unwrap();
+        assert_eq!(p.block_table(1)[0], 0);
+        assert_eq!(p.refs(0), 1);
+        assert_eq!(p.cached_pages(), 0);
+        assert_eq!(p.shared_blocks(1), 1);
+    }
+
+    #[test]
+    fn shared_refcounts_track_referencing_tables() {
+        let mut p = Pager::new(8, 4, 3, 4);
+        p.admit(0, 8, 8).unwrap(); // 2 full pages
+        let pub0: Vec<u32> = p
+            .publish_prefix(0, 1)
+            .unwrap()
+            .iter()
+            .map(|&(_, pg)| pg)
+            .collect();
+        // two more slots share the published page while slot 0 lives
+        p.admit_shared(1, &pub0, 6, 6).unwrap();
+        p.admit_shared(2, &pub0, 6, 6).unwrap();
+        assert_eq!(p.refs(pub0[0]), 3);
+        // sum of table lens exceeds used pages by the sharing overlap
+        let table_sum: usize = (0..3).map(|s| p.block_table(s).len()).sum();
+        assert_eq!(table_sum, p.used_pages() + 2);
+        p.release(1);
+        assert_eq!(p.refs(pub0[0]), 2);
+        p.release(0);
+        assert_eq!(p.refs(pub0[0]), 1, "slot 2 still references it");
+        assert_eq!(p.cached_pages(), 0);
+        p.release(2);
+        assert_eq!(p.refs(pub0[0]), 0);
+        assert_eq!(p.cached_pages(), 1, "zero refs parks it on the LRU");
+    }
+
+    #[test]
+    fn shared_prefix_must_leave_a_private_tail() {
+        let mut p = pager();
+        p.admit(0, 8, 8).unwrap(); // 2 full pages
+        let pages: Vec<u32> = p
+            .publish_prefix(0, 2)
+            .unwrap()
+            .iter()
+            .map(|&(_, pg)| pg)
+            .collect();
+        assert_eq!(pages.len(), 2);
+        p.release(0);
+        // a 8-token prompt has 2 blocks: sharing both would leave the
+        // suffix prefill nothing to write — full-page-only sharing caps
+        // the prefix strictly below the prompt's block count
+        let e = p.admit_shared(1, &pages, 8, 8).unwrap_err().to_string();
+        assert!(e.contains("at least one private block"), "{e}");
+        p.admit_shared(1, &pages[..1], 8, 8).unwrap();
+        assert_eq!(p.shared_blocks(1), 1);
+    }
+
+    #[test]
+    fn cached_pages_count_as_available_and_evict_lru_first() {
+        // 4 pages, all cached: a fresh admission reclaims them oldest
+        // first instead of backpressuring
+        let mut p = Pager::new(4, 4, 2, 4);
+        p.admit(0, 16, 16).unwrap(); // all 4 pages
+        p.publish_prefix(0, 3).unwrap();
+        p.release(0); // pages 0,1,2 cached (in that order), 3 free
+        assert_eq!(p.free_pages(), 1);
+        assert_eq!(p.cached_pages(), 3);
+        assert_eq!(p.available_pages(), 4);
+        assert!(p.can_admit(16), "cached pages back the reservation");
+        p.admit(1, 16, 16).unwrap();
+        // free page 3 first, then LRU order 0, 1, 2
+        assert_eq!(p.block_table(1), &[3, 0, 1, 2]);
+        assert_eq!(p.take_evicted(), vec![0, 1, 2]);
+        assert!(p.take_evicted().is_empty(), "drained");
+        assert_eq!(p.cached_pages(), 0);
+    }
+
+    #[test]
+    fn reviving_a_cached_page_costs_availability() {
+        // 4 pages; slot 0's published prefix page is cached. A request
+        // sharing it must account for the page leaving the reclaimable
+        // pool: reserve 16 (4 blocks) with 1 cached-shared page still
+        // needs 4 pages of availability, and only 4 exist — admissible —
+        // but a second full reservation is not.
+        let mut p = Pager::new(4, 4, 2, 4);
+        p.admit(0, 6, 6).unwrap();
+        p.publish_prefix(0, 1).unwrap();
+        p.release(0);
+        assert_eq!(p.cached_pages(), 1);
+        assert!(p.can_admit_shared(16, &[0]));
+        p.admit_shared(1, &[0], 6, 16).unwrap();
+        // the revived page plus one private block are live; 2 free pages
+        // back the remaining 2 reserved blocks — nothing else fits
+        assert_eq!(p.used_pages(), 2);
+        assert!(!p.can_admit(4));
+        p.grow(1, 15).unwrap();
+        assert_eq!(p.block_table(1).len(), 4);
+    }
+
+    #[test]
+    fn live_shared_pages_cost_nothing_to_map() {
+        let mut p = Pager::new(4, 4, 2, 4);
+        p.admit(0, 6, 6).unwrap(); // pages 0 (full), 1 (tail)
+        p.publish_prefix(0, 1).unwrap();
+        // slot 0 still live: sharing its page consumes no availability
+        assert_eq!(p.available_pages(), 2);
+        assert!(p.can_admit_shared(8, &[0]), "2 blocks, 1 shared-live");
+        p.admit_shared(1, &[0], 6, 8).unwrap();
+        assert_eq!(p.refs(0), 2);
+        assert_eq!(p.used_pages(), 3);
+    }
+
+    #[test]
+    fn evict_all_cached_drains_to_fresh_pool() {
+        let mut p = pager();
+        p.admit(0, 16, 16).unwrap();
+        p.publish_prefix(0, 4).unwrap();
+        p.release(0);
+        assert_eq!(p.cached_pages(), 4);
+        let evicted = p.evict_all_cached();
+        assert_eq!(evicted.len(), 4);
+        assert_eq!(p.free_pages(), 8);
+        assert_eq!(p.cached_pages(), 0);
+        assert_eq!(p.used_pages(), 0);
+        assert!(!p.page_is_shareable(evicted[0]));
+    }
+
+    #[test]
+    fn admit_shared_rejects_unshareable_pages() {
+        let mut p = pager();
+        p.admit(0, 6, 6).unwrap(); // page 0 private to slot 0
+        let e = p.admit_shared(1, &[0], 6, 6).unwrap_err().to_string();
+        assert!(e.contains("not shareable"), "{e}");
+        let e = p.admit_shared(1, &[7], 6, 6).unwrap_err().to_string();
+        assert!(e.contains("not shareable"), "{e}");
+    }
+
+    #[test]
+    fn rejected_admit_shared_mutates_nothing() {
+        // regression (review): a shareable page FOLLOWED by a bad one
+        // must not leave a half-mapped slot behind — the bail happens
+        // before any refcount/LRU/table mutation, so the rejection is
+        // recoverable and the shareable page's state is untouched
+        let mut p = pager();
+        p.admit(0, 10, 10).unwrap(); // pages 0,1 full + 2 tail
+        p.publish_prefix(0, 2).unwrap();
+        p.release(0); // pages 0,1 cached; page 2 freed
+        assert_eq!(p.cached_pages(), 2);
+        // page 5 is free — not shareable — and sits BEHIND a valid page
+        let e = p
+            .admit_shared(1, &[0, 5], 12, 12)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("not shareable"), "{e}");
+        assert!(p.block_table(1).is_empty(), "no partial mapping");
+        assert_eq!(p.refs(0), 0, "valid page's refcount untouched");
+        assert_eq!(p.cached_pages(), 2, "valid page stayed on the LRU");
+        // the rejection is recoverable: the same slot admits cleanly
+        p.admit_shared(1, &[0, 1], 12, 12).unwrap();
+        assert_eq!(&p.block_table(1)[..2], &[0, 1]);
+    }
+
+    #[test]
+    fn publish_rejects_foreign_or_missing_blocks() {
+        let mut p = pager();
+        p.admit(0, 6, 6).unwrap();
+        let e = p.publish_prefix(0, 3).unwrap_err().to_string();
+        assert!(e.contains("table has 2"), "{e}");
+    }
+
+    #[test]
+    fn hwm_counts_shared_pages_once() {
+        let mut p = pager();
+        p.admit(0, 6, 6).unwrap(); // 2 pages
+        p.publish_prefix(0, 1).unwrap();
+        p.admit_shared(1, &[0], 6, 6).unwrap(); // +1 private, page 0 shared
+        assert_eq!(p.used_pages(), 3);
+        assert_eq!(p.hwm(), 3, "a page shared by two tables is one page");
     }
 }

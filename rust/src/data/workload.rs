@@ -26,6 +26,11 @@ pub struct WorkloadSpec {
     /// (the paper's `num_prompts` batch mode).
     pub arrival_rate: f64,
     pub seed: u64,
+    /// shared system prompt prepended to EVERY request (0 = none): the
+    /// many-users-one-template shape the prefix cache exists for. The
+    /// prefix counts toward neither cap — per-request lengths stay
+    /// ShareGPT-shaped on top of it.
+    pub shared_prefix_tokens: usize,
 }
 
 impl Default for WorkloadSpec {
@@ -36,6 +41,7 @@ impl Default for WorkloadSpec {
             max_output_tokens: 64,
             arrival_rate: f64::INFINITY,
             seed: 0xA0,
+            shared_prefix_tokens: 0,
         }
     }
 }
@@ -43,6 +49,13 @@ impl Default for WorkloadSpec {
 pub fn generate(spec: &WorkloadSpec) -> Vec<Request> {
     let gen = CorpusGen::new(spec.seed ^ 0x5417);
     let mut rng = Rng::new(spec.seed);
+    // one fixed "system prompt" for the whole workload, drawn from the
+    // same seeded corpus so it is deterministic per spec
+    let mut system = String::new();
+    while system.len() < spec.shared_prefix_tokens {
+        system.push_str(&gen.sentence(&mut rng));
+    }
+    system.truncate(spec.shared_prefix_tokens);
     let mut out = Vec::with_capacity(spec.n_requests);
     let mut t = 0.0f64;
     for id in 0..spec.n_requests {
@@ -51,12 +64,12 @@ pub fn generate(spec: &WorkloadSpec) -> Vec<Request> {
             .clamp(4, spec.max_prompt_tokens);
         let o_len = (rng.lognormal(3.4, 0.9) as usize)
             .clamp(4, spec.max_output_tokens);
-        let mut prompt = String::new();
-        while prompt.len() < p_len {
+        let mut prompt = system.clone();
+        while prompt.len() < system.len() + p_len {
             // byte-level tokenizer: bytes == tokens
             prompt.push_str(&gen.sentence(&mut rng));
         }
-        prompt.truncate(p_len);
+        prompt.truncate(system.len() + p_len);
         if spec.arrival_rate.is_finite() {
             // Poisson arrivals
             t += -rng.f64().max(1e-12).ln() / spec.arrival_rate;
@@ -129,5 +142,30 @@ mod tests {
     fn batch_mode_all_at_zero() {
         let reqs = generate(&WorkloadSpec::default());
         assert!(reqs.iter().all(|r| r.arrival_s == 0.0));
+    }
+
+    #[test]
+    fn shared_prefix_prepends_one_system_prompt() {
+        let spec = WorkloadSpec {
+            n_requests: 20,
+            shared_prefix_tokens: 40,
+            ..Default::default()
+        };
+        let reqs = generate(&spec);
+        let prefix = &reqs[0].prompt[..40];
+        for r in &reqs {
+            assert!(r.prompt.len() >= 44, "prefix + >= 4 own tokens");
+            assert_eq!(&r.prompt[..40], prefix, "one shared system prompt");
+        }
+        // the suffixes still differ (it is not one repeated request)
+        assert!(
+            reqs.iter().any(|r| r.prompt[40..] != reqs[0].prompt[40..]),
+            "per-request suffixes must vary"
+        );
+        // deterministic per spec, and absent by default
+        let again = generate(&spec);
+        assert_eq!(reqs[3].prompt, again[3].prompt);
+        let plain = generate(&WorkloadSpec::default());
+        assert!(plain[0].prompt.len() <= 96);
     }
 }

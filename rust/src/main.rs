@@ -7,6 +7,7 @@
 //!   ao serve      --ckpt ... --scheme fp8dq_row --addr 127.0.0.1:7433
 //!                 [--kv-cache int8]   # quantized (int8+scales) KV cache
 //!                 [--kv-layout paged] # block-table paged KV cache
+//!                 [--no-prefix-cache] # disable shared-prefix page reuse
 //!                 [--host-admission]  # force the host splice fallback
 //!   ao bench-client --addr 127.0.0.1:7433 --n 16
 //!   ao perfmodel  [--kernels]                   # H100/Fig3 + L1 estimates
@@ -216,6 +217,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .context("--kv-layout")?,
         eos_token: None,
         host_admission: args.flag("host-admission"),
+        // prefix sharing defaults on; it is a no-op under the static
+        // layout or without admit_suffix artifacts
+        prefix_cache: !args.flag("no-prefix-cache"),
     };
     let (handle, join) = engine::spawn(cfg);
     let tok = Arc::new(Tokenizer::byte_level());

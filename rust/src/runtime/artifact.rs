@@ -99,6 +99,14 @@ impl ArtifactSpec {
         match (self.kind.as_str(), self.layout.as_str()) {
             ("admit", "static") => Ok(&["tokens", "lens", "slot_ids"]),
             ("admit", "paged") => Ok(&["tokens", "lens", "block_tables"]),
+            ("admit_suffix", "paged") => {
+                Ok(&["tokens", "lens", "start_lens", "block_tables"])
+            }
+            ("admit_suffix", "static") => anyhow::bail!(
+                "artifact '{}': admit_suffix is paged-only (the static \
+                 layout has no pages to share)",
+                self.name
+            ),
             ("decode", "static") => Ok(&["token", "pos"]),
             ("decode", "paged") => Ok(&["token", "pos", "block_tables"]),
             (_, other) => anyhow::bail!(
@@ -142,6 +150,20 @@ impl ArtifactSpec {
                 self.page_size
             );
         }
+        // mirror of aot.py's --kv-pages floor: a pool below one
+        // full-context reservation could never admit a window-spanning
+        // request, so the engine would reject work the exporter
+        // promised to serve
+        let blocks_per_slot = self.smax / self.page_size;
+        if self.n_pages < blocks_per_slot {
+            anyhow::bail!(
+                "{} (n_pages={} < smax/page_size={blocks_per_slot}; a \
+                 full-context request could never be admitted — \
+                 re-export with --kv-pages >= {blocks_per_slot})",
+                ctx("page pool is below one full-context reservation"),
+                self.n_pages
+            );
+        }
         Ok(())
     }
 
@@ -157,11 +179,27 @@ impl ArtifactSpec {
     /// fails this check would make the engine scatter rows into the wrong
     /// place, so callers should treat an error as fatal.
     pub fn validate_admit(&self) -> Result<()> {
-        if self.kind != "admit" {
-            anyhow::bail!("artifact '{}' is not kind=admit", self.name);
+        self.validate_admission("admit")
+    }
+
+    /// `validate_admit` for the prefix-cache suffix-prefill artifact:
+    /// same cache block and outputs, but the trailing inputs are
+    /// `(tokens, lens, start_lens, block_tables)` with a FULL-WINDOW
+    /// block table (`smax/page_size` blocks — the graph attends through
+    /// the shared prefix pages, not just the bucket's own blocks).
+    pub fn validate_admit_suffix(&self) -> Result<()> {
+        self.validate_admission("admit_suffix")
+    }
+
+    fn validate_admission(&self, want_kind: &str) -> Result<()> {
+        if self.kind != want_kind {
+            anyhow::bail!(
+                "artifact '{}' is not kind={want_kind}",
+                self.name
+            );
         }
         let ctx = |what: &str| {
-            format!("admit artifact '{}': {what}", self.name)
+            format!("{want_kind} artifact '{}': {what}", self.name)
         };
         let cache_names = self.cache_input_names()?;
         let quantized = self.cache == "int8";
@@ -256,15 +294,32 @@ impl ArtifactSpec {
         if input("lens").shape != [self.batch] {
             anyhow::bail!(ctx("lens must be [batch]"));
         }
+        if want_kind == "admit_suffix" {
+            let st = input("start_lens");
+            if st.shape != [self.batch] || st.dtype != "s32" {
+                anyhow::bail!(
+                    "{} (got {:?} {})",
+                    ctx("start_lens must be s32 [batch]"),
+                    st.shape,
+                    st.dtype
+                );
+            }
+        }
         if paged {
             let bt = input("block_tables");
-            let admit_blocks = self.seq.div_ceil(self.page_size);
-            if bt.shape != [self.batch, admit_blocks] {
+            // an admit's table covers only its own bucket's blocks; a
+            // suffix-prefill attends through the cached prefix, so its
+            // table spans the full context window
+            let blocks = if want_kind == "admit_suffix" {
+                self.smax / self.page_size
+            } else {
+                self.seq.div_ceil(self.page_size)
+            };
+            if bt.shape != [self.batch, blocks] {
                 anyhow::bail!(
                     "{} (got {:?})",
                     ctx(&format!(
-                        "block_tables must be [batch, {admit_blocks}] \
-                         (ceil(seq/page_size) blocks per row)"
+                        "block_tables must be [batch, {blocks}]"
                     )),
                     bt.shape
                 );
@@ -697,7 +752,7 @@ mod tests {
         {"name": "admit_f32_tiny_b2_s16_paged", "file": "ap.hlo.txt",
          "kind": "admit", "model": "tiny", "scheme": "f32",
          "layout": "paged", "page_size": 8, "n_pages": 6,
-         "batch": 2, "seq": 16, "smax": 128,
+         "batch": 2, "seq": 16, "smax": 16,
          "donate": [[1, 1], [2, 2]],
          "inputs": [
             {"name": "params.tok_emb", "shape": [256, 64], "dtype": "f32"},
@@ -713,7 +768,7 @@ mod tests {
         {"name": "admit_f32_tiny_b2_s16_kv8_paged", "file": "ap8.hlo.txt",
          "kind": "admit", "model": "tiny", "scheme": "f32",
          "cache": "int8", "layout": "paged", "page_size": 8, "n_pages": 6,
-         "batch": 2, "seq": 16, "smax": 128,
+         "batch": 2, "seq": 16, "smax": 16,
          "donate": [[1, 1], [2, 2], [3, 3], [4, 4]],
          "inputs": [
             {"name": "params.tok_emb", "shape": [256, 64], "dtype": "f32"},
@@ -733,14 +788,31 @@ mod tests {
         {"name": "decode_f32_tiny_b2_paged", "file": "dp.hlo.txt",
          "kind": "decode", "model": "tiny", "scheme": "f32",
          "layout": "paged", "page_size": 8, "n_pages": 6,
-         "batch": 2, "smax": 128,
+         "batch": 2, "smax": 16,
          "inputs": [
             {"name": "params.tok_emb", "shape": [256, 64], "dtype": "f32"},
             {"name": "kcache", "shape": [2,6,2,8,16], "dtype": "f32"},
             {"name": "vcache", "shape": [2,6,2,8,16], "dtype": "f32"},
             {"name": "token", "shape": [2], "dtype": "s32"},
             {"name": "pos", "shape": [2], "dtype": "s32"},
-            {"name": "block_tables", "shape": [2, 16], "dtype": "s32"}],
+            {"name": "block_tables", "shape": [2, 2], "dtype": "s32"}],
+         "outputs": [
+            {"name": "out.0", "shape": [2, 256], "dtype": "f32"},
+            {"name": "out.1", "shape": [2,6,2,8,16], "dtype": "f32"},
+            {"name": "out.2", "shape": [2,6,2,8,16], "dtype": "f32"}]},
+        {"name": "admit_suffix_f32_tiny_b2_s16_paged", "file": "as.hlo.txt",
+         "kind": "admit_suffix", "model": "tiny", "scheme": "f32",
+         "layout": "paged", "page_size": 8, "n_pages": 6,
+         "batch": 2, "seq": 16, "smax": 16,
+         "donate": [[1, 1], [2, 2]],
+         "inputs": [
+            {"name": "params.tok_emb", "shape": [256, 64], "dtype": "f32"},
+            {"name": "kcache", "shape": [2,6,2,8,16], "dtype": "f32"},
+            {"name": "vcache", "shape": [2,6,2,8,16], "dtype": "f32"},
+            {"name": "tokens", "shape": [2, 16], "dtype": "s32"},
+            {"name": "lens", "shape": [2], "dtype": "s32"},
+            {"name": "start_lens", "shape": [2], "dtype": "s32"},
+            {"name": "block_tables", "shape": [2, 2], "dtype": "s32"}],
          "outputs": [
             {"name": "out.0", "shape": [2, 256], "dtype": "f32"},
             {"name": "out.1", "shape": [2,6,2,8,16], "dtype": "f32"},
@@ -842,6 +914,73 @@ mod tests {
         unknown.layout = "ragged".into();
         let e = unknown.validate_admit().unwrap_err().to_string();
         assert!(e.contains("valid values: static, paged"), "{e}");
+    }
+
+    #[test]
+    fn paged_geometry_floors_at_one_full_context() {
+        // satellite mirror of aot.py's --kv-pages validation: a pool
+        // below smax/page_size could never admit a window-spanning
+        // request, so the manifest is rejected up front
+        let m = Manifest::parse(PAGED_SAMPLE).unwrap();
+        let mut small = m.artifact("admit_f32_tiny_b2_s16_paged").unwrap().clone();
+        small.smax = 64; // 8 blocks per slot > the 6-page pool
+        let e = small.validate_admit().unwrap_err().to_string();
+        assert!(e.contains("below one full-context reservation"), "{e}");
+        assert!(e.contains("--kv-pages >= 8"), "{e}");
+    }
+
+    #[test]
+    fn parses_and_validates_admit_suffix() {
+        let m = Manifest::parse(PAGED_SAMPLE).unwrap();
+        let s = m.artifact("admit_suffix_f32_tiny_b2_s16_paged").unwrap();
+        assert_eq!(s.kind, "admit_suffix");
+        assert_eq!(
+            s.layout_trailing_inputs().unwrap(),
+            &["tokens", "lens", "start_lens", "block_tables"]
+        );
+        s.validate_admit_suffix().unwrap();
+        // an admit_suffix entry is NOT a valid admit (and vice versa)
+        let e = s.validate_admit().unwrap_err().to_string();
+        assert!(e.contains("not kind=admit"), "{e}");
+        let a = m.artifact("admit_f32_tiny_b2_s16_paged").unwrap();
+        assert!(a.validate_admit_suffix().is_err());
+    }
+
+    #[test]
+    fn validate_admit_suffix_catches_contract_breaks() {
+        let m = Manifest::parse(PAGED_SAMPLE).unwrap();
+        let good = m.artifact("admit_suffix_f32_tiny_b2_s16_paged").unwrap();
+
+        // start_lens is the position offset the suffix prefills at — a
+        // wrong dtype/shape would shift every RoPE angle silently
+        let mut bad_start = good.clone();
+        bad_start
+            .inputs
+            .iter_mut()
+            .find(|s| s.name == "start_lens")
+            .unwrap()
+            .dtype = "f32".into();
+        let e = bad_start.validate_admit_suffix().unwrap_err().to_string();
+        assert!(e.contains("start_lens must be s32 [batch]"), "{e}");
+
+        // the table must span the FULL window (smax/page_size blocks),
+        // not the admit bucket's ceil(seq/ps): the suffix graph attends
+        // through the shared prefix pages
+        let mut bad_bt = good.clone();
+        bad_bt.smax = 48; // 6 blocks; table still [2, 2]
+        let e = bad_bt.validate_admit_suffix().unwrap_err().to_string();
+        assert!(e.contains("block_tables must be [batch, 6]"), "{e}");
+
+        // suffix admission over the static layout is a contract break
+        let mut not_paged = good.clone();
+        not_paged.layout = "static".into();
+        let e = not_paged.validate_admit_suffix().unwrap_err().to_string();
+        assert!(e.contains("paged-only"), "{e}");
+
+        // missing start_lens fails the positional trailing check
+        let mut missing = good.clone();
+        missing.inputs.retain(|s| s.name != "start_lens");
+        assert!(missing.validate_admit_suffix().is_err());
     }
 
     #[test]

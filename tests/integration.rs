@@ -135,6 +135,7 @@ fn engine_serves_batched_requests() {
         kv_layout: KvLayout::Static,
         eos_token: None,
         host_admission: false,
+        prefix_cache: false,
     });
 
     let mut rxs = Vec::new();
@@ -195,6 +196,7 @@ fn engine_greedy_decode_is_deterministic() {
             kv_layout: KvLayout::Static,
             eos_token: None,
             host_admission: false,
+            prefix_cache: false,
         });
         let (tx, rx) = channel();
         handle
@@ -254,6 +256,7 @@ fn decode_host_traffic_is_logits_only() {
         kv_layout: KvLayout::Static,
         eos_token: None,
         host_admission: false,
+        prefix_cache: false,
     });
     let mut rxs = Vec::new();
     for i in 0..3u64 {
@@ -331,6 +334,7 @@ fn context_cap_grants_the_last_cache_slot() {
         kv_layout: KvLayout::Static,
         eos_token: None,
         host_admission: false,
+        prefix_cache: false,
     });
     let (tx, rx) = channel();
     handle
@@ -396,6 +400,7 @@ fn oversized_head_does_not_stall_admission() {
         kv_layout: KvLayout::Static,
         eos_token: None,
         host_admission: false,
+        prefix_cache: false,
     });
     // head: too long for any bucket; followers: ordinary prompts
     let (bad_tx, bad_rx) = channel();
@@ -534,6 +539,7 @@ fn admission_rows_only_under(cache_scheme: CacheScheme) {
         kv_layout: KvLayout::Static,
         eos_token: None,
         host_admission: false,
+        prefix_cache: false,
     });
     let mut rxs = Vec::new();
     for i in 0..3u64 {
@@ -620,6 +626,7 @@ fn admission_paths_agree_under(cache_scheme: CacheScheme) {
             kv_layout: KvLayout::Static,
             eos_token: None,
             host_admission,
+            prefix_cache: false,
         });
         let mut rxs = Vec::new();
         for i in 0..4u64 {
@@ -703,6 +710,7 @@ fn kv_cache_schemes_agree() {
             kv_layout: KvLayout::Static,
             eos_token: None,
             host_admission: false,
+            prefix_cache: false,
         });
         let mut rxs = Vec::new();
         for i in 0..5u64 {
@@ -804,6 +812,7 @@ fn kv_layouts_agree() {
                 kv_layout,
                 eos_token: None,
                 host_admission: false,
+                prefix_cache: false,
             });
             let mut rxs = Vec::new();
             // mixed short/long greedy workload, more requests than fit at
@@ -873,6 +882,167 @@ fn kv_layouts_agree() {
     }
 }
 
+/// True when the artifact dir carries admit_suffix artifacts for
+/// (tiny, f32) under `cache_scheme`; otherwise prints a skip notice.
+fn has_suffix_artifacts(dir: &Path, cache_scheme: CacheScheme) -> bool {
+    let runtime = Runtime::open(dir).unwrap();
+    let found = runtime
+        .manifest
+        .find("admit_suffix", "tiny", Some("f32"))
+        .iter()
+        .any(|s| s.cache == cache_scheme.tag() && s.layout == "paged");
+    if !found {
+        eprintln!(
+            "[skip] no admit_suffix artifacts for kv-cache {}; re-run \
+             `make artifacts`",
+            cache_scheme.tag()
+        );
+    }
+    found
+}
+
+/// Tentpole acceptance (prefix cache): the same shared-system-prompt
+/// greedy workload produces identical token streams with the prefix
+/// cache enabled and disabled, under BOTH cache schemes — while the
+/// enabled run reports actual sharing (tokens_saved > 0, pages_shared >
+/// 0) and a strictly smaller page high-water mark at equal batch,
+/// because concurrent requests map one physical copy of the shared
+/// prompt's pages instead of allocating one each.
+#[test]
+fn prefix_cache_agrees() {
+    let Some(dir) = artifacts_dir() else { return };
+    for cache_scheme in [CacheScheme::F32, CacheScheme::Int8] {
+        if !has_paged_artifacts(&dir, cache_scheme)
+            || !has_suffix_artifacts(&dir, cache_scheme)
+        {
+            return;
+        }
+        let runtime = Runtime::open(&dir).unwrap();
+        let decode = runtime
+            .manifest
+            .find("decode", "tiny", Some("f32"))
+            .into_iter()
+            .find(|s| s.cache == cache_scheme.tag() && s.layout == "paged")
+            .expect("paged decode artifact");
+        let ps = decode.page_size;
+        drop(runtime);
+
+        let master = tiny_master_ckpt(&dir);
+        let tmp = std::env::temp_dir().join("ao_int_tests");
+        std::fs::create_dir_all(&tmp).unwrap();
+        let ckpt_path = tmp
+            .join(format!("tiny_f32_prefix_{}.aockpt", cache_scheme.tag()));
+        master.save(&ckpt_path).unwrap();
+
+        // one system prompt spanning a full page (+1 token so the page
+        // is shareable), plus a distinct per-request tail
+        let system: Vec<u32> = (0..ps as u32 + 1).map(|t| 30 + t).collect();
+        let run = |prefix_cache: bool| {
+            let (handle, join) = engine::spawn(engine::EngineConfig {
+                artifacts_dir: dir.clone(),
+                ckpt_path: ckpt_path.clone(),
+                model: "tiny".into(),
+                scheme: "f32".into(),
+                cache_scheme,
+                kv_layout: KvLayout::Paged,
+                eos_token: None,
+                host_admission: false,
+                prefix_cache,
+            });
+            let collect = |rx: std::sync::mpsc::Receiver<Event>| {
+                let mut toks = Vec::new();
+                for ev in rx {
+                    match ev {
+                        Event::Token(t) => toks.push(t),
+                        Event::Done(_) => break,
+                        Event::Error(e) => panic!("error: {e}"),
+                    }
+                }
+                toks
+            };
+            // phase 1: one seed request writes (and publishes) the
+            // system prompt's page
+            let (tx, rx) = channel();
+            handle
+                .submit(SubmitReq {
+                    id: 0,
+                    prompt_tokens: system.clone(),
+                    max_new_tokens: 6,
+                    temperature: 0.0,
+                    seed: 0,
+                    tx,
+                    submitted_at: Instant::now(),
+                })
+                .unwrap();
+            let mut streams = vec![collect(rx)];
+            // phase 2: a concurrent burst of requests sharing the same
+            // system prompt with distinct user tails
+            let mut rxs = Vec::new();
+            for i in 1..=7u64 {
+                let mut prompt = system.clone();
+                prompt.extend((0..1 + (i as u32 % 3)).map(|j| 90 + 7 * i as u32 + j));
+                let (tx, rx) = channel();
+                handle
+                    .submit(SubmitReq {
+                        id: i,
+                        prompt_tokens: prompt,
+                        max_new_tokens: 6,
+                        temperature: 0.0,
+                        seed: i,
+                        tx,
+                        submitted_at: Instant::now(),
+                    })
+                    .unwrap();
+                rxs.push(rx);
+            }
+            streams.extend(rxs.into_iter().map(collect));
+            handle.shutdown();
+            let m = join.join().unwrap().unwrap();
+            (streams, m)
+        };
+        let (off_streams, off_m) = run(false);
+        let (on_streams, on_m) = run(true);
+        assert_eq!(
+            off_streams,
+            on_streams,
+            "prefix sharing must not change the greedy token streams \
+             (kv-cache {})",
+            cache_scheme.tag()
+        );
+        // the disabled run must not have consulted any index
+        assert!(!off_m.prefix_enabled);
+        assert_eq!(off_m.prefix_pages_shared, 0);
+        // the enabled run actually shared: every burst-2 request maps
+        // the seed's system-prompt page instead of re-prefilling it
+        assert!(on_m.prefix_enabled);
+        assert!(on_m.prefix_lookups > 0, "admissions must consult the index");
+        assert!(
+            on_m.prefix_pages_shared > 0,
+            "the shared-system-prompt burst must map shared pages"
+        );
+        assert!(
+            on_m.prefix_tokens_saved > 0,
+            "shared pages cover prompt tokens the suffix prefill skipped"
+        );
+        assert_eq!(
+            on_m.prefix_tokens_saved,
+            on_m.prefix_pages_shared * ps,
+            "sharing is full-page-only"
+        );
+        assert!(
+            on_m.pages_hwm < off_m.pages_hwm,
+            "one physical copy of the shared prefix must shrink the page \
+             high-water mark: {} (on) vs {} (off)",
+            on_m.pages_hwm,
+            off_m.pages_hwm
+        );
+        // every page still returns to the pool (shared ones via the
+        // cached LRU, which used_pages excludes)
+        assert_eq!(on_m.pages_used, 0);
+        assert_eq!(on_m.n_requests, 8);
+    }
+}
+
 /// ROADMAP "untupled execution outputs": the binding must hand back one
 /// buffer per output tuple element, otherwise the device-resident decode
 /// and admission paths silently degrade to metered host round-trips (the
@@ -910,6 +1080,7 @@ fn sampled_requests_diverge() {
         kv_layout: KvLayout::Static,
         eos_token: None,
         host_admission: false,
+        prefix_cache: false,
     });
     // identical prompts, temperature 1.0, seed == id (the collapsing case)
     let mut rxs = Vec::new();
@@ -973,6 +1144,7 @@ fn empty_prompt_is_rejected() {
         kv_layout: KvLayout::Static,
         eos_token: None,
         host_admission: false,
+        prefix_cache: false,
     });
     let (bad_tx, bad_rx) = channel();
     handle

@@ -478,6 +478,150 @@ fn prop_pager_invariants() {
 }
 
 #[test]
+fn prop_pager_shared_invariants() {
+    // The prefix-sharing pager under random interleaved
+    // admit/admit_shared/publish/grow/release traffic:
+    //   - refcount == number of block tables referencing each page
+    //     (1 for private pages, 0 for free/cached)
+    //   - occupancy == sum of table lengths minus the sharing overlap
+    //   - used + free + cached partitions the pool
+    //   - reserved growth stays infallible with shared prefixes mapped
+    //   - draining every slot and evicting the cached LRU restores a
+    //     fresh pool
+    let mut rng = Rng::new(0x5A4E_D0);
+    for case in 0..25 {
+        let page_size = [4usize, 8][rng.below(2)];
+        let blocks_per_slot = 2 + rng.below(3);
+        let smax = page_size * blocks_per_slot;
+        let batch = 2 + rng.below(3);
+        let n_pages =
+            blocks_per_slot + 1 + rng.below(batch * blocks_per_slot);
+        let mut p = Pager::new(n_pages, page_size, batch, blocks_per_slot);
+        let mut live: Vec<Option<usize>> = vec![None; batch]; // reserve_len
+        // published page chains (prefix order) sharing may draw from;
+        // the real engine's index also checks content — here only the
+        // pager's structural invariants are under test
+        let mut published: Vec<Vec<u32>> = Vec::new();
+        for op in 0..250 {
+            match rng.below(4) {
+                0 => {
+                    let Some(slot) =
+                        (0..batch).find(|&s| live[s].is_none())
+                    else {
+                        continue;
+                    };
+                    let prompt = 1 + rng.below(smax);
+                    let reserve = (prompt + rng.below(smax)).min(smax);
+                    // candidate shared prefix: a published chain trimmed
+                    // to still-shareable pages, capped one block below
+                    // the prompt's coverage (full-page-only sharing)
+                    let mut shared: Vec<u32> = Vec::new();
+                    if !published.is_empty() && rng.chance(0.7) {
+                        let chain = &published[rng.below(published.len())];
+                        let cap = (prompt - 1) / page_size;
+                        for &pg in chain.iter().take(cap) {
+                            if p.page_is_shareable(pg) {
+                                shared.push(pg);
+                            } else {
+                                break;
+                            }
+                        }
+                    }
+                    if p.can_admit_shared(reserve, &shared) {
+                        p.admit_shared(slot, &shared, prompt, reserve)
+                            .unwrap();
+                        live[slot] = Some(reserve);
+                        let full = prompt / page_size;
+                        p.publish_prefix(slot, full).unwrap();
+                        if full > 0 {
+                            published
+                                .push(p.block_table(slot)[..full].to_vec());
+                        }
+                    } else {
+                        assert!(
+                            p.admit_shared(slot, &shared, prompt, reserve)
+                                .is_err(),
+                            "admit past can_admit_shared must fail \
+                             (case {case} op {op})"
+                        );
+                    }
+                }
+                1 => {
+                    let slots: Vec<usize> =
+                        (0..batch).filter(|&s| live[s].is_some()).collect();
+                    if let Some(&slot) =
+                        slots.get(rng.below(slots.len().max(1)))
+                    {
+                        let reserve = live[slot].unwrap();
+                        // growth inside the reservation must never fail,
+                        // shared prefix mapped or not
+                        p.grow(slot, rng.below(reserve)).unwrap();
+                    }
+                }
+                2 => {
+                    let slots: Vec<usize> =
+                        (0..batch).filter(|&s| live[s].is_some()).collect();
+                    if let Some(&slot) =
+                        slots.get(rng.below(slots.len().max(1)))
+                    {
+                        p.release(slot);
+                        live[slot] = None;
+                    }
+                }
+                _ => {
+                    // the engine drains evictions every admission/step
+                    p.take_evicted();
+                }
+            }
+            // refcount == number of referencing block tables, per page
+            let mut refs = vec![0u32; n_pages];
+            let mut total_blocks = 0usize;
+            for s in 0..batch {
+                if live[s].is_none() {
+                    assert!(p.block_table(s).is_empty());
+                }
+                for &pg in p.block_table(s) {
+                    assert!((pg as usize) < n_pages);
+                    refs[pg as usize] += 1;
+                }
+                total_blocks += p.block_table(s).len();
+            }
+            for pg in 0..n_pages as u32 {
+                assert_eq!(
+                    p.refs(pg),
+                    refs[pg as usize],
+                    "page {pg} refcount != referencing tables (case {case})"
+                );
+            }
+            // occupancy: distinct pages across tables, i.e. the sum of
+            // table lengths minus the sharing overlap
+            let distinct =
+                refs.iter().filter(|&&c| c > 0).count();
+            let overlap: usize = refs
+                .iter()
+                .map(|&c| (c as usize).saturating_sub(1))
+                .sum();
+            assert_eq!(p.used_pages(), distinct);
+            assert_eq!(p.used_pages(), total_blocks - overlap);
+            assert_eq!(
+                p.used_pages() + p.free_pages() + p.cached_pages(),
+                n_pages,
+                "states must partition the pool (case {case})"
+            );
+            assert!(p.hwm() >= p.used_pages());
+        }
+        // drain: every slot released, cached LRU evicted -> fresh pool
+        for s in 0..batch {
+            p.release(s);
+        }
+        assert_eq!(p.used_pages(), 0);
+        p.evict_all_cached();
+        assert_eq!(p.free_pages(), n_pages);
+        assert_eq!(p.cached_pages(), 0);
+    }
+}
+
+#[test]
 fn prop_percentiles_ordered() {
     check(
         "percentile-order",
