@@ -19,9 +19,12 @@ verify: build test fmt clippy
 
 ## tier-1 gate on the vendored no-op XLA shim (no libxla required);
 ## integration tests self-skip, host-only unit tests all run — including
-## the pager/prefixcache/batcher suites and the quant-cache suite
+## the pager/prefixcache/batcher suites, the quant-cache suite
 ## (quant::kvcache, the dtype-dispatched splice_kv and the int8
-## scatter/splice parity tests in coordinator::engine). Runs the same
+## scatter/splice parity tests in coordinator::engine), and the
+## iteration-level scheduler suite (coordinator::scheduler budget/chunk
+## math, batcher take_chunk/requeue_front, prop_scheduler_invariants,
+## benchsupport::max_batch_tokens_env_contract). Runs the same
 ## test + fmt + clippy trio CI's blocking tier1-stub job runs.
 verify-stub:
 	$(MAKE) verify TIER=stub CARGOFLAGS="--no-default-features --features stub-xla"

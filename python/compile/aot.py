@@ -249,6 +249,10 @@ def validate_page_geometry(page_size, kv_pages, smax, size):
 def export_serving(ex, cfg, scheme_tag, batch, prefill_seqs, smax,
                    cache_schemes=("f32",), kv_layouts=("static",),
                    page_size=16, n_pages=0, prefix_cache=True):
+    # `prefix_cache` is accepted for call-site compatibility but no
+    # longer gates anything: suffix graphs double as the scheduler's
+    # chunked-prefill kernels, so every paged bucket exports them.
+    _ = prefix_cache
     scheme = QuantScheme.parse(scheme_tag)
     params, _, _ = serving_args(cfg, scheme, batch, 8)
     cache_args = _cache_arg_specs(cfg, batch, smax, n_pages, page_size)
@@ -318,11 +322,13 @@ def export_serving(ex, cfg, scheme_tag, batch, prefill_seqs, smax,
                     meta,
                     donate={i + 1: n for i, n in enumerate(cnames)},
                 )
-                # prefix-cache admission: suffix-only prefill at a
-                # per-row start offset, attending through a full-window
-                # block table that maps the shared prefix pages. Paged
-                # only — the static layout has no pages to share.
-                if ltag != "paged" or not prefix_cache:
+                # suffix admission: prefill at a per-row start offset,
+                # attending through a full-window block table. Paged
+                # only — the static layout has no pages to address. The
+                # same graphs serve prefix-cache suffix prefill AND the
+                # scheduler's chunked prefill, so they export for every
+                # paged bucket regardless of --no-prefix-cache.
+                if ltag != "paged":
                     continue
                 window_bt = jax.ShapeDtypeStruct(
                     (batch, smax // page_size), jnp.int32
@@ -547,9 +553,11 @@ def main():
                          "floor one full-context reservation)")
     ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
                     default=True,
-                    help="export admit_suffix artifacts (suffix-only "
-                         "prefill over shared prefix pages) alongside "
-                         "every paged admit bucket")
+                    help="accepted for compatibility; admit_suffix "
+                         "artifacts now export alongside every paged "
+                         "admit bucket unconditionally — the scheduler's "
+                         "chunked prefill needs them even when prefix "
+                         "sharing is disabled at serve time")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--train-batch", type=int, default=4)
     ap.add_argument("--train-seq", type=int, default=64)

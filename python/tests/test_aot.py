@@ -23,6 +23,9 @@ def exported(tmp_path_factory):
             "--batch", "2", "--train-batch", "2", "--train-seq", "16",
             "--prefill-seqs", "16", "--kv-cache", "f32,int8",
             "--kv-layout", "static,paged", "--page-size", "8",
+            # suffix graphs must export even with prefix sharing off:
+            # the scheduler's chunked prefill reuses them
+            "--no-prefix-cache",
             "--no-fig3",
         ],
         cwd=ROOT, capture_output=True, text=True, timeout=560,
@@ -210,7 +213,10 @@ def test_admit_suffix_artifact_contract(exported):
     per cache scheme: trailing inputs (tokens, lens, start_lens,
     block_tables) with a FULL-WINDOW block table (smax/page_size
     blocks, not the admit bucket's ceil(seq/ps)), same cache block and
-    outputs as the admit it shadows."""
+    outputs as the admit it shadows. The fixture exports with
+    --no-prefix-cache, pinning that suffix graphs are unconditional:
+    the iteration-level scheduler's chunked prefill depends on them
+    even when prefix sharing is disabled."""
     _, manifest = exported
     suffixes = {
         (a["model"], a.get("scheme"), a["seq"], a.get("cache", "f32")): a

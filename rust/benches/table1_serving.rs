@@ -13,9 +13,43 @@
 
 use ao::benchsupport as bs;
 use ao::coordinator::metrics::fmt_bytes;
+use ao::coordinator::metrics::MetricsCollector;
 use ao::data::workload::WorkloadSpec;
 use ao::perfmodel;
 use ao::runtime::Runtime;
+use ao::util::json::{self, Value};
+
+/// One BENCH_serving.json entry: the diffable numbers for one serving
+/// run (the ROADMAP CI item wants the perf trajectory persisted, not
+/// scraped out of CI logs).
+fn bench_json_entry(label: &str, m: &MetricsCollector) -> Value {
+    let lat = |s: ao::util::stats::Summary| {
+        json::obj(vec![
+            ("mean_ms", json::num(s.mean * 1e3)),
+            ("p50_ms", json::num(s.p50 * 1e3)),
+            ("p95_ms", json::num(s.p95 * 1e3)),
+            ("p99_ms", json::num(s.p99 * 1e3)),
+        ])
+    };
+    json::obj(vec![
+        ("label", json::s(label)),
+        ("kv_cache", json::s(&m.cache_scheme)),
+        ("kv_layout", json::s(&m.kv_layout)),
+        ("output_tok_per_s", json::num(m.output_tok_per_s())),
+        ("cache_resident_bytes", json::num(m.cache_resident_bytes as f64)),
+        ("ttft", lat(m.ttft())),
+        ("tpot", lat(m.tpot())),
+        ("itl", lat(m.itl())),
+        ("queue_wait", lat(m.queue_wait())),
+        ("sched_enabled", Value::Bool(m.sched_enabled)),
+        ("sched_budget", json::num(m.sched_budget as f64)),
+        ("sched_steps", json::num(m.sched_steps as f64)),
+        ("sched_chunks", json::num(m.sched_chunks as f64)),
+        ("sched_mixed_steps", json::num(m.sched_mixed_steps as f64)),
+        ("sched_stall_steps", json::num(m.sched_stall_steps as f64)),
+        ("sched_preemptions", json::num(m.sched_preemptions as f64)),
+    ])
+}
 
 fn main() -> anyhow::Result<()> {
     ao::util::log::init();
@@ -48,10 +82,13 @@ fn main() -> anyhow::Result<()> {
         "Output tok/s",
         "TPOT (ms)",
         "ITL (ms)",
-        "TTFT (ms)",
+        "ITL p50/p95/p99",
+        "TTFT p50/p95",
+        "Queue p95 (ms)",
     ]);
     let mut baseline: Option<(f64, f64, f64)> = None;
     let mut xfer_lines = Vec::new();
+    let mut bench_entries: Vec<Value> = Vec::new();
     for scheme in ["f32", "fp8dq_tensor", "fp8dq_row"] {
         let ckpt = if scheme == "f32" {
             master.clone()
@@ -91,6 +128,17 @@ fn main() -> anyhow::Result<()> {
         let tput = m.output_tok_per_s();
         let tpot = m.tpot().mean * 1e3;
         let itl = m.itl().mean * 1e3;
+        let itl_s = m.itl();
+        let ttft_s = m.ttft();
+        let pct = format!(
+            "{:.2}/{:.2}/{:.2}",
+            itl_s.p50 * 1e3,
+            itl_s.p95 * 1e3,
+            itl_s.p99 * 1e3
+        );
+        let ttft_pct =
+            format!("{:.1}/{:.1}", ttft_s.p50 * 1e3, ttft_s.p95 * 1e3);
+        let queue = format!("{:.2}", m.queue_wait().p95 * 1e3);
         let label = if scheme == "f32" { "None (BF16)" } else { scheme };
         let rel = |v: f64, b: f64, inv: bool| {
             let d = if inv {
@@ -108,7 +156,9 @@ fn main() -> anyhow::Result<()> {
                     format!("{tput:.1} (+0%)"),
                     format!("{tpot:.2} (+0%)"),
                     format!("{itl:.2} (+0%)"),
-                    format!("{:.1}", m.ttft().mean * 1e3),
+                    pct,
+                    ttft_pct,
+                    queue,
                 ]);
             }
             Some((bt, bp, bi)) => table.row(vec![
@@ -116,9 +166,12 @@ fn main() -> anyhow::Result<()> {
                 format!("{tput:.1} {}", rel(tput, bt, false)),
                 format!("{tpot:.2} {}", rel(tpot, bp, true)),
                 format!("{itl:.2} {}", rel(itl, bi, true)),
-                format!("{:.1}", m.ttft().mean * 1e3),
+                pct,
+                ttft_pct,
+                queue,
             ]),
         }
+        bench_entries.push(bench_json_entry(&format!("quant:{label}"), &m));
     }
     println!("measured (CPU, emulated FP8 — quant math adds ALU work):");
     table.print();
@@ -244,7 +297,99 @@ fn main() -> anyhow::Result<()> {
                 on.pages_hwm,
             );
         }
+        for (on, m) in &rows {
+            bench_entries.push(bench_json_entry(
+                &format!("prefix:{}", if *on { "on" } else { "off" }),
+                m,
+            ));
+        }
     }
+
+    // Continuous-batching scenario: a long-prompt burst served by the
+    // legacy burst-FCFS admit/decode barrier vs the iteration-level
+    // scheduler (AO_MAX_BATCH_TOKENS-style budget, here A/B'd
+    // explicitly). With the budget on, prefill is spent in chunks
+    // alongside the decode rows — already-running decoders keep
+    // emitting every step instead of stalling behind whole-prompt
+    // admissions, which is where the inter-token p95 moves.
+    {
+        println!(
+            "\ncontinuous-batching scenario (scheduler off vs on, \
+             budget=48 tokens/step):"
+        );
+        let burst_spec = WorkloadSpec {
+            n_requests,
+            max_prompt_tokens: 96,
+            max_output_tokens: 32,
+            ..Default::default()
+        };
+        let mut rows = Vec::new();
+        for budget in [None, Some(48usize)] {
+            let m = bs::serve_workload_sched(
+                "small", "f32", &master, &burst_spec, false, budget,
+            )?;
+            rows.push((budget, m));
+        }
+        let mut t = bs::Table::new(&[
+            "Scheduler",
+            "Output tok/s",
+            "ITL p95 (ms)",
+            "TTFT p95 (ms)",
+            "Queue p95 (ms)",
+            "Chunks",
+            "Mixed steps",
+            "Stalls",
+            "Preempt",
+        ]);
+        for (budget, m) in &rows {
+            t.row(vec![
+                match budget {
+                    None => "off (burst-FCFS)".into(),
+                    Some(b) => format!("on ({b} tok)"),
+                },
+                format!("{:.1}", m.output_tok_per_s()),
+                format!("{:.2}", m.itl().p95 * 1e3),
+                format!("{:.1}", m.ttft().p95 * 1e3),
+                format!("{:.2}", m.queue_wait().p95 * 1e3),
+                format!("{}", m.sched_chunks),
+                format!("{}", m.sched_mixed_steps),
+                format!("{}", m.sched_stall_steps),
+                format!("{}", m.sched_preemptions),
+            ]);
+        }
+        t.print();
+        if let [(_, off), (_, on)] = &rows[..] {
+            println!("  {}", on.sched_field());
+            println!(
+                "  long-prompt burst ITL p95: {:.2} ms (burst-FCFS) -> \
+                 {:.2} ms (scheduled)",
+                off.itl().p95 * 1e3,
+                on.itl().p95 * 1e3,
+            );
+        }
+        for (budget, m) in &rows {
+            bench_entries.push(bench_json_entry(
+                &format!(
+                    "sched:{}",
+                    if budget.is_some() { "on" } else { "off" }
+                ),
+                m,
+            ));
+        }
+    }
+
+    // Persist the diffable perf trajectory (ROADMAP CI item): one JSON
+    // file, one entry per run above, latency percentiles included.
+    let n_runs = bench_entries.len();
+    let bench_json = json::obj(vec![
+        ("bench", json::s("table1_serving")),
+        ("model", json::s("small")),
+        ("n_requests", json::num(n_requests as f64)),
+        ("runs", Value::Arr(bench_entries)),
+    ]);
+    let json_path = std::path::Path::new("BENCH_serving.json");
+    std::fs::write(json_path, format!("{}\n", bench_json.to_string()))?;
+    println!("\nwrote {} ({n_runs} runs)", json_path.display());
 
     // H100 projection: decode GEMVs are memory-bound; fp8 halves the weight
     // bytes streamed per token. Paper-scale dims (Llama3.1-8B, batch-1

@@ -133,6 +133,36 @@ pub fn bench_prefix_cache() -> Result<bool> {
     prefix_cache_from(std::env::var("AO_PREFIX_CACHE").ok().as_deref())
 }
 
+/// Parse an optional AO_MAX_BATCH_TOKENS value (None/"" -> scheduler
+/// off, i.e. the legacy burst-FCFS admit/decode barrier). Any other
+/// value must be a positive integer token budget.
+pub fn max_batch_tokens_from(var: Option<&str>) -> Result<Option<usize>> {
+    match var {
+        None | Some("") => Ok(None),
+        Some(v) => {
+            let n: usize = v.parse().map_err(|_| {
+                anyhow::anyhow!(
+                    "AO_MAX_BATCH_TOKENS: '{v}' is not a positive integer \
+                     token budget (unset or empty disables the scheduler)"
+                )
+            })?;
+            if n == 0 {
+                anyhow::bail!(
+                    "AO_MAX_BATCH_TOKENS: 0 is not a valid budget (unset \
+                     or empty disables the scheduler)"
+                );
+            }
+            Ok(Some(n))
+        }
+    }
+}
+
+/// Iteration-level scheduler budget benches serve with:
+/// AO_MAX_BATCH_TOKENS (off default).
+pub fn bench_max_batch_tokens() -> Result<Option<usize>> {
+    max_batch_tokens_from(std::env::var("AO_MAX_BATCH_TOKENS").ok().as_deref())
+}
+
 /// Run a full serving workload in-process; returns engine metrics
 /// (including host↔device transfer bytes — set AO_BENCH_REPORT=1 to
 /// print the full engine report line per run).
@@ -154,6 +184,27 @@ pub fn serve_workload_with(
     spec: &WorkloadSpec,
     prefix_cache: bool,
 ) -> Result<MetricsCollector> {
+    serve_workload_sched(
+        model,
+        scheme,
+        ckpt_path,
+        spec,
+        prefix_cache,
+        bench_max_batch_tokens()?,
+    )
+}
+
+/// `serve_workload_with` with an explicit scheduler budget (the table1
+/// continuous-batching scenario A/Bs scheduler on vs off in one
+/// process, where the env toggle cannot vary per run).
+pub fn serve_workload_sched(
+    model: &str,
+    scheme: &str,
+    ckpt_path: &Path,
+    spec: &WorkloadSpec,
+    prefix_cache: bool,
+    max_batch_tokens: Option<usize>,
+) -> Result<MetricsCollector> {
     let reqs = workload::generate(spec);
     let tok = Tokenizer::byte_level();
     let (handle, join) = engine::spawn(EngineConfig {
@@ -172,6 +223,9 @@ pub fn serve_workload_with(
             .map_or(false, |v| v == "1"),
         // AO_PREFIX_CACHE=0 A/Bs prefix sharing under the paged layout
         prefix_cache,
+        // AO_MAX_BATCH_TOKENS=<budget> turns on the iteration-level
+        // scheduler (continuous batching + chunked prefill)
+        max_batch_tokens,
     });
     let mut rxs = Vec::new();
     for r in &reqs {
@@ -184,6 +238,8 @@ pub fn serve_workload_with(
             seed: r.id,
             tx,
             submitted_at: Instant::now(),
+            enqueued_at: None,
+            resume: None,
         })?;
         rxs.push(rx);
     }
@@ -311,5 +367,20 @@ mod tests {
         let e = format!("{:#}", kv_layout_from(Some("vpaged")).unwrap_err());
         assert!(e.contains("AO_KV_LAYOUT"), "{e}");
         assert!(e.contains("valid values: static, paged"), "{e}");
+    }
+
+    #[test]
+    fn max_batch_tokens_env_contract() {
+        assert_eq!(max_batch_tokens_from(None).unwrap(), None);
+        assert_eq!(max_batch_tokens_from(Some("")).unwrap(), None);
+        assert_eq!(max_batch_tokens_from(Some("24")).unwrap(), Some(24));
+        let e = format!(
+            "{:#}",
+            max_batch_tokens_from(Some("lots")).unwrap_err()
+        );
+        assert!(e.contains("AO_MAX_BATCH_TOKENS"), "{e}");
+        let e =
+            format!("{:#}", max_batch_tokens_from(Some("0")).unwrap_err());
+        assert!(e.contains("AO_MAX_BATCH_TOKENS"), "{e}");
     }
 }

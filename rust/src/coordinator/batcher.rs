@@ -13,6 +13,7 @@
 
 use super::request::SubmitReq;
 use std::collections::VecDeque;
+use std::time::Instant;
 
 /// Outcome of one admission attempt.
 pub enum PrefillTake {
@@ -23,6 +24,19 @@ pub enum PrefillTake {
     /// in the same iteration.
     HeadRejected,
     /// Queue empty or no free slots: nothing to admit this iteration.
+    Idle,
+}
+
+/// Outcome of one head take under the iteration-level scheduler, which
+/// admits requests one at a time (each becomes its own stream of prefill
+/// chunks) instead of bucket-shared groups.
+pub enum ChunkTake {
+    /// The FCFS head, validated against `max_prompt`.
+    Head(Box<SubmitReq>),
+    /// The head was invalid (empty, or longer than `max_prompt`): popped
+    /// and answered with an error event. Retry in the same iteration.
+    HeadRejected,
+    /// Queue empty.
     Idle,
 }
 
@@ -38,7 +52,10 @@ impl Batcher {
         Batcher { queue: VecDeque::new(), buckets }
     }
 
-    pub fn push(&mut self, req: SubmitReq) {
+    pub fn push(&mut self, mut req: SubmitReq) {
+        // first enqueue stamps the queue-wait clock; a requeued request
+        // (page backpressure, preemption) keeps its original stamp
+        req.enqueued_at.get_or_insert_with(Instant::now);
         self.queue.push_back(req);
     }
 
@@ -69,6 +86,20 @@ impl Batcher {
     /// that leaves it shorter than a stale length suggested) degrades to
     /// `Idle` instead of panicking the serving loop.
     pub fn take_prefill_group(&mut self, n_free: usize) -> PrefillTake {
+        self.take_prefill_group_budgeted(n_free, usize::MAX)
+    }
+
+    /// `take_prefill_group` under a token budget: the head is always
+    /// taken (the scheduler's budget floor guarantees the head bucket
+    /// fits a fresh step), followers join only while the group's summed
+    /// prompt lengths stay within `token_budget`. This is the static
+    /// layout's scheduler admission — whole prompts, no chunking, FCFS
+    /// within the shared bucket.
+    pub fn take_prefill_group_budgeted(
+        &mut self,
+        n_free: usize,
+        token_budget: usize,
+    ) -> PrefillTake {
         if n_free == 0 {
             return PrefillTake::Idle;
         }
@@ -102,21 +133,65 @@ impl Batcher {
             return PrefillTake::HeadRejected;
         };
         let mut group = Vec::new();
+        let mut spent = 0usize;
         while group.len() < n_free {
             // empty prompts never join a group (bucket_for(0) matches
             // the smallest bucket): left at the front, the next
-            // admission attempt rejects them through the head path
+            // admission attempt rejects them through the head path.
+            // The head is exempt from the budget; followers join only
+            // while the summed prompt lengths fit it.
             let joins = self.queue.front().is_some_and(|r| {
                 !r.prompt_tokens.is_empty()
                     && self.bucket_for(r.prompt_tokens.len()) == Some(bucket)
+                    && (group.is_empty()
+                        || spent.saturating_add(r.prompt_tokens.len())
+                            <= token_budget)
             });
             if !joins {
                 break;
             }
             let Some(req) = self.queue.pop_front() else { break };
+            spent = spent.saturating_add(req.prompt_tokens.len());
             group.push(req);
         }
         PrefillTake::Group { bucket, group }
+    }
+
+    /// Pop the FCFS head for the iteration-level scheduler, validating
+    /// it against `max_prompt` (the scheduler chunks prompts up to the
+    /// full context window, so the cap is `smax`, not the largest
+    /// prefill bucket). Resume requests (preemption recompute) bypass
+    /// the cap: their original admission already proved the reservation
+    /// fits, and their resumed prompt carries emitted tokens on top of
+    /// the original prompt.
+    pub fn take_chunk(&mut self, max_prompt: usize) -> ChunkTake {
+        let Some(head) = self.queue.front() else {
+            return ChunkTake::Idle;
+        };
+        let head_len = head.prompt_tokens.len();
+        if head_len == 0 {
+            let Some(req) = self.queue.pop_front() else {
+                return ChunkTake::Idle;
+            };
+            let _ = req.tx.send(super::request::Event::Error(
+                "empty prompt: prefill needs at least one token".into(),
+            ));
+            return ChunkTake::HeadRejected;
+        }
+        if head_len > max_prompt && head.resume.is_none() {
+            let Some(req) = self.queue.pop_front() else {
+                return ChunkTake::Idle;
+            };
+            let _ = req.tx.send(super::request::Event::Error(format!(
+                "prompt of {head_len} tokens exceeds the context window \
+                 ({max_prompt})",
+            )));
+            return ChunkTake::HeadRejected;
+        }
+        match self.queue.pop_front() {
+            Some(req) => ChunkTake::Head(Box::new(req)),
+            None => ChunkTake::Idle,
+        }
     }
 }
 
@@ -137,6 +212,8 @@ mod tests {
                 seed: 0,
                 tx,
                 submitted_at: Instant::now(),
+                enqueued_at: None,
+                resume: None,
             },
             rx,
         )
@@ -323,6 +400,107 @@ mod tests {
         // the follower is admitted on the immediate retry
         let (_, group) = expect_group(b.take_prefill_group(4));
         assert_eq!(group.len(), 1);
+    }
+
+    #[test]
+    fn push_stamps_enqueue_instant_once() {
+        let mut b = Batcher::new(vec![32]);
+        let (r, _rx) = req(8);
+        assert!(r.enqueued_at.is_none());
+        b.push(r);
+        let stamp = b.queue[0].enqueued_at.expect("push stamps enqueued_at");
+        // a requeue (backpressure / preemption) must keep the original
+        // stamp so queue-wait is metered from first enqueue
+        let head = b.queue.pop_front().unwrap();
+        b.requeue_front(vec![head]);
+        assert_eq!(b.queue[0].enqueued_at, Some(stamp));
+        let popped = b.queue.pop_front().unwrap();
+        b.push(popped);
+        assert_eq!(b.queue[0].enqueued_at, Some(stamp));
+    }
+
+    #[test]
+    fn budgeted_group_caps_followers_not_head() {
+        let mut b = Batcher::new(vec![32]);
+        let mut rxs = Vec::new();
+        for _ in 0..4 {
+            let (r, rx) = req(10);
+            b.push(r);
+            rxs.push(rx);
+        }
+        // head (10 tokens) exceeds the 8-token budget on its own but is
+        // taken anyway; no follower fits after it
+        let (_, group) = expect_group(b.take_prefill_group_budgeted(4, 8));
+        assert_eq!(group.len(), 1, "head exempt, followers budget-gated");
+        // 25-token budget: head + one follower (20 <= 25), not two (30)
+        let (_, group2) = expect_group(b.take_prefill_group_budgeted(4, 25));
+        assert_eq!(group2.len(), 2);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn unbudgeted_group_matches_legacy() {
+        let mut b = Batcher::new(vec![32]);
+        for _ in 0..3 {
+            let (r, rx) = req(10);
+            std::mem::forget(rx);
+            b.push(r);
+        }
+        let (_, group) = expect_group(b.take_prefill_group(8));
+        assert_eq!(group.len(), 3, "usize::MAX budget never gates");
+    }
+
+    #[test]
+    fn take_chunk_pops_fcfs_head() {
+        let mut b = Batcher::new(vec![32]);
+        let mut rxs = Vec::new();
+        for (i, len) in [4usize, 100, 6].iter().enumerate() {
+            let (mut r, rx) = req(*len);
+            r.id = i as u64;
+            b.push(r);
+            rxs.push(rx);
+        }
+        // scheduler admits beyond the largest bucket, up to max_prompt
+        match b.take_chunk(128) {
+            ChunkTake::Head(r) => assert_eq!(r.id, 0),
+            _ => panic!("expected head"),
+        }
+        match b.take_chunk(128) {
+            ChunkTake::Head(r) => {
+                assert_eq!(r.id, 1);
+                assert_eq!(r.prompt_tokens.len(), 100);
+            }
+            _ => panic!("expected 100-token head: scheduler chunks it"),
+        }
+        match b.take_chunk(128) {
+            ChunkTake::Head(r) => assert_eq!(r.id, 2),
+            _ => panic!("expected head"),
+        }
+        assert!(matches!(b.take_chunk(128), ChunkTake::Idle));
+    }
+
+    #[test]
+    fn take_chunk_rejects_empty_and_oversized() {
+        let mut b = Batcher::new(vec![32]);
+        let (bad0, rx0) = req(0);
+        let (big, rx1) = req(200);
+        let (ok, _k) = req(8);
+        b.push(bad0);
+        b.push(big);
+        b.push(ok);
+        assert!(matches!(b.take_chunk(128), ChunkTake::HeadRejected));
+        assert!(matches!(
+            rx0.try_recv().unwrap(),
+            super::super::request::Event::Error(_)
+        ));
+        assert!(matches!(b.take_chunk(128), ChunkTake::HeadRejected));
+        match rx1.try_recv().unwrap() {
+            super::super::request::Event::Error(e) => {
+                assert!(e.contains("context window"), "{e}")
+            }
+            _ => panic!("expected error event"),
+        }
+        assert!(matches!(b.take_chunk(128), ChunkTake::Head(_)));
     }
 
     #[test]

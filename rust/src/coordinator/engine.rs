@@ -84,12 +84,18 @@
 //! tokens_saved]` in the report accounts for the reuse; see
 //! docs/prefix_cache.md.
 
-use super::batcher::{Batcher, PrefillTake};
-use super::kvslots::{Slot, SlotTable};
+use super::batcher::{Batcher, ChunkTake, PrefillTake};
+use super::kvslots::{Slot, SlotPhase, SlotTable};
 use super::metrics::MetricsCollector;
 use super::pager::Pager;
 use super::prefixcache::{identity_salt, PrefixIndex};
-use super::request::{Event, FinishInfo, FinishReason, SubmitReq};
+use super::request::{
+    Event, FinishInfo, FinishReason, ResumeState, SubmitReq,
+};
+use super::scheduler::{
+    chunk_len, effective_budget, pick_preemption_victim, suffix_bucket,
+    StepBudget,
+};
 use crate::ckpt::Checkpoint;
 use crate::runtime::artifact::{ArtifactSpec, IoSpec};
 use crate::runtime::{OwnedBuffer, Runtime};
@@ -193,6 +199,16 @@ pub struct EngineConfig {
     /// exported (CLI `ao serve --no-prefix-cache` disables, bench env
     /// AO_PREFIX_CACHE=0).
     pub prefix_cache: bool,
+    /// iteration-level scheduler (CLI `--max-batch-tokens`, bench env
+    /// AO_MAX_BATCH_TOKENS): per-step token budget mixing decode rows
+    /// with prefill chunks, so long prompts are admitted incrementally
+    /// over the `admit_suffix_*` graphs instead of stalling the decode
+    /// batch behind a burst. None = the legacy burst-FCFS
+    /// admit-then-decode barrier. The requested budget is floored so a
+    /// step can always run the full decode batch plus one prefill unit
+    /// (one token under the paged layout; the largest prefill bucket
+    /// under static, where prompts are admitted whole).
+    pub max_batch_tokens: Option<usize>,
 }
 
 pub enum Command {
@@ -250,6 +266,43 @@ struct ActiveRequest {
     first_token_at: Option<Instant>,
     last_token_at: Option<Instant>,
     token_gaps: Vec<f64>,
+}
+
+/// Iteration-level scheduler state (present exactly when
+/// `EngineConfig::max_batch_tokens` is set).
+#[derive(Debug, Clone, Copy)]
+struct SchedState {
+    /// effective per-step token budget (post-floor)
+    budget: usize,
+    /// largest prefill chunk one call can carry: the widest exported
+    /// admit_suffix bucket (paged; static never chunks)
+    chunk_cap: usize,
+}
+
+/// Per-slot context the scheduler keeps beside the `Slot`: what chunked
+/// prefill still needs (the prompt), what preemption needs to rebuild
+/// (seed, emitted tokens, original prompt length), and what FCFS
+/// preemption-victim selection orders by (`admit_seq`). Only populated
+/// in scheduler mode; legacy burst admission leaves every entry None.
+struct SlotCtx {
+    /// the prompt being prefilled (for a resumed request this already
+    /// includes the previously emitted tokens, minus the pending one)
+    prompt: Vec<u32>,
+    /// the request's user seed (the slot only carries the derived RNG
+    /// state; recompute needs the original to rebuild the stream)
+    seed: u64,
+    /// admission sequence number — preemption picks the youngest victim
+    admit_seq: u64,
+    /// prompt length of the ORIGINAL submission, for metrics/FinishInfo
+    /// (a resumed slot's `n_prompt` counts re-prefilled output tokens)
+    n_prompt_orig: usize,
+    /// tokens streamed since THIS admission; the last entry is always
+    /// the pending decode input, so a preempted slot resumes as
+    /// `prompt ++ emitted[..len-1]` with `emitted[len-1]` pending
+    emitted: Vec<u32>,
+    /// present until the final prefill chunk of a preempted request
+    /// lands, at which point generation state is restored from it
+    resume: Option<ResumeState>,
 }
 
 /// The device-resident KV cache as the artifacts bind it: buffers in
@@ -362,6 +415,15 @@ pub struct Engine {
     requests: Vec<Option<ActiveRequest>>,
     /// token sampled last step per slot, to be consumed by the next decode
     pending: Vec<i32>,
+    /// iteration-level scheduler — None = legacy burst-FCFS serve loop
+    sched: Option<SchedState>,
+    /// scheduler-mode per-slot context (always None per entry otherwise)
+    slot_ctx: Vec<Option<SlotCtx>>,
+    /// slots currently `Prefilling`, in admission order: chunk budget is
+    /// handed out FCFS within the class
+    prefill_order: Vec<usize>,
+    /// monotonically increasing admission counter (preemption seniority)
+    admit_seq: u64,
     pub metrics: MetricsCollector,
     _rng: Rng,
     /// non-XLA engine overhead accounting (perf)
@@ -565,13 +627,16 @@ impl Engine {
             }
         }
 
-        // Prefix-cache suffix-prefill artifacts (paged only). A broken
-        // suffix entry would prefill at the wrong position offset or
-        // attend through the wrong table, so validation failures are
-        // fatal; a missing artifact merely keeps that bucket on
-        // whole-prompt admission.
+        // Suffix-prefill artifacts (paged only): offset prefill serves
+        // BOTH the prefix cache and the iteration-level scheduler's
+        // chunked prefill, so discovery no longer depends on
+        // `prefix_cache`. A broken suffix entry would prefill at the
+        // wrong position offset or attend through the wrong table, so
+        // validation failures are fatal; a missing artifact merely keeps
+        // that bucket on whole-prompt admission (and rules out
+        // `--max-batch-tokens`).
         let mut admit_suffix_names: Vec<(usize, String)> = Vec::new();
-        if cfg.kv_layout == KvLayout::Paged && cfg.prefix_cache {
+        if cfg.kv_layout == KvLayout::Paged {
             let scheme = Some(cfg.scheme.as_str());
             for spec in
                 runtime.manifest.find("admit_suffix", &cfg.model, scheme)
@@ -586,7 +651,7 @@ impl Engine {
                 admit_suffix_names.push((spec.seq, spec.name.clone()));
             }
             admit_suffix_names.sort();
-            if admit_suffix_names.is_empty() {
+            if admit_suffix_names.is_empty() && cfg.prefix_cache {
                 crate::info!(
                     "prefix cache requested but no admit_suffix \
                      artifacts for {}/{} (kv-cache {cache_tag}): every \
@@ -647,7 +712,7 @@ impl Engine {
         // so the index stays off rather than half-on. The salt keys the
         // hash chain to the engine identity.
         let prefix = match &pager {
-            Some(p) if !admit_suffix_names.is_empty() => {
+            Some(p) if cfg.prefix_cache && !admit_suffix_names.is_empty() => {
                 Some(PrefixIndex::new(
                     p.page_size(),
                     identity_salt(
@@ -664,6 +729,53 @@ impl Engine {
             _ => None,
         };
         metrics.prefix_enabled = prefix.is_some();
+
+        // Iteration-level scheduler: floor the requested budget so every
+        // step can run the full decode batch plus one prefill unit (see
+        // scheduler::effective_budget), and pin the chunk cap to the
+        // widest exported suffix graph. Paged chunking rides the
+        // admit_suffix artifacts; without them the scheduler cannot
+        // split a prompt and refuses to start rather than silently
+        // degrading to the burst barrier it exists to replace.
+        let sched = match cfg.max_batch_tokens {
+            None => None,
+            Some(requested) => {
+                let (min_chunk, chunk_cap) = if pager.is_some() {
+                    let cap = admit_suffix_names
+                        .last()
+                        .map(|(s, _)| *s)
+                        .unwrap_or(0);
+                    if cap == 0 {
+                        bail!(
+                            "--max-batch-tokens under the paged layout \
+                             needs admit_suffix artifacts for {}/{} \
+                             (kv-cache {cache_tag}) to chunk prefills — \
+                             re-run `make artifacts`",
+                            cfg.model, cfg.scheme
+                        );
+                    }
+                    (1, cap)
+                } else {
+                    let largest = prefill_names
+                        .last()
+                        .map(|(s, _)| *s)
+                        .unwrap_or(1);
+                    (largest, largest)
+                };
+                let budget = effective_budget(requested, batch, min_chunk);
+                if budget != requested {
+                    crate::info!(
+                        "--max-batch-tokens {requested} floored to \
+                         {budget} (batch {batch} decode rows + one \
+                         {min_chunk}-token prefill unit must always fit \
+                         a step)"
+                    );
+                }
+                metrics.sched_enabled = true;
+                metrics.sched_budget = budget;
+                Some(SchedState { budget, chunk_cap })
+            }
+        };
 
         // surface the untupled-outputs capability up front: when the
         // binding packs tuples, every "device-resident" path below is
@@ -688,6 +800,10 @@ impl Engine {
             batcher: Batcher::new(buckets),
             requests: (0..batch).map(|_| None).collect(),
             pending: vec![0; batch],
+            sched,
+            slot_ctx: (0..batch).map(|_| None).collect(),
+            prefill_order: Vec::new(),
+            admit_seq: 0,
             metrics,
             _rng: Rng::new(0xE1_61_4E),
             overhead_s: 0.0,
@@ -736,12 +852,18 @@ impl Engine {
             {
                 break;
             }
-            // 2. admission via batched prefill (one cache round-trip per
-            //    burst, not per group or per token)
-            self.admit_pending()?;
-            // 3. one decode step over the batch
-            if !self.slots.is_empty() {
-                self.decode_step()?;
+            if self.sched.is_some() {
+                // iteration-level scheduler: one budgeted step mixing
+                // decode rows with prefill chunks
+                self.sched_step()?;
+            } else {
+                // 2. admission via batched prefill (one cache round-trip
+                //    per burst, not per group or per token)
+                self.admit_pending()?;
+                // 3. one decode step over the batch
+                if !self.slots.is_empty() {
+                    self.decode_step()?;
+                }
             }
         }
         self.sync_transfer_metrics();
@@ -944,6 +1066,7 @@ impl Engine {
                 max_new_tokens: req.max_new_tokens,
                 temperature: req.temperature,
                 rng_state: 0,
+                phase: SlotPhase::Decoding,
             };
             let idx = self
                 .slots
@@ -1045,6 +1168,7 @@ impl Engine {
                 max_new_tokens: req.max_new_tokens,
                 temperature: req.temperature,
                 rng_state: 0,
+                phase: SlotPhase::Decoding,
             };
             let idx = self
                 .slots
@@ -1329,6 +1453,7 @@ impl Engine {
                 max_new_tokens: req.max_new_tokens,
                 temperature: req.temperature,
                 rng_state: 0,
+                phase: SlotPhase::Decoding,
             };
             let idx = self
                 .slots
@@ -1395,6 +1520,11 @@ impl Engine {
             return Ok(());
         };
         slot.rng_state = rng.next_u64();
+        // queue wait: first enqueue -> slot claim, metered once per
+        // request (requeues keep the original stamp)
+        if let Some(t) = req.enqueued_at {
+            self.metrics.record_queue_wait(t.elapsed().as_secs_f64());
+        }
 
         let now = Instant::now();
         let active = ActiveRequest {
@@ -1452,6 +1582,8 @@ impl Engine {
             pager.release(idx);
         }
         self.slots.release(idx);
+        self.slot_ctx[idx] = None;
+        self.prefill_order.retain(|&i| i != idx);
         if fail_request(&mut self.requests, idx, why) {
             crate::info!("slot {idx}: {why} — failed the mapped request");
             self.metrics.record_rejected();
@@ -1462,6 +1594,11 @@ impl Engine {
         if let Some(pager) = self.pager.as_mut() {
             pager.release(idx);
         }
+        // scheduler bookkeeping dies with the slot; a resumed slot
+        // reports its ORIGINAL prompt length (`n_prompt_orig`), not the
+        // re-prefilled prompt that includes its own earlier output
+        let ctx = self.slot_ctx[idx].take();
+        self.prefill_order.retain(|&i| i != idx);
         let Some(slot) = self.slots.release(idx) else {
             // finishing an already-vacated slot is a slot-accounting
             // bug; the request (if any is still mapped) gets an error
@@ -1473,6 +1610,8 @@ impl Engine {
             );
             return;
         };
+        let n_prompt =
+            ctx.map(|c| c.n_prompt_orig).unwrap_or(slot.n_prompt);
         if let Some(req) = self.requests[idx].take() {
             let now = Instant::now();
             let ttft = req
@@ -1486,14 +1625,14 @@ impl Engine {
                 req.token_gaps.iter().sum::<f64>() / req.token_gaps.len() as f64
             };
             self.metrics.record_request(
-                slot.n_prompt,
+                n_prompt,
                 slot.n_generated,
                 ttft,
                 &req.token_gaps,
             );
             let _ = req.tx.send(Event::Done(FinishInfo {
                 id: slot.request_id,
-                n_prompt: slot.n_prompt,
+                n_prompt,
                 n_generated: slot.n_generated,
                 ttft_s: ttft,
                 tpot_s: tpot,
@@ -1512,7 +1651,10 @@ impl Engine {
         let b = self.batch;
         let mut tokens = vec![0i32; b];
         let mut pos = vec![0i32; b];
-        let active = self.slots.active_indices();
+        // decode runs only the `Decoding` slots; under the scheduler a
+        // `Prefilling` slot sits out (its block-table row is masked to
+        // holes below). Without the scheduler every live slot decodes.
+        let active = self.slots.decode_indices();
         for &i in &active {
             tokens[i] = self.pending[i];
             // active_indices lists only live slots; a missing one is a
@@ -1542,7 +1684,19 @@ impl Engine {
         ];
         if let Some(pager) = &self.pager {
             let blocks = pager.blocks_per_slot();
-            let bt = pager.fill_block_tables(blocks);
+            // mask non-decoding rows to holes: an idle decode row still
+            // scatters its dummy token at pos 0, and a `Prefilling`
+            // slot's table row would aim that write straight at the
+            // first page of its half-written prompt
+            let keep: Vec<bool> = (0..b)
+                .map(|i| {
+                    self.slots
+                        .get(i)
+                        .map(|s| s.phase == SlotPhase::Decoding)
+                        .unwrap_or(false)
+                })
+                .collect();
+            let bt = pager.fill_block_tables_where(&keep, blocks);
             extra.push(
                 self.runtime
                     .upload(&HostTensor::s32(vec![b, blocks], bt))?,
@@ -1601,12 +1755,605 @@ impl Engine {
                 req.last_token_at = Some(now);
                 let _ = req.tx.send(Event::Token(tok));
             }
+            if let Some(ctx) = self.slot_ctx[i].as_mut() {
+                ctx.emitted.push(tok);
+            }
             self.apply_sampled_token(i, tok)?;
         }
         self.overhead_s += t_overhead.elapsed().as_secs_f64();
         Ok(())
     }
 
+    /// One iteration-level scheduler step (`--max-batch-tokens`): fill
+    /// the token budget with decode rows first (one token each, never
+    /// displaced), then prefill work, then run at most one decode call.
+    /// Dispatches on layout: paged chunks prompts over the admit_suffix
+    /// graphs; static admits whole prompts budget-aware (its prefill
+    /// graphs cannot start mid-prompt).
+    fn sched_step(&mut self) -> Result<()> {
+        if self.pager.is_some() {
+            self.sched_step_paged()
+        } else {
+            self.sched_step_static()
+        }
+    }
+
+    /// Paged scheduler step. Budget order within the prefill class is
+    /// FCFS: in-flight prefills (admission order) continue first, then
+    /// new heads are admitted while budget, slots and pages allow. All
+    /// chunks of a step ride ONE admit_suffix call; the step ends with
+    /// one decode call over every `Decoding` slot.
+    fn sched_step_paged(&mut self) -> Result<()> {
+        let sched = self.sched.expect("sched_step_paged needs scheduler");
+        let xfer0 = self.runtime.transfer_stats();
+        let decode_rows = self.slots.decode_indices();
+        let mut budget = StepBudget::open(sched.budget, decode_rows.len());
+        // page backpressure observed this step (stall accounting must
+        // not count a genuinely capacity-blocked step as a bug)
+        let mut blocked = false;
+        // at most one preemption per step bounds recompute churn
+        let mut preempted = false;
+        // (slot, chunk start offset into its prompt, chunk length)
+        let mut chunk_rows: Vec<(usize, usize, usize)> = Vec::new();
+
+        // 1. continue in-flight prefills, oldest admission first
+        for &idx in self.prefill_order.clone().iter() {
+            if budget.left() == 0 {
+                break;
+            }
+            let Some(slot) = self.slots.get(idx) else { continue };
+            let SlotPhase::Prefilling { done } = slot.phase else {
+                continue;
+            };
+            let take =
+                chunk_len(slot.n_prompt - done, sched.chunk_cap, budget.left());
+            if take == 0 {
+                break;
+            }
+            budget.charge(take);
+            chunk_rows.push((idx, done, take));
+        }
+
+        // 2. admit new heads as their first chunk
+        while budget.left() > 0
+            && self.slots.n_free() > 0
+            && self.batcher.pending() > 0
+        {
+            match self.batcher.take_chunk(self.smax) {
+                ChunkTake::Idle => break,
+                ChunkTake::HeadRejected => {
+                    self.metrics.record_rejected();
+                    continue;
+                }
+                ChunkTake::Head(req) => {
+                    let admitted = self.sched_admit_paged(
+                        *req,
+                        &mut budget,
+                        &mut chunk_rows,
+                        &mut preempted,
+                    )?;
+                    if !admitted {
+                        blocked = true;
+                        break;
+                    }
+                }
+            }
+        }
+
+        // 3. one batched suffix call carries every chunk of the step
+        let n_chunks = chunk_rows.len();
+        if n_chunks > 0 {
+            self.run_suffix_chunks(chunk_rows)?;
+        }
+
+        // 4. step accounting
+        self.metrics.sched_steps += 1;
+        self.metrics.sched_chunks += n_chunks;
+        if n_chunks > 0 && !decode_rows.is_empty() {
+            self.metrics.sched_mixed_steps += 1;
+        }
+        // a decode-capable step that issued no chunk while prefill work
+        // queued — without page backpressure or a full slot table — is
+        // a scheduler bug, and the integration tests assert it stays 0
+        if n_chunks == 0
+            && !decode_rows.is_empty()
+            && !blocked
+            && self.slots.n_free() > 0
+            && self.batcher.pending() > 0
+        {
+            self.metrics.sched_stall_steps += 1;
+        }
+        let xfer1 = self.runtime.transfer_stats();
+        self.metrics.admit_h2d_bytes += xfer1.h2d_bytes - xfer0.h2d_bytes;
+        self.metrics.admit_d2h_bytes += xfer1.d2h_bytes - xfer0.d2h_bytes;
+
+        // 5. one decode step over whatever decodes now (prefill
+        // completions above may have joined; preemption may have left)
+        if !self.slots.decode_indices().is_empty() {
+            self.decode_step()?;
+        }
+        Ok(())
+    }
+
+    /// Admit one FCFS head under the paged scheduler: claim a slot and
+    /// its worst-case page reservation, map any cached prefix pages,
+    /// and push the first prefill chunk. Under pool pressure a fresh
+    /// head may preempt the youngest decoding slot (at most once per
+    /// step; resume heads never preempt — an evict-to-resume cycle
+    /// would livelock). Returns false when the head was requeued for
+    /// backpressure, which ends admission for this step.
+    fn sched_admit_paged(
+        &mut self,
+        mut req: SubmitReq,
+        budget: &mut StepBudget,
+        chunk_rows: &mut Vec<(usize, usize, usize)>,
+        preempted: &mut bool,
+    ) -> Result<bool> {
+        let sched = self.sched.expect("paged scheduler");
+        let ps = self.pager.as_ref().expect("paged scheduler").page_size();
+        let n_prompt = req.prompt_tokens.len();
+        // a resumed prompt re-prefills its emitted tokens, so only the
+        // REMAINING generation budget adds on top — the total matches
+        // the original reservation position for position
+        let want = match &req.resume {
+            Some(res) => reserve_len(
+                n_prompt,
+                req.max_new_tokens.saturating_sub(res.n_emitted) + 1,
+                self.smax,
+            ),
+            None => reserve_len(n_prompt, req.max_new_tokens, self.smax),
+        };
+        // prefix lookup for FRESH prompts only: a resumed prompt embeds
+        // generated tokens and must neither match nor be indexed
+        let looked_up: Option<Vec<u32>> = match (&self.prefix, &req.resume)
+        {
+            (Some(index), None) => {
+                let pager = self.pager.as_ref().expect("paged scheduler");
+                Some(index.lookup(&req.prompt_tokens, |p| {
+                    pager.page_is_shareable(p)
+                }))
+            }
+            _ => None,
+        };
+        let shared: &[u32] = looked_up.as_deref().unwrap_or(&[]);
+        let fits = self
+            .pager
+            .as_ref()
+            .expect("paged scheduler")
+            .can_admit_shared(want, shared);
+        if !fits {
+            // pool pressure: evict the youngest decoding slot — its
+            // published pages park on the cached LRU where this very
+            // admission can re-map them — and retry the check once
+            let mut resume_req: Option<SubmitReq> = None;
+            if req.resume.is_none() && !*preempted {
+                let candidates: Vec<(usize, u64)> = self
+                    .slots
+                    .decode_indices()
+                    .into_iter()
+                    .filter_map(|i| {
+                        self.slot_ctx[i].as_ref().map(|c| (i, c.admit_seq))
+                    })
+                    .collect();
+                if let Some(victim) = pick_preemption_victim(candidates) {
+                    resume_req = Some(self.preempt_slot(victim)?);
+                    *preempted = true;
+                }
+            }
+            let fits_now = resume_req.is_some()
+                && self
+                    .pager
+                    .as_ref()
+                    .expect("paged scheduler")
+                    .can_admit_shared(want, shared);
+            match (fits_now, resume_req) {
+                (true, Some(resume)) => {
+                    // the victim re-enters at the queue head: it is the
+                    // oldest in-flight work and must re-admit first
+                    self.batcher.requeue_front(vec![resume]);
+                }
+                (_, resume) => {
+                    let mut back = Vec::new();
+                    back.extend(resume);
+                    back.push(req);
+                    self.batcher.requeue_front(back);
+                    return Ok(false);
+                }
+            }
+        }
+        let slot = Slot {
+            request_id: req.id,
+            pos: n_prompt,
+            n_prompt,
+            n_generated: 0,
+            max_new_tokens: req.max_new_tokens,
+            temperature: req.temperature,
+            rng_state: 0,
+            phase: SlotPhase::Prefilling { done: shared.len() * ps },
+        };
+        let idx = self
+            .slots
+            .claim(slot)
+            .ok_or_else(|| anyhow!("slot table full during admission"))?;
+        self.pager
+            .as_mut()
+            .expect("paged scheduler")
+            .admit_shared(idx, shared, n_prompt, want)?;
+        self.drain_page_evictions();
+        if looked_up.is_some() {
+            self.metrics.prefix_lookups += 1;
+            if !shared.is_empty() {
+                self.metrics.prefix_hits += 1;
+            }
+        }
+        self.metrics.prefix_pages_shared += shared.len();
+        self.metrics.prefix_tokens_saved += shared.len() * ps;
+        // queue wait = first enqueue -> slot claim, fresh requests only
+        // (a resumed request's wait was metered at its first admission)
+        if req.resume.is_none() {
+            if let Some(t) = req.enqueued_at {
+                self.metrics.record_queue_wait(t.elapsed().as_secs_f64());
+            }
+        }
+        self.admit_seq += 1;
+        let n_prompt_orig = req
+            .resume
+            .as_ref()
+            .map(|r| r.n_prompt_orig)
+            .unwrap_or(n_prompt);
+        let resume = req.resume.take();
+        self.slot_ctx[idx] = Some(SlotCtx {
+            prompt: std::mem::take(&mut req.prompt_tokens),
+            seed: req.seed,
+            admit_seq: self.admit_seq,
+            n_prompt_orig,
+            emitted: Vec::new(),
+            resume,
+        });
+        self.requests[idx] = Some(ActiveRequest {
+            tx: req.tx,
+            submitted_at: req.submitted_at,
+            first_token_at: None,
+            last_token_at: None,
+            token_gaps: Vec::new(),
+        });
+        self.prefill_order.push(idx);
+        // first chunk starts where the shared prefix ends; the index
+        // never serves the full prompt, so at least one token remains
+        let start = shared.len() * ps;
+        let take = chunk_len(n_prompt - start, sched.chunk_cap, budget.left());
+        if take > 0 {
+            budget.charge(take);
+            chunk_rows.push((idx, start, take));
+        }
+        Ok(true)
+    }
+
+    /// Run every prefill chunk of a scheduler step through ONE
+    /// admit_suffix call: row `r` of the token matrix carries
+    /// `chunk_rows[r]`'s slice at its `start_lens` offset, block-table
+    /// row `r` addresses that slot's pages (unused rows are all holes).
+    /// Rows whose chunk completes the prompt sample/restore their first
+    /// decode input from that row of the returned logits — the last
+    /// prompt token's distribution, exactly what whole-prompt admission
+    /// samples from, which is why chunking preserves streams token for
+    /// token.
+    fn run_suffix_chunks(
+        &mut self,
+        chunk_rows: Vec<(usize, usize, usize)>,
+    ) -> Result<()> {
+        let t_overhead = Instant::now();
+        let b = self.batch;
+        let ps = self.pager.as_ref().expect("paged scheduler").page_size();
+        let window = self.smax / ps;
+        let max_take =
+            chunk_rows.iter().map(|&(_, _, t)| t).max().unwrap_or(1);
+        let (sbucket, sname) =
+            suffix_bucket(&self.admit_suffix_names, max_take)
+                .map(|(s, n)| (*s, n.clone()))
+                .ok_or_else(|| {
+                    anyhow!(
+                        "no admit_suffix bucket fits a {max_take}-token \
+                         chunk (chunk_cap must cap at the largest bucket)"
+                    )
+                })?;
+        let mut tokens = vec![0i32; b * sbucket];
+        let mut lens = vec![1i32; b]; // dummy rows attend to 1 pad token
+        let mut starts = vec![0i32; b];
+        let slot_of_row: Vec<usize> =
+            chunk_rows.iter().map(|&(idx, _, _)| idx).collect();
+        for (row, &(idx, start, take)) in chunk_rows.iter().enumerate() {
+            let ctx = self.slot_ctx[idx].as_ref().ok_or_else(|| {
+                anyhow!("prefilling slot {idx} has no scheduler context")
+            })?;
+            for (j, &t) in
+                ctx.prompt[start..start + take].iter().enumerate()
+            {
+                tokens[row * sbucket + j] = t as i32;
+            }
+            lens[row] = take as i32;
+            starts[row] = start as i32;
+        }
+        let bt = self
+            .pager
+            .as_ref()
+            .expect("paged scheduler")
+            .fill_block_tables_for(&slot_of_row, b, window);
+        let extra = [
+            self.runtime
+                .upload(&HostTensor::s32(vec![b, sbucket], tokens))?,
+            self.runtime.upload(&HostTensor::s32(vec![b], lens))?,
+            self.runtime.upload(&HostTensor::s32(vec![b], starts))?,
+            self.runtime.upload(&HostTensor::s32(vec![b, window], bt))?,
+        ];
+        let n_cache = self.cache.n();
+        let mut inputs: Vec<&PjRtBuffer> =
+            self.decode_params.iter().map(|o| &o.buffer).collect();
+        self.cache.push_inputs(&mut inputs);
+        inputs.extend(extra.iter().map(|o| &o.buffer));
+        self.overhead_s += t_overhead.elapsed().as_secs_f64();
+
+        let outs = self.runtime.run_buffers_device(&sname, &inputs)?;
+        drop(inputs);
+        self.metrics.prefill_calls += 1;
+
+        let t_overhead = Instant::now();
+        let (logits_buf, cache_out) =
+            split_logits_and_cache(outs, n_cache, &sname)?;
+        let logits = HostTensor::from_literal(&self.runtime.fetch_output(
+            &sname,
+            0,
+            &logits_buf.buffer,
+        )?)?;
+        self.cache = KvCache { bufs: cache_out };
+        let vocab = logits.shape[1];
+
+        // completions publish their full prompt pages AFTER the final
+        // chunk wrote them; fresh prompts only — a resumed prompt
+        // contains generated tokens and must never enter the index
+        let mut publish: Vec<(usize, Vec<u32>)> = Vec::new();
+        for (row, &(idx, start, take)) in chunk_rows.iter().enumerate() {
+            let new_done = start + take;
+            let Some(n_prompt) = self.slots.get(idx).map(|s| s.n_prompt)
+            else {
+                continue;
+            };
+            if new_done < n_prompt {
+                if let Some(slot) = self.slots.get_mut(idx) {
+                    slot.phase = SlotPhase::Prefilling { done: new_done };
+                }
+                continue;
+            }
+            if self.prefix.is_some() {
+                if let Some(ctx) =
+                    self.slot_ctx[idx].as_ref().filter(|c| c.resume.is_none())
+                {
+                    let full = ctx.prompt.len() / ps;
+                    if full > 0 {
+                        publish
+                            .push((idx, ctx.prompt[..full * ps].to_vec()));
+                    }
+                }
+            }
+            self.prefill_order.retain(|&i| i != idx);
+            self.complete_prefill(idx, row, &logits, vocab)?;
+        }
+        self.overhead_s += t_overhead.elapsed().as_secs_f64();
+        self.publish_admitted_prefixes(publish, ps)?;
+        Ok(())
+    }
+
+    /// The final prefill chunk for slot `idx` landed; logits row `row`
+    /// holds the last prompt token's distribution. A fresh request
+    /// samples and streams its first token here (the same RNG
+    /// derivation as `start_request`); a resumed request restores its
+    /// saved generation state instead — its "first token" was streamed
+    /// before preemption, and re-sampling would duplicate it.
+    fn complete_prefill(
+        &mut self,
+        idx: usize,
+        row: usize,
+        logits: &HostTensor,
+        vocab: usize,
+    ) -> Result<()> {
+        let resume =
+            self.slot_ctx[idx].as_mut().and_then(|c| c.resume.take());
+        if let Some(res) = resume {
+            let Some(slot) = self.slots.get_mut(idx) else {
+                self.fail_slot(idx, "slot vanished before its resume");
+                return Ok(());
+            };
+            slot.phase = SlotPhase::Decoding;
+            slot.rng_state = res.rng_state;
+            slot.n_generated = res.n_emitted;
+            self.pending[idx] = res.pending as i32;
+            if let Some(ctx) = self.slot_ctx[idx].as_mut() {
+                ctx.emitted.push(res.pending);
+            }
+            if let Some(req) = self.requests[idx].as_mut() {
+                req.first_token_at = res.first_token_at;
+                req.last_token_at = Some(res.last_token_at);
+                req.token_gaps = res.token_gaps;
+            }
+            return Ok(());
+        }
+        let Some((req_id, temperature)) = self
+            .slots
+            .get(idx)
+            .map(|s| (s.request_id, s.temperature))
+        else {
+            self.fail_slot(idx, "slot vanished before its first sample");
+            return Ok(());
+        };
+        let user_seed = self
+            .slot_ctx[idx]
+            .as_ref()
+            .map(|c| c.seed)
+            .ok_or_else(|| {
+                anyhow!("prefilling slot {idx} has no scheduler context")
+            })?;
+        // same stream derivation as start_request: slot index stays OUT
+        let seed = mix_seed(&[user_seed, req_id]);
+        let lrow = &logits.as_f32()?[row * vocab..(row + 1) * vocab];
+        let mut rng = Rng::new(seed);
+        let tok = sample(lrow, temperature, &mut rng);
+        if let Some(slot) = self.slots.get_mut(idx) {
+            slot.rng_state = rng.next_u64();
+            slot.phase = SlotPhase::Decoding;
+        }
+        let now = Instant::now();
+        if let Some(req) = self.requests[idx].as_mut() {
+            req.first_token_at = Some(now);
+            req.last_token_at = Some(now);
+            let _ = req.tx.send(Event::Token(tok));
+        }
+        if let Some(ctx) = self.slot_ctx[idx].as_mut() {
+            ctx.emitted.push(tok);
+        }
+        self.apply_sampled_token(idx, tok)
+    }
+
+    /// Evict a decoding slot under page-pool pressure: release its slot
+    /// and pages (published prefix pages park on the pager's cached
+    /// LRU) and rebuild the request as a resumable submission. The
+    /// resumed prompt is `prompt ++ emitted[..n-1]`; the newest sampled
+    /// token rides as `ResumeState::pending` and is restored as the
+    /// next decode input — never re-sampled, never re-streamed — so the
+    /// client-visible stream is seamless across the eviction.
+    fn preempt_slot(&mut self, victim: usize) -> Result<SubmitReq> {
+        let slot = self.slots.release(victim).ok_or_else(|| {
+            anyhow!("preemption victim {victim} is not a live slot")
+        })?;
+        if let Some(pager) = self.pager.as_mut() {
+            pager.release(victim);
+        }
+        let ctx = self.slot_ctx[victim].take().ok_or_else(|| {
+            anyhow!("preemption victim {victim} has no scheduler context")
+        })?;
+        let active = self.requests[victim].take().ok_or_else(|| {
+            anyhow!("preemption victim {victim} has no active request")
+        })?;
+        let SlotCtx { mut prompt, seed, n_prompt_orig, emitted, .. } = ctx;
+        let n = emitted.len();
+        let &pending = emitted.last().ok_or_else(|| {
+            anyhow!("preemption victim {victim} has no sampled token")
+        })?;
+        prompt.extend_from_slice(&emitted[..n - 1]);
+        self.metrics.sched_preemptions += 1;
+        Ok(SubmitReq {
+            id: slot.request_id,
+            prompt_tokens: prompt,
+            max_new_tokens: slot.max_new_tokens,
+            temperature: slot.temperature,
+            seed,
+            tx: active.tx,
+            submitted_at: active.submitted_at,
+            enqueued_at: None,
+            resume: Some(ResumeState {
+                n_emitted: slot.n_generated,
+                pending,
+                rng_state: slot.rng_state,
+                n_prompt_orig,
+                first_token_at: active.first_token_at,
+                last_token_at: active
+                    .last_token_at
+                    .unwrap_or(active.submitted_at),
+                token_gaps: active.token_gaps,
+            }),
+        })
+    }
+
+    /// Static-layout scheduler step: whole-prompt admission (the static
+    /// prefill/admit graphs cannot start mid-prompt) metered against
+    /// the step budget — the FCFS head is always admissible thanks to
+    /// the budget floor, followers join while their summed prompt
+    /// lengths fit the leftovers. Decode rows still run every step, so
+    /// a burst of long prompts is spread over steps instead of stalling
+    /// the whole batch behind one giant admission burst.
+    fn sched_step_static(&mut self) -> Result<()> {
+        let sched = self.sched.expect("sched_step_static needs scheduler");
+        let xfer0 = self.runtime.transfer_stats();
+        let decode_rows = self.slots.decode_indices();
+        let mut budget = StepBudget::open(sched.budget, decode_rows.len());
+        let mut host_kv: Option<HostKv> = None;
+        let mut admitted = 0usize;
+        while budget.left() > 0
+            && self.slots.n_free() > 0
+            && self.batcher.pending() > 0
+        {
+            // peek the head: a bucketable prompt that exceeds the
+            // remaining budget waits for the next, fresher step (the
+            // floor guarantees it fits one); an unbucketable one falls
+            // through so the take below rejects it and the queue moves
+            let head_len = self
+                .batcher
+                .queue
+                .front()
+                .map(|r| r.prompt_tokens.len())
+                .unwrap_or(0);
+            if head_len <= sched.chunk_cap && head_len > budget.left() {
+                break;
+            }
+            match self
+                .batcher
+                .take_prefill_group_budgeted(self.slots.n_free(), budget.left())
+            {
+                PrefillTake::Group { bucket, group } => {
+                    let spent: usize = group
+                        .iter()
+                        .map(|r| r.prompt_tokens.len())
+                        .sum();
+                    budget.charge(spent);
+                    admitted += group.len();
+                    let admit = if host_kv.is_none() {
+                        self.admit_artifact(bucket)
+                    } else {
+                        None
+                    };
+                    match admit {
+                        Some(name) => {
+                            self.admit_device(&name, bucket, group)?
+                        }
+                        None => {
+                            self.prefill_host(bucket, group, &mut host_kv)?
+                        }
+                    }
+                }
+                PrefillTake::HeadRejected => {
+                    self.metrics.record_rejected();
+                    continue;
+                }
+                PrefillTake::Idle => break,
+            }
+        }
+        if let Some(host) = host_kv {
+            let t0 = Instant::now();
+            self.cache =
+                KvCache { bufs: host.to_buffers(&self.runtime)? };
+            self.overhead_s += t0.elapsed().as_secs_f64();
+            self.metrics.host_splice_bursts += 1;
+        }
+        self.metrics.sched_steps += 1;
+        self.metrics.sched_chunks += admitted;
+        if admitted > 0 && !decode_rows.is_empty() {
+            self.metrics.sched_mixed_steps += 1;
+        }
+        if admitted == 0
+            && !decode_rows.is_empty()
+            && self.slots.n_free() > 0
+            && self.batcher.pending() > 0
+            && budget.left() > 0
+        {
+            self.metrics.sched_stall_steps += 1;
+        }
+        let xfer1 = self.runtime.transfer_stats();
+        self.metrics.admit_h2d_bytes += xfer1.h2d_bytes - xfer0.h2d_bytes;
+        self.metrics.admit_d2h_bytes += xfer1.d2h_bytes - xfer0.d2h_bytes;
+        if !self.slots.decode_indices().is_empty() {
+            self.decode_step()?;
+        }
+        Ok(())
+    }
 
     // exposed for the bench harness / tests
     pub fn xla_seconds(&self) -> f64 {
@@ -2014,6 +2761,7 @@ mod tests {
                 max_new_tokens: 100,
                 temperature: 0.0,
                 rng_state: 0,
+                phase: SlotPhase::Decoding,
             })
             .unwrap();
         assert!(t.has_context_room(idx));

@@ -9,6 +9,22 @@
 //! of pages owned by `pager::Pager` under `KvLayout::Paged` (the real
 //! vLLM-style block tables this module used to only be the analog of).
 
+/// Where a slot is in its lifecycle. Under the iteration-level scheduler
+/// a slot can hold a partially-prefilled prompt across decode steps; such
+/// a slot owns cache pages with real prompt KV in them but must NOT join
+/// decode rows (the decode graph's dummy write would corrupt position 0
+/// of its prompt). Legacy burst admission only ever claims `Decoding`
+/// slots, so `decode_indices == active_indices` there.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotPhase {
+    /// `done` prompt tokens are resident in the cache; the rest still
+    /// need prefill chunks (chunk offset == `done`, fed to the suffix
+    /// graph as `start_lens`).
+    Prefilling { done: usize },
+    /// Prompt fully resident; the slot decodes every iteration.
+    Decoding,
+}
+
 #[derive(Debug, Clone)]
 pub struct Slot {
     pub request_id: u64,
@@ -19,6 +35,7 @@ pub struct Slot {
     pub max_new_tokens: usize,
     pub temperature: f32,
     pub rng_state: u64,
+    pub phase: SlotPhase,
 }
 
 #[derive(Debug)]
@@ -75,6 +92,19 @@ impl SlotTable {
             .collect()
     }
 
+    /// Active slots eligible for a decode row: `Prefilling` slots are
+    /// excluded until their final chunk lands.
+    pub fn decode_indices(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| {
+                s.as_ref().is_some_and(|s| s.phase == SlotPhase::Decoding)
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+
     /// Slots that still have room to grow (pos < smax).
     pub fn has_context_room(&self, idx: usize) -> bool {
         self.get(idx).map(|s| s.pos < self.smax).unwrap_or(false)
@@ -89,6 +119,7 @@ mod tests {
         Slot {
             request_id: id, pos: 4, n_prompt: 4, n_generated: 0,
             max_new_tokens: 8, temperature: 0.0, rng_state: 0,
+            phase: SlotPhase::Decoding,
         }
     }
 
@@ -114,6 +145,21 @@ mod tests {
         t.claim(slot(3));
         t.release(1);
         assert_eq!(t.active_indices(), vec![0, 2]);
+    }
+
+    #[test]
+    fn decode_indices_exclude_prefilling() {
+        let mut t = SlotTable::new(4, 16);
+        t.claim(slot(1));
+        let mut s2 = slot(2);
+        s2.phase = SlotPhase::Prefilling { done: 2 };
+        t.claim(s2);
+        t.claim(slot(3));
+        assert_eq!(t.active_indices(), vec![0, 1, 2]);
+        assert_eq!(t.decode_indices(), vec![0, 2]);
+        // final chunk lands: the slot joins decode rows
+        t.get_mut(1).unwrap().phase = SlotPhase::Decoding;
+        assert_eq!(t.decode_indices(), vec![0, 1, 2]);
     }
 
     #[test]

@@ -74,6 +74,28 @@ pub struct MetricsCollector {
     /// (the suffix's attention still spans the full window, since it
     /// must read the cached prefix pages)
     pub prefix_tokens_saved: usize,
+    /// per-request queue wait: enqueue -> admission claim (seconds). The
+    /// iteration-level scheduler's fairness story lives here — a long
+    /// prompt no longer inflates everyone else's wait behind it
+    pub queue_wait_s: Vec<f64>,
+    /// iteration-level scheduler accounting: set when the engine serves
+    /// with `--max-batch-tokens`, which also turns on the report's
+    /// sched[...] field
+    pub sched_enabled: bool,
+    /// effective per-step token budget (post-floor)
+    pub sched_budget: usize,
+    /// prefill chunks issued (one row of one admit_suffix call each)
+    pub sched_chunks: usize,
+    /// decoding slots preempted (pages released, re-queued for recompute)
+    pub sched_preemptions: usize,
+    /// scheduler steps taken
+    pub sched_steps: usize,
+    /// steps that mixed decode rows with prefill chunks in one iteration
+    pub sched_mixed_steps: usize,
+    /// steps that ran decode rows while prefill work waited with budget
+    /// to spare — the stall the scheduler exists to eliminate; the parity
+    /// gate asserts this stays 0
+    pub sched_stall_steps: usize,
 }
 
 impl MetricsCollector {
@@ -137,6 +159,17 @@ impl MetricsCollector {
         summarize(&self.itl_s)
     }
 
+    pub fn queue_wait(&self) -> Summary {
+        summarize(&self.queue_wait_s)
+    }
+
+    /// Queue wait for one admission claim. Recorded once per request at
+    /// the moment it claims a slot — preemption resumes skip it (their
+    /// wait was metered at the original admission).
+    pub fn record_queue_wait(&mut self, wait_s: f64) {
+        self.queue_wait_s.push(wait_s);
+    }
+
     /// Batch occupancy: fraction of slot-steps that carried a live request.
     pub fn occupancy(&self) -> f64 {
         self.active_slot_steps as f64 / self.total_slot_steps.max(1) as f64
@@ -173,6 +206,47 @@ impl MetricsCollector {
         format!(
             "pages[total={} used={} hwm={}]",
             self.pages_total, self.pages_used, self.pages_hwm
+        )
+    }
+
+    /// The report's `sched[...]` field — empty unless the engine served
+    /// with the iteration-level scheduler (`--max-batch-tokens`). Shared
+    /// with the bench output.
+    pub fn sched_field(&self) -> String {
+        if !self.sched_enabled {
+            return String::new();
+        }
+        format!(
+            "sched[budget={} chunks={} preemptions={} steps={} mixed={} \
+             stalls={}]",
+            self.sched_budget,
+            self.sched_chunks,
+            self.sched_preemptions,
+            self.sched_steps,
+            self.sched_mixed_steps,
+            self.sched_stall_steps
+        )
+    }
+
+    /// The report's latency-percentile field: TTFT / inter-token /
+    /// queue-wait p50/p95/p99 in milliseconds. Always present (zeros on
+    /// an empty run) — ROADMAP called out that `ttft_s` was collected
+    /// but no percentile ever rendered.
+    pub fn latency_field(&self) -> String {
+        let ms = |x: f64| if x.is_finite() { x * 1e3 } else { 0.0 };
+        let (t, i, q) = (self.ttft(), self.itl(), self.queue_wait());
+        format!(
+            "lat_ms[ttft p50={:.1} p95={:.1} p99={:.1} | itl p50={:.2} \
+             p95={:.2} p99={:.2} | qwait p50={:.1} p95={:.1} p99={:.1}]",
+            ms(t.p50),
+            ms(t.p95),
+            ms(t.p99),
+            ms(i.p50),
+            ms(i.p95),
+            ms(i.p99),
+            ms(q.p50),
+            ms(q.p95),
+            ms(q.p99)
         )
     }
 
@@ -216,11 +290,14 @@ impl MetricsCollector {
         };
         let pages = field(self.pages_field());
         let prefix = field(self.prefix_field());
+        let sched = field(self.sched_field());
+        let latency = self.latency_field();
         format!(
             "[{label}] requests={} rejected={} out_tokens={} wall={:.2}s \
              tput={:.1} tok/s  TPOT={:.2}ms  ITL={:.2}ms  TTFT={:.1}ms  \
-             occupancy={:.0}%  (decode_steps={} prefills={})  \
-             cache[{cache_scheme} {kv_layout} resident={}]{pages}{prefix}  \
+             {latency}  occupancy={:.0}%  (decode_steps={} prefills={})  \
+             cache[{cache_scheme} {kv_layout} \
+             resident={}]{pages}{prefix}{sched}  \
              xfer h2d={} d2h={} decode[h2d={} d2h={}] \
              admit[h2d={} d2h={} host_splices={}]",
             self.n_requests,
@@ -410,6 +487,48 @@ mod tests {
         assert!(!m.report("x").contains("prefix["), "{}", m.report("x"));
         let empty = MetricsCollector::new();
         assert!(!empty.report("y").contains("prefix["));
+    }
+
+    #[test]
+    fn sched_accounting_in_report() {
+        let mut m = MetricsCollector::new();
+        m.sched_enabled = true;
+        m.sched_budget = 24;
+        m.sched_chunks = 37;
+        m.sched_preemptions = 1;
+        m.sched_steps = 50;
+        m.sched_mixed_steps = 12;
+        let r = m.report("x");
+        assert!(
+            r.contains(
+                "sched[budget=24 chunks=37 preemptions=1 steps=50 \
+                 mixed=12 stalls=0]"
+            ),
+            "{r}"
+        );
+        // engines on the legacy burst path never grow a sched field
+        m.sched_enabled = false;
+        assert!(!m.report("x").contains("sched["), "{}", m.report("x"));
+    }
+
+    #[test]
+    fn latency_percentiles_in_report() {
+        let mut m = MetricsCollector::new();
+        m.begin();
+        for i in 0..20 {
+            m.record_request(4, 3, 0.010 * (i + 1) as f64, &[0.002, 0.004]);
+            m.record_queue_wait(0.001 * (i + 1) as f64);
+        }
+        m.finish();
+        assert_eq!(m.queue_wait().n, 20);
+        assert!(m.queue_wait().p95 > m.queue_wait().p50);
+        let r = m.report("x");
+        assert!(r.contains("lat_ms[ttft p50="), "{r}");
+        assert!(r.contains("| itl p50="), "{r}");
+        assert!(r.contains("| qwait p50="), "{r}");
+        // empty runs render zeros, never NaN
+        let empty = MetricsCollector::new();
+        assert!(empty.latency_field().contains("p95=0.0"));
     }
 
     #[test]

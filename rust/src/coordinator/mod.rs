@@ -8,6 +8,11 @@
 //!     buffers); commands arrive over a channel, tokens stream back per
 //!     request.
 //!   - `batcher` — admission queue + slot assignment policy.
+//!   - `scheduler` — iteration-level scheduling policy (token budget,
+//!     prefill chunk sizing, preemption victim selection); the engine
+//!     mixes decode rows with prefill chunks per step when
+//!     `--max-batch-tokens` is set, instead of the burst-FCFS
+//!     admit/decode barrier.
 //!   - `kvslots` — batch-slot bookkeeping (one slot = one batch row).
 //!   - `pager`   — KV page pool + per-slot block tables (vLLM-style
 //!     paging for `KvLayout::Paged`; resident cache bytes track live
@@ -25,6 +30,7 @@ pub mod metrics;
 pub mod pager;
 pub mod prefixcache;
 pub mod request;
+pub mod scheduler;
 pub mod server;
 
 pub use engine::{CacheScheme, Engine, EngineConfig, EngineHandle, KvLayout};

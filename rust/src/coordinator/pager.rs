@@ -492,6 +492,31 @@ impl Pager {
         self.fill_block_tables_for(&slots, self.tables.len(), n_blocks)
     }
 
+    /// `fill_block_tables` with per-slot masking: rows where
+    /// `keep[slot]` is false are all holes even though the slot owns
+    /// pages. The iteration-level scheduler's decode step uses this for
+    /// `Prefilling` slots — their pages hold real prompt KV, and the
+    /// decode graph's dummy write (token 0 at position 0) would corrupt
+    /// prompt position 0 if the row mapped them. Holes drop the write
+    /// on device instead.
+    pub fn fill_block_tables_where(
+        &self,
+        keep: &[bool],
+        n_blocks: usize,
+    ) -> Vec<i32> {
+        let hole = self.hole();
+        let mut out = vec![hole; self.tables.len() * n_blocks];
+        for (slot, table) in self.tables.iter().enumerate() {
+            if !keep.get(slot).copied().unwrap_or(false) {
+                continue;
+            }
+            for (j, &page) in table.iter().take(n_blocks).enumerate() {
+                out[slot * n_blocks + j] = page as i32;
+            }
+        }
+        out
+    }
+
     /// Flattened `[rows, n_blocks]` s32 block-table input for an explicit
     /// row→slot mapping (admission: burst row `r` carries `slots[r]`).
     /// Unallocated tail blocks and unmapped rows are holes. This is the
@@ -614,6 +639,21 @@ mod tests {
         p.admit(1, 3, 6).unwrap(); // page [2]
         let abt = p.fill_block_tables_for(&[1], 2, 2);
         assert_eq!(abt, vec![2, 8, 8, 8]);
+    }
+
+    #[test]
+    fn masked_block_tables_hide_prefilling_slots() {
+        // scheduler decode step: slot 1 is mid-prefill — its pages hold
+        // real prompt KV, so its decode row must be all holes or the
+        // dummy write would corrupt prompt position 0
+        let mut p = pager();
+        p.admit(0, 6, 10).unwrap(); // pages [0, 1]
+        p.admit(1, 3, 6).unwrap(); // page [2]
+        let bt = p.fill_block_tables_where(&[true, false], 4);
+        assert_eq!(&bt[..4], &[0, 1, 8, 8], "decoding slot keeps pages");
+        assert_eq!(&bt[4..], &[8, 8, 8, 8], "prefilling slot masked out");
+        let all = p.fill_block_tables_where(&[true, true], 4);
+        assert_eq!(all, p.fill_block_tables(4), "all-keep == unmasked");
     }
 
     #[test]

@@ -14,6 +14,35 @@ pub struct SubmitReq {
     /// token stream back to the caller
     pub tx: Sender<Event>,
     pub submitted_at: Instant,
+    /// stamped by `Batcher::push` on first enqueue and preserved across
+    /// requeues, so queue-wait (enqueue -> admission claim) is metered
+    /// once per request
+    pub enqueued_at: Option<Instant>,
+    /// present when this request is a preempted slot being re-queued for
+    /// recompute: the scheduler restores the generation state instead of
+    /// re-sampling (and re-streaming) already-delivered tokens
+    pub resume: Option<ResumeState>,
+}
+
+/// Generation state carried by a preempted request so its recompute
+/// continues the token stream exactly where it stopped.
+///
+/// The resumed prompt is `original prompt ++ emitted[..n_emitted - 1]`;
+/// the final emitted token is NOT prefilled — it is `pending`, restored
+/// as the next decode input (matching `pending[idx]` at preemption time),
+/// with `rng_state` restored so sampled continuations stay
+/// stream-identical too.
+pub struct ResumeState {
+    /// tokens already streamed to the caller (== n_generated at preemption)
+    pub n_emitted: usize,
+    /// last emitted token: becomes the next decode input, not re-sampled
+    pub pending: u32,
+    pub rng_state: u64,
+    /// prompt length of the ORIGINAL request, for metrics/FinishInfo
+    pub n_prompt_orig: usize,
+    pub first_token_at: Option<Instant>,
+    pub last_token_at: Instant,
+    pub token_gaps: Vec<f64>,
 }
 
 #[derive(Debug, Clone)]

@@ -1,0 +1,193 @@
+//! Iteration-level scheduling policy: the pure math behind continuous
+//! batching + chunked prefill.
+//!
+//! Each engine step is filled from a token budget (`--max-batch-tokens`):
+//! decode rows cost one token each and are NEVER displaced; whatever
+//! budget remains is spent on prefill *chunks* — slices of waiting
+//! prompts fed to the `admit_suffix_*` graphs with `start_lens` = the
+//! chunk's offset into its own prompt. A long prompt is admitted over
+//! several steps instead of monopolizing one, so concurrent decoders
+//! keep emitting a token every iteration (the vLLM/SGLang idiom the
+//! paper's serving stack targets).
+//!
+//! This module holds only policy — no device state, no queues — so the
+//! invariants (budget never exceeded, decode never displaced, chunks
+//! make progress) are unit- and property-testable without an engine.
+
+/// Per-step token accounting for one scheduler iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct StepBudget {
+    /// effective per-step token budget (post-floor)
+    pub budget: usize,
+    /// tokens already committed this step
+    pub spent: usize,
+}
+
+impl StepBudget {
+    /// Open a step: decode rows are committed first and unconditionally —
+    /// prefill only ever gets the leftovers, which is what "decode rows
+    /// are never displaced" means operationally.
+    pub fn open(budget: usize, decode_rows: usize) -> StepBudget {
+        StepBudget { budget, spent: decode_rows }
+    }
+
+    pub fn left(&self) -> usize {
+        self.budget.saturating_sub(self.spent)
+    }
+
+    pub fn charge(&mut self, tokens: usize) {
+        self.spent += tokens;
+    }
+}
+
+/// Clamp a requested budget so the scheduler can always make progress.
+///
+/// A budget below `batch + min_chunk` could wedge: a full decode batch
+/// alone would exceed it (decode is never displaced, so the budget must
+/// cover `batch` decode rows), and a fresh step must be able to start at
+/// least one prefill unit (`min_chunk` = 1 token under the paged layout,
+/// the largest prefill bucket under static where prompts are whole).
+pub fn effective_budget(
+    requested: usize,
+    batch: usize,
+    min_chunk: usize,
+) -> usize {
+    requested.max(batch + min_chunk)
+}
+
+/// Length of the next prefill chunk for a prompt with `remaining`
+/// unprefilled tokens: capped by the largest suffix bucket (`chunk_cap`,
+/// the widest admit_suffix graph) and by the step's remaining budget.
+/// Returns 0 when the budget is exhausted — the prompt simply waits for
+/// the next step; no chunk is ever truncated to violate the budget.
+///
+/// Chunk boundaries owe nothing to the page size: the suffix graph masks
+/// purely positionally (`start_lens` need not be page-aligned), so the
+/// only rounding anywhere is the pager's own block arithmetic.
+pub fn chunk_len(remaining: usize, chunk_cap: usize, budget_left: usize) -> usize {
+    remaining.min(chunk_cap).min(budget_left)
+}
+
+/// Pick the slot to preempt under page-pool pressure: the YOUNGEST
+/// decoding slot (max admission sequence number). Preempting the newest
+/// arrival preserves FCFS seniority — the oldest requests keep their
+/// pages — and bounds recompute waste, since the youngest slot has the
+/// least decode progress to replay. Returns the winning slot index.
+pub fn pick_preemption_victim<I>(candidates: I) -> Option<usize>
+where
+    I: IntoIterator<Item = (usize, u64)>,
+{
+    candidates
+        .into_iter()
+        .max_by_key(|&(_, admit_seq)| admit_seq)
+        .map(|(idx, _)| idx)
+}
+
+/// Smallest suffix bucket that fits a chunk of `need` tokens, out of the
+/// ascending `(seq, _)` bucket list. None -> `need` exceeds every graph
+/// (the caller splits the chunk instead; `chunk_len` already caps at the
+/// largest bucket so this is a defensive contract, not a live path).
+pub fn suffix_bucket<T>(buckets: &[(usize, T)], need: usize) -> Option<&(usize, T)> {
+    buckets.iter().find(|(s, _)| *s >= need)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_rows_are_charged_first() {
+        let b = StepBudget::open(16, 5);
+        assert_eq!(b.spent, 5);
+        assert_eq!(b.left(), 11);
+    }
+
+    #[test]
+    fn budget_left_saturates() {
+        // a floored budget can still be "overspent" transiently when the
+        // decode batch alone hits it; left() must clamp, not wrap
+        let b = StepBudget::open(4, 4);
+        assert_eq!(b.left(), 0);
+        let b = StepBudget::open(4, 6);
+        assert_eq!(b.left(), 0);
+    }
+
+    #[test]
+    fn effective_budget_floors() {
+        // paged: min chunk is one token
+        assert_eq!(effective_budget(1, 8, 1), 9);
+        assert_eq!(effective_budget(64, 8, 1), 64);
+        // static: min chunk is the largest prefill bucket (whole prompts)
+        assert_eq!(effective_budget(16, 8, 96), 104);
+        assert_eq!(effective_budget(200, 8, 96), 200);
+    }
+
+    #[test]
+    fn chunk_is_not_page_aligned() {
+        // 90-token prompt, 32-token cap, plenty of budget: chunks land at
+        // offsets 32 and 64, neither a multiple of a 24- or 48-token
+        // "page" — the suffix graph's positional mask doesn't care
+        let mut done = 0usize;
+        let mut chunks = Vec::new();
+        while done < 90 {
+            let c = chunk_len(90 - done, 32, usize::MAX);
+            assert!(c > 0);
+            chunks.push(c);
+            done += c;
+        }
+        assert_eq!(chunks, vec![32, 32, 26]);
+        assert_eq!(done, 90);
+        assert!(chunks[2] < 32, "final chunk smaller than the bucket");
+        for boundary in [32usize, 64] {
+            assert_ne!(boundary % 24, 0);
+            assert_ne!(boundary % 48, 0);
+        }
+    }
+
+    #[test]
+    fn chunk_respects_budget_exactly() {
+        // budget has 7 tokens left, 30 remain: the chunk is 7, not 0 and
+        // not a truncated bucket that would overshoot
+        assert_eq!(chunk_len(30, 32, 7), 7);
+        // exhausted budget -> 0: the prompt waits, the budget holds
+        assert_eq!(chunk_len(30, 32, 0), 0);
+        // remaining smaller than both caps -> exact tail, no padding
+        assert_eq!(chunk_len(5, 32, 100), 5);
+    }
+
+    #[test]
+    fn chunk_progress_under_interleaved_decode() {
+        // simulate: batch 4 with 3 decoders, budget 8 -> 5 tokens/step of
+        // prefill; a 23-token prompt must finish in ceil(23/5) = 5 steps
+        // and the per-step total (decode + chunk) must never exceed 8
+        let mut done = 0usize;
+        let mut steps = 0;
+        while done < 23 {
+            let mut b = StepBudget::open(8, 3);
+            let c = chunk_len(23 - done, 32, b.left());
+            b.charge(c);
+            assert!(b.spent <= b.budget, "step total exceeds budget");
+            done += c;
+            steps += 1;
+            assert!(steps < 100, "no progress");
+        }
+        assert_eq!(steps, 5);
+    }
+
+    #[test]
+    fn victim_is_youngest() {
+        let v = pick_preemption_victim(vec![(0, 7u64), (2, 12), (3, 9)]);
+        assert_eq!(v, Some(2));
+        assert_eq!(pick_preemption_victim(Vec::<(usize, u64)>::new()), None);
+    }
+
+    #[test]
+    fn suffix_bucket_picks_smallest_fit() {
+        let buckets = vec![(16usize, "a"), (48, "b"), (96, "c")];
+        assert_eq!(suffix_bucket(&buckets, 1).map(|b| b.0), Some(16));
+        assert_eq!(suffix_bucket(&buckets, 16).map(|b| b.0), Some(16));
+        assert_eq!(suffix_bucket(&buckets, 17).map(|b| b.0), Some(48));
+        assert_eq!(suffix_bucket(&buckets, 96).map(|b| b.0), Some(96));
+        assert_eq!(suffix_bucket(&buckets, 97), None);
+    }
+}

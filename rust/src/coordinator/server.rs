@@ -130,6 +130,8 @@ fn handle_conn(
             seed,
             tx,
             submitted_at: Instant::now(),
+            enqueued_at: None,
+            resume: None,
         })?;
         // stream events back
         for ev in rx {

@@ -8,6 +8,9 @@
 //!                 [--kv-cache int8]   # quantized (int8+scales) KV cache
 //!                 [--kv-layout paged] # block-table paged KV cache
 //!                 [--no-prefix-cache] # disable shared-prefix page reuse
+//!                 [--max-batch-tokens 256] # iteration-level scheduler:
+//!                                     # per-step token budget mixing
+//!                                     # decode rows + prefill chunks
 //!                 [--host-admission]  # force the host splice fallback
 //!   ao bench-client --addr 127.0.0.1:7433 --n 16
 //!   ao perfmodel  [--kernels]                   # H100/Fig3 + L1 estimates
@@ -220,6 +223,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // prefix sharing defaults on; it is a no-op under the static
         // layout or without admit_suffix artifacts
         prefix_cache: !args.flag("no-prefix-cache"),
+        // --max-batch-tokens <budget> turns on the iteration-level
+        // scheduler (continuous batching + chunked prefill); absent =
+        // the legacy burst-FCFS admit/decode barrier
+        max_batch_tokens: args
+            .get("max-batch-tokens")
+            .map(|v| {
+                v.parse::<usize>().ok().filter(|&n| n > 0).with_context(
+                    || {
+                        format!(
+                            "--max-batch-tokens '{v}' is not a positive \
+                             integer token budget"
+                        )
+                    },
+                )
+            })
+            .transpose()?,
     };
     let (handle, join) = engine::spawn(cfg);
     let tok = Arc::new(Tokenizer::byte_level());

@@ -13,6 +13,7 @@ pub struct Summary {
     pub max: f64,
     pub p50: f64,
     pub p90: f64,
+    pub p95: f64,
     pub p99: f64,
 }
 
@@ -29,7 +30,8 @@ pub fn summarize(samples: &[f64]) -> Summary {
     if n == 0 {
         return Summary {
             n: 0, mean: f64::NAN, std: f64::NAN, min: f64::NAN,
-            max: f64::NAN, p50: f64::NAN, p90: f64::NAN, p99: f64::NAN,
+            max: f64::NAN, p50: f64::NAN, p90: f64::NAN, p95: f64::NAN,
+            p99: f64::NAN,
         };
     }
     let mut sorted = samples.to_vec();
@@ -45,6 +47,7 @@ pub fn summarize(samples: &[f64]) -> Summary {
         max: sorted[n - 1],
         p50: percentile(&sorted, 50.0),
         p90: percentile(&sorted, 90.0),
+        p95: percentile(&sorted, 95.0),
         p99: percentile(&sorted, 99.0),
     }
 }
@@ -130,7 +133,17 @@ mod tests {
 
     #[test]
     fn empty_summary_is_nan() {
-        assert!(summarize(&[]).mean.is_nan());
+        let s = summarize(&[]);
+        assert!(s.mean.is_nan());
+        assert!(s.p95.is_nan());
+    }
+
+    #[test]
+    fn p95_between_p90_and_p99() {
+        let v: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let s = summarize(&v);
+        assert!(s.p90 <= s.p95 && s.p95 <= s.p99);
+        assert_eq!(s.p95, 94.0);
     }
 
     #[test]

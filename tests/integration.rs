@@ -136,6 +136,7 @@ fn engine_serves_batched_requests() {
         eos_token: None,
         host_admission: false,
         prefix_cache: false,
+        max_batch_tokens: None,
     });
 
     let mut rxs = Vec::new();
@@ -150,6 +151,8 @@ fn engine_serves_batched_requests() {
                 seed: i,
                 tx,
                 submitted_at: Instant::now(),
+                enqueued_at: None,
+                resume: None,
             })
             .unwrap();
         rxs.push(rx);
@@ -197,6 +200,7 @@ fn engine_greedy_decode_is_deterministic() {
             eos_token: None,
             host_admission: false,
             prefix_cache: false,
+            max_batch_tokens: None,
         });
         let (tx, rx) = channel();
         handle
@@ -208,6 +212,8 @@ fn engine_greedy_decode_is_deterministic() {
                 seed: 0,
                 tx,
                 submitted_at: Instant::now(),
+                enqueued_at: None,
+                resume: None,
             })
             .unwrap();
         let mut out = Vec::new();
@@ -257,6 +263,7 @@ fn decode_host_traffic_is_logits_only() {
         eos_token: None,
         host_admission: false,
         prefix_cache: false,
+        max_batch_tokens: None,
     });
     let mut rxs = Vec::new();
     for i in 0..3u64 {
@@ -270,6 +277,8 @@ fn decode_host_traffic_is_logits_only() {
                 seed: i,
                 tx,
                 submitted_at: Instant::now(),
+                enqueued_at: None,
+                resume: None,
             })
             .unwrap();
         rxs.push(rx);
@@ -335,6 +344,7 @@ fn context_cap_grants_the_last_cache_slot() {
         eos_token: None,
         host_admission: false,
         prefix_cache: false,
+        max_batch_tokens: None,
     });
     let (tx, rx) = channel();
     handle
@@ -346,6 +356,8 @@ fn context_cap_grants_the_last_cache_slot() {
             seed: 1,
             tx,
             submitted_at: Instant::now(),
+            enqueued_at: None,
+            resume: None,
         })
         .unwrap();
     let mut n_tokens = 0usize;
@@ -401,6 +413,7 @@ fn oversized_head_does_not_stall_admission() {
         eos_token: None,
         host_admission: false,
         prefix_cache: false,
+        max_batch_tokens: None,
     });
     // head: too long for any bucket; followers: ordinary prompts
     let (bad_tx, bad_rx) = channel();
@@ -413,6 +426,8 @@ fn oversized_head_does_not_stall_admission() {
             seed: 0,
             tx: bad_tx,
             submitted_at: Instant::now(),
+            enqueued_at: None,
+            resume: None,
         })
         .unwrap();
     let mut rxs = Vec::new();
@@ -427,6 +442,8 @@ fn oversized_head_does_not_stall_admission() {
                 seed: i,
                 tx,
                 submitted_at: Instant::now(),
+                enqueued_at: None,
+                resume: None,
             })
             .unwrap();
         rxs.push(rx);
@@ -540,6 +557,7 @@ fn admission_rows_only_under(cache_scheme: CacheScheme) {
         eos_token: None,
         host_admission: false,
         prefix_cache: false,
+        max_batch_tokens: None,
     });
     let mut rxs = Vec::new();
     for i in 0..3u64 {
@@ -553,6 +571,8 @@ fn admission_rows_only_under(cache_scheme: CacheScheme) {
                 seed: i,
                 tx,
                 submitted_at: Instant::now(),
+                enqueued_at: None,
+                resume: None,
             })
             .unwrap();
         rxs.push(rx);
@@ -627,6 +647,7 @@ fn admission_paths_agree_under(cache_scheme: CacheScheme) {
             eos_token: None,
             host_admission,
             prefix_cache: false,
+            max_batch_tokens: None,
         });
         let mut rxs = Vec::new();
         for i in 0..4u64 {
@@ -640,6 +661,8 @@ fn admission_paths_agree_under(cache_scheme: CacheScheme) {
                     seed: i,
                     tx,
                     submitted_at: Instant::now(),
+                    enqueued_at: None,
+                    resume: None,
                 })
                 .unwrap();
             rxs.push(rx);
@@ -711,6 +734,7 @@ fn kv_cache_schemes_agree() {
             eos_token: None,
             host_admission: false,
             prefix_cache: false,
+            max_batch_tokens: None,
         });
         let mut rxs = Vec::new();
         for i in 0..5u64 {
@@ -724,6 +748,8 @@ fn kv_cache_schemes_agree() {
                     seed: i,
                     tx,
                     submitted_at: Instant::now(),
+                    enqueued_at: None,
+                    resume: None,
                 })
                 .unwrap();
             rxs.push(rx);
@@ -813,6 +839,7 @@ fn kv_layouts_agree() {
                 eos_token: None,
                 host_admission: false,
                 prefix_cache: false,
+                max_batch_tokens: None,
             });
             let mut rxs = Vec::new();
             // mixed short/long greedy workload, more requests than fit at
@@ -831,6 +858,8 @@ fn kv_layouts_agree() {
                         seed: i,
                         tx,
                         submitted_at: Instant::now(),
+                        enqueued_at: None,
+                        resume: None,
                     })
                     .unwrap();
                 rxs.push(rx);
@@ -948,6 +977,7 @@ fn prefix_cache_agrees() {
                 eos_token: None,
                 host_admission: false,
                 prefix_cache,
+                max_batch_tokens: None,
             });
             let collect = |rx: std::sync::mpsc::Receiver<Event>| {
                 let mut toks = Vec::new();
@@ -972,6 +1002,8 @@ fn prefix_cache_agrees() {
                     seed: 0,
                     tx,
                     submitted_at: Instant::now(),
+                    enqueued_at: None,
+                    resume: None,
                 })
                 .unwrap();
             let mut streams = vec![collect(rx)];
@@ -991,6 +1023,8 @@ fn prefix_cache_agrees() {
                         seed: i,
                         tx,
                         submitted_at: Instant::now(),
+                        enqueued_at: None,
+                        resume: None,
                     })
                     .unwrap();
                 rxs.push(rx);
@@ -1081,6 +1115,7 @@ fn sampled_requests_diverge() {
         eos_token: None,
         host_admission: false,
         prefix_cache: false,
+        max_batch_tokens: None,
     });
     // identical prompts, temperature 1.0, seed == id (the collapsing case)
     let mut rxs = Vec::new();
@@ -1095,6 +1130,8 @@ fn sampled_requests_diverge() {
                 seed: id,
                 tx,
                 submitted_at: Instant::now(),
+                enqueued_at: None,
+                resume: None,
             })
             .unwrap();
         rxs.push(rx);
@@ -1145,6 +1182,7 @@ fn empty_prompt_is_rejected() {
         eos_token: None,
         host_admission: false,
         prefix_cache: false,
+        max_batch_tokens: None,
     });
     let (bad_tx, bad_rx) = channel();
     handle
@@ -1156,6 +1194,8 @@ fn empty_prompt_is_rejected() {
             seed: 0,
             tx: bad_tx,
             submitted_at: Instant::now(),
+            enqueued_at: None,
+            resume: None,
         })
         .unwrap();
     let (ok_tx, ok_rx) = channel();
@@ -1168,6 +1208,8 @@ fn empty_prompt_is_rejected() {
             seed: 1,
             tx: ok_tx,
             submitted_at: Instant::now(),
+            enqueued_at: None,
+            resume: None,
         })
         .unwrap();
     let mut saw_error = false;
@@ -1210,4 +1252,165 @@ fn hellaswag_eval_runs() {
     let items = ao::data::evaltask::generate(11, 8, 1);
     let acc = ev.hellaswag(&items, &tok).unwrap();
     assert!((0.0..=1.0).contains(&acc));
+}
+
+/// Tentpole acceptance (iteration-level scheduler): the same mixed
+/// decode + long-prompt greedy workload produces identical token
+/// streams with the token-budget scheduler enabled and disabled, under
+/// BOTH cache schemes and BOTH kv layouts — while the enabled run
+/// actually chunks prefill into budgeted pieces (sched_chunks > 0),
+/// overlaps decode rows with prefill work inside single steps
+/// (sched_mixed_steps > 0), and never lets a decode-capable step idle
+/// while prefill is pending (sched_stall_steps == 0, the no-stall
+/// accounting gate). Under the paged layout the long-prompt burst must
+/// also strictly lower the inter-token p95 versus the burst-FCFS
+/// baseline, because prefill no longer monopolizes whole steps between
+/// two decode ticks.
+#[test]
+fn scheduler_agrees() {
+    let Some(dir) = artifacts_dir() else { return };
+    for cache_scheme in [CacheScheme::F32, CacheScheme::Int8] {
+        for kv_layout in [KvLayout::Static, KvLayout::Paged] {
+            if kv_layout == KvLayout::Paged
+                && (!has_paged_artifacts(&dir, cache_scheme)
+                    || !has_suffix_artifacts(&dir, cache_scheme))
+            {
+                return;
+            }
+            let master = tiny_master_ckpt(&dir);
+            let tmp = std::env::temp_dir().join("ao_int_tests");
+            std::fs::create_dir_all(&tmp).unwrap();
+            let ckpt_path = tmp.join(format!(
+                "tiny_f32_sched_{}_{}.aockpt",
+                cache_scheme.tag(),
+                kv_layout.tag()
+            ));
+            master.save(&ckpt_path).unwrap();
+
+            let run = |max_batch_tokens: Option<usize>| {
+                let (handle, join) = engine::spawn(engine::EngineConfig {
+                    artifacts_dir: dir.clone(),
+                    ckpt_path: ckpt_path.clone(),
+                    model: "tiny".into(),
+                    scheme: "f32".into(),
+                    cache_scheme,
+                    kv_layout,
+                    eos_token: None,
+                    host_admission: false,
+                    prefix_cache: false,
+                    max_batch_tokens,
+                });
+                let mut rxs = Vec::new();
+                // two short-prompt decoders first (they sit in Decoding
+                // while everything below prefills) ...
+                for i in 0..2u64 {
+                    let (tx, rx) = channel();
+                    handle
+                        .submit(SubmitReq {
+                            id: i,
+                            prompt_tokens: vec![11 + i as u32; 3],
+                            max_new_tokens: 24,
+                            temperature: 0.0,
+                            seed: i,
+                            tx,
+                            submitted_at: Instant::now(),
+                            enqueued_at: None,
+                            resume: None,
+                        })
+                        .unwrap();
+                    rxs.push(rx);
+                }
+                // ... then a burst of long prompts (90 tokens each,
+                // several budget chunks apiece, more than the slot/page
+                // capacity so admission recycles)
+                for i in 2..12u64 {
+                    let (tx, rx) = channel();
+                    handle
+                        .submit(SubmitReq {
+                            id: i,
+                            prompt_tokens: (0..90)
+                                .map(|j| 20 + ((7 * i as u32 + j) % 200))
+                                .collect(),
+                            max_new_tokens: 4,
+                            temperature: 0.0,
+                            seed: i,
+                            tx,
+                            submitted_at: Instant::now(),
+                            enqueued_at: None,
+                            resume: None,
+                        })
+                        .unwrap();
+                    rxs.push(rx);
+                }
+                let streams: Vec<Vec<u32>> = rxs
+                    .into_iter()
+                    .map(|rx| {
+                        let mut toks = Vec::new();
+                        for ev in rx {
+                            match ev {
+                                Event::Token(t) => toks.push(t),
+                                Event::Done(_) => break,
+                                Event::Error(e) => panic!("error: {e}"),
+                            }
+                        }
+                        toks
+                    })
+                    .collect();
+                handle.shutdown();
+                let m = join.join().unwrap().unwrap();
+                (streams, m)
+            };
+            let (off_streams, off_m) = run(None);
+            let (on_streams, on_m) = run(Some(48));
+            assert_eq!(
+                off_streams,
+                on_streams,
+                "the iteration-level scheduler must not change the \
+                 greedy token streams (kv-cache {}, layout {})",
+                cache_scheme.tag(),
+                kv_layout.tag()
+            );
+            assert!(!off_m.sched_enabled);
+            assert_eq!(off_m.sched_steps, 0);
+            assert!(on_m.sched_enabled);
+            assert!(on_m.sched_steps > 0);
+            assert!(
+                on_m.sched_chunks > 0,
+                "the budget must have split prefill into chunks \
+                 (layout {})",
+                kv_layout.tag()
+            );
+            assert!(
+                on_m.sched_mixed_steps > 0,
+                "decode rows and prefill chunks must share steps \
+                 (layout {})",
+                kv_layout.tag()
+            );
+            assert_eq!(
+                on_m.sched_stall_steps, 0,
+                "no decode-capable step may idle while prefill is \
+                 pending (layout {})",
+                kv_layout.tag()
+            );
+            assert_eq!(on_m.n_requests, 12);
+            assert_eq!(off_m.n_requests, 12);
+            // queue-wait is stamped at enqueue and recorded at claim on
+            // both paths
+            assert_eq!(on_m.queue_wait_s.len(), 12);
+            if kv_layout == KvLayout::Paged {
+                // chunked prefill spreads the long-prompt burst across
+                // budgeted steps, so the decoders' worst gaps shrink
+                // versus the whole-prompt burst that monopolized steps
+                let on_p95 = on_m.itl().p95;
+                let off_p95 = off_m.itl().p95;
+                assert!(
+                    on_p95 < off_p95,
+                    "chunked prefill must lower inter-token p95 under \
+                     the long-prompt burst: {on_p95:.6}s (sched) vs \
+                     {off_p95:.6}s (burst-FCFS, kv-cache {})",
+                    cache_scheme.tag()
+                );
+            }
+        }
+    }
 }

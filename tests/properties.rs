@@ -1,8 +1,11 @@
 //! Property-based tests over the Rust substrates (mini-proptest harness,
 //! `ao::util::proptest`): invariants that must hold for arbitrary inputs.
 
-use ao::coordinator::kvslots::{Slot, SlotTable};
+use ao::coordinator::kvslots::{Slot, SlotPhase, SlotTable};
 use ao::coordinator::pager::Pager;
+use ao::coordinator::scheduler::{
+    chunk_len, effective_budget, pick_preemption_victim, StepBudget,
+};
 use ao::quant::apply::{
     quant_int4_group_asym, quant_int4_group_sym, quant_int8_channelwise,
     quant_fp8_rowwise, sparse24_compress,
@@ -363,6 +366,7 @@ fn prop_slot_table_never_double_allocates() {
                     max_new_tokens: 4,
                     temperature: 0.0,
                     rng_state: 0,
+                    phase: SlotPhase::Decoding,
                 }) {
                     assert!(
                         !live.contains(&idx),
@@ -638,7 +642,8 @@ fn prop_percentiles_ordered() {
             let checks = [
                 (s.min <= s.p50, "min<=p50"),
                 (s.p50 <= s.p90, "p50<=p90"),
-                (s.p90 <= s.p99, "p90<=p99"),
+                (s.p90 <= s.p95, "p90<=p95"),
+                (s.p95 <= s.p99, "p95<=p99"),
                 (s.p99 <= s.max, "p99<=max"),
                 (
                     percentile(&sorted, 0.0) == s.min,
@@ -653,4 +658,163 @@ fn prop_percentiles_ordered() {
             Ok(())
         },
     );
+}
+
+#[test]
+fn prop_scheduler_invariants() {
+    // The iteration-level scheduling policy under randomized mixed
+    // workloads (simulated over the pure `scheduler` functions, the same
+    // ones the engine calls):
+    //   - the per-step token total (decode rows + prefill chunks) never
+    //     exceeds the effective budget
+    //   - decode rows are never displaced: every decoding request emits
+    //     exactly one token per step, however heavy the prefill pressure
+    //   - FCFS within class: requests START prefill in arrival order
+    //   - the preemption victim is always the youngest decoding slot,
+    //     and a preempted request still runs to completion
+    struct Running {
+        id: usize,
+        remaining_prefill: usize,
+        left_decode: usize,
+        emitted: usize,
+        admit_seq: u64,
+        resumed: bool,
+    }
+    let mut rng = Rng::new(0x5C_4E_D0);
+    for case in 0..40 {
+        let batch = 2 + rng.below(6);
+        let chunk_cap = [8usize, 16, 32][rng.below(3)];
+        let budget = effective_budget(1 + rng.below(48), batch, 1);
+        let n_req = 3 + rng.below(10);
+        // arrival order == id order; (prompt_len, max_new)
+        let mut queue: Vec<(usize, usize, usize)> = (0..n_req)
+            .map(|id| (id, 1 + rng.below(60), 1 + rng.below(6)))
+            .collect();
+        let mut running: Vec<Running> = Vec::new();
+        let mut next_seq = 0u64;
+        let mut first_starts: Vec<usize> = Vec::new();
+        let mut finished: Vec<usize> = Vec::new();
+        let mut n_preempted = 0usize;
+        let mut steps = 0usize;
+        while !queue.is_empty() || !running.is_empty() {
+            steps += 1;
+            assert!(steps < 10_000, "scheduler wedged (case {case})");
+            let decode_rows = running
+                .iter()
+                .filter(|r| r.remaining_prefill == 0)
+                .count();
+            let mut b = StepBudget::open(budget, decode_rows);
+            // continuation chunks, oldest admission first
+            for r in running.iter_mut() {
+                if r.remaining_prefill == 0 {
+                    continue;
+                }
+                let c = chunk_len(r.remaining_prefill, chunk_cap, b.left());
+                if c == 0 {
+                    break;
+                }
+                b.charge(c);
+                r.remaining_prefill -= c;
+            }
+            // admissions fill leftover budget, FCFS
+            while b.left() > 0 && running.len() < batch && !queue.is_empty()
+            {
+                let (id, n_prompt, max_new) = queue.remove(0);
+                let seq = next_seq;
+                next_seq += 1;
+                let mut r = Running {
+                    id,
+                    remaining_prefill: n_prompt,
+                    left_decode: max_new,
+                    emitted: 0,
+                    admit_seq: seq,
+                    resumed: first_starts.contains(&id),
+                };
+                if !r.resumed {
+                    first_starts.push(id);
+                }
+                let c = chunk_len(r.remaining_prefill, chunk_cap, b.left());
+                b.charge(c);
+                r.remaining_prefill -= c;
+                running.push(r);
+            }
+            assert!(
+                b.spent <= b.budget,
+                "step total {} exceeds budget {} (case {case})",
+                b.spent,
+                b.budget
+            );
+            // decode: every prefill-complete request advances by exactly
+            // one token this step — never displaced by prefill work
+            let mut advanced = 0usize;
+            for r in running.iter_mut() {
+                if r.remaining_prefill == 0 && r.left_decode > 0 {
+                    r.left_decode -= 1;
+                    r.emitted += 1;
+                    advanced += 1;
+                }
+            }
+            assert_eq!(
+                advanced, decode_rows,
+                "a decode row was displaced (case {case})"
+            );
+            // page-pressure preemption: youngest decoding slot, fresh
+            // admissions only (resume heads never preempt -> no livelock)
+            if !queue.is_empty()
+                && running.len() == batch
+                && rng.chance(0.25)
+            {
+                let candidates: Vec<(usize, u64)> = running
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, r)| {
+                        r.remaining_prefill == 0
+                            && r.left_decode > 0
+                            && !r.resumed
+                    })
+                    .map(|(i, r)| (i, r.admit_seq))
+                    .collect();
+                if let Some(vi) = pick_preemption_victim(candidates.clone())
+                {
+                    let max_seq =
+                        candidates.iter().map(|&(_, s)| s).max().unwrap();
+                    assert_eq!(
+                        running[vi].admit_seq, max_seq,
+                        "victim must be the youngest (case {case})"
+                    );
+                    let v = running.swap_remove(vi);
+                    n_preempted += 1;
+                    // the resumed prompt embeds the emitted tokens; the
+                    // last sampled token rides along as pending, so no
+                    // decode progress is lost
+                    queue.insert(
+                        0,
+                        (v.id, v.remaining_prefill + v.emitted, v.left_decode),
+                    );
+                }
+            }
+            running.retain(|r| {
+                if r.remaining_prefill == 0 && r.left_decode == 0 {
+                    finished.push(r.id);
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+        // everyone completes, preempted or not
+        finished.sort_unstable();
+        assert_eq!(
+            finished,
+            (0..n_req).collect::<Vec<_>>(),
+            "{n_preempted} preemptions, case {case}"
+        );
+        // FCFS within class: first prefill starts follow arrival order
+        let mut sorted = first_starts.clone();
+        sorted.sort_unstable();
+        assert_eq!(
+            first_starts, sorted,
+            "prefill must start in arrival order (case {case})"
+        );
+    }
 }
