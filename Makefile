@@ -11,11 +11,11 @@ CARGOFLAGS ?=
 # self-describing: xla (full tier-1), stub (vendored shim), python.
 TIER ?= xla
 
-.PHONY: verify verify-stub build test fmt clippy artifacts python-test clean
+.PHONY: verify verify-stub build test fmt clippy lint artifacts python-test clean
 
 ## tier-1 gate: release build, test suite, formatting, lints
-verify: build test fmt clippy
-	@echo "[verify] tier ran: $(TIER) (cargo build+test+fmt+clippy$(if $(CARGOFLAGS), with $(CARGOFLAGS)))"
+verify: build test fmt clippy lint
+	@echo "[verify] tier ran: $(TIER) (cargo build+test+fmt+clippy+lint$(if $(CARGOFLAGS), with $(CARGOFLAGS)))"
 
 ## tier-1 gate on the vendored no-op XLA shim (no libxla required);
 ## integration tests self-skip, host-only unit tests all run — including
@@ -40,6 +40,14 @@ fmt:
 
 clippy:
 	$(CARGO) clippy -q --all-targets $(CARGOFLAGS) -- -D warnings
+	$(CARGO) clippy -q --lib $(CARGOFLAGS) -- -D warnings \
+		-W clippy::dbg_macro -W clippy::todo -W clippy::print_stdout
+
+## repo-specific static analysis (ao-lint): hot-path panic-freedom,
+## aot.py<->artifact.rs contract drift, config-surface completeness,
+## metrics render completeness. See docs/static_analysis.md.
+lint:
+	$(CARGO) run -q --release --bin ao-lint $(CARGOFLAGS)
 
 ## AOT-lower the JAX model into artifacts/ (manifest.json + *.hlo.txt);
 ## the Rust runtime and the integration tests consume these

@@ -54,8 +54,7 @@ fn bench_json_entry(label: &str, m: &MetricsCollector) -> Value {
 fn main() -> anyhow::Result<()> {
     ao::util::log::init();
     let steps = bs::bench_steps(30);
-    let n_requests = std::env::var("AO_BENCH_REQUESTS")
-        .ok()
+    let n_requests = ao::util::env::var("AO_BENCH_REQUESTS")
         .and_then(|v| v.parse().ok())
         .unwrap_or(12usize);
     let kv_cache = bs::bench_cache_scheme()?;

@@ -23,8 +23,7 @@ use std::time::Instant;
 /// Steps used when a bench needs a trained model. Override with
 /// AO_BENCH_STEPS; the default keeps every bench minutes-scale on 1 core.
 pub fn bench_steps(default: usize) -> usize {
-    std::env::var("AO_BENCH_STEPS")
-        .ok()
+    crate::util::env::var("AO_BENCH_STEPS")
         .and_then(|v| v.parse().ok())
         .unwrap_or(default)
 }
@@ -108,12 +107,12 @@ pub fn kv_layout_from(var: Option<&str>) -> Result<KvLayout> {
 
 /// KV-cache scheme benches serve with: AO_KV_CACHE (f32 default).
 pub fn bench_cache_scheme() -> Result<CacheScheme> {
-    cache_scheme_from(std::env::var("AO_KV_CACHE").ok().as_deref())
+    cache_scheme_from(crate::util::env::var("AO_KV_CACHE").as_deref())
 }
 
 /// KV-cache layout benches serve with: AO_KV_LAYOUT (static default).
 pub fn bench_kv_layout() -> Result<KvLayout> {
-    kv_layout_from(std::env::var("AO_KV_LAYOUT").ok().as_deref())
+    kv_layout_from(crate::util::env::var("AO_KV_LAYOUT").as_deref())
 }
 
 /// Parse an optional AO_PREFIX_CACHE value (None/"" -> enabled: the
@@ -130,7 +129,7 @@ pub fn prefix_cache_from(var: Option<&str>) -> Result<bool> {
 
 /// Prefix-cache toggle benches serve with: AO_PREFIX_CACHE (on default).
 pub fn bench_prefix_cache() -> Result<bool> {
-    prefix_cache_from(std::env::var("AO_PREFIX_CACHE").ok().as_deref())
+    prefix_cache_from(crate::util::env::var("AO_PREFIX_CACHE").as_deref())
 }
 
 /// Parse an optional AO_MAX_BATCH_TOKENS value (None/"" -> scheduler
@@ -160,7 +159,28 @@ pub fn max_batch_tokens_from(var: Option<&str>) -> Result<Option<usize>> {
 /// Iteration-level scheduler budget benches serve with:
 /// AO_MAX_BATCH_TOKENS (off default).
 pub fn bench_max_batch_tokens() -> Result<Option<usize>> {
-    max_batch_tokens_from(std::env::var("AO_MAX_BATCH_TOKENS").ok().as_deref())
+    max_batch_tokens_from(
+        crate::util::env::var("AO_MAX_BATCH_TOKENS").as_deref(),
+    )
+}
+
+/// Parse an optional AO_EOS_TOKEN value (None/"" -> decode the full
+/// `max_new_tokens` budget, no early stop).
+pub fn eos_token_from(var: Option<&str>) -> Result<Option<u32>> {
+    match var {
+        None | Some("") => Ok(None),
+        Some(v) => v.parse::<u32>().map(Some).map_err(|_| {
+            anyhow::anyhow!(
+                "AO_EOS_TOKEN: '{v}' is not a token id (unset or empty \
+                 disables early stop)"
+            )
+        }),
+    }
+}
+
+/// EOS early-stop token benches serve with: AO_EOS_TOKEN (off default).
+pub fn bench_eos_token() -> Result<Option<u32>> {
+    eos_token_from(crate::util::env::var("AO_EOS_TOKEN").as_deref())
 }
 
 /// Run a full serving workload in-process; returns engine metrics
@@ -217,10 +237,11 @@ pub fn serve_workload_sched(
         // combination is benchable from one binary
         cache_scheme: bench_cache_scheme()?,
         kv_layout: bench_kv_layout()?,
-        eos_token: None,
+        // AO_EOS_TOKEN=<id> exercises EOS early-stop in any bench
+        eos_token: bench_eos_token()?,
         // AO_HOST_ADMISSION=1 A/Bs the admission paths in any bench
-        host_admission: std::env::var("AO_HOST_ADMISSION")
-            .map_or(false, |v| v == "1"),
+        host_admission: crate::util::env::var("AO_HOST_ADMISSION")
+            .is_some_and(|v| v == "1"),
         // AO_PREFIX_CACHE=0 A/Bs prefix sharing under the paged layout
         prefix_cache,
         // AO_MAX_BATCH_TOKENS=<budget> turns on the iteration-level
@@ -252,9 +273,8 @@ pub fn serve_workload_sched(
     }
     handle.shutdown();
     let metrics = join.join().expect("engine thread")?;
-    let report_on = std::env::var("AO_BENCH_REPORT")
-        .map(|v| !v.is_empty() && v != "0")
-        .unwrap_or(false);
+    let report_on = crate::util::env::var("AO_BENCH_REPORT")
+        .is_some_and(|v| !v.is_empty() && v != "0");
     if report_on {
         eprintln!("{}", metrics.report(&format!("{model}/{scheme}")));
     }
@@ -300,6 +320,9 @@ impl Table {
         self.rows.push(cells);
     }
 
+    // stdout is this type's contract: benches pipe the table into their
+    // CSV/console output, so the print_stdout lint is waived here
+    #[allow(clippy::print_stdout)]
     pub fn print(&self) {
         let mut widths: Vec<usize> =
             self.headers.iter().map(|h| h.len()).collect();
@@ -382,5 +405,14 @@ mod tests {
         let e =
             format!("{:#}", max_batch_tokens_from(Some("0")).unwrap_err());
         assert!(e.contains("AO_MAX_BATCH_TOKENS"), "{e}");
+    }
+
+    #[test]
+    fn eos_token_env_contract() {
+        assert_eq!(eos_token_from(None).unwrap(), None);
+        assert_eq!(eos_token_from(Some("")).unwrap(), None);
+        assert_eq!(eos_token_from(Some("3")).unwrap(), Some(3));
+        let e = format!("{:#}", eos_token_from(Some("eof")).unwrap_err());
+        assert!(e.contains("AO_EOS_TOKEN"), "{e}");
     }
 }

@@ -1,0 +1,83 @@
+//! Finding record + renderers (human one-liner and the `--json` report).
+
+/// One lint finding. `file` is repo-root-relative; `line` is 1-based.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Hand-rolled JSON report (the binary is dependency-free by design).
+/// Shape: `{"tool": "ao-lint", "findings": [...], "count": N}`.
+pub fn to_json(findings: &[Finding]) -> String {
+    let mut s = String::from("{\n  \"tool\": \"ao-lint\",\n  \"findings\": [");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str("\n    {\"rule\": \"");
+        s.push_str(&esc(f.rule));
+        s.push_str("\", \"file\": \"");
+        s.push_str(&esc(&f.file));
+        s.push_str("\", \"line\": ");
+        s.push_str(&f.line.to_string());
+        s.push_str(", \"message\": \"");
+        s.push_str(&esc(&f.message));
+        s.push_str("\"}");
+    }
+    if !findings.is_empty() {
+        s.push_str("\n  ");
+    }
+    s.push_str("],\n  \"count\": ");
+    s.push_str(&findings.len().to_string());
+    s.push_str("\n}");
+    s
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escapes_and_counts() {
+        let f = Finding {
+            rule: "r1-panic",
+            file: "rust/src/coordinator/engine.rs".to_string(),
+            line: 42,
+            message: "say \"no\" to\npanics".to_string(),
+        };
+        let j = to_json(&[f]);
+        assert!(j.contains("\"count\": 1"), "{j}");
+        assert!(j.contains("say \\\"no\\\" to\\npanics"), "{j}");
+        assert!(j.contains("\"line\": 42"), "{j}");
+        let empty = to_json(&[]);
+        assert!(empty.contains("\"findings\": [],"), "{empty}");
+        assert!(empty.contains("\"count\": 0"), "{empty}");
+    }
+}

@@ -1,0 +1,516 @@
+//! Minimal hand-rolled lexers for Rust and Python sources.
+//!
+//! The offline dependency set has no `syn` (the repo deliberately carries
+//! only `anyhow` + `xla`), and grep-level matching is exactly what the lint
+//! must NOT do: the repo's doc comments and format strings mention
+//! `unwrap()` and manifest tags freely. Tokenising is the cheapest level
+//! that distinguishes code from comments/strings, which is all the rules
+//! need. Neither lexer aims for full language fidelity — they only have to
+//! be exact about comment/string/char boundaries and line numbers.
+
+/// Token classes shared by both lexers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Str,
+    Num,
+    Punct,
+    Char,
+}
+
+/// One token: class, text (string contents for `Str`, with escape
+/// sequences kept verbatim), and the 1-based line it starts on.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: usize,
+}
+
+impl Tok {
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == Kind::Punct && self.text.len() == c.len_utf8() && self.text.starts_with(c)
+    }
+
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == Kind::Ident && self.text == s
+    }
+
+    pub fn is_str(&self, s: &str) -> bool {
+        self.kind == Kind::Str && self.text == s
+    }
+}
+
+/// Lex Rust source. Handles line/nested-block comments, plain and raw
+/// (byte) strings, char-vs-lifetime disambiguation, idents, numbers; every
+/// other byte becomes a single-char `Punct`.
+pub fn lex_rust(src: &str) -> Vec<Tok> {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut i = 0;
+    let mut line = 1usize;
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            continue;
+        }
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        if let Some((text, len)) = raw_string(&b, i) {
+            let tok_line = line;
+            line += text.matches('\n').count();
+            toks.push(Tok { kind: Kind::Str, text, line: tok_line });
+            i += len;
+            continue;
+        }
+        if c == '"' || (c == 'b' && i + 1 < n && b[i + 1] == '"') {
+            if c == 'b' {
+                i += 1;
+            }
+            let tok_line = line;
+            let mut text = String::new();
+            i += 1;
+            while i < n && b[i] != '"' {
+                if b[i] == '\\' && i + 1 < n {
+                    // a `\`-escaped newline (string continuation) still
+                    // advances the line counter
+                    if b[i + 1] == '\n' {
+                        line += 1;
+                    }
+                    text.push(b[i]);
+                    text.push(b[i + 1]);
+                    i += 2;
+                } else {
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
+                    text.push(b[i]);
+                    i += 1;
+                }
+            }
+            i += 1;
+            toks.push(Tok { kind: Kind::Str, text, line: tok_line });
+            continue;
+        }
+        if c == '\'' {
+            // Char literal vs lifetime: '\x' escapes and 'x' single chars
+            // are literals; anything else is a lifetime tick (the ident
+            // after it lexes on its own).
+            if i + 1 < n && b[i + 1] == '\\' {
+                let mut j = i + 2;
+                while j < n && b[j] != '\'' {
+                    j += 1;
+                }
+                i = if j < n { j + 1 } else { i + 2 };
+                toks.push(Tok { kind: Kind::Char, text: String::new(), line });
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == '\'' {
+                toks.push(Tok { kind: Kind::Char, text: b[i + 1].to_string(), line });
+                i += 3;
+                continue;
+            }
+            toks.push(Tok { kind: Kind::Punct, text: "'".to_string(), line });
+            i += 1;
+            continue;
+        }
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            toks.push(Tok { kind: Kind::Ident, text, line });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            toks.push(Tok { kind: Kind::Num, text, line });
+            continue;
+        }
+        toks.push(Tok { kind: Kind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    toks
+}
+
+/// Match a raw (byte) string `r"..."` / `r#"..."#` / `br#"..."#` starting
+/// at `i`. Returns the contents and total consumed length.
+fn raw_string(b: &[char], i: usize) -> Option<(String, usize)> {
+    let mut j = i;
+    if b.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if b.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while b.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) != Some(&'"') {
+        return None;
+    }
+    j += 1;
+    let start = j;
+    while j < b.len() {
+        if b[j] == '"' {
+            let mut k = j + 1;
+            let mut h = 0;
+            while h < hashes && b.get(k) == Some(&'#') {
+                h += 1;
+                k += 1;
+            }
+            if h == hashes {
+                let text: String = b[start..j].iter().collect();
+                return Some((text, k - i));
+            }
+        }
+        j += 1;
+    }
+    let text: String = b[start..].iter().collect();
+    Some((text, b.len() - i))
+}
+
+/// Lex Python source: `#` comments, string prefixes (`rbfuRBFU`), triple
+/// quotes, idents, numbers, single-char puncts.
+pub fn lex_python(src: &str) -> Vec<Tok> {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut i = 0;
+    let mut line = 1usize;
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        if c == '#' {
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            continue;
+        }
+        if let Some(qpos) = py_string_start(&b, i) {
+            let q = b[qpos];
+            let triple = qpos + 2 < n && b[qpos + 1] == q && b[qpos + 2] == q;
+            let delim = if triple { 3 } else { 1 };
+            let tok_line = line;
+            let mut text = String::new();
+            let mut j = qpos + delim;
+            while j < n {
+                if !triple && b[j] == '\\' && j + 1 < n {
+                    if b[j + 1] == '\n' {
+                        line += 1;
+                    }
+                    text.push(b[j]);
+                    text.push(b[j + 1]);
+                    j += 2;
+                    continue;
+                }
+                if b[j] == q && (!triple || (j + 2 < n && b[j + 1] == q && b[j + 2] == q)) {
+                    break;
+                }
+                if b[j] == '\n' {
+                    line += 1;
+                }
+                text.push(b[j]);
+                j += 1;
+            }
+            toks.push(Tok { kind: Kind::Str, text, line: tok_line });
+            i = (j + delim).min(n);
+            continue;
+        }
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            toks.push(Tok { kind: Kind::Ident, text, line });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_' || b[i] == '.') {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            toks.push(Tok { kind: Kind::Num, text, line });
+            continue;
+        }
+        toks.push(Tok { kind: Kind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    toks
+}
+
+/// Detect a Python string start at `i`: up to three prefix letters
+/// (`r`/`b`/`f`/`u`, either case) followed by a quote. Returns the quote
+/// position. A plain quote (no prefix) also matches.
+fn py_string_start(b: &[char], i: usize) -> Option<usize> {
+    let is_prefix = |c: char| matches!(c, 'r' | 'b' | 'f' | 'u' | 'R' | 'B' | 'F' | 'U');
+    let mut j = i;
+    while j < b.len() && j - i < 3 && is_prefix(b[j]) {
+        j += 1;
+    }
+    if j < b.len() && (b[j] == '"' || b[j] == '\'') {
+        Some(j)
+    } else {
+        None
+    }
+}
+
+/// Drop every token range covered by a `#[cfg(test)]` item: the attribute
+/// tokens themselves, then everything up to and including the matching
+/// close brace of the item that follows (in this repo always a
+/// `mod tests { ... }`).
+pub fn strip_cfg_test(toks: &[Tok]) -> Vec<Tok> {
+    let hit = |k: usize, kind: Kind, text: &str| {
+        toks.get(k)
+            .is_some_and(|t| t.kind == kind && t.text == text)
+    };
+    let mut out = Vec::new();
+    let mut i = 0;
+    let n = toks.len();
+    while i < n {
+        if hit(i, Kind::Punct, "#")
+            && hit(i + 1, Kind::Punct, "[")
+            && hit(i + 2, Kind::Ident, "cfg")
+            && hit(i + 3, Kind::Punct, "(")
+            && hit(i + 4, Kind::Ident, "test")
+            && hit(i + 5, Kind::Punct, ")")
+            && hit(i + 6, Kind::Punct, "]")
+        {
+            let mut j = i + 7;
+            while j < n && !hit(j, Kind::Punct, "{") {
+                j += 1;
+            }
+            let mut depth = 0i32;
+            while j < n {
+                if hit(j, Kind::Punct, "{") {
+                    depth += 1;
+                }
+                if hit(j, Kind::Punct, "}") {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                j += 1;
+            }
+            i = j + 1;
+            continue;
+        }
+        out.push(toks[i].clone());
+        i += 1;
+    }
+    out
+}
+
+/// Collect the `pub` field names (with lines) of the struct called `name`.
+/// Only plain `pub ident:` fields count — `pub(crate)` and private fields
+/// are intentionally invisible to the rules built on this.
+pub fn struct_pub_fields(toks: &[Tok], name: &str) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + 2 < toks.len() {
+        if toks[i].is_ident("struct") && toks[i + 1].is_ident(name) {
+            let mut j = i + 2;
+            while j < toks.len() && !toks[j].is_punct('{') {
+                j += 1;
+            }
+            let mut depth = 0i32;
+            while j < toks.len() {
+                if toks[j].is_punct('{') {
+                    depth += 1;
+                }
+                if toks[j].is_punct('}') {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                if depth == 1
+                    && toks[j].is_ident("pub")
+                    && toks.get(j + 1).is_some_and(|t| t.kind == Kind::Ident)
+                    && toks.get(j + 2).is_some_and(|t| t.is_punct(':'))
+                {
+                    out.push((toks[j + 1].text.clone(), toks[j + 1].line));
+                }
+                j += 1;
+            }
+            break;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Line of the first `Ident` token equal to `name`, for anchoring
+/// cross-file drift messages. Falls back to line 1.
+pub fn ident_line(toks: &[Tok], name: &str) -> usize {
+    toks.iter()
+        .find(|t| t.is_ident(name))
+        .map_or(1, |t| t.line)
+}
+
+/// Line of the first `Str` token equal to `text` (same fallback).
+pub fn str_line(toks: &[Tok], text: &str) -> usize {
+    toks.iter().find(|t| t.is_str(text)).map_or(1, |t| t.line)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(toks: &[Tok]) -> Vec<String> {
+        toks.iter()
+            .filter(|t| t.kind == Kind::Ident)
+            .map(|t| t.text.clone())
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_hide_panic_words() {
+        let src = r##"
+// a comment mentioning .unwrap() and panic!
+/* block with unwrap()
+   /* nested */ still comment */
+fn f() {
+    let msg = "call unwrap() here";
+    let raw = r#"expect("x")"#;
+    let b = b"panic!";
+    log(msg, raw, b);
+}
+"##;
+        let toks = lex_rust(src);
+        let ids = idents(&toks);
+        assert!(!ids.contains(&"unwrap".to_string()), "{ids:?}");
+        assert!(!ids.contains(&"expect".to_string()), "{ids:?}");
+        assert!(!ids.contains(&"panic".to_string()), "{ids:?}");
+        assert!(ids.contains(&"msg".to_string()));
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let toks = lex_rust("fn f<'a>(x: &'a str) -> char { 'x' }");
+        assert!(toks.iter().any(|t| t.kind == Kind::Char && t.text == "x"));
+        assert!(toks.iter().any(|t| t.is_ident("a")));
+        let esc = lex_rust(r"let c = '\n';");
+        assert!(esc.iter().any(|t| t.kind == Kind::Char));
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_constructs() {
+        let src = "/* two\nlines */\nlet s = \"a\nb\";\nlet x = 1;\n";
+        let toks = lex_rust(src);
+        let x = toks.iter().find(|t| t.is_ident("x")).unwrap();
+        assert_eq!(x.line, 5);
+        let s = toks.iter().find(|t| t.kind == Kind::Str).unwrap();
+        assert_eq!(s.line, 3);
+        // `\`-continued format strings (the repo style for long messages)
+        // must not lose the continuation newline
+        let cont = lex_rust("let m = \"one \\\n  two\";\nlet y = 2;\n");
+        let y = cont.iter().find(|t| t.is_ident("y")).unwrap();
+        assert_eq!(y.line, 3);
+    }
+
+    #[test]
+    fn cfg_test_mod_is_stripped() {
+        let src = "
+fn live() { a.unwrap(); }
+#[cfg(test)]
+mod tests {
+    fn t() { b.unwrap(); }
+}
+fn after() { c() }
+";
+        let toks = strip_cfg_test(&lex_rust(src));
+        let ids = idents(&toks);
+        assert!(ids.contains(&"live".to_string()));
+        assert!(ids.contains(&"after".to_string()));
+        assert!(!ids.contains(&"tests".to_string()));
+        assert!(!ids.contains(&"b".to_string()));
+    }
+
+    #[test]
+    fn python_strings_and_comments() {
+        let src = "
+# comment with \"kind\"
+def f():
+    '''doc with \"kind\": \"fake\"'''
+    entry = {\"kind\": \"decode\"}
+    name = f\"{m}_x\"
+    return entry, name
+";
+        let toks = lex_python(src);
+        let strs: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == Kind::Str)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert!(strs.contains(&"kind"));
+        assert!(strs.contains(&"decode"));
+        // the docstring is one token, not a parsed dict
+        assert!(strs.iter().any(|s| s.contains("fake")));
+        assert_eq!(strs.iter().filter(|s| **s == "fake").count(), 0);
+    }
+
+    #[test]
+    fn struct_pub_fields_sees_only_top_level_pub() {
+        let src = "
+pub struct EngineConfig {
+    pub model: String,
+    pub scheme: Scheme,
+    secret: u32,
+}
+";
+        let fields = struct_pub_fields(&lex_rust(src), "EngineConfig");
+        let names: Vec<&str> = fields.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["model", "scheme"]);
+        assert_eq!(fields[0].1, 3);
+    }
+}

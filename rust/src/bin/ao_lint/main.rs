@@ -1,0 +1,285 @@
+//! `ao-lint` — repo-specific static analysis for the aot.py ↔ runtime
+//! contract and the serving hot path. Dependency-free by design (the
+//! offline registry has no `syn`; the package carries only `anyhow` +
+//! `xla`, neither of which this binary uses).
+//!
+//! Rules:
+//!
+//! * **R1 `r1-panic` / `r1-index`** — no `unwrap`/`expect`/`panic!`-family
+//!   macros or `[]` indexing in non-test code under `rust/src/coordinator/`
+//!   and `rust/src/runtime/`; escape hatch is an auditable
+//!   `// ao-lint: allow(panic|index) -- <reason>` marker.
+//! * **R2 `r2-contract`** — manifest kinds, trailing-input/cache name
+//!   lists, and tag keys must agree between `python/compile/aot.py` and
+//!   `rust/src/runtime/artifact.rs` (both directions, both line numbers).
+//! * **R3 `r3-config`** — every `EngineConfig` field needs a serve flag,
+//!   an env/param binding in benchsupport, and a docs mention.
+//! * **R4 `r4-metrics`** — every `MetricsCollector` counter must reach the
+//!   report rendering.
+//!
+//! Usage: `cargo run --bin ao-lint [-- --json] [-- --root <dir>]`. Paths
+//! are resolved from `CARGO_MANIFEST_DIR` (the repo root), not the CWD,
+//! so the binary works from any directory. Exit codes: 0 clean, 1
+//! findings, 2 internal error (unreadable file, bad usage).
+
+mod findings;
+mod lexer;
+mod r1_panic;
+mod r2_contract;
+mod r3_config;
+mod r4_metrics;
+
+use std::path::{Path, PathBuf};
+
+use findings::Finding;
+
+/// One loaded source file: repo-root-relative path + contents.
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+}
+
+fn load(root: &Path, rel: &str) -> Result<SourceFile, String> {
+    let full = root.join(rel);
+    let text = std::fs::read_to_string(&full)
+        .map_err(|e| format!("cannot read {}: {e}", full.display()))?;
+    Ok(SourceFile { path: rel.to_string(), text })
+}
+
+/// R1 scope: every `.rs` file directly under these directories.
+const R1_DIRS: [&str; 2] = ["rust/src/coordinator", "rust/src/runtime"];
+
+fn r1_scope(root: &Path) -> Result<Vec<SourceFile>, String> {
+    let mut files = Vec::new();
+    for dir in R1_DIRS {
+        let full = root.join(dir);
+        let entries = std::fs::read_dir(&full)
+            .map_err(|e| format!("cannot list {}: {e}", full.display()))?;
+        let mut names: Vec<String> = entries
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".rs"))
+            .collect();
+        names.sort();
+        for n in names {
+            files.push(load(root, &format!("{dir}/{n}"))?);
+        }
+    }
+    Ok(files)
+}
+
+fn load_docs(root: &Path) -> Result<Vec<SourceFile>, String> {
+    let full = root.join("docs");
+    let entries = std::fs::read_dir(&full)
+        .map_err(|e| format!("cannot list {}: {e}", full.display()))?;
+    let mut names: Vec<String> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.ends_with(".md"))
+        .collect();
+    names.sort();
+    let mut docs = Vec::new();
+    for n in names {
+        docs.push(load(root, &format!("docs/{n}"))?);
+    }
+    Ok(docs)
+}
+
+/// Rust files that dispatch on artifact kinds (R2 consumers).
+const R2_CONSUMERS: [&str; 5] = [
+    "rust/src/runtime/artifact.rs",
+    "rust/src/coordinator/engine.rs",
+    "rust/src/train/mod.rs",
+    "rust/src/evalh/mod.rs",
+    "rust/benches/fig3_fp8_microbench.rs",
+];
+
+/// Run every rule against the repo at `root`.
+pub fn run_all(root: &Path) -> Result<Vec<Finding>, String> {
+    let scope = r1_scope(root)?;
+    let mut out = r1_panic::check(&scope);
+    for f in &scope {
+        if f.path.ends_with("coordinator/scheduler.rs") {
+            out.extend(r1_panic::scheduler_purity(f));
+        }
+    }
+
+    let aot = load(root, "python/compile/aot.py")?;
+    let artifact = load(root, "rust/src/runtime/artifact.rs")?;
+    let mut consumers = Vec::new();
+    for rel in R2_CONSUMERS {
+        consumers.push(load(root, rel)?);
+    }
+    out.extend(r2_contract::check(&aot, &artifact, &consumers));
+
+    let engine = load(root, "rust/src/coordinator/engine.rs")?;
+    let main_rs = load(root, "rust/src/main.rs")?;
+    let benchsupport = load(root, "rust/src/benchsupport/mod.rs")?;
+    let lib_rs = load(root, "rust/src/lib.rs")?;
+    let docs = load_docs(root)?;
+    out.extend(r3_config::check(&engine, &main_rs, &benchsupport, &lib_rs, &docs));
+
+    let metrics = load(root, "rust/src/coordinator/metrics.rs")?;
+    out.extend(r4_metrics::check(&metrics));
+    Ok(out)
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut json = false;
+    let mut root_arg: Option<String> = None;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--json" => json = true,
+            "--root" => {
+                i += 1;
+                root_arg = argv.get(i).cloned();
+                if root_arg.is_none() {
+                    eprintln!("ao-lint: --root needs a directory argument");
+                    std::process::exit(2);
+                }
+            }
+            other => {
+                eprintln!("ao-lint: unknown argument '{other}'");
+                eprintln!("usage: ao-lint [--json] [--root <dir>]");
+                std::process::exit(2);
+            }
+        }
+        i += 1;
+    }
+    let root = match &root_arg {
+        Some(p) => PathBuf::from(p),
+        None => PathBuf::from(env!("CARGO_MANIFEST_DIR")),
+    };
+    match run_all(&root) {
+        Ok(finds) => {
+            if json {
+                println!("{}", findings::to_json(&finds));
+            } else {
+                for f in &finds {
+                    println!("{}", f.render());
+                }
+                if finds.is_empty() {
+                    eprintln!("ao-lint: clean (R1 panics, R2 contract, R3 config, R4 metrics)");
+                } else {
+                    eprintln!("ao-lint: {} finding(s)", finds.len());
+                }
+            }
+            if !finds.is_empty() {
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("ao-lint: error: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+    }
+
+    /// The self-test the whole pass hangs off: the repo lints clean.
+    #[test]
+    fn repo_lints_clean() {
+        let finds = run_all(&root()).expect("lint run");
+        let rendered: Vec<String> = finds.iter().map(|f| f.render()).collect();
+        assert!(finds.is_empty(), "repo should lint clean:\n{}", rendered.join("\n"));
+    }
+
+    /// Allow-marker census: the escape-hatch count can only change
+    /// deliberately, with this assertion updated in the same diff.
+    #[test]
+    fn allow_marker_census_is_exact() {
+        let scope = r1_scope(&root()).expect("scope");
+        let census = r1_panic::marker_census(&scope);
+        // (line-level panic, line-level index, file-level) markers:
+        // - engine.rs: 1 allow(panic) on the engine-thread spawn,
+        //   allow-file(index)
+        // - prefixcache.rs: 2 allow(index) on depth-bounded slices
+        // - pager.rs, runtime/mod.rs, artifact.rs: allow-file(index)
+        assert_eq!(census, (1, 2, 4), "update this census when adding/removing markers");
+    }
+
+    /// Acceptance probe: a bare unwrap re-added to engine.rs is caught.
+    #[test]
+    fn reintroduced_unwrap_in_engine_fails_r1() {
+        let engine = load(&root(), "rust/src/coordinator/engine.rs").expect("engine.rs");
+        let patched = SourceFile {
+            path: engine.path.clone(),
+            text: format!(
+                "{}\nfn lint_probe(v: Option<u32>) -> u32 {{ v.unwrap() }}\n",
+                engine.text
+            ),
+        };
+        let base = r1_panic::check(&[engine]);
+        let finds = r1_panic::check(&[patched]);
+        assert_eq!(base.len(), 0, "{base:?}");
+        assert_eq!(finds.len(), 1, "{finds:?}");
+        assert_eq!(finds[0].rule, "r1-panic");
+    }
+
+    /// Acceptance probe: deleting one `(kind, layout)` match arm from
+    /// artifact.rs fails R2 with both file:line locations in the message.
+    #[test]
+    fn deleted_artifact_arm_fails_r2() {
+        let aot = load(&root(), "python/compile/aot.py").expect("aot.py");
+        let artifact = load(&root(), "rust/src/runtime/artifact.rs").expect("artifact.rs");
+        let needle = "(\"decode\", \"paged\")";
+        assert!(artifact.text.contains(needle), "expected arm in artifact.rs");
+        let patched_text: String = artifact
+            .text
+            .lines()
+            .filter(|l| !l.contains(needle))
+            .collect::<Vec<&str>>()
+            .join("\n");
+        let patched = SourceFile { path: artifact.path.clone(), text: patched_text };
+        let mut consumers = vec![SourceFile {
+            path: patched.path.clone(),
+            text: patched.text.clone(),
+        }];
+        for rel in &R2_CONSUMERS[1..] {
+            consumers.push(load(&root(), rel).expect("consumer"));
+        }
+        let finds = r2_contract::check(&aot, &patched, &consumers);
+        assert!(!finds.is_empty(), "deleting an arm must fail R2");
+        let msg = finds
+            .iter()
+            .map(|f| f.render())
+            .collect::<Vec<String>>()
+            .join("\n");
+        assert!(msg.contains("python/compile/aot.py:"), "{msg}");
+        assert!(msg.contains("rust/src/runtime/artifact.rs:"), "{msg}");
+    }
+
+    /// Acceptance probe: renaming a manifest kind on the exporter side
+    /// fails R2 in both directions.
+    #[test]
+    fn renamed_python_kind_fails_r2() {
+        let aot = load(&root(), "python/compile/aot.py").expect("aot.py");
+        let artifact = load(&root(), "rust/src/runtime/artifact.rs").expect("artifact.rs");
+        assert!(aot.text.contains("\"kind\": \"nll\""), "expected nll kind in aot.py");
+        let patched = SourceFile {
+            path: aot.path.clone(),
+            text: aot.text.replace("\"kind\": \"nll\"", "\"kind\": \"nll2\""),
+        };
+        let mut consumers = Vec::new();
+        for rel in R2_CONSUMERS {
+            consumers.push(load(&root(), rel).expect("consumer"));
+        }
+        let finds = r2_contract::check(&patched, &artifact, &consumers);
+        let msg = finds
+            .iter()
+            .map(|f| f.render())
+            .collect::<Vec<String>>()
+            .join("\n");
+        assert!(msg.contains("'nll2'"), "{msg}");
+        assert!(msg.contains("'nll'"), "{msg}");
+    }
+}

@@ -1,0 +1,351 @@
+//! R1 — hot-path panic-freedom.
+//!
+//! Non-`#[cfg(test)]` code under `rust/src/coordinator/` and
+//! `rust/src/runtime/` must not call `.unwrap()` / `.expect()`, invoke
+//! `panic!` / `unreachable!` / `todo!` / `unimplemented!`, or use `[]`
+//! indexing: the serving loop is expected to survive a malformed request
+//! burst by failing the slot/request, not the process. Deliberate
+//! exceptions carry an auditable marker:
+//!
+//! ```text
+//! // ao-lint: allow(panic) -- reason the panic is load-time-only
+//! // ao-lint: allow(index) -- reason the bound holds
+//! // ao-lint: allow-file(index) -- file-wide reason
+//! ```
+//!
+//! A line-level `allow` covers its own line and the line below it; a
+//! marker without a `-- reason` is itself a finding. This module also
+//! hosts the scheduler-purity micro-rule: `scheduler.rs` is pure policy
+//! and must not read clocks or the environment.
+
+use crate::findings::Finding;
+use crate::lexer::{self, Kind};
+use crate::SourceFile;
+
+/// One parsed `ao-lint:` marker.
+#[derive(Debug, Clone)]
+pub struct Marker {
+    pub line: usize,
+    pub cat: String,
+    pub file_level: bool,
+    pub reason: String,
+}
+
+/// Idents that legitimately precede `[` without indexing a value
+/// (`&mut [T]`, `impl [..]`, `dyn [..]`, `return [..]`, ...).
+const KEYWORDS: &[&str] = &[
+    "mut", "ref", "in", "as", "dyn", "where", "impl", "else", "return", "match", "if", "let",
+    "move", "box", "static", "const", "crate", "self", "Self", "super", "pub", "use", "fn",
+    "type", "break", "continue", "loop", "while", "for", "unsafe", "extern", "trait", "enum",
+    "struct", "mod",
+];
+
+/// Parse every `// ... ao-lint: allow(cat) -- reason` marker in a file.
+pub fn parse_markers(file: &SourceFile) -> Vec<Marker> {
+    let mut out = Vec::new();
+    for (idx, raw) in file.text.lines().enumerate() {
+        let Some(cpos) = raw.find("//") else {
+            continue;
+        };
+        let comment = &raw[cpos..];
+        let Some(mpos) = comment.find("ao-lint:") else {
+            continue;
+        };
+        let rest = comment[mpos + "ao-lint:".len()..].trim_start();
+        let (file_level, rest) = if let Some(r) = rest.strip_prefix("allow-file(") {
+            (true, r)
+        } else if let Some(r) = rest.strip_prefix("allow(") {
+            (false, r)
+        } else {
+            continue;
+        };
+        let Some(close) = rest.find(')') else {
+            continue;
+        };
+        let cat = rest[..close].trim().to_string();
+        let after = rest[close + 1..].trim_start();
+        let reason = after
+            .strip_prefix("--")
+            .map(|r| r.trim().to_string())
+            .unwrap_or_default();
+        out.push(Marker { line: idx + 1, cat, file_level, reason });
+    }
+    out
+}
+
+/// Run R1 over every file in scope.
+pub fn check(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files {
+        check_file(f, &mut out);
+    }
+    out
+}
+
+fn check_file(f: &SourceFile, out: &mut Vec<Finding>) {
+    let markers = parse_markers(f);
+    for m in &markers {
+        if m.reason.is_empty() {
+            out.push(Finding {
+                rule: "marker",
+                file: f.path.clone(),
+                line: m.line,
+                message: format!("ao-lint allow marker for '{}' is missing a '-- <reason>'", m.cat),
+            });
+        }
+    }
+    let allowed = |line: usize, cat: &str| {
+        markers.iter().any(|m| {
+            if m.cat != cat {
+                return false;
+            }
+            m.file_level || m.line == line || m.line + 1 == line
+        })
+    };
+    let toks = lexer::strip_cfg_test(&lexer::lex_rust(&f.text));
+    for (k, t) in toks.iter().enumerate() {
+        let prev = if k > 0 { toks.get(k - 1) } else { None };
+        let next = toks.get(k + 1);
+        if t.kind == Kind::Ident
+            && (t.text == "unwrap" || t.text == "expect")
+            && prev.is_some_and(|p| p.is_punct('.'))
+            && next.is_some_and(|p| p.is_punct('('))
+            && !allowed(t.line, "panic")
+        {
+            out.push(Finding {
+                rule: "r1-panic",
+                file: f.path.clone(),
+                line: t.line,
+                message: format!(
+                    ".{}() in non-test hot-path code; recover via fail_slot/fail_request or \
+                     propagate with `?` (or add `// ao-lint: allow(panic) -- <reason>`)",
+                    t.text
+                ),
+            });
+        }
+        if t.kind == Kind::Ident
+            && matches!(t.text.as_str(), "panic" | "unreachable" | "todo" | "unimplemented")
+            && next.is_some_and(|p| p.is_punct('!'))
+            && !allowed(t.line, "panic")
+        {
+            out.push(Finding {
+                rule: "r1-panic",
+                file: f.path.clone(),
+                line: t.line,
+                message: format!(
+                    "{}! in non-test hot-path code; return an error instead \
+                     (or add `// ao-lint: allow(panic) -- <reason>`)",
+                    t.text
+                ),
+            });
+        }
+        if t.is_punct('[') {
+            if let Some(p) = prev {
+                let indexes = (p.kind == Kind::Ident && !KEYWORDS.contains(&p.text.as_str()))
+                    || p.is_punct(')')
+                    || p.is_punct(']');
+                if indexes && !allowed(t.line, "index") {
+                    out.push(Finding {
+                        rule: "r1-index",
+                        file: f.path.clone(),
+                        line: t.line,
+                        message: format!(
+                            "`[]` indexing after `{}` can panic; use get()/get_mut() \
+                             (or add `// ao-lint: allow(index) -- <reason>`)",
+                            p.text
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Scheduler-purity micro-rule: `scheduler.rs` decides policy from the
+/// numbers it is handed; clocks and env reads belong to the engine loop.
+pub fn scheduler_purity(f: &SourceFile) -> Vec<Finding> {
+    let toks = lexer::strip_cfg_test(&lexer::lex_rust(&f.text));
+    toks.iter()
+        .filter(|t| {
+            t.kind == Kind::Ident
+                && matches!(t.text.as_str(), "Instant" | "SystemTime" | "elapsed" | "env")
+        })
+        .map(|t| Finding {
+            rule: "sched-purity",
+            file: f.path.clone(),
+            line: t.line,
+            message: format!(
+                "`{}` in pure-policy scheduler.rs; pass timing/config in from the engine loop",
+                t.text
+            ),
+        })
+        .collect()
+}
+
+/// Census of allow markers across the R1 scope, used by the self-test so
+/// the count can only change deliberately:
+/// `(line-level panic, line-level index, file-level)`.
+#[cfg_attr(not(test), allow(dead_code))]
+pub fn marker_census(files: &[SourceFile]) -> (usize, usize, usize) {
+    let mut panic_line = 0;
+    let mut index_line = 0;
+    let mut file_level = 0;
+    for f in files {
+        for m in parse_markers(f) {
+            if m.file_level {
+                file_level += 1;
+            } else if m.cat == "panic" {
+                panic_line += 1;
+            } else if m.cat == "index" {
+                index_line += 1;
+            }
+        }
+    }
+    (panic_line, index_line, file_level)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn file(text: &str) -> SourceFile {
+        SourceFile { path: "rust/src/coordinator/fixture.rs".to_string(), text: text.to_string() }
+    }
+
+    fn rules(finds: &[Finding]) -> Vec<&'static str> {
+        finds.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn flags_unwrap_expect_and_macros() {
+        let f = file(
+            "fn hot(v: Option<u32>) -> u32 {
+    let a = v.unwrap();
+    let b = v.expect(\"boom\");
+    if a == b { panic!(\"eq\") } else { unreachable!() }
+}
+",
+        );
+        let finds = check(&[f]);
+        assert_eq!(rules(&finds), ["r1-panic", "r1-panic", "r1-panic", "r1-panic"]);
+        assert_eq!(finds[0].line, 2);
+    }
+
+    #[test]
+    fn flags_indexing_but_not_attrs_or_macros() {
+        let f = file(
+            "fn hot(v: &[u32], m: &M) -> u32 {
+    let a = v[0];
+    let b = m.rows()[1];
+    let c: &[u32] = &[1, 2];
+    let d = vec![3];
+    #[allow(dead_code)]
+    fn inner() {}
+    a + b + c.len() as u32 + d.len() as u32
+}
+",
+        );
+        let finds = check(&[f]);
+        assert_eq!(rules(&finds), ["r1-index", "r1-index"]);
+        assert_eq!(finds[0].line, 2);
+        assert_eq!(finds[1].line, 3);
+    }
+
+    #[test]
+    fn clean_snippet_passes() {
+        let f = file(
+            "fn hot(v: &[u32]) -> Result<u32, String> {
+    let x = v.first().ok_or_else(|| \"empty\".to_string())?;
+    Ok(*x)
+}
+",
+        );
+        assert!(check(&[f]).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_code_is_exempt() {
+        let f = file(
+            "fn live() {}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let v: Vec<u32> = vec![1];
+        assert_eq!(v[0], v.first().copied().unwrap());
+    }
+}
+",
+        );
+        assert!(check(&[f]).is_empty());
+    }
+
+    #[test]
+    fn comments_and_strings_do_not_trip() {
+        let f = file(
+            "// callers must not .unwrap() here
+fn live() -> String {
+    \"do not panic!\".to_string()
+}
+",
+        );
+        assert!(check(&[f]).is_empty());
+    }
+
+    #[test]
+    fn allow_marker_covers_same_and_next_line() {
+        let f = file(
+            "fn startup(v: Option<u32>) -> u32 {
+    // ao-lint: allow(panic) -- config validated at load time
+    let a = v.expect(\"validated\");
+    let b = v.unwrap(); // ao-lint: allow(panic) -- same-line marker
+    a + b
+}
+",
+        );
+        assert!(check(&[f]).is_empty());
+    }
+
+    #[test]
+    fn allow_marker_without_reason_is_a_finding() {
+        let f = file(
+            "fn startup(v: Option<u32>) -> u32 {
+    // ao-lint: allow(panic)
+    v.expect(\"validated\")
+}
+",
+        );
+        let finds = check(&[f]);
+        assert_eq!(rules(&finds), ["marker"]);
+    }
+
+    #[test]
+    fn file_level_allow_covers_whole_file() {
+        let f = file(
+            "// ao-lint: allow-file(index) -- fixture-wide bound argument
+fn hot(v: &[u32]) -> u32 {
+    v[0] + v[1]
+}
+",
+        );
+        assert!(check(&[f]).is_empty());
+        let census = marker_census(&[file(
+            "// ao-lint: allow-file(index) -- reason
+// ao-lint: allow(panic) -- reason
+// ao-lint: allow(index) -- reason
+fn f() {}
+",
+        )]);
+        assert_eq!(census, (1, 1, 1));
+    }
+
+    #[test]
+    fn scheduler_purity_flags_clocks_and_env() {
+        let f = SourceFile {
+            path: "rust/src/coordinator/scheduler.rs".to_string(),
+            text: "fn plan() { let t = Instant::now(); t.elapsed(); }\n".to_string(),
+        };
+        let finds = scheduler_purity(&f);
+        assert_eq!(rules(&finds), ["sched-purity", "sched-purity"]);
+    }
+}

@@ -1,0 +1,472 @@
+//! R2 — artifact-contract drift between `python/compile/aot.py` (the
+//! exporter) and `rust/src/runtime/artifact.rs` (the loader).
+//!
+//! The contract is derived from BOTH sides at lint time, not from a
+//! hand-maintained fixture:
+//!
+//! * **kinds** — every `"kind": "<k>"` literal the exporter emits must be
+//!   consumed on the Rust side (a `("<k>", layout)` match arm, a
+//!   `.find("<k>")` / `.validate_admission("<k>")` call, or a `"<k>_*"`
+//!   name-prefix reference), and every kind Rust consumes must be
+//!   emitted.
+//! * **trailing-input / cache name lists** — the all-string tuples aot.py
+//!   builds (`("tokens", "lens", ...)`, `("kcache", ...)`) must match the
+//!   `&["...", ...]` slices in artifact.rs element-for-element, in order.
+//! * **manifest tag keys** — every key artifact.rs reads
+//!   (`req`/`req_str`/`req_usize`/`get`) must be emitted by aot.py, and
+//!   every key aot.py emits that Rust does not read must be on the
+//!   explicit allowlist below (which itself goes stale-checked).
+//!
+//! Each one-sided finding reports the offending line AND the anchor line
+//! on the other side, so a drift failure is fixable without re-deriving
+//! the contract by hand.
+
+use std::collections::BTreeMap;
+
+use crate::findings::Finding;
+use crate::lexer::{ident_line, lex_python, lex_rust, str_line, strip_cfg_test, Kind, Tok};
+use crate::SourceFile;
+
+/// Manifest tags the exporter writes for provenance/bench tooling that
+/// the Rust loader deliberately does not read. `version` is the manifest
+/// envelope; `rope_theta`/`norm_eps`/`lr`/`lora`/`variant`/`mode` and the
+/// GEMM dims `m`/`k`/`n` are training- and bench-side provenance; the
+/// dtype/layout suffix tables (`f32`/`int8`/`static`/`paged`) are tag
+/// *values* that aot.py also uses as lookup-table keys. Adding a key here
+/// is a reviewed decision — entries that stop appearing in aot.py fail
+/// the lint as stale.
+const TAG_ALLOWLIST: &[&str] = &[
+    "version", "rope_theta", "norm_eps", "lr", "lora", "variant", "mode", "m", "k", "n", "f32",
+    "int8", "static", "paged",
+];
+
+/// `"kind": "<k>"` literals in the exporter, first-seen line each.
+pub fn py_kinds(toks: &[Tok]) -> BTreeMap<String, usize> {
+    let mut out = BTreeMap::new();
+    for (k, t) in toks.iter().enumerate() {
+        if t.is_str("kind")
+            && toks.get(k + 1).is_some_and(|n| n.is_punct(':'))
+            && toks.get(k + 2).is_some_and(|n| n.kind == Kind::Str)
+        {
+            let v = &toks[k + 2];
+            out.entry(v.text.clone()).or_insert(v.line);
+        }
+    }
+    out
+}
+
+/// Parse a `"a", "b", ...` run starting at `i`, terminated by `close`.
+/// Returns None unless every element is a string literal.
+fn str_seq(toks: &[Tok], mut i: usize, close: char) -> Option<Vec<String>> {
+    let mut vals = Vec::new();
+    loop {
+        let t = toks.get(i)?;
+        if t.is_punct(close) {
+            return Some(vals);
+        }
+        if t.kind != Kind::Str {
+            return None;
+        }
+        vals.push(t.text.clone());
+        i += 1;
+        let sep = toks.get(i)?;
+        if sep.is_punct(',') {
+            i += 1;
+        } else if !sep.is_punct(close) {
+            return None;
+        }
+    }
+}
+
+/// All-string tuples `("a", "b", ...)` of length >= 2 (Python side).
+pub fn str_tuples(toks: &[Tok]) -> Vec<(Vec<String>, usize)> {
+    let mut out = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if t.is_punct('(') {
+            if let Some(vals) = str_seq(toks, i + 1, ')') {
+                if vals.len() >= 2 {
+                    out.push((vals, t.line));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// All-string slice literals `&["a", ...]` (Rust side).
+pub fn str_slices(toks: &[Tok]) -> Vec<(Vec<String>, usize)> {
+    let mut out = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if t.is_punct('&') && toks.get(i + 1).is_some_and(|n| n.is_punct('[')) {
+            if let Some(vals) = str_seq(toks, i + 2, ']') {
+                if !vals.is_empty() {
+                    out.push((vals, t.line));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Manifest keys the exporter emits: dict-literal keys (`{"k": ...` or
+/// `, "k": ...`) and subscript assignments (`entry["k"] = ...`, excluding
+/// `==` comparisons).
+pub fn py_dict_keys(toks: &[Tok]) -> BTreeMap<String, usize> {
+    let mut out = BTreeMap::new();
+    for (k, t) in toks.iter().enumerate() {
+        if t.kind != Kind::Str {
+            continue;
+        }
+        let prev = if k > 0 { toks.get(k - 1) } else { None };
+        let key_in_literal = toks.get(k + 1).is_some_and(|n| n.is_punct(':'))
+            && prev.is_some_and(|p| p.is_punct('{') || p.is_punct(','));
+        let key_assigned = prev.is_some_and(|p| p.is_punct('['))
+            && toks.get(k + 1).is_some_and(|n| n.is_punct(']'))
+            && toks.get(k + 2).is_some_and(|n| n.is_punct('='))
+            && !toks.get(k + 3).is_some_and(|n| n.is_punct('='));
+        if key_in_literal || key_assigned {
+            out.entry(t.text.clone()).or_insert(t.line);
+        }
+    }
+    out
+}
+
+/// Manifest keys the loader reads: string args of
+/// `req`/`req_str`/`req_usize`/`get`.
+pub fn rust_manifest_keys(toks: &[Tok]) -> BTreeMap<String, usize> {
+    let mut out = BTreeMap::new();
+    for (k, t) in toks.iter().enumerate() {
+        if t.kind == Kind::Ident
+            && matches!(t.text.as_str(), "req" | "req_str" | "req_usize" | "get")
+            && toks.get(k + 1).is_some_and(|n| n.is_punct('('))
+            && toks.get(k + 2).is_some_and(|n| n.kind == Kind::Str)
+        {
+            let v = &toks[k + 2];
+            out.entry(v.text.clone()).or_insert(v.line);
+        }
+    }
+    out
+}
+
+/// `("kind", "layout")` match-arm pairs in artifact.rs: `( Str , Str ) =>`.
+pub fn kind_layout_arms(toks: &[Tok]) -> Vec<(String, String, usize)> {
+    let mut out = Vec::new();
+    for (k, t) in toks.iter().enumerate() {
+        if t.is_punct('(')
+            && toks.get(k + 1).is_some_and(|n| n.kind == Kind::Str)
+            && toks.get(k + 2).is_some_and(|n| n.is_punct(','))
+            && toks.get(k + 3).is_some_and(|n| n.kind == Kind::Str)
+            && toks.get(k + 4).is_some_and(|n| n.is_punct(')'))
+            && toks.get(k + 5).is_some_and(|n| n.is_punct('='))
+            && toks.get(k + 6).is_some_and(|n| n.is_punct('>'))
+        {
+            out.push((toks[k + 1].text.clone(), toks[k + 3].text.clone(), toks[k + 1].line));
+        }
+    }
+    out
+}
+
+fn push(out: &mut Vec<Finding>, file: &str, line: usize, message: String) {
+    out.push(Finding { rule: "r2-contract", file: file.to_string(), line, message });
+}
+
+/// Run the full cross-check. `consumers` is every Rust file that
+/// dispatches on artifact kinds (artifact.rs itself, engine.rs, train,
+/// evalh, the fig3 bench).
+pub fn check(aot: &SourceFile, artifact: &SourceFile, consumers: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let py = lex_python(&aot.text);
+    let art = strip_cfg_test(&lex_rust(&artifact.text));
+
+    // Anchor lines for "the other side" in every one-sided message.
+    let py_anchor = str_line(&py, "kind");
+    let trailing_anchor = ident_line(&art, "layout_trailing_inputs");
+    let cache_anchor = ident_line(&art, "cache_input_names");
+    let kind_anchor = str_line(&art, "kind");
+
+    // --- kinds ---------------------------------------------------------
+    let kinds_py = py_kinds(&py);
+    let mut consumed: BTreeMap<String, (String, usize)> = BTreeMap::new();
+    let mut all_strs: Vec<(String, String, usize)> = Vec::new();
+    for c in consumers {
+        let toks = strip_cfg_test(&lex_rust(&c.text));
+        for (k, t) in toks.iter().enumerate() {
+            if t.kind == Kind::Ident
+                && matches!(t.text.as_str(), "find" | "validate_admission")
+                && toks.get(k + 1).is_some_and(|n| n.is_punct('('))
+                && toks.get(k + 2).is_some_and(|n| n.kind == Kind::Str)
+            {
+                let v = &toks[k + 2];
+                consumed
+                    .entry(v.text.clone())
+                    .or_insert_with(|| (c.path.clone(), v.line));
+            }
+        }
+        for t in &toks {
+            if t.kind == Kind::Str {
+                all_strs.push((t.text.clone(), c.path.clone(), t.line));
+            }
+        }
+    }
+    for (k, _, line) in kind_layout_arms(&art) {
+        consumed
+            .entry(k)
+            .or_insert_with(|| (artifact.path.clone(), line));
+    }
+    for (kind, line) in &kinds_py {
+        if consumed.contains_key(kind) {
+            continue;
+        }
+        let prefix = format!("{kind}_");
+        if all_strs.iter().any(|(s, _, _)| s.starts_with(&prefix)) {
+            continue;
+        }
+        push(
+            &mut out,
+            &aot.path,
+            *line,
+            format!(
+                "manifest kind '{kind}' is emitted here but never consumed on the Rust \
+                 side (no match arm, .find(\"{kind}\") or \"{kind}_*\" reference; kind \
+                 dispatch is near {}:{kind_anchor})",
+                artifact.path
+            ),
+        );
+    }
+    for (kind, (file, line)) in &consumed {
+        if !kinds_py.contains_key(kind) {
+            push(
+                &mut out,
+                file,
+                *line,
+                format!(
+                    "kind '{kind}' is consumed here but python/compile/aot.py never \
+                     emits it (kinds are declared near {}:{py_anchor})",
+                    aot.path
+                ),
+            );
+        }
+    }
+
+    // --- trailing-input and cache name lists ---------------------------
+    let tuples = str_tuples(&py);
+    let slices = str_slices(&art);
+    let name_lists = [
+        ("trailing-input", "token", trailing_anchor),
+        ("cache-input", "kcache", cache_anchor),
+    ];
+    for (label, first, rs_anchor) in name_lists {
+        let select = |lists: &[(Vec<String>, usize)]| -> BTreeMap<String, usize> {
+            lists
+                .iter()
+                .filter(|(v, _)| v[0] == first || v[0] == format!("{first}s"))
+                .map(|(v, line)| (v.join(","), *line))
+                .collect()
+        };
+        let py_lists = select(&tuples);
+        let rs_lists = select(&slices);
+        for (list, line) in &py_lists {
+            if !rs_lists.contains_key(list) {
+                push(
+                    &mut out,
+                    &aot.path,
+                    *line,
+                    format!(
+                        "{label} list [{list}] is emitted here but artifact.rs has no \
+                         matching &[...] (expectations are near {}:{rs_anchor})",
+                        artifact.path
+                    ),
+                );
+            }
+        }
+        for (list, line) in &rs_lists {
+            if !py_lists.contains_key(list) {
+                push(
+                    &mut out,
+                    &artifact.path,
+                    *line,
+                    format!(
+                        "{label} list [{list}] is expected here but aot.py never emits \
+                         it (exporter tuples are near {}:{py_anchor})",
+                        aot.path
+                    ),
+                );
+            }
+        }
+    }
+
+    // --- manifest tag keys ---------------------------------------------
+    let keys_py = py_dict_keys(&py);
+    let keys_rs = rust_manifest_keys(&art);
+    for (key, line) in &keys_rs {
+        if !keys_py.contains_key(key) {
+            push(
+                &mut out,
+                &artifact.path,
+                *line,
+                format!(
+                    "manifest tag '{key}' is read here but aot.py never writes it \
+                     (manifest construction is near {}:{py_anchor})",
+                    aot.path
+                ),
+            );
+        }
+    }
+    for (key, line) in &keys_py {
+        if !keys_rs.contains_key(key) && !TAG_ALLOWLIST.contains(&key.as_str()) {
+            push(
+                &mut out,
+                &aot.path,
+                *line,
+                format!(
+                    "manifest tag '{key}' is written here but artifact.rs never reads \
+                     it and it is not on the R2 allowlist (reads are near \
+                     {}:{kind_anchor})",
+                    artifact.path
+                ),
+            );
+        }
+    }
+    for entry in TAG_ALLOWLIST {
+        let py_only = keys_py.contains_key(*entry) && !keys_rs.contains_key(*entry);
+        if !py_only {
+            push(
+                &mut out,
+                &aot.path,
+                1,
+                format!(
+                    "stale R2 allowlist entry '{entry}': it is no longer a \
+                     python-only manifest tag; drop it from TAG_ALLOWLIST in \
+                     rust/src/bin/ao_lint/r2_contract.rs"
+                ),
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn py(text: &str) -> SourceFile {
+        SourceFile { path: "python/compile/aot.py".to_string(), text: text.to_string() }
+    }
+
+    fn rs(text: &str) -> SourceFile {
+        SourceFile { path: "rust/src/runtime/artifact.rs".to_string(), text: text.to_string() }
+    }
+
+    // A minimal exporter/loader pair that satisfies every R2 check, with
+    // one python-only tag per allowlist entry so the stale check passes.
+    fn clean_pair() -> (SourceFile, SourceFile) {
+        let mut tags = String::new();
+        for t in TAG_ALLOWLIST {
+            tags.push_str(&format!("        \"{t}\": 1,\n"));
+        }
+        let aot = py(&format!(
+            "def export(manifest):
+    entry = {{
+        \"kind\": \"decode\",
+        \"file\": \"decode.hlo\",
+{tags}    }}
+    entry[\"donate\"] = []
+    names = (\"tokens\", \"lens\")
+    manifest.append(entry)
+    return names
+"
+        ));
+        let art = rs(
+            "fn load(e: &Entry) -> Result<()> {
+    let kind = e.req_str(\"kind\")?;
+    let file = e.req(\"file\")?;
+    let donate = e.get(\"donate\");
+    let names: &[&str] = &[\"tokens\", \"lens\"];
+    match (kind, layout) {
+        (\"decode\", \"static\") => ok(),
+        _ => err(),
+    }
+}
+",
+        );
+        (aot, art)
+    }
+
+    #[test]
+    fn clean_pair_has_no_findings() {
+        let (aot, art) = clean_pair();
+        let consumers = [art.clone()];
+        let finds = check(&aot, &art, &consumers);
+        assert!(finds.is_empty(), "{finds:?}");
+    }
+
+    #[test]
+    fn removed_rust_arm_fails_with_both_locations() {
+        let (aot, art) = clean_pair();
+        let art = rs(&art.text.replace("(\"decode\", \"static\") => ok(),", ""));
+        let consumers = [art.clone()];
+        let finds = check(&aot, &art, &consumers);
+        assert_eq!(finds.len(), 1, "{finds:?}");
+        assert_eq!(finds[0].file, "python/compile/aot.py");
+        assert_eq!(finds[0].line, 3);
+        assert!(finds[0].message.contains("artifact.rs:"), "{}", finds[0].message);
+    }
+
+    #[test]
+    fn renamed_python_kind_fails_both_directions() {
+        let (aot, art) = clean_pair();
+        let aot = py(&aot.text.replace("\"kind\": \"decode\"", "\"kind\": \"decode2\""));
+        let consumers = [art.clone()];
+        let finds = check(&aot, &art, &consumers);
+        let msgs: Vec<&str> = finds.iter().map(|f| f.message.as_str()).collect();
+        assert_eq!(finds.len(), 2, "{finds:?}");
+        assert!(msgs.iter().any(|m| m.contains("'decode2'")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("'decode'")), "{msgs:?}");
+    }
+
+    #[test]
+    fn drifted_name_list_fails_on_both_sides() {
+        let (aot, art) = clean_pair();
+        let aot = py(&aot.text.replace("(\"tokens\", \"lens\")", "(\"tokens\", \"lens2\")"));
+        let consumers = [art.clone()];
+        let finds = check(&aot, &art, &consumers);
+        assert_eq!(finds.len(), 2, "{finds:?}");
+        let files: Vec<&str> = finds.iter().map(|f| f.file.as_str()).collect();
+        assert!(files.contains(&"python/compile/aot.py"));
+        assert!(files.contains(&"rust/src/runtime/artifact.rs"));
+    }
+
+    #[test]
+    fn unread_tag_off_allowlist_fails() {
+        let (aot, art) = clean_pair();
+        let aot = py(&aot.text.replace("\"file\": \"decode.hlo\"", "\"phile\": \"decode.hlo\""));
+        let consumers = [art.clone()];
+        let finds = check(&aot, &art, &consumers);
+        // 'phile' is unread+unlisted, and 'file' is now read-but-unwritten.
+        assert_eq!(finds.len(), 2, "{finds:?}");
+        assert!(finds.iter().any(|f| f.message.contains("'phile'")));
+        assert!(finds.iter().any(|f| f.message.contains("'file'")));
+    }
+
+    #[test]
+    fn subscript_assignment_counts_as_emitted_key() {
+        let toks = lex_python("entry[\"donate\"] = x\nif e[\"donate\"] == y:\n    pass\n");
+        let keys = py_dict_keys(&toks);
+        assert_eq!(keys.get("donate"), Some(&1));
+        assert_eq!(keys.len(), 1);
+    }
+
+    #[test]
+    fn prefix_reference_counts_as_consumption() {
+        let (aot, art) = clean_pair();
+        let aot = py(&format!(
+            "{}\nmanifest.append({{\"kind\": \"init\", \"file\": \"i.hlo\"}})\n",
+            aot.text
+        ));
+        // No arm or find("init"), but a name-prefix reference exists.
+        let consumer = rs("fn pick() { let n = \"init_lora_tiny\"; use_name(n); }\n");
+        let consumers = [art.clone(), consumer];
+        let finds = check(&aot, &art, &consumers);
+        assert!(finds.is_empty(), "{finds:?}");
+    }
+}

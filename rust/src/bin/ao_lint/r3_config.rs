@@ -1,0 +1,259 @@
+//! R3 — config-surface completeness.
+//!
+//! Every `pub` field of `EngineConfig` must be reachable three ways:
+//! an `ao serve` CLI flag in `main.rs`, an `AO_*` env binding (or a
+//! direct workload parameter) in `benchsupport`, and a mention under
+//! `docs/`. The mapping lives in the declarative table below; the rule
+//! checks the table against the struct in both directions, so adding a
+//! field without extending the surface — or shrinking the surface while
+//! the field survives — both fail.
+
+use crate::findings::Finding;
+use crate::lexer::{ident_line, lex_rust, strip_cfg_test, struct_pub_fields, Tok};
+use crate::SourceFile;
+
+/// How benchsupport reaches a field: an `AO_*` env var read in
+/// `benchsupport`/`lib.rs`, or an explicit workload-function parameter.
+pub enum Binding {
+    Env(&'static str),
+    Param(&'static str),
+}
+
+pub struct ConfigRule {
+    pub field: &'static str,
+    /// `ao serve` flag name as it appears in `args.get(...)`/`args.flag(...)`
+    /// (no leading dashes).
+    pub flag: &'static str,
+    pub binding: Binding,
+}
+
+/// EngineConfig surface map. Keep in struct-declaration order.
+pub const TABLE: &[ConfigRule] = &[
+    ConfigRule {
+        field: "artifacts_dir",
+        flag: "artifacts",
+        binding: Binding::Env("AO_ARTIFACTS"),
+    },
+    ConfigRule { field: "ckpt_path", flag: "ckpt", binding: Binding::Param("ckpt_path") },
+    ConfigRule { field: "model", flag: "model", binding: Binding::Param("model") },
+    ConfigRule { field: "scheme", flag: "scheme", binding: Binding::Param("scheme") },
+    ConfigRule {
+        field: "cache_scheme",
+        flag: "kv-cache",
+        binding: Binding::Env("AO_KV_CACHE"),
+    },
+    ConfigRule {
+        field: "kv_layout",
+        flag: "kv-layout",
+        binding: Binding::Env("AO_KV_LAYOUT"),
+    },
+    ConfigRule {
+        field: "eos_token",
+        flag: "eos-token",
+        binding: Binding::Env("AO_EOS_TOKEN"),
+    },
+    ConfigRule {
+        field: "host_admission",
+        flag: "host-admission",
+        binding: Binding::Env("AO_HOST_ADMISSION"),
+    },
+    ConfigRule {
+        field: "prefix_cache",
+        flag: "no-prefix-cache",
+        binding: Binding::Env("AO_PREFIX_CACHE"),
+    },
+    ConfigRule {
+        field: "max_batch_tokens",
+        flag: "max-batch-tokens",
+        binding: Binding::Env("AO_MAX_BATCH_TOKENS"),
+    },
+];
+
+fn push(out: &mut Vec<Finding>, file: &str, line: usize, message: String) {
+    out.push(Finding { rule: "r3-config", file: file.to_string(), line, message });
+}
+
+pub fn check(
+    engine: &SourceFile,
+    main_rs: &SourceFile,
+    benchsupport: &SourceFile,
+    lib_rs: &SourceFile,
+    docs: &[SourceFile],
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let eng = strip_cfg_test(&lex_rust(&engine.text));
+    let fields = struct_pub_fields(&eng, "EngineConfig");
+    let struct_line = ident_line(&eng, "EngineConfig");
+
+    let main_toks = strip_cfg_test(&lex_rust(&main_rs.text));
+    let bench_toks = strip_cfg_test(&lex_rust(&benchsupport.text));
+    let lib_toks = strip_cfg_test(&lex_rust(&lib_rs.text));
+    let serve_anchor = ident_line(&main_toks, "cmd_serve");
+    let bench_anchor = ident_line(&bench_toks, "serve_workload_sched");
+
+    let has_str = |toks: &[Tok], s: &str| toks.iter().any(|t| t.is_str(s));
+    let has_ident = |toks: &[Tok], s: &str| toks.iter().any(|t| t.is_ident(s));
+
+    for (field, line) in &fields {
+        if !TABLE.iter().any(|r| r.field == field) {
+            push(
+                &mut out,
+                &engine.path,
+                *line,
+                format!(
+                    "EngineConfig field '{field}' has no entry in ao-lint's R3 config \
+                     table; give it a serve flag + env/param binding + docs mention and \
+                     register it in rust/src/bin/ao_lint/r3_config.rs"
+                ),
+            );
+        }
+    }
+    for rule in TABLE {
+        if !fields.iter().any(|(f, _)| f == rule.field) {
+            push(
+                &mut out,
+                &engine.path,
+                struct_line,
+                format!(
+                    "stale R3 table entry '{}': EngineConfig has no such field; drop it \
+                     from rust/src/bin/ao_lint/r3_config.rs",
+                    rule.field
+                ),
+            );
+            continue;
+        }
+        if !has_str(&main_toks, rule.flag) {
+            push(
+                &mut out,
+                &main_rs.path,
+                serve_anchor,
+                format!(
+                    "EngineConfig field '{}' has no `--{}` flag in cmd_serve",
+                    rule.field, rule.flag
+                ),
+            );
+        }
+        match rule.binding {
+            Binding::Env(var) => {
+                if !has_str(&bench_toks, var) && !has_str(&lib_toks, var) {
+                    push(
+                        &mut out,
+                        &benchsupport.path,
+                        bench_anchor,
+                        format!(
+                            "EngineConfig field '{}' has no `{var}` env binding in \
+                             benchsupport (or lib.rs)",
+                            rule.field
+                        ),
+                    );
+                }
+            }
+            Binding::Param(param) => {
+                if !has_ident(&bench_toks, param) {
+                    push(
+                        &mut out,
+                        &benchsupport.path,
+                        bench_anchor,
+                        format!(
+                            "EngineConfig field '{}' has no `{param}` workload parameter \
+                             in benchsupport",
+                            rule.field
+                        ),
+                    );
+                }
+            }
+        }
+        let term = format!("--{}", rule.flag);
+        if !docs.iter().any(|d| d.text.contains(&term)) {
+            push(
+                &mut out,
+                "docs",
+                1,
+                format!(
+                    "EngineConfig field '{}' has no `{term}` mention under docs/",
+                    rule.field
+                ),
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sf(path: &str, text: &str) -> SourceFile {
+        SourceFile { path: path.to_string(), text: text.to_string() }
+    }
+
+    fn fixture() -> (SourceFile, SourceFile, SourceFile, SourceFile, Vec<SourceFile>) {
+        let mut flags = String::new();
+        let mut envs = String::new();
+        let mut params = String::new();
+        let mut doc = String::new();
+        for r in TABLE {
+            flags.push_str(&format!("    args.get(\"{}\");\n", r.flag));
+            match r.binding {
+                Binding::Env(v) => envs.push_str(&format!("    read(\"{v}\");\n")),
+                Binding::Param(p) => params.push_str(&format!("    let {p} = 0;\n")),
+            }
+            doc.push_str(&format!("`--{}`\n", r.flag));
+        }
+        let mut cfg = String::from("pub struct EngineConfig {\n");
+        for r in TABLE {
+            cfg.push_str(&format!("    pub {}: u32,\n", r.field));
+        }
+        cfg.push_str("}\n");
+        let engine = sf("rust/src/coordinator/engine.rs", &cfg);
+        let main_rs = sf("rust/src/main.rs", &format!("fn cmd_serve() {{\n{flags}}}\n"));
+        let bench = sf(
+            "rust/src/benchsupport/mod.rs",
+            &format!("fn serve_workload_sched() {{\n{envs}{params}}}\n"),
+        );
+        let lib = sf("rust/src/lib.rs", "fn lib() {}\n");
+        let docs = vec![sf("docs/static_analysis.md", &doc)];
+        (engine, main_rs, bench, lib, docs)
+    }
+
+    #[test]
+    fn complete_surface_passes() {
+        let (engine, main_rs, bench, lib, docs) = fixture();
+        let finds = check(&engine, &main_rs, &bench, &lib, &docs);
+        assert!(finds.is_empty(), "{finds:?}");
+    }
+
+    #[test]
+    fn unregistered_field_fails() {
+        let (engine, main_rs, bench, lib, docs) = fixture();
+        let engine = sf(
+            &engine.path,
+            &engine.text.replace("}\n", "    pub new_knob: u32,\n}\n"),
+        );
+        let finds = check(&engine, &main_rs, &bench, &lib, &docs);
+        assert_eq!(finds.len(), 1, "{finds:?}");
+        assert!(finds[0].message.contains("'new_knob'"));
+    }
+
+    #[test]
+    fn missing_flag_env_and_docs_each_fail() {
+        let (engine, main_rs, bench, lib, docs) = fixture();
+        let main_rs = sf(&main_rs.path, &main_rs.text.replace("\"eos-token\"", "\"x\""));
+        let bench = sf(&bench.path, &bench.text.replace("\"AO_EOS_TOKEN\"", "\"X\""));
+        let docs2 = vec![sf("docs/static_analysis.md", &docs[0].text.replace("--eos-token", ""))];
+        let finds = check(&engine, &main_rs, &bench, &lib, &docs2);
+        assert_eq!(finds.len(), 3, "{finds:?}");
+    }
+
+    #[test]
+    fn stale_table_entry_fails() {
+        let (engine, main_rs, bench, lib, docs) = fixture();
+        let engine = sf(
+            &engine.path,
+            &engine.text.replace("    pub eos_token: u32,\n", ""),
+        );
+        let finds = check(&engine, &main_rs, &bench, &lib, &docs);
+        assert_eq!(finds.len(), 1, "{finds:?}");
+        assert!(finds[0].message.contains("stale R3 table entry 'eos_token'"));
+    }
+}

@@ -1,0 +1,175 @@
+//! R4 — metrics render completeness.
+//!
+//! Every `pub` field of `MetricsCollector` must be readable from the
+//! report rendering: referenced by `report()` directly, or by a method
+//! `report()` transitively calls. A counter that is bumped all over the
+//! engine but never rendered silently vanishes from `table1` and the
+//! `BENCH_*.json` reports — this rule makes that a lint failure instead
+//! of a benchmarking surprise.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::findings::Finding;
+use crate::lexer::{lex_rust, strip_cfg_test, struct_pub_fields, Kind, Tok};
+use crate::SourceFile;
+
+/// Bodies of every `fn` in the file, keyed by name. Later definitions of
+/// the same name overwrite earlier ones; `report` is unique in
+/// metrics.rs, which is all the traversal roots on.
+fn method_bodies(toks: &[Tok]) -> BTreeMap<String, Vec<Tok>> {
+    let mut out = BTreeMap::new();
+    let mut i = 0;
+    while i + 1 < toks.len() {
+        if toks[i].is_ident("fn") && toks[i + 1].kind == Kind::Ident {
+            let name = toks[i + 1].text.clone();
+            let mut j = i + 2;
+            while j < toks.len() && !toks[j].is_punct('{') {
+                if toks[j].is_punct(';') {
+                    break;
+                }
+                j += 1;
+            }
+            if j < toks.len() && toks[j].is_punct('{') {
+                let mut depth = 1i32;
+                let mut body = Vec::new();
+                j += 1;
+                while j < toks.len() && depth > 0 {
+                    if toks[j].is_punct('{') {
+                        depth += 1;
+                    }
+                    if toks[j].is_punct('}') {
+                        depth -= 1;
+                    }
+                    body.push(toks[j].clone());
+                    j += 1;
+                }
+                out.insert(name, body);
+                i = j;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+pub fn check(metrics: &SourceFile) -> Vec<Finding> {
+    let toks = strip_cfg_test(&lex_rust(&metrics.text));
+    let fields = struct_pub_fields(&toks, "MetricsCollector");
+    let methods = method_bodies(&toks);
+
+    // Per-method edges: `self.field` reads and `self.method()` calls.
+    let mut covered: BTreeSet<String> = BTreeSet::new();
+    let mut seen: BTreeSet<String> = BTreeSet::new();
+    let mut stack = vec!["report".to_string()];
+    while let Some(name) = stack.pop() {
+        if !seen.insert(name.clone()) {
+            continue;
+        }
+        let Some(body) = methods.get(&name) else {
+            continue;
+        };
+        for (k, t) in body.iter().enumerate() {
+            if !t.is_ident("self") {
+                continue;
+            }
+            if !body.get(k + 1).is_some_and(|n| n.is_punct('.')) {
+                continue;
+            }
+            let Some(member) = body.get(k + 2) else {
+                continue;
+            };
+            if member.kind != Kind::Ident {
+                continue;
+            }
+            if body.get(k + 3).is_some_and(|n| n.is_punct('(')) {
+                stack.push(member.text.clone());
+            } else if fields.iter().any(|(f, _)| *f == member.text) {
+                covered.insert(member.text.clone());
+            }
+        }
+    }
+
+    fields
+        .iter()
+        .filter(|(f, _)| !covered.contains(f))
+        .map(|(f, line)| Finding {
+            rule: "r4-metrics",
+            file: metrics.path.clone(),
+            line: *line,
+            message: format!(
+                "MetricsCollector field '{f}' is never rendered: report() neither \
+                 reads it nor calls a method that does"
+            ),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sf(text: &str) -> SourceFile {
+        SourceFile { path: "rust/src/coordinator/metrics.rs".to_string(), text: text.to_string() }
+    }
+
+    #[test]
+    fn direct_and_transitive_reads_cover_fields() {
+        let f = sf(
+            "pub struct MetricsCollector {
+    pub n_requests: u64,
+    pub n_tokens: u64,
+}
+impl MetricsCollector {
+    fn tok_rate(&self) -> u64 {
+        self.n_tokens
+    }
+    pub fn report(&self) -> String {
+        format!(\"req={} tok/s={}\", self.n_requests, self.tok_rate())
+    }
+}
+",
+        );
+        assert!(check(&f).is_empty());
+    }
+
+    #[test]
+    fn unrendered_field_is_flagged() {
+        let f = sf(
+            "pub struct MetricsCollector {
+    pub n_requests: u64,
+    pub n_dropped: u64,
+}
+impl MetricsCollector {
+    pub fn observe(&mut self) {
+        self.n_dropped += 1;
+    }
+    pub fn report(&self) -> String {
+        format!(\"req={}\", self.n_requests)
+    }
+}
+",
+        );
+        let finds = check(&f);
+        assert_eq!(finds.len(), 1, "{finds:?}");
+        assert!(finds[0].message.contains("'n_dropped'"));
+        assert_eq!(finds[0].line, 3);
+    }
+
+    #[test]
+    fn private_fields_are_ignored() {
+        let f = sf(
+            "pub struct MetricsCollector {
+    pub n_requests: u64,
+    started: bool,
+}
+impl MetricsCollector {
+    pub fn report(&self) -> String {
+        format!(\"req={}\", self.n_requests)
+    }
+}
+",
+        );
+        assert!(check(&f).is_empty());
+    }
+}

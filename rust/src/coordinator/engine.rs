@@ -84,6 +84,11 @@
 //! tokens_saved]` in the report accounts for the reuse; see
 //! docs/prefix_cache.md.
 
+// ao-lint: allow-file(index) -- dense [L,B,H,S,D] tensor arithmetic over
+// shapes validated once at artifact load; indexing is bounds-checked by
+// construction and per-element get() would bury the scatter/splice math.
+// Panic discipline (allow(panic)) is still enforced site-by-site.
+
 use super::batcher::{Batcher, ChunkTake, PrefillTake};
 use super::kvslots::{Slot, SlotPhase, SlotTable};
 use super::metrics::MetricsCollector;
@@ -256,6 +261,7 @@ pub fn spawn(
             engine.serve(rx)?;
             Ok(std::mem::take(&mut engine.metrics))
         })
+        // ao-lint: allow(panic) -- startup-only OS thread spawn; serve() has not begun
         .expect("spawn engine thread");
     (EngineHandle { tx }, join)
 }
@@ -431,6 +437,27 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// The pager under `KvLayout::Paged`. Reaching for it on a non-paged
+    /// path is an engine invariant violation; it surfaces as an error the
+    /// serve loop can fail a request on, not a process abort.
+    fn pager_ref(&self) -> Result<&Pager> {
+        self.pager
+            .as_ref()
+            .ok_or_else(|| anyhow!("paged path without a pager"))
+    }
+
+    fn pager_mut(&mut self) -> Result<&mut Pager> {
+        self.pager
+            .as_mut()
+            .ok_or_else(|| anyhow!("paged path without a pager"))
+    }
+
+    /// Scheduler state on scheduler-mode paths (same invariant story).
+    fn sched_state(&self) -> Result<SchedState> {
+        self.sched
+            .ok_or_else(|| anyhow!("scheduler path without scheduler state"))
+    }
+
     pub fn new(cfg: EngineConfig) -> Result<Engine> {
         let runtime = Runtime::open(&cfg.artifacts_dir)?;
         let cache_tag = cfg.cache_scheme.tag();
@@ -1112,7 +1139,7 @@ impl Engine {
         let b = self.batch;
         let smax = self.smax;
         let suffix_name = self.admit_suffix_artifact(bucket);
-        let ps = self.pager.as_ref().expect("paged admission").page_size();
+        let ps = self.pager_ref()?.page_size();
         let mut claimed: Vec<(usize, SubmitReq)> =
             Vec::with_capacity(group.len());
         // per claimed row: prompt tokens already covered by shared pages
@@ -1131,8 +1158,7 @@ impl Engine {
             let looked_up: Option<Vec<u32>> =
                 match (&self.prefix, &suffix_name) {
                     (Some(index), Some(_)) => {
-                        let pager =
-                            self.pager.as_ref().expect("paged admission");
+                        let pager = self.pager_ref()?;
                         Some(index.lookup(&req.prompt_tokens, |p| {
                             pager.page_is_shareable(p)
                         }))
@@ -1140,7 +1166,7 @@ impl Engine {
                     _ => None,
                 };
             let shared: &[u32] = looked_up.as_deref().unwrap_or(&[]);
-            let pager = self.pager.as_ref().expect("paged admission");
+            let pager = self.pager_ref()?;
             // a request that could NEVER fit would deadlock the queue,
             // but none can exist here: reserve_len caps at smax,
             // blocks_for clamps to blocks_per_slot, and
@@ -1174,10 +1200,7 @@ impl Engine {
                 .slots
                 .claim(slot)
                 .ok_or_else(|| anyhow!("slot table full during admission"))?;
-            self.pager
-                .as_mut()
-                .expect("paged admission")
-                .admit_shared(idx, shared, n_prompt, want)?;
+            self.pager_mut()?.admit_shared(idx, shared, n_prompt, want)?;
             // an allocation may have reclaimed cached pages off the
             // LRU: forget them before the next request's lookup
             self.drain_page_evictions();
@@ -1210,7 +1233,7 @@ impl Engine {
         // whose attention spans only the bucket instead of the window.
         let use_suffix =
             suffix_name.is_some() && start_lens.iter().any(|&s| s > 0);
-        let pager = self.pager.as_ref().expect("paged admission");
+        let pager = self.pager_ref()?;
         let slot_of_row: Vec<usize> =
             claimed.iter().map(|(idx, _)| *idx).collect();
         let (artifact, extra) = if use_suffix {
@@ -1229,15 +1252,19 @@ impl Engine {
                 })
                 .max()
                 .unwrap_or(1);
-            let (sbucket, sname) = self
+            let (sbucket, sname) = match self
                 .admit_suffix_names
                 .iter()
                 .find(|(s, _)| *s >= max_suffix)
-                .map(|(s, n)| (*s, n.clone()))
-                .unwrap_or((
+            {
+                Some((s, n)) => (*s, n.clone()),
+                None => (
                     bucket,
-                    suffix_name.clone().expect("use_suffix implies artifact"),
-                ));
+                    suffix_name.clone().ok_or_else(|| {
+                        anyhow!("use_suffix without a suffix artifact")
+                    })?,
+                ),
+            };
             let mut tokens = vec![0i32; b * sbucket];
             let mut lens = vec![1i32; b]; // dummy rows attend to 1 pad
             let mut starts = vec![0i32; b];
@@ -1335,11 +1362,11 @@ impl Engine {
             }
             let full_pages = prompt.len() / ps;
             let n_publish = {
-                let pager = self.pager.as_ref().expect("paged admission");
+                let pager = self.pager_ref()?;
                 let index = self
                     .prefix
                     .as_ref()
-                    .expect("publish implies a prefix index");
+                    .ok_or_else(|| anyhow!("publish without a prefix index"))?;
                 // the slot's leading shared blocks came FROM the index;
                 // publish only depths it does not serve yet (a shared
                 // run must stay contiguous, so stop at the first dup)
@@ -1347,15 +1374,11 @@ impl Engine {
                     .find(|&j| index.contains(&prompt[..(j + 1) * ps]))
                     .unwrap_or(full_pages)
             };
-            let fresh = self
-                .pager
-                .as_mut()
-                .expect("paged admission")
-                .publish_prefix(idx, n_publish)?;
+            let fresh = self.pager_mut()?.publish_prefix(idx, n_publish)?;
             let index = self
                 .prefix
                 .as_mut()
-                .expect("publish implies a prefix index");
+                .ok_or_else(|| anyhow!("publish without a prefix index"))?;
             for (j, page) in fresh {
                 index.insert(&prompt[..(j + 1) * ps], page);
             }
@@ -1440,7 +1463,9 @@ impl Engine {
         if host_kv.is_none() {
             *host_kv = Some(self.download_cache()?);
         }
-        let host = host_kv.as_mut().unwrap();
+        let Some(host) = host_kv.as_mut() else {
+            return Err(anyhow!("host KV mirror missing after download"));
+        };
 
         let vocab = logits.shape[1];
         for (row, req) in group.into_iter().enumerate() {
@@ -1784,7 +1809,7 @@ impl Engine {
     /// chunks of a step ride ONE admit_suffix call; the step ends with
     /// one decode call over every `Decoding` slot.
     fn sched_step_paged(&mut self) -> Result<()> {
-        let sched = self.sched.expect("sched_step_paged needs scheduler");
+        let sched = self.sched_state()?;
         let xfer0 = self.runtime.transfer_stats();
         let decode_rows = self.slots.decode_indices();
         let mut budget = StepBudget::open(sched.budget, decode_rows.len());
@@ -1889,8 +1914,8 @@ impl Engine {
         chunk_rows: &mut Vec<(usize, usize, usize)>,
         preempted: &mut bool,
     ) -> Result<bool> {
-        let sched = self.sched.expect("paged scheduler");
-        let ps = self.pager.as_ref().expect("paged scheduler").page_size();
+        let sched = self.sched_state()?;
+        let ps = self.pager_ref()?.page_size();
         let n_prompt = req.prompt_tokens.len();
         // a resumed prompt re-prefills its emitted tokens, so only the
         // REMAINING generation budget adds on top — the total matches
@@ -1908,7 +1933,9 @@ impl Engine {
         let looked_up: Option<Vec<u32>> = match (&self.prefix, &req.resume)
         {
             (Some(index), None) => {
-                let pager = self.pager.as_ref().expect("paged scheduler");
+                let pager = self.pager.as_ref().ok_or_else(|| {
+                    anyhow!("prefix lookup without a pager")
+                })?;
                 Some(index.lookup(&req.prompt_tokens, |p| {
                     pager.page_is_shareable(p)
                 }))
@@ -1916,11 +1943,7 @@ impl Engine {
             _ => None,
         };
         let shared: &[u32] = looked_up.as_deref().unwrap_or(&[]);
-        let fits = self
-            .pager
-            .as_ref()
-            .expect("paged scheduler")
-            .can_admit_shared(want, shared);
+        let fits = self.pager_ref()?.can_admit_shared(want, shared);
         if !fits {
             // pool pressure: evict the youngest decoding slot — its
             // published pages park on the cached LRU where this very
@@ -1941,11 +1964,7 @@ impl Engine {
                 }
             }
             let fits_now = resume_req.is_some()
-                && self
-                    .pager
-                    .as_ref()
-                    .expect("paged scheduler")
-                    .can_admit_shared(want, shared);
+                && self.pager_ref()?.can_admit_shared(want, shared);
             match (fits_now, resume_req) {
                 (true, Some(resume)) => {
                     // the victim re-enters at the queue head: it is the
@@ -1975,10 +1994,7 @@ impl Engine {
             .slots
             .claim(slot)
             .ok_or_else(|| anyhow!("slot table full during admission"))?;
-        self.pager
-            .as_mut()
-            .expect("paged scheduler")
-            .admit_shared(idx, shared, n_prompt, want)?;
+        self.pager_mut()?.admit_shared(idx, shared, n_prompt, want)?;
         self.drain_page_evictions();
         if looked_up.is_some() {
             self.metrics.prefix_lookups += 1;
@@ -2044,7 +2060,7 @@ impl Engine {
     ) -> Result<()> {
         let t_overhead = Instant::now();
         let b = self.batch;
-        let ps = self.pager.as_ref().expect("paged scheduler").page_size();
+        let ps = self.pager_ref()?.page_size();
         let window = self.smax / ps;
         let max_take =
             chunk_rows.iter().map(|&(_, _, t)| t).max().unwrap_or(1);
@@ -2075,9 +2091,7 @@ impl Engine {
             starts[row] = start as i32;
         }
         let bt = self
-            .pager
-            .as_ref()
-            .expect("paged scheduler")
+            .pager_ref()?
             .fill_block_tables_for(&slot_of_row, b, window);
         let extra = [
             self.runtime
@@ -2271,7 +2285,7 @@ impl Engine {
     /// a burst of long prompts is spread over steps instead of stalling
     /// the whole batch behind one giant admission burst.
     fn sched_step_static(&mut self) -> Result<()> {
-        let sched = self.sched.expect("sched_step_static needs scheduler");
+        let sched = self.sched_state()?;
         let xfer0 = self.runtime.transfer_stats();
         let decode_rows = self.slots.decode_indices();
         let mut budget = StepBudget::open(sched.budget, decode_rows.len());

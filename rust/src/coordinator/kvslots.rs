@@ -66,21 +66,22 @@ impl SlotTable {
     }
 
     pub fn claim(&mut self, slot: Slot) -> Option<usize> {
-        let idx = self.slots.iter().position(|s| s.is_none())?;
-        self.slots[idx] = Some(slot);
+        let (idx, free) =
+            self.slots.iter_mut().enumerate().find(|(_, s)| s.is_none())?;
+        *free = Some(slot);
         Some(idx)
     }
 
     pub fn release(&mut self, idx: usize) -> Option<Slot> {
-        self.slots[idx].take()
+        self.slots.get_mut(idx).and_then(|s| s.take())
     }
 
     pub fn get(&self, idx: usize) -> Option<&Slot> {
-        self.slots[idx].as_ref()
+        self.slots.get(idx).and_then(|s| s.as_ref())
     }
 
     pub fn get_mut(&mut self, idx: usize) -> Option<&mut Slot> {
-        self.slots[idx].as_mut()
+        self.slots.get_mut(idx).and_then(|s| s.as_mut())
     }
 
     pub fn active_indices(&self) -> Vec<usize> {

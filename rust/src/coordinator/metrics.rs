@@ -293,7 +293,8 @@ impl MetricsCollector {
         let sched = field(self.sched_field());
         let latency = self.latency_field();
         format!(
-            "[{label}] requests={} rejected={} out_tokens={} wall={:.2}s \
+            "[{label}] requests={} rejected={} in_tokens={} out_tokens={} \
+             wall={:.2}s \
              tput={:.1} tok/s  TPOT={:.2}ms  ITL={:.2}ms  TTFT={:.1}ms  \
              {latency}  occupancy={:.0}%  (decode_steps={} prefills={})  \
              cache[{cache_scheme} {kv_layout} \
@@ -302,6 +303,7 @@ impl MetricsCollector {
              admit[h2d={} d2h={} host_splices={}]",
             self.n_requests,
             self.n_rejected,
+            self.n_prompt_tokens,
             self.n_output_tokens,
             self.wall_s(),
             self.output_tok_per_s(),
@@ -350,11 +352,15 @@ mod tests {
         m.record_request(8, 1, 0.05, &[]);
         m.finish();
         assert_eq!(m.n_requests, 2);
+        assert_eq!(m.n_prompt_tokens, 18);
         assert_eq!(m.n_output_tokens, 6);
         assert_eq!(m.ttft_s.len(), 2);
         assert_eq!(m.tpot_s.len(), 1);
         assert!((m.tpot().mean - 0.015).abs() < 1e-9);
         assert_eq!(m.itl_s.len(), 4);
+        let r = m.report("x");
+        assert!(r.contains("in_tokens=18"), "{r}");
+        assert!(r.contains("out_tokens=6"), "{r}");
     }
 
     #[test]

@@ -1,6 +1,11 @@
 //! KV page pool + per-slot block tables: the paging subsystem behind
 //! `KvLayout::Paged` (the real block tables `kvslots.rs` only alluded
 //! to).
+
+// ao-lint: allow-file(index) -- the allocator's own invariants bound all
+// indexing (page ids < n_pages, block js < table width, both established
+// at construction); per-element get() would bury the table arithmetic.
+// Panic discipline (allow(panic)) is still enforced site-by-site.
 //!
 //! The paged device cache is a pool of `n_pages` fixed-size pages
 //! `[L, n_pages, Hkv, page_size, Dh]` (a page is a values block plus,

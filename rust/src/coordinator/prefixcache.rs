@@ -128,10 +128,12 @@ impl PrefixIndex {
         let mut out = Vec::new();
         let mut h = self.salt;
         for depth in 1..=max_depth {
+            // ao-lint: allow(index) -- depth <= (len-1)/ps bounds the slice
             h = fnv1a_extend(h, &prompt[(depth - 1) * ps..depth * ps]);
             let hit = self.map.get(&h).and_then(|bucket| {
                 bucket.iter().find(|e| {
                     e.prefix.len() == depth * ps
+                        // ao-lint: allow(index) -- same depth bound as above
                         && e.prefix == prompt[..depth * ps]
                         && shareable(e.page)
                 })

@@ -53,18 +53,18 @@ pub mod util;
 
 /// Repo-relative default artifact directory.
 pub fn default_artifacts_dir() -> std::path::PathBuf {
-    std::env::var("AO_ARTIFACTS")
+    util::env::var("AO_ARTIFACTS")
         .map(std::path::PathBuf::from)
-        .unwrap_or_else(|_| {
+        .unwrap_or_else(|| {
             std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
         })
 }
 
 /// Default runs/output directory (loss curves, bench CSVs, checkpoints).
 pub fn runs_dir() -> std::path::PathBuf {
-    let dir = std::env::var("AO_RUNS")
+    let dir = util::env::var("AO_RUNS")
         .map(std::path::PathBuf::from)
-        .unwrap_or_else(|_| {
+        .unwrap_or_else(|| {
             std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("runs")
         });
     let _ = std::fs::create_dir_all(&dir);

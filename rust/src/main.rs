@@ -5,6 +5,7 @@
 //!   ao quantize   --ckpt runs/small.aockpt --scheme int4wo-64
 //!   ao eval       --ckpt runs/small_int4wo-64.aockpt --scheme int4wo-64
 //!   ao serve      --ckpt ... --scheme fp8dq_row --addr 127.0.0.1:7433
+//!                 [--artifacts DIR]   # manifest dir (default: artifacts/)
 //!                 [--kv-cache int8]   # quantized (int8+scales) KV cache
 //!                 [--kv-layout paged] # block-table paged KV cache
 //!                 [--no-prefix-cache] # disable shared-prefix page reuse
@@ -12,6 +13,7 @@
 //!                                     # per-step token budget mixing
 //!                                     # decode rows + prefill chunks
 //!                 [--host-admission]  # force the host splice fallback
+//!                 [--eos-token ID]    # stop decoding at this token id
 //!   ao bench-client --addr 127.0.0.1:7433 --n 16
 //!   ao perfmodel  [--kernels]                   # H100/Fig3 + L1 estimates
 
@@ -206,7 +208,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .transpose()?;
     let cfg = engine::EngineConfig {
-        artifacts_dir: ao::default_artifacts_dir(),
+        artifacts_dir: args
+            .get("artifacts")
+            .map(PathBuf::from)
+            .unwrap_or_else(ao::default_artifacts_dir),
         ckpt_path,
         model,
         scheme,
@@ -218,7 +223,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             &args.str_or("kv-layout", "static"),
         )
         .context("--kv-layout")?,
-        eos_token: None,
+        eos_token: args
+            .get("eos-token")
+            .map(|v| {
+                v.parse::<u32>().with_context(|| {
+                    format!("--eos-token '{v}' is not a token id")
+                })
+            })
+            .transpose()?,
         host_admission: args.flag("host-admission"),
         // prefix sharing defaults on; it is a no-op under the static
         // layout or without admit_suffix artifacts

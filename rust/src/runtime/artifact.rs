@@ -1,5 +1,10 @@
 //! manifest.json parsing: the aot.py <-> Rust contract.
 
+// ao-lint: allow-file(index) -- shape/geometry access sits directly after
+// the length checks that establish its bounds (validate_admission checks
+// `inputs.len()` before positional access; kshape is checked to be rank
+// 5). Panic discipline (allow(panic)) is still enforced site-by-site.
+
 use crate::util::json::Value;
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
@@ -242,10 +247,19 @@ impl ArtifactSpec {
             );
         }
         let n_cache = cache_names.len();
-        let input = |name: &str| -> &IoSpec {
-            &self.inputs[base + trailing.iter().position(|n| *n == name).unwrap()]
+        let input = |name: &str| -> Result<&IoSpec> {
+            let off =
+                trailing.iter().position(|n| *n == name).ok_or_else(|| {
+                    anyhow!(
+                        "{}",
+                        ctx(&format!("no trailing input '{name}'"))
+                    )
+                })?;
+            self.inputs.get(base + off).ok_or_else(|| {
+                anyhow!("{}", ctx(&format!("missing input '{name}'")))
+            })
         };
-        let k = input("kcache");
+        let k = input("kcache")?;
         let kshape = &k.shape;
         if paged {
             self.check_paged_geometry(kshape)?;
@@ -270,13 +284,13 @@ impl ArtifactSpec {
                 k.dtype
             );
         }
-        let v = input("vcache");
+        let v = input("vcache")?;
         if v.shape != *kshape || v.dtype != k.dtype {
             anyhow::bail!(ctx("vcache shape/dtype differs from kcache"));
         }
         if quantized {
             for name in ["kscale", "vscale"] {
-                let s = input(name);
+                let s = input(name)?;
                 if s.shape != kshape[..4] || s.dtype != "f32" {
                     anyhow::bail!(
                         "{} (got {:?} {})",
@@ -288,14 +302,14 @@ impl ArtifactSpec {
                 }
             }
         }
-        if input("tokens").shape != [self.batch, self.seq] {
+        if input("tokens")?.shape != [self.batch, self.seq] {
             anyhow::bail!(ctx("tokens must be [batch, seq]"));
         }
-        if input("lens").shape != [self.batch] {
+        if input("lens")?.shape != [self.batch] {
             anyhow::bail!(ctx("lens must be [batch]"));
         }
         if want_kind == "admit_suffix" {
-            let st = input("start_lens");
+            let st = input("start_lens")?;
             if st.shape != [self.batch] || st.dtype != "s32" {
                 anyhow::bail!(
                     "{} (got {:?} {})",
@@ -306,7 +320,7 @@ impl ArtifactSpec {
             }
         }
         if paged {
-            let bt = input("block_tables");
+            let bt = input("block_tables")?;
             // an admit's table covers only its own bucket's blocks; a
             // suffix-prefill attends through the cached prefix, so its
             // table spans the full context window
@@ -328,10 +342,10 @@ impl ArtifactSpec {
                 anyhow::bail!(ctx("block_tables must be s32"));
             }
         } else {
-            if input("slot_ids").shape != [self.batch] {
+            if input("slot_ids")?.shape != [self.batch] {
                 anyhow::bail!(ctx("slot_ids must be [batch]"));
             }
-            if input("slot_ids").dtype != "s32" {
+            if input("slot_ids")?.dtype != "s32" {
                 anyhow::bail!(ctx("slot_ids must be s32"));
             }
         }
@@ -343,7 +357,7 @@ impl ArtifactSpec {
         }
         for (i, name) in cache_names.iter().enumerate() {
             let out = &self.outputs[1 + i];
-            let inp = input(name);
+            let inp = input(name)?;
             if out.shape != inp.shape || out.dtype != inp.dtype {
                 anyhow::bail!(ctx(&format!(
                     "output {} ({name}') shape/dtype differs from input",
@@ -406,8 +420,8 @@ fn io_specs(v: &Value) -> Result<Vec<IoSpec>> {
                     .as_arr()
                     .context("shape not arr")?
                     .iter()
-                    .map(|d| d.as_usize().unwrap())
-                    .collect(),
+                    .map(|d| d.as_usize().context("shape dim"))
+                    .collect::<Result<Vec<usize>>>()?,
                 dtype: e.req_str("dtype")?.to_string(),
             })
         })

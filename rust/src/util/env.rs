@@ -1,0 +1,19 @@
+//! The ONE sanctioned process-environment read. `clippy.toml` disallows
+//! bare `std::env::var` so every `AO_*` binding funnels through here;
+//! that keeps the env contract greppable (ao-lint's config-surface rule
+//! R3 checks each `EngineConfig` field has a string-literal `AO_*`
+//! binding) and keeps unset-vs-non-unicode handling in one place.
+
+/// Read an environment variable; `None` when unset or not unicode.
+#[allow(clippy::disallowed_methods)]
+pub fn var(name: &str) -> Option<String> {
+    std::env::var(name).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unset_reads_as_none() {
+        assert_eq!(super::var("AO_TEST_SURELY_UNSET_VARIABLE"), None);
+    }
+}

@@ -10,7 +10,7 @@ static START: OnceLock<Instant> = OnceLock::new();
 
 pub fn init() {
     START.get_or_init(Instant::now);
-    let lvl = std::env::var("AO_LOG").unwrap_or_default();
+    let lvl = crate::util::env::var("AO_LOG").unwrap_or_default();
     LEVEL.store(
         match lvl.as_str() {
             "debug" => 0,

@@ -3,6 +3,7 @@
 //! `anyhow`, so everything else AO needs is implemented here.
 
 pub mod cli;
+pub mod env;
 pub mod json;
 pub mod log;
 pub mod proptest;

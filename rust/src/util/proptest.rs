@@ -75,8 +75,7 @@ where
     G: FnMut(&mut Rng) -> T,
     P: Fn(&T) -> Result<(), String>,
 {
-    let seed = std::env::var("AO_PROPTEST_SEED")
-        .ok()
+    let seed = crate::util::env::var("AO_PROPTEST_SEED")
         .and_then(|s| s.parse().ok())
         .unwrap_or(0xA0_5EED);
     let mut rng = Rng::new(seed);

@@ -1,0 +1,790 @@
+#!/usr/bin/env python3
+"""Faithful Python mirror of rust/src/bin/ao_lint, for environments
+without a Rust toolchain (see .claude/skills/verify/SKILL.md): prints
+the same findings `make lint` would, plus the allow-marker census the
+`allow_marker_census_is_exact` test pins. The Rust binary is the source
+of truth — when the two disagree, fix this file."""
+import os, sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# ---------------- lexer.rs ----------------
+
+def lex_rust(src):
+    b = list(src)
+    n = len(b)
+    toks = []
+    i = 0
+    line = 1
+    while i < n:
+        c = b[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c.isspace():
+            i += 1
+            continue
+        if c == "/" and i + 1 < n and b[i + 1] == "/":
+            while i < n and b[i] != "\n":
+                i += 1
+            continue
+        if c == "/" and i + 1 < n and b[i + 1] == "*":
+            depth = 1
+            i += 2
+            while i < n and depth > 0:
+                if b[i] == "/" and i + 1 < n and b[i + 1] == "*":
+                    depth += 1
+                    i += 2
+                elif b[i] == "*" and i + 1 < n and b[i + 1] == "/":
+                    depth -= 1
+                    i += 2
+                else:
+                    if b[i] == "\n":
+                        line += 1
+                    i += 1
+            continue
+        rs = raw_string(b, i)
+        if rs is not None:
+            text, length = rs
+            tok_line = line
+            line += text.count("\n")
+            toks.append(("str", text, tok_line))
+            i += length
+            continue
+        if c == '"' or (c == "b" and i + 1 < n and b[i + 1] == '"'):
+            if c == "b":
+                i += 1
+            tok_line = line
+            text = []
+            i += 1
+            while i < n and b[i] != '"':
+                if b[i] == "\\" and i + 1 < n:
+                    if b[i + 1] == "\n":
+                        line += 1
+                    text.append(b[i])
+                    text.append(b[i + 1])
+                    i += 2
+                else:
+                    if b[i] == "\n":
+                        line += 1
+                    text.append(b[i])
+                    i += 1
+            i += 1
+            toks.append(("str", "".join(text), tok_line))
+            continue
+        if c == "'":
+            if i + 1 < n and b[i + 1] == "\\":
+                j = i + 2
+                while j < n and b[j] != "'":
+                    j += 1
+                i = j + 1 if j < n else i + 2
+                toks.append(("char", "", line))
+                continue
+            if i + 2 < n and b[i + 2] == "'":
+                toks.append(("char", b[i + 1], line))
+                i += 3
+                continue
+            toks.append(("punct", "'", line))
+            i += 1
+            continue
+        if c.isalpha() or c == "_":
+            start = i
+            while i < n and (b[i].isalnum() or b[i] == "_"):
+                i += 1
+            toks.append(("ident", "".join(b[start:i]), line))
+            continue
+        if c.isdigit():
+            start = i
+            while i < n and (b[i].isalnum() or b[i] == "_"):
+                i += 1
+            toks.append(("num", "".join(b[start:i]), line))
+            continue
+        toks.append(("punct", c, line))
+        i += 1
+    return toks
+
+
+def raw_string(b, i):
+    j = i
+    if j < len(b) and b[j] == "b":
+        j += 1
+    if j >= len(b) or b[j] != "r":
+        return None
+    j += 1
+    hashes = 0
+    while j < len(b) and b[j] == "#":
+        hashes += 1
+        j += 1
+    if j >= len(b) or b[j] != '"':
+        return None
+    j += 1
+    start = j
+    while j < len(b):
+        if b[j] == '"':
+            k = j + 1
+            h = 0
+            while h < hashes and k < len(b) and b[k] == "#":
+                h += 1
+                k += 1
+            if h == hashes:
+                return ("".join(b[start:j]), k - i)
+        j += 1
+    return ("".join(b[start:]), len(b) - i)
+
+
+def lex_python(src):
+    b = list(src)
+    n = len(b)
+    toks = []
+    i = 0
+    line = 1
+    while i < n:
+        c = b[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c.isspace():
+            i += 1
+            continue
+        if c == "#":
+            while i < n and b[i] != "\n":
+                i += 1
+            continue
+        qpos = py_string_start(b, i)
+        if qpos is not None:
+            q = b[qpos]
+            triple = qpos + 2 < n and b[qpos + 1] == q and b[qpos + 2] == q
+            delim = 3 if triple else 1
+            tok_line = line
+            text = []
+            j = qpos + delim
+            while j < n:
+                if not triple and b[j] == "\\" and j + 1 < n:
+                    if b[j + 1] == "\n":
+                        line += 1
+                    text.append(b[j])
+                    text.append(b[j + 1])
+                    j += 2
+                    continue
+                if b[j] == q and (
+                    not triple
+                    or (j + 2 < n and b[j + 1] == q and b[j + 2] == q)
+                ):
+                    break
+                if b[j] == "\n":
+                    line += 1
+                text.append(b[j])
+                j += 1
+            toks.append(("str", "".join(text), tok_line))
+            i = min(j + delim, n)
+            continue
+        if c.isalpha() or c == "_":
+            start = i
+            while i < n and (b[i].isalnum() or b[i] == "_"):
+                i += 1
+            toks.append(("ident", "".join(b[start:i]), line))
+            continue
+        if c.isdigit():
+            start = i
+            while i < n and (b[i].isalnum() or b[i] == "_" or b[i] == "."):
+                i += 1
+            toks.append(("num", "".join(b[start:i]), line))
+            continue
+        toks.append(("punct", c, line))
+        i += 1
+    return toks
+
+
+def py_string_start(b, i):
+    j = i
+    while j < len(b) and j - i < 3 and b[j] in "rbfuRBFU":
+        j += 1
+    if j < len(b) and (b[j] == '"' or b[j] == "'"):
+        return j
+    return None
+
+
+def strip_cfg_test(toks):
+    def hit(k, kind, text):
+        return k < len(toks) and toks[k][0] == kind and toks[k][1] == text
+
+    out = []
+    i = 0
+    n = len(toks)
+    while i < n:
+        if (
+            hit(i, "punct", "#")
+            and hit(i + 1, "punct", "[")
+            and hit(i + 2, "ident", "cfg")
+            and hit(i + 3, "punct", "(")
+            and hit(i + 4, "ident", "test")
+            and hit(i + 5, "punct", ")")
+            and hit(i + 6, "punct", "]")
+        ):
+            j = i + 7
+            while j < n and not hit(j, "punct", "{"):
+                j += 1
+            depth = 0
+            while j < n:
+                if hit(j, "punct", "{"):
+                    depth += 1
+                if hit(j, "punct", "}"):
+                    depth -= 1
+                    if depth == 0:
+                        break
+                j += 1
+            i = j + 1
+            continue
+        out.append(toks[i])
+        i += 1
+    return out
+
+
+def struct_pub_fields(toks, name):
+    out = []
+    i = 0
+    while i + 2 < len(toks):
+        if (
+            toks[i][:2] == ("ident", "struct")
+            and toks[i + 1][:2] == ("ident", name)
+        ):
+            j = i + 2
+            while j < len(toks) and toks[j][:2] != ("punct", "{"):
+                j += 1
+            depth = 0
+            while j < len(toks):
+                if toks[j][:2] == ("punct", "{"):
+                    depth += 1
+                if toks[j][:2] == ("punct", "}"):
+                    depth -= 1
+                    if depth == 0:
+                        break
+                if (
+                    depth == 1
+                    and toks[j][:2] == ("ident", "pub")
+                    and j + 2 < len(toks)
+                    and toks[j + 1][0] == "ident"
+                    and toks[j + 2][:2] == ("punct", ":")
+                ):
+                    out.append((toks[j + 1][1], toks[j + 1][2]))
+                j += 1
+            break
+        i += 1
+    return out
+
+
+def ident_line(toks, name):
+    for t in toks:
+        if t[:2] == ("ident", name):
+            return t[2]
+    return 1
+
+
+def str_line(toks, text):
+    for t in toks:
+        if t[:2] == ("str", text):
+            return t[2]
+    return 1
+
+
+# ---------------- r1_panic.rs ----------------
+
+KEYWORDS = [
+    "mut", "ref", "in", "as", "dyn", "where", "impl", "else", "return",
+    "match", "if", "let", "move", "box", "static", "const", "crate",
+    "self", "Self", "super", "pub", "use", "fn", "type", "break",
+    "continue", "loop", "while", "for", "unsafe", "extern", "trait",
+    "enum", "struct", "mod",
+]
+
+
+def parse_markers(path, text):
+    out = []
+    for idx, raw in enumerate(text.split("\n")):
+        cpos = raw.find("//")
+        if cpos < 0:
+            continue
+        comment = raw[cpos:]
+        mpos = comment.find("ao-lint:")
+        if mpos < 0:
+            continue
+        rest = comment[mpos + len("ao-lint:"):].lstrip()
+        if rest.startswith("allow-file("):
+            file_level, rest = True, rest[len("allow-file("):]
+        elif rest.startswith("allow("):
+            file_level, rest = False, rest[len("allow("):]
+        else:
+            continue
+        close = rest.find(")")
+        if close < 0:
+            continue
+        cat = rest[:close].strip()
+        after = rest[close + 1:].lstrip()
+        reason = after[2:].strip() if after.startswith("--") else ""
+        out.append(dict(line=idx + 1, cat=cat, file_level=file_level,
+                        reason=reason))
+    return out
+
+
+def r1_check_file(path, text, out):
+    markers = parse_markers(path, text)
+    for m in markers:
+        if not m["reason"]:
+            out.append(("marker", path, m["line"],
+                        f"marker for '{m['cat']}' missing reason"))
+
+    def allowed(line, cat):
+        return any(
+            m["cat"] == cat
+            and (m["file_level"] or m["line"] == line
+                 or m["line"] + 1 == line)
+            for m in markers
+        )
+
+    toks = strip_cfg_test(lex_rust(text))
+    for k, t in enumerate(toks):
+        prev = toks[k - 1] if k > 0 else None
+        nxt = toks[k + 1] if k + 1 < len(toks) else None
+        if (
+            t[0] == "ident"
+            and t[1] in ("unwrap", "expect")
+            and prev is not None and prev[:2] == ("punct", ".")
+            and nxt is not None and nxt[:2] == ("punct", "(")
+            and not allowed(t[2], "panic")
+        ):
+            out.append(("r1-panic", path, t[2], f".{t[1]}()"))
+        if (
+            t[0] == "ident"
+            and t[1] in ("panic", "unreachable", "todo", "unimplemented")
+            and nxt is not None and nxt[:2] == ("punct", "!")
+            and not allowed(t[2], "panic")
+        ):
+            out.append(("r1-panic", path, t[2], f"{t[1]}!"))
+        if t[:2] == ("punct", "[") and prev is not None:
+            indexes = (
+                prev[0] == "ident" and prev[1] not in KEYWORDS
+            ) or prev[:2] == ("punct", ")") or prev[:2] == ("punct", "]")
+            if indexes and not allowed(t[2], "index"):
+                out.append(("r1-index", path, t[2],
+                            f"[] after {prev[1]}"))
+
+
+def scheduler_purity(path, text):
+    toks = strip_cfg_test(lex_rust(text))
+    return [
+        ("sched-purity", path, t[2], t[1])
+        for t in toks
+        if t[0] == "ident"
+        and t[1] in ("Instant", "SystemTime", "elapsed", "env")
+    ]
+
+
+def marker_census(files):
+    panic_line = index_line = file_level = 0
+    for path, text in files:
+        for m in parse_markers(path, text):
+            if m["file_level"]:
+                file_level += 1
+            elif m["cat"] == "panic":
+                panic_line += 1
+            elif m["cat"] == "index":
+                index_line += 1
+    return (panic_line, index_line, file_level)
+
+
+# ---------------- r2_contract.rs ----------------
+
+TAG_ALLOWLIST = [
+    "version", "rope_theta", "norm_eps", "lr", "lora", "variant", "mode",
+    "m", "k", "n", "f32", "int8", "static", "paged",
+]
+
+
+def py_kinds(toks):
+    out = {}
+    for k, t in enumerate(toks):
+        if (
+            t[:2] == ("str", "kind")
+            and k + 2 < len(toks)
+            and toks[k + 1][:2] == ("punct", ":")
+            and toks[k + 2][0] == "str"
+        ):
+            v = toks[k + 2]
+            out.setdefault(v[1], v[2])
+    return out
+
+
+def str_seq(toks, i, close):
+    vals = []
+    while True:
+        if i >= len(toks):
+            return None
+        t = toks[i]
+        if t[:2] == ("punct", close):
+            return vals
+        if t[0] != "str":
+            return None
+        vals.append(t[1])
+        i += 1
+        if i >= len(toks):
+            return None
+        sep = toks[i]
+        if sep[:2] == ("punct", ","):
+            i += 1
+        elif sep[:2] != ("punct", close):
+            return None
+
+
+def str_tuples(toks):
+    out = []
+    for i, t in enumerate(toks):
+        if t[:2] == ("punct", "("):
+            vals = str_seq(toks, i + 1, ")")
+            if vals is not None and len(vals) >= 2:
+                out.append((vals, t[2]))
+    return out
+
+
+def str_slices(toks):
+    out = []
+    for i, t in enumerate(toks):
+        if (
+            t[:2] == ("punct", "&")
+            and i + 1 < len(toks)
+            and toks[i + 1][:2] == ("punct", "[")
+        ):
+            vals = str_seq(toks, i + 2, "]")
+            if vals:
+                out.append((vals, t[2]))
+    return out
+
+
+def py_dict_keys(toks):
+    out = {}
+    for k, t in enumerate(toks):
+        if t[0] != "str":
+            continue
+        prev = toks[k - 1] if k > 0 else None
+        key_in_literal = (
+            k + 1 < len(toks)
+            and toks[k + 1][:2] == ("punct", ":")
+            and prev is not None
+            and prev[:2] in (("punct", "{"), ("punct", ","))
+        )
+        key_assigned = (
+            prev is not None
+            and prev[:2] == ("punct", "[")
+            and k + 2 < len(toks)
+            and toks[k + 1][:2] == ("punct", "]")
+            and toks[k + 2][:2] == ("punct", "=")
+            and not (k + 3 < len(toks)
+                     and toks[k + 3][:2] == ("punct", "="))
+        )
+        if key_in_literal or key_assigned:
+            out.setdefault(t[1], t[2])
+    return out
+
+
+def rust_manifest_keys(toks):
+    out = {}
+    for k, t in enumerate(toks):
+        if (
+            t[0] == "ident"
+            and t[1] in ("req", "req_str", "req_usize", "get")
+            and k + 2 < len(toks)
+            and toks[k + 1][:2] == ("punct", "(")
+            and toks[k + 2][0] == "str"
+        ):
+            v = toks[k + 2]
+            out.setdefault(v[1], v[2])
+    return out
+
+
+def kind_layout_arms(toks):
+    out = []
+    for k, t in enumerate(toks):
+        if (
+            t[:2] == ("punct", "(")
+            and k + 6 < len(toks)
+            and toks[k + 1][0] == "str"
+            and toks[k + 2][:2] == ("punct", ",")
+            and toks[k + 3][0] == "str"
+            and toks[k + 4][:2] == ("punct", ")")
+            and toks[k + 5][:2] == ("punct", "=")
+            and toks[k + 6][:2] == ("punct", ">")
+        ):
+            out.append((toks[k + 1][1], toks[k + 3][1], toks[k + 1][2]))
+    return out
+
+
+def r2_check(aot, artifact, consumers):
+    out = []
+    py = lex_python(aot[1])
+    art = strip_cfg_test(lex_rust(artifact[1]))
+    py_anchor = str_line(py, "kind")
+    trailing_anchor = ident_line(art, "layout_trailing_inputs")
+    cache_anchor = ident_line(art, "cache_input_names")
+    kind_anchor = str_line(art, "kind")
+
+    kinds_py = py_kinds(py)
+    consumed = {}
+    all_strs = []
+    for cpath, ctext in consumers:
+        toks = strip_cfg_test(lex_rust(ctext))
+        for k, t in enumerate(toks):
+            if (
+                t[0] == "ident"
+                and t[1] in ("find", "validate_admission")
+                and k + 2 < len(toks)
+                and toks[k + 1][:2] == ("punct", "(")
+                and toks[k + 2][0] == "str"
+            ):
+                v = toks[k + 2]
+                consumed.setdefault(v[1], (cpath, v[2]))
+        for t in toks:
+            if t[0] == "str":
+                all_strs.append((t[1], cpath, t[2]))
+    for k, _, line in kind_layout_arms(art):
+        consumed.setdefault(k, (artifact[0], line))
+    for kind, line in kinds_py.items():
+        if kind in consumed:
+            continue
+        prefix = kind + "_"
+        if any(s.startswith(prefix) for s, _, _ in all_strs):
+            continue
+        out.append(("r2-contract", aot[0], line,
+                    f"kind '{kind}' emitted, never consumed"))
+    for kind, (f, line) in consumed.items():
+        if kind not in kinds_py:
+            out.append(("r2-contract", f, line,
+                        f"kind '{kind}' consumed, never emitted"))
+
+    tuples = str_tuples(py)
+    slices = str_slices(art)
+    for label, first, rs_anchor in [
+        ("trailing-input", "token", trailing_anchor),
+        ("cache-input", "kcache", cache_anchor),
+    ]:
+        def select(lists):
+            return {
+                ",".join(v): line
+                for v, line in lists
+                if v[0] == first or v[0] == first + "s"
+            }
+        py_lists = select(tuples)
+        rs_lists = select(slices)
+        for lst, line in py_lists.items():
+            if lst not in rs_lists:
+                out.append(("r2-contract", aot[0], line,
+                            f"{label} [{lst}] py-only"))
+        for lst, line in rs_lists.items():
+            if lst not in py_lists:
+                out.append(("r2-contract", artifact[0], line,
+                            f"{label} [{lst}] rust-only"))
+
+    keys_py = py_dict_keys(py)
+    keys_rs = rust_manifest_keys(art)
+    for key, line in keys_rs.items():
+        if key not in keys_py:
+            out.append(("r2-contract", artifact[0], line,
+                        f"tag '{key}' read, never written"))
+    for key, line in keys_py.items():
+        if key not in keys_rs and key not in TAG_ALLOWLIST:
+            out.append(("r2-contract", aot[0], line,
+                        f"tag '{key}' written, never read, unlisted"))
+    for entry in TAG_ALLOWLIST:
+        py_only = entry in keys_py and entry not in keys_rs
+        if not py_only:
+            out.append(("r2-contract", aot[0], 1,
+                        f"stale allowlist entry '{entry}'"))
+    return out
+
+
+# ---------------- r3_config.rs ----------------
+
+R3_TABLE = [
+    ("artifacts_dir", "artifacts", ("env", "AO_ARTIFACTS")),
+    ("ckpt_path", "ckpt", ("param", "ckpt_path")),
+    ("model", "model", ("param", "model")),
+    ("scheme", "scheme", ("param", "scheme")),
+    ("cache_scheme", "kv-cache", ("env", "AO_KV_CACHE")),
+    ("kv_layout", "kv-layout", ("env", "AO_KV_LAYOUT")),
+    ("eos_token", "eos-token", ("env", "AO_EOS_TOKEN")),
+    ("host_admission", "host-admission", ("env", "AO_HOST_ADMISSION")),
+    ("prefix_cache", "no-prefix-cache", ("env", "AO_PREFIX_CACHE")),
+    ("max_batch_tokens", "max-batch-tokens",
+     ("env", "AO_MAX_BATCH_TOKENS")),
+]
+
+
+def r3_check(engine, main_rs, benchsupport, lib_rs, docs):
+    out = []
+    eng = strip_cfg_test(lex_rust(engine[1]))
+    fields = struct_pub_fields(eng, "EngineConfig")
+    struct_anchor = ident_line(eng, "EngineConfig")
+    main_toks = strip_cfg_test(lex_rust(main_rs[1]))
+    bench_toks = strip_cfg_test(lex_rust(benchsupport[1]))
+    lib_toks = strip_cfg_test(lex_rust(lib_rs[1]))
+    serve_anchor = ident_line(main_toks, "cmd_serve")
+    bench_anchor = ident_line(bench_toks, "serve_workload_sched")
+
+    def has_str(toks, s):
+        return any(t[:2] == ("str", s) for t in toks)
+
+    def has_ident(toks, s):
+        return any(t[:2] == ("ident", s) for t in toks)
+
+    for field, line in fields:
+        if not any(r[0] == field for r in R3_TABLE):
+            out.append(("r3-config", engine[0], line,
+                        f"field '{field}' not in table"))
+    for field, flag, (bkind, bname) in R3_TABLE:
+        if not any(f == field for f, _ in fields):
+            out.append(("r3-config", engine[0], struct_anchor,
+                        f"stale table entry '{field}'"))
+            continue
+        if not has_str(main_toks, flag):
+            out.append(("r3-config", main_rs[0], serve_anchor,
+                        f"'{field}' missing --{flag} flag"))
+        if bkind == "env":
+            if not has_str(bench_toks, bname) and not has_str(
+                lib_toks, bname
+            ):
+                out.append(("r3-config", benchsupport[0], bench_anchor,
+                            f"'{field}' missing {bname} env binding"))
+        else:
+            if not has_ident(bench_toks, bname):
+                out.append(("r3-config", benchsupport[0], bench_anchor,
+                            f"'{field}' missing {bname} param"))
+        term = f"--{flag}"
+        if not any(term in dtext for _, dtext in docs):
+            out.append(("r3-config", "docs", 1,
+                        f"'{field}' missing {term} docs mention"))
+    return out
+
+
+# ---------------- r4_metrics.rs ----------------
+
+def method_bodies(toks):
+    out = {}
+    i = 0
+    while i + 1 < len(toks):
+        if toks[i][:2] == ("ident", "fn") and toks[i + 1][0] == "ident":
+            name = toks[i + 1][1]
+            j = i + 2
+            while j < len(toks) and toks[j][:2] != ("punct", "{"):
+                if toks[j][:2] == ("punct", ";"):
+                    break
+                j += 1
+            if j < len(toks) and toks[j][:2] == ("punct", "{"):
+                depth = 1
+                body = []
+                j += 1
+                while j < len(toks) and depth > 0:
+                    if toks[j][:2] == ("punct", "{"):
+                        depth += 1
+                    if toks[j][:2] == ("punct", "}"):
+                        depth -= 1
+                    body.append(toks[j])
+                    j += 1
+                out[name] = body
+                i = j
+                continue
+        i += 1
+    return out
+
+
+def r4_check(metrics):
+    toks = strip_cfg_test(lex_rust(metrics[1]))
+    fields = struct_pub_fields(toks, "MetricsCollector")
+    methods = method_bodies(toks)
+    covered = set()
+    seen = set()
+    stack = ["report"]
+    while stack:
+        name = stack.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        body = methods.get(name)
+        if body is None:
+            continue
+        for k, t in enumerate(body):
+            if t[:2] != ("ident", "self"):
+                continue
+            if not (k + 1 < len(body)
+                    and body[k + 1][:2] == ("punct", ".")):
+                continue
+            if k + 2 >= len(body):
+                continue
+            member = body[k + 2]
+            if member[0] != "ident":
+                continue
+            if k + 3 < len(body) and body[k + 3][:2] == ("punct", "("):
+                stack.append(member[1])
+            elif any(f == member[1] for f, _ in fields):
+                covered.add(member[1])
+    return [
+        ("r4-metrics", metrics[0], line, f"field '{f}' never rendered")
+        for f, line in fields
+        if f not in covered
+    ]
+
+
+# ---------------- main.rs run_all ----------------
+
+R1_DIRS = ["rust/src/coordinator", "rust/src/runtime"]
+R2_CONSUMERS = [
+    "rust/src/runtime/artifact.rs",
+    "rust/src/coordinator/engine.rs",
+    "rust/src/train/mod.rs",
+    "rust/src/evalh/mod.rs",
+    "rust/benches/fig3_fp8_microbench.rs",
+]
+
+
+def load(rel):
+    with open(os.path.join(ROOT, rel)) as f:
+        return (rel, f.read())
+
+
+def run_all():
+    scope = []
+    for d in R1_DIRS:
+        names = sorted(
+            n for n in os.listdir(os.path.join(ROOT, d))
+            if n.endswith(".rs")
+        )
+        scope.extend(load(f"{d}/{n}") for n in names)
+    out = []
+    for path, text in scope:
+        r1_check_file(path, text, out)
+        if path.endswith("coordinator/scheduler.rs"):
+            out.extend(scheduler_purity(path, text))
+    aot = load("python/compile/aot.py")
+    artifact = load("rust/src/runtime/artifact.rs")
+    consumers = [load(r) for r in R2_CONSUMERS]
+    out.extend(r2_check(aot, artifact, consumers))
+    engine = load("rust/src/coordinator/engine.rs")
+    main_rs = load("rust/src/main.rs")
+    bench = load("rust/src/benchsupport/mod.rs")
+    lib_rs = load("rust/src/lib.rs")
+    docs_dir = os.path.join(ROOT, "docs")
+    docs = [
+        load(f"docs/{n}")
+        for n in sorted(os.listdir(docs_dir))
+        if n.endswith(".md")
+    ]
+    out.extend(r3_check(engine, main_rs, bench, lib_rs, docs))
+    out.extend(r4_check(load("rust/src/coordinator/metrics.rs")))
+    return out, scope
+
+
+if __name__ == "__main__":
+    finds, scope = run_all()
+    for f in finds:
+        print(f"{f[1]}:{f[2]}: [{f[0]}] {f[3]}")
+    print(f"-- {len(finds)} finding(s)")
+    print("-- marker census:", marker_census(scope))
