@@ -48,6 +48,12 @@ fn bench_json_entry(label: &str, m: &MetricsCollector) -> Value {
         ("sched_mixed_steps", json::num(m.sched_mixed_steps as f64)),
         ("sched_stall_steps", json::num(m.sched_stall_steps as f64)),
         ("sched_preemptions", json::num(m.sched_preemptions as f64)),
+        ("faults_injected", json::num(m.faults_injected as f64)),
+        ("faults_retried", json::num(m.faults_retried as f64)),
+        ("faults_recovered", json::num(m.faults_recovered as f64)),
+        ("rejected_overload", json::num(m.rejected_overload as f64)),
+        ("rejected_deadline", json::num(m.rejected_deadline as f64)),
+        ("n_canceled", json::num(m.n_canceled as f64)),
     ])
 }
 
@@ -386,8 +392,11 @@ fn main() -> anyhow::Result<()> {
         ("n_requests", json::num(n_requests as f64)),
         ("runs", Value::Arr(bench_entries)),
     ]);
-    let json_path = std::path::Path::new("BENCH_serving.json");
-    std::fs::write(json_path, format!("{}\n", bench_json.to_string()))?;
+    // anchored to the crate root (not the CWD) so the CI artifact step
+    // and local runs agree on where the trajectory lands
+    let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("BENCH_serving.json");
+    std::fs::write(&json_path, format!("{}\n", bench_json.to_string()))?;
     println!("\nwrote {} ({n_runs} runs)", json_path.display());
 
     // H100 projection: decode GEMVs are memory-bound; fp8 halves the weight

@@ -183,6 +183,104 @@ pub fn bench_eos_token() -> Result<Option<u32>> {
     eos_token_from(crate::util::env::var("AO_EOS_TOKEN").as_deref())
 }
 
+/// Parse an optional AO_FAULT_RETRIES value (None/"" -> the engine
+/// default of 3 transient-failure retries).
+pub fn fault_retries_from(var: Option<&str>) -> Result<usize> {
+    match var {
+        None | Some("") => Ok(3),
+        Some(v) => v.parse::<usize>().map_err(|_| {
+            anyhow::anyhow!(
+                "AO_FAULT_RETRIES: '{v}' is not a retry count (unset or \
+                 empty keeps the default of 3)"
+            )
+        }),
+    }
+}
+
+/// Transient-failure retry budget benches serve with: AO_FAULT_RETRIES.
+pub fn bench_fault_retries() -> Result<usize> {
+    fault_retries_from(crate::util::env::var("AO_FAULT_RETRIES").as_deref())
+}
+
+/// Parse an optional AO_FAULT_BACKOFF_MS value (None/"" -> the engine
+/// default of a 10ms base backoff, doubling per retry).
+pub fn fault_backoff_ms_from(var: Option<&str>) -> Result<u64> {
+    match var {
+        None | Some("") => Ok(10),
+        Some(v) => v.parse::<u64>().map_err(|_| {
+            anyhow::anyhow!(
+                "AO_FAULT_BACKOFF_MS: '{v}' is not a duration in \
+                 milliseconds (unset or empty keeps the default of 10)"
+            )
+        }),
+    }
+}
+
+/// Base retry backoff benches serve with: AO_FAULT_BACKOFF_MS.
+pub fn bench_fault_backoff_ms() -> Result<u64> {
+    fault_backoff_ms_from(
+        crate::util::env::var("AO_FAULT_BACKOFF_MS").as_deref(),
+    )
+}
+
+/// Parse an optional AO_FAULT_PLAN value (None/"" -> no injector). The
+/// plan itself is validated by the engine (`FaultInjector::parse`), so
+/// this only normalizes the empty/unset cases.
+pub fn fault_plan_from(var: Option<&str>) -> Option<String> {
+    match var {
+        None | Some("") => None,
+        Some(v) => Some(v.to_string()),
+    }
+}
+
+/// Deterministic fault plan benches serve with: AO_FAULT_PLAN (off
+/// default; see docs/robustness.md for the grammar).
+pub fn bench_fault_plan() -> Option<String> {
+    fault_plan_from(crate::util::env::var("AO_FAULT_PLAN").as_deref())
+}
+
+/// Parse an optional AO_MAX_QUEUE value (None/"" -> unbounded queue).
+pub fn max_queue_from(var: Option<&str>) -> Result<Option<usize>> {
+    match var {
+        None | Some("") => Ok(None),
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) if n > 0 => Ok(Some(n)),
+            _ => anyhow::bail!(
+                "AO_MAX_QUEUE: '{v}' is not a positive integer queue \
+                 bound (unset or empty leaves the queue unbounded)"
+            ),
+        },
+    }
+}
+
+/// Admission-queue bound benches serve with: AO_MAX_QUEUE (off default).
+pub fn bench_max_queue() -> Result<Option<usize>> {
+    max_queue_from(crate::util::env::var("AO_MAX_QUEUE").as_deref())
+}
+
+/// Parse an optional AO_DEFAULT_DEADLINE_MS value (None/"" -> no default
+/// deadline).
+pub fn default_deadline_ms_from(var: Option<&str>) -> Result<Option<u64>> {
+    match var {
+        None | Some("") => Ok(None),
+        Some(v) => v.parse::<u64>().map(Some).map_err(|_| {
+            anyhow::anyhow!(
+                "AO_DEFAULT_DEADLINE_MS: '{v}' is not a duration in \
+                 milliseconds (unset or empty disables the default \
+                 deadline)"
+            )
+        }),
+    }
+}
+
+/// Default request deadline benches serve with: AO_DEFAULT_DEADLINE_MS
+/// (off default).
+pub fn bench_default_deadline_ms() -> Result<Option<u64>> {
+    default_deadline_ms_from(
+        crate::util::env::var("AO_DEFAULT_DEADLINE_MS").as_deref(),
+    )
+}
+
 /// Run a full serving workload in-process; returns engine metrics
 /// (including host↔device transfer bytes — set AO_BENCH_REPORT=1 to
 /// print the full engine report line per run).
@@ -247,6 +345,16 @@ pub fn serve_workload_sched(
         // AO_MAX_BATCH_TOKENS=<budget> turns on the iteration-level
         // scheduler (continuous batching + chunked prefill)
         max_batch_tokens,
+        // AO_FAULT_RETRIES / AO_FAULT_BACKOFF_MS tune transient-failure
+        // containment; AO_FAULT_PLAN arms the deterministic injector so
+        // chaos runs are benchable (and bit-reproducible) from any bench
+        fault_retries: bench_fault_retries()?,
+        fault_backoff_ms: bench_fault_backoff_ms()?,
+        fault_plan: bench_fault_plan(),
+        // AO_MAX_QUEUE bounds admission; AO_DEFAULT_DEADLINE_MS stamps a
+        // deadline on every request that lacks one
+        max_queue: bench_max_queue()?,
+        default_deadline_ms: bench_default_deadline_ms()?,
     });
     let mut rxs = Vec::new();
     for r in &reqs {
@@ -261,6 +369,7 @@ pub fn serve_workload_sched(
             submitted_at: Instant::now(),
             enqueued_at: None,
             resume: None,
+            deadline: None,
         })?;
         rxs.push(rx);
     }
@@ -414,5 +523,46 @@ mod tests {
         assert_eq!(eos_token_from(Some("3")).unwrap(), Some(3));
         let e = format!("{:#}", eos_token_from(Some("eof")).unwrap_err());
         assert!(e.contains("AO_EOS_TOKEN"), "{e}");
+    }
+
+    #[test]
+    fn fault_env_contract() {
+        assert_eq!(fault_retries_from(None).unwrap(), 3);
+        assert_eq!(fault_retries_from(Some("")).unwrap(), 3);
+        assert_eq!(fault_retries_from(Some("0")).unwrap(), 0);
+        assert_eq!(fault_retries_from(Some("5")).unwrap(), 5);
+        let e = format!("{:#}", fault_retries_from(Some("x")).unwrap_err());
+        assert!(e.contains("AO_FAULT_RETRIES"), "{e}");
+        assert_eq!(fault_backoff_ms_from(None).unwrap(), 10);
+        assert_eq!(fault_backoff_ms_from(Some("1")).unwrap(), 1);
+        let e =
+            format!("{:#}", fault_backoff_ms_from(Some("x")).unwrap_err());
+        assert!(e.contains("AO_FAULT_BACKOFF_MS"), "{e}");
+        assert_eq!(fault_plan_from(None), None);
+        assert_eq!(fault_plan_from(Some("")), None);
+        assert_eq!(
+            fault_plan_from(Some("exec:decode:at=3")).as_deref(),
+            Some("exec:decode:at=3")
+        );
+    }
+
+    #[test]
+    fn admission_env_contract() {
+        assert_eq!(max_queue_from(None).unwrap(), None);
+        assert_eq!(max_queue_from(Some("")).unwrap(), None);
+        assert_eq!(max_queue_from(Some("8")).unwrap(), Some(8));
+        let e = format!("{:#}", max_queue_from(Some("0")).unwrap_err());
+        assert!(e.contains("AO_MAX_QUEUE"), "{e}");
+        assert_eq!(default_deadline_ms_from(None).unwrap(), None);
+        assert_eq!(default_deadline_ms_from(Some("")).unwrap(), None);
+        assert_eq!(
+            default_deadline_ms_from(Some("250")).unwrap(),
+            Some(250)
+        );
+        let e = format!(
+            "{:#}",
+            default_deadline_ms_from(Some("soon")).unwrap_err()
+        );
+        assert!(e.contains("AO_DEFAULT_DEADLINE_MS"), "{e}");
     }
 }

@@ -67,6 +67,31 @@ pub const TABLE: &[ConfigRule] = &[
         flag: "max-batch-tokens",
         binding: Binding::Env("AO_MAX_BATCH_TOKENS"),
     },
+    ConfigRule {
+        field: "fault_retries",
+        flag: "fault-retries",
+        binding: Binding::Env("AO_FAULT_RETRIES"),
+    },
+    ConfigRule {
+        field: "fault_backoff_ms",
+        flag: "fault-backoff-ms",
+        binding: Binding::Env("AO_FAULT_BACKOFF_MS"),
+    },
+    ConfigRule {
+        field: "fault_plan",
+        flag: "fault-plan",
+        binding: Binding::Env("AO_FAULT_PLAN"),
+    },
+    ConfigRule {
+        field: "max_queue",
+        flag: "max-queue",
+        binding: Binding::Env("AO_MAX_QUEUE"),
+    },
+    ConfigRule {
+        field: "default_deadline_ms",
+        flag: "default-deadline-ms",
+        binding: Binding::Env("AO_DEFAULT_DEADLINE_MS"),
+    },
 ];
 
 fn push(out: &mut Vec<Finding>, file: &str, line: usize, message: String) {

@@ -1,0 +1,175 @@
+//! R5 — no silent event-channel drops.
+//!
+//! Non-`#[cfg(test)]` code under `rust/src/coordinator/` must not write
+//! `let _ = ...send(...)`: discarding a send result silently swallows a
+//! hung-up receiver, which is exactly the condition the cancellation and
+//! drain paths exist to handle. Every deliberate drop carries a reviewed
+//! marker on the line above (or the same line):
+//!
+//! ```text
+//! // ao-lint: allow(drop_send) -- reason the drop is benign
+//! let _ = tx.send(Event::Token(tok));
+//! ```
+//!
+//! The marker census in `main.rs` pins the reviewed-drop count, so a new
+//! drop site must update the census in the same diff.
+
+use crate::findings::Finding;
+use crate::lexer::{lex_rust, strip_cfg_test};
+use crate::r1_panic::parse_markers;
+use crate::SourceFile;
+
+/// Run R5 over the lint scope; only `coordinator/` files are checked
+/// (runtime code reports transfer/exec failures through `Result`, not
+/// event channels).
+pub fn check(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files {
+        if f.path.starts_with("rust/src/coordinator/") {
+            check_file(f, &mut out);
+        }
+    }
+    out
+}
+
+fn check_file(f: &SourceFile, out: &mut Vec<Finding>) {
+    let markers = parse_markers(f);
+    let allowed = |line: usize| {
+        markers.iter().any(|m| {
+            m.cat == "drop_send"
+                && (m.file_level || m.line == line || m.line + 1 == line)
+        })
+    };
+    let toks = strip_cfg_test(&lex_rust(&f.text));
+    let mut i = 0;
+    while i + 2 < toks.len() {
+        if !(toks[i].is_ident("let")
+            && toks[i + 1].is_ident("_")
+            && toks[i + 2].is_punct('='))
+        {
+            i += 1;
+            continue;
+        }
+        // scan the dropped expression (up to `;`) for a `send(` call
+        let mut j = i + 3;
+        let mut is_send = false;
+        while j < toks.len() && !toks[j].is_punct(';') {
+            if toks[j].is_ident("send")
+                && toks.get(j + 1).is_some_and(|t| t.is_punct('('))
+            {
+                is_send = true;
+            }
+            j += 1;
+        }
+        if is_send && !allowed(toks[i].line) {
+            out.push(Finding {
+                rule: "r5-events",
+                file: f.path.clone(),
+                line: toks[i].line,
+                message: "`let _ = ...send(...)` silently drops an event-\
+                          channel delivery failure; handle the hung-up \
+                          receiver (cancel/cleanup) or add `// ao-lint: \
+                          allow(drop_send) -- <reason>`"
+                    .to_string(),
+            });
+        }
+        i = j;
+    }
+}
+
+/// Count of reviewed `allow(drop_send)` markers across the scope, pinned
+/// by the census self-test so drop sites can only change deliberately.
+#[cfg_attr(not(test), allow(dead_code))]
+pub fn drop_send_census(files: &[SourceFile]) -> usize {
+    files
+        .iter()
+        .flat_map(|f| parse_markers(f))
+        .filter(|m| m.cat == "drop_send")
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn file(text: &str) -> SourceFile {
+        SourceFile {
+            path: "rust/src/coordinator/fixture.rs".to_string(),
+            text: text.to_string(),
+        }
+    }
+
+    #[test]
+    fn flags_dropped_send() {
+        let f = file(
+            "fn notify(tx: &Sender<u32>) {
+    let _ = tx.send(7);
+}
+",
+        );
+        let finds = check(&[f]);
+        assert_eq!(finds.len(), 1, "{finds:?}");
+        assert_eq!(finds[0].rule, "r5-events");
+        assert_eq!(finds[0].line, 2);
+    }
+
+    #[test]
+    fn marker_on_previous_line_allows() {
+        let f = file(
+            "fn notify(tx: &Sender<u32>) {
+    // ao-lint: allow(drop_send) -- receiver gone means request canceled
+    let _ = tx.send(7);
+    let _ = tx.send(8); // ao-lint: allow(drop_send) -- same-line marker
+}
+",
+        );
+        assert!(check(&[f]).is_empty());
+    }
+
+    #[test]
+    fn other_dropped_results_pass() {
+        let f = file(
+            "fn tidy(path: &Path, v: &mut Vec<u32>) {
+    let _ = std::fs::remove_file(path);
+    let _ = v.pop();
+    let x = compute();
+    let _y = send_queue_len();
+    drop((x, _y));
+}
+",
+        );
+        assert!(check(&[f]).is_empty());
+    }
+
+    #[test]
+    fn non_coordinator_and_test_code_are_exempt() {
+        let runtime = SourceFile {
+            path: "rust/src/runtime/fixture.rs".to_string(),
+            text: "fn f(tx: &Sender<u32>) { let _ = tx.send(1); }\n"
+                .to_string(),
+        };
+        let tests_only = file(
+            "fn live() {}
+#[cfg(test)]
+mod tests {
+    fn t(tx: &Sender<u32>) {
+        let _ = tx.send(1);
+    }
+}
+",
+        );
+        assert!(check(&[runtime, tests_only]).is_empty());
+    }
+
+    #[test]
+    fn census_counts_drop_send_markers_only() {
+        let f = file(
+            "// ao-lint: allow(drop_send) -- one
+// ao-lint: allow(panic) -- not this one
+// ao-lint: allow(drop_send) -- two
+fn f() {}
+",
+        );
+        assert_eq!(drop_send_census(&[f]), 2);
+    }
+}

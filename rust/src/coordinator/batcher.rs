@@ -11,7 +11,7 @@
 //! admission now" from "nothing admissible" so one oversized prompt never
 //! stalls the requests queued behind it for a decode step.
 
-use super::request::SubmitReq;
+use super::request::{ErrorInfo, SubmitReq};
 use std::collections::VecDeque;
 use std::time::Instant;
 
@@ -44,12 +44,15 @@ pub struct Batcher {
     pub queue: VecDeque<SubmitReq>,
     /// available prefill sequence buckets, ascending
     pub buckets: Vec<usize>,
+    /// admission bound: `push_bounded` rejects past this depth. None =
+    /// unbounded (tests and embedded callers that own their backpressure).
+    pub max_queue: Option<usize>,
 }
 
 impl Batcher {
     pub fn new(mut buckets: Vec<usize>) -> Batcher {
         buckets.sort_unstable();
-        Batcher { queue: VecDeque::new(), buckets }
+        Batcher { queue: VecDeque::new(), buckets, max_queue: None }
     }
 
     pub fn push(&mut self, mut req: SubmitReq) {
@@ -57,6 +60,18 @@ impl Batcher {
         // (page backpressure, preemption) keeps its original stamp
         req.enqueued_at.get_or_insert_with(Instant::now);
         self.queue.push_back(req);
+    }
+
+    /// `push` gated by `max_queue`: a full queue hands the request back
+    /// for a structured `overloaded` rejection instead of growing without
+    /// bound. Requeues (backpressure, preemption) go through
+    /// `requeue_front` and are exempt — those requests were admitted.
+    pub fn push_bounded(&mut self, req: SubmitReq) -> Option<SubmitReq> {
+        if self.max_queue.is_some_and(|cap| self.queue.len() >= cap) {
+            return Some(req);
+        }
+        self.push(req);
+        None
     }
 
     /// Return not-yet-admitted requests to the FRONT of the queue in
@@ -115,8 +130,11 @@ impl Batcher {
             let Some(req) = self.queue.pop_front() else {
                 return PrefillTake::Idle;
             };
+            // ao-lint: allow(drop_send) -- reject of a hung-up caller
             let _ = req.tx.send(super::request::Event::Error(
-                "empty prompt: prefill needs at least one token".into(),
+                ErrorInfo::failed(
+                    "empty prompt: prefill needs at least one token",
+                ),
             ));
             return PrefillTake::HeadRejected;
         }
@@ -125,11 +143,14 @@ impl Batcher {
             let Some(req) = self.queue.pop_front() else {
                 return PrefillTake::Idle;
             };
-            let _ = req.tx.send(super::request::Event::Error(format!(
-                "prompt of {head_len} tokens exceeds the largest prefill \
-                 bucket ({})",
-                self.buckets.last().copied().unwrap_or(0)
-            )));
+            // ao-lint: allow(drop_send) -- reject of a hung-up caller
+            let _ = req.tx.send(super::request::Event::Error(
+                ErrorInfo::failed(format!(
+                    "prompt of {head_len} tokens exceeds the largest \
+                     prefill bucket ({})",
+                    self.buckets.last().copied().unwrap_or(0)
+                )),
+            ));
             return PrefillTake::HeadRejected;
         };
         let mut group = Vec::new();
@@ -173,8 +194,11 @@ impl Batcher {
             let Some(req) = self.queue.pop_front() else {
                 return ChunkTake::Idle;
             };
+            // ao-lint: allow(drop_send) -- reject of a hung-up caller
             let _ = req.tx.send(super::request::Event::Error(
-                "empty prompt: prefill needs at least one token".into(),
+                ErrorInfo::failed(
+                    "empty prompt: prefill needs at least one token",
+                ),
             ));
             return ChunkTake::HeadRejected;
         }
@@ -182,10 +206,13 @@ impl Batcher {
             let Some(req) = self.queue.pop_front() else {
                 return ChunkTake::Idle;
             };
-            let _ = req.tx.send(super::request::Event::Error(format!(
-                "prompt of {head_len} tokens exceeds the context window \
-                 ({max_prompt})",
-            )));
+            // ao-lint: allow(drop_send) -- reject of a hung-up caller
+            let _ = req.tx.send(super::request::Event::Error(
+                ErrorInfo::failed(format!(
+                    "prompt of {head_len} tokens exceeds the context \
+                     window ({max_prompt})",
+                )),
+            ));
             return ChunkTake::HeadRejected;
         }
         match self.queue.pop_front() {
@@ -214,6 +241,7 @@ mod tests {
                 submitted_at: Instant::now(),
                 enqueued_at: None,
                 resume: None,
+                deadline: None,
             },
             rx,
         )
@@ -225,6 +253,26 @@ mod tests {
             PrefillTake::HeadRejected => panic!("unexpected HeadRejected"),
             PrefillTake::Idle => panic!("unexpected Idle"),
         }
+    }
+
+    #[test]
+    fn push_bounded_rejects_at_cap() {
+        let mut b = Batcher::new(vec![32]);
+        b.max_queue = Some(2);
+        let (r1, _k1) = req(4);
+        let (r2, _k2) = req(4);
+        let (r3, _k3) = req(4);
+        assert!(b.push_bounded(r1).is_none());
+        assert!(b.push_bounded(r2).is_none());
+        // at cap: the request comes back untouched for the caller to
+        // answer with a typed `overloaded` rejection
+        let bounced = b.push_bounded(r3).expect("queue is at cap");
+        assert!(bounced.enqueued_at.is_none(), "never enqueued");
+        assert_eq!(b.pending(), 2);
+        // unbounded by default
+        let mut open = Batcher::new(vec![32]);
+        let (r4, _k4) = req(4);
+        assert!(open.push_bounded(r4).is_none());
     }
 
     #[test]
@@ -340,7 +388,7 @@ mod tests {
         assert_eq!(b.pending(), 0);
         match rx.try_recv().unwrap() {
             super::super::request::Event::Error(e) => {
-                assert!(e.contains("exceeds"))
+                assert!(e.message.contains("exceeds"))
             }
             _ => panic!("expected error event"),
         }
@@ -393,7 +441,7 @@ mod tests {
         ));
         match bad_rx.try_recv().unwrap() {
             super::super::request::Event::Error(e) => {
-                assert!(e.contains("empty prompt"), "{e}")
+                assert!(e.message.contains("empty prompt"), "{e}")
             }
             _ => panic!("expected error event"),
         }
@@ -496,7 +544,7 @@ mod tests {
         assert!(matches!(b.take_chunk(128), ChunkTake::HeadRejected));
         match rx1.try_recv().unwrap() {
             super::super::request::Event::Error(e) => {
-                assert!(e.contains("context window"), "{e}")
+                assert!(e.message.contains("context window"), "{e}")
             }
             _ => panic!("expected error event"),
         }

@@ -95,7 +95,8 @@ use super::metrics::MetricsCollector;
 use super::pager::Pager;
 use super::prefixcache::{identity_salt, PrefixIndex};
 use super::request::{
-    Event, FinishInfo, FinishReason, ResumeState, SubmitReq,
+    ErrorInfo, ErrorKind, Event, FinishInfo, FinishReason, ResumeState,
+    SubmitReq,
 };
 use super::scheduler::{
     chunk_len, effective_budget, pick_preemption_victim, suffix_bucket,
@@ -103,6 +104,7 @@ use super::scheduler::{
 };
 use crate::ckpt::Checkpoint;
 use crate::runtime::artifact::{ArtifactSpec, IoSpec};
+use crate::runtime::faults::{FaultInjector, FaultPolicy};
 use crate::runtime::{OwnedBuffer, Runtime};
 use crate::tensor::HostTensor;
 use crate::util::rng::{mix_seed, Rng};
@@ -110,7 +112,7 @@ use crate::xb::PjRtBuffer;
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// How the device-resident KV cache is stored (see the module docs).
 /// Mirrors the exporter's `--kv-cache` vocabulary: artifacts carry a
@@ -214,12 +216,36 @@ pub struct EngineConfig {
     /// (one token under the paged layout; the largest prefill bucket
     /// under static, where prompts are admitted whole).
     pub max_batch_tokens: Option<usize>,
+    /// transient-fault retry budget per runtime execute/transfer call
+    /// (CLI `--fault-retries`, bench env AO_FAULT_RETRIES)
+    pub fault_retries: usize,
+    /// initial backoff before a transient-fault retry, doubling per
+    /// attempt (CLI `--fault-backoff-ms`, bench env AO_FAULT_BACKOFF_MS)
+    pub fault_backoff_ms: u64,
+    /// deterministic fault plan for chaos testing (CLI `--fault-plan`,
+    /// bench env AO_FAULT_PLAN); see `runtime::faults` for the grammar.
+    /// None = no injection (production)
+    pub fault_plan: Option<String>,
+    /// admission queue bound (CLI `--max-queue`, bench env
+    /// AO_MAX_QUEUE): submissions past it are rejected with an
+    /// `overloaded` error instead of growing the queue without bound.
+    /// None = unbounded
+    pub max_queue: Option<usize>,
+    /// default per-request deadline (CLI `--default-deadline-ms`, bench
+    /// env AO_DEFAULT_DEADLINE_MS), applied at submit when the request
+    /// carries none. None = no default deadline
+    pub default_deadline_ms: Option<u64>,
 }
 
 pub enum Command {
     Submit(SubmitReq),
     /// flush metrics: respond with the formatted report
     Report(Sender<String>),
+    /// cancel one request by id, wherever it is (queued or decoding)
+    Cancel(u64),
+    /// graceful drain: stop admitting, finish in-flight work, respond
+    /// with the final report once nothing is queued or active
+    Drain(Sender<String>),
     Shutdown,
 }
 
@@ -244,7 +270,28 @@ impl EngineHandle {
         Ok(rx.recv()?)
     }
 
+    /// Cancel request `id` (fire-and-forget): queued requests are
+    /// answered `canceled`, a decoding slot is released immediately.
+    /// Unknown or already-finished ids are a no-op engine-side.
+    pub fn cancel(&self, id: u64) {
+        // ao-lint: allow(drop_send) -- engine gone = nothing to cancel
+        let _ = self.tx.send(Command::Cancel(id));
+    }
+
+    /// Graceful drain: the engine stops admitting (submissions are
+    /// rejected `overloaded`), finishes everything already queued or
+    /// in-flight, and returns the final report. The engine stays in
+    /// drain mode afterwards — follow with `shutdown()` to exit.
+    pub fn drain(&self) -> Result<String> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Command::Drain(tx))
+            .map_err(|_| anyhow!("engine thread is gone"))?;
+        Ok(rx.recv()?)
+    }
+
     pub fn shutdown(&self) {
+        // ao-lint: allow(drop_send) -- engine gone = already shut down
         let _ = self.tx.send(Command::Shutdown);
     }
 }
@@ -272,6 +319,9 @@ struct ActiveRequest {
     first_token_at: Option<Instant>,
     last_token_at: Option<Instant>,
     token_gaps: Vec<f64>,
+    /// absolute completion deadline (request-supplied or the engine
+    /// default); a decoding slot past it finishes `deadline`
+    deadline: Option<Instant>,
 }
 
 /// Iteration-level scheduler state (present exactly when
@@ -430,6 +480,15 @@ pub struct Engine {
     prefill_order: Vec<usize>,
     /// monotonically increasing admission counter (preemption seniority)
     admit_seq: u64,
+    /// cache buffer (dtype, shape) pairs captured at startup, to rebuild
+    /// zeroed cache buffers after step-failure containment
+    cache_zero_specs: Vec<(crate::tensor::DType, Vec<usize>)>,
+    /// drain mode: submissions are rejected `overloaded`; in-flight and
+    /// already-queued work still finishes
+    draining: bool,
+    /// drain caller waiting for the final report (answered once nothing
+    /// is queued or active)
+    drain_tx: Option<Sender<String>>,
     pub metrics: MetricsCollector,
     _rng: Rng,
     /// non-XLA engine overhead accounting (perf)
@@ -718,12 +777,14 @@ impl Engine {
         // its true (dtype-aware) resident footprint goes into the report,
         // which is where the int8 scheme's ~4x shows up
         let mut cache_bufs = Vec::with_capacity(cache_specs.len());
+        let mut cache_zero_specs = Vec::with_capacity(cache_specs.len());
         let mut cache_resident_bytes = 0u64;
         for spec in &cache_specs {
             let dt = crate::tensor::DType::parse(&spec.dtype)?;
             let zeros = HostTensor::zeros(dt, spec.shape.clone());
             cache_resident_bytes += zeros.byte_size() as u64;
             cache_bufs.push(runtime.upload(&zeros)?);
+            cache_zero_specs.push((dt, spec.shape.clone()));
         }
         let mut metrics = MetricsCollector::new();
         metrics.cache_scheme = cache_tag.to_string();
@@ -810,6 +871,26 @@ impl Engine {
         runtime.untupled_outputs();
 
         let buckets = prefill_names.iter().map(|(s, _)| *s).collect();
+        let mut batcher = Batcher::new(buckets);
+        batcher.max_queue = cfg.max_queue;
+
+        // parse + install the fault plan LAST: startup traffic (weight
+        // uploads, the zero cache, capability probes) is never faulted,
+        // and a malformed plan fails startup instead of the first step
+        let injector = cfg
+            .fault_plan
+            .as_deref()
+            .map(FaultInjector::parse)
+            .transpose()
+            .context("--fault-plan")?;
+        runtime.install_faults(
+            injector,
+            FaultPolicy {
+                retries: cfg.fault_retries,
+                backoff_ms: cfg.fault_backoff_ms,
+            },
+        );
+
         Ok(Engine {
             runtime,
             decode_params,
@@ -824,13 +905,16 @@ impl Engine {
             kv_dims,
             pager,
             prefix,
-            batcher: Batcher::new(buckets),
+            batcher,
             requests: (0..batch).map(|_| None).collect(),
             pending: vec![0; batch],
             sched,
             slot_ctx: (0..batch).map(|_| None).collect(),
             prefill_order: Vec::new(),
             admit_seq: 0,
+            cache_zero_specs,
+            draining: false,
+            drain_tx: None,
             metrics,
             _rng: Rng::new(0xE1_61_4E),
             overhead_s: 0.0,
@@ -849,6 +933,12 @@ impl Engine {
         loop {
             // 1. drain the command channel (block only when fully idle)
             loop {
+                // a pending drain completes exactly when nothing is
+                // queued or active — answer it BEFORE blocking on recv,
+                // or the drain caller and the engine wait on each other
+                if self.slots.is_empty() && self.batcher.pending() == 0 {
+                    self.finish_drain();
+                }
                 if self.slots.is_empty()
                     && self.batcher.pending() == 0
                     && !shutting_down
@@ -879,20 +969,29 @@ impl Engine {
             {
                 break;
             }
-            if self.sched.is_some() {
+            // expired work is cut before a step is spent on it
+            self.sweep_deadlines();
+            let step = if self.sched.is_some() {
                 // iteration-level scheduler: one budgeted step mixing
                 // decode rows with prefill chunks
-                self.sched_step()?;
+                self.sched_step()
             } else {
                 // 2. admission via batched prefill (one cache round-trip
                 //    per burst, not per group or per token)
-                self.admit_pending()?;
-                // 3. one decode step over the batch
-                if !self.slots.is_empty() {
-                    self.decode_step()?;
+                match self.admit_pending() {
+                    // 3. one decode step over the batch
+                    Ok(()) if !self.slots.is_empty() => self.decode_step(),
+                    other => other,
                 }
+            };
+            // a failed step (transient retries exhausted, or a fatal
+            // execution error) is contained to the slots it hit — the
+            // engine keeps serving; only a failed cache rebuild is fatal
+            if let Err(err) = step {
+                self.contain_step_failure(&err)?;
             }
         }
+        self.finish_drain();
         self.sync_transfer_metrics();
         self.metrics.finish();
         Ok(())
@@ -901,12 +1000,22 @@ impl Engine {
     fn handle(&mut self, cmd: Command, shutting_down: &mut bool) -> bool {
         match cmd {
             Command::Submit(req) => {
-                self.batcher.push(req);
+                self.submit(req);
                 true
             }
             Command::Report(tx) => {
                 self.sync_transfer_metrics();
+                // ao-lint: allow(drop_send) -- report caller may be gone
                 let _ = tx.send(self.metrics.report("engine"));
+                true
+            }
+            Command::Cancel(id) => {
+                self.cancel_request(id);
+                true
+            }
+            Command::Drain(tx) => {
+                self.draining = true;
+                self.drain_tx = Some(tx);
                 true
             }
             Command::Shutdown => {
@@ -916,10 +1025,245 @@ impl Engine {
         }
     }
 
+    /// Admission control for one submission: drain mode and the bounded
+    /// queue reject with `overloaded` before any work is spent; a
+    /// request without its own deadline picks up the engine default.
+    fn submit(&mut self, mut req: SubmitReq) {
+        if self.draining {
+            self.metrics.rejected_overload += 1;
+            self.metrics.record_rejected();
+            // ao-lint: allow(drop_send) -- reject of a hung-up caller
+            let _ = req.tx.send(Event::Error(ErrorInfo::new(
+                ErrorKind::Overloaded,
+                "engine is draining: not accepting new requests",
+            )));
+            return;
+        }
+        if req.deadline.is_none() {
+            req.deadline = self
+                .cfg
+                .default_deadline_ms
+                .map(|ms| req.submitted_at + Duration::from_millis(ms));
+        }
+        if let Some(rejected) = self.batcher.push_bounded(req) {
+            self.metrics.rejected_overload += 1;
+            self.metrics.record_rejected();
+            // ao-lint: allow(drop_send) -- reject of a hung-up caller
+            let _ = rejected.tx.send(Event::Error(ErrorInfo::new(
+                ErrorKind::Overloaded,
+                format!(
+                    "queue is full ({} requests pending): try again later",
+                    self.batcher.pending()
+                ),
+            )));
+        }
+    }
+
+    /// Cancel a request wherever it currently lives. Queued: removed
+    /// and answered `canceled` before any prefill is spent on it.
+    /// Active: its slot and pages are released immediately — this is
+    /// what turns a dead client into freed capacity instead of a slot
+    /// decoding to natural finish. Unknown ids are a no-op (the request
+    /// may have finished racing the cancel).
+    fn cancel_request(&mut self, id: u64) {
+        if let Some(qpos) =
+            self.batcher.queue.iter().position(|r| r.id == id)
+        {
+            if let Some(req) = self.batcher.queue.remove(qpos) {
+                self.metrics.n_canceled += 1;
+                // ao-lint: allow(drop_send) -- canceler is often gone
+                let _ = req.tx.send(Event::Error(ErrorInfo::new(
+                    ErrorKind::Canceled,
+                    format!("request {id} canceled while queued"),
+                )));
+            }
+            return;
+        }
+        let Some(idx) = (0..self.batch).find(|&i| {
+            self.slots.get(i).map(|s| s.request_id) == Some(id)
+        }) else {
+            return;
+        };
+        if let Some(pager) = self.pager.as_mut() {
+            pager.release(idx);
+        }
+        self.slots.release(idx);
+        self.slot_ctx[idx] = None;
+        self.prefill_order.retain(|&i| i != idx);
+        self.drain_page_evictions();
+        if let Some(req) = self.requests[idx].take() {
+            self.metrics.n_canceled += 1;
+            // ao-lint: allow(drop_send) -- canceler is often gone
+            let _ = req.tx.send(Event::Error(ErrorInfo::new(
+                ErrorKind::Canceled,
+                format!("request {id} canceled mid-generation"),
+            )));
+        }
+    }
+
+    /// Cut expired work: queued requests past their deadline are
+    /// rejected before a prefill is wasted on them; decoding slots past
+    /// theirs finish with `finish_reason="deadline"` and stream what
+    /// they have. `Prefilling` slots are left to reach `Decoding` first
+    /// — their in-flight chunks unwind naturally and the next sweep
+    /// finishes them.
+    fn sweep_deadlines(&mut self) {
+        let now = Instant::now();
+        if self
+            .batcher
+            .queue
+            .iter()
+            .any(|r| r.deadline.is_some_and(|d| d <= now))
+        {
+            let queue = std::mem::take(&mut self.batcher.queue);
+            for req in queue {
+                match req.deadline {
+                    Some(d) if d <= now => {
+                        self.metrics.rejected_deadline += 1;
+                        self.metrics.record_rejected();
+                        // ao-lint: allow(drop_send) -- caller may be gone
+                        let _ = req.tx.send(Event::Error(ErrorInfo::new(
+                            ErrorKind::Deadline,
+                            format!(
+                                "request {} deadline expired while queued",
+                                req.id
+                            ),
+                        )));
+                    }
+                    _ => self.batcher.queue.push_back(req),
+                }
+            }
+        }
+        for idx in 0..self.batch {
+            let decoding = self
+                .slots
+                .get(idx)
+                .map(|s| s.phase == SlotPhase::Decoding)
+                .unwrap_or(false);
+            let expired = decoding
+                && self.requests[idx]
+                    .as_ref()
+                    .and_then(|r| r.deadline)
+                    .is_some_and(|d| d <= now);
+            if expired {
+                self.finish_slot(idx, FinishReason::Deadline);
+            }
+        }
+    }
+
+    /// Answer a pending drain once nothing is queued or active. The
+    /// engine stays in drain mode afterwards (submissions keep being
+    /// rejected); `Command::Shutdown` ends the loop.
+    fn finish_drain(&mut self) {
+        if self.drain_tx.is_none()
+            || !self.slots.is_empty()
+            || self.batcher.pending() != 0
+        {
+            return;
+        }
+        self.sync_transfer_metrics();
+        let report = self.metrics.report("engine");
+        if let Some(tx) = self.drain_tx.take() {
+            // ao-lint: allow(drop_send) -- drain caller may be gone
+            let _ = tx.send(report);
+        }
+    }
+
+    /// Step-level containment: a serve-loop step failed after the
+    /// runtime's transient-retry budget (or fatally — a real execution
+    /// error whose donated cache inputs are suspect). Every active slot
+    /// is unwound: under the paged scheduler, decoding slots with token
+    /// history re-queue as resumable submissions and re-prefill over
+    /// the rebuilt cache with their streams intact; everything else
+    /// fails with a request-scoped error. The cache is then re-zeroed
+    /// and the loop keeps serving — only a failed cache rebuild (no
+    /// healthy device state left to serve from) remains fatal.
+    fn contain_step_failure(&mut self, err: &anyhow::Error) -> Result<()> {
+        crate::warn!(
+            "serve step failed ({err:#}): containing to affected slots"
+        );
+        // resume is only sound where preemption is: the paged scheduler
+        // restores generation state through the resume path; static
+        // admission would re-sample (and re-stream) delivered tokens
+        let resumable = self.pager.is_some() && self.sched.is_some();
+        let mut resumed: Vec<(u64, SubmitReq)> = Vec::new();
+        for idx in 0..self.batch {
+            if self.slots.get(idx).is_none() {
+                continue;
+            }
+            let decoding = self
+                .slots
+                .get(idx)
+                .map(|s| s.phase == SlotPhase::Decoding)
+                .unwrap_or(false);
+            let seq = self.slot_ctx[idx].as_ref().map(|c| c.admit_seq);
+            let has_emitted = self.slot_ctx[idx]
+                .as_ref()
+                .map(|c| !c.emitted.is_empty())
+                .unwrap_or(false);
+            if resumable
+                && decoding
+                && has_emitted
+                && self.requests[idx].is_some()
+            {
+                match (seq, self.preempt_slot(idx)) {
+                    (Some(seq), Ok(req)) => {
+                        resumed.push((seq, req));
+                        continue;
+                    }
+                    (_, Ok(req)) => {
+                        resumed.push((u64::MAX, req));
+                        continue;
+                    }
+                    (_, Err(e)) => crate::warn!(
+                        "slot {idx}: resume after failure impossible \
+                         ({e:#}); failing the request"
+                    ),
+                }
+            }
+            self.fail_slot(idx, &format!("serving step failed: {err:#}"));
+        }
+        // oldest admissions re-enter first: FCFS survives containment
+        resumed.sort_by_key(|&(seq, _)| seq);
+        self.batcher
+            .requeue_front(resumed.into_iter().map(|(_, r)| r).collect());
+        self.reset_cache()
+    }
+
+    /// Rebuild the device cache as zeros after containment: the failed
+    /// execution may have consumed the donated cache buffers, so the old
+    /// handles are suspect. Shared prefix pages are zeroed along with
+    /// everything else, so they must leave the pager's cached LRU and
+    /// the prefix index too — a later hit would otherwise map garbage
+    /// into a fresh prompt.
+    fn reset_cache(&mut self) -> Result<()> {
+        let mut bufs = Vec::with_capacity(self.cache_zero_specs.len());
+        for (dt, shape) in &self.cache_zero_specs {
+            let zeros = HostTensor::zeros(*dt, shape.clone());
+            bufs.push(self.runtime.upload(&zeros).context(
+                "re-zero the KV cache after a contained step failure",
+            )?);
+        }
+        self.cache = KvCache { bufs };
+        let evicted = match self.pager.as_mut() {
+            Some(pager) => pager.evict_all_cached(),
+            None => Vec::new(),
+        };
+        if let Some(prefix) = self.prefix.as_mut() {
+            prefix.forget_pages(&evicted);
+        }
+        self.drain_page_evictions();
+        Ok(())
+    }
+
     fn sync_transfer_metrics(&mut self) {
         let s = self.runtime.transfer_stats();
         self.metrics.h2d_bytes = s.h2d_bytes;
         self.metrics.d2h_bytes = s.d2h_bytes;
+        let f = self.runtime.fault_stats();
+        self.metrics.faults_injected = f.injected;
+        self.metrics.faults_retried = f.retried;
+        self.metrics.faults_recovered = f.recovered;
         if let Some(p) = &self.pager {
             self.metrics.pages_total = p.n_pages();
             self.metrics.pages_used = p.used_pages();
@@ -1534,10 +1878,11 @@ impl Engine {
                  (request {}): answering with an error",
                 req.id
             );
-            let _ = req.tx.send(Event::Error(format!(
+            // ao-lint: allow(drop_send) -- caller may already be gone
+            let _ = req.tx.send(Event::Error(ErrorInfo::failed(format!(
                 "internal slot-accounting error admitting request {}",
                 req.id
-            )));
+            ))));
             if let Some(pager) = self.pager.as_mut() {
                 pager.release(idx);
             }
@@ -1558,7 +1903,9 @@ impl Engine {
             first_token_at: Some(now),
             last_token_at: Some(now),
             token_gaps: Vec::new(),
+            deadline: req.deadline,
         };
+        // ao-lint: allow(drop_send) -- disconnects are handled by cancel
         let _ = active.tx.send(Event::Token(tok));
         self.requests[idx] = Some(active);
         self.apply_sampled_token(idx, tok)
@@ -1655,6 +2002,7 @@ impl Engine {
                 ttft,
                 &req.token_gaps,
             );
+            // ao-lint: allow(drop_send) -- caller may already be gone
             let _ = req.tx.send(Event::Done(FinishInfo {
                 id: slot.request_id,
                 n_prompt,
@@ -1778,6 +2126,7 @@ impl Engine {
                     req.token_gaps.push((now - last).as_secs_f64());
                 }
                 req.last_token_at = Some(now);
+                // ao-lint: allow(drop_send) -- disconnect -> cancel op
                 let _ = req.tx.send(Event::Token(tok));
             }
             if let Some(ctx) = self.slot_ctx[i].as_mut() {
@@ -2032,6 +2381,7 @@ impl Engine {
             first_token_at: None,
             last_token_at: None,
             token_gaps: Vec::new(),
+            deadline: req.deadline,
         });
         self.prefill_order.push(idx);
         // first chunk starts where the shared prefix ends; the index
@@ -2219,6 +2569,7 @@ impl Engine {
         if let Some(req) = self.requests[idx].as_mut() {
             req.first_token_at = Some(now);
             req.last_token_at = Some(now);
+            // ao-lint: allow(drop_send) -- disconnect -> cancel op
             let _ = req.tx.send(Event::Token(tok));
         }
         if let Some(ctx) = self.slot_ctx[idx].as_mut() {
@@ -2274,6 +2625,7 @@ impl Engine {
                     .unwrap_or(active.submitted_at),
                 token_gaps: active.token_gaps,
             }),
+            deadline: active.deadline,
         })
     }
 
@@ -2513,9 +2865,10 @@ fn fail_request(
     let Some(req) = requests.get_mut(idx).and_then(Option::take) else {
         return false;
     };
-    let _ = req
-        .tx
-        .send(Event::Error(format!("internal serving error: {why}")));
+    // ao-lint: allow(drop_send) -- failed caller may already be gone
+    let _ = req.tx.send(Event::Error(ErrorInfo::failed(format!(
+        "internal serving error: {why}"
+    ))));
     true
 }
 
@@ -3046,14 +3399,16 @@ mod tests {
             first_token_at: None,
             last_token_at: None,
             token_gaps: Vec::new(),
+            deadline: None,
         };
         let mut requests = vec![Some(mk(tx)), Some(mk(tx2)), None];
         assert!(fail_request(&mut requests, 0, "slot vanished mid-step"));
         assert!(requests[0].is_none(), "failed request is unregistered");
         match rx.try_recv().unwrap() {
             Event::Error(e) => {
-                assert!(e.contains("internal serving error"), "{e}");
-                assert!(e.contains("slot vanished"), "{e}");
+                assert_eq!(e.kind, ErrorKind::Failed);
+                assert!(e.message.contains("internal serving error"), "{e}");
+                assert!(e.message.contains("slot vanished"), "{e}");
             }
             ev => panic!("expected an error event, got {ev:?}"),
         }

@@ -96,6 +96,21 @@ pub struct MetricsCollector {
     /// to spare — the stall the scheduler exists to eliminate; the parity
     /// gate asserts this stays 0
     pub sched_stall_steps: usize,
+    /// fault accounting (synced from the runtime's injector/retry layer):
+    /// faults injected by a `--fault-plan`, transient failures retried,
+    /// and operations that eventually succeeded after >= 1 retry
+    pub faults_injected: u64,
+    pub faults_retried: u64,
+    pub faults_recovered: u64,
+    /// admission-control rejections split by cause: bounded-queue /
+    /// drain-mode overload vs. deadlines expiring in the queue. Both are
+    /// also counted in `n_rejected` (the total the report has always
+    /// carried)
+    pub rejected_overload: usize,
+    pub rejected_deadline: usize,
+    /// requests canceled by the client (explicit op or disconnect),
+    /// whether queued or mid-generation
+    pub n_canceled: usize,
 }
 
 impl MetricsCollector {
@@ -265,6 +280,43 @@ impl MetricsCollector {
         )
     }
 
+    /// The report's `faults[...]` field — empty on a fault-free run, so
+    /// routine reports stay unchanged. The ONE formatter of the fault
+    /// accounting, shared with the bench output.
+    pub fn faults_field(&self) -> String {
+        if self.faults_injected == 0
+            && self.faults_retried == 0
+            && self.faults_recovered == 0
+        {
+            return String::new();
+        }
+        format!(
+            "faults[injected={} retried={} recovered={}]",
+            self.faults_injected, self.faults_retried, self.faults_recovered
+        )
+    }
+
+    /// The report's `rejected[...]` breakdown — empty unless admission
+    /// control actually rejected something, so the long-standing
+    /// `rejected=N` total stays the headline.
+    pub fn rejected_detail_field(&self) -> String {
+        if self.rejected_overload == 0 && self.rejected_deadline == 0 {
+            return String::new();
+        }
+        format!(
+            "rejected[overload={} deadline={}]",
+            self.rejected_overload, self.rejected_deadline
+        )
+    }
+
+    /// The report's `canceled=N` field — empty when nothing was canceled.
+    pub fn canceled_field(&self) -> String {
+        if self.n_canceled == 0 {
+            return String::new();
+        }
+        format!("canceled={}", self.n_canceled)
+    }
+
     pub fn report(&self, label: &str) -> String {
         // empty summaries are NaN; a zero-request report must stay readable
         let ms = |x: f64| if x.is_finite() { x * 1e3 } else { 0.0 };
@@ -291,6 +343,9 @@ impl MetricsCollector {
         let pages = field(self.pages_field());
         let prefix = field(self.prefix_field());
         let sched = field(self.sched_field());
+        let faults = field(self.faults_field());
+        let rejected = field(self.rejected_detail_field());
+        let canceled = field(self.canceled_field());
         let latency = self.latency_field();
         format!(
             "[{label}] requests={} rejected={} in_tokens={} out_tokens={} \
@@ -298,7 +353,8 @@ impl MetricsCollector {
              tput={:.1} tok/s  TPOT={:.2}ms  ITL={:.2}ms  TTFT={:.1}ms  \
              {latency}  occupancy={:.0}%  (decode_steps={} prefills={})  \
              cache[{cache_scheme} {kv_layout} \
-             resident={}]{pages}{prefix}{sched}  \
+             resident={}]{pages}{prefix}{sched}{faults}{rejected}\
+             {canceled}  \
              xfer h2d={} d2h={} decode[h2d={} d2h={}] \
              admit[h2d={} d2h={} host_splices={}]",
             self.n_requests,
@@ -535,6 +591,41 @@ mod tests {
         // empty runs render zeros, never NaN
         let empty = MetricsCollector::new();
         assert!(empty.latency_field().contains("p95=0.0"));
+    }
+
+    #[test]
+    fn fault_accounting_in_report() {
+        let mut m = MetricsCollector::new();
+        m.faults_injected = 5;
+        m.faults_retried = 4;
+        m.faults_recovered = 3;
+        let r = m.report("x");
+        assert!(
+            r.contains("faults[injected=5 retried=4 recovered=3]"),
+            "{r}"
+        );
+        // fault-free runs keep the long-standing report shape
+        let clean = MetricsCollector::new();
+        assert!(!clean.report("y").contains("faults["));
+    }
+
+    #[test]
+    fn rejection_and_cancel_accounting_in_report() {
+        let mut m = MetricsCollector::new();
+        m.record_rejected();
+        m.record_rejected();
+        m.rejected_overload = 1;
+        m.rejected_deadline = 1;
+        m.n_canceled = 3;
+        let r = m.report("x");
+        assert!(r.contains("rejected=2"), "{r}");
+        assert!(r.contains("rejected[overload=1 deadline=1]"), "{r}");
+        assert!(r.contains("canceled=3"), "{r}");
+        // a run with no admission-control activity renders neither field
+        let clean = MetricsCollector::new();
+        let rc = clean.report("y");
+        assert!(!rc.contains("rejected["), "{rc}");
+        assert!(!rc.contains("canceled="), "{rc}");
     }
 
     #[test]

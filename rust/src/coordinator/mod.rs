@@ -34,4 +34,4 @@ pub mod scheduler;
 pub mod server;
 
 pub use engine::{CacheScheme, Engine, EngineConfig, EngineHandle, KvLayout};
-pub use request::{Event, FinishInfo, FinishReason, SubmitReq};
+pub use request::{ErrorInfo, ErrorKind, Event, FinishInfo, FinishReason, SubmitReq};

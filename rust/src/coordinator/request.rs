@@ -22,6 +22,10 @@ pub struct SubmitReq {
     /// recompute: the scheduler restores the generation state instead of
     /// re-sampling (and re-streaming) already-delivered tokens
     pub resume: Option<ResumeState>,
+    /// absolute completion deadline; queued requests past it are rejected
+    /// before prefill, decoding slots past it finish with
+    /// `finish_reason="deadline"`. None = the engine's default (if any).
+    pub deadline: Option<Instant>,
 }
 
 /// Generation state carried by a preempted request so its recompute
@@ -49,9 +53,76 @@ pub struct ResumeState {
 pub enum Event {
     /// One generated token.
     Token(u32),
-    /// Generation finished (EOS, length cap, or context cap).
+    /// Generation finished (EOS, length cap, context cap, or deadline).
     Done(FinishInfo),
-    Error(String),
+    /// Terminal failure, typed so callers (and the coming multi-engine
+    /// router) can react structurally: retry `Overloaded`, surface
+    /// `Failed`, drop `Canceled`.
+    Error(ErrorInfo),
+}
+
+/// Structural classification of a terminal request error. Serialized on
+/// the wire as the `kind` field of `{"event":"error"}` lines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// Rejected by admission control (bounded queue full, or draining).
+    /// Safe to retry against another engine or after backoff.
+    Overloaded,
+    /// The request's deadline expired while it was still queued.
+    Deadline,
+    /// Canceled by the client (explicit `cancel` op or disconnect).
+    Canceled,
+    /// An internal serving failure (exhausted retries, bad request,
+    /// slot-accounting error). Not retryable as-is.
+    Failed,
+}
+
+impl ErrorKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorKind::Overloaded => "overloaded",
+            ErrorKind::Deadline => "deadline",
+            ErrorKind::Canceled => "canceled",
+            ErrorKind::Failed => "failed",
+        }
+    }
+
+    /// Parse a wire `kind` field; unknown strings map to `Failed` so an
+    /// older client still terminates the request.
+    pub fn parse(s: &str) -> ErrorKind {
+        match s {
+            "overloaded" => ErrorKind::Overloaded,
+            "deadline" => ErrorKind::Deadline,
+            "canceled" => ErrorKind::Canceled,
+            _ => ErrorKind::Failed,
+        }
+    }
+}
+
+/// A typed terminal error: a kind the caller can branch on plus a
+/// human-readable message. Displays as the message, so existing
+/// format-and-log call sites read unchanged.
+#[derive(Debug, Clone)]
+pub struct ErrorInfo {
+    pub kind: ErrorKind,
+    pub message: String,
+}
+
+impl ErrorInfo {
+    pub fn new(kind: ErrorKind, message: impl Into<String>) -> ErrorInfo {
+        ErrorInfo { kind, message: message.into() }
+    }
+
+    /// Shorthand for the default `Failed` classification.
+    pub fn failed(message: impl Into<String>) -> ErrorInfo {
+        ErrorInfo::new(ErrorKind::Failed, message)
+    }
+}
+
+impl std::fmt::Display for ErrorInfo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.message)
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -71,6 +142,9 @@ pub enum FinishReason {
     Eos,
     Length,
     ContextFull,
+    /// The request's deadline expired mid-decode; the stream ends with
+    /// whatever was generated so far.
+    Deadline,
 }
 
 impl FinishReason {
@@ -79,6 +153,7 @@ impl FinishReason {
             FinishReason::Eos => "eos",
             FinishReason::Length => "length",
             FinishReason::ContextFull => "context_full",
+            FinishReason::Deadline => "deadline",
         }
     }
 }

@@ -3,11 +3,21 @@
 //!
 //! Protocol: one JSON object per line.
 //!   request:  {"id": 1, "prompt": "...", "max_new_tokens": 32,
-//!              "temperature": 0.0, "seed": 7}
+//!              "temperature": 0.0, "seed": 7, "deadline_ms": 500}
+//!   ops:      {"op": "cancel", "id": 1}        (cancel a live request)
+//!             {"op": "shutdown"}               (drain: finish in-flight
+//!                                              work, reject new, report)
 //!   response: {"id": 1, "token": "<text>"}            (streamed)
 //!             {"id": 1, "done": true, "n_generated": 32,
 //!              "ttft_ms": ..., "tpot_ms": ..., "reason": "length"}
-//!             {"id": 1, "error": "..."}
+//!             {"id": 1, "error": "...", "kind": "overloaded"}
+//!
+//! Error lines carry a structural `kind` — "overloaded" / "deadline" /
+//! "canceled" / "failed" — so clients react without parsing messages.
+//! `"deadline_ms"` is a relative completion deadline; expired-in-queue
+//! requests error with kind "deadline", expired mid-decode finish with
+//! reason "deadline". A client that disconnects mid-stream has its
+//! request canceled engine-side, releasing the slot and its cache pages.
 //!
 //! `"prompt"` is required (a missing prompt is answered with an error,
 //! never treated as ""); `"seed"` is optional and defaults to the request
@@ -18,7 +28,7 @@
 //! pinning "id" too.
 
 use super::engine::EngineHandle;
-use super::request::{Event, SubmitReq};
+use super::request::{ErrorKind, Event, SubmitReq};
 use crate::tokenizer::Tokenizer;
 use crate::util::json::{self, Value};
 use anyhow::{Context, Result};
@@ -27,7 +37,7 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 
@@ -82,17 +92,83 @@ fn handle_conn(
                 writeln!(
                     writer,
                     "{}",
-                    json::obj(vec![("error", json::s(&format!("bad json: {e}")))])
-                        .to_string()
+                    json::obj(vec![
+                        ("error", json::s(&format!("bad json: {e}"))),
+                        ("kind", json::s(ErrorKind::Failed.as_str())),
+                    ])
+                    .to_string()
                 )?;
                 continue;
             }
         };
-        let id = req
-            .get("id")
-            .and_then(|v| v.as_i64())
-            .map(|v| v as u64)
+        let explicit_id =
+            req.get("id").and_then(|v| v.as_i64()).map(|v| v as u64);
+        let id = explicit_id
             .unwrap_or_else(|| NEXT_ID.fetch_add(1, Ordering::Relaxed));
+        // lifecycle/admin ops come before prompt validation: a cancel or
+        // shutdown line carries no prompt
+        match req.get("op").and_then(|v| v.as_str()) {
+            Some("cancel") => {
+                let Some(id) = explicit_id else {
+                    writeln!(
+                        writer,
+                        "{}",
+                        json::obj(vec![
+                            ("error", json::s("cancel needs an \"id\"")),
+                            ("kind", json::s(ErrorKind::Failed.as_str())),
+                        ])
+                        .to_string()
+                    )?;
+                    continue;
+                };
+                engine.cancel(id);
+                // the cancel outcome streams on the REQUEST's own
+                // connection (a canceled-kind error event); this line
+                // only acknowledges delivery
+                writeln!(
+                    writer,
+                    "{}",
+                    json::obj(vec![
+                        ("id", json::num(id as f64)),
+                        ("canceling", Value::Bool(true)),
+                    ])
+                    .to_string()
+                )?;
+                continue;
+            }
+            Some("shutdown") => {
+                // graceful drain: blocks until in-flight work finishes
+                // (new submissions are rejected `overloaded` meanwhile),
+                // then answers with the engine's final report
+                let report = engine.drain()?;
+                writeln!(
+                    writer,
+                    "{}",
+                    json::obj(vec![
+                        ("drained", Value::Bool(true)),
+                        ("report", json::s(&report)),
+                    ])
+                    .to_string()
+                )?;
+                continue;
+            }
+            Some(other) => {
+                writeln!(
+                    writer,
+                    "{}",
+                    json::obj(vec![
+                        (
+                            "error",
+                            json::s(&format!("unknown op \"{other}\"")),
+                        ),
+                        ("kind", json::s(ErrorKind::Failed.as_str())),
+                    ])
+                    .to_string()
+                )?;
+                continue;
+            }
+            None => {}
+        }
         let Some(prompt) = req.get("prompt").and_then(|v| v.as_str()) else {
             // a missing prompt used to silently default to "" and reach
             // the engine as a zero-token prefill — answer it here instead
@@ -102,6 +178,7 @@ fn handle_conn(
                 json::obj(vec![
                     ("id", json::num(id as f64)),
                     ("error", json::s("missing \"prompt\" field")),
+                    ("kind", json::s(ErrorKind::Failed.as_str())),
                 ])
                 .to_string()
             )?;
@@ -120,6 +197,10 @@ fn handle_conn(
             .and_then(|v| v.as_i64())
             .map(|v| v as u64)
             .unwrap_or(id);
+        let deadline = req
+            .get("deadline_ms")
+            .and_then(|v| v.as_f64())
+            .map(|ms| Instant::now() + Duration::from_millis(ms as u64));
 
         let (tx, rx) = channel();
         engine.submit(SubmitReq {
@@ -132,52 +213,64 @@ fn handle_conn(
             submitted_at: Instant::now(),
             enqueued_at: None,
             resume: None,
+            deadline,
         })?;
-        // stream events back
-        for ev in rx {
-            match ev {
+        // stream events back; a write failure means the client hung up
+        let mut write_err: Option<std::io::Error> = None;
+        for ev in rx.iter() {
+            let (line, terminal) = match ev {
                 Event::Token(t) => {
                     let text = tok.decode(&[t]);
-                    writeln!(
-                        writer,
-                        "{}",
+                    (
                         json::obj(vec![
                             ("id", json::num(id as f64)),
                             ("token", json::s(&text)),
                             ("token_id", json::num(t as f64)),
-                        ])
-                        .to_string()
-                    )?;
+                        ]),
+                        false,
+                    )
                 }
-                Event::Done(info) => {
-                    writeln!(
-                        writer,
-                        "{}",
-                        json::obj(vec![
-                            ("id", json::num(id as f64)),
-                            ("done", Value::Bool(true)),
-                            ("n_generated", json::num(info.n_generated as f64)),
-                            ("ttft_ms", json::num(info.ttft_s * 1e3)),
-                            ("tpot_ms", json::num(info.tpot_s * 1e3)),
-                            ("reason", json::s(info.reason.as_str())),
-                        ])
-                        .to_string()
-                    )?;
-                    break;
-                }
-                Event::Error(e) => {
-                    writeln!(
-                        writer,
-                        "{}",
-                        json::obj(vec![
-                            ("id", json::num(id as f64)),
-                            ("error", json::s(&e)),
-                        ])
-                        .to_string()
-                    )?;
-                    break;
-                }
+                Event::Done(info) => (
+                    json::obj(vec![
+                        ("id", json::num(id as f64)),
+                        ("done", Value::Bool(true)),
+                        ("n_generated", json::num(info.n_generated as f64)),
+                        ("ttft_ms", json::num(info.ttft_s * 1e3)),
+                        ("tpot_ms", json::num(info.tpot_s * 1e3)),
+                        ("reason", json::s(info.reason.as_str())),
+                    ]),
+                    true,
+                ),
+                Event::Error(e) => (
+                    json::obj(vec![
+                        ("id", json::num(id as f64)),
+                        ("error", json::s(&e.message)),
+                        ("kind", json::s(e.kind.as_str())),
+                    ]),
+                    true,
+                ),
+            };
+            if let Err(e) = writeln!(writer, "{}", line.to_string()) {
+                write_err = Some(e);
+                break;
             }
+            if terminal {
+                break;
+            }
+        }
+        if let Some(e) = write_err {
+            // the client abandoned the stream mid-generation: cancel
+            // engine-side so the slot and its cache pages are reclaimed
+            // now instead of decoding to the token cap for nobody, then
+            // drain the event channel so the request's terminal event is
+            // consumed before the connection is torn down
+            crate::info!(
+                "client {peer} hung up mid-stream ({e}): canceling \
+                 request {id}"
+            );
+            engine.cancel(id);
+            for _ in rx.iter() {}
+            return Ok(());
         }
     }
     Ok(())
@@ -187,6 +280,30 @@ fn handle_conn(
 pub struct Client {
     stream: TcpStream,
 }
+
+/// A typed server-side failure, surfaced by `Client::generate` as the
+/// source of its `anyhow::Error` so callers branch structurally:
+///
+/// ```ignore
+/// match err.downcast_ref::<ServerError>().map(|e| e.kind) {
+///     Some(ErrorKind::Overloaded) => retry_with_backoff(),
+///     Some(ErrorKind::Deadline) => give_up_quietly(),
+///     _ => surface(err),
+/// }
+/// ```
+#[derive(Debug, Clone)]
+pub struct ServerError {
+    pub kind: ErrorKind,
+    pub message: String,
+}
+
+impl std::fmt::Display for ServerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "server error ({}): {}", self.kind.as_str(), self.message)
+    }
+}
+
+impl std::error::Error for ServerError {}
 
 #[derive(Debug, Default, Clone)]
 pub struct Generation {
@@ -223,7 +340,16 @@ impl Client {
             let v = Value::parse(&line?)
                 .map_err(|e| anyhow::anyhow!("bad server json: {e}"))?;
             if let Some(err) = v.get("error").and_then(|e| e.as_str()) {
-                anyhow::bail!("server error: {err}");
+                // absent kind (older server) classifies as Failed
+                let kind = v
+                    .get("kind")
+                    .and_then(|k| k.as_str())
+                    .map(ErrorKind::parse)
+                    .unwrap_or(ErrorKind::Failed);
+                return Err(anyhow::Error::new(ServerError {
+                    kind,
+                    message: err.to_string(),
+                }));
             }
             if v.get("done").and_then(|d| d.as_bool()).unwrap_or(false) {
                 out.n_generated =

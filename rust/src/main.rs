@@ -14,6 +14,14 @@
 //!                                     # decode rows + prefill chunks
 //!                 [--host-admission]  # force the host splice fallback
 //!                 [--eos-token ID]    # stop decoding at this token id
+//!                 [--fault-retries 3] # transient-failure retry budget
+//!                 [--fault-backoff-ms 10] # base retry backoff (doubles)
+//!                 [--fault-plan SPEC] # deterministic fault injection,
+//!                                     # e.g. exec:decode:every=7:n=3
+//!                 [--max-queue N]     # bounded admission queue; full ->
+//!                                     # reject with kind "overloaded"
+//!                 [--default-deadline-ms MS] # deadline for requests
+//!                                     # that don't carry their own
 //!   ao bench-client --addr 127.0.0.1:7433 --n 16
 //!   ao perfmodel  [--kernels]                   # H100/Fig3 + L1 estimates
 
@@ -249,6 +257,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
                         )
                     },
                 )
+            })
+            .transpose()?,
+        // fault containment: transient execution/transfer failures are
+        // retried with exponential backoff before the step is failed
+        fault_retries: args.usize_or("fault-retries", 3),
+        fault_backoff_ms: args.usize_or("fault-backoff-ms", 10) as u64,
+        // --fault-plan <spec> arms the deterministic injector (chaos
+        // testing); see docs/robustness.md for the grammar
+        fault_plan: args.get("fault-plan").map(|s| s.to_string()),
+        // --max-queue <n> bounds the admission queue; a full queue
+        // rejects with a typed `overloaded` error instead of queueing
+        // without limit
+        max_queue: args
+            .get("max-queue")
+            .map(|v| {
+                v.parse::<usize>().ok().filter(|&n| n > 0).with_context(
+                    || {
+                        format!(
+                            "--max-queue '{v}' is not a positive integer \
+                             queue bound"
+                        )
+                    },
+                )
+            })
+            .transpose()?,
+        // --default-deadline-ms <ms> stamps a completion deadline on
+        // requests that don't carry their own "deadline_ms"
+        default_deadline_ms: args
+            .get("default-deadline-ms")
+            .map(|v| {
+                v.parse::<u64>().with_context(|| {
+                    format!(
+                        "--default-deadline-ms '{v}' is not a duration in \
+                         milliseconds"
+                    )
+                })
             })
             .transpose()?,
     };

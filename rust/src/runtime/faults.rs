@@ -1,0 +1,412 @@
+//! Deterministic fault injection for chaos testing the serving loop.
+//!
+//! A `FaultInjector` is parsed from a fault plan (the `AO_FAULT_PLAN`
+//! env binding / `--fault-plan` serve flag) and installed into the
+//! `Runtime`, which consults it immediately BEFORE every execute
+//! (`run_buffers`/`run_buffers_device`) and transfer (`upload`/
+//! `fetch_*`) call. Firing before the real call is what makes retry
+//! sound: an injected execution fault never consumed the donated cache
+//! buffers, so re-running with the same inputs reproduces the fault-free
+//! step bit-for-bit.
+//!
+//! Plan grammar (comma-separated rules):
+//!
+//! ```text
+//! plan    := rule ("," rule)*
+//! rule    := site ":" tag (":" trigger)+
+//! site    := "exec" | "transfer"
+//! trigger := "every=K"   fire on every K-th matching call
+//!          | "at=N"      fire on the N-th matching call (1-based)
+//!          | "n=M"       stop after M fires (default: unlimited)
+//! ```
+//!
+//! e.g. `exec:decode:every=7:n=3,transfer:h2d:at=12`. An `exec` rule's
+//! tag matches by substring against the artifact name ("decode" matches
+//! every decode artifact; `*` matches everything); `transfer` tags are
+//! the fixed direction labels `h2d` and `d2h`. Each rule keeps its own
+//! call counter, so a plan is a pure function of the call sequence — no
+//! clocks, no RNG — and a chaos test replays identically every run.
+//!
+//! Error taxonomy (`classify`): injected faults are always transient —
+//! the guarded call never ran. Real transfer failures are transient too
+//! (a failed upload/fetch consumes no device state). Real execution
+//! failures are fatal: the artifact may have consumed its donated cache
+//! inputs, so the only safe recovery is the engine's slot-level
+//! containment (fail or re-prefill the affected slots over a rebuilt
+//! cache), never a blind retry. See `docs/robustness.md`.
+
+use anyhow::{bail, Result};
+
+/// Marker embedded in every injected error message; `classify` keys on
+/// it to tell injected faults from real runtime failures.
+pub const FAULT_MARKER: &str = "ao-injected-fault";
+
+/// Which runtime boundary a guarded call crosses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// An XLA execution (`run_buffers` / `run_buffers_device`).
+    Exec,
+    /// A host<->device transfer (`upload` / `fetch_*`).
+    Transfer,
+}
+
+impl FaultSite {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FaultSite::Exec => "exec",
+            FaultSite::Transfer => "transfer",
+        }
+    }
+
+    fn parse(s: &str) -> Result<FaultSite> {
+        match s {
+            "exec" => Ok(FaultSite::Exec),
+            "transfer" => Ok(FaultSite::Transfer),
+            other => bail!(
+                "fault plan: unknown site '{other}' (expected 'exec' or \
+                 'transfer')"
+            ),
+        }
+    }
+}
+
+/// Whether an error is worth retrying with the same inputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultClass {
+    /// No device state was consumed: retry with the same inputs.
+    Transient,
+    /// The call may have consumed donated buffers (a real execution
+    /// failure): retrying is unsound, contain at the slot level.
+    Fatal,
+}
+
+/// Classify an error raised by a guarded runtime call at `site`.
+pub fn classify(site: FaultSite, err: &anyhow::Error) -> FaultClass {
+    if format!("{err:#}").contains(FAULT_MARKER) {
+        // injected BEFORE the real call: nothing ran, retry is sound
+        return FaultClass::Transient;
+    }
+    match site {
+        // a failed upload/fetch consumes no device state
+        FaultSite::Transfer => FaultClass::Transient,
+        // the executable may have consumed its donated inputs
+        FaultSite::Exec => FaultClass::Fatal,
+    }
+}
+
+/// Retry policy for transient faults (`--fault-retries` /
+/// `--fault-backoff-ms`): up to `retries` re-attempts with exponential
+/// backoff starting at `backoff_ms` (doubling per attempt).
+#[derive(Debug, Clone, Copy)]
+pub struct FaultPolicy {
+    pub retries: usize,
+    pub backoff_ms: u64,
+}
+
+impl Default for FaultPolicy {
+    fn default() -> FaultPolicy {
+        FaultPolicy { retries: 3, backoff_ms: 10 }
+    }
+}
+
+impl FaultPolicy {
+    /// Backoff before retry attempt `attempt` (1-based), in ms:
+    /// `backoff_ms * 2^(attempt-1)`, saturating.
+    pub fn backoff_for(&self, attempt: usize) -> u64 {
+        let shift = attempt.saturating_sub(1).min(16) as u32;
+        self.backoff_ms.saturating_mul(1u64 << shift)
+    }
+}
+
+/// Cumulative fault accounting, surfaced in the serving report as
+/// `faults[injected retried recovered]`.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct FaultStats {
+    /// faults the injector fired
+    pub injected: u64,
+    /// retry attempts after a transient failure
+    pub retried: u64,
+    /// guarded calls that succeeded after at least one retry
+    pub recovered: u64,
+}
+
+#[derive(Debug, Clone)]
+struct FaultRule {
+    site: FaultSite,
+    /// substring match against the call tag; "*" matches everything
+    tag: String,
+    /// fire on every K-th matching call
+    every: Option<u64>,
+    /// fire on these exact matching-call ordinals (1-based)
+    at: Vec<u64>,
+    /// stop after this many fires (None = unlimited)
+    limit: Option<u64>,
+    /// matching calls seen so far
+    count: u64,
+    /// fires so far
+    fired: u64,
+}
+
+impl FaultRule {
+    fn parse(rule: &str) -> Result<FaultRule> {
+        let mut parts = rule.split(':');
+        let site = match parts.next() {
+            Some(s) if !s.is_empty() => FaultSite::parse(s)?,
+            _ => bail!("fault plan: empty rule in '{rule}'"),
+        };
+        let tag = match parts.next() {
+            Some(t) if !t.is_empty() => t.to_string(),
+            _ => bail!("fault plan: rule '{rule}' is missing a tag"),
+        };
+        let mut out = FaultRule {
+            site,
+            tag,
+            every: None,
+            at: Vec::new(),
+            limit: None,
+            count: 0,
+            fired: 0,
+        };
+        let mut has_trigger = false;
+        for trig in parts {
+            let (key, val) = match trig.split_once('=') {
+                Some(kv) => kv,
+                None => bail!(
+                    "fault plan: trigger '{trig}' in rule '{rule}' is not \
+                     key=value"
+                ),
+            };
+            let n: u64 = match val.parse() {
+                Ok(n) => n,
+                Err(_) => bail!(
+                    "fault plan: trigger '{trig}' in rule '{rule}' needs a \
+                     number"
+                ),
+            };
+            match key {
+                "every" => {
+                    if n == 0 {
+                        bail!("fault plan: every=0 in rule '{rule}'");
+                    }
+                    out.every = Some(n);
+                    has_trigger = true;
+                }
+                "at" => {
+                    if n == 0 {
+                        bail!(
+                            "fault plan: at=0 in rule '{rule}' (ordinals \
+                             are 1-based)"
+                        );
+                    }
+                    out.at.push(n);
+                    has_trigger = true;
+                }
+                "n" => out.limit = Some(n),
+                other => bail!(
+                    "fault plan: unknown trigger '{other}' in rule \
+                     '{rule}' (expected every=, at=, n=)"
+                ),
+            }
+        }
+        if !has_trigger {
+            bail!(
+                "fault plan: rule '{rule}' has no trigger (add every=K \
+                 or at=N)"
+            );
+        }
+        Ok(out)
+    }
+
+    fn matches(&self, site: FaultSite, tag: &str) -> bool {
+        self.site == site && (self.tag == "*" || tag.contains(&self.tag))
+    }
+
+    /// Count one matching call; true when the rule fires on it.
+    fn tick(&mut self) -> bool {
+        self.count += 1;
+        if self.limit.is_some_and(|m| self.fired >= m) {
+            return false;
+        }
+        let hit = self.every.is_some_and(|k| self.count % k == 0)
+            || self.at.contains(&self.count);
+        if hit {
+            self.fired += 1;
+        }
+        hit
+    }
+}
+
+/// A parsed fault plan with per-rule call counters.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    rules: Vec<FaultRule>,
+    injected: u64,
+}
+
+impl FaultInjector {
+    /// Parse a fault plan; errors name the offending rule.
+    pub fn parse(plan: &str) -> Result<FaultInjector> {
+        let mut rules = Vec::new();
+        for rule in plan.split(',') {
+            let rule = rule.trim();
+            if rule.is_empty() {
+                continue;
+            }
+            rules.push(FaultRule::parse(rule)?);
+        }
+        if rules.is_empty() {
+            bail!("fault plan '{plan}' contains no rules");
+        }
+        Ok(FaultInjector { rules, injected: 0 })
+    }
+
+    /// Register a guarded call at (`site`, `tag`); Some(message) when a
+    /// fault fires on it. Every matching rule counts the call, so rule
+    /// counters are independent of one another.
+    pub fn next_fault(
+        &mut self,
+        site: FaultSite,
+        tag: &str,
+    ) -> Option<String> {
+        let mut fired: Option<String> = None;
+        for rule in &mut self.rules {
+            if !rule.matches(site, tag) {
+                continue;
+            }
+            if rule.tick() && fired.is_none() {
+                self.injected += 1;
+                fired = Some(format!(
+                    "{FAULT_MARKER}: {}:{tag} call {} (rule {}:{})",
+                    site.as_str(),
+                    rule.count,
+                    rule.site.as_str(),
+                    rule.tag
+                ));
+            }
+        }
+        fired
+    }
+
+    /// Total faults injected so far.
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::anyhow;
+
+    #[test]
+    fn parses_the_issue_example_plan() {
+        let mut inj =
+            FaultInjector::parse("exec:decode:every=7:n=3,transfer:h2d:at=12")
+                .unwrap();
+        // decode execs: calls 7, 14, 21 fire; 28 is past n=3
+        let mut fired = Vec::new();
+        for call in 1..=30u64 {
+            if inj.next_fault(FaultSite::Exec, "decode_f32").is_some() {
+                fired.push(call);
+            }
+        }
+        assert_eq!(fired, vec![7, 14, 21]);
+        // h2d transfers: exactly call 12 fires
+        let mut fired = Vec::new();
+        for call in 1..=20u64 {
+            if inj.next_fault(FaultSite::Transfer, "h2d").is_some() {
+                fired.push(call);
+            }
+        }
+        assert_eq!(fired, vec![12]);
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let plan = "exec:*:every=3:n=5,transfer:d2h:at=2:at=9";
+        let calls: Vec<(FaultSite, &str)> = (0..40)
+            .map(|i| {
+                if i % 2 == 0 {
+                    (FaultSite::Exec, "admit_suffix")
+                } else {
+                    (FaultSite::Transfer, "d2h")
+                }
+            })
+            .collect();
+        let run = || {
+            let mut inj = FaultInjector::parse(plan).unwrap();
+            calls
+                .iter()
+                .map(|(s, t)| inj.next_fault(*s, t).is_some())
+                .collect::<Vec<bool>>()
+        };
+        assert_eq!(run(), run(), "same plan + same calls = same faults");
+    }
+
+    #[test]
+    fn counters_are_per_rule_and_tag_matches_substring() {
+        let mut inj =
+            FaultInjector::parse("exec:decode:at=2,exec:admit:at=1").unwrap();
+        // decode calls do not advance the admit rule and vice versa
+        assert!(inj.next_fault(FaultSite::Exec, "tiny_decode_f32").is_none());
+        assert!(inj.next_fault(FaultSite::Exec, "tiny_admit_s8").is_some());
+        assert!(inj.next_fault(FaultSite::Exec, "tiny_decode_f32").is_some());
+        assert_eq!(inj.injected(), 2);
+        // transfers never match exec rules
+        assert!(inj.next_fault(FaultSite::Transfer, "decode").is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_plans() {
+        for bad in [
+            "",
+            "exec",
+            "exec:decode",
+            "exec:decode:every=0",
+            "exec:decode:at=0",
+            "exec:decode:every=x",
+            "exec:decode:soon=3",
+            "decode:exec:at=1",
+            "exec::at=1",
+        ] {
+            assert!(FaultInjector::parse(bad).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn injected_faults_classify_transient_real_exec_fatal() {
+        let mut inj = FaultInjector::parse("exec:decode:at=1").unwrap();
+        let msg = inj.next_fault(FaultSite::Exec, "decode").unwrap();
+        let injected = anyhow!(msg);
+        assert_eq!(classify(FaultSite::Exec, &injected), FaultClass::Transient);
+        let real = anyhow!("execute decode_f32: INTERNAL: device error");
+        assert_eq!(classify(FaultSite::Exec, &real), FaultClass::Fatal);
+        let fetch = anyhow!("fetch buffer: transport closed");
+        assert_eq!(
+            classify(FaultSite::Transfer, &fetch),
+            FaultClass::Transient
+        );
+    }
+
+    #[test]
+    fn backoff_is_exponential_and_saturating() {
+        let p = FaultPolicy { retries: 3, backoff_ms: 10 };
+        assert_eq!(p.backoff_for(1), 10);
+        assert_eq!(p.backoff_for(2), 20);
+        assert_eq!(p.backoff_for(3), 40);
+        let big = FaultPolicy { retries: 99, backoff_ms: u64::MAX };
+        assert_eq!(big.backoff_for(64), u64::MAX, "saturates, no overflow");
+    }
+
+    #[test]
+    fn fire_limit_caps_every_and_at_together() {
+        let mut inj =
+            FaultInjector::parse("transfer:h2d:every=2:at=3:n=2").unwrap();
+        let fired: Vec<u64> = (1..=10)
+            .filter(|_| inj.next_fault(FaultSite::Transfer, "h2d").is_some())
+            .collect();
+        // call 2 (every), call 3 (at), then the n=2 cap stops the rest
+        assert_eq!(fired.len(), 2);
+        assert_eq!(inj.injected(), 2);
+    }
+}

@@ -35,6 +35,7 @@
 //! path — identical results, two extra allocations per step.
 
 pub mod artifact;
+pub mod faults;
 
 use crate::tensor::HostTensor;
 use crate::xb::{
@@ -43,6 +44,7 @@ use crate::xb::{
 };
 use anyhow::{anyhow, Context, Result};
 use artifact::{ArtifactSpec, Manifest};
+use faults::{FaultClass, FaultInjector, FaultPolicy, FaultSite, FaultStats};
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -91,6 +93,13 @@ pub struct Runtime {
     untuple_ok: Cell<Option<bool>>,
     /// artifacts whose executable was compiled with cache donation
     donated: RefCell<std::collections::HashSet<String>>,
+    /// optional deterministic fault plan (chaos testing); consulted
+    /// immediately before every execute/transfer call
+    faults: RefCell<Option<FaultInjector>>,
+    /// retry/backoff policy for transient execute/transfer failures
+    fault_policy: Cell<FaultPolicy>,
+    /// cumulative injection/retry/recovery accounting
+    fault_stats: RefCell<FaultStats>,
 }
 
 impl Runtime {
@@ -110,7 +119,79 @@ impl Runtime {
             donation_ok: Cell::new(None),
             untuple_ok: Cell::new(None),
             donated: RefCell::new(std::collections::HashSet::new()),
+            faults: RefCell::new(None),
+            fault_policy: Cell::new(FaultPolicy::default()),
+            fault_stats: RefCell::new(FaultStats::default()),
         })
+    }
+
+    /// Install (or clear) a fault injector and the retry policy for
+    /// transient failures. The engine installs the parsed `--fault-plan`
+    /// AFTER startup uploads complete, so load-time traffic is never
+    /// faulted.
+    pub fn install_faults(
+        &self,
+        inj: Option<FaultInjector>,
+        policy: FaultPolicy,
+    ) {
+        *self.faults.borrow_mut() = inj;
+        self.fault_policy.set(policy);
+    }
+
+    /// Snapshot of the cumulative fault counters.
+    pub fn fault_stats(&self) -> FaultStats {
+        *self.fault_stats.borrow()
+    }
+
+    /// Run a guarded execute/transfer call under the fault policy:
+    /// consult the injector first (an injected fault fails the attempt
+    /// WITHOUT running `f`, which is what makes retrying it sound), then
+    /// retry transient failures with exponential backoff until the
+    /// policy's retry budget is spent. Real execution failures classify
+    /// fatal — the call may have consumed donated buffers — and surface
+    /// immediately for slot-level containment in the engine.
+    fn with_faults<T>(
+        &self,
+        site: FaultSite,
+        tag: &str,
+        mut f: impl FnMut() -> Result<T>,
+    ) -> Result<T> {
+        let policy = self.fault_policy.get();
+        let mut attempt = 0usize;
+        loop {
+            let injected = self
+                .faults
+                .borrow_mut()
+                .as_mut()
+                .and_then(|inj| inj.next_fault(site, tag));
+            let result = match injected {
+                Some(msg) => {
+                    self.fault_stats.borrow_mut().injected += 1;
+                    Err(anyhow!(msg))
+                }
+                None => f(),
+            };
+            let err = match result {
+                Ok(v) => {
+                    if attempt > 0 {
+                        self.fault_stats.borrow_mut().recovered += 1;
+                    }
+                    return Ok(v);
+                }
+                Err(err) => err,
+            };
+            let transient =
+                faults::classify(site, &err) == FaultClass::Transient;
+            if !transient || attempt >= policy.retries {
+                return Err(err);
+            }
+            attempt += 1;
+            self.fault_stats.borrow_mut().retried += 1;
+            let ms = policy.backoff_for(attempt);
+            if ms > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+            }
+        }
     }
 
     pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
@@ -293,15 +374,31 @@ impl Runtime {
         Ok(OwnedBuffer { _source: Some(lit), buffer })
     }
 
-    /// Upload a host tensor, counting its bytes as H2D traffic.
+    /// Upload a host tensor, counting its bytes as H2D traffic. Guarded
+    /// by the fault policy (site `transfer`, tag `h2d`); the meter only
+    /// counts the attempt that succeeds.
     pub fn upload(&self, t: &HostTensor) -> Result<OwnedBuffer> {
-        self.note_h2d(t.byte_size());
-        self.to_buffer(t.to_literal()?)
+        self.with_faults(FaultSite::Transfer, "h2d", || {
+            let buf = self.to_buffer(t.to_literal()?)?;
+            self.note_h2d(t.byte_size());
+            Ok(buf)
+        })
     }
 
     /// Download one device buffer to a host literal, counting `bytes` of
-    /// D2H traffic (the caller knows the logical payload size).
+    /// D2H traffic (the caller knows the logical payload size). Guarded
+    /// by the fault policy (site `transfer`, tag `d2h`).
     pub fn fetch_sized(
+        &self,
+        buf: &PjRtBuffer,
+        bytes: usize,
+    ) -> Result<Literal> {
+        self.with_faults(FaultSite::Transfer, "d2h", || {
+            self.fetch_sized_inner(buf, bytes)
+        })
+    }
+
+    fn fetch_sized_inner(
         &self,
         buf: &PjRtBuffer,
         bytes: usize,
@@ -315,13 +412,16 @@ impl Runtime {
 
     /// Download a device buffer as a host tensor, metered by the actual
     /// payload size (works for any dtype the tensor layer knows).
+    /// Guarded by the fault policy (site `transfer`, tag `d2h`).
     pub fn fetch_tensor(&self, buf: &PjRtBuffer) -> Result<HostTensor> {
-        let lit = buf
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch buffer: {e:?}"))?;
-        let t = HostTensor::from_literal(&lit)?;
-        self.note_d2h(t.byte_size());
-        Ok(t)
+        self.with_faults(FaultSite::Transfer, "d2h", || {
+            let lit = buf
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch buffer: {e:?}"))?;
+            let t = HostTensor::from_literal(&lit)?;
+            self.note_d2h(t.byte_size());
+            Ok(t)
+        })
     }
 
     /// Download output `idx` of artifact `name`, metered with the size
@@ -355,8 +455,21 @@ impl Runtime {
     /// literals. Use this with cached `upload`s for inputs that do not
     /// change between calls (weights). Handles both binding behaviors:
     /// per-element output buffers, or the whole tuple packed into one
-    /// buffer (decomposed on host after download).
+    /// buffer (decomposed on host after download). Guarded by the fault
+    /// policy (site `exec`, tag = artifact name); only an *injected*
+    /// fault is retried — it fires before the executable runs, so no
+    /// donated input was consumed.
     pub fn run_buffers(
+        &self,
+        name: &str,
+        inputs: &[&PjRtBuffer],
+    ) -> Result<Vec<Literal>> {
+        self.with_faults(FaultSite::Exec, name, || {
+            self.run_buffers_inner(name, inputs)
+        })
+    }
+
+    fn run_buffers_inner(
         &self,
         name: &str,
         inputs: &[&PjRtBuffer],
@@ -411,7 +524,22 @@ impl Runtime {
     /// buffer instead of per-element buffers, fall back to a single
     /// (metered) host round-trip to split it — correct everywhere, fast
     /// where the binding cooperates.
+    ///
+    /// Guarded by the fault policy (site `exec`, tag = artifact name).
+    /// Injected faults fire before the executable runs (retry sound);
+    /// real execution failures classify fatal because the donated cache
+    /// inputs may already be consumed.
     pub fn run_buffers_device(
+        &self,
+        name: &str,
+        inputs: &[&PjRtBuffer],
+    ) -> Result<Vec<OwnedBuffer>> {
+        self.with_faults(FaultSite::Exec, name, || {
+            self.run_buffers_device_inner(name, inputs)
+        })
+    }
+
+    fn run_buffers_device_inner(
         &self,
         name: &str,
         inputs: &[&PjRtBuffer],
@@ -446,7 +574,10 @@ impl Runtime {
             }
             let total: usize =
                 spec.outputs.iter().filter_map(|s| s.byte_size()).sum();
-            let mut tuple = self.fetch_sized(&outs[0], total)?;
+            // unguarded fetch: the executable already ran, so a nested
+            // injected transfer fault must not make this exec attempt
+            // look retryable
+            let mut tuple = self.fetch_sized_inner(&outs[0], total)?;
             let parts = tuple
                 .decompose_tuple()
                 .map_err(|e| anyhow!("decompose result {name}: {e:?}"))?;

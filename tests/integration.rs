@@ -5,7 +5,8 @@
 
 use ao::ckpt::Checkpoint;
 use ao::coordinator::{
-    engine, CacheScheme, Event, FinishReason, KvLayout, SubmitReq,
+    engine, CacheScheme, ErrorKind, Event, FinishReason, KvLayout,
+    SubmitReq,
 };
 use ao::data::corpus::standard_corpus;
 use ao::data::dataset::PackedDataset;
@@ -137,6 +138,11 @@ fn engine_serves_batched_requests() {
         host_admission: false,
         prefix_cache: false,
         max_batch_tokens: None,
+        fault_retries: 3,
+        fault_backoff_ms: 1,
+        fault_plan: None,
+        max_queue: None,
+        default_deadline_ms: None,
     });
 
     let mut rxs = Vec::new();
@@ -153,6 +159,7 @@ fn engine_serves_batched_requests() {
                 submitted_at: Instant::now(),
                 enqueued_at: None,
                 resume: None,
+                deadline: None,
             })
             .unwrap();
         rxs.push(rx);
@@ -201,6 +208,11 @@ fn engine_greedy_decode_is_deterministic() {
             host_admission: false,
             prefix_cache: false,
             max_batch_tokens: None,
+            fault_retries: 3,
+            fault_backoff_ms: 1,
+            fault_plan: None,
+            max_queue: None,
+            default_deadline_ms: None,
         });
         let (tx, rx) = channel();
         handle
@@ -214,6 +226,7 @@ fn engine_greedy_decode_is_deterministic() {
                 submitted_at: Instant::now(),
                 enqueued_at: None,
                 resume: None,
+                deadline: None,
             })
             .unwrap();
         let mut out = Vec::new();
@@ -264,6 +277,11 @@ fn decode_host_traffic_is_logits_only() {
         host_admission: false,
         prefix_cache: false,
         max_batch_tokens: None,
+        fault_retries: 3,
+        fault_backoff_ms: 1,
+        fault_plan: None,
+        max_queue: None,
+        default_deadline_ms: None,
     });
     let mut rxs = Vec::new();
     for i in 0..3u64 {
@@ -279,6 +297,7 @@ fn decode_host_traffic_is_logits_only() {
                 submitted_at: Instant::now(),
                 enqueued_at: None,
                 resume: None,
+                deadline: None,
             })
             .unwrap();
         rxs.push(rx);
@@ -345,6 +364,11 @@ fn context_cap_grants_the_last_cache_slot() {
         host_admission: false,
         prefix_cache: false,
         max_batch_tokens: None,
+        fault_retries: 3,
+        fault_backoff_ms: 1,
+        fault_plan: None,
+        max_queue: None,
+        default_deadline_ms: None,
     });
     let (tx, rx) = channel();
     handle
@@ -358,6 +382,7 @@ fn context_cap_grants_the_last_cache_slot() {
             submitted_at: Instant::now(),
             enqueued_at: None,
             resume: None,
+            deadline: None,
         })
         .unwrap();
     let mut n_tokens = 0usize;
@@ -414,6 +439,11 @@ fn oversized_head_does_not_stall_admission() {
         host_admission: false,
         prefix_cache: false,
         max_batch_tokens: None,
+        fault_retries: 3,
+        fault_backoff_ms: 1,
+        fault_plan: None,
+        max_queue: None,
+        default_deadline_ms: None,
     });
     // head: too long for any bucket; followers: ordinary prompts
     let (bad_tx, bad_rx) = channel();
@@ -428,6 +458,7 @@ fn oversized_head_does_not_stall_admission() {
             submitted_at: Instant::now(),
             enqueued_at: None,
             resume: None,
+            deadline: None,
         })
         .unwrap();
     let mut rxs = Vec::new();
@@ -444,6 +475,7 @@ fn oversized_head_does_not_stall_admission() {
                 submitted_at: Instant::now(),
                 enqueued_at: None,
                 resume: None,
+                deadline: None,
             })
             .unwrap();
         rxs.push(rx);
@@ -451,7 +483,7 @@ fn oversized_head_does_not_stall_admission() {
     let mut saw_error = false;
     for ev in bad_rx {
         if let Event::Error(e) = ev {
-            assert!(e.contains("exceeds"));
+            assert!(e.message.contains("exceeds"));
             saw_error = true;
             break;
         }
@@ -558,6 +590,11 @@ fn admission_rows_only_under(cache_scheme: CacheScheme) {
         host_admission: false,
         prefix_cache: false,
         max_batch_tokens: None,
+        fault_retries: 3,
+        fault_backoff_ms: 1,
+        fault_plan: None,
+        max_queue: None,
+        default_deadline_ms: None,
     });
     let mut rxs = Vec::new();
     for i in 0..3u64 {
@@ -573,6 +610,7 @@ fn admission_rows_only_under(cache_scheme: CacheScheme) {
                 submitted_at: Instant::now(),
                 enqueued_at: None,
                 resume: None,
+                deadline: None,
             })
             .unwrap();
         rxs.push(rx);
@@ -648,6 +686,11 @@ fn admission_paths_agree_under(cache_scheme: CacheScheme) {
             host_admission,
             prefix_cache: false,
             max_batch_tokens: None,
+            fault_retries: 3,
+            fault_backoff_ms: 1,
+            fault_plan: None,
+            max_queue: None,
+            default_deadline_ms: None,
         });
         let mut rxs = Vec::new();
         for i in 0..4u64 {
@@ -663,6 +706,7 @@ fn admission_paths_agree_under(cache_scheme: CacheScheme) {
                     submitted_at: Instant::now(),
                     enqueued_at: None,
                     resume: None,
+                    deadline: None,
                 })
                 .unwrap();
             rxs.push(rx);
@@ -735,6 +779,11 @@ fn kv_cache_schemes_agree() {
             host_admission: false,
             prefix_cache: false,
             max_batch_tokens: None,
+            fault_retries: 3,
+            fault_backoff_ms: 1,
+            fault_plan: None,
+            max_queue: None,
+            default_deadline_ms: None,
         });
         let mut rxs = Vec::new();
         for i in 0..5u64 {
@@ -750,6 +799,7 @@ fn kv_cache_schemes_agree() {
                     submitted_at: Instant::now(),
                     enqueued_at: None,
                     resume: None,
+                    deadline: None,
                 })
                 .unwrap();
             rxs.push(rx);
@@ -840,6 +890,11 @@ fn kv_layouts_agree() {
                 host_admission: false,
                 prefix_cache: false,
                 max_batch_tokens: None,
+                fault_retries: 3,
+                fault_backoff_ms: 1,
+                fault_plan: None,
+                max_queue: None,
+                default_deadline_ms: None,
             });
             let mut rxs = Vec::new();
             // mixed short/long greedy workload, more requests than fit at
@@ -860,6 +915,7 @@ fn kv_layouts_agree() {
                         submitted_at: Instant::now(),
                         enqueued_at: None,
                         resume: None,
+                        deadline: None,
                     })
                     .unwrap();
                 rxs.push(rx);
@@ -978,6 +1034,11 @@ fn prefix_cache_agrees() {
                 host_admission: false,
                 prefix_cache,
                 max_batch_tokens: None,
+                fault_retries: 3,
+                fault_backoff_ms: 1,
+                fault_plan: None,
+                max_queue: None,
+                default_deadline_ms: None,
             });
             let collect = |rx: std::sync::mpsc::Receiver<Event>| {
                 let mut toks = Vec::new();
@@ -1004,6 +1065,7 @@ fn prefix_cache_agrees() {
                     submitted_at: Instant::now(),
                     enqueued_at: None,
                     resume: None,
+                    deadline: None,
                 })
                 .unwrap();
             let mut streams = vec![collect(rx)];
@@ -1025,6 +1087,7 @@ fn prefix_cache_agrees() {
                         submitted_at: Instant::now(),
                         enqueued_at: None,
                         resume: None,
+                        deadline: None,
                     })
                     .unwrap();
                 rxs.push(rx);
@@ -1116,6 +1179,11 @@ fn sampled_requests_diverge() {
         host_admission: false,
         prefix_cache: false,
         max_batch_tokens: None,
+        fault_retries: 3,
+        fault_backoff_ms: 1,
+        fault_plan: None,
+        max_queue: None,
+        default_deadline_ms: None,
     });
     // identical prompts, temperature 1.0, seed == id (the collapsing case)
     let mut rxs = Vec::new();
@@ -1132,6 +1200,7 @@ fn sampled_requests_diverge() {
                 submitted_at: Instant::now(),
                 enqueued_at: None,
                 resume: None,
+                deadline: None,
             })
             .unwrap();
         rxs.push(rx);
@@ -1183,6 +1252,11 @@ fn empty_prompt_is_rejected() {
         host_admission: false,
         prefix_cache: false,
         max_batch_tokens: None,
+        fault_retries: 3,
+        fault_backoff_ms: 1,
+        fault_plan: None,
+        max_queue: None,
+        default_deadline_ms: None,
     });
     let (bad_tx, bad_rx) = channel();
     handle
@@ -1196,6 +1270,7 @@ fn empty_prompt_is_rejected() {
             submitted_at: Instant::now(),
             enqueued_at: None,
             resume: None,
+            deadline: None,
         })
         .unwrap();
     let (ok_tx, ok_rx) = channel();
@@ -1210,13 +1285,14 @@ fn empty_prompt_is_rejected() {
             submitted_at: Instant::now(),
             enqueued_at: None,
             resume: None,
+            deadline: None,
         })
         .unwrap();
     let mut saw_error = false;
     for ev in bad_rx {
         match ev {
             Event::Error(e) => {
-                assert!(e.contains("empty prompt"), "{e}");
+                assert!(e.message.contains("empty prompt"), "{e}");
                 saw_error = true;
                 break;
             }
@@ -1299,6 +1375,11 @@ fn scheduler_agrees() {
                     host_admission: false,
                     prefix_cache: false,
                     max_batch_tokens,
+                    fault_retries: 3,
+                    fault_backoff_ms: 1,
+                    fault_plan: None,
+                    max_queue: None,
+                    default_deadline_ms: None,
                 });
                 let mut rxs = Vec::new();
                 // two short-prompt decoders first (they sit in Decoding
@@ -1316,6 +1397,7 @@ fn scheduler_agrees() {
                             submitted_at: Instant::now(),
                             enqueued_at: None,
                             resume: None,
+                            deadline: None,
                         })
                         .unwrap();
                     rxs.push(rx);
@@ -1338,6 +1420,7 @@ fn scheduler_agrees() {
                             submitted_at: Instant::now(),
                             enqueued_at: None,
                             resume: None,
+                            deadline: None,
                         })
                         .unwrap();
                     rxs.push(rx);
@@ -1413,4 +1496,710 @@ fn scheduler_agrees() {
             }
         }
     }
+}
+
+/// Tentpole acceptance (fault containment): a seeded fault plan injects
+/// transient decode-exec, admit-exec, and transfer failures mid-workload.
+/// The engine loop never exits, every request terminates, and — because
+/// every injected fault fires BEFORE the real call and recovers within
+/// the retry budget — the token streams are greedy-identical to the
+/// fault-free run, under BOTH cache schemes and BOTH kv layouts. The
+/// paged pool still drains to zero.
+#[test]
+fn engine_survives_injected_faults() {
+    let Some(dir) = artifacts_dir() else { return };
+    let plan = "exec:decode:every=5:n=2,exec:admit:at=2:n=1,\
+                transfer:h2d:every=7:n=2,transfer:d2h:at=9:n=1";
+    for cache_scheme in [CacheScheme::F32, CacheScheme::Int8] {
+        for kv_layout in [KvLayout::Static, KvLayout::Paged] {
+            if !has_admit_artifacts(&dir, cache_scheme) {
+                return;
+            }
+            if kv_layout == KvLayout::Paged
+                && !has_paged_artifacts(&dir, cache_scheme)
+            {
+                return;
+            }
+            let master = tiny_master_ckpt(&dir);
+            let tmp = std::env::temp_dir().join("ao_int_tests");
+            std::fs::create_dir_all(&tmp).unwrap();
+            let ckpt_path = tmp.join(format!(
+                "tiny_f32_chaos_{}_{}.aockpt",
+                cache_scheme.tag(),
+                kv_layout.tag()
+            ));
+            master.save(&ckpt_path).unwrap();
+
+            let run = |fault_plan: Option<&str>| {
+                let (handle, join) = engine::spawn(engine::EngineConfig {
+                    artifacts_dir: dir.clone(),
+                    ckpt_path: ckpt_path.clone(),
+                    model: "tiny".into(),
+                    scheme: "f32".into(),
+                    cache_scheme,
+                    kv_layout,
+                    eos_token: None,
+                    host_admission: false,
+                    prefix_cache: false,
+                    max_batch_tokens: None,
+                    fault_retries: 3,
+                    fault_backoff_ms: 1,
+                    fault_plan: fault_plan.map(String::from),
+                    max_queue: None,
+                    default_deadline_ms: None,
+                });
+                let mut rxs = Vec::new();
+                // mixed prompt lengths so admission spans buckets (and
+                // the admit rule sees several calls)
+                for i in 0..6u64 {
+                    let (tx, rx) = channel();
+                    handle
+                        .submit(SubmitReq {
+                            id: i,
+                            prompt_tokens: vec![
+                                25 + 3 * i as u32;
+                                3 + (2 * i as usize) % 7
+                            ],
+                            max_new_tokens: 6,
+                            temperature: 0.0,
+                            seed: i,
+                            tx,
+                            submitted_at: Instant::now(),
+                            enqueued_at: None,
+                            resume: None,
+                            deadline: None,
+                        })
+                        .unwrap();
+                    rxs.push(rx);
+                }
+                let streams: Vec<Vec<u32>> = rxs
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, rx)| {
+                        let mut toks = Vec::new();
+                        let mut done = false;
+                        for ev in rx {
+                            match ev {
+                                Event::Token(t) => toks.push(t),
+                                Event::Done(_) => {
+                                    done = true;
+                                    break;
+                                }
+                                Event::Error(e) => {
+                                    panic!("req {i} error: {e}")
+                                }
+                            }
+                        }
+                        assert!(done, "req {i} never finished");
+                        toks
+                    })
+                    .collect();
+                handle.shutdown();
+                let m = join.join().unwrap().unwrap();
+                (streams, m)
+            };
+            let (clean_streams, clean_m) = run(None);
+            let (chaos_streams, chaos_m) = run(Some(plan));
+            assert_eq!(clean_m.faults_injected, 0);
+            assert!(
+                chaos_m.faults_injected > 0,
+                "the plan must actually fire (kv-cache {}, layout {})",
+                cache_scheme.tag(),
+                kv_layout.tag()
+            );
+            assert!(
+                chaos_m.faults_retried > 0,
+                "injected faults must be retried"
+            );
+            assert_eq!(
+                chaos_m.faults_recovered, chaos_m.faults_injected,
+                "every injected fault fires before the real call and \
+                 must recover within the retry budget"
+            );
+            assert_eq!(
+                clean_streams,
+                chaos_streams,
+                "recovered faults must not change the greedy token \
+                 streams (kv-cache {}, layout {})",
+                cache_scheme.tag(),
+                kv_layout.tag()
+            );
+            assert_eq!(chaos_m.n_requests, 6);
+            if kv_layout == KvLayout::Paged {
+                assert_eq!(
+                    chaos_m.pages_used, 0,
+                    "the page pool must drain to zero after the chaos run"
+                );
+            }
+        }
+    }
+}
+
+/// Retry exhaustion under the static layout (no pager/scheduler, so
+/// slot-level containment cannot re-prefill): the affected slots fail
+/// with a structured `failed` error, the engine loop survives over a
+/// re-zeroed cache, and a follow-up request completes normally.
+#[test]
+fn exhausted_faults_fail_slots_not_the_engine() {
+    let Some(dir) = artifacts_dir() else { return };
+    let master = tiny_master_ckpt(&dir);
+    let tmp = std::env::temp_dir().join("ao_int_tests");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let ckpt_path = tmp.join("tiny_f32_exhaust.aockpt");
+    master.save(&ckpt_path).unwrap();
+
+    let (handle, join) = engine::spawn(engine::EngineConfig {
+        artifacts_dir: dir,
+        ckpt_path,
+        model: "tiny".into(),
+        scheme: "f32".into(),
+        cache_scheme: CacheScheme::F32,
+        kv_layout: KvLayout::Static,
+        eos_token: None,
+        host_admission: false,
+        prefix_cache: false,
+        max_batch_tokens: None,
+        fault_retries: 0, // exhaust immediately
+        fault_backoff_ms: 1,
+        fault_plan: Some("exec:decode:at=2".into()),
+        max_queue: None,
+        default_deadline_ms: None,
+    });
+    let mut rxs = Vec::new();
+    for i in 0..2u64 {
+        let (tx, rx) = channel();
+        handle
+            .submit(SubmitReq {
+                id: i,
+                prompt_tokens: vec![33 + i as u32; 4],
+                max_new_tokens: 6,
+                temperature: 0.0,
+                seed: i,
+                tx,
+                submitted_at: Instant::now(),
+                enqueued_at: None,
+                resume: None,
+                deadline: None,
+            })
+            .unwrap();
+        rxs.push(rx);
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let mut failed = false;
+        for ev in rx {
+            if let Event::Error(e) = ev {
+                assert_eq!(e.kind, ErrorKind::Failed, "req {i}: {e}");
+                failed = true;
+                break;
+            }
+        }
+        assert!(failed, "req {i} must fail when the retry budget is 0");
+    }
+    // the loop survived and the cache was re-zeroed: fresh work is fine
+    let (tx, rx) = channel();
+    handle
+        .submit(SubmitReq {
+            id: 9,
+            prompt_tokens: vec![55; 4],
+            max_new_tokens: 4,
+            temperature: 0.0,
+            seed: 9,
+            tx,
+            submitted_at: Instant::now(),
+            enqueued_at: None,
+            resume: None,
+            deadline: None,
+        })
+        .unwrap();
+    let mut done = false;
+    for ev in rx {
+        match ev {
+            Event::Done(info) => {
+                assert_eq!(info.n_generated, 4);
+                done = true;
+            }
+            Event::Error(e) => panic!("follow-up error: {e}"),
+            Event::Token(_) => {}
+        }
+    }
+    assert!(done, "the engine must keep serving after containment");
+    handle.shutdown();
+    let m = join.join().unwrap().unwrap();
+    assert_eq!(m.faults_injected, 1);
+    assert_eq!(m.faults_retried, 0);
+    assert_eq!(m.n_requests, 1, "only the follow-up completed");
+}
+
+/// Retry exhaustion under paged + scheduler: decoding slots with emitted
+/// tokens are preempted and re-prefilled from their token history over
+/// the rebuilt cache — the requests still complete, with token streams
+/// greedy-identical to a fault-free run.
+#[test]
+fn contained_failure_resumes_decoding_slots() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cache_scheme = CacheScheme::F32;
+    if !has_paged_artifacts(&dir, cache_scheme)
+        || !has_suffix_artifacts(&dir, cache_scheme)
+    {
+        return;
+    }
+    let master = tiny_master_ckpt(&dir);
+    let tmp = std::env::temp_dir().join("ao_int_tests");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let ckpt_path = tmp.join("tiny_f32_resume.aockpt");
+    master.save(&ckpt_path).unwrap();
+
+    let run = |fault_plan: Option<&str>| {
+        let (handle, join) = engine::spawn(engine::EngineConfig {
+            artifacts_dir: dir.clone(),
+            ckpt_path: ckpt_path.clone(),
+            model: "tiny".into(),
+            scheme: "f32".into(),
+            cache_scheme,
+            kv_layout: KvLayout::Paged,
+            eos_token: None,
+            host_admission: false,
+            prefix_cache: false,
+            max_batch_tokens: Some(48),
+            fault_retries: 0,
+            fault_backoff_ms: 1,
+            fault_plan: fault_plan.map(String::from),
+            max_queue: None,
+            default_deadline_ms: None,
+        });
+        let mut rxs = Vec::new();
+        // short prompts: everything is Decoding (with emitted tokens) by
+        // the third decode step, so containment preempts rather than
+        // fails
+        for i in 0..3u64 {
+            let (tx, rx) = channel();
+            handle
+                .submit(SubmitReq {
+                    id: i,
+                    prompt_tokens: vec![41 + 2 * i as u32; 3],
+                    max_new_tokens: 8,
+                    temperature: 0.0,
+                    seed: i,
+                    tx,
+                    submitted_at: Instant::now(),
+                    enqueued_at: None,
+                    resume: None,
+                    deadline: None,
+                })
+                .unwrap();
+            rxs.push(rx);
+        }
+        let streams: Vec<Vec<u32>> = rxs
+            .into_iter()
+            .enumerate()
+            .map(|(i, rx)| {
+                let mut toks = Vec::new();
+                for ev in rx {
+                    match ev {
+                        Event::Token(t) => toks.push(t),
+                        Event::Done(_) => break,
+                        Event::Error(e) => panic!("req {i} error: {e}"),
+                    }
+                }
+                toks
+            })
+            .collect();
+        handle.shutdown();
+        let m = join.join().unwrap().unwrap();
+        (streams, m)
+    };
+    let (clean_streams, _clean_m) = run(None);
+    let (chaos_streams, chaos_m) = run(Some("exec:decode:at=3"));
+    assert_eq!(chaos_m.faults_injected, 1);
+    assert!(
+        chaos_m.sched_preemptions >= 3,
+        "containment must preempt the decoding slots, not fail them"
+    );
+    assert_eq!(
+        clean_streams, chaos_streams,
+        "re-prefilling from token history must reproduce the greedy \
+         streams"
+    );
+    assert_eq!(chaos_m.n_requests, 3, "no request may be lost");
+    assert_eq!(chaos_m.pages_used, 0);
+}
+
+/// Graceful drain: everything admitted before the drain finishes and
+/// streams to completion; submissions after it are rejected with a
+/// structured `overloaded` error; the drain call returns the report.
+#[test]
+fn drain_completes_inflight() {
+    let Some(dir) = artifacts_dir() else { return };
+    let master = tiny_master_ckpt(&dir);
+    let tmp = std::env::temp_dir().join("ao_int_tests");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let ckpt_path = tmp.join("tiny_f32_drain.aockpt");
+    master.save(&ckpt_path).unwrap();
+
+    let (handle, join) = engine::spawn(engine::EngineConfig {
+        artifacts_dir: dir,
+        ckpt_path,
+        model: "tiny".into(),
+        scheme: "f32".into(),
+        cache_scheme: CacheScheme::F32,
+        kv_layout: KvLayout::Static,
+        eos_token: None,
+        host_admission: false,
+        prefix_cache: false,
+        max_batch_tokens: None,
+        fault_retries: 3,
+        fault_backoff_ms: 1,
+        fault_plan: None,
+        max_queue: None,
+        default_deadline_ms: None,
+    });
+    let mut rxs = Vec::new();
+    for i in 0..4u64 {
+        let (tx, rx) = channel();
+        handle
+            .submit(SubmitReq {
+                id: i,
+                prompt_tokens: vec![61 + i as u32; 4 + i as usize],
+                max_new_tokens: 6,
+                temperature: 0.0,
+                seed: i,
+                tx,
+                submitted_at: Instant::now(),
+                enqueued_at: None,
+                resume: None,
+                deadline: None,
+            })
+            .unwrap();
+        rxs.push(rx);
+    }
+    // commands are FIFO: the drain lands after all four submissions
+    let report = handle.drain().unwrap();
+    assert!(report.contains("requests"), "{report}");
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let mut done = false;
+        for ev in rx {
+            match ev {
+                Event::Done(info) => {
+                    assert_eq!(info.n_generated, 6, "req {i}");
+                    done = true;
+                }
+                Event::Error(e) => panic!("req {i} error: {e}"),
+                Event::Token(_) => {}
+            }
+        }
+        assert!(done, "req {i} must finish before the drain completes");
+    }
+    // a draining engine sheds new load with an overloaded-class error
+    let (tx, rx) = channel();
+    handle
+        .submit(SubmitReq {
+            id: 9,
+            prompt_tokens: vec![88; 4],
+            max_new_tokens: 4,
+            temperature: 0.0,
+            seed: 9,
+            tx,
+            submitted_at: Instant::now(),
+            enqueued_at: None,
+            resume: None,
+            deadline: None,
+        })
+        .unwrap();
+    let mut rejected = false;
+    for ev in rx {
+        if let Event::Error(e) = ev {
+            assert_eq!(e.kind, ErrorKind::Overloaded, "{e}");
+            assert!(e.message.contains("draining"), "{e}");
+            rejected = true;
+            break;
+        }
+    }
+    assert!(rejected, "submissions after drain must be rejected");
+    handle.shutdown();
+    let m = join.join().unwrap().unwrap();
+    assert_eq!(m.n_requests, 4);
+    assert_eq!(m.rejected_overload, 1);
+}
+
+/// Deadlines: an already-expired queued request is swept with a
+/// `deadline` error before prefill; a decoding request whose deadline
+/// passes finishes early with `finish_reason="deadline"`.
+#[test]
+fn deadlines_shed_queued_and_finish_decoding() {
+    let Some(dir) = artifacts_dir() else { return };
+    let master = tiny_master_ckpt(&dir);
+    let tmp = std::env::temp_dir().join("ao_int_tests");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let ckpt_path = tmp.join("tiny_f32_deadline.aockpt");
+    master.save(&ckpt_path).unwrap();
+
+    let (handle, join) = engine::spawn(engine::EngineConfig {
+        artifacts_dir: dir,
+        ckpt_path,
+        model: "tiny".into(),
+        scheme: "f32".into(),
+        cache_scheme: CacheScheme::F32,
+        kv_layout: KvLayout::Static,
+        eos_token: None,
+        host_admission: false,
+        prefix_cache: false,
+        max_batch_tokens: None,
+        fault_retries: 3,
+        fault_backoff_ms: 1,
+        fault_plan: None,
+        max_queue: None,
+        default_deadline_ms: None,
+    });
+    // already expired at submit: the sweep rejects it before prefill
+    let (tx, rx) = channel();
+    handle
+        .submit(SubmitReq {
+            id: 0,
+            prompt_tokens: vec![44; 4],
+            max_new_tokens: 4,
+            temperature: 0.0,
+            seed: 0,
+            tx,
+            submitted_at: Instant::now(),
+            enqueued_at: None,
+            resume: None,
+            deadline: Some(Instant::now()),
+        })
+        .unwrap();
+    let mut swept = false;
+    for ev in rx {
+        if let Event::Error(e) = ev {
+            assert_eq!(e.kind, ErrorKind::Deadline, "{e}");
+            assert!(e.message.contains("queued"), "{e}");
+            swept = true;
+            break;
+        }
+    }
+    assert!(swept, "expired queued request must be swept with an error");
+
+    // a live request whose budget cannot cover the generation: the
+    // deadline passes mid-decode and the slot finishes early. The
+    // 40-token prompt lands in the s128 bucket, so the context cap is
+    // ~88 decode steps away — far more XLA wall-clock than the 5ms
+    // deadline on any host.
+    let (tx, rx) = channel();
+    handle
+        .submit(SubmitReq {
+            id: 1,
+            prompt_tokens: vec![47; 40],
+            max_new_tokens: 100_000,
+            temperature: 0.0,
+            seed: 1,
+            tx,
+            submitted_at: Instant::now(),
+            enqueued_at: None,
+            resume: None,
+            deadline: Some(
+                Instant::now() + std::time::Duration::from_millis(5),
+            ),
+        })
+        .unwrap();
+    let mut finish = None;
+    for ev in rx {
+        match ev {
+            Event::Done(info) => {
+                finish = Some(info);
+                break;
+            }
+            Event::Error(e) => panic!("error: {e}"),
+            Event::Token(_) => {}
+        }
+    }
+    handle.shutdown();
+    let info = finish.expect("request never finished");
+    assert_eq!(info.reason, FinishReason::Deadline);
+    let m = join.join().unwrap().unwrap();
+    assert_eq!(m.rejected_deadline, 1);
+    assert_eq!(m.n_requests, 1);
+}
+
+/// Cancellation mid-generation: the request gets exactly one terminal
+/// `canceled` error, its slot and pages are reclaimed, and the engine
+/// keeps serving.
+#[test]
+fn cancel_releases_slot_and_pages() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cache_scheme = CacheScheme::F32;
+    if !has_paged_artifacts(&dir, cache_scheme) {
+        return;
+    }
+    let master = tiny_master_ckpt(&dir);
+    let tmp = std::env::temp_dir().join("ao_int_tests");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let ckpt_path = tmp.join("tiny_f32_cancel.aockpt");
+    master.save(&ckpt_path).unwrap();
+
+    let (handle, join) = engine::spawn(engine::EngineConfig {
+        artifacts_dir: dir,
+        ckpt_path,
+        model: "tiny".into(),
+        scheme: "f32".into(),
+        cache_scheme,
+        kv_layout: KvLayout::Paged,
+        eos_token: None,
+        host_admission: false,
+        prefix_cache: false,
+        max_batch_tokens: None,
+        fault_retries: 3,
+        fault_backoff_ms: 1,
+        fault_plan: None,
+        max_queue: None,
+        default_deadline_ms: None,
+    });
+    let (tx, rx) = channel();
+    handle
+        .submit(SubmitReq {
+            id: 0,
+            prompt_tokens: vec![52; 4],
+            max_new_tokens: 100_000, // runs until canceled
+            temperature: 0.0,
+            seed: 0,
+            tx,
+            submitted_at: Instant::now(),
+            enqueued_at: None,
+            resume: None,
+            deadline: None,
+        })
+        .unwrap();
+    // wait for generation to actually start, then cancel mid-stream
+    let first = rx.recv().unwrap();
+    assert!(matches!(first, Event::Token(_)), "{first:?}");
+    handle.cancel(0);
+    let mut canceled = false;
+    for ev in rx {
+        match ev {
+            Event::Token(_) => {}
+            Event::Error(e) => {
+                assert_eq!(e.kind, ErrorKind::Canceled, "{e}");
+                canceled = true;
+                break;
+            }
+            ev => panic!("expected canceled error, got {ev:?}"),
+        }
+    }
+    assert!(canceled, "cancel must deliver a terminal error event");
+    // the slot and its pages are free again: fresh work completes
+    let (tx, rx) = channel();
+    handle
+        .submit(SubmitReq {
+            id: 1,
+            prompt_tokens: vec![53; 4],
+            max_new_tokens: 4,
+            temperature: 0.0,
+            seed: 1,
+            tx,
+            submitted_at: Instant::now(),
+            enqueued_at: None,
+            resume: None,
+            deadline: None,
+        })
+        .unwrap();
+    let mut done = false;
+    for ev in rx {
+        if let Event::Done(info) = ev {
+            assert_eq!(info.n_generated, 4);
+            done = true;
+        }
+    }
+    assert!(done);
+    handle.shutdown();
+    let m = join.join().unwrap().unwrap();
+    assert_eq!(m.n_canceled, 1);
+    assert_eq!(m.pages_used, 0, "canceled request must release its pages");
+}
+
+/// Regression (abandoned event stream): a client that disconnects after
+/// the first token must cancel the request engine-side (releasing its
+/// slot), the `shutdown` op must drain and answer, and a post-drain
+/// client gets a typed `overloaded` error from `Client::generate`.
+#[test]
+fn server_disconnect_cancels_request() {
+    use std::io::{BufRead, BufReader, Write};
+    let Some(dir) = artifacts_dir() else { return };
+    let master = tiny_master_ckpt(&dir);
+    let tmp = std::env::temp_dir().join("ao_int_tests");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let ckpt_path = tmp.join("tiny_f32_srv.aockpt");
+    master.save(&ckpt_path).unwrap();
+
+    let (handle, join) = engine::spawn(engine::EngineConfig {
+        artifacts_dir: dir,
+        ckpt_path,
+        model: "tiny".into(),
+        scheme: "f32".into(),
+        cache_scheme: CacheScheme::F32,
+        kv_layout: KvLayout::Static,
+        eos_token: None,
+        host_admission: false,
+        prefix_cache: false,
+        max_batch_tokens: None,
+        fault_retries: 3,
+        fault_backoff_ms: 1,
+        fault_plan: None,
+        max_queue: None,
+        default_deadline_ms: None,
+    });
+    // grab a free port, then serve exactly three connections on it
+    let addr = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let server = {
+        let handle = handle.clone();
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            ao::coordinator::server::serve(
+                &addr,
+                handle,
+                std::sync::Arc::new(Tokenizer::byte_level()),
+                Some(3),
+            )
+        })
+    };
+    // conn 1: request a long generation, read ONE token line, hang up
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    {
+        let mut c = std::net::TcpStream::connect(&addr).unwrap();
+        let req = "{\"prompt\": \"hello world\", \"max_new_tokens\": 100000}";
+        writeln!(c, "{req}").unwrap();
+        let mut line = String::new();
+        BufReader::new(c.try_clone().unwrap()).read_line(&mut line).unwrap();
+        assert!(!line.contains("\"error\""), "{line}");
+        c.shutdown(std::net::Shutdown::Both).unwrap();
+    } // dropped mid-stream: the server's next write fails -> cancel
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    // conn 2: admin shutdown -> graceful drain + final report
+    {
+        let mut c = std::net::TcpStream::connect(&addr).unwrap();
+        let req = "{\"op\": \"shutdown\"}";
+        writeln!(c, "{req}").unwrap();
+        let mut line = String::new();
+        BufReader::new(c.try_clone().unwrap()).read_line(&mut line).unwrap();
+        assert!(line.contains("\"drained\""), "{line}");
+    }
+    // conn 3: the drained engine sheds load with a typed client error
+    {
+        let mut client =
+            ao::coordinator::server::Client::connect(&addr).unwrap();
+        let err = client
+            .generate("more work", 4, 0.0)
+            .expect_err("a draining server must reject new work");
+        let kind = err
+            .downcast_ref::<ao::coordinator::server::ServerError>()
+            .map(|e| e.kind);
+        assert_eq!(kind, Some(ErrorKind::Overloaded), "{err:#}");
+    }
+    server.join().unwrap().unwrap();
+    handle.shutdown();
+    let m = join.join().unwrap().unwrap();
+    assert_eq!(
+        m.n_canceled, 1,
+        "the abandoned stream must cancel engine-side"
+    );
+    assert!(m.rejected_overload >= 1);
 }

@@ -818,3 +818,282 @@ fn prop_scheduler_invariants() {
         );
     }
 }
+
+#[test]
+fn prop_request_lifecycle() {
+    // The request lifecycle under random admission, decode progress,
+    // fault containment (preempt-and-requeue vs fail), cancellation and
+    // deadlines, over the real slot table + pager:
+    //   - every submitted request reaches EXACTLY one terminal event
+    //     (done / failed / canceled / deadline) — a preemption requeue
+    //     is not terminal and must not duplicate one
+    //   - no slot or page leaks: after the drain the table is empty and
+    //     every page is back in the pool
+    //   - containment only ever requeues a decoding slot that has
+    //     emitted tokens; its re-prefill covers the full token history
+    use std::collections::{BTreeMap, VecDeque};
+
+    #[derive(Clone)]
+    struct Queued {
+        id: u64,
+        n_prompt: usize,
+        max_new: usize,
+        deadline_op: Option<usize>,
+    }
+
+    let mut rng = Rng::new(0x11FE_C7C1);
+    for case in 0..30 {
+        let page_size = [4usize, 8][rng.below(2)];
+        let blocks_per_slot = 2 + rng.below(3);
+        let smax = page_size * blocks_per_slot;
+        let batch = 1 + rng.below(4);
+        // pools from one-slot-tight to fully provisioned
+        let n_pages =
+            blocks_per_slot + rng.below(batch * blocks_per_slot + 1);
+        let mut pager =
+            Pager::new(n_pages, page_size, batch, blocks_per_slot);
+        let mut table = SlotTable::new(batch, smax);
+        let mut queue: VecDeque<Queued> = VecDeque::new();
+        let mut terminals: BTreeMap<u64, &'static str> = BTreeMap::new();
+        let mut next_id = 0u64;
+        let mut submitted = 0u64;
+        let terminal = |terminals: &mut BTreeMap<u64, &'static str>,
+                        id: u64,
+                        what: &'static str| {
+            assert!(
+                terminals.insert(id, what).is_none(),
+                "request {id} got a second terminal event ({what}) \
+                 (case {case})"
+            );
+        };
+        let reserve_for = |q: &Queued| (q.n_prompt + q.max_new).min(smax);
+
+        for op in 0..300 {
+            // deadline sweep first, like the engine: queued expired
+            // requests error out before any prefill is spent on them
+            let mut keep: VecDeque<Queued> = VecDeque::new();
+            for q in queue.drain(..) {
+                if q.deadline_op.is_some_and(|d| d <= op) {
+                    terminal(&mut terminals, q.id, "deadline-queued");
+                } else {
+                    keep.push_back(q);
+                }
+            }
+            queue = keep;
+
+            match rng.below(6) {
+                // submit
+                0 => {
+                    let id = next_id;
+                    next_id += 1;
+                    submitted += 1;
+                    queue.push_back(Queued {
+                        id,
+                        n_prompt: 1 + rng.below(smax.min(6)),
+                        max_new: 1 + rng.below(6),
+                        deadline_op: if rng.chance(0.25) {
+                            Some(op + rng.below(40))
+                        } else {
+                            None
+                        },
+                    });
+                }
+                // admit the queue head (FCFS, like burst admission)
+                1 => {
+                    if let Some(q) = queue.front() {
+                        let reserve = reserve_for(q);
+                        if table.n_free() > 0 && pager.can_admit(reserve) {
+                            let q = queue.pop_front().unwrap();
+                            let idx = table
+                                .claim(Slot {
+                                    request_id: q.id,
+                                    pos: q.n_prompt,
+                                    n_prompt: q.n_prompt,
+                                    n_generated: 0,
+                                    max_new_tokens: q.max_new,
+                                    temperature: 0.0,
+                                    rng_state: q.id,
+                                    phase: SlotPhase::Decoding,
+                                })
+                                .unwrap();
+                            pager.admit(idx, q.n_prompt, reserve).unwrap();
+                            if let Some(d) = q.deadline_op {
+                                // park the deadline on the rng_state
+                                // field the simulation does not
+                                // otherwise use
+                                table.get_mut(idx).unwrap().rng_state =
+                                    u64::MAX - d as u64;
+                            } else {
+                                table.get_mut(idx).unwrap().rng_state = 0;
+                            }
+                        }
+                    }
+                }
+                // one decode step over every decoding slot
+                2 => {
+                    for idx in table.decode_indices() {
+                        let (id, done, dl) = {
+                            let s = table.get_mut(idx).unwrap();
+                            // the decode write lands at the old `pos`,
+                            // which is always inside the reservation
+                            pager.grow(idx, s.pos).unwrap();
+                            s.n_generated += 1;
+                            s.pos += 1;
+                            let expired = s.rng_state != 0
+                                && (u64::MAX - s.rng_state) <= op as u64;
+                            (
+                                s.request_id,
+                                s.n_generated >= s.max_new_tokens
+                                    || s.pos >= smax,
+                                expired,
+                            )
+                        };
+                        if done || dl {
+                            table.release(idx);
+                            pager.release(idx);
+                            terminal(
+                                &mut terminals,
+                                id,
+                                if dl { "deadline-decode" } else { "done" },
+                            );
+                        }
+                    }
+                }
+                // contained step failure: decoding slots with emitted
+                // tokens are preempted and requeued (front), the rest
+                // fail — exactly the engine's containment split
+                3 => {
+                    if rng.chance(0.3) {
+                        let mut requeue: Vec<Queued> = Vec::new();
+                        for idx in table.active_indices() {
+                            let s = table.release(idx).unwrap();
+                            pager.release(idx);
+                            if s.n_generated > 0 {
+                                // re-prefill covers the full history
+                                requeue.push(Queued {
+                                    id: s.request_id,
+                                    n_prompt: s.pos.min(smax),
+                                    max_new: s.max_new_tokens
+                                        - s.n_generated,
+                                    deadline_op: if s.rng_state == 0 {
+                                        None
+                                    } else {
+                                        Some((u64::MAX - s.rng_state)
+                                            as usize)
+                                    },
+                                });
+                            } else {
+                                terminal(
+                                    &mut terminals,
+                                    s.request_id,
+                                    "failed",
+                                );
+                            }
+                        }
+                        for q in requeue.into_iter().rev() {
+                            if q.max_new == 0 || q.n_prompt >= smax {
+                                // nothing left to decode: the engine
+                                // finishes such a slot at readmission
+                                terminal(&mut terminals, q.id, "done");
+                            } else {
+                                queue.push_front(q);
+                            }
+                        }
+                    }
+                }
+                // cancel a random live request (queued or decoding);
+                // canceling an already-terminal id is a no-op
+                4 => {
+                    if next_id > 0 {
+                        let id = rng.below(next_id as usize) as u64;
+                        if terminals.contains_key(&id) {
+                            // no-op, like Command::Cancel on a finished
+                            // request
+                        } else if let Some(p) =
+                            queue.iter().position(|q| q.id == id)
+                        {
+                            queue.remove(p);
+                            terminal(&mut terminals, id, "canceled");
+                        } else if let Some(idx) =
+                            table.active_indices().into_iter().find(
+                                |&i| {
+                                    table
+                                        .get(i)
+                                        .unwrap()
+                                        .request_id
+                                        == id
+                                },
+                            )
+                        {
+                            table.release(idx);
+                            pager.release(idx);
+                            terminal(&mut terminals, id, "canceled");
+                        }
+                    }
+                }
+                // idle tick (queue waits, nothing decodable)
+                _ => {}
+            }
+        }
+
+        // graceful drain: admit + decode until nothing is queued or
+        // active, with a wedge guard — progress must never stall
+        let mut steps = 0usize;
+        while !queue.is_empty() || table.n_active() > 0 {
+            steps += 1;
+            assert!(
+                steps < 10_000,
+                "drain wedged: {} queued, {} active (case {case})",
+                queue.len(),
+                table.n_active()
+            );
+            if let Some(q) = queue.front() {
+                let reserve = reserve_for(q);
+                if table.n_free() > 0 && pager.can_admit(reserve) {
+                    let q = queue.pop_front().unwrap();
+                    let idx = table
+                        .claim(Slot {
+                            request_id: q.id,
+                            pos: q.n_prompt,
+                            n_prompt: q.n_prompt,
+                            n_generated: 0,
+                            max_new_tokens: q.max_new,
+                            temperature: 0.0,
+                            rng_state: 0,
+                            phase: SlotPhase::Decoding,
+                        })
+                        .unwrap();
+                    pager.admit(idx, q.n_prompt, reserve).unwrap();
+                }
+            }
+            for idx in table.decode_indices() {
+                let (id, done) = {
+                    let s = table.get_mut(idx).unwrap();
+                    pager.grow(idx, s.pos).unwrap();
+                    s.n_generated += 1;
+                    s.pos += 1;
+                    (
+                        s.request_id,
+                        s.n_generated >= s.max_new_tokens
+                            || s.pos >= smax,
+                    )
+                };
+                if done {
+                    table.release(idx);
+                    pager.release(idx);
+                    terminal(&mut terminals, id, "done");
+                }
+            }
+        }
+
+        // exactly one terminal per submitted request, nothing leaked
+        assert_eq!(
+            terminals.len() as u64,
+            submitted,
+            "every request needs exactly one terminal event (case {case})"
+        );
+        assert_eq!(table.n_active(), 0);
+        assert_eq!(pager.used_pages(), 0, "page leak (case {case})");
+        assert_eq!(pager.free_pages(), n_pages);
+    }
+}

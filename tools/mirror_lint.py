@@ -616,6 +616,13 @@ R3_TABLE = [
     ("prefix_cache", "no-prefix-cache", ("env", "AO_PREFIX_CACHE")),
     ("max_batch_tokens", "max-batch-tokens",
      ("env", "AO_MAX_BATCH_TOKENS")),
+    ("fault_retries", "fault-retries", ("env", "AO_FAULT_RETRIES")),
+    ("fault_backoff_ms", "fault-backoff-ms",
+     ("env", "AO_FAULT_BACKOFF_MS")),
+    ("fault_plan", "fault-plan", ("env", "AO_FAULT_PLAN")),
+    ("max_queue", "max-queue", ("env", "AO_MAX_QUEUE")),
+    ("default_deadline_ms", "default-deadline-ms",
+     ("env", "AO_DEFAULT_DEADLINE_MS")),
 ]
 
 
@@ -733,6 +740,62 @@ def r4_check(metrics):
     ]
 
 
+# ---------------- r5_events.rs ----------------
+
+def r5_check_file(path, text, out):
+    markers = parse_markers(path, text)
+
+    def allowed(line):
+        return any(
+            m["cat"] == "drop_send"
+            and (m["file_level"] or m["line"] == line
+                 or m["line"] + 1 == line)
+            for m in markers
+        )
+
+    toks = strip_cfg_test(lex_rust(text))
+    i = 0
+    while i + 2 < len(toks):
+        if not (
+            toks[i][:2] == ("ident", "let")
+            and toks[i + 1][:2] == ("ident", "_")
+            and toks[i + 2][:2] == ("punct", "=")
+        ):
+            i += 1
+            continue
+        j = i + 3
+        is_send = False
+        while j < len(toks) and toks[j][:2] != ("punct", ";"):
+            if (
+                toks[j][:2] == ("ident", "send")
+                and j + 1 < len(toks)
+                and toks[j + 1][:2] == ("punct", "(")
+            ):
+                is_send = True
+            j += 1
+        if is_send and not allowed(toks[i][2]):
+            out.append(("r5-events", path, toks[i][2],
+                        "`let _ = ...send(...)` drops delivery failure"))
+        i = j
+
+
+def r5_check(files):
+    out = []
+    for path, text in files:
+        if path.startswith("rust/src/coordinator/"):
+            r5_check_file(path, text, out)
+    return out
+
+
+def drop_send_census(files):
+    return sum(
+        1
+        for path, text in files
+        for m in parse_markers(path, text)
+        if m["cat"] == "drop_send"
+    )
+
+
 # ---------------- main.rs run_all ----------------
 
 R1_DIRS = ["rust/src/coordinator", "rust/src/runtime"]
@@ -779,6 +842,7 @@ def run_all():
     ]
     out.extend(r3_check(engine, main_rs, bench, lib_rs, docs))
     out.extend(r4_check(load("rust/src/coordinator/metrics.rs")))
+    out.extend(r5_check(scope))
     return out, scope
 
 
@@ -788,3 +852,4 @@ if __name__ == "__main__":
         print(f"{f[1]}:{f[2]}: [{f[0]}] {f[3]}")
     print(f"-- {len(finds)} finding(s)")
     print("-- marker census:", marker_census(scope))
+    print("-- drop_send census:", drop_send_census(scope))
