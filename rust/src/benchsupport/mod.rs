@@ -281,6 +281,96 @@ pub fn bench_default_deadline_ms() -> Result<Option<u64>> {
     )
 }
 
+/// Parse an optional AO_TRACE value (None/""/"0" -> off, "1" -> on).
+pub fn trace_from(var: Option<&str>) -> Result<bool> {
+    match var {
+        None | Some("") | Some("0") => Ok(false),
+        Some("1") => Ok(true),
+        Some(other) => anyhow::bail!(
+            "AO_TRACE: unknown value '{other}' (valid values: 0, 1)"
+        ),
+    }
+}
+
+/// Serving-trace toggle benches serve with: AO_TRACE (off default).
+pub fn bench_trace() -> Result<bool> {
+    trace_from(crate::util::env::var("AO_TRACE").as_deref())
+}
+
+/// Parse an optional AO_TRACE_CAPACITY value (None/"" -> 0, meaning the
+/// engine default of `trace::DEFAULT_CAPACITY` events).
+pub fn trace_capacity_from(var: Option<&str>) -> Result<usize> {
+    match var {
+        None | Some("") => Ok(0),
+        Some(v) => v.parse::<usize>().map_err(|_| {
+            anyhow::anyhow!(
+                "AO_TRACE_CAPACITY: '{v}' is not an event count (unset \
+                 or empty keeps the engine default)"
+            )
+        }),
+    }
+}
+
+/// Trace ring capacity benches serve with: AO_TRACE_CAPACITY.
+pub fn bench_trace_capacity() -> Result<usize> {
+    trace_capacity_from(crate::util::env::var("AO_TRACE_CAPACITY").as_deref())
+}
+
+/// Parse an optional AO_TRACE_OUT value (None/"" -> no dump). The value
+/// is a path stem: the engine writes `<stem>.jsonl` and
+/// `<stem>.chrome.json` when the serve loop exits, and tracing is
+/// implied even without AO_TRACE=1.
+pub fn trace_out_from(var: Option<&str>) -> Option<PathBuf> {
+    match var {
+        None | Some("") => None,
+        Some(v) => Some(PathBuf::from(v)),
+    }
+}
+
+/// Trace dump stem benches serve with: AO_TRACE_OUT (off default).
+pub fn bench_trace_out() -> Option<PathBuf> {
+    trace_out_from(crate::util::env::var("AO_TRACE_OUT").as_deref())
+}
+
+/// Parse an optional AO_FAULT_JITTER_MS value (None/"" -> 0: no jitter,
+/// chaos replays stay bit-identical).
+pub fn fault_jitter_ms_from(var: Option<&str>) -> Result<u64> {
+    match var {
+        None | Some("") => Ok(0),
+        Some(v) => v.parse::<u64>().map_err(|_| {
+            anyhow::anyhow!(
+                "AO_FAULT_JITTER_MS: '{v}' is not a duration in \
+                 milliseconds (unset or empty disables jitter)"
+            )
+        }),
+    }
+}
+
+/// Retry jitter cap benches serve with: AO_FAULT_JITTER_MS (off default).
+pub fn bench_fault_jitter_ms() -> Result<u64> {
+    fault_jitter_ms_from(
+        crate::util::env::var("AO_FAULT_JITTER_MS").as_deref(),
+    )
+}
+
+/// Parse an optional AO_BOUNDED_STATS value (None/""/"0" -> off: exact
+/// per-sample latency vectors plus histograms; "1" -> histogram-only).
+pub fn bounded_stats_from(var: Option<&str>) -> Result<bool> {
+    match var {
+        None | Some("") | Some("0") => Ok(false),
+        Some("1") => Ok(true),
+        Some(other) => anyhow::bail!(
+            "AO_BOUNDED_STATS: unknown value '{other}' (valid values: 0, 1)"
+        ),
+    }
+}
+
+/// Bounded-stats toggle benches serve with: AO_BOUNDED_STATS (off
+/// default).
+pub fn bench_bounded_stats() -> Result<bool> {
+    bounded_stats_from(crate::util::env::var("AO_BOUNDED_STATS").as_deref())
+}
+
 /// Run a full serving workload in-process; returns engine metrics
 /// (including host↔device transfer bytes — set AO_BENCH_REPORT=1 to
 /// print the full engine report line per run).
@@ -323,6 +413,30 @@ pub fn serve_workload_sched(
     prefix_cache: bool,
     max_batch_tokens: Option<usize>,
 ) -> Result<MetricsCollector> {
+    serve_workload_traced(
+        model,
+        scheme,
+        ckpt_path,
+        spec,
+        prefix_cache,
+        max_batch_tokens,
+        bench_trace_out(),
+    )
+}
+
+/// `serve_workload_sched` with an explicit trace dump stem (the table1
+/// bench persists one traced run's timeline as a CI artifact;
+/// `AO_TRACE_OUT` is the env route for every other bench run).
+#[allow(clippy::too_many_arguments)]
+pub fn serve_workload_traced(
+    model: &str,
+    scheme: &str,
+    ckpt_path: &Path,
+    spec: &WorkloadSpec,
+    prefix_cache: bool,
+    max_batch_tokens: Option<usize>,
+    trace_out: Option<PathBuf>,
+) -> Result<MetricsCollector> {
     let reqs = workload::generate(spec);
     let tok = Tokenizer::byte_level();
     let (handle, join) = engine::spawn(EngineConfig {
@@ -355,6 +469,16 @@ pub fn serve_workload_sched(
         // deadline on every request that lacks one
         max_queue: bench_max_queue()?,
         default_deadline_ms: bench_default_deadline_ms()?,
+        // AO_TRACE / AO_TRACE_CAPACITY / AO_TRACE_OUT record (and dump)
+        // the per-step + lifecycle trace from any bench run (a dump
+        // stem implies tracing, mirroring cmd_serve)
+        trace: bench_trace()?,
+        trace_capacity: bench_trace_capacity()?,
+        trace_out,
+        // AO_FAULT_JITTER_MS adds deterministic retry jitter;
+        // AO_BOUNDED_STATS flips latency accounting to histogram-only
+        fault_jitter_ms: bench_fault_jitter_ms()?,
+        bounded_stats: bench_bounded_stats()?,
     });
     let mut rxs = Vec::new();
     for r in &reqs {
@@ -564,5 +688,44 @@ mod tests {
             default_deadline_ms_from(Some("soon")).unwrap_err()
         );
         assert!(e.contains("AO_DEFAULT_DEADLINE_MS"), "{e}");
+    }
+
+    #[test]
+    fn trace_env_contract() {
+        assert!(!trace_from(None).unwrap());
+        assert!(!trace_from(Some("")).unwrap());
+        assert!(!trace_from(Some("0")).unwrap());
+        assert!(trace_from(Some("1")).unwrap());
+        let e = format!("{:#}", trace_from(Some("yes")).unwrap_err());
+        assert!(e.contains("AO_TRACE"), "{e}");
+        assert_eq!(trace_capacity_from(None).unwrap(), 0);
+        assert_eq!(trace_capacity_from(Some("")).unwrap(), 0);
+        assert_eq!(trace_capacity_from(Some("512")).unwrap(), 512);
+        let e =
+            format!("{:#}", trace_capacity_from(Some("big")).unwrap_err());
+        assert!(e.contains("AO_TRACE_CAPACITY"), "{e}");
+        assert_eq!(trace_out_from(None), None);
+        assert_eq!(trace_out_from(Some("")), None);
+        assert_eq!(
+            trace_out_from(Some("runs/trace")),
+            Some(PathBuf::from("runs/trace"))
+        );
+    }
+
+    #[test]
+    fn jitter_and_bounded_stats_env_contract() {
+        assert_eq!(fault_jitter_ms_from(None).unwrap(), 0);
+        assert_eq!(fault_jitter_ms_from(Some("")).unwrap(), 0);
+        assert_eq!(fault_jitter_ms_from(Some("7")).unwrap(), 7);
+        let e =
+            format!("{:#}", fault_jitter_ms_from(Some("x")).unwrap_err());
+        assert!(e.contains("AO_FAULT_JITTER_MS"), "{e}");
+        assert!(!bounded_stats_from(None).unwrap());
+        assert!(!bounded_stats_from(Some("")).unwrap());
+        assert!(!bounded_stats_from(Some("0")).unwrap());
+        assert!(bounded_stats_from(Some("1")).unwrap());
+        let e =
+            format!("{:#}", bounded_stats_from(Some("on")).unwrap_err());
+        assert!(e.contains("AO_BOUNDED_STATS"), "{e}");
     }
 }

@@ -19,6 +19,9 @@
 //! * **R5 `r5-events`** — no `let _ = ...send(...)` on event channels in
 //!   `rust/src/coordinator/` non-test code; a deliberate drop carries a
 //!   reviewed `// ao-lint: allow(drop_send) -- <reason>` marker.
+//! * **R6 `r6-trace`** — every `TraceEvent` variant must be constructed
+//!   somewhere in coordinator/runtime code (outside `trace.rs`) and be
+//!   reachable from the trace dump path (`dump_jsonl`/`dump_chrome`).
 //!
 //! Usage: `cargo run --bin ao-lint [-- --json] [-- --root <dir>]`. Paths
 //! are resolved from `CARGO_MANIFEST_DIR` (the repo root), not the CWD,
@@ -32,6 +35,7 @@ mod r2_contract;
 mod r3_config;
 mod r4_metrics;
 mod r5_events;
+mod r6_trace;
 
 use std::path::{Path, PathBuf};
 
@@ -127,6 +131,9 @@ pub fn run_all(root: &Path) -> Result<Vec<Finding>, String> {
     out.extend(r4_metrics::check(&metrics));
 
     out.extend(r5_events::check(&scope));
+
+    let trace = load(root, "rust/src/coordinator/trace.rs")?;
+    out.extend(r6_trace::check(&trace, &scope));
     Ok(out)
 }
 
@@ -167,7 +174,7 @@ fn main() {
                     println!("{}", f.render());
                 }
                 if finds.is_empty() {
-                    eprintln!("ao-lint: clean (R1 panics, R2 contract, R3 config, R4 metrics, R5 events)");
+                    eprintln!("ao-lint: clean (R1 panics, R2 contract, R3 config, R4 metrics, R5 events, R6 trace)");
                 } else {
                     eprintln!("ao-lint: {} finding(s)", finds.len());
                 }
@@ -221,11 +228,11 @@ mod tests {
     fn drop_send_marker_census_is_exact() {
         let scope = r1_scope(&root()).expect("scope");
         let census = r5_events::drop_send_census(&scope);
-        // - engine.rs: 15 (terminal Token/Done/Error deliveries, report
-        //   and drain acks — receiver gone means the client hung up and
-        //   the cancel path reclaims the slot)
+        // - engine.rs: 16 (terminal Token/Done/Error deliveries, report,
+        //   drain and stats acks — receiver gone means the client hung up
+        //   and the cancel path reclaims the slot)
         // - batcher.rs: 4 (admission-rejection error deliveries)
-        assert_eq!(census, 19, "update this census when adding/removing drop_send markers");
+        assert_eq!(census, 20, "update this census when adding/removing drop_send markers");
     }
 
     /// Acceptance probe: a bare unwrap re-added to engine.rs is caught.

@@ -92,6 +92,27 @@ pub const TABLE: &[ConfigRule] = &[
         flag: "default-deadline-ms",
         binding: Binding::Env("AO_DEFAULT_DEADLINE_MS"),
     },
+    ConfigRule { field: "trace", flag: "trace", binding: Binding::Env("AO_TRACE") },
+    ConfigRule {
+        field: "trace_capacity",
+        flag: "trace-capacity",
+        binding: Binding::Env("AO_TRACE_CAPACITY"),
+    },
+    ConfigRule {
+        field: "trace_out",
+        flag: "trace-out",
+        binding: Binding::Env("AO_TRACE_OUT"),
+    },
+    ConfigRule {
+        field: "fault_jitter_ms",
+        flag: "fault-jitter-ms",
+        binding: Binding::Env("AO_FAULT_JITTER_MS"),
+    },
+    ConfigRule {
+        field: "bounded_stats",
+        flag: "bounded-stats",
+        binding: Binding::Env("AO_BOUNDED_STATS"),
+    },
 ];
 
 fn push(out: &mut Vec<Finding>, file: &str, line: usize, message: String) {

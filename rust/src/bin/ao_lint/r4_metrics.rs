@@ -15,8 +15,9 @@ use crate::SourceFile;
 
 /// Bodies of every `fn` in the file, keyed by name. Later definitions of
 /// the same name overwrite earlier ones; `report` is unique in
-/// metrics.rs, which is all the traversal roots on.
-fn method_bodies(toks: &[Tok]) -> BTreeMap<String, Vec<Tok>> {
+/// metrics.rs, which is all the traversal roots on. R6 reuses this for
+/// its dump-path walk over trace.rs.
+pub fn method_bodies(toks: &[Tok]) -> BTreeMap<String, Vec<Tok>> {
     let mut out = BTreeMap::new();
     let mut i = 0;
     while i + 1 < toks.len() {

@@ -1,0 +1,257 @@
+//! R6 — trace event coverage.
+//!
+//! Every `TraceEvent` variant must be live at both ends of the
+//! telemetry pipe:
+//!
+//! * **constructed** — a `TraceEvent::Variant` expression somewhere in
+//!   the serving code (the R1 scope: `rust/src/coordinator/` +
+//!   `rust/src/runtime/`, non-test), excluding `trace.rs` itself. A
+//!   variant nothing emits is dead telemetry that readers of
+//!   `docs/observability.md` will wait for forever.
+//! * **rendered** — matched by a function reachable from the dump
+//!   roots (`dump_jsonl`, `dump_chrome`) inside `trace.rs`, walking
+//!   `ident(` call edges like R4 walks `report()`. A variant the dumps
+//!   never render silently vanishes from the JSONL and Chrome-trace
+//!   artifacts.
+//!
+//! The rule reads the enum itself, so adding a variant without wiring
+//! both ends fails the lint rather than shipping a hole in the trace.
+
+use std::collections::BTreeSet;
+
+use crate::findings::Finding;
+use crate::lexer::{lex_rust, strip_cfg_test, Kind, Tok};
+use crate::r4_metrics::method_bodies;
+use crate::SourceFile;
+
+/// Variant names (with lines) of `enum <name>`: idents at brace depth 1
+/// directly after the opening `{` or a `,` (trace.rs has no variant
+/// attributes, and doc comments are gone after lexing).
+pub fn enum_variants(toks: &[Tok], name: &str) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + 2 < toks.len() {
+        if toks[i].is_ident("enum") && toks[i + 1].is_ident(name) {
+            let mut j = i + 2;
+            while j < toks.len() && !toks[j].is_punct('{') {
+                j += 1;
+            }
+            let mut depth = 0i32;
+            let mut at_head = false;
+            while j < toks.len() {
+                if toks[j].is_punct('{') {
+                    depth += 1;
+                    if depth == 1 {
+                        at_head = true;
+                        j += 1;
+                        continue;
+                    }
+                }
+                if toks[j].is_punct('}') {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                if depth == 1 {
+                    if at_head && toks[j].kind == Kind::Ident {
+                        out.push((toks[j].text.clone(), toks[j].line));
+                    }
+                    at_head = toks[j].is_punct(',');
+                }
+                j += 1;
+            }
+            break;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// `TraceEvent :: Variant` occurrences in a token stream.
+fn variant_mentions(toks: &[Tok]) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for k in 0..toks.len() {
+        if toks[k].is_ident("TraceEvent")
+            && toks.get(k + 1).is_some_and(|t| t.is_punct(':'))
+            && toks.get(k + 2).is_some_and(|t| t.is_punct(':'))
+            && toks.get(k + 3).is_some_and(|t| t.kind == Kind::Ident)
+        {
+            out.insert(toks[k + 3].text.clone());
+        }
+    }
+    out
+}
+
+fn push(out: &mut Vec<Finding>, file: &str, line: usize, message: String) {
+    out.push(Finding { rule: "r6-trace", file: file.to_string(), line, message });
+}
+
+pub fn check(trace: &SourceFile, scope: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let trace_toks = strip_cfg_test(&lex_rust(&trace.text));
+    let variants = enum_variants(&trace_toks, "TraceEvent");
+
+    // (a) construction sites: the serving scope minus trace.rs itself
+    // (its helpers and doc examples must not count as "the engine
+    // emits this").
+    let mut constructed: BTreeSet<String> = BTreeSet::new();
+    for f in scope {
+        if f.path == trace.path {
+            continue;
+        }
+        let toks = strip_cfg_test(&lex_rust(&f.text));
+        constructed.extend(variant_mentions(&toks));
+    }
+
+    // (b) render reachability: walk `ident(` call edges from the dump
+    // roots and collect every `TraceEvent::Variant` those bodies match.
+    let methods = method_bodies(&trace_toks);
+    let mut rendered: BTreeSet<String> = BTreeSet::new();
+    let mut seen: BTreeSet<String> = BTreeSet::new();
+    let mut stack = vec!["dump_jsonl".to_string(), "dump_chrome".to_string()];
+    while let Some(name) = stack.pop() {
+        if !seen.insert(name.clone()) {
+            continue;
+        }
+        let Some(body) = methods.get(&name) else {
+            continue;
+        };
+        rendered.extend(variant_mentions(body));
+        for (k, t) in body.iter().enumerate() {
+            if t.kind == Kind::Ident
+                && body.get(k + 1).is_some_and(|n| n.is_punct('('))
+            {
+                stack.push(t.text.clone());
+            }
+        }
+    }
+
+    for (v, line) in &variants {
+        if !constructed.contains(v) {
+            push(
+                &mut out,
+                &trace.path,
+                *line,
+                format!(
+                    "TraceEvent variant '{v}' is never constructed in \
+                     coordinator/runtime code: dead telemetry — emit it or \
+                     drop it"
+                ),
+            );
+        }
+        if !rendered.contains(v) {
+            push(
+                &mut out,
+                &trace.path,
+                *line,
+                format!(
+                    "TraceEvent variant '{v}' is unreachable from the dump \
+                     path (dump_jsonl/dump_chrome): it would vanish from \
+                     the JSONL and Chrome artifacts"
+                ),
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sf(path: &str, text: &str) -> SourceFile {
+        SourceFile { path: path.to_string(), text: text.to_string() }
+    }
+
+    fn trace_fixture() -> SourceFile {
+        sf(
+            "rust/src/coordinator/trace.rs",
+            "pub enum TraceEvent {
+    Step { t_us: u64 },
+    Finished { id: u64 },
+}
+impl TraceBuffer {
+    pub fn dump_jsonl(&self) -> String {
+        let mut out = String::new();
+        for ev in self.events() {
+            out.push_str(&event_json(ev));
+        }
+        out
+    }
+    pub fn dump_chrome(&self) -> String {
+        event_json(&TraceEvent::Step { t_us: 0 })
+    }
+}
+fn event_json(ev: &TraceEvent) -> String {
+    match ev {
+        TraceEvent::Step { .. } => row(),
+        TraceEvent::Finished { .. } => row(),
+    }
+}
+fn unrelated() {
+    // not reachable from the dumps
+    let _ = TraceEvent::Finished { id: 0 };
+}
+",
+        )
+    }
+
+    fn engine_fixture() -> SourceFile {
+        sf(
+            "rust/src/coordinator/engine.rs",
+            "fn step(&mut self) {
+    tr.record(TraceEvent::Step { t_us: 1 });
+    tr.record(TraceEvent::Finished { id: 7 });
+}
+",
+        )
+    }
+
+    #[test]
+    fn covered_variants_pass() {
+        let trace = trace_fixture();
+        let engine = engine_fixture();
+        let finds = check(&trace, &[engine]);
+        assert!(finds.is_empty(), "{finds:?}");
+    }
+
+    #[test]
+    fn unconstructed_variant_fails() {
+        let trace = trace_fixture();
+        // the engine only ever emits Step; trace.rs's own mention of
+        // Finished (in `unrelated`) must NOT count as construction
+        let engine = sf(
+            "rust/src/coordinator/engine.rs",
+            "fn step(&mut self) { tr.record(TraceEvent::Step { t_us: 1 }); }\n",
+        );
+        let finds = check(&trace, &[trace_fixture(), engine]);
+        assert_eq!(finds.len(), 1, "{finds:?}");
+        assert!(finds[0].message.contains("'Finished'"), "{finds:?}");
+        assert!(finds[0].message.contains("never constructed"), "{finds:?}");
+    }
+
+    #[test]
+    fn unrendered_variant_fails() {
+        // event_json stops matching Finished -> unreachable from dumps
+        let trace = sf(
+            "rust/src/coordinator/trace.rs",
+            &trace_fixture()
+                .text
+                .replace("        TraceEvent::Finished { .. } => row(),\n", ""),
+        );
+        let engine = engine_fixture();
+        let finds = check(&trace, &[engine]);
+        assert_eq!(finds.len(), 1, "{finds:?}");
+        assert!(finds[0].message.contains("'Finished'"), "{finds:?}");
+        assert!(finds[0].message.contains("dump path"), "{finds:?}");
+    }
+
+    #[test]
+    fn enum_variants_sees_every_arm() {
+        let toks = lex_rust(&trace_fixture().text);
+        let vars: Vec<String> =
+            enum_variants(&toks, "TraceEvent").into_iter().map(|(v, _)| v).collect();
+        assert_eq!(vars, ["Step", "Finished"]);
+    }
+}

@@ -40,6 +40,10 @@ pub enum ChunkTake {
     Idle,
 }
 
+/// Bound on `Batcher::rejected_ids` between drains, so an embedded
+/// caller that never drains cannot leak memory through it.
+const REJECTED_LOG_CAP: usize = 1024;
+
 pub struct Batcher {
     pub queue: VecDeque<SubmitReq>,
     /// available prefill sequence buckets, ascending
@@ -47,12 +51,28 @@ pub struct Batcher {
     /// admission bound: `push_bounded` rejects past this depth. None =
     /// unbounded (tests and embedded callers that own their backpressure).
     pub max_queue: Option<usize>,
+    /// ids the head-reject paths answered with an error since the last
+    /// drain — the engine turns these into `Finished` trace events so a
+    /// rejected request's lifecycle span still terminates
+    pub rejected_ids: Vec<u64>,
 }
 
 impl Batcher {
     pub fn new(mut buckets: Vec<usize>) -> Batcher {
         buckets.sort_unstable();
-        Batcher { queue: VecDeque::new(), buckets, max_queue: None }
+        Batcher {
+            queue: VecDeque::new(),
+            buckets,
+            max_queue: None,
+            rejected_ids: Vec::new(),
+        }
+    }
+
+    /// Remember a head-rejected id for the engine's trace (bounded).
+    fn note_reject(&mut self, id: u64) {
+        if self.rejected_ids.len() < REJECTED_LOG_CAP {
+            self.rejected_ids.push(id);
+        }
     }
 
     pub fn push(&mut self, mut req: SubmitReq) {
@@ -130,6 +150,7 @@ impl Batcher {
             let Some(req) = self.queue.pop_front() else {
                 return PrefillTake::Idle;
             };
+            self.note_reject(req.id);
             // ao-lint: allow(drop_send) -- reject of a hung-up caller
             let _ = req.tx.send(super::request::Event::Error(
                 ErrorInfo::failed(
@@ -143,6 +164,7 @@ impl Batcher {
             let Some(req) = self.queue.pop_front() else {
                 return PrefillTake::Idle;
             };
+            self.note_reject(req.id);
             // ao-lint: allow(drop_send) -- reject of a hung-up caller
             let _ = req.tx.send(super::request::Event::Error(
                 ErrorInfo::failed(format!(
@@ -194,6 +216,7 @@ impl Batcher {
             let Some(req) = self.queue.pop_front() else {
                 return ChunkTake::Idle;
             };
+            self.note_reject(req.id);
             // ao-lint: allow(drop_send) -- reject of a hung-up caller
             let _ = req.tx.send(super::request::Event::Error(
                 ErrorInfo::failed(
@@ -206,6 +229,7 @@ impl Batcher {
             let Some(req) = self.queue.pop_front() else {
                 return ChunkTake::Idle;
             };
+            self.note_reject(req.id);
             // ao-lint: allow(drop_send) -- reject of a hung-up caller
             let _ = req.tx.send(super::request::Event::Error(
                 ErrorInfo::failed(format!(
@@ -549,6 +573,26 @@ mod tests {
             _ => panic!("expected error event"),
         }
         assert!(matches!(b.take_chunk(128), ChunkTake::Head(_)));
+    }
+
+    #[test]
+    fn head_rejects_are_noted_for_the_trace() {
+        // every head-reject path records the id so the engine can close
+        // the request's lifecycle span; draining resets the log
+        let mut b = Batcher::new(vec![32]);
+        let (mut bad, _rx) = req(0);
+        bad.id = 7;
+        b.push(bad);
+        assert!(matches!(
+            b.take_prefill_group(4),
+            PrefillTake::HeadRejected
+        ));
+        let (mut big, _rx2) = req(100);
+        big.id = 8;
+        b.push(big);
+        assert!(matches!(b.take_chunk(64), ChunkTake::HeadRejected));
+        assert_eq!(std::mem::take(&mut b.rejected_ids), vec![7, 8]);
+        assert!(b.rejected_ids.is_empty());
     }
 
     #[test]

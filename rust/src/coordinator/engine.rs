@@ -102,6 +102,7 @@ use super::scheduler::{
     chunk_len, effective_budget, pick_preemption_victim, suffix_bucket,
     StepBudget,
 };
+use super::trace::{StepKind, TraceBuffer, TraceEvent};
 use crate::ckpt::Checkpoint;
 use crate::runtime::artifact::{ArtifactSpec, IoSpec};
 use crate::runtime::faults::{FaultInjector, FaultPolicy};
@@ -235,12 +236,37 @@ pub struct EngineConfig {
     /// env AO_DEFAULT_DEADLINE_MS), applied at submit when the request
     /// carries none. None = no default deadline
     pub default_deadline_ms: Option<u64>,
+    /// per-step trace timeline + request lifecycle spans (CLI `--trace`,
+    /// bench env AO_TRACE): record structured events into a bounded ring
+    /// (`coordinator::trace`) for JSONL / Chrome-trace dumps
+    pub trace: bool,
+    /// trace ring capacity in events (CLI `--trace-capacity`, bench env
+    /// AO_TRACE_CAPACITY); 0 = the default (`trace::DEFAULT_CAPACITY`).
+    /// The ring drops the oldest events past this bound
+    pub trace_capacity: usize,
+    /// dump the trace at end of serve to `<stem>.jsonl` (one event per
+    /// line) and `<stem>.chrome.json` (Chrome trace-event array,
+    /// Perfetto-loadable) (CLI `--trace-out`, bench env AO_TRACE_OUT);
+    /// implies tracing even without `trace`
+    pub trace_out: Option<PathBuf>,
+    /// cap on deterministic per-retry jitter added to transient-fault
+    /// backoff, in ms (CLI `--fault-jitter-ms`, bench env
+    /// AO_FAULT_JITTER_MS); 0 = no jitter, replays stay bit-identical
+    pub fault_jitter_ms: u64,
+    /// bounded-memory latency accounting (CLI `--bounded-stats`, bench
+    /// env AO_BOUNDED_STATS): percentiles come from fixed log-bucket
+    /// streaming histograms and the exact per-sample vectors stay empty,
+    /// so steady-state allocation is independent of request count
+    pub bounded_stats: bool,
 }
 
 pub enum Command {
     Submit(SubmitReq),
     /// flush metrics: respond with the formatted report
     Report(Sender<String>),
+    /// flush metrics: respond with the machine-readable JSON snapshot
+    /// (same counters as `Report`, rendered by `metrics::report_json`)
+    Stats(Sender<String>),
     /// cancel one request by id, wherever it is (queued or decoding)
     Cancel(u64),
     /// graceful drain: stop admitting, finish in-flight work, respond
@@ -266,6 +292,17 @@ impl EngineHandle {
         let (tx, rx) = channel();
         self.tx
             .send(Command::Report(tx))
+            .map_err(|_| anyhow!("engine thread is gone"))?;
+        Ok(rx.recv()?)
+    }
+
+    /// Live introspection: one JSON object with the same counters as
+    /// `report()`, for dashboards and scripts (`{"op":"stats"}` on the
+    /// TCP front-end). See docs/observability.md for the schema.
+    pub fn stats(&self) -> Result<String> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Command::Stats(tx))
             .map_err(|_| anyhow!("engine thread is gone"))?;
         Ok(rx.recv()?)
     }
@@ -493,6 +530,28 @@ pub struct Engine {
     _rng: Rng,
     /// non-XLA engine overhead accounting (perf)
     pub overhead_s: f64,
+    /// bounded event ring — present exactly when tracing is enabled
+    /// (`EngineConfig::trace` or `trace_out`)
+    trace: Option<TraceBuffer>,
+    /// serve-loop step counter (trace `Step` records)
+    step_index: u64,
+    /// tokens charged by the current serve step (decode rows + prefill
+    /// tokens), reset per iteration; feeds the `Step` trace record
+    step_tokens: usize,
+}
+
+/// Counter snapshot taken before a serve step; the step's trace record
+/// is the delta against it.
+struct StepSnap {
+    decode_steps: usize,
+    prefill_calls: usize,
+    preemptions: usize,
+    prefix_hits: usize,
+    active_rows: usize,
+    retried: u64,
+    h2d_bytes: u64,
+    d2h_bytes: u64,
+    started: Instant,
 }
 
 impl Engine {
@@ -888,8 +947,20 @@ impl Engine {
             FaultPolicy {
                 retries: cfg.fault_retries,
                 backoff_ms: cfg.fault_backoff_ms,
+                jitter_ms: cfg.fault_jitter_ms,
             },
         );
+
+        // `--trace-out` implies tracing: dumping an empty ring because
+        // the user forgot `--trace` would be a silent foot-gun
+        let trace = (cfg.trace || cfg.trace_out.is_some()).then(|| {
+            TraceBuffer::new(if cfg.trace_capacity == 0 {
+                super::trace::DEFAULT_CAPACITY
+            } else {
+                cfg.trace_capacity
+            })
+        });
+        metrics.hist_only = cfg.bounded_stats;
 
         Ok(Engine {
             runtime,
@@ -918,6 +989,9 @@ impl Engine {
             metrics,
             _rng: Rng::new(0xE1_61_4E),
             overhead_s: 0.0,
+            trace,
+            step_index: 0,
+            step_tokens: 0,
             cfg,
         })
     }
@@ -971,6 +1045,7 @@ impl Engine {
             }
             // expired work is cut before a step is spent on it
             self.sweep_deadlines();
+            let snap = self.trace_snap();
             let step = if self.sched.is_some() {
                 // iteration-level scheduler: one budgeted step mixing
                 // decode rows with prefill chunks
@@ -984,6 +1059,7 @@ impl Engine {
                     other => other,
                 }
             };
+            self.trace_step(snap);
             // a failed step (transient retries exhausted, or a fatal
             // execution error) is contained to the slots it hit — the
             // engine keeps serving; only a failed cache rebuild is fatal
@@ -994,7 +1070,127 @@ impl Engine {
         self.finish_drain();
         self.sync_transfer_metrics();
         self.metrics.finish();
+        self.dump_trace();
         Ok(())
+    }
+
+    /// Counter snapshot before one serve step (`None` when untraced, so
+    /// the hot loop pays a single branch).
+    fn trace_snap(&mut self) -> Option<StepSnap> {
+        self.trace.as_ref()?;
+        self.step_tokens = 0;
+        let xfer = self.runtime.transfer_stats();
+        Some(StepSnap {
+            decode_steps: self.metrics.decode_steps,
+            prefill_calls: self.metrics.prefill_calls,
+            preemptions: self.metrics.sched_preemptions,
+            prefix_hits: self.metrics.prefix_hits,
+            active_rows: self.metrics.active_slot_steps,
+            retried: self.runtime.fault_stats().retried,
+            h2d_bytes: xfer.h2d_bytes,
+            d2h_bytes: xfer.d2h_bytes,
+            started: Instant::now(),
+        })
+    }
+
+    /// Record the step's trace events from the deltas against `snap`:
+    /// one `Retry` per transient-fault retry the runtime slept for, and
+    /// one `Step` when the step actually ran work (idle iterations —
+    /// command drains with nothing admissible — leave no record).
+    fn trace_step(&mut self, snap: Option<StepSnap>) {
+        // drained even when untraced: the batcher's reject log must not
+        // sit full between traced runs of an embedded engine
+        let rejected = std::mem::take(&mut self.batcher.rejected_ids);
+        let Some(snap) = snap else { return };
+        let retries = self.runtime.drain_retries();
+        let decoded = self.metrics.decode_steps > snap.decode_steps;
+        let prefilled = self.metrics.prefill_calls > snap.prefill_calls;
+        let rows =
+            self.metrics.active_slot_steps.saturating_sub(snap.active_rows);
+        let xfer = self.runtime.transfer_stats();
+        let retried = self.runtime.fault_stats().retried - snap.retried;
+        let preemptions =
+            self.metrics.sched_preemptions.saturating_sub(snap.preemptions);
+        let prefix_hits =
+            self.metrics.prefix_hits.saturating_sub(snap.prefix_hits);
+        let pages_used =
+            self.pager.as_ref().map(|p| p.used_pages()).unwrap_or(0);
+        let (tokens, step) = (self.step_tokens, self.step_index);
+        let exec_us =
+            u64::try_from(snap.started.elapsed().as_micros()).unwrap_or(0);
+        let Some(tr) = self.trace.as_mut() else { return };
+        // a head-rejected request was answered with an error mid-step:
+        // close its span so every opened span reaches a terminal
+        for id in rejected {
+            let t = tr.now_us();
+            tr.record(TraceEvent::Finished {
+                id,
+                t_us: t,
+                outcome: "rejected".to_string(),
+            });
+        }
+        for r in retries {
+            let t = tr.now_us();
+            tr.record(TraceEvent::Retry {
+                t_us: t,
+                site: r.site.to_string(),
+                tag: r.tag,
+                attempt: r.attempt,
+                delay_ms: r.backoff_ms.saturating_add(r.jitter_ms),
+            });
+        }
+        if !decoded && !prefilled {
+            return;
+        }
+        let kind = match (decoded, prefilled) {
+            (true, true) => StepKind::Mixed,
+            (true, false) => StepKind::Decode,
+            _ => StepKind::Prefill,
+        };
+        // stamp the step at its *start* so Chrome "X" slices span
+        // [t_us, t_us + exec_us] without overlapping the next step
+        let t_us = tr.now_us().saturating_sub(exec_us);
+        tr.record(TraceEvent::Step {
+            step,
+            t_us,
+            kind,
+            rows,
+            tokens,
+            exec_us,
+            h2d_bytes: xfer.h2d_bytes - snap.h2d_bytes,
+            d2h_bytes: xfer.d2h_bytes - snap.d2h_bytes,
+            retries: retried,
+            preemptions: preemptions as u64,
+            prefix_hits: prefix_hits as u64,
+            pages_used,
+        });
+        self.step_index += 1;
+    }
+
+    /// Record one lifecycle event, stamping it with the ring's clock.
+    /// The closure builds the event from the timestamp, so call sites
+    /// stay one-liners and untraced runs pay only a `None` check.
+    fn trace_event(&mut self, f: impl FnOnce(u64) -> TraceEvent) {
+        if let Some(tr) = self.trace.as_mut() {
+            let t = tr.now_us();
+            tr.record(f(t));
+        }
+    }
+
+    /// End-of-serve dump: `<stem>.jsonl` + `<stem>.chrome.json` when
+    /// `--trace-out` was given. Dump failures are reported, never fatal
+    /// — the run's results matter more than its telemetry.
+    fn dump_trace(&mut self) {
+        let Some(stem) = self.cfg.trace_out.clone() else { return };
+        let Some(tr) = self.trace.as_ref() else { return };
+        let jsonl = stem.with_extension("jsonl");
+        let chrome = stem.with_extension("chrome.json");
+        if let Err(err) = std::fs::write(&jsonl, tr.dump_jsonl()) {
+            crate::warn!("trace dump: writing {}: {err}", jsonl.display());
+        }
+        if let Err(err) = std::fs::write(&chrome, tr.dump_chrome()) {
+            crate::warn!("trace dump: writing {}: {err}", chrome.display());
+        }
     }
 
     fn handle(&mut self, cmd: Command, shutting_down: &mut bool) -> bool {
@@ -1007,6 +1203,13 @@ impl Engine {
                 self.sync_transfer_metrics();
                 // ao-lint: allow(drop_send) -- report caller may be gone
                 let _ = tx.send(self.metrics.report("engine"));
+                true
+            }
+            Command::Stats(tx) => {
+                self.sync_transfer_metrics();
+                // ao-lint: allow(drop_send) -- stats caller may be gone
+                let _ =
+                    tx.send(self.metrics.report_json("engine").to_string());
                 true
             }
             Command::Cancel(id) => {
@@ -1045,6 +1248,7 @@ impl Engine {
                 .default_deadline_ms
                 .map(|ms| req.submitted_at + Duration::from_millis(ms));
         }
+        let (id, n_prompt) = (req.id, req.prompt_tokens.len());
         if let Some(rejected) = self.batcher.push_bounded(req) {
             self.metrics.rejected_overload += 1;
             self.metrics.record_rejected();
@@ -1056,6 +1260,14 @@ impl Engine {
                     self.batcher.pending()
                 ),
             )));
+        } else {
+            // a span opens only for requests that actually entered the
+            // queue: pre-admission rejections leave no trace
+            self.trace_event(|t| TraceEvent::Enqueued {
+                id,
+                t_us: t,
+                n_prompt,
+            });
         }
     }
 
@@ -1071,6 +1283,11 @@ impl Engine {
         {
             if let Some(req) = self.batcher.queue.remove(qpos) {
                 self.metrics.n_canceled += 1;
+                self.trace_event(|t| TraceEvent::Finished {
+                    id,
+                    t_us: t,
+                    outcome: "canceled".to_string(),
+                });
                 // ao-lint: allow(drop_send) -- canceler is often gone
                 let _ = req.tx.send(Event::Error(ErrorInfo::new(
                     ErrorKind::Canceled,
@@ -1093,6 +1310,11 @@ impl Engine {
         self.drain_page_evictions();
         if let Some(req) = self.requests[idx].take() {
             self.metrics.n_canceled += 1;
+            self.trace_event(|t| TraceEvent::Finished {
+                id,
+                t_us: t,
+                outcome: "canceled".to_string(),
+            });
             // ao-lint: allow(drop_send) -- canceler is often gone
             let _ = req.tx.send(Event::Error(ErrorInfo::new(
                 ErrorKind::Canceled,
@@ -1121,6 +1343,11 @@ impl Engine {
                     Some(d) if d <= now => {
                         self.metrics.rejected_deadline += 1;
                         self.metrics.record_rejected();
+                        self.trace_event(|t| TraceEvent::Finished {
+                            id: req.id,
+                            t_us: t,
+                            outcome: "deadline".to_string(),
+                        });
                         // ao-lint: allow(drop_send) -- caller may be gone
                         let _ = req.tx.send(Event::Error(ErrorInfo::new(
                             ErrorKind::Deadline,
@@ -1264,6 +1491,7 @@ impl Engine {
         self.metrics.faults_injected = f.injected;
         self.metrics.faults_retried = f.retried;
         self.metrics.faults_recovered = f.recovered;
+        self.metrics.faults_jitter_ms = self.runtime.jitter_slept_ms();
         if let Some(p) = &self.pager {
             self.metrics.pages_total = p.n_pages();
             self.metrics.pages_used = p.used_pages();
@@ -1890,11 +2118,19 @@ impl Engine {
             return Ok(());
         };
         slot.rng_state = rng.next_u64();
+        let n_prompt_admitted = slot.n_prompt;
         // queue wait: first enqueue -> slot claim, metered once per
         // request (requeues keep the original stamp)
         if let Some(t) = req.enqueued_at {
             self.metrics.record_queue_wait(t.elapsed().as_secs_f64());
         }
+        // the whole prompt was prefilled in this step's burst
+        self.step_tokens = self.step_tokens.saturating_add(n_prompt_admitted);
+        let id = req.id;
+        self.trace_event(|t| TraceEvent::Claimed { id, t_us: t, slot: idx });
+        // burst admission samples the first token straight from the
+        // prefill logits: the slot starts decoding immediately
+        self.trace_event(|t| TraceEvent::Decoding { id, t_us: t });
 
         let now = Instant::now();
         let active = ActiveRequest {
@@ -1950,6 +2186,7 @@ impl Engine {
     /// both decode loops in one step, and only the call that actually
     /// answers a request logs and counts it.
     fn fail_slot(&mut self, idx: usize, why: &str) {
+        let id = self.slots.get(idx).map(|s| s.request_id);
         if let Some(pager) = self.pager.as_mut() {
             pager.release(idx);
         }
@@ -1959,6 +2196,13 @@ impl Engine {
         if fail_request(&mut self.requests, idx, why) {
             crate::info!("slot {idx}: {why} — failed the mapped request");
             self.metrics.record_rejected();
+            if let Some(id) = id {
+                self.trace_event(|t| TraceEvent::Finished {
+                    id,
+                    t_us: t,
+                    outcome: "failed".to_string(),
+                });
+            }
         }
     }
 
@@ -2002,6 +2246,12 @@ impl Engine {
                 ttft,
                 &req.token_gaps,
             );
+            let id = slot.request_id;
+            self.trace_event(|t| TraceEvent::Finished {
+                id,
+                t_us: t,
+                outcome: reason.as_str().to_string(),
+            });
             // ao-lint: allow(drop_send) -- caller may already be gone
             let _ = req.tx.send(Event::Done(FinishInfo {
                 id: slot.request_id,
@@ -2089,6 +2339,8 @@ impl Engine {
         self.metrics.decode_steps += 1;
         self.metrics.total_slot_steps += b;
         self.metrics.active_slot_steps += active.len();
+        // one token per active row this step (trace accounting)
+        self.step_tokens = self.step_tokens.saturating_add(active.len());
 
         let t_overhead = Instant::now();
         let (logits_buf, cache_out) =
@@ -2361,6 +2613,8 @@ impl Engine {
             }
         }
         self.admit_seq += 1;
+        let id = req.id;
+        self.trace_event(|t| TraceEvent::Claimed { id, t_us: t, slot: idx });
         let n_prompt_orig = req
             .resume
             .as_ref()
@@ -2428,6 +2682,23 @@ impl Engine {
         let mut starts = vec![0i32; b];
         let slot_of_row: Vec<usize> =
             chunk_rows.iter().map(|&(idx, _, _)| idx).collect();
+        if self.trace.is_some() {
+            for &(idx, start, take) in &chunk_rows {
+                let Some(id) = self.slots.get(idx).map(|s| s.request_id)
+                else {
+                    continue;
+                };
+                self.trace_event(|t| TraceEvent::PrefillChunk {
+                    id,
+                    t_us: t,
+                    start,
+                    take,
+                });
+            }
+        }
+        let chunk_tokens: usize =
+            chunk_rows.iter().map(|&(_, _, t)| t).sum();
+        self.step_tokens = self.step_tokens.saturating_add(chunk_tokens);
         for (row, &(idx, start, take)) in chunk_rows.iter().enumerate() {
             let ctx = self.slot_ctx[idx].as_ref().ok_or_else(|| {
                 anyhow!("prefilling slot {idx} has no scheduler context")
@@ -2520,6 +2791,9 @@ impl Engine {
         logits: &HostTensor,
         vocab: usize,
     ) -> Result<()> {
+        if let Some(id) = self.slots.get(idx).map(|s| s.request_id) {
+            self.trace_event(|t| TraceEvent::Decoding { id, t_us: t });
+        }
         let resume =
             self.slot_ctx[idx].as_mut().and_then(|c| c.resume.take());
         if let Some(res) = resume {

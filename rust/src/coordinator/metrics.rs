@@ -3,7 +3,8 @@
 //! host↔device transfer accounting (the device-resident-cache win shows
 //! up as decode-step D2H shrinking to logits-only).
 
-use crate::util::stats::{summarize, Summary};
+use crate::util::json::{self, Value};
+use crate::util::stats::{summarize, LogHistogram, Summary};
 use std::time::Instant;
 
 #[derive(Debug, Default)]
@@ -111,6 +112,21 @@ pub struct MetricsCollector {
     /// requests canceled by the client (explicit op or disconnect),
     /// whether queued or mid-generation
     pub n_canceled: usize,
+    /// cumulative deterministic jitter slept across retries
+    /// (`--fault-jitter-ms`); rendered in `faults[...]` only when nonzero
+    pub faults_jitter_ms: u64,
+    /// `--bounded-stats`: latency summaries come from the streaming
+    /// histograms and the exact sample vectors stay empty — bounded
+    /// steady-state memory under long-running traffic. Off by default:
+    /// exact samples remain the parity oracle.
+    pub hist_only: bool,
+    /// fixed log-bucket streaming histograms of the same latencies the
+    /// sample vectors hold; always recorded, mergeable for fleet
+    /// aggregation, and the only source when `hist_only` is set
+    pub hist_ttft: LogHistogram,
+    pub hist_tpot: LogHistogram,
+    pub hist_itl: LogHistogram,
+    pub hist_queue_wait: LogHistogram,
 }
 
 impl MetricsCollector {
@@ -144,11 +160,20 @@ impl MetricsCollector {
         self.n_requests += 1;
         self.n_prompt_tokens += n_prompt;
         self.n_output_tokens += n_generated;
-        self.ttft_s.push(ttft_s);
+        self.hist_ttft.record(ttft_s);
+        if !self.hist_only {
+            self.ttft_s.push(ttft_s);
+        }
         if n_generated > 1 && !token_gaps.is_empty() {
             let tpot = token_gaps.iter().sum::<f64>() / token_gaps.len() as f64;
-            self.tpot_s.push(tpot);
-            self.itl_s.extend_from_slice(token_gaps);
+            self.hist_tpot.record(tpot);
+            for &g in token_gaps {
+                self.hist_itl.record(g);
+            }
+            if !self.hist_only {
+                self.tpot_s.push(tpot);
+                self.itl_s.extend_from_slice(token_gaps);
+            }
         }
     }
 
@@ -163,26 +188,45 @@ impl MetricsCollector {
     }
 
     pub fn ttft(&self) -> Summary {
-        summarize(&self.ttft_s)
+        if self.hist_only {
+            self.hist_ttft.summary()
+        } else {
+            summarize(&self.ttft_s)
+        }
     }
 
     pub fn tpot(&self) -> Summary {
-        summarize(&self.tpot_s)
+        if self.hist_only {
+            self.hist_tpot.summary()
+        } else {
+            summarize(&self.tpot_s)
+        }
     }
 
     pub fn itl(&self) -> Summary {
-        summarize(&self.itl_s)
+        if self.hist_only {
+            self.hist_itl.summary()
+        } else {
+            summarize(&self.itl_s)
+        }
     }
 
     pub fn queue_wait(&self) -> Summary {
-        summarize(&self.queue_wait_s)
+        if self.hist_only {
+            self.hist_queue_wait.summary()
+        } else {
+            summarize(&self.queue_wait_s)
+        }
     }
 
     /// Queue wait for one admission claim. Recorded once per request at
     /// the moment it claims a slot — preemption resumes skip it (their
     /// wait was metered at the original admission).
     pub fn record_queue_wait(&mut self, wait_s: f64) {
-        self.queue_wait_s.push(wait_s);
+        self.hist_queue_wait.record(wait_s);
+        if !self.hist_only {
+            self.queue_wait_s.push(wait_s);
+        }
     }
 
     /// Batch occupancy: fraction of slot-steps that carried a live request.
@@ -290,6 +334,15 @@ impl MetricsCollector {
         {
             return String::new();
         }
+        if self.faults_jitter_ms > 0 {
+            return format!(
+                "faults[injected={} retried={} recovered={} jitter_ms={}]",
+                self.faults_injected,
+                self.faults_retried,
+                self.faults_recovered,
+                self.faults_jitter_ms
+            );
+        }
         format!(
             "faults[injected={} retried={} recovered={}]",
             self.faults_injected, self.faults_retried, self.faults_recovered
@@ -378,6 +431,153 @@ impl MetricsCollector {
             fmt_bytes(self.admit_d2h_bytes),
             self.host_splice_bursts,
         )
+    }
+
+    /// Machine-readable twin of `report()`: the same counters as a JSON
+    /// object (the `{"op":"stats"}` payload and the fleet-aggregation
+    /// input). Counters carry the exact integer values the text report
+    /// formats; latencies come as Summary objects in ms plus the sparse
+    /// log-bucket histograms (`[[bucket, count], ...]` — see
+    /// `docs/observability.md` for the bucket scheme).
+    pub fn report_json(&self, label: &str) -> Value {
+        let ms = |x: f64| if x.is_finite() { x * 1e3 } else { 0.0 };
+        let n = |x: f64| json::num(x);
+        let count = |x: usize| json::num(x as f64);
+        let count64 = |x: u64| json::num(x as f64);
+        let summ = |s: &Summary| {
+            json::obj(vec![
+                ("n", count(s.n)),
+                ("mean_ms", n(ms(s.mean))),
+                ("p50_ms", n(ms(s.p50))),
+                ("p95_ms", n(ms(s.p95))),
+                ("p99_ms", n(ms(s.p99))),
+            ])
+        };
+        let hist = |h: &LogHistogram| {
+            let s = h.summary();
+            let fin = |x: f64| n(if x.is_finite() { x } else { 0.0 });
+            let buckets = h
+                .sparse_counts()
+                .into_iter()
+                .map(|(i, c)| {
+                    json::arr(vec![count(i), count64(c)])
+                })
+                .collect();
+            json::obj(vec![
+                ("n", count64(h.len())),
+                ("min_s", fin(s.min)),
+                ("max_s", fin(s.max)),
+                ("mean_s", fin(s.mean)),
+                ("buckets", json::arr(buckets)),
+            ])
+        };
+        let scheme = if self.cache_scheme.is_empty() {
+            "f32"
+        } else {
+            self.cache_scheme.as_str()
+        };
+        let layout = if self.kv_layout.is_empty() {
+            "static"
+        } else {
+            self.kv_layout.as_str()
+        };
+        json::obj(vec![
+            ("label", json::s(label)),
+            ("requests", count(self.n_requests)),
+            ("rejected", count(self.n_rejected)),
+            ("canceled", count(self.n_canceled)),
+            ("in_tokens", count(self.n_prompt_tokens)),
+            ("out_tokens", count(self.n_output_tokens)),
+            ("wall_s", n(self.wall_s())),
+            ("tput_tok_s", n(self.output_tok_per_s())),
+            ("occupancy", n(self.occupancy())),
+            ("decode_steps", count(self.decode_steps)),
+            ("prefills", count(self.prefill_calls)),
+            (
+                "cache",
+                json::obj(vec![
+                    ("scheme", json::s(scheme)),
+                    ("layout", json::s(layout)),
+                    ("resident_bytes", count64(self.cache_resident_bytes)),
+                ]),
+            ),
+            (
+                "pages",
+                json::obj(vec![
+                    ("total", count(self.pages_total)),
+                    ("used", count(self.pages_used)),
+                    ("hwm", count(self.pages_hwm)),
+                ]),
+            ),
+            (
+                "prefix",
+                json::obj(vec![
+                    ("enabled", Value::Bool(self.prefix_enabled)),
+                    ("lookups", count(self.prefix_lookups)),
+                    ("hits", count(self.prefix_hits)),
+                    ("pages_shared", count(self.prefix_pages_shared)),
+                    ("tokens_saved", count(self.prefix_tokens_saved)),
+                ]),
+            ),
+            (
+                "sched",
+                json::obj(vec![
+                    ("enabled", Value::Bool(self.sched_enabled)),
+                    ("budget", count(self.sched_budget)),
+                    ("chunks", count(self.sched_chunks)),
+                    ("preemptions", count(self.sched_preemptions)),
+                    ("steps", count(self.sched_steps)),
+                    ("mixed", count(self.sched_mixed_steps)),
+                    ("stalls", count(self.sched_stall_steps)),
+                ]),
+            ),
+            (
+                "faults",
+                json::obj(vec![
+                    ("injected", count64(self.faults_injected)),
+                    ("retried", count64(self.faults_retried)),
+                    ("recovered", count64(self.faults_recovered)),
+                    ("jitter_ms", count64(self.faults_jitter_ms)),
+                ]),
+            ),
+            (
+                "rejected_detail",
+                json::obj(vec![
+                    ("overload", count(self.rejected_overload)),
+                    ("deadline", count(self.rejected_deadline)),
+                ]),
+            ),
+            (
+                "xfer",
+                json::obj(vec![
+                    ("h2d_bytes", count64(self.h2d_bytes)),
+                    ("d2h_bytes", count64(self.d2h_bytes)),
+                    ("decode_h2d_bytes", count64(self.decode_h2d_bytes)),
+                    ("decode_d2h_bytes", count64(self.decode_d2h_bytes)),
+                    ("admit_h2d_bytes", count64(self.admit_h2d_bytes)),
+                    ("admit_d2h_bytes", count64(self.admit_d2h_bytes)),
+                    ("host_splices", count(self.host_splice_bursts)),
+                ]),
+            ),
+            (
+                "lat",
+                json::obj(vec![
+                    ("ttft", summ(&self.ttft())),
+                    ("tpot", summ(&self.tpot())),
+                    ("itl", summ(&self.itl())),
+                    ("queue_wait", summ(&self.queue_wait())),
+                ]),
+            ),
+            (
+                "hist",
+                json::obj(vec![
+                    ("ttft", hist(&self.hist_ttft)),
+                    ("tpot", hist(&self.hist_tpot)),
+                    ("itl", hist(&self.hist_itl)),
+                    ("queue_wait", hist(&self.hist_queue_wait)),
+                ]),
+            ),
+        ])
     }
 }
 
@@ -626,6 +826,89 @@ mod tests {
         let rc = clean.report("y");
         assert!(!rc.contains("rejected["), "{rc}");
         assert!(!rc.contains("canceled="), "{rc}");
+    }
+
+    #[test]
+    fn jitter_renders_in_faults_field_only_when_nonzero() {
+        let mut m = MetricsCollector::new();
+        m.faults_injected = 5;
+        m.faults_retried = 4;
+        m.faults_recovered = 3;
+        // the long-standing three-counter shape is preserved at zero
+        assert_eq!(
+            m.faults_field(),
+            "faults[injected=5 retried=4 recovered=3]"
+        );
+        m.faults_jitter_ms = 17;
+        assert_eq!(
+            m.faults_field(),
+            "faults[injected=5 retried=4 recovered=3 jitter_ms=17]"
+        );
+    }
+
+    #[test]
+    fn hist_only_mode_keeps_sample_vectors_empty() {
+        let mut m = MetricsCollector::new();
+        m.hist_only = true;
+        m.begin();
+        for i in 0..50 {
+            let t = 0.010 * (i + 1) as f64;
+            m.record_request(4, 3, t, &[0.002, 0.004]);
+            m.record_queue_wait(0.001 * (i + 1) as f64);
+        }
+        m.finish();
+        assert!(m.ttft_s.is_empty(), "bounded mode must not grow vectors");
+        assert!(m.tpot_s.is_empty());
+        assert!(m.itl_s.is_empty());
+        assert!(m.queue_wait_s.is_empty());
+        assert_eq!(m.hist_ttft.len(), 50);
+        // summaries still render, from the histograms
+        let t = m.ttft();
+        assert_eq!(t.n, 50);
+        assert!(t.p95 > t.p50);
+        assert!(!m.report("x").contains("NaN"), "{}", m.report("x"));
+        // exact-sample mode records both representations
+        let mut exact = MetricsCollector::new();
+        exact.record_request(4, 3, 0.02, &[0.002, 0.004]);
+        assert_eq!(exact.ttft_s.len(), 1);
+        assert_eq!(exact.hist_ttft.len(), 1);
+    }
+
+    #[test]
+    fn report_json_counters_match_text_report() {
+        let mut m = MetricsCollector::new();
+        m.begin();
+        m.record_request(10, 5, 0.1, &[0.01, 0.02, 0.01, 0.02]);
+        m.record_request(8, 1, 0.05, &[]);
+        m.record_rejected();
+        m.faults_injected = 2;
+        m.faults_retried = 2;
+        m.faults_recovered = 1;
+        m.decode_steps = 7;
+        m.h2d_bytes = 4096;
+        m.finish();
+        let v = m.report_json("x");
+        // round-trips through the parser
+        let v = Value::parse(&v.to_string()).unwrap();
+        assert_eq!(v.req_str("label").unwrap(), "x");
+        assert_eq!(v.req_usize("requests").unwrap(), 2);
+        assert_eq!(v.req_usize("rejected").unwrap(), 1);
+        assert_eq!(v.req_usize("in_tokens").unwrap(), 18);
+        assert_eq!(v.req_usize("out_tokens").unwrap(), 6);
+        assert_eq!(v.req_usize("decode_steps").unwrap(), 7);
+        let faults = v.req("faults").unwrap();
+        assert_eq!(faults.req_usize("injected").unwrap(), 2);
+        let xfer = v.req("xfer").unwrap();
+        assert_eq!(xfer.req_usize("h2d_bytes").unwrap(), 4096);
+        // the text report formats the same values
+        let r = m.report("x");
+        assert!(r.contains("requests=2"), "{r}");
+        assert!(r.contains("in_tokens=18"), "{r}");
+        // histograms ride along for fleet aggregation
+        let hist = v.req("hist").unwrap();
+        assert_eq!(hist.req("ttft").unwrap().req_usize("n").unwrap(), 2);
+        let lat = v.req("lat").unwrap();
+        assert_eq!(lat.req("ttft").unwrap().req_usize("n").unwrap(), 2);
     }
 
     #[test]

@@ -22,6 +22,8 @@
 //!     slot's block table and prefills only the uncached suffix.
 //!   - `metrics` — TTFT / TPOT / ITL / throughput accounting (Table 1).
 //!   - `server`  — TCP JSON-lines front-end + client.
+//!   - `trace`   — bounded ring of per-step records and request
+//!     lifecycle spans (`--trace`), dumped as JSONL + Chrome trace JSON.
 
 pub mod batcher;
 pub mod engine;
@@ -32,6 +34,7 @@ pub mod prefixcache;
 pub mod request;
 pub mod scheduler;
 pub mod server;
+pub mod trace;
 
 pub use engine::{CacheScheme, Engine, EngineConfig, EngineHandle, KvLayout};
 pub use request::{ErrorInfo, ErrorKind, Event, FinishInfo, FinishReason, SubmitReq};

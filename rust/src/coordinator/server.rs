@@ -5,6 +5,11 @@
 //!   request:  {"id": 1, "prompt": "...", "max_new_tokens": 32,
 //!              "temperature": 0.0, "seed": 7, "deadline_ms": 500}
 //!   ops:      {"op": "cancel", "id": 1}        (cancel a live request)
+//!             {"op": "stats"}                  (live metrics snapshot:
+//!                                              {"stats": {...}}, the
+//!                                              JSON twin of the text
+//!                                              report — see
+//!                                              docs/observability.md)
 //!             {"op": "shutdown"}               (drain: finish in-flight
 //!                                              work, reject new, report)
 //!   response: {"id": 1, "token": "<text>"}            (streamed)
@@ -133,6 +138,19 @@ fn handle_conn(
                         ("canceling", Value::Bool(true)),
                     ])
                     .to_string()
+                )?;
+                continue;
+            }
+            Some("stats") => {
+                // live introspection: the machine-readable twin of the
+                // text report — one JSON object, same counters
+                let snapshot = engine.stats()?;
+                let stats = Value::parse(&snapshot)
+                    .unwrap_or_else(|_| json::s(&snapshot));
+                writeln!(
+                    writer,
+                    "{}",
+                    json::obj(vec![("stats", stats)]).to_string()
                 )?;
                 continue;
             }

@@ -1,0 +1,611 @@
+//! Serving trace: a bounded ring buffer of structured events the engine
+//! stamps as it steps — per-step records (what ran, what it cost) and
+//! per-request lifecycle spans (enqueued → claimed → prefill chunks →
+//! decoding → terminal). Enabled by `--trace` / `AO_TRACE`; capacity is
+//! `--trace-capacity` / `AO_TRACE_CAPACITY` events (oldest evicted
+//! first, eviction counted), so steady-state allocation is fixed no
+//! matter how long the engine serves.
+//!
+//! Two offline formats, both written when `--trace-out <stem>` /
+//! `AO_TRACE_OUT` is set: `<stem>.jsonl` (one JSON object per event —
+//! grep/jq material) and `<stem>.chrome.json` (Chrome trace-event
+//! array: open `chrome://tracing` or <https://ui.perfetto.dev> and load
+//! the file; steps render as duration slices on the engine track,
+//! requests as begin/end spans on their own track). See
+//! `docs/observability.md` for the schema.
+//!
+//! Every `TraceEvent` variant must be constructed by the engine/runtime
+//! and rendered by the dump path below — ao-lint R6 (`r6-trace`) checks
+//! both directions.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::util::json::{self, Value};
+
+/// What an engine step spent its budget on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepKind {
+    /// Only decoding rows advanced.
+    Decode,
+    /// Only prefill work ran (whole prompts or chunks).
+    Prefill,
+    /// Decode rows and prefill chunks shared the step.
+    Mixed,
+}
+
+impl StepKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StepKind::Decode => "decode",
+            StepKind::Prefill => "prefill",
+            StepKind::Mixed => "mixed",
+        }
+    }
+}
+
+/// One trace record. Timestamps (`t_us`) are microseconds since the
+/// buffer's epoch (engine start), from a single monotonic clock — events
+/// are recorded in time order, so per-track timestamps are monotone.
+#[derive(Debug, Clone)]
+pub enum TraceEvent {
+    /// One engine step: what ran and what it cost.
+    Step {
+        step: u64,
+        t_us: u64,
+        kind: StepKind,
+        /// Decoding rows that advanced this step.
+        rows: usize,
+        /// Tokens charged: one per decode row + prefill tokens written.
+        tokens: usize,
+        exec_us: u64,
+        h2d_bytes: u64,
+        d2h_bytes: u64,
+        /// Transient-fault retries burned inside this step.
+        retries: u64,
+        preemptions: u64,
+        prefix_hits: u64,
+        pages_used: usize,
+    },
+    /// Request accepted into the queue.
+    Enqueued { id: u64, t_us: u64, n_prompt: usize },
+    /// Request claimed a slot (admission started).
+    Claimed { id: u64, t_us: u64, slot: usize },
+    /// One prefill chunk written: positions `[start, start+take)`.
+    PrefillChunk { id: u64, t_us: u64, start: usize, take: usize },
+    /// Prefill complete; the slot is decoding.
+    Decoding { id: u64, t_us: u64 },
+    /// Terminal: finish reason or error kind
+    /// (`eos|length|context_full|deadline|failed|canceled|overloaded`).
+    Finished { id: u64, t_us: u64, outcome: String },
+    /// One transient-fault retry: backoff (+ jitter) slept before it.
+    Retry {
+        t_us: u64,
+        site: String,
+        tag: String,
+        attempt: usize,
+        delay_ms: u64,
+    },
+}
+
+impl TraceEvent {
+    /// Request id for lifecycle events; None for step/retry records.
+    pub fn request_id(&self) -> Option<u64> {
+        match self {
+            TraceEvent::Enqueued { id, .. }
+            | TraceEvent::Claimed { id, .. }
+            | TraceEvent::PrefillChunk { id, .. }
+            | TraceEvent::Decoding { id, .. }
+            | TraceEvent::Finished { id, .. } => Some(*id),
+            TraceEvent::Step { .. } | TraceEvent::Retry { .. } => None,
+        }
+    }
+
+    pub fn t_us(&self) -> u64 {
+        match self {
+            TraceEvent::Step { t_us, .. }
+            | TraceEvent::Enqueued { t_us, .. }
+            | TraceEvent::Claimed { t_us, .. }
+            | TraceEvent::PrefillChunk { t_us, .. }
+            | TraceEvent::Decoding { t_us, .. }
+            | TraceEvent::Finished { t_us, .. }
+            | TraceEvent::Retry { t_us, .. } => *t_us,
+        }
+    }
+}
+
+/// Bounded ring of trace events plus the epoch their timestamps count
+/// from. Capacity is fixed at construction; eviction is counted, never
+/// silent.
+#[derive(Debug)]
+pub struct TraceBuffer {
+    cap: usize,
+    events: VecDeque<TraceEvent>,
+    dropped: u64,
+    epoch: Instant,
+}
+
+/// Default `--trace-capacity` when tracing is on.
+pub const DEFAULT_CAPACITY: usize = 4096;
+
+impl TraceBuffer {
+    pub fn new(cap: usize) -> Self {
+        TraceBuffer {
+            cap,
+            events: VecDeque::with_capacity(cap.min(DEFAULT_CAPACITY)),
+            dropped: 0,
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Microseconds since the buffer's epoch — the engine stamps every
+    /// event through this one clock.
+    pub fn now_us(&self) -> u64 {
+        u64::try_from(self.epoch.elapsed().as_micros()).unwrap_or(u64::MAX)
+    }
+
+    pub fn record(&mut self, ev: TraceEvent) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.events.len() == self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(ev);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Events evicted to respect the capacity bound.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn events(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.events.iter()
+    }
+
+    /// JSONL dump: a meta header line, then one JSON object per event in
+    /// record order.
+    pub fn dump_jsonl(&self) -> String {
+        let mut out = String::new();
+        let meta = json::obj(vec![
+            ("ev", json::s("meta")),
+            ("capacity", json::num(self.cap as f64)),
+            ("dropped", json::num(self.dropped as f64)),
+            ("events", json::num(self.events.len() as f64)),
+        ]);
+        out.push_str(&meta.to_string());
+        out.push('\n');
+        for ev in &self.events {
+            out.push_str(&event_json(ev).to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Chrome trace-event dump (JSON array form): steps are `X`
+    /// duration slices on pid 1/tid 0, retries are instants on pid
+    /// 1/tid 1, each request is a `B`/`E` span (with instants for the
+    /// intermediate transitions) on pid 2/tid = request id. Loadable in
+    /// `chrome://tracing` and Perfetto.
+    pub fn dump_chrome(&self) -> String {
+        let mut rows: Vec<Value> = Vec::new();
+        rows.push(meta_row(1, "engine"));
+        rows.push(meta_row(2, "requests"));
+        // ids with an open B span, paired with the last timestamp seen
+        let mut open: Vec<(u64, u64)> = Vec::new();
+        let mut last_t = 0u64;
+        for ev in &self.events {
+            let t = ev.t_us();
+            last_t = last_t.max(t);
+            if let Some(id) = ev.request_id() {
+                let begun = open.iter().any(|&(o, _)| o == id);
+                let is_begin = matches!(ev, TraceEvent::Enqueued { .. });
+                if !begun && !matches!(ev, TraceEvent::Finished { .. }) {
+                    // ring eviction may have dropped the Enqueued record;
+                    // synthesize the span open so B/E stay balanced
+                    open.push((id, t));
+                    rows.push(span_row("B", id, t));
+                    if is_begin {
+                        continue;
+                    }
+                } else if is_begin {
+                    // duplicate begin (should not happen) — keep as instant
+                } else if let TraceEvent::Finished { .. } = ev {
+                    if begun {
+                        open.retain(|&(o, _)| o != id);
+                    } else {
+                        rows.push(span_row("B", id, t));
+                    }
+                    rows.push(chrome_lifecycle_row(ev, "E", id, t));
+                    continue;
+                }
+                for slot in open.iter_mut().filter(|(o, _)| *o == id) {
+                    slot.1 = t;
+                }
+                rows.push(chrome_lifecycle_row(ev, "i", id, t));
+            } else {
+                rows.push(chrome_engine_row(ev, t));
+            }
+        }
+        // close spans still open at dump time so the array stays balanced
+        for (id, _) in open {
+            rows.push(span_row("E", id, last_t));
+        }
+        Value::Arr(rows).to_string()
+    }
+}
+
+/// Per-process metadata row naming a Chrome-trace track group.
+fn meta_row(pid: u64, name: &str) -> Value {
+    json::obj(vec![
+        ("ph", json::s("M")),
+        ("pid", json::num(pid as f64)),
+        ("tid", json::num(0.0)),
+        ("name", json::s("process_name")),
+        ("args", json::obj(vec![("name", json::s(name))])),
+    ])
+}
+
+/// A request-track `B`/`E` row with no event payload.
+fn span_row(ph: &str, id: u64, t: u64) -> Value {
+    json::obj(vec![
+        ("ph", json::s(ph)),
+        ("pid", json::num(2.0)),
+        ("tid", json::num(id as f64)),
+        ("ts", json::num(t as f64)),
+        ("name", json::s("request")),
+    ])
+}
+
+/// Engine-track rows: steps as complete (`X`) slices, retries as
+/// instants on the fault track.
+fn chrome_engine_row(ev: &TraceEvent, t: u64) -> Value {
+    match ev {
+        TraceEvent::Step { kind, exec_us, .. } => json::obj(vec![
+            ("ph", json::s("X")),
+            ("pid", json::num(1.0)),
+            ("tid", json::num(0.0)),
+            ("ts", json::num(t as f64)),
+            ("dur", json::num(*exec_us as f64)),
+            ("name", json::s(kind.as_str())),
+            ("args", event_json(ev)),
+        ]),
+        _ => json::obj(vec![
+            ("ph", json::s("i")),
+            ("pid", json::num(1.0)),
+            ("tid", json::num(1.0)),
+            ("ts", json::num(t as f64)),
+            ("s", json::s("t")),
+            ("name", json::s("retry")),
+            ("args", event_json(ev)),
+        ]),
+    }
+}
+
+/// A lifecycle row on the request's own track.
+fn chrome_lifecycle_row(ev: &TraceEvent, ph: &str, id: u64, t: u64) -> Value {
+    let name = match ev {
+        TraceEvent::Enqueued { .. } => "enqueued".to_string(),
+        TraceEvent::Claimed { .. } => "claimed".to_string(),
+        TraceEvent::PrefillChunk { .. } => "prefill_chunk".to_string(),
+        TraceEvent::Decoding { .. } => "decoding".to_string(),
+        TraceEvent::Finished { outcome, .. } => format!("finished:{outcome}"),
+        TraceEvent::Step { .. } | TraceEvent::Retry { .. } => String::new(),
+    };
+    let mut pairs = vec![
+        ("ph", json::s(ph)),
+        ("pid", json::num(2.0)),
+        ("tid", json::num(id as f64)),
+        ("ts", json::num(t as f64)),
+        ("name", json::s(&name)),
+        ("args", event_json(ev)),
+    ];
+    if ph == "i" {
+        pairs.push(("s", json::s("t")));
+    }
+    json::obj(pairs)
+}
+
+/// The JSONL rendering of one event — every variant renders here.
+pub fn event_json(ev: &TraceEvent) -> Value {
+    match ev {
+        TraceEvent::Step {
+            step,
+            t_us,
+            kind,
+            rows,
+            tokens,
+            exec_us,
+            h2d_bytes,
+            d2h_bytes,
+            retries,
+            preemptions,
+            prefix_hits,
+            pages_used,
+        } => json::obj(vec![
+            ("ev", json::s("step")),
+            ("step", json::num(*step as f64)),
+            ("t_us", json::num(*t_us as f64)),
+            ("kind", json::s(kind.as_str())),
+            ("rows", json::num(*rows as f64)),
+            ("tokens", json::num(*tokens as f64)),
+            ("exec_us", json::num(*exec_us as f64)),
+            ("h2d_bytes", json::num(*h2d_bytes as f64)),
+            ("d2h_bytes", json::num(*d2h_bytes as f64)),
+            ("retries", json::num(*retries as f64)),
+            ("preemptions", json::num(*preemptions as f64)),
+            ("prefix_hits", json::num(*prefix_hits as f64)),
+            ("pages_used", json::num(*pages_used as f64)),
+        ]),
+        TraceEvent::Enqueued { id, t_us, n_prompt } => json::obj(vec![
+            ("ev", json::s("enqueued")),
+            ("id", json::num(*id as f64)),
+            ("t_us", json::num(*t_us as f64)),
+            ("n_prompt", json::num(*n_prompt as f64)),
+        ]),
+        TraceEvent::Claimed { id, t_us, slot } => json::obj(vec![
+            ("ev", json::s("claimed")),
+            ("id", json::num(*id as f64)),
+            ("t_us", json::num(*t_us as f64)),
+            ("slot", json::num(*slot as f64)),
+        ]),
+        TraceEvent::PrefillChunk { id, t_us, start, take } => json::obj(vec![
+            ("ev", json::s("prefill_chunk")),
+            ("id", json::num(*id as f64)),
+            ("t_us", json::num(*t_us as f64)),
+            ("start", json::num(*start as f64)),
+            ("take", json::num(*take as f64)),
+        ]),
+        TraceEvent::Decoding { id, t_us } => json::obj(vec![
+            ("ev", json::s("decoding")),
+            ("id", json::num(*id as f64)),
+            ("t_us", json::num(*t_us as f64)),
+        ]),
+        TraceEvent::Finished { id, t_us, outcome } => json::obj(vec![
+            ("ev", json::s("finished")),
+            ("id", json::num(*id as f64)),
+            ("t_us", json::num(*t_us as f64)),
+            ("outcome", json::s(outcome)),
+        ]),
+        TraceEvent::Retry { t_us, site, tag, attempt, delay_ms } => {
+            json::obj(vec![
+                ("ev", json::s("retry")),
+                ("t_us", json::num(*t_us as f64)),
+                ("site", json::s(site)),
+                ("tag", json::s(tag)),
+                ("attempt", json::num(*attempt as f64)),
+                ("delay_ms", json::num(*delay_ms as f64)),
+            ])
+        }
+    }
+}
+
+/// Validate request lifecycle spans: for every request id that appears,
+/// timestamps are monotone non-decreasing, the first event is
+/// `Enqueued`, there is exactly one `Finished`, and it comes last.
+/// Step/Retry records are ignored. The property suite drives this over
+/// simulated traffic (`prop_trace_lifecycle`).
+pub fn check_spans<'a>(
+    events: impl Iterator<Item = &'a TraceEvent>,
+) -> Result<(), String> {
+    use std::collections::BTreeMap;
+    // id -> (last_t, saw_enqueued_first, terminal_count, event_count)
+    let mut spans: BTreeMap<u64, (u64, bool, usize, usize)> = BTreeMap::new();
+    for ev in events {
+        let Some(id) = ev.request_id() else {
+            continue;
+        };
+        let t = ev.t_us();
+        let entry = spans.entry(id).or_insert((0, false, 0, 0));
+        if entry.3 == 0 {
+            entry.1 = matches!(ev, TraceEvent::Enqueued { .. });
+        } else if t < entry.0 {
+            return Err(format!(
+                "request {id}: timestamp regressed ({} -> {t})",
+                entry.0
+            ));
+        } else if entry.2 > 0 {
+            return Err(format!("request {id}: event after terminal"));
+        }
+        entry.0 = t;
+        entry.3 += 1;
+        if matches!(ev, TraceEvent::Finished { .. }) {
+            entry.2 += 1;
+        }
+    }
+    for (id, (_, first_ok, terminals, _)) in &spans {
+        if !first_ok {
+            return Err(format!("request {id}: span does not start Enqueued"));
+        }
+        if *terminals != 1 {
+            return Err(format!(
+                "request {id}: {terminals} terminal events (want exactly 1)"
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lifecycle(id: u64, t0: u64) -> Vec<TraceEvent> {
+        vec![
+            TraceEvent::Enqueued { id, t_us: t0, n_prompt: 8 },
+            TraceEvent::Claimed { id, t_us: t0 + 10, slot: 0 },
+            TraceEvent::PrefillChunk { id, t_us: t0 + 20, start: 0, take: 8 },
+            TraceEvent::Decoding { id, t_us: t0 + 30 },
+            TraceEvent::Finished {
+                id,
+                t_us: t0 + 90,
+                outcome: "eos".to_string(),
+            },
+        ]
+    }
+
+    fn step(n: u64, t: u64) -> TraceEvent {
+        TraceEvent::Step {
+            step: n,
+            t_us: t,
+            kind: StepKind::Mixed,
+            rows: 2,
+            tokens: 10,
+            exec_us: 40,
+            h2d_bytes: 128,
+            d2h_bytes: 64,
+            retries: 1,
+            preemptions: 0,
+            prefix_hits: 1,
+            pages_used: 6,
+        }
+    }
+
+    #[test]
+    fn ring_respects_capacity_and_counts_drops() {
+        let mut tb = TraceBuffer::new(4);
+        for i in 0..10 {
+            tb.record(step(i, i * 100));
+        }
+        assert_eq!(tb.len(), 4);
+        assert_eq!(tb.capacity(), 4);
+        assert_eq!(tb.dropped(), 6);
+        // oldest evicted first: the survivors are steps 6..=9
+        let first = tb.events().next().map(|e| e.t_us());
+        assert_eq!(first, Some(600));
+        // zero capacity records nothing
+        let mut off = TraceBuffer::new(0);
+        off.record(step(0, 0));
+        assert_eq!(off.len(), 0);
+        assert_eq!(off.dropped(), 0);
+    }
+
+    #[test]
+    fn jsonl_lines_parse_and_cover_every_variant() {
+        let mut tb = TraceBuffer::new(64);
+        for ev in lifecycle(7, 100) {
+            tb.record(ev);
+        }
+        tb.record(step(0, 150));
+        tb.record(TraceEvent::Retry {
+            t_us: 160,
+            site: "exec".to_string(),
+            tag: "decode".to_string(),
+            attempt: 1,
+            delay_ms: 12,
+        });
+        let dump = tb.dump_jsonl();
+        let lines: Vec<&str> = dump.lines().collect();
+        assert_eq!(lines.len(), 1 + 7, "{dump}");
+        let mut kinds = Vec::new();
+        for line in &lines {
+            let v = Value::parse(line).expect("jsonl line parses");
+            kinds.push(v.req_str("ev").unwrap().to_string());
+        }
+        assert_eq!(
+            kinds,
+            [
+                "meta",
+                "enqueued",
+                "claimed",
+                "prefill_chunk",
+                "decoding",
+                "finished",
+                "step",
+                "retry"
+            ]
+        );
+        let meta = Value::parse(lines[0]).unwrap();
+        assert_eq!(meta.req_usize("dropped").unwrap(), 0);
+        assert_eq!(meta.req_usize("events").unwrap(), 7);
+    }
+
+    #[test]
+    fn chrome_dump_is_valid_and_tracks_are_monotone() {
+        let mut tb = TraceBuffer::new(64);
+        tb.record(step(0, 50));
+        for ev in lifecycle(3, 100) {
+            tb.record(ev);
+        }
+        tb.record(step(1, 200));
+        // a request still in flight at dump time gets its span closed
+        tb.record(TraceEvent::Enqueued { id: 4, t_us: 210, n_prompt: 3 });
+        tb.record(TraceEvent::Claimed { id: 4, t_us: 220, slot: 1 });
+        let v = Value::parse(&tb.dump_chrome()).expect("chrome json parses");
+        let rows = v.as_arr().expect("array form");
+        let mut last: std::collections::BTreeMap<(i64, i64), f64> =
+            std::collections::BTreeMap::new();
+        let mut begins = 0i64;
+        let mut ends = 0i64;
+        for row in rows {
+            let ph = row.req_str("ph").unwrap();
+            if ph == "M" {
+                continue;
+            }
+            let track = (
+                row.req("pid").unwrap().as_i64().unwrap(),
+                row.req("tid").unwrap().as_i64().unwrap(),
+            );
+            let ts = row.req("ts").unwrap().as_f64().unwrap();
+            let prev = last.insert(track, ts);
+            assert!(
+                prev.map_or(true, |p| ts >= p),
+                "track {track:?} timestamp regressed"
+            );
+            match ph {
+                "B" => begins += 1,
+                "E" => ends += 1,
+                _ => {}
+            }
+        }
+        assert_eq!(begins, 2, "one B per request");
+        assert_eq!(begins, ends, "B/E balanced");
+    }
+
+    #[test]
+    fn check_spans_accepts_well_formed_and_rejects_malformed() {
+        let good: Vec<TraceEvent> = lifecycle(1, 0)
+            .into_iter()
+            .chain(lifecycle(2, 40))
+            .chain(std::iter::once(step(0, 10)))
+            .collect();
+        assert!(check_spans(good.iter()).is_ok());
+
+        // double terminal
+        let mut dup = lifecycle(1, 0);
+        dup.push(TraceEvent::Finished {
+            id: 1,
+            t_us: 95,
+            outcome: "eos".to_string(),
+        });
+        assert!(check_spans(dup.iter()).is_err());
+
+        // timestamp regression
+        let mut back = lifecycle(1, 0);
+        if let Some(TraceEvent::Decoding { t_us, .. }) = back.get_mut(3) {
+            *t_us = 1;
+        }
+        assert!(check_spans(back.iter()).is_err());
+
+        // missing terminal
+        let open = lifecycle(1, 0);
+        assert!(check_spans(open[..4].iter()).is_err());
+
+        // span not starting at Enqueued
+        let tail = lifecycle(1, 0);
+        assert!(check_spans(tail[1..].iter()).is_err());
+    }
+}

@@ -18,10 +18,15 @@
 //!                 [--fault-backoff-ms 10] # base retry backoff (doubles)
 //!                 [--fault-plan SPEC] # deterministic fault injection,
 //!                                     # e.g. exec:decode:every=7:n=3
+//!                 [--fault-jitter-ms MS] # deterministic retry jitter cap
 //!                 [--max-queue N]     # bounded admission queue; full ->
 //!                                     # reject with kind "overloaded"
 //!                 [--default-deadline-ms MS] # deadline for requests
 //!                                     # that don't carry their own
+//!                 [--trace]           # per-step + lifecycle event ring
+//!                 [--trace-capacity N] # trace ring bound (default 4096)
+//!                 [--trace-out STEM]  # dump STEM.jsonl + STEM.chrome.json
+//!                 [--bounded-stats]   # histogram-only latency accounting
 //!   ao bench-client --addr 127.0.0.1:7433 --n 16
 //!   ao perfmodel  [--kernels]                   # H100/Fig3 + L1 estimates
 
@@ -295,6 +300,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 })
             })
             .transpose()?,
+        // --trace records per-step + per-request lifecycle events into
+        // a bounded ring; --trace-out <stem> dumps them at exit (and
+        // implies --trace)
+        trace: args.flag("trace"),
+        // --trace-capacity <n> bounds the ring (0 = default 4096)
+        trace_capacity: args.usize_or("trace-capacity", 0),
+        trace_out: args.get("trace-out").map(PathBuf::from),
+        // --fault-jitter-ms <ms> caps the deterministic per-retry jitter
+        // added to the transient-fault backoff (0 = off)
+        fault_jitter_ms: args.usize_or("fault-jitter-ms", 0) as u64,
+        // --bounded-stats keeps latency accounting in streaming
+        // histograms only (no per-sample vectors)
+        bounded_stats: args.flag("bounded-stats"),
     };
     let (handle, join) = engine::spawn(cfg);
     let tok = Arc::new(Tokenizer::byte_level());

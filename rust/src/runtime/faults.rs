@@ -95,17 +95,22 @@ pub fn classify(site: FaultSite, err: &anyhow::Error) -> FaultClass {
 }
 
 /// Retry policy for transient faults (`--fault-retries` /
-/// `--fault-backoff-ms`): up to `retries` re-attempts with exponential
-/// backoff starting at `backoff_ms` (doubling per attempt).
+/// `--fault-backoff-ms` / `--fault-jitter-ms`): up to `retries`
+/// re-attempts with exponential backoff starting at `backoff_ms`
+/// (doubling per attempt), plus up to `jitter_ms` of deterministic
+/// seeded jitter to de-synchronize retry storms across workers.
 #[derive(Debug, Clone, Copy)]
 pub struct FaultPolicy {
     pub retries: usize,
     pub backoff_ms: u64,
+    /// Max extra delay per retry; 0 (the default) disables jitter so
+    /// chaos replays stay bit-identical unless explicitly opted in.
+    pub jitter_ms: u64,
 }
 
 impl Default for FaultPolicy {
     fn default() -> FaultPolicy {
-        FaultPolicy { retries: 3, backoff_ms: 10 }
+        FaultPolicy { retries: 3, backoff_ms: 10, jitter_ms: 0 }
     }
 }
 
@@ -115,6 +120,25 @@ impl FaultPolicy {
     pub fn backoff_for(&self, attempt: usize) -> u64 {
         let shift = attempt.saturating_sub(1).min(16) as u32;
         self.backoff_ms.saturating_mul(1u64 << shift)
+    }
+
+    /// Jitter for retry `attempt` of a call at (`site`, `tag`), in
+    /// `0..=jitter_ms`: an FNV-1a hash of the retry coordinates — no
+    /// clock, no RNG — so the same plan replays the same delays, while
+    /// distinct sites/tags/attempts spread out instead of thundering in
+    /// lockstep.
+    pub fn jitter_for(&self, site: FaultSite, tag: &str, attempt: usize) -> u64 {
+        if self.jitter_ms == 0 {
+            return 0;
+        }
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in site.as_str().bytes().chain(tag.bytes()) {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0100_0000_01b3);
+        }
+        h ^= attempt as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+        h % self.jitter_ms.saturating_add(1)
     }
 }
 
@@ -390,12 +414,38 @@ mod tests {
 
     #[test]
     fn backoff_is_exponential_and_saturating() {
-        let p = FaultPolicy { retries: 3, backoff_ms: 10 };
+        let p = FaultPolicy { retries: 3, backoff_ms: 10, jitter_ms: 0 };
         assert_eq!(p.backoff_for(1), 10);
         assert_eq!(p.backoff_for(2), 20);
         assert_eq!(p.backoff_for(3), 40);
-        let big = FaultPolicy { retries: 99, backoff_ms: u64::MAX };
+        let big = FaultPolicy {
+            retries: 99,
+            backoff_ms: u64::MAX,
+            jitter_ms: 0,
+        };
         assert_eq!(big.backoff_for(64), u64::MAX, "saturates, no overflow");
+    }
+
+    #[test]
+    fn jitter_is_deterministic_bounded_and_off_by_default() {
+        let p = FaultPolicy { jitter_ms: 7, ..Default::default() };
+        // pure function of the retry coordinates: replays identically
+        for attempt in 1..=8usize {
+            let j = p.jitter_for(FaultSite::Exec, "decode_f32", attempt);
+            assert!(j <= 7, "jitter {j} exceeds jitter_ms");
+            assert_eq!(
+                j,
+                p.jitter_for(FaultSite::Exec, "decode_f32", attempt)
+            );
+        }
+        // coordinates actually spread: not every attempt collides
+        let spread: std::collections::BTreeSet<u64> = (1..=16)
+            .map(|a| p.jitter_for(FaultSite::Transfer, "h2d", a))
+            .collect();
+        assert!(spread.len() > 1, "jitter never varies across attempts");
+        // default policy adds nothing — chaos replays stay bit-identical
+        let off = FaultPolicy::default();
+        assert_eq!(off.jitter_for(FaultSite::Exec, "decode_f32", 1), 0);
     }
 
     #[test]

@@ -73,6 +73,24 @@ pub struct TransferStats {
     pub d2h_bytes: u64,
 }
 
+/// One transient-fault retry the runtime slept for; the engine drains
+/// these per step into the trace (`TraceEvent::Retry`).
+#[derive(Debug, Clone)]
+pub struct RetryRecord {
+    pub site: &'static str,
+    pub tag: String,
+    /// 1-based retry attempt
+    pub attempt: usize,
+    /// exponential-backoff portion of the delay, ms
+    pub backoff_ms: u64,
+    /// deterministic jitter portion of the delay, ms
+    pub jitter_ms: u64,
+}
+
+/// Retry-log bound: recording stops (deterministically) past this many
+/// undrained retries, so an un-traced run never grows the log unbounded.
+const RETRY_LOG_CAP: usize = 1024;
+
 pub struct Runtime {
     client: PjRtClient,
     dir: PathBuf,
@@ -100,6 +118,10 @@ pub struct Runtime {
     fault_policy: Cell<FaultPolicy>,
     /// cumulative injection/retry/recovery accounting
     fault_stats: RefCell<FaultStats>,
+    /// undrained per-retry delay records (bounded by `RETRY_LOG_CAP`)
+    retry_log: RefCell<Vec<RetryRecord>>,
+    /// cumulative jitter slept across all retries, ms
+    jitter_slept_ms: Cell<u64>,
 }
 
 impl Runtime {
@@ -122,6 +144,8 @@ impl Runtime {
             faults: RefCell::new(None),
             fault_policy: Cell::new(FaultPolicy::default()),
             fault_stats: RefCell::new(FaultStats::default()),
+            retry_log: RefCell::new(Vec::new()),
+            jitter_slept_ms: Cell::new(0),
         })
     }
 
@@ -141,6 +165,16 @@ impl Runtime {
     /// Snapshot of the cumulative fault counters.
     pub fn fault_stats(&self) -> FaultStats {
         *self.fault_stats.borrow()
+    }
+
+    /// Take the undrained per-retry delay records (trace feed).
+    pub fn drain_retries(&self) -> Vec<RetryRecord> {
+        std::mem::take(&mut *self.retry_log.borrow_mut())
+    }
+
+    /// Total jitter slept across all retries so far, ms.
+    pub fn jitter_slept_ms(&self) -> u64 {
+        self.jitter_slept_ms.get()
     }
 
     /// Run a guarded execute/transfer call under the fault policy:
@@ -187,7 +221,24 @@ impl Runtime {
             }
             attempt += 1;
             self.fault_stats.borrow_mut().retried += 1;
-            let ms = policy.backoff_for(attempt);
+            let backoff = policy.backoff_for(attempt);
+            let jitter = policy.jitter_for(site, tag, attempt);
+            self.jitter_slept_ms.set(
+                self.jitter_slept_ms.get().saturating_add(jitter),
+            );
+            {
+                let mut log = self.retry_log.borrow_mut();
+                if log.len() < RETRY_LOG_CAP {
+                    log.push(RetryRecord {
+                        site: site.as_str(),
+                        tag: tag.to_string(),
+                        attempt,
+                        backoff_ms: backoff,
+                        jitter_ms: jitter,
+                    });
+                }
+            }
+            let ms = backoff.saturating_add(jitter);
             if ms > 0 {
                 std::thread::sleep(std::time::Duration::from_millis(ms));
             }

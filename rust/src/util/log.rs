@@ -1,25 +1,31 @@
 //! Leveled stderr logging with wall-clock offsets. Set `AO_LOG=debug` for
-//! verbose output; default level is info.
+//! verbose output; default level is info. `AO_LOG=off` silences
+//! everything — chaos tests use it so expected-fault noise doesn't drown
+//! their own output.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
 
-static LEVEL: AtomicU8 = AtomicU8::new(1); // 0=debug 1=info 2=warn 3=error
+// 0=debug 1=info 2=warn 3=error 4=off (nothing passes `enabled`)
+static LEVEL: AtomicU8 = AtomicU8::new(1);
 static START: OnceLock<Instant> = OnceLock::new();
+
+/// The AO_LOG parse table. Unknown values (and unset) mean info.
+pub fn level_from(s: &str) -> u8 {
+    match s {
+        "debug" => 0,
+        "warn" => 2,
+        "error" => 3,
+        "off" => 4,
+        _ => 1,
+    }
+}
 
 pub fn init() {
     START.get_or_init(Instant::now);
     let lvl = crate::util::env::var("AO_LOG").unwrap_or_default();
-    LEVEL.store(
-        match lvl.as_str() {
-            "debug" => 0,
-            "warn" => 2,
-            "error" => 3,
-            _ => 1,
-        },
-        Ordering::Relaxed,
-    );
+    LEVEL.store(level_from(&lvl), Ordering::Relaxed);
 }
 
 pub fn enabled(level: u8) -> bool {
@@ -47,4 +53,37 @@ macro_rules! info {
 #[macro_export]
 macro_rules! warn {
     ($($arg:tt)*) => { $crate::util::log::emit(2, "wrn", &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::util::log::emit(3, "err", &format!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse_table() {
+        assert_eq!(level_from("debug"), 0);
+        assert_eq!(level_from("info"), 1);
+        assert_eq!(level_from("warn"), 2);
+        assert_eq!(level_from("error"), 3);
+        assert_eq!(level_from("off"), 4);
+        // unset / unknown both fall back to info
+        assert_eq!(level_from(""), 1);
+        assert_eq!(level_from("verbose"), 1);
+    }
+
+    #[test]
+    fn off_silences_even_errors() {
+        let prev = LEVEL.load(Ordering::Relaxed);
+        LEVEL.store(level_from("off"), Ordering::Relaxed);
+        assert!(!enabled(3));
+        LEVEL.store(level_from("error"), Ordering::Relaxed);
+        assert!(enabled(3));
+        assert!(!enabled(2));
+        LEVEL.store(prev, Ordering::Relaxed);
+    }
 }

@@ -52,6 +52,159 @@ pub fn summarize(samples: &[f64]) -> Summary {
     }
 }
 
+/// Log-bucket streaming histogram: fixed memory regardless of sample
+/// count, mergeable across collectors (fleet aggregation), with
+/// percentile estimates bounded by the bucket geometry.
+///
+/// Bucket `i` covers `[HIST_MIN * HIST_GROWTH^i, HIST_MIN *
+/// HIST_GROWTH^(i+1))` seconds; bucket 0 additionally absorbs everything
+/// at or below `HIST_MIN` and the last bucket absorbs overflow. With
+/// `HIST_MIN = 1µs` and 96 buckets of ×1.25 growth the range spans
+/// ~1µs..2100s. Percentile estimates return the geometric midpoint of
+/// the rank's bucket (clamped to the observed min/max), so the relative
+/// error is at most `sqrt(HIST_GROWTH) − 1` ≈ 11.8% — strictly within
+/// one bucket width of the exact-sample value.
+pub const HIST_BUCKETS: usize = 96;
+pub const HIST_MIN: f64 = 1e-6;
+pub const HIST_GROWTH: f64 = 1.25;
+
+/// Lower/upper bound of bucket `i` (seconds).
+pub fn hist_bucket_bounds(i: usize) -> (f64, f64) {
+    let lo = HIST_MIN * HIST_GROWTH.powi(i as i32);
+    (lo, lo * HIST_GROWTH)
+}
+
+/// Bucket index for a sample (negatives/zeros land in bucket 0,
+/// overflow in the last bucket; callers filter NaN).
+pub fn hist_bucket_of(v: f64) -> usize {
+    if !(v > HIST_MIN) {
+        return 0;
+    }
+    let i = ((v / HIST_MIN).ln() / HIST_GROWTH.ln()).floor();
+    if i < 0.0 {
+        0
+    } else {
+        (i as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    counts: [u64; HIST_BUCKETS],
+    n: u64,
+    sum: f64,
+    sum_sq: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram {
+            counts: [0; HIST_BUCKETS],
+            n: 0,
+            sum: 0.0,
+            sum_sq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        if v.is_nan() {
+            return;
+        }
+        self.counts[hist_bucket_of(v)] += 1;
+        self.n += 1;
+        self.sum += v;
+        self.sum_sq += v * v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn len(&self) -> u64 {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Fold another histogram in (fleet aggregation: per-worker
+    /// histograms merge into one without resampling).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (c, o) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *c += o;
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        self.sum_sq += other.sum_sq;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Non-empty buckets as `(index, count)` pairs — the wire format the
+    /// JSON stats snapshot carries for external aggregators.
+    pub fn sparse_counts(&self) -> Vec<(usize, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (i, c))
+            .collect()
+    }
+
+    /// Nearest-rank percentile estimate: same rank formula as
+    /// `percentile()`, resolved to the geometric midpoint of the bucket
+    /// holding that rank, clamped to the observed min/max.
+    pub fn percentile_est(&self, p: f64) -> f64 {
+        if self.n == 0 {
+            return f64::NAN;
+        }
+        let rank = (p / 100.0 * (self.n - 1) as f64).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            seen += c;
+            if rank < seen {
+                let (lo, hi) = hist_bucket_bounds(i);
+                return (lo * hi).sqrt().clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Summary with exact n/mean/std/min/max (tracked as moments) and
+    /// bucket-estimated percentiles.
+    pub fn summary(&self) -> Summary {
+        if self.n == 0 {
+            return summarize(&[]);
+        }
+        let n = self.n as f64;
+        let mean = self.sum / n;
+        let var = (self.sum_sq / n - mean * mean).max(0.0);
+        Summary {
+            n: self.n as usize,
+            mean,
+            std: var.sqrt(),
+            min: self.min,
+            max: self.max,
+            p50: self.percentile_est(50.0),
+            p90: self.percentile_est(90.0),
+            p95: self.percentile_est(95.0),
+            p99: self.percentile_est(99.0),
+        }
+    }
+}
+
 /// Bench loop: warm up, then time `iters` calls, returning per-call seconds.
 pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> {
     for _ in 0..warmup {
@@ -150,6 +303,102 @@ mod tests {
     fn rss_readable() {
         assert!(peak_rss_bytes().unwrap() > 0);
         assert!(rss_bytes().unwrap() > 0);
+    }
+
+    #[test]
+    fn hist_bucket_boundaries() {
+        // underflow and overflow clamp to the end buckets
+        assert_eq!(hist_bucket_of(0.0), 0);
+        assert_eq!(hist_bucket_of(-1.0), 0);
+        assert_eq!(hist_bucket_of(HIST_MIN), 0);
+        assert_eq!(hist_bucket_of(1e12), HIST_BUCKETS - 1);
+        // consecutive buckets tile the range with ratio HIST_GROWTH
+        for i in 0..HIST_BUCKETS - 1 {
+            let (lo, hi) = hist_bucket_bounds(i);
+            let (lo2, _) = hist_bucket_bounds(i + 1);
+            assert!((hi / lo - HIST_GROWTH).abs() < 1e-12);
+            assert!((lo2 - hi).abs() < hi * 1e-12);
+        }
+        // a recorded value falls inside its bucket's bounds
+        for k in 1..400 {
+            let v = 1e-5 * 1.09f64.powi(k);
+            let i = hist_bucket_of(v);
+            let (lo, hi) = hist_bucket_bounds(i);
+            if i < HIST_BUCKETS - 1 {
+                assert!(
+                    v >= lo * (1.0 - 1e-9) && v <= hi * (1.0 + 1e-9),
+                    "v={v} bucket={i} [{lo},{hi})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hist_merge_matches_combined() {
+        let vals: Vec<f64> = (0..200)
+            .map(|i| 1e-4 * (1.0 + ((i * 37) % 97) as f64))
+            .collect();
+        let mut all = LogHistogram::new();
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        for (i, &v) in vals.iter().enumerate() {
+            all.record(v);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.len(), all.len());
+        assert_eq!(a.sparse_counts(), all.sparse_counts());
+        let (sa, sall) = (a.summary(), all.summary());
+        assert_eq!(sa.min, sall.min);
+        assert_eq!(sa.max, sall.max);
+        assert!((sa.mean - sall.mean).abs() < 1e-12);
+        assert_eq!(sa.p95, sall.p95);
+    }
+
+    #[test]
+    fn hist_percentiles_within_bucket_error_of_oracle() {
+        // samples spanning several decades, deterministic shuffle
+        let vals: Vec<f64> = (0..500)
+            .map(|i| {
+                let scale = 10f64.powi(-(((i * 13) % 4) as i32) - 1);
+                scale * (1.0 + ((i * 2654435761u64 as usize) % 900) as f64 / 100.0)
+            })
+            .collect();
+        let mut h = LogHistogram::new();
+        for &v in &vals {
+            h.record(v);
+        }
+        let exact = summarize(&vals);
+        let est = h.summary();
+        for (e, x) in [
+            (est.p50, exact.p50),
+            (est.p90, exact.p90),
+            (est.p95, exact.p95),
+            (est.p99, exact.p99),
+        ] {
+            let ratio = e / x;
+            assert!(
+                ratio >= 1.0 / HIST_GROWTH && ratio <= HIST_GROWTH,
+                "estimate {e} vs exact {x}: off by more than one bucket"
+            );
+        }
+        assert_eq!(est.min, exact.min);
+        assert_eq!(est.max, exact.max);
+        assert!((est.mean - exact.mean).abs() < 1e-12 * exact.mean.abs());
+    }
+
+    #[test]
+    fn hist_empty_is_nan_like_summarize() {
+        let h = LogHistogram::new();
+        assert!(h.is_empty());
+        let s = h.summary();
+        assert!(s.mean.is_nan());
+        assert!(s.p95.is_nan());
+        assert!(h.percentile_est(50.0).is_nan());
     }
 
     #[test]

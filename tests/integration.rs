@@ -143,6 +143,11 @@ fn engine_serves_batched_requests() {
         fault_plan: None,
         max_queue: None,
         default_deadline_ms: None,
+        trace: false,
+        trace_capacity: 0,
+        trace_out: None,
+        fault_jitter_ms: 0,
+        bounded_stats: false,
     });
 
     let mut rxs = Vec::new();
@@ -213,6 +218,11 @@ fn engine_greedy_decode_is_deterministic() {
             fault_plan: None,
             max_queue: None,
             default_deadline_ms: None,
+            trace: false,
+            trace_capacity: 0,
+            trace_out: None,
+            fault_jitter_ms: 0,
+            bounded_stats: false,
         });
         let (tx, rx) = channel();
         handle
@@ -282,6 +292,11 @@ fn decode_host_traffic_is_logits_only() {
         fault_plan: None,
         max_queue: None,
         default_deadline_ms: None,
+        trace: false,
+        trace_capacity: 0,
+        trace_out: None,
+        fault_jitter_ms: 0,
+        bounded_stats: false,
     });
     let mut rxs = Vec::new();
     for i in 0..3u64 {
@@ -369,6 +384,11 @@ fn context_cap_grants_the_last_cache_slot() {
         fault_plan: None,
         max_queue: None,
         default_deadline_ms: None,
+        trace: false,
+        trace_capacity: 0,
+        trace_out: None,
+        fault_jitter_ms: 0,
+        bounded_stats: false,
     });
     let (tx, rx) = channel();
     handle
@@ -444,6 +464,11 @@ fn oversized_head_does_not_stall_admission() {
         fault_plan: None,
         max_queue: None,
         default_deadline_ms: None,
+        trace: false,
+        trace_capacity: 0,
+        trace_out: None,
+        fault_jitter_ms: 0,
+        bounded_stats: false,
     });
     // head: too long for any bucket; followers: ordinary prompts
     let (bad_tx, bad_rx) = channel();
@@ -595,6 +620,11 @@ fn admission_rows_only_under(cache_scheme: CacheScheme) {
         fault_plan: None,
         max_queue: None,
         default_deadline_ms: None,
+        trace: false,
+        trace_capacity: 0,
+        trace_out: None,
+        fault_jitter_ms: 0,
+        bounded_stats: false,
     });
     let mut rxs = Vec::new();
     for i in 0..3u64 {
@@ -691,6 +721,11 @@ fn admission_paths_agree_under(cache_scheme: CacheScheme) {
             fault_plan: None,
             max_queue: None,
             default_deadline_ms: None,
+            trace: false,
+            trace_capacity: 0,
+            trace_out: None,
+            fault_jitter_ms: 0,
+            bounded_stats: false,
         });
         let mut rxs = Vec::new();
         for i in 0..4u64 {
@@ -784,6 +819,11 @@ fn kv_cache_schemes_agree() {
             fault_plan: None,
             max_queue: None,
             default_deadline_ms: None,
+            trace: false,
+            trace_capacity: 0,
+            trace_out: None,
+            fault_jitter_ms: 0,
+            bounded_stats: false,
         });
         let mut rxs = Vec::new();
         for i in 0..5u64 {
@@ -895,6 +935,11 @@ fn kv_layouts_agree() {
                 fault_plan: None,
                 max_queue: None,
                 default_deadline_ms: None,
+                trace: false,
+                trace_capacity: 0,
+                trace_out: None,
+                fault_jitter_ms: 0,
+                bounded_stats: false,
             });
             let mut rxs = Vec::new();
             // mixed short/long greedy workload, more requests than fit at
@@ -1039,6 +1084,11 @@ fn prefix_cache_agrees() {
                 fault_plan: None,
                 max_queue: None,
                 default_deadline_ms: None,
+                trace: false,
+                trace_capacity: 0,
+                trace_out: None,
+                fault_jitter_ms: 0,
+                bounded_stats: false,
             });
             let collect = |rx: std::sync::mpsc::Receiver<Event>| {
                 let mut toks = Vec::new();
@@ -1184,6 +1234,11 @@ fn sampled_requests_diverge() {
         fault_plan: None,
         max_queue: None,
         default_deadline_ms: None,
+        trace: false,
+        trace_capacity: 0,
+        trace_out: None,
+        fault_jitter_ms: 0,
+        bounded_stats: false,
     });
     // identical prompts, temperature 1.0, seed == id (the collapsing case)
     let mut rxs = Vec::new();
@@ -1257,6 +1312,11 @@ fn empty_prompt_is_rejected() {
         fault_plan: None,
         max_queue: None,
         default_deadline_ms: None,
+        trace: false,
+        trace_capacity: 0,
+        trace_out: None,
+        fault_jitter_ms: 0,
+        bounded_stats: false,
     });
     let (bad_tx, bad_rx) = channel();
     handle
@@ -1380,6 +1440,13 @@ fn scheduler_agrees() {
                     fault_plan: None,
                     max_queue: None,
                     default_deadline_ms: None,
+                    // tracing on: the scheduler-parity gate must hold
+                    // with the observer attached
+                    trace: true,
+                    trace_capacity: 0,
+                    trace_out: None,
+                    fault_jitter_ms: 0,
+                    bounded_stats: false,
                 });
                 let mut rxs = Vec::new();
                 // two short-prompt decoders first (they sit in Decoding
@@ -1547,6 +1614,13 @@ fn engine_survives_injected_faults() {
                     fault_plan: fault_plan.map(String::from),
                     max_queue: None,
                     default_deadline_ms: None,
+                    // tracing on: fault containment must hold with the
+                    // observer attached (and retries land in the trace)
+                    trace: true,
+                    trace_capacity: 0,
+                    trace_out: None,
+                    fault_jitter_ms: 0,
+                    bounded_stats: false,
                 });
                 let mut rxs = Vec::new();
                 // mixed prompt lengths so admission spans buckets (and
@@ -1664,6 +1738,11 @@ fn exhausted_faults_fail_slots_not_the_engine() {
         fault_plan: Some("exec:decode:at=2".into()),
         max_queue: None,
         default_deadline_ms: None,
+        trace: false,
+        trace_capacity: 0,
+        trace_out: None,
+        fault_jitter_ms: 0,
+        bounded_stats: false,
     });
     let mut rxs = Vec::new();
     for i in 0..2u64 {
@@ -1766,6 +1845,11 @@ fn contained_failure_resumes_decoding_slots() {
             fault_plan: fault_plan.map(String::from),
             max_queue: None,
             default_deadline_ms: None,
+            trace: false,
+            trace_capacity: 0,
+            trace_out: None,
+            fault_jitter_ms: 0,
+            bounded_stats: false,
         });
         let mut rxs = Vec::new();
         // short prompts: everything is Decoding (with emitted tokens) by
@@ -1852,6 +1936,11 @@ fn drain_completes_inflight() {
         fault_plan: None,
         max_queue: None,
         default_deadline_ms: None,
+        trace: false,
+        trace_capacity: 0,
+        trace_out: None,
+        fault_jitter_ms: 0,
+        bounded_stats: false,
     });
     let mut rxs = Vec::new();
     for i in 0..4u64 {
@@ -1949,6 +2038,11 @@ fn deadlines_shed_queued_and_finish_decoding() {
         fault_plan: None,
         max_queue: None,
         default_deadline_ms: None,
+        trace: false,
+        trace_capacity: 0,
+        trace_out: None,
+        fault_jitter_ms: 0,
+        bounded_stats: false,
     });
     // already expired at submit: the sweep rejects it before prefill
     let (tx, rx) = channel();
@@ -2050,6 +2144,11 @@ fn cancel_releases_slot_and_pages() {
         fault_plan: None,
         max_queue: None,
         default_deadline_ms: None,
+        trace: false,
+        trace_capacity: 0,
+        trace_out: None,
+        fault_jitter_ms: 0,
+        bounded_stats: false,
     });
     let (tx, rx) = channel();
     handle
@@ -2143,6 +2242,11 @@ fn server_disconnect_cancels_request() {
         fault_plan: None,
         max_queue: None,
         default_deadline_ms: None,
+        trace: false,
+        trace_capacity: 0,
+        trace_out: None,
+        fault_jitter_ms: 0,
+        bounded_stats: false,
     });
     // grab a free port, then serve exactly three connections on it
     let addr = {
@@ -2202,4 +2306,109 @@ fn server_disconnect_cancels_request() {
         "the abandoned stream must cancel engine-side"
     );
     assert!(m.rejected_overload >= 1);
+}
+
+/// Live introspection: the `{"op": "stats"}` server op answers with a
+/// `{"stats": {...}}` JSON snapshot without closing the connection, and
+/// the snapshot's counters equal the engine's final report, under both
+/// KV-cache schemes and with the tracer attached. Contract:
+/// docs/observability.md.
+#[test]
+fn stats_op_roundtrip() {
+    use ao::util::json::Value;
+    use std::io::{BufRead, BufReader, Write};
+    let Some(dir) = artifacts_dir() else { return };
+    for cache_scheme in [CacheScheme::F32, CacheScheme::Int8] {
+        if !has_admit_artifacts(&dir, cache_scheme) {
+            return;
+        }
+        let master = tiny_master_ckpt(&dir);
+        let tmp = std::env::temp_dir().join("ao_int_tests");
+        std::fs::create_dir_all(&tmp).unwrap();
+        let ckpt_path =
+            tmp.join(format!("tiny_f32_stats_{}.aockpt", cache_scheme.tag()));
+        master.save(&ckpt_path).unwrap();
+
+        let (handle, join) = engine::spawn(engine::EngineConfig {
+            artifacts_dir: dir.clone(),
+            ckpt_path,
+            model: "tiny".into(),
+            scheme: "f32".into(),
+            cache_scheme,
+            kv_layout: KvLayout::Static,
+            eos_token: None,
+            host_admission: false,
+            prefix_cache: false,
+            max_batch_tokens: None,
+            fault_retries: 3,
+            fault_backoff_ms: 1,
+            fault_plan: None,
+            max_queue: None,
+            default_deadline_ms: None,
+            // stats must report the same numbers with the tracer attached
+            trace: true,
+            trace_capacity: 0,
+            trace_out: None,
+            fault_jitter_ms: 0,
+            bounded_stats: false,
+        });
+        let addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let server = {
+            let handle = handle.clone();
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                ao::coordinator::server::serve(
+                    &addr,
+                    handle,
+                    std::sync::Arc::new(Tokenizer::byte_level()),
+                    Some(2),
+                )
+            })
+        };
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        // conn 1: a finished generation, so the counters are non-zero
+        let gen = {
+            let mut c =
+                ao::coordinator::server::Client::connect(&addr).unwrap();
+            c.generate("hello world", 8, 0.0).unwrap()
+        };
+        assert_eq!(gen.n_generated, 8, "{:?}", gen.reason);
+        // conn 2: stats snapshot, then shutdown on the SAME connection --
+        // introspection must not consume the connection's request budget
+        let stats = {
+            let mut c = std::net::TcpStream::connect(&addr).unwrap();
+            let mut reader = BufReader::new(c.try_clone().unwrap());
+            writeln!(c, "{{\"op\": \"stats\"}}").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let reply = Value::parse(&line).expect("stats reply is JSON");
+            writeln!(c, "{{\"op\": \"shutdown\"}}").unwrap();
+            let mut bye = String::new();
+            reader.read_line(&mut bye).unwrap();
+            assert!(bye.contains("\"drained\""), "{bye}");
+            reply.req("stats").expect("stats envelope").clone()
+        };
+        server.join().unwrap().unwrap();
+        handle.shutdown();
+        let m = join.join().unwrap().unwrap();
+        // the snapshot was taken after the only request finished, so its
+        // counters must equal the final report's
+        assert_eq!(stats.req_str("label").unwrap(), "engine");
+        assert_eq!(stats.req_usize("requests").unwrap(), m.n_requests);
+        assert_eq!(stats.req_usize("out_tokens").unwrap(), m.n_output_tokens);
+        assert_eq!(stats.req_usize("in_tokens").unwrap(), m.n_prompt_tokens);
+        assert_eq!(stats.req_usize("decode_steps").unwrap(), m.decode_steps);
+        let cache = stats.req("cache").unwrap();
+        assert_eq!(cache.req_str("scheme").unwrap(), cache_scheme.tag());
+        // and the same values appear in the human-readable text report
+        let r = m.report("engine");
+        assert!(r.contains(&format!("requests={}", m.n_requests)), "{r}");
+        assert!(
+            r.contains(&format!("out_tokens={}", m.n_output_tokens)),
+            "{r}"
+        );
+    }
 }

@@ -1097,3 +1097,167 @@ fn prop_request_lifecycle() {
         assert_eq!(pager.free_pages(), n_pages);
     }
 }
+
+#[test]
+fn prop_trace_lifecycle() {
+    // Simulated serving traffic through the trace ring: randomly
+    // interleaved request lifecycles — queued terminals (deadline /
+    // cancel / head-reject), claim, chunked or whole-prompt prefill,
+    // decode, preempt-and-reclaim, every terminal outcome — stamped on
+    // one non-decreasing clock must satisfy `trace::check_spans`, with
+    // interleaved Step/Retry records ignored; and appending a second
+    // terminal for any request must be rejected.
+    use ao::coordinator::trace::{
+        check_spans, StepKind, TraceBuffer, TraceEvent,
+    };
+    use std::collections::VecDeque;
+
+    // one request's scripted events, time-free until emission
+    #[derive(Clone)]
+    enum S {
+        Enq(usize),
+        Claim(usize),
+        Chunk(usize, usize),
+        Dec,
+        Fin(&'static str),
+    }
+
+    check(
+        "trace-lifecycle",
+        40,
+        |r| r.below(1_000_000),
+        |&seed| {
+            let mut rng = Rng::new(0xBEEF ^ seed as u64);
+            let n_req = 1 + rng.below(12);
+            let mut scripts: Vec<VecDeque<S>> = Vec::new();
+            for _ in 0..n_req {
+                let n_prompt = 1 + rng.below(8);
+                let mut s = VecDeque::new();
+                s.push_back(S::Enq(n_prompt));
+                if rng.chance(0.2) {
+                    // terminal while still queued: expired deadline,
+                    // client cancel, or a batcher head-reject
+                    let out =
+                        ["deadline", "canceled", "rejected"][rng.below(3)];
+                    s.push_back(S::Fin(out));
+                    scripts.push(s);
+                    continue;
+                }
+                // 1 + preemptions claim/prefill/decode rounds; a requeue
+                // re-enters via the front of the queue WITHOUT a second
+                // Enqueued (double Claimed is legal)
+                let rounds = 1 + rng.below(3);
+                for round in 0..rounds {
+                    s.push_back(S::Claim(rng.below(4)));
+                    // resumed prompts grow by the tokens emitted so far
+                    let len = n_prompt + 2 * round;
+                    if rng.chance(0.5) {
+                        // scheduler path: chunked prefill
+                        let mut start = 0;
+                        while start < len {
+                            let take = 1 + rng.below(len - start);
+                            s.push_back(S::Chunk(start, take));
+                            start += take;
+                        }
+                    } // else whole-prompt admission: no chunk events
+                    s.push_back(S::Dec);
+                }
+                let out = ["eos", "length", "context_full", "failed",
+                           "canceled"][rng.below(5)];
+                s.push_back(S::Fin(out));
+                scripts.push(s);
+            }
+            let total: usize = scripts.iter().map(|s| s.len()).sum();
+
+            let mut buf = TraceBuffer::new(4096);
+            let mut t: u64 = 0;
+            while let Some(pick) = {
+                let live: Vec<usize> = (0..scripts.len())
+                    .filter(|&i| !scripts[i].is_empty())
+                    .collect();
+                if live.is_empty() {
+                    None
+                } else {
+                    Some(live[rng.below(live.len())])
+                }
+            } {
+                // non-decreasing, NOT strictly increasing: events from
+                // one engine step share a microsecond
+                if !rng.chance(0.3) {
+                    t += 1 + rng.below(40) as u64;
+                }
+                let id = pick as u64;
+                let ev = match scripts[pick].pop_front().unwrap() {
+                    S::Enq(n) => {
+                        TraceEvent::Enqueued { id, t_us: t, n_prompt: n }
+                    }
+                    S::Claim(slot) => {
+                        TraceEvent::Claimed { id, t_us: t, slot }
+                    }
+                    S::Chunk(start, take) => TraceEvent::PrefillChunk {
+                        id,
+                        t_us: t,
+                        start,
+                        take,
+                    },
+                    S::Dec => TraceEvent::Decoding { id, t_us: t },
+                    S::Fin(out) => TraceEvent::Finished {
+                        id,
+                        t_us: t,
+                        outcome: out.into(),
+                    },
+                };
+                buf.record(ev);
+                // engine-level records carry no request id and must be
+                // invisible to the span checker
+                if rng.chance(0.15) {
+                    buf.record(TraceEvent::Step {
+                        step: t,
+                        t_us: t,
+                        kind: StepKind::Mixed,
+                        rows: rng.below(4),
+                        tokens: rng.below(64),
+                        exec_us: 10,
+                        h2d_bytes: 0,
+                        d2h_bytes: 0,
+                        retries: 0,
+                        preemptions: 0,
+                        prefix_hits: 0,
+                        pages_used: 0,
+                    });
+                }
+                if rng.chance(0.05) {
+                    buf.record(TraceEvent::Retry {
+                        t_us: t,
+                        site: "exec".into(),
+                        tag: "decode".into(),
+                        attempt: 1,
+                        delay_ms: 1,
+                    });
+                }
+            }
+            if buf.dropped() != 0 {
+                return Err(format!(
+                    "ring dropped {} events under capacity", buf.dropped()
+                ));
+            }
+            if buf.len() < total {
+                return Err(format!(
+                    "recorded {} < scripted {total}", buf.len()
+                ));
+            }
+            check_spans(buf.events())
+                .map_err(|e| format!("well-formed trace rejected: {e}"))?;
+            // a second terminal for any request must be caught
+            buf.record(TraceEvent::Finished {
+                id: rng.below(n_req) as u64,
+                t_us: t + 1,
+                outcome: "eos".into(),
+            });
+            if check_spans(buf.events()).is_ok() {
+                return Err("double terminal must be rejected".into());
+            }
+            Ok(())
+        },
+    );
+}

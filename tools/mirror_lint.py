@@ -623,6 +623,11 @@ R3_TABLE = [
     ("max_queue", "max-queue", ("env", "AO_MAX_QUEUE")),
     ("default_deadline_ms", "default-deadline-ms",
      ("env", "AO_DEFAULT_DEADLINE_MS")),
+    ("trace", "trace", ("env", "AO_TRACE")),
+    ("trace_capacity", "trace-capacity", ("env", "AO_TRACE_CAPACITY")),
+    ("trace_out", "trace-out", ("env", "AO_TRACE_OUT")),
+    ("fault_jitter_ms", "fault-jitter-ms", ("env", "AO_FAULT_JITTER_MS")),
+    ("bounded_stats", "bounded-stats", ("env", "AO_BOUNDED_STATS")),
 ]
 
 
@@ -796,6 +801,98 @@ def drop_send_census(files):
     )
 
 
+# ---------------- r6_trace.rs ----------------
+
+def enum_variants(toks, name):
+    out = []
+    i = 0
+    while i + 2 < len(toks):
+        if (
+            toks[i][:2] == ("ident", "enum")
+            and toks[i + 1][:2] == ("ident", name)
+        ):
+            j = i + 2
+            while j < len(toks) and toks[j][:2] != ("punct", "{"):
+                j += 1
+            depth = 0
+            at_head = False
+            while j < len(toks):
+                if toks[j][:2] == ("punct", "{"):
+                    depth += 1
+                    if depth == 1:
+                        at_head = True
+                        j += 1
+                        continue
+                if toks[j][:2] == ("punct", "}"):
+                    depth -= 1
+                    if depth == 0:
+                        break
+                if depth == 1:
+                    if at_head and toks[j][0] == "ident":
+                        out.append((toks[j][1], toks[j][2]))
+                    at_head = toks[j][:2] == ("punct", ",")
+                j += 1
+            break
+        i += 1
+    return out
+
+
+def variant_mentions(toks):
+    out = set()
+    for k in range(len(toks)):
+        if (
+            toks[k][:2] == ("ident", "TraceEvent")
+            and k + 3 < len(toks)
+            and toks[k + 1][:2] == ("punct", ":")
+            and toks[k + 2][:2] == ("punct", ":")
+            and toks[k + 3][0] == "ident"
+        ):
+            out.add(toks[k + 3][1])
+    return out
+
+
+def r6_check(trace, scope):
+    out = []
+    trace_toks = strip_cfg_test(lex_rust(trace[1]))
+    variants = enum_variants(trace_toks, "TraceEvent")
+
+    constructed = set()
+    for path, text in scope:
+        if path == trace[0]:
+            continue
+        constructed |= variant_mentions(strip_cfg_test(lex_rust(text)))
+
+    methods = method_bodies(trace_toks)
+    rendered = set()
+    seen = set()
+    stack = ["dump_jsonl", "dump_chrome"]
+    while stack:
+        name = stack.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        body = methods.get(name)
+        if body is None:
+            continue
+        rendered |= variant_mentions(body)
+        for k, t in enumerate(body):
+            if (
+                t[0] == "ident"
+                and k + 1 < len(body)
+                and body[k + 1][:2] == ("punct", "(")
+            ):
+                stack.append(t[1])
+
+    for v, line in variants:
+        if v not in constructed:
+            out.append(("r6-trace", trace[0], line,
+                        f"variant '{v}' never constructed"))
+        if v not in rendered:
+            out.append(("r6-trace", trace[0], line,
+                        f"variant '{v}' unreachable from dump path"))
+    return out
+
+
 # ---------------- main.rs run_all ----------------
 
 R1_DIRS = ["rust/src/coordinator", "rust/src/runtime"]
@@ -843,6 +940,7 @@ def run_all():
     out.extend(r3_check(engine, main_rs, bench, lib_rs, docs))
     out.extend(r4_check(load("rust/src/coordinator/metrics.rs")))
     out.extend(r5_check(scope))
+    out.extend(r6_check(load("rust/src/coordinator/trace.rs"), scope))
     return out, scope
 
 
