@@ -54,6 +54,13 @@ fn bench_json_entry(label: &str, m: &MetricsCollector) -> Value {
         ("rejected_overload", json::num(m.rejected_overload as f64)),
         ("rejected_deadline", json::num(m.rejected_deadline as f64)),
         ("n_canceled", json::num(m.n_canceled as f64)),
+        ("mem_weights_bytes", json::num(m.mem_weights_bytes as f64)),
+        ("mem_kv_pages_bytes", json::num(m.mem_kv_pages_bytes as f64)),
+        (
+            "mem_scale_pages_bytes",
+            json::num(m.mem_scale_pages_bytes as f64),
+        ),
+        ("mem_total_bytes", json::num(m.mem_total_bytes as f64)),
     ])
 }
 
@@ -182,6 +189,31 @@ fn main() -> anyhow::Result<()> {
         bench_entries.push(bench_json_entry(&format!("quant:{label}"), &m));
         table1_rows.push((label.to_string(), tput, tpot, itl));
 
+        // Device-memory ledger cross-check (acceptance gate): the
+        // runtime ledger's kv+scale stakes must reproduce the engine's
+        // cache-resident accounting byte-for-byte, and the category
+        // stakes must sum to the ledger total with no unattributed
+        // remainder — a drifted stake means a metering site was lost.
+        anyhow::ensure!(
+            m.mem_kv_pages_bytes + m.mem_scale_pages_bytes
+                == m.cache_resident_bytes,
+            "mem ledger drift: kv_pages {} + scale_pages {} != cache \
+             resident {}",
+            m.mem_kv_pages_bytes,
+            m.mem_scale_pages_bytes,
+            m.cache_resident_bytes
+        );
+        let cat_sum = m.mem_weights_bytes
+            + m.mem_kv_pages_bytes
+            + m.mem_scale_pages_bytes
+            + m.mem_io_bytes
+            + m.mem_trace_bytes;
+        anyhow::ensure!(
+            cat_sum == m.mem_total_bytes,
+            "mem ledger categories sum to {cat_sum} but total is {}",
+            m.mem_total_bytes
+        );
+
         // Streaming-histogram parity (acceptance gate): on this very
         // workload the log-bucket estimate must land within one bucket
         // width of the exact-sample percentile — the bound that makes
@@ -210,6 +242,39 @@ fn main() -> anyhow::Result<()> {
                  {:.3} ms (within one 1.25x bucket)",
                 m.hist_itl.percentile_est(95.0) * 1e3,
                 m.itl().p95 * 1e3,
+            );
+
+            // Rolling SLO window parity (acceptance gate): this run is
+            // far shorter than the 5m rolling span, so the merged
+            // window must hold every sample the lifetime histogram
+            // recorded, and its p95 must land within one log-bucket of
+            // the exact per-sample percentile.
+            let roll_5m = m.rolling(&m.win_itl, 300);
+            anyhow::ensure!(
+                roll_5m.len() == m.hist_itl.len(),
+                "rolling 5m ITL window holds {} samples but the \
+                 lifetime histogram holds {}",
+                roll_5m.len(),
+                m.hist_itl.len()
+            );
+            let roll_p95 = roll_5m.percentile_est(95.0);
+            anyhow::ensure!(
+                hist_bucket_of(roll_p95)
+                    .abs_diff(hist_bucket_of(m.itl().p95))
+                    <= 1,
+                "rolling 5m ITL p95 {roll_p95:.6}s is more than one \
+                 bucket from the exact {:.6}s",
+                m.itl().p95
+            );
+            println!(
+                "  rolling vs lifetime (f32): itl p95 1m {:.3} ms / 5m \
+                 {:.3} ms vs lifetime {:.3} ms; ttft p95 5m {:.3} ms vs \
+                 lifetime {:.3} ms",
+                m.rolling(&m.win_itl, 60).percentile_est(95.0) * 1e3,
+                roll_p95 * 1e3,
+                m.itl().p95 * 1e3,
+                m.rolling(&m.win_ttft, 300).percentile_est(95.0) * 1e3,
+                m.ttft().p95 * 1e3,
             );
         }
     }

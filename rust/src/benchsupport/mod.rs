@@ -353,6 +353,81 @@ pub fn bench_fault_jitter_ms() -> Result<u64> {
     )
 }
 
+/// Parse an optional AO_METRICS_OUT value (None/"" -> no periodic
+/// Prometheus snapshot). The value is the path the engine rewrites
+/// once per SLO window and at shutdown.
+pub fn metrics_out_from(var: Option<&str>) -> Option<PathBuf> {
+    match var {
+        None | Some("") => None,
+        Some(v) => Some(PathBuf::from(v)),
+    }
+}
+
+/// Prometheus snapshot path benches serve with: AO_METRICS_OUT (off
+/// default).
+pub fn bench_metrics_out() -> Option<PathBuf> {
+    metrics_out_from(crate::util::env::var("AO_METRICS_OUT").as_deref())
+}
+
+/// Parse an optional AO_POSTMORTEM_DIR value (None/"" -> no flight
+/// recorder). The value is the bundle directory the engine writes on a
+/// fatal error or `{"op":"dump"}`.
+pub fn postmortem_dir_from(var: Option<&str>) -> Option<PathBuf> {
+    match var {
+        None | Some("") => None,
+        Some(v) => Some(PathBuf::from(v)),
+    }
+}
+
+/// Postmortem bundle dir benches serve with: AO_POSTMORTEM_DIR (off
+/// default).
+pub fn bench_postmortem_dir() -> Option<PathBuf> {
+    postmortem_dir_from(crate::util::env::var("AO_POSTMORTEM_DIR").as_deref())
+}
+
+/// Parse an optional AO_SLO_WINDOW_SECS value (None/"" -> 0, meaning
+/// the engine default of 10-second windows).
+pub fn slo_window_secs_from(var: Option<&str>) -> Result<u64> {
+    match var {
+        None | Some("") => Ok(0),
+        Some(v) => match v.parse::<u64>() {
+            Ok(n) if n > 0 => Ok(n),
+            _ => anyhow::bail!(
+                "AO_SLO_WINDOW_SECS: '{v}' is not a positive window \
+                 width in seconds (unset or empty keeps the engine \
+                 default of 10)"
+            ),
+        },
+    }
+}
+
+/// SLO window width benches serve with: AO_SLO_WINDOW_SECS.
+pub fn bench_slo_window_secs() -> Result<u64> {
+    slo_window_secs_from(
+        crate::util::env::var("AO_SLO_WINDOW_SECS").as_deref(),
+    )
+}
+
+/// Parse an optional AO_SLO_WINDOWS value (None/"" -> 0, meaning the
+/// engine default ring of `stats::SLO_WINDOWS` windows).
+pub fn slo_windows_from(var: Option<&str>) -> Result<usize> {
+    match var {
+        None | Some("") => Ok(0),
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) if n > 0 => Ok(n),
+            _ => anyhow::bail!(
+                "AO_SLO_WINDOWS: '{v}' is not a positive window count \
+                 (unset or empty keeps the engine default)"
+            ),
+        },
+    }
+}
+
+/// SLO ring size benches serve with: AO_SLO_WINDOWS.
+pub fn bench_slo_windows() -> Result<usize> {
+    slo_windows_from(crate::util::env::var("AO_SLO_WINDOWS").as_deref())
+}
+
 /// Parse an optional AO_BOUNDED_STATS value (None/""/"0" -> off: exact
 /// per-sample latency vectors plus histograms; "1" -> histogram-only).
 pub fn bounded_stats_from(var: Option<&str>) -> Result<bool> {
@@ -479,6 +554,14 @@ pub fn serve_workload_traced(
         // AO_BOUNDED_STATS flips latency accounting to histogram-only
         fault_jitter_ms: bench_fault_jitter_ms()?,
         bounded_stats: bench_bounded_stats()?,
+        // AO_METRICS_OUT / AO_POSTMORTEM_DIR / AO_SLO_WINDOW_SECS /
+        // AO_SLO_WINDOWS wire the operational-observability surfaces
+        // (Prometheus snapshot, flight recorder, rolling SLO ring) into
+        // any bench run
+        metrics_out: bench_metrics_out(),
+        postmortem_dir: bench_postmortem_dir(),
+        slo_window_secs: bench_slo_window_secs()?,
+        slo_windows: bench_slo_windows()?,
     });
     let mut rxs = Vec::new();
     for r in &reqs {
@@ -710,6 +793,39 @@ mod tests {
             trace_out_from(Some("runs/trace")),
             Some(PathBuf::from("runs/trace"))
         );
+    }
+
+    #[test]
+    fn observability_env_contract() {
+        assert_eq!(metrics_out_from(None), None);
+        assert_eq!(metrics_out_from(Some("")), None);
+        assert_eq!(
+            metrics_out_from(Some("runs/metrics.prom")),
+            Some(PathBuf::from("runs/metrics.prom"))
+        );
+        assert_eq!(postmortem_dir_from(None), None);
+        assert_eq!(postmortem_dir_from(Some("")), None);
+        assert_eq!(
+            postmortem_dir_from(Some("runs/postmortem")),
+            Some(PathBuf::from("runs/postmortem"))
+        );
+        assert_eq!(slo_window_secs_from(None).unwrap(), 0);
+        assert_eq!(slo_window_secs_from(Some("")).unwrap(), 0);
+        assert_eq!(slo_window_secs_from(Some("5")).unwrap(), 5);
+        let e =
+            format!("{:#}", slo_window_secs_from(Some("0")).unwrap_err());
+        assert!(e.contains("AO_SLO_WINDOW_SECS"), "{e}");
+        let e =
+            format!("{:#}", slo_window_secs_from(Some("x")).unwrap_err());
+        assert!(e.contains("AO_SLO_WINDOW_SECS"), "{e}");
+        assert_eq!(slo_windows_from(None).unwrap(), 0);
+        assert_eq!(slo_windows_from(Some("")).unwrap(), 0);
+        assert_eq!(slo_windows_from(Some("16")).unwrap(), 16);
+        let e = format!("{:#}", slo_windows_from(Some("0")).unwrap_err());
+        assert!(e.contains("AO_SLO_WINDOWS"), "{e}");
+        let e =
+            format!("{:#}", slo_windows_from(Some("many")).unwrap_err());
+        assert!(e.contains("AO_SLO_WINDOWS"), "{e}");
     }
 
     #[test]

@@ -228,11 +228,11 @@ mod tests {
     fn drop_send_marker_census_is_exact() {
         let scope = r1_scope(&root()).expect("scope");
         let census = r5_events::drop_send_census(&scope);
-        // - engine.rs: 16 (terminal Token/Done/Error deliveries, report,
-        //   drain and stats acks — receiver gone means the client hung up
-        //   and the cancel path reclaims the slot)
+        // - engine.rs: 18 (terminal Token/Done/Error deliveries, report,
+        //   drain, stats, metrics and dump acks — receiver gone means the
+        //   client hung up and the cancel path reclaims the slot)
         // - batcher.rs: 4 (admission-rejection error deliveries)
-        assert_eq!(census, 20, "update this census when adding/removing drop_send markers");
+        assert_eq!(census, 22, "update this census when adding/removing drop_send markers");
     }
 
     /// Acceptance probe: a bare unwrap re-added to engine.rs is caught.

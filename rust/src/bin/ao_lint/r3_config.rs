@@ -113,6 +113,26 @@ pub const TABLE: &[ConfigRule] = &[
         flag: "bounded-stats",
         binding: Binding::Env("AO_BOUNDED_STATS"),
     },
+    ConfigRule {
+        field: "metrics_out",
+        flag: "metrics-out",
+        binding: Binding::Env("AO_METRICS_OUT"),
+    },
+    ConfigRule {
+        field: "postmortem_dir",
+        flag: "postmortem-dir",
+        binding: Binding::Env("AO_POSTMORTEM_DIR"),
+    },
+    ConfigRule {
+        field: "slo_window_secs",
+        flag: "slo-window-secs",
+        binding: Binding::Env("AO_SLO_WINDOW_SECS"),
+    },
+    ConfigRule {
+        field: "slo_windows",
+        flag: "slo-windows",
+        binding: Binding::Env("AO_SLO_WINDOWS"),
+    },
 ];
 
 fn push(out: &mut Vec<Finding>, file: &str, line: usize, message: String) {

@@ -1,11 +1,13 @@
 //! R4 — metrics render completeness.
 //!
-//! Every `pub` field of `MetricsCollector` must be readable from the
-//! report rendering: referenced by `report()` directly, or by a method
-//! `report()` transitively calls. A counter that is bumped all over the
-//! engine but never rendered silently vanishes from `table1` and the
-//! `BENCH_*.json` reports — this rule makes that a lint failure instead
-//! of a benchmarking surprise.
+//! Every `pub` field of `MetricsCollector` must be readable from ALL
+//! THREE render surfaces: the text report (`report()`), the JSON report
+//! (`report_json()`), and the Prometheus exposition (`prometheus()`) —
+//! each either reads the field directly or calls a method that does. A
+//! counter that is bumped all over the engine but rendered on only one
+//! surface silently vanishes from the others (`table1`, `BENCH_*.json`,
+//! or the scrape endpoint) — this rule makes that a lint failure
+//! instead of a benchmarking or monitoring surprise.
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -14,9 +16,10 @@ use crate::lexer::{lex_rust, strip_cfg_test, struct_pub_fields, Kind, Tok};
 use crate::SourceFile;
 
 /// Bodies of every `fn` in the file, keyed by name. Later definitions of
-/// the same name overwrite earlier ones; `report` is unique in
-/// metrics.rs, which is all the traversal roots on. R6 reuses this for
-/// its dump-path walk over trace.rs.
+/// the same name overwrite earlier ones; each traversal root (`report`,
+/// `report_json`, `prometheus`) is unique in metrics.rs, which is all
+/// the traversal relies on. R6 reuses this for its dump-path walk over
+/// trace.rs.
 pub fn method_bodies(toks: &[Tok]) -> BTreeMap<String, Vec<Tok>> {
     let mut out = BTreeMap::new();
     let mut i = 0;
@@ -54,54 +57,74 @@ pub fn method_bodies(toks: &[Tok]) -> BTreeMap<String, Vec<Tok>> {
     out
 }
 
+/// The render surfaces every field must be reachable from.
+pub const ROOTS: &[&str] = &["report", "report_json", "prometheus"];
+
 pub fn check(metrics: &SourceFile) -> Vec<Finding> {
     let toks = strip_cfg_test(&lex_rust(&metrics.text));
     let fields = struct_pub_fields(&toks, "MetricsCollector");
     let methods = method_bodies(&toks);
 
-    // Per-method edges: `self.field` reads and `self.method()` calls.
-    let mut covered: BTreeSet<String> = BTreeSet::new();
-    let mut seen: BTreeSet<String> = BTreeSet::new();
-    let mut stack = vec!["report".to_string()];
-    while let Some(name) = stack.pop() {
-        if !seen.insert(name.clone()) {
-            continue;
-        }
-        let Some(body) = methods.get(&name) else {
-            continue;
-        };
-        for (k, t) in body.iter().enumerate() {
-            if !t.is_ident("self") {
+    // Per-method edges: `self.field` reads and `self.method()` calls,
+    // walked transitively from one render root.
+    let covered_from = |root: &str| -> BTreeSet<String> {
+        let mut covered: BTreeSet<String> = BTreeSet::new();
+        let mut seen: BTreeSet<String> = BTreeSet::new();
+        let mut stack = vec![root.to_string()];
+        while let Some(name) = stack.pop() {
+            if !seen.insert(name.clone()) {
                 continue;
             }
-            if !body.get(k + 1).is_some_and(|n| n.is_punct('.')) {
-                continue;
-            }
-            let Some(member) = body.get(k + 2) else {
+            let Some(body) = methods.get(&name) else {
                 continue;
             };
-            if member.kind != Kind::Ident {
-                continue;
-            }
-            if body.get(k + 3).is_some_and(|n| n.is_punct('(')) {
-                stack.push(member.text.clone());
-            } else if fields.iter().any(|(f, _)| *f == member.text) {
-                covered.insert(member.text.clone());
+            for (k, t) in body.iter().enumerate() {
+                if !t.is_ident("self") {
+                    continue;
+                }
+                if !body.get(k + 1).is_some_and(|n| n.is_punct('.')) {
+                    continue;
+                }
+                let Some(member) = body.get(k + 2) else {
+                    continue;
+                };
+                if member.kind != Kind::Ident {
+                    continue;
+                }
+                if body.get(k + 3).is_some_and(|n| n.is_punct('(')) {
+                    stack.push(member.text.clone());
+                } else if fields.iter().any(|(f, _)| *f == member.text) {
+                    covered.insert(member.text.clone());
+                }
             }
         }
-    }
+        covered
+    };
+    let per_root: Vec<(&str, BTreeSet<String>)> =
+        ROOTS.iter().map(|r| (*r, covered_from(r))).collect();
 
     fields
         .iter()
-        .filter(|(f, _)| !covered.contains(f))
-        .map(|(f, line)| Finding {
-            rule: "r4-metrics",
-            file: metrics.path.clone(),
-            line: *line,
-            message: format!(
-                "MetricsCollector field '{f}' is never rendered: report() neither \
-                 reads it nor calls a method that does"
-            ),
+        .filter_map(|(f, line)| {
+            let missing: Vec<&str> = per_root
+                .iter()
+                .filter(|(_, covered)| !covered.contains(f))
+                .map(|(root, _)| *root)
+                .collect();
+            if missing.is_empty() {
+                return None;
+            }
+            Some(Finding {
+                rule: "r4-metrics",
+                file: metrics.path.clone(),
+                line: *line,
+                message: format!(
+                    "MetricsCollector field '{f}' is not rendered by every surface: \
+                     missing from [{}] — report, report_json, and prometheus must \
+                     each read it or call a method that does",
+                    missing.join(", ")
+                ),
+            })
         })
         .collect()
 }
@@ -128,6 +151,12 @@ impl MetricsCollector {
     pub fn report(&self) -> String {
         format!(\"req={} tok/s={}\", self.n_requests, self.tok_rate())
     }
+    pub fn report_json(&self) -> String {
+        format!(\"{} {}\", self.n_requests, self.tok_rate())
+    }
+    pub fn prometheus(&self) -> String {
+        format!(\"{} {}\", self.n_requests, self.n_tokens)
+    }
 }
 ",
         );
@@ -135,7 +164,7 @@ impl MetricsCollector {
     }
 
     #[test]
-    fn unrendered_field_is_flagged() {
+    fn field_rendered_on_no_surface_is_flagged() {
         let f = sf(
             "pub struct MetricsCollector {
     pub n_requests: u64,
@@ -148,13 +177,56 @@ impl MetricsCollector {
     pub fn report(&self) -> String {
         format!(\"req={}\", self.n_requests)
     }
+    pub fn report_json(&self) -> String {
+        format!(\"{}\", self.n_requests)
+    }
+    pub fn prometheus(&self) -> String {
+        format!(\"{}\", self.n_requests)
+    }
 }
 ",
         );
         let finds = check(&f);
         assert_eq!(finds.len(), 1, "{finds:?}");
         assert!(finds[0].message.contains("'n_dropped'"));
+        assert!(
+            finds[0]
+                .message
+                .contains("missing from [report, report_json, prometheus]"),
+            "{finds:?}"
+        );
         assert_eq!(finds[0].line, 3);
+    }
+
+    #[test]
+    fn field_missing_from_one_surface_names_that_surface() {
+        // read by report() and report_json() but not prometheus():
+        // exactly the single-surface drift this rule exists to catch
+        let f = sf(
+            "pub struct MetricsCollector {
+    pub n_requests: u64,
+    pub n_dropped: u64,
+}
+impl MetricsCollector {
+    pub fn report(&self) -> String {
+        format!(\"{} {}\", self.n_requests, self.n_dropped)
+    }
+    pub fn report_json(&self) -> String {
+        format!(\"{} {}\", self.n_requests, self.n_dropped)
+    }
+    pub fn prometheus(&self) -> String {
+        format!(\"{}\", self.n_requests)
+    }
+}
+",
+        );
+        let finds = check(&f);
+        assert_eq!(finds.len(), 1, "{finds:?}");
+        assert!(finds[0].message.contains("'n_dropped'"));
+        assert!(
+            finds[0].message.contains("missing from [prometheus]"),
+            "{finds:?}"
+        );
     }
 
     #[test]
@@ -167,6 +239,12 @@ impl MetricsCollector {
 impl MetricsCollector {
     pub fn report(&self) -> String {
         format!(\"req={}\", self.n_requests)
+    }
+    pub fn report_json(&self) -> String {
+        format!(\"{}\", self.n_requests)
+    }
+    pub fn prometheus(&self) -> String {
+        format!(\"{}\", self.n_requests)
     }
 }
 ",

@@ -108,6 +108,7 @@ use crate::runtime::artifact::{ArtifactSpec, IoSpec};
 use crate::runtime::faults::{FaultInjector, FaultPolicy};
 use crate::runtime::{OwnedBuffer, Runtime};
 use crate::tensor::HostTensor;
+use crate::util::json::{self, Value};
 use crate::util::rng::{mix_seed, Rng};
 use crate::xb::PjRtBuffer;
 use anyhow::{anyhow, bail, Context, Result};
@@ -258,6 +259,81 @@ pub struct EngineConfig {
     /// streaming histograms and the exact per-sample vectors stay empty,
     /// so steady-state allocation is independent of request count
     pub bounded_stats: bool,
+    /// periodically write the Prometheus exposition snapshot to this
+    /// path — rewritten at least once per SLO window while traffic flows
+    /// and once at shutdown (CLI `--metrics-out`, bench env
+    /// AO_METRICS_OUT). None = no file snapshots; `{"op":"metrics"}`
+    /// still serves the same text on demand
+    pub metrics_out: Option<PathBuf>,
+    /// postmortem flight recorder: on a fatal engine error or
+    /// `{"op":"dump"}`, write a bundle directory here (trace dumps,
+    /// report JSON, resolved config, fault plan, retry log) (CLI
+    /// `--postmortem-dir`, bench env AO_POSTMORTEM_DIR). None = no
+    /// bundle is ever written
+    pub postmortem_dir: Option<PathBuf>,
+    /// width of one rolling-SLO window in seconds (CLI
+    /// `--slo-window-secs`, bench env AO_SLO_WINDOW_SECS); 0 = the
+    /// default (10s)
+    pub slo_window_secs: u64,
+    /// number of rolling-SLO windows kept in the ring (CLI
+    /// `--slo-windows`, bench env AO_SLO_WINDOWS); 0 = the default (32).
+    /// windows × window-secs is the horizon — it must cover the 5m span
+    /// the report quotes, or the 5m figures silently degrade to shorter
+    /// coverage
+    pub slo_windows: usize,
+}
+
+impl EngineConfig {
+    /// The resolved configuration as JSON — the postmortem bundle's
+    /// `config.json`, so a chaos failure carries the exact knobs that
+    /// produced it.
+    pub fn to_json(&self) -> Value {
+        let opt_num =
+            |v: Option<f64>| v.map(json::num).unwrap_or(Value::Null);
+        let path =
+            |p: &std::path::Path| json::s(&p.display().to_string());
+        let opt_path = |p: &Option<PathBuf>| {
+            p.as_deref().map(path).unwrap_or(Value::Null)
+        };
+        json::obj(vec![
+            ("artifacts_dir", path(&self.artifacts_dir)),
+            ("ckpt_path", path(&self.ckpt_path)),
+            ("model", json::s(&self.model)),
+            ("scheme", json::s(&self.scheme)),
+            ("cache_scheme", json::s(self.cache_scheme.tag())),
+            ("kv_layout", json::s(self.kv_layout.tag())),
+            ("eos_token", opt_num(self.eos_token.map(|v| v as f64))),
+            ("host_admission", Value::Bool(self.host_admission)),
+            ("prefix_cache", Value::Bool(self.prefix_cache)),
+            (
+                "max_batch_tokens",
+                opt_num(self.max_batch_tokens.map(|v| v as f64)),
+            ),
+            ("fault_retries", json::num(self.fault_retries as f64)),
+            ("fault_backoff_ms", json::num(self.fault_backoff_ms as f64)),
+            (
+                "fault_plan",
+                self.fault_plan
+                    .as_deref()
+                    .map(json::s)
+                    .unwrap_or(Value::Null),
+            ),
+            ("max_queue", opt_num(self.max_queue.map(|v| v as f64))),
+            (
+                "default_deadline_ms",
+                opt_num(self.default_deadline_ms.map(|v| v as f64)),
+            ),
+            ("trace", Value::Bool(self.trace)),
+            ("trace_capacity", json::num(self.trace_capacity as f64)),
+            ("trace_out", opt_path(&self.trace_out)),
+            ("fault_jitter_ms", json::num(self.fault_jitter_ms as f64)),
+            ("bounded_stats", Value::Bool(self.bounded_stats)),
+            ("metrics_out", opt_path(&self.metrics_out)),
+            ("postmortem_dir", opt_path(&self.postmortem_dir)),
+            ("slo_window_secs", json::num(self.slo_window_secs as f64)),
+            ("slo_windows", json::num(self.slo_windows as f64)),
+        ])
+    }
 }
 
 pub enum Command {
@@ -269,6 +345,12 @@ pub enum Command {
     Stats(Sender<String>),
     /// cancel one request by id, wherever it is (queued or decoding)
     Cancel(u64),
+    /// flush metrics: respond with the Prometheus text exposition
+    /// (same counters again, rendered by `metrics::prometheus`)
+    Metrics(Sender<String>),
+    /// write a postmortem bundle to the configured `--postmortem-dir`
+    /// and respond with a one-line outcome
+    Dump(Sender<String>),
     /// graceful drain: stop admitting, finish in-flight work, respond
     /// with the final report once nothing is queued or active
     Drain(Sender<String>),
@@ -303,6 +385,28 @@ impl EngineHandle {
         let (tx, rx) = channel();
         self.tx
             .send(Command::Stats(tx))
+            .map_err(|_| anyhow!("engine thread is gone"))?;
+        Ok(rx.recv()?)
+    }
+
+    /// Prometheus text exposition of the same counters as `report()`,
+    /// for scrapes and `--metrics-out` consumers (`{"op":"metrics"}` on
+    /// the TCP front-end). See docs/observability.md for the contract.
+    pub fn metrics(&self) -> Result<String> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Command::Metrics(tx))
+            .map_err(|_| anyhow!("engine thread is gone"))?;
+        Ok(rx.recv()?)
+    }
+
+    /// Ask the engine to write a postmortem bundle now (`{"op":"dump"}`
+    /// on the TCP front-end); returns a one-line outcome. A no-op note
+    /// when the engine has no `--postmortem-dir`.
+    pub fn dump(&self) -> Result<String> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Command::Dump(tx))
             .map_err(|_| anyhow!("engine thread is gone"))?;
         Ok(rx.recv()?)
     }
@@ -460,15 +564,18 @@ impl HostKv {
     }
 
     /// Metered H2D re-upload of the mirror, in `download`'s order.
+    /// `upload_raw`: these buffers replace the cache wholesale, whose
+    /// residency is already staked by the engine's standalone ledger
+    /// entries — a second stake here would double-count it.
     fn to_buffers(&self, runtime: &Runtime) -> Result<Vec<OwnedBuffer>> {
         let mut bufs = Vec::with_capacity(4);
-        bufs.push(runtime.upload(&self.k)?);
+        bufs.push(runtime.upload_raw(&self.k)?);
         if let Some(ks) = &self.kscale {
-            bufs.push(runtime.upload(ks)?);
+            bufs.push(runtime.upload_raw(ks)?);
         }
-        bufs.push(runtime.upload(&self.v)?);
+        bufs.push(runtime.upload_raw(&self.v)?);
         if let Some(vs) = &self.vscale {
-            bufs.push(runtime.upload(vs)?);
+            bufs.push(runtime.upload_raw(vs)?);
         }
         Ok(bufs)
     }
@@ -533,6 +640,10 @@ pub struct Engine {
     /// bounded event ring — present exactly when tracing is enabled
     /// (`EngineConfig::trace` or `trace_out`)
     trace: Option<TraceBuffer>,
+    /// standalone memory-ledger stakes for allocations that outlive
+    /// their buffers (KV/scale cache: buffers are swapped wholesale per
+    /// step while the allocation stays resident; trace ring: host-side)
+    _mem_entries: Vec<crate::runtime::LedgerEntry>,
     /// serve-loop step counter (trace `Step` records)
     step_index: u64,
     /// tokens charged by the current serve step (decode rows + prefill
@@ -829,22 +940,42 @@ impl Engine {
                     t.shape, t.dtype().name(), spec.shape, spec.dtype
                 );
             }
-            decode_params.push(runtime.upload(t)?);
+            // weights stay resident for the engine's lifetime, and so do
+            // these buffers — the ledger stake rides them directly
+            decode_params
+                .push(runtime.upload_cat(t, crate::runtime::MemCat::Weights)?);
         }
 
         // the cache is uploaded once as zeros and stays device-resident;
         // its true (dtype-aware) resident footprint goes into the report,
-        // which is where the int8 scheme's ~4x shows up
+        // which is where the int8 scheme's ~4x shows up. The ledger
+        // stakes (kv_pages / scale_pages, split by input name) are held
+        // standalone on the engine, NOT on the buffers: decode/admit
+        // replace the buffer handles wholesale every step while the
+        // allocation itself stays resident (donation reuses it).
         let mut cache_bufs = Vec::with_capacity(cache_specs.len());
         let mut cache_zero_specs = Vec::with_capacity(cache_specs.len());
         let mut cache_resident_bytes = 0u64;
-        for spec in &cache_specs {
+        let mut kv_page_bytes = 0u64;
+        let mut scale_page_bytes = 0u64;
+        for (name, spec) in cache_names.iter().zip(&cache_specs) {
             let dt = crate::tensor::DType::parse(&spec.dtype)?;
             let zeros = HostTensor::zeros(dt, spec.shape.clone());
             cache_resident_bytes += zeros.byte_size() as u64;
-            cache_bufs.push(runtime.upload(&zeros)?);
+            if name.ends_with("scale") {
+                scale_page_bytes += zeros.byte_size() as u64;
+            } else {
+                kv_page_bytes += zeros.byte_size() as u64;
+            }
+            cache_bufs.push(runtime.upload_raw(&zeros)?);
             cache_zero_specs.push((dt, spec.shape.clone()));
         }
+        let ledger = runtime.ledger().clone();
+        let mut mem_entries = vec![
+            ledger.entry(crate::runtime::MemCat::KvPages, kv_page_bytes),
+            ledger
+                .entry(crate::runtime::MemCat::ScalePages, scale_page_bytes),
+        ];
         let mut metrics = MetricsCollector::new();
         metrics.cache_scheme = cache_tag.to_string();
         metrics.kv_layout = layout_tag.to_string();
@@ -960,7 +1091,24 @@ impl Engine {
                 cfg.trace_capacity
             })
         });
+        if let Some(tr) = &trace {
+            // host-side, but resident for the engine's lifetime: the
+            // telemetry overhead is attributed, not invisible
+            let bytes = (tr.capacity()
+                * std::mem::size_of::<TraceEvent>())
+                as u64;
+            mem_entries
+                .push(ledger.entry(crate::runtime::MemCat::Trace, bytes));
+        }
         metrics.hist_only = cfg.bounded_stats;
+        metrics.set_slo_windows(
+            if cfg.slo_windows == 0 {
+                crate::util::stats::SLO_WINDOWS
+            } else {
+                cfg.slo_windows
+            },
+            if cfg.slo_window_secs == 0 { 10 } else { cfg.slo_window_secs },
+        );
 
         Ok(Engine {
             runtime,
@@ -990,6 +1138,7 @@ impl Engine {
             _rng: Rng::new(0xE1_61_4E),
             overhead_s: 0.0,
             trace,
+            _mem_entries: mem_entries,
             step_index: 0,
             step_tokens: 0,
             cfg,
@@ -1004,6 +1153,18 @@ impl Engine {
     pub fn serve(&mut self, rx: Receiver<Command>) -> Result<()> {
         self.metrics.begin();
         let mut shutting_down = false;
+        // `--metrics-out` cadence: one SLO window. Rewrites happen
+        // between steps, so an idle engine (blocked on recv) defers the
+        // next snapshot until traffic wakes it; shutdown always writes a
+        // final one.
+        let metrics_every = Duration::from_secs(
+            if self.cfg.slo_window_secs == 0 {
+                10
+            } else {
+                self.cfg.slo_window_secs
+            },
+        );
+        let mut metrics_written = Instant::now();
         loop {
             // 1. drain the command channel (block only when fully idle)
             loop {
@@ -1062,16 +1223,42 @@ impl Engine {
             self.trace_step(snap);
             // a failed step (transient retries exhausted, or a fatal
             // execution error) is contained to the slots it hit — the
-            // engine keeps serving; only a failed cache rebuild is fatal
+            // engine keeps serving; only a failed cache rebuild is fatal.
+            // The flight recorder fires on exactly that fatal edge, so
+            // the un-reproducible chaos run leaves an attachable bundle
             if let Err(err) = step {
-                self.contain_step_failure(&err)?;
+                if let Err(fatal) = self.contain_step_failure(&err) {
+                    self.write_postmortem(&format!(
+                        "fatal engine error: {fatal:#}"
+                    ));
+                    return Err(fatal);
+                }
+            }
+            if self.cfg.metrics_out.is_some()
+                && metrics_written.elapsed() >= metrics_every
+            {
+                self.write_metrics_out();
+                metrics_written = Instant::now();
             }
         }
         self.finish_drain();
         self.sync_transfer_metrics();
         self.metrics.finish();
         self.dump_trace();
+        self.write_metrics_out();
         Ok(())
+    }
+
+    /// Write the Prometheus snapshot to `--metrics-out` (atomic enough
+    /// for a scraper: full rewrite per snapshot). Failures are reported,
+    /// never fatal — the run's results matter more than its telemetry.
+    fn write_metrics_out(&mut self) {
+        let Some(path) = self.cfg.metrics_out.clone() else { return };
+        self.sync_transfer_metrics();
+        let text = self.metrics.prometheus("engine");
+        if let Err(err) = std::fs::write(&path, text) {
+            crate::warn!("metrics-out: writing {}: {err}", path.display());
+        }
     }
 
     /// Counter snapshot before one serve step (`None` when untraced, so
@@ -1193,6 +1380,82 @@ impl Engine {
         }
     }
 
+    /// Flight recorder: write the postmortem bundle to `--postmortem-dir`
+    /// (created if missing) and return a one-line outcome. Bundle layout
+    /// (see docs/observability.md): `report.json` (reason + the full
+    /// `report_json` snapshot), `config.json` (resolved `EngineConfig`),
+    /// `metrics.prom` (Prometheus exposition), `retries.jsonl`
+    /// (append-only retry history), `fault_plan.txt` (when chaos was
+    /// configured), `trace.jsonl` + `trace.chrome.json` (when tracing).
+    /// Write failures warn and report in the outcome, never kill the
+    /// engine — on the fatal path the original error matters more.
+    fn write_postmortem(&mut self, reason: &str) -> String {
+        let Some(dir) = self.cfg.postmortem_dir.clone() else {
+            return "postmortem skipped: no --postmortem-dir configured"
+                .to_string();
+        };
+        self.sync_transfer_metrics();
+        match self.write_postmortem_bundle(&dir, reason) {
+            Ok(()) => {
+                let msg = format!(
+                    "postmortem bundle written to {} ({reason})",
+                    dir.display()
+                );
+                crate::info!("{msg}");
+                msg
+            }
+            Err(err) => {
+                let msg = format!(
+                    "postmortem bundle {} failed: {err:#}",
+                    dir.display()
+                );
+                crate::warn!("{msg}");
+                msg
+            }
+        }
+    }
+
+    fn write_postmortem_bundle(
+        &self,
+        dir: &std::path::Path,
+        reason: &str,
+    ) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create {}", dir.display()))?;
+        let write = |name: &str, data: String| -> Result<()> {
+            std::fs::write(dir.join(name), data)
+                .with_context(|| format!("write {}/{name}", dir.display()))
+        };
+        let report = json::obj(vec![
+            ("reason", json::s(reason)),
+            ("report", self.metrics.report_json("engine")),
+        ]);
+        write("report.json", report.to_string())?;
+        write("config.json", self.cfg.to_json().to_string())?;
+        write("metrics.prom", self.metrics.prometheus("engine"))?;
+        let mut retries = String::new();
+        for r in self.runtime.retry_history() {
+            let row = json::obj(vec![
+                ("site", json::s(r.site)),
+                ("tag", json::s(&r.tag)),
+                ("attempt", json::num(r.attempt as f64)),
+                ("backoff_ms", json::num(r.backoff_ms as f64)),
+                ("jitter_ms", json::num(r.jitter_ms as f64)),
+            ]);
+            retries.push_str(&row.to_string());
+            retries.push('\n');
+        }
+        write("retries.jsonl", retries)?;
+        if let Some(plan) = &self.cfg.fault_plan {
+            write("fault_plan.txt", plan.clone())?;
+        }
+        if let Some(tr) = &self.trace {
+            write("trace.jsonl", tr.dump_jsonl())?;
+            write("trace.chrome.json", tr.dump_chrome())?;
+        }
+        Ok(())
+    }
+
     fn handle(&mut self, cmd: Command, shutting_down: &mut bool) -> bool {
         match cmd {
             Command::Submit(req) => {
@@ -1210,6 +1473,18 @@ impl Engine {
                 // ao-lint: allow(drop_send) -- stats caller may be gone
                 let _ =
                     tx.send(self.metrics.report_json("engine").to_string());
+                true
+            }
+            Command::Metrics(tx) => {
+                self.sync_transfer_metrics();
+                // ao-lint: allow(drop_send) -- metrics caller may be gone
+                let _ = tx.send(self.metrics.prometheus("engine"));
+                true
+            }
+            Command::Dump(tx) => {
+                let outcome = self.write_postmortem("operator dump request");
+                // ao-lint: allow(drop_send) -- dump caller may be gone
+                let _ = tx.send(outcome);
                 true
             }
             Command::Cancel(id) => {
@@ -1467,7 +1742,9 @@ impl Engine {
         let mut bufs = Vec::with_capacity(self.cache_zero_specs.len());
         for (dt, shape) in &self.cache_zero_specs {
             let zeros = HostTensor::zeros(*dt, shape.clone());
-            bufs.push(self.runtime.upload(&zeros).context(
+            // upload_raw: the cache residency is staked by the engine's
+            // standalone ledger entries, which survive this rebuild
+            bufs.push(self.runtime.upload_raw(&zeros).context(
                 "re-zero the KV cache after a contained step failure",
             )?);
         }
@@ -1497,6 +1774,21 @@ impl Engine {
             self.metrics.pages_used = p.used_pages();
             self.metrics.pages_hwm = p.hwm();
         }
+        self.metrics.retry_log_dropped = self.runtime.retry_log_dropped();
+        if let Some(tr) = &self.trace {
+            self.metrics.trace_capacity = tr.capacity();
+            // cumulative events recorded = still resident + evicted
+            self.metrics.trace_events = tr.len() as u64 + tr.dropped();
+            self.metrics.trace_dropped = tr.dropped();
+        }
+        let mem = self.runtime.mem_snapshot();
+        self.metrics.mem_weights_bytes = mem.weights;
+        self.metrics.mem_kv_pages_bytes = mem.kv_pages;
+        self.metrics.mem_scale_pages_bytes = mem.scale_pages;
+        self.metrics.mem_io_bytes = mem.io;
+        self.metrics.mem_trace_bytes = mem.trace;
+        self.metrics.mem_total_bytes = mem.total;
+        self.metrics.graphs = self.runtime.graph_stats();
     }
 
     /// Admit as many waiting requests as free slots allow. A rejected

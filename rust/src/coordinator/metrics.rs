@@ -4,7 +4,9 @@
 //! up as decode-step D2H shrinking to logits-only).
 
 use crate::util::json::{self, Value};
-use crate::util::stats::{summarize, LogHistogram, Summary};
+use crate::util::stats::{
+    summarize, GraphStat, LogHistogram, Summary, WindowedHistogram,
+};
 use std::time::Instant;
 
 #[derive(Debug, Default)]
@@ -127,6 +129,38 @@ pub struct MetricsCollector {
     pub hist_tpot: LogHistogram,
     pub hist_itl: LogHistogram,
     pub hist_queue_wait: LogHistogram,
+    /// rolling SLO windows: a ring of per-window histograms over the
+    /// collector's epoch clock (µs since `begin()`), so the report can
+    /// answer "p95 over the last minute" instead of lifetime-only.
+    /// Geometry comes from `--slo-windows`/`--slo-window-secs`
+    /// (default 32 × 10s — see `util::stats::SLO_WINDOWS`)
+    pub win_ttft: WindowedHistogram,
+    pub win_tpot: WindowedHistogram,
+    pub win_itl: WindowedHistogram,
+    pub win_queue_wait: WindowedHistogram,
+    /// trace-ring surfacing (synced from the engine each report):
+    /// capacity 0 means tracing is off; `trace_dropped` counts ring
+    /// evictions — telemetry loss that used to be visible only in the
+    /// offline dump's meta header
+    pub trace_capacity: usize,
+    pub trace_events: u64,
+    pub trace_dropped: u64,
+    /// retry records lost past the runtime's bounded retry history —
+    /// the other silent-telemetry-loss channel, now in the report
+    pub retry_log_dropped: u64,
+    /// device-memory ledger (synced from the runtime): every resident
+    /// byte attributed to one category; `mem_total_bytes` is maintained
+    /// independently alongside the categories so `mem[...]` summing to
+    /// total is an invariant check, not an identity
+    pub mem_weights_bytes: u64,
+    pub mem_kv_pages_bytes: u64,
+    pub mem_scale_pages_bytes: u64,
+    pub mem_io_bytes: u64,
+    pub mem_trace_bytes: u64,
+    pub mem_total_bytes: u64,
+    /// per-artifact execution profile (synced from the runtime, sorted
+    /// by cumulative exec time, descending)
+    pub graphs: Vec<GraphStat>,
 }
 
 impl MetricsCollector {
@@ -150,6 +184,37 @@ impl MetricsCollector {
         }
     }
 
+    /// Microseconds since `begin()` — the epoch clock the rolling SLO
+    /// windows advance on (the same epoch semantics as the trace ring's
+    /// `t_us`, never wall-clock time-of-day). Keeps running after
+    /// `finish()` so a post-drain report still reads the freshest
+    /// windows.
+    pub fn epoch_us(&self) -> u64 {
+        self.start
+            .map(|s| s.elapsed().as_micros() as u64)
+            .unwrap_or(0)
+    }
+
+    /// Re-ring the SLO windows (engine config). Call before traffic:
+    /// samples already recorded do not migrate into the new ring.
+    pub fn set_slo_windows(&mut self, n_windows: usize, window_secs: u64) {
+        let us = window_secs.saturating_mul(1_000_000).max(1);
+        self.win_ttft = WindowedHistogram::new(n_windows, us);
+        self.win_tpot = WindowedHistogram::new(n_windows, us);
+        self.win_itl = WindowedHistogram::new(n_windows, us);
+        self.win_queue_wait = WindowedHistogram::new(n_windows, us);
+    }
+
+    /// Rolling merge of one windowed histogram over the last
+    /// `span_secs`, evaluated at the current epoch time.
+    pub fn rolling(
+        &self,
+        w: &WindowedHistogram,
+        span_secs: u64,
+    ) -> LogHistogram {
+        w.merged_last(self.epoch_us(), span_secs.saturating_mul(1_000_000))
+    }
+
     pub fn record_request(
         &mut self,
         n_prompt: usize,
@@ -160,15 +225,19 @@ impl MetricsCollector {
         self.n_requests += 1;
         self.n_prompt_tokens += n_prompt;
         self.n_output_tokens += n_generated;
+        let now_us = self.epoch_us();
         self.hist_ttft.record(ttft_s);
+        self.win_ttft.record(now_us, ttft_s);
         if !self.hist_only {
             self.ttft_s.push(ttft_s);
         }
         if n_generated > 1 && !token_gaps.is_empty() {
             let tpot = token_gaps.iter().sum::<f64>() / token_gaps.len() as f64;
             self.hist_tpot.record(tpot);
+            self.win_tpot.record(now_us, tpot);
             for &g in token_gaps {
                 self.hist_itl.record(g);
+                self.win_itl.record(now_us, g);
             }
             if !self.hist_only {
                 self.tpot_s.push(tpot);
@@ -224,6 +293,7 @@ impl MetricsCollector {
     /// wait was metered at the original admission).
     pub fn record_queue_wait(&mut self, wait_s: f64) {
         self.hist_queue_wait.record(wait_s);
+        self.win_queue_wait.record(self.epoch_us(), wait_s);
         if !self.hist_only {
             self.queue_wait_s.push(wait_s);
         }
@@ -370,6 +440,104 @@ impl MetricsCollector {
         format!("canceled={}", self.n_canceled)
     }
 
+    /// The report's rolling-SLO field: p50/p95/p99 (ms) per latency
+    /// metric over the last 1m and 5m, from the merged window ring —
+    /// what the engine is doing *now*, next to the lifetime `lat_ms`.
+    /// Empty when no sample landed inside the 5m span (startup, or an
+    /// idle engine whose traffic has aged out).
+    pub fn slo_field(&self) -> String {
+        let now = self.epoch_us();
+        let spans = [(60u64, "1m"), (300u64, "5m")];
+        let metrics: [(&str, &WindowedHistogram); 4] = [
+            ("ttft", &self.win_ttft),
+            ("tpot", &self.win_tpot),
+            ("itl", &self.win_itl),
+            ("qwait", &self.win_queue_wait),
+        ];
+        if metrics
+            .iter()
+            .all(|(_, w)| w.merged_last(now, 300_000_000).is_empty())
+        {
+            return String::new();
+        }
+        let ms = |x: f64| if x.is_finite() { x * 1e3 } else { 0.0 };
+        let mut parts = Vec::new();
+        for (span_s, tag) in spans {
+            let mut cols = Vec::new();
+            for (name, w) in &metrics {
+                let s = w.merged_last(now, span_s * 1_000_000).summary();
+                cols.push(format!(
+                    "{name}={:.1}/{:.1}/{:.1}",
+                    ms(s.p50),
+                    ms(s.p95),
+                    ms(s.p99)
+                ));
+            }
+            parts.push(format!("{tag} {}", cols.join(" ")));
+        }
+        format!("slo_ms[p50/p95/p99 {}]", parts.join(" | "))
+    }
+
+    /// The report's device-memory ledger field — every resident byte
+    /// attributed to a category, with the independently-maintained total
+    /// alongside so a drifting ledger is visible in the report itself.
+    /// Empty until the runtime's ledger is synced in (total == 0).
+    pub fn mem_field(&self) -> String {
+        if self.mem_total_bytes == 0 {
+            return String::new();
+        }
+        format!(
+            "mem[weights={} kv_pages={} scale_pages={} io={} trace={} \
+             total={}]",
+            fmt_bytes(self.mem_weights_bytes),
+            fmt_bytes(self.mem_kv_pages_bytes),
+            fmt_bytes(self.mem_scale_pages_bytes),
+            fmt_bytes(self.mem_io_bytes),
+            fmt_bytes(self.mem_trace_bytes),
+            fmt_bytes(self.mem_total_bytes)
+        )
+    }
+
+    /// The report's telemetry-loss field: trace-ring size/evictions and
+    /// retry-history overflow. Rendered whenever tracing is on (so a
+    /// zero `dropped` is a positive statement) or anything was lost.
+    pub fn trace_field(&self) -> String {
+        if self.trace_capacity == 0 && self.retry_log_dropped == 0 {
+            return String::new();
+        }
+        format!(
+            "trace[cap={} events={} dropped={} retry_log_dropped={}]",
+            self.trace_capacity,
+            self.trace_events,
+            self.trace_dropped,
+            self.retry_log_dropped
+        )
+    }
+
+    /// The report's per-graph execution profile — one entry per artifact
+    /// the runtime executed, ordered by cumulative exec time. Empty when
+    /// the profile was never synced (or nothing ran).
+    pub fn graphs_field(&self) -> String {
+        if self.graphs.is_empty() {
+            return String::new();
+        }
+        let cols: Vec<String> = self
+            .graphs
+            .iter()
+            .map(|g| {
+                let p95 = g.hist.percentile_est(95.0);
+                format!(
+                    "{}:calls={} exec={:.1}ms p95={:.2}ms",
+                    g.name,
+                    g.calls,
+                    g.exec_us as f64 / 1e3,
+                    if p95.is_finite() { p95 * 1e3 } else { 0.0 }
+                )
+            })
+            .collect();
+        format!("graphs[{}]", cols.join("; "))
+    }
+
     pub fn report(&self, label: &str) -> String {
         // empty summaries are NaN; a zero-request report must stay readable
         let ms = |x: f64| if x.is_finite() { x * 1e3 } else { 0.0 };
@@ -399,15 +567,20 @@ impl MetricsCollector {
         let faults = field(self.faults_field());
         let rejected = field(self.rejected_detail_field());
         let canceled = field(self.canceled_field());
+        let slo = field(self.slo_field());
+        let mem = field(self.mem_field());
+        let trace = field(self.trace_field());
+        let graphs = field(self.graphs_field());
         let latency = self.latency_field();
         format!(
             "[{label}] requests={} rejected={} in_tokens={} out_tokens={} \
              wall={:.2}s \
              tput={:.1} tok/s  TPOT={:.2}ms  ITL={:.2}ms  TTFT={:.1}ms  \
-             {latency}  occupancy={:.0}%  (decode_steps={} prefills={})  \
+             {latency}{slo}  occupancy={:.0}%  (decode_steps={} \
+             prefills={})  \
              cache[{cache_scheme} {kv_layout} \
-             resident={}]{pages}{prefix}{sched}{faults}{rejected}\
-             {canceled}  \
+             resident={}]{mem}{pages}{prefix}{sched}{faults}{rejected}\
+             {canceled}{trace}{graphs}  \
              xfer h2d={} d2h={} decode[h2d={} d2h={}] \
              admit[h2d={} d2h={} host_splices={}]",
             self.n_requests,
@@ -577,7 +750,470 @@ impl MetricsCollector {
                     ("queue_wait", hist(&self.hist_queue_wait)),
                 ]),
             ),
+            ("slo", self.slo_json()),
+            (
+                "mem",
+                json::obj(vec![
+                    ("weights", count64(self.mem_weights_bytes)),
+                    ("kv_pages", count64(self.mem_kv_pages_bytes)),
+                    ("scale_pages", count64(self.mem_scale_pages_bytes)),
+                    ("io", count64(self.mem_io_bytes)),
+                    ("trace", count64(self.mem_trace_bytes)),
+                    ("total", count64(self.mem_total_bytes)),
+                ]),
+            ),
+            (
+                "trace",
+                json::obj(vec![
+                    ("capacity", count(self.trace_capacity)),
+                    ("events", count64(self.trace_events)),
+                    ("dropped", count64(self.trace_dropped)),
+                    (
+                        "retry_log_dropped",
+                        count64(self.retry_log_dropped),
+                    ),
+                ]),
+            ),
+            (
+                "graphs",
+                json::arr(
+                    self.graphs
+                        .iter()
+                        .map(|g| {
+                            let s = g.hist.summary();
+                            let fin = |x: f64| {
+                                n(if x.is_finite() { x * 1e3 } else { 0.0 })
+                            };
+                            json::obj(vec![
+                                ("name", json::s(&g.name)),
+                                ("calls", count64(g.calls)),
+                                ("exec_us", count64(g.exec_us)),
+                                ("p50_ms", fin(s.p50)),
+                                ("p95_ms", fin(s.p95)),
+                                ("p99_ms", fin(s.p99)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ])
+    }
+
+    /// The `slo` object of `report_json`: per-span (`1m`, `5m`) rolling
+    /// summaries for the four latency metrics, plus the ring geometry so
+    /// an aggregator knows the retention it is looking at.
+    fn slo_json(&self) -> Value {
+        let now = self.epoch_us();
+        let ms = |x: f64| if x.is_finite() { x * 1e3 } else { 0.0 };
+        let span_obj = |span_s: u64| {
+            let metrics: [(&str, &WindowedHistogram); 4] = [
+                ("ttft", &self.win_ttft),
+                ("tpot", &self.win_tpot),
+                ("itl", &self.win_itl),
+                ("queue_wait", &self.win_queue_wait),
+            ];
+            json::obj(
+                metrics
+                    .iter()
+                    .map(|(name, w)| {
+                        let s =
+                            w.merged_last(now, span_s * 1_000_000).summary();
+                        (
+                            *name,
+                            json::obj(vec![
+                                ("n", json::num(s.n as f64)),
+                                ("p50_ms", json::num(ms(s.p50))),
+                                ("p95_ms", json::num(ms(s.p95))),
+                                ("p99_ms", json::num(ms(s.p99))),
+                            ]),
+                        )
+                    })
+                    .collect(),
+            )
+        };
+        json::obj(vec![
+            (
+                "window_s",
+                json::num(self.win_ttft.window_us() as f64 / 1e6),
+            ),
+            ("windows", json::num(self.win_ttft.n_windows() as f64)),
+            ("1m", span_obj(60)),
+            ("5m", span_obj(300)),
+        ])
+    }
+
+    /// Prometheus text-exposition rendering of the full counter / gauge
+    /// / histogram set — the scrape surface behind `{"op":"metrics"}`
+    /// and `--metrics-out`. Every sample carries an `engine="<label>"`
+    /// label so a fleet fold can aggregate across engines; metric
+    /// names, types and labels are the contract documented in
+    /// `docs/observability.md`. Rendered unconditionally (zeros are
+    /// legitimate scrape values), unlike the text report's optional
+    /// bracket fields.
+    pub fn prometheus(&self, label: &str) -> String {
+        let mut p = PromText::new(label);
+        let scheme = if self.cache_scheme.is_empty() {
+            "f32"
+        } else {
+            self.cache_scheme.as_str()
+        };
+        let layout = if self.kv_layout.is_empty() {
+            "static"
+        } else {
+            self.kv_layout.as_str()
+        };
+        // identity: configuration as labels on a constant-1 gauge
+        p.family(
+            "ao_engine_info",
+            "gauge",
+            "Engine configuration as labels; value is always 1.",
+        );
+        p.sample(
+            "ao_engine_info",
+            &[
+                ("scheme", scheme),
+                ("layout", layout),
+                ("bounded_stats", if self.hist_only { "1" } else { "0" }),
+            ],
+            1.0,
+        );
+
+        // request/token counters
+        p.counter("ao_requests_total", "Requests completed.", self.n_requests as f64);
+        p.counter("ao_rejected_total", "Requests rejected before admission.", self.n_rejected as f64);
+        p.family(
+            "ao_rejected_cause_total",
+            "counter",
+            "Rejections split by cause.",
+        );
+        p.sample(
+            "ao_rejected_cause_total",
+            &[("cause", "overload")],
+            self.rejected_overload as f64,
+        );
+        p.sample(
+            "ao_rejected_cause_total",
+            &[("cause", "deadline")],
+            self.rejected_deadline as f64,
+        );
+        p.counter("ao_canceled_total", "Requests canceled by the client.", self.n_canceled as f64);
+        p.counter("ao_prompt_tokens_total", "Prompt tokens admitted.", self.n_prompt_tokens as f64);
+        p.counter("ao_output_tokens_total", "Output tokens generated.", self.n_output_tokens as f64);
+
+        // engine step counters + occupancy
+        p.counter("ao_decode_steps_total", "Decode steps executed.", self.decode_steps as f64);
+        p.counter("ao_prefill_calls_total", "Prefill calls executed.", self.prefill_calls as f64);
+        p.family(
+            "ao_slot_steps_total",
+            "counter",
+            "Slot-steps, split into active (carried a request) and all.",
+        );
+        p.sample(
+            "ao_slot_steps_total",
+            &[("kind", "active")],
+            self.active_slot_steps as f64,
+        );
+        p.sample(
+            "ao_slot_steps_total",
+            &[("kind", "all")],
+            self.total_slot_steps as f64,
+        );
+        p.gauge("ao_occupancy_ratio", "Fraction of slot-steps carrying a live request.", self.occupancy());
+        p.gauge("ao_wall_seconds", "Wall-clock seconds since engine start.", self.wall_s());
+        p.gauge(
+            "ao_throughput_tokens_per_second",
+            "Output-token throughput over the whole run.",
+            self.output_tok_per_s(),
+        );
+
+        // host<->device transfer accounting
+        p.family(
+            "ao_transfer_bytes_total",
+            "counter",
+            "Host<->device bytes by direction and path slice.",
+        );
+        for (dir, path, v) in [
+            ("h2d", "all", self.h2d_bytes),
+            ("d2h", "all", self.d2h_bytes),
+            ("h2d", "decode", self.decode_h2d_bytes),
+            ("d2h", "decode", self.decode_d2h_bytes),
+            ("h2d", "admit", self.admit_h2d_bytes),
+            ("d2h", "admit", self.admit_d2h_bytes),
+        ] {
+            p.sample(
+                "ao_transfer_bytes_total",
+                &[("dir", dir), ("path", path)],
+                v as f64,
+            );
+        }
+        p.counter(
+            "ao_host_splice_bursts_total",
+            "Admission bursts that fell back to the host splice path.",
+            self.host_splice_bursts as f64,
+        );
+
+        // cache + page pool
+        p.gauge(
+            "ao_cache_resident_bytes",
+            "Device-resident KV-cache footprint (values + scales).",
+            self.cache_resident_bytes as f64,
+        );
+        p.family(
+            "ao_kv_pages",
+            "gauge",
+            "Page-pool accounting (zeros under the static layout).",
+        );
+        p.sample("ao_kv_pages", &[("state", "total")], self.pages_total as f64);
+        p.sample("ao_kv_pages", &[("state", "used")], self.pages_used as f64);
+        p.sample("ao_kv_pages", &[("state", "hwm")], self.pages_hwm as f64);
+
+        // prefix cache
+        p.gauge(
+            "ao_prefix_enabled",
+            "1 when the engine serves with a live prefix index.",
+            if self.prefix_enabled { 1.0 } else { 0.0 },
+        );
+        p.counter("ao_prefix_lookups_total", "Admissions that consulted the prefix index.", self.prefix_lookups as f64);
+        p.counter("ao_prefix_hits_total", "Prefix lookups that mapped shared pages.", self.prefix_hits as f64);
+        p.counter("ao_prefix_pages_shared_total", "Shared prefix pages mapped into block tables.", self.prefix_pages_shared as f64);
+        p.counter("ao_prefix_tokens_saved_total", "Prompt tokens covered by shared prefix pages.", self.prefix_tokens_saved as f64);
+
+        // iteration-level scheduler
+        p.gauge(
+            "ao_sched_enabled",
+            "1 when the engine serves with --max-batch-tokens.",
+            if self.sched_enabled { 1.0 } else { 0.0 },
+        );
+        p.gauge("ao_sched_token_budget", "Effective per-step token budget.", self.sched_budget as f64);
+        p.counter("ao_sched_chunks_total", "Prefill chunks issued.", self.sched_chunks as f64);
+        p.counter("ao_sched_preemptions_total", "Decoding slots preempted.", self.sched_preemptions as f64);
+        p.counter("ao_sched_steps_total", "Scheduler steps taken.", self.sched_steps as f64);
+        p.counter("ao_sched_mixed_steps_total", "Steps mixing decode rows with prefill chunks.", self.sched_mixed_steps as f64);
+        p.counter("ao_sched_stall_steps_total", "Steps that decoded while prefill work waited with budget.", self.sched_stall_steps as f64);
+
+        // fault injection / retries
+        p.counter("ao_faults_injected_total", "Faults injected by the fault plan.", self.faults_injected as f64);
+        p.counter("ao_faults_retried_total", "Transient failures retried.", self.faults_retried as f64);
+        p.counter("ao_faults_recovered_total", "Operations that succeeded after >= 1 retry.", self.faults_recovered as f64);
+        p.counter("ao_fault_jitter_ms_total", "Cumulative deterministic retry jitter slept.", self.faults_jitter_ms as f64);
+
+        // telemetry loss
+        p.gauge("ao_trace_capacity_events", "Trace-ring capacity (0 = tracing off).", self.trace_capacity as f64);
+        p.counter("ao_trace_events_total", "Trace events recorded.", self.trace_events as f64);
+        p.counter("ao_trace_dropped_total", "Trace events evicted from the ring.", self.trace_dropped as f64);
+        p.counter("ao_retry_log_dropped_total", "Retry records lost past the bounded history.", self.retry_log_dropped as f64);
+
+        // device-memory ledger
+        p.family(
+            "ao_mem_resident_bytes",
+            "gauge",
+            "Device-resident bytes by ledger category.",
+        );
+        for (cat, v) in [
+            ("weights", self.mem_weights_bytes),
+            ("kv_pages", self.mem_kv_pages_bytes),
+            ("scale_pages", self.mem_scale_pages_bytes),
+            ("io", self.mem_io_bytes),
+            ("trace", self.mem_trace_bytes),
+        ] {
+            p.sample(
+                "ao_mem_resident_bytes",
+                &[("category", cat)],
+                v as f64,
+            );
+        }
+        p.gauge(
+            "ao_mem_ledger_total_bytes",
+            "Ledger total, maintained independently of the categories.",
+            self.mem_total_bytes as f64,
+        );
+
+        // lifetime latency quantiles (exact-sample or histogram source,
+        // matching the text report)
+        p.family(
+            "ao_latency_seconds",
+            "gauge",
+            "Lifetime latency quantiles by metric.",
+        );
+        for (metric, s) in [
+            ("ttft", self.ttft()),
+            ("tpot", self.tpot()),
+            ("itl", self.itl()),
+            ("queue_wait", self.queue_wait()),
+        ] {
+            for (q, v) in
+                [("0.5", s.p50), ("0.95", s.p95), ("0.99", s.p99)]
+            {
+                p.sample(
+                    "ao_latency_seconds",
+                    &[("metric", metric), ("quantile", q)],
+                    v,
+                );
+            }
+        }
+
+        // rolling SLO quantiles from the window ring
+        let now = self.epoch_us();
+        p.family(
+            "ao_rolling_latency_seconds",
+            "gauge",
+            "Rolling latency quantiles over the trailing span.",
+        );
+        for (metric, w) in [
+            ("ttft", &self.win_ttft),
+            ("tpot", &self.win_tpot),
+            ("itl", &self.win_itl),
+            ("queue_wait", &self.win_queue_wait),
+        ] {
+            for (span, span_s) in [("1m", 60u64), ("5m", 300u64)] {
+                let s = w.merged_last(now, span_s * 1_000_000).summary();
+                for (q, v) in
+                    [("0.5", s.p50), ("0.95", s.p95), ("0.99", s.p99)]
+                {
+                    p.sample(
+                        "ao_rolling_latency_seconds",
+                        &[("metric", metric), ("span", span), ("quantile", q)],
+                        v,
+                    );
+                }
+            }
+        }
+
+        // native histograms: the same log-bucket content the stats op
+        // carries, in scrape-able cumulative form
+        p.histogram("ao_ttft_seconds", "Time to first token.", &self.hist_ttft);
+        p.histogram("ao_tpot_seconds", "Time per output token.", &self.hist_tpot);
+        p.histogram("ao_itl_seconds", "Inter-token latency.", &self.hist_itl);
+        p.histogram("ao_queue_wait_seconds", "Queue wait until admission claim.", &self.hist_queue_wait);
+
+        // per-graph execution profile
+        p.family("ao_graph_calls_total", "counter", "Executions per artifact.");
+        for g in &self.graphs {
+            p.sample(
+                "ao_graph_calls_total",
+                &[("graph", &g.name)],
+                g.calls as f64,
+            );
+        }
+        p.family(
+            "ao_graph_exec_seconds_total",
+            "counter",
+            "Cumulative execution wall time per artifact.",
+        );
+        for g in &self.graphs {
+            p.sample(
+                "ao_graph_exec_seconds_total",
+                &[("graph", &g.name)],
+                g.exec_us as f64 / 1e6,
+            );
+        }
+        p.family(
+            "ao_graph_exec_p95_seconds",
+            "gauge",
+            "Per-call execution p95 per artifact.",
+        );
+        for g in &self.graphs {
+            p.sample(
+                "ao_graph_exec_p95_seconds",
+                &[("graph", &g.name)],
+                g.hist.percentile_est(95.0),
+            );
+        }
+        p.finish()
+    }
+}
+
+/// Prometheus text-exposition writer: `# HELP`/`# TYPE` headers with
+/// their samples grouped beneath them, every sample labeled with the
+/// engine identity. Values render finite (NaN/inf from empty summaries
+/// become 0 — a scrape must never carry a non-numeric sample).
+struct PromText {
+    out: String,
+    engine: String,
+}
+
+impl PromText {
+    fn new(engine: &str) -> Self {
+        PromText {
+            out: String::new(),
+            engine: prom_escape(engine),
+        }
+    }
+
+    fn family(&mut self, name: &str, typ: &str, help: &str) {
+        self.out
+            .push_str(&format!("# HELP {name} {help}\n# TYPE {name} {typ}\n"));
+    }
+
+    fn sample(&mut self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.out.push_str(name);
+        self.out.push_str(&format!("{{engine=\"{}\"", self.engine));
+        for (k, val) in labels {
+            self.out
+                .push_str(&format!(",{k}=\"{}\"", prom_escape(val)));
+        }
+        self.out.push_str(&format!("}} {}\n", prom_num(v)));
+    }
+
+    /// One-sample family shorthand (counter).
+    fn counter(&mut self, name: &str, help: &str, v: f64) {
+        self.family(name, "counter", help);
+        self.sample(name, &[], v);
+    }
+
+    /// One-sample family shorthand (gauge).
+    fn gauge(&mut self, name: &str, help: &str, v: f64) {
+        self.family(name, "gauge", help);
+        self.sample(name, &[], v);
+    }
+
+    /// Native histogram family from a `LogHistogram`: cumulative
+    /// `_bucket{le=...}` samples at each non-empty log bucket's upper
+    /// bound, the mandatory `le="+Inf"`, then `_sum` and `_count`.
+    fn histogram(&mut self, name: &str, help: &str, h: &LogHistogram) {
+        self.family(name, "histogram", help);
+        let mut cum = 0u64;
+        for (i, c) in h.sparse_counts() {
+            cum += c;
+            let le = format!("{}", crate::util::stats::hist_bucket_bounds(i).1);
+            self.sample(
+                &format!("{name}_bucket"),
+                &[("le", &le)],
+                cum as f64,
+            );
+        }
+        self.sample(
+            &format!("{name}_bucket"),
+            &[("le", "+Inf")],
+            h.len() as f64,
+        );
+        let s = h.summary();
+        let sum = if s.mean.is_finite() {
+            s.mean * h.len() as f64
+        } else {
+            0.0
+        };
+        self.sample(&format!("{name}_sum"), &[], sum);
+        self.sample(&format!("{name}_count"), &[], h.len() as f64);
+    }
+
+    fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// Prometheus label-value escaping: backslash, double quote, newline.
+fn prom_escape(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Sample value formatting: finite values as-is, everything else as 0
+/// (an empty run's NaN percentiles must not poison a scrape).
+fn prom_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
     }
 }
 
@@ -918,5 +1554,373 @@ mod tests {
         assert_eq!(fmt_bytes(1536), "1.5KiB");
         assert_eq!(fmt_bytes(5 * 1024 * 1024), "5.0MiB");
         assert_eq!(fmt_bytes(3 * 1024 * 1024 * 1024), "3.0GiB");
+    }
+
+    /// Test-local Prometheus text-format parser: validates line syntax,
+    /// metric-name grammar, label quoting, numeric sample values, and
+    /// that every sample's family was TYPE-declared first. Returns the
+    /// (family, sample-count) sets for content assertions.
+    fn parse_prometheus(
+        text: &str,
+    ) -> Result<std::collections::BTreeMap<String, usize>, String> {
+        use std::collections::BTreeMap;
+        let name_ok = |n: &str| {
+            !n.is_empty()
+                && n.chars().next().is_some_and(|c| {
+                    c.is_ascii_alphabetic() || c == '_' || c == ':'
+                })
+                && n.chars().all(|c| {
+                    c.is_ascii_alphanumeric() || c == '_' || c == ':'
+                })
+        };
+        let mut typed: BTreeMap<String, String> = BTreeMap::new();
+        let mut samples: BTreeMap<String, usize> = BTreeMap::new();
+        for (ln, line) in text.lines().enumerate() {
+            let err = |m: &str| Err(format!("line {}: {m}: {line}", ln + 1));
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut it = rest.splitn(2, ' ');
+                let (name, typ) = (
+                    it.next().unwrap_or(""),
+                    it.next().unwrap_or(""),
+                );
+                if !name_ok(name) {
+                    return err("bad metric name in TYPE");
+                }
+                if !["counter", "gauge", "histogram", "summary", "untyped"]
+                    .contains(&typ)
+                {
+                    return err("bad TYPE");
+                }
+                typed.insert(name.to_string(), typ.to_string());
+                continue;
+            }
+            if line.starts_with('#') {
+                if !line.starts_with("# HELP ") {
+                    return err("unknown comment form");
+                }
+                continue;
+            }
+            // sample: name{labels} value
+            let brace = line.find('{');
+            let (name, rest) = match brace {
+                Some(b) => {
+                    let close = match line.rfind('}') {
+                        Some(c) if c > b => c,
+                        _ => return err("unbalanced braces"),
+                    };
+                    let labels = &line[b + 1..close];
+                    // labels: k="v" pairs, comma separated; values are
+                    // escaped strings — walk them with a tiny scanner
+                    let mut chars = labels.chars().peekable();
+                    loop {
+                        let key: String = chars
+                            .by_ref()
+                            .take_while(|&c| c != '=')
+                            .collect();
+                        if !name_ok(&key) {
+                            return err("bad label name");
+                        }
+                        if chars.next() != Some('"') {
+                            return err("label value not quoted");
+                        }
+                        let mut closed = false;
+                        while let Some(c) = chars.next() {
+                            match c {
+                                '\\' => {
+                                    chars.next();
+                                }
+                                '"' => {
+                                    closed = true;
+                                    break;
+                                }
+                                _ => {}
+                            }
+                        }
+                        if !closed {
+                            return err("unterminated label value");
+                        }
+                        match chars.next() {
+                            None => break,
+                            Some(',') => continue,
+                            Some(_) => return err("junk after label value"),
+                        }
+                    }
+                    (&line[..b], &line[close + 1..])
+                }
+                None => match line.find(' ') {
+                    Some(sp) => (&line[..sp], &line[sp..]),
+                    None => return err("sample without value"),
+                },
+            };
+            if !name_ok(name) {
+                return err("bad metric name");
+            }
+            let value = rest.trim();
+            if value.parse::<f64>().is_err()
+                && !["+Inf", "-Inf", "NaN"].contains(&value)
+            {
+                return err("bad sample value");
+            }
+            // histogram child series resolve to their parent family
+            let family = name
+                .strip_suffix("_bucket")
+                .or_else(|| name.strip_suffix("_sum"))
+                .or_else(|| name.strip_suffix("_count"))
+                .filter(|f| typed.get(*f).map(String::as_str)
+                    == Some("histogram"))
+                .unwrap_or(name);
+            if !typed.contains_key(family) {
+                return err("sample before its TYPE declaration");
+            }
+            *samples.entry(family.to_string()).or_insert(0) += 1;
+        }
+        Ok(samples)
+    }
+
+    #[test]
+    fn prometheus_output_parses_and_covers_the_counter_set() {
+        let mut m = MetricsCollector::new();
+        m.begin();
+        m.record_request(10, 5, 0.1, &[0.01, 0.02, 0.01, 0.02]);
+        m.record_queue_wait(0.003);
+        m.cache_scheme = "int8".into();
+        m.kv_layout = "paged".into();
+        m.pages_total = 64;
+        m.mem_weights_bytes = 1024;
+        m.mem_kv_pages_bytes = 2048;
+        m.mem_total_bytes = 3072;
+        m.trace_capacity = 4096;
+        m.trace_events = 17;
+        m.graphs = vec![GraphStat {
+            name: "decode_b8".into(),
+            calls: 12,
+            exec_us: 3400,
+            hist: LogHistogram::new(),
+        }];
+        m.finish();
+        let text = m.prometheus("e0");
+        let families = parse_prometheus(&text)
+            .unwrap_or_else(|e| panic!("{e}\n--- full text:\n{text}"));
+        for want in [
+            "ao_engine_info",
+            "ao_requests_total",
+            "ao_rejected_total",
+            "ao_rejected_cause_total",
+            "ao_canceled_total",
+            "ao_prompt_tokens_total",
+            "ao_output_tokens_total",
+            "ao_decode_steps_total",
+            "ao_prefill_calls_total",
+            "ao_slot_steps_total",
+            "ao_occupancy_ratio",
+            "ao_wall_seconds",
+            "ao_throughput_tokens_per_second",
+            "ao_transfer_bytes_total",
+            "ao_host_splice_bursts_total",
+            "ao_cache_resident_bytes",
+            "ao_kv_pages",
+            "ao_prefix_enabled",
+            "ao_prefix_lookups_total",
+            "ao_sched_enabled",
+            "ao_faults_injected_total",
+            "ao_trace_capacity_events",
+            "ao_trace_events_total",
+            "ao_trace_dropped_total",
+            "ao_retry_log_dropped_total",
+            "ao_mem_resident_bytes",
+            "ao_mem_ledger_total_bytes",
+            "ao_latency_seconds",
+            "ao_rolling_latency_seconds",
+            "ao_ttft_seconds",
+            "ao_tpot_seconds",
+            "ao_itl_seconds",
+            "ao_queue_wait_seconds",
+            "ao_graph_calls_total",
+            "ao_graph_exec_seconds_total",
+            "ao_graph_exec_p95_seconds",
+        ] {
+            assert!(
+                families.get(want).copied().unwrap_or(0) > 0,
+                "family {want} missing or sample-less:\n{text}"
+            );
+        }
+        // every sample carries the engine label
+        for line in text.lines() {
+            if !line.starts_with('#') && !line.is_empty() {
+                assert!(
+                    line.contains("engine=\"e0\""),
+                    "sample without engine label: {line}"
+                );
+            }
+        }
+        // native histogram shape: +Inf bucket equals _count
+        assert!(
+            text.contains("ao_ttft_seconds_bucket{engine=\"e0\",le=\"+Inf\"} 1"),
+            "{text}"
+        );
+        assert!(text.contains("ao_ttft_seconds_count{engine=\"e0\"} 1"));
+    }
+
+    #[test]
+    fn prometheus_empty_run_has_no_nan() {
+        let m = MetricsCollector::new();
+        let text = m.prometheus("x");
+        parse_prometheus(&text).unwrap();
+        assert!(!text.contains("NaN"), "{text}");
+        // every sample value is finite (empty-run percentiles render 0)
+        for line in text.lines() {
+            if line.starts_with('#') || line.is_empty() {
+                continue;
+            }
+            let v = line.rsplit(' ').next().unwrap();
+            assert!(
+                v.parse::<f64>().is_ok_and(|x| x.is_finite()),
+                "non-finite sample: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn prometheus_escapes_label_values() {
+        let m = MetricsCollector::new();
+        let text = m.prometheus("a\"b\\c");
+        parse_prometheus(&text).unwrap();
+        assert!(text.contains("engine=\"a\\\"b\\\\c\""), "{text}");
+    }
+
+    #[test]
+    fn slo_windows_render_in_all_three_surfaces() {
+        let mut m = MetricsCollector::new();
+        m.begin();
+        for i in 0..30 {
+            m.record_request(4, 3, 0.010 * (i + 1) as f64, &[0.002, 0.004]);
+            m.record_queue_wait(0.001);
+        }
+        m.finish();
+        let r = m.report("x");
+        assert!(r.contains("slo_ms[p50/p95/p99 1m "), "{r}");
+        assert!(r.contains("| 5m "), "{r}");
+        let v = Value::parse(&m.report_json("x").to_string()).unwrap();
+        let slo = v.req("slo").unwrap();
+        let m1 = slo.req("1m").unwrap();
+        let t = m1.req("ttft").unwrap();
+        assert_eq!(t.req_usize("n").unwrap(), 30);
+        assert!(t.req("p95_ms").unwrap().as_f64().unwrap() > 0.0);
+        // the whole run happened "just now": 1m and 5m agree, and the
+        // rolling p95 matches the lifetime histogram within a bucket
+        let m5 = slo.req("5m").unwrap();
+        assert_eq!(
+            m5.req("ttft").unwrap().req_usize("n").unwrap(),
+            30
+        );
+        let rolled = m.rolling(&m.win_ttft, 300);
+        assert_eq!(rolled.len(), m.hist_ttft.len());
+        assert_eq!(rolled.sparse_counts(), m.hist_ttft.sparse_counts());
+        let text = m.prometheus("x");
+        assert!(text.contains("ao_rolling_latency_seconds{engine=\"x\",metric=\"ttft\",span=\"1m\",quantile=\"0.95\"}"), "{text}");
+    }
+
+    #[test]
+    fn slo_field_empty_without_samples() {
+        let m = MetricsCollector::new();
+        assert_eq!(m.slo_field(), "");
+        assert!(!m.report("x").contains("slo_ms["));
+    }
+
+    #[test]
+    fn mem_ledger_in_report_and_json() {
+        let mut m = MetricsCollector::new();
+        m.mem_weights_bytes = 4 * 1024 * 1024;
+        m.mem_kv_pages_bytes = 2 * 1024 * 1024;
+        m.mem_scale_pages_bytes = 512 * 1024;
+        m.mem_io_bytes = 1024;
+        m.mem_trace_bytes = 2048;
+        m.mem_total_bytes = m.mem_weights_bytes
+            + m.mem_kv_pages_bytes
+            + m.mem_scale_pages_bytes
+            + m.mem_io_bytes
+            + m.mem_trace_bytes;
+        let r = m.report("x");
+        assert!(
+            r.contains(
+                "mem[weights=4.0MiB kv_pages=2.0MiB scale_pages=512.0KiB \
+                 io=1.0KiB trace=2.0KiB total=6.5MiB]"
+            ),
+            "{r}"
+        );
+        let v = Value::parse(&m.report_json("x").to_string()).unwrap();
+        let mem = v.req("mem").unwrap();
+        let sum = mem.req_usize("weights").unwrap()
+            + mem.req_usize("kv_pages").unwrap()
+            + mem.req_usize("scale_pages").unwrap()
+            + mem.req_usize("io").unwrap()
+            + mem.req_usize("trace").unwrap();
+        assert_eq!(sum, mem.req_usize("total").unwrap());
+        // a collector that never synced a ledger renders no mem field
+        let empty = MetricsCollector::new();
+        assert!(!empty.report("y").contains("mem["));
+    }
+
+    #[test]
+    fn telemetry_loss_in_report_and_json() {
+        let mut m = MetricsCollector::new();
+        // tracing off, nothing dropped: no field
+        assert_eq!(m.trace_field(), "");
+        m.trace_capacity = 4096;
+        m.trace_events = 5000;
+        m.trace_dropped = 904;
+        m.retry_log_dropped = 3;
+        let r = m.report("x");
+        assert!(
+            r.contains(
+                "trace[cap=4096 events=5000 dropped=904 \
+                 retry_log_dropped=3]"
+            ),
+            "{r}"
+        );
+        let v = Value::parse(&m.report_json("x").to_string()).unwrap();
+        let t = v.req("trace").unwrap();
+        assert_eq!(t.req_usize("dropped").unwrap(), 904);
+        assert_eq!(t.req_usize("retry_log_dropped").unwrap(), 3);
+        // retry loss alone still surfaces, even untraced
+        let mut u = MetricsCollector::new();
+        u.retry_log_dropped = 7;
+        assert!(u.report("y").contains("retry_log_dropped=7"));
+    }
+
+    #[test]
+    fn graph_profile_in_report_and_json() {
+        let mut m = MetricsCollector::new();
+        let mut hist = LogHistogram::new();
+        hist.record(0.010);
+        hist.record(0.012);
+        m.graphs = vec![
+            GraphStat {
+                name: "decode_b8_s128".into(),
+                calls: 2,
+                exec_us: 22_000,
+                hist,
+            },
+            GraphStat {
+                name: "admit_s16".into(),
+                calls: 1,
+                exec_us: 5_000,
+                hist: LogHistogram::new(),
+            },
+        ];
+        let r = m.report("x");
+        assert!(r.contains("graphs[decode_b8_s128:calls=2"), "{r}");
+        assert!(r.contains("admit_s16:calls=1"), "{r}");
+        let v = Value::parse(&m.report_json("x").to_string()).unwrap();
+        let graphs = v.req("graphs").unwrap().as_arr().unwrap();
+        assert_eq!(graphs.len(), 2);
+        assert_eq!(graphs[0].req_str("name").unwrap(), "decode_b8_s128");
+        assert_eq!(graphs[0].req_usize("exec_us").unwrap(), 22_000);
+        // no profile, no field
+        let empty = MetricsCollector::new();
+        assert!(!empty.report("y").contains("graphs["));
     }
 }

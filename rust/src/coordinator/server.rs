@@ -10,6 +10,14 @@
 //!                                              JSON twin of the text
 //!                                              report — see
 //!                                              docs/observability.md)
+//!             {"op": "metrics"}                (Prometheus text
+//!                                              exposition of the same
+//!                                              counters:
+//!                                              {"metrics": "..."})
+//!             {"op": "dump"}                   (write a postmortem
+//!                                              bundle to the engine's
+//!                                              --postmortem-dir:
+//!                                              {"dump": "<outcome>"})
 //!             {"op": "shutdown"}               (drain: finish in-flight
 //!                                              work, reject new, report)
 //!   response: {"id": 1, "token": "<text>"}            (streamed)
@@ -151,6 +159,28 @@ fn handle_conn(
                     writer,
                     "{}",
                     json::obj(vec![("stats", stats)]).to_string()
+                )?;
+                continue;
+            }
+            Some("metrics") => {
+                // scrape surface: Prometheus text exposition, shipped as
+                // one JSON string so the line protocol stays line-based
+                let text = engine.metrics()?;
+                writeln!(
+                    writer,
+                    "{}",
+                    json::obj(vec![("metrics", json::s(&text))]).to_string()
+                )?;
+                continue;
+            }
+            Some("dump") => {
+                // flight recorder on demand: the engine writes its
+                // postmortem bundle (or explains why it cannot)
+                let outcome = engine.dump()?;
+                writeln!(
+                    writer,
+                    "{}",
+                    json::obj(vec![("dump", json::s(&outcome))]).to_string()
                 )?;
                 continue;
             }

@@ -393,6 +393,70 @@ pub fn event_json(ev: &TraceEvent) -> Value {
     }
 }
 
+/// Parse one JSONL object back into a `TraceEvent` — the inverse of
+/// `event_json`, so an offline postmortem bundle's `trace.jsonl` can be
+/// re-validated with `check_spans` without the live ring. The meta
+/// header line and unknown shapes return None.
+pub fn event_from_json(v: &Value) -> Option<TraceEvent> {
+    let ev = v.get("ev")?.as_str()?;
+    let u = |k: &str| v.get(k).and_then(|x| x.as_f64()).map(|x| x as u64);
+    let us = |k: &str| v.get(k).and_then(|x| x.as_f64()).map(|x| x as usize);
+    let s = |k: &str| v.get(k).and_then(|x| x.as_str()).map(str::to_string);
+    Some(match ev {
+        "step" => TraceEvent::Step {
+            step: u("step")?,
+            t_us: u("t_us")?,
+            kind: match v.get("kind")?.as_str()? {
+                "decode" => StepKind::Decode,
+                "prefill" => StepKind::Prefill,
+                "mixed" => StepKind::Mixed,
+                _ => return None,
+            },
+            rows: us("rows")?,
+            tokens: us("tokens")?,
+            exec_us: u("exec_us")?,
+            h2d_bytes: u("h2d_bytes")?,
+            d2h_bytes: u("d2h_bytes")?,
+            retries: u("retries")?,
+            preemptions: u("preemptions")?,
+            prefix_hits: u("prefix_hits")?,
+            pages_used: us("pages_used")?,
+        },
+        "enqueued" => TraceEvent::Enqueued {
+            id: u("id")?,
+            t_us: u("t_us")?,
+            n_prompt: us("n_prompt")?,
+        },
+        "claimed" => TraceEvent::Claimed {
+            id: u("id")?,
+            t_us: u("t_us")?,
+            slot: us("slot")?,
+        },
+        "prefill_chunk" => TraceEvent::PrefillChunk {
+            id: u("id")?,
+            t_us: u("t_us")?,
+            start: us("start")?,
+            take: us("take")?,
+        },
+        "decoding" => {
+            TraceEvent::Decoding { id: u("id")?, t_us: u("t_us")? }
+        }
+        "finished" => TraceEvent::Finished {
+            id: u("id")?,
+            t_us: u("t_us")?,
+            outcome: s("outcome")?,
+        },
+        "retry" => TraceEvent::Retry {
+            t_us: u("t_us")?,
+            site: s("site")?,
+            tag: s("tag")?,
+            attempt: us("attempt")?,
+            delay_ms: u("delay_ms")?,
+        },
+        _ => return None,
+    })
+}
+
 /// Validate request lifecycle spans: for every request id that appears,
 /// timestamps are monotone non-decreasing, the first event is
 /// `Enqueued`, there is exactly one `Finished`, and it comes last.
@@ -573,6 +637,42 @@ mod tests {
         }
         assert_eq!(begins, 2, "one B per request");
         assert_eq!(begins, ends, "B/E balanced");
+    }
+
+    #[test]
+    fn jsonl_round_trips_through_event_from_json() {
+        let mut tb = TraceBuffer::new(64);
+        for ev in lifecycle(7, 100) {
+            tb.record(ev);
+        }
+        tb.record(step(0, 150));
+        tb.record(TraceEvent::Retry {
+            t_us: 160,
+            site: "exec".to_string(),
+            tag: "decode".to_string(),
+            attempt: 1,
+            delay_ms: 12,
+        });
+        let mut parsed: Vec<TraceEvent> = Vec::new();
+        for line in tb.dump_jsonl().lines() {
+            let v = Value::parse(line).expect("jsonl line parses");
+            if v.req_str("ev").unwrap() == "meta" {
+                continue;
+            }
+            parsed.push(
+                event_from_json(&v).expect("event line round-trips"),
+            );
+        }
+        assert_eq!(parsed.len(), tb.len());
+        for (orig, back) in tb.events().zip(&parsed) {
+            // the JSON layer has no enum identity, so compare renderings
+            assert_eq!(
+                event_json(orig).to_string(),
+                event_json(back).to_string()
+            );
+        }
+        // and the reconstructed span set still validates
+        assert!(check_spans(parsed.iter()).is_ok());
     }
 
     #[test]

@@ -27,6 +27,11 @@
 //!                 [--trace-capacity N] # trace ring bound (default 4096)
 //!                 [--trace-out STEM]  # dump STEM.jsonl + STEM.chrome.json
 //!                 [--bounded-stats]   # histogram-only latency accounting
+//!                 [--metrics-out PATH] # periodic Prometheus snapshot file
+//!                 [--postmortem-dir DIR] # flight-recorder bundle on fatal
+//!                                     # error or {"op":"dump"}
+//!                 [--slo-window-secs S] # rolling-SLO window width (10)
+//!                 [--slo-windows N]   # rolling-SLO ring length (32)
 //!   ao bench-client --addr 127.0.0.1:7433 --n 16
 //!   ao perfmodel  [--kernels]                   # H100/Fig3 + L1 estimates
 
@@ -313,6 +318,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // --bounded-stats keeps latency accounting in streaming
         // histograms only (no per-sample vectors)
         bounded_stats: args.flag("bounded-stats"),
+        // --metrics-out <path> rewrites a Prometheus text snapshot at
+        // least once per SLO window while serving, and at shutdown
+        metrics_out: args.get("metrics-out").map(PathBuf::from),
+        // --postmortem-dir <dir> arms the flight recorder: a fatal
+        // engine error or {"op":"dump"} writes the bundle there
+        postmortem_dir: args.get("postmortem-dir").map(PathBuf::from),
+        // --slo-window-secs / --slo-windows shape the rolling-SLO ring
+        // (0 = defaults: 32 windows of 10s, a 320s horizon)
+        slo_window_secs: args.usize_or("slo-window-secs", 0) as u64,
+        slo_windows: args.usize_or("slo-windows", 0),
     };
     let (handle, join) = engine::spawn(cfg);
     let tok = Arc::new(Tokenizer::byte_level());

@@ -38,6 +38,7 @@ pub mod artifact;
 pub mod faults;
 
 use crate::tensor::HostTensor;
+use crate::util::stats::GraphStat;
 use crate::xb::{
     HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable,
     XlaComputation,
@@ -46,7 +47,7 @@ use anyhow::{anyhow, Context, Result};
 use artifact::{ArtifactSpec, Manifest};
 use faults::{FaultClass, FaultInjector, FaultPolicy, FaultSite, FaultStats};
 use std::cell::{Cell, RefCell};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 use std::time::Instant;
@@ -56,13 +57,132 @@ use std::time::Instant;
 /// Buffers produced by an execution have no host source (`from_device`).
 pub struct OwnedBuffer {
     _source: Option<Literal>,
+    /// memory-ledger stake released when the buffer drops (`upload_cat`)
+    _ledger: Option<LedgerEntry>,
     pub buffer: PjRtBuffer,
 }
 
 impl OwnedBuffer {
     /// Wrap an execution output: device-resident, no host backing needed.
     pub fn from_device(buffer: PjRtBuffer) -> OwnedBuffer {
-        OwnedBuffer { _source: None, buffer }
+        OwnedBuffer { _source: None, _ledger: None, buffer }
+    }
+}
+
+/// Device-memory ledger category: what a resident byte is *for*.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemCat {
+    /// model parameters uploaded once and held for the engine's lifetime
+    Weights,
+    /// KV cache pages (the paged token cache itself)
+    KvPages,
+    /// per-page quantization scale tensors riding alongside the KV pages
+    ScalePages,
+    /// transient execution inputs (token ids, lengths, block tables, ...)
+    Io,
+    /// host-side trace ring capacity, counted so telemetry overhead is
+    /// attributed rather than invisible
+    Trace,
+}
+
+impl MemCat {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MemCat::Weights => "weights",
+            MemCat::KvPages => "kv_pages",
+            MemCat::ScalePages => "scale_pages",
+            MemCat::Io => "io",
+            MemCat::Trace => "trace",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            MemCat::Weights => 0,
+            MemCat::KvPages => 1,
+            MemCat::ScalePages => 2,
+            MemCat::Io => 3,
+            MemCat::Trace => 4,
+        }
+    }
+}
+
+/// Point-in-time copy of the ledger counters. `total` is maintained
+/// independently of the per-category cells, so "categories sum to total"
+/// is an arithmetic-consistency check, not an identity.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct MemSnapshot {
+    pub weights: u64,
+    pub kv_pages: u64,
+    pub scale_pages: u64,
+    pub io: u64,
+    pub trace: u64,
+    pub total: u64,
+}
+
+impl MemSnapshot {
+    /// Sum of the per-category counters (cross-check against `total`).
+    pub fn category_sum(&self) -> u64 {
+        self.weights + self.kv_pages + self.scale_pages + self.io + self.trace
+    }
+}
+
+#[derive(Default)]
+struct LedgerInner {
+    by_cat: [u64; 5],
+    total: u64,
+}
+
+/// Shared device-memory ledger. Every resident byte is staked by a
+/// [`LedgerEntry`] whose `Drop` returns it, so the counters track live
+/// allocations, not cumulative traffic. Cheap to clone (shared cell).
+#[derive(Clone, Default)]
+pub struct MemLedger {
+    inner: Rc<RefCell<LedgerInner>>,
+}
+
+impl MemLedger {
+    /// Stake `bytes` against `cat`; released when the entry drops.
+    pub fn entry(&self, cat: MemCat, bytes: u64) -> LedgerEntry {
+        {
+            let mut inner = self.inner.borrow_mut();
+            inner.by_cat[cat.idx()] += bytes;
+            inner.total += bytes;
+        }
+        LedgerEntry { ledger: self.clone(), cat, bytes }
+    }
+
+    pub fn snapshot(&self) -> MemSnapshot {
+        let inner = self.inner.borrow();
+        MemSnapshot {
+            weights: inner.by_cat[MemCat::Weights.idx()],
+            kv_pages: inner.by_cat[MemCat::KvPages.idx()],
+            scale_pages: inner.by_cat[MemCat::ScalePages.idx()],
+            io: inner.by_cat[MemCat::Io.idx()],
+            trace: inner.by_cat[MemCat::Trace.idx()],
+            total: inner.total,
+        }
+    }
+
+    fn release(&self, cat: MemCat, bytes: u64) {
+        let mut inner = self.inner.borrow_mut();
+        inner.by_cat[cat.idx()] =
+            inner.by_cat[cat.idx()].saturating_sub(bytes);
+        inner.total = inner.total.saturating_sub(bytes);
+    }
+}
+
+/// RAII stake in a [`MemLedger`]: `bytes` stay attributed to `cat` until
+/// this entry drops.
+pub struct LedgerEntry {
+    ledger: MemLedger,
+    cat: MemCat,
+    bytes: u64,
+}
+
+impl Drop for LedgerEntry {
+    fn drop(&mut self) {
+        self.ledger.release(self.cat, self.bytes);
     }
 }
 
@@ -120,8 +240,19 @@ pub struct Runtime {
     fault_stats: RefCell<FaultStats>,
     /// undrained per-retry delay records (bounded by `RETRY_LOG_CAP`)
     retry_log: RefCell<Vec<RetryRecord>>,
+    /// append-only copy of the retry records (also bounded by
+    /// `RETRY_LOG_CAP`), never drained — the postmortem bundle's feed
+    retry_history: RefCell<Vec<RetryRecord>>,
+    /// retries the bounded drainable log had no room for (telemetry loss)
+    retry_log_dropped: Cell<u64>,
     /// cumulative jitter slept across all retries, ms
     jitter_slept_ms: Cell<u64>,
+    /// live device-memory attribution (see `MemCat`)
+    ledger: MemLedger,
+    /// per-artifact execution profile: calls, cumulative host-timed
+    /// exec_us, latency histogram (keyed by artifact name so device-event
+    /// timing can replace the source without changing consumers)
+    graph_profile: RefCell<BTreeMap<String, GraphStat>>,
 }
 
 impl Runtime {
@@ -145,7 +276,11 @@ impl Runtime {
             fault_policy: Cell::new(FaultPolicy::default()),
             fault_stats: RefCell::new(FaultStats::default()),
             retry_log: RefCell::new(Vec::new()),
+            retry_history: RefCell::new(Vec::new()),
+            retry_log_dropped: Cell::new(0),
             jitter_slept_ms: Cell::new(0),
+            ledger: MemLedger::default(),
+            graph_profile: RefCell::new(BTreeMap::new()),
         })
     }
 
@@ -172,9 +307,53 @@ impl Runtime {
         std::mem::take(&mut *self.retry_log.borrow_mut())
     }
 
+    /// Retries the bounded drainable log could not record.
+    pub fn retry_log_dropped(&self) -> u64 {
+        self.retry_log_dropped.get()
+    }
+
+    /// Copy of the append-only retry history (postmortem feed; bounded by
+    /// `RETRY_LOG_CAP`, never drained).
+    pub fn retry_history(&self) -> Vec<RetryRecord> {
+        self.retry_history.borrow().clone()
+    }
+
     /// Total jitter slept across all retries so far, ms.
     pub fn jitter_slept_ms(&self) -> u64 {
         self.jitter_slept_ms.get()
+    }
+
+    /// The shared device-memory ledger (clone it to stake entries).
+    pub fn ledger(&self) -> &MemLedger {
+        &self.ledger
+    }
+
+    /// Snapshot of the live device-memory attribution.
+    pub fn mem_snapshot(&self) -> MemSnapshot {
+        self.ledger.snapshot()
+    }
+
+    /// Per-artifact execution profile, hottest (most cumulative exec
+    /// time) first.
+    pub fn graph_stats(&self) -> Vec<GraphStat> {
+        let mut stats: Vec<GraphStat> =
+            self.graph_profile.borrow().values().cloned().collect();
+        stats.sort_by(|a, b| b.exec_us.cmp(&a.exec_us));
+        stats
+    }
+
+    /// Fold one timed execution of `name` into the per-graph profile.
+    fn note_graph(&self, name: &str, seconds: f64) {
+        let mut prof = self.graph_profile.borrow_mut();
+        let stat = prof.entry(name.to_string()).or_insert_with(|| GraphStat {
+            name: name.to_string(),
+            calls: 0,
+            exec_us: 0,
+            hist: crate::util::stats::LogHistogram::new(),
+        });
+        stat.calls += 1;
+        stat.exec_us += (seconds * 1e6) as u64;
+        stat.hist.record(seconds);
     }
 
     /// Run a guarded execute/transfer call under the fault policy:
@@ -226,16 +405,28 @@ impl Runtime {
             self.jitter_slept_ms.set(
                 self.jitter_slept_ms.get().saturating_add(jitter),
             );
+            let rec = RetryRecord {
+                site: site.as_str(),
+                tag: tag.to_string(),
+                attempt,
+                backoff_ms: backoff,
+                jitter_ms: jitter,
+            };
             {
                 let mut log = self.retry_log.borrow_mut();
                 if log.len() < RETRY_LOG_CAP {
-                    log.push(RetryRecord {
-                        site: site.as_str(),
-                        tag: tag.to_string(),
-                        attempt,
-                        backoff_ms: backoff,
-                        jitter_ms: jitter,
-                    });
+                    log.push(rec.clone());
+                } else {
+                    // telemetry loss must be visible, not silent: the
+                    // report/exposition surfaces this counter
+                    self.retry_log_dropped
+                        .set(self.retry_log_dropped.get() + 1);
+                }
+            }
+            {
+                let mut hist = self.retry_history.borrow_mut();
+                if hist.len() < RETRY_LOG_CAP {
+                    hist.push(rec);
                 }
             }
             let ms = backoff.saturating_add(jitter);
@@ -422,13 +613,38 @@ impl Runtime {
             .client
             .buffer_from_host_literal(None, &lit)
             .map_err(|e| anyhow!("upload literal: {e:?}"))?;
-        Ok(OwnedBuffer { _source: Some(lit), buffer })
+        Ok(OwnedBuffer { _source: Some(lit), _ledger: None, buffer })
     }
 
-    /// Upload a host tensor, counting its bytes as H2D traffic. Guarded
-    /// by the fault policy (site `transfer`, tag `h2d`); the meter only
+    /// Upload a host tensor, counting its bytes as H2D traffic and
+    /// staking them in the memory ledger as transient `io`. Guarded by
+    /// the fault policy (site `transfer`, tag `h2d`); the meter only
     /// counts the attempt that succeeds.
     pub fn upload(&self, t: &HostTensor) -> Result<OwnedBuffer> {
+        self.upload_cat(t, MemCat::Io)
+    }
+
+    /// `upload` with an explicit ledger category: the uploaded bytes stay
+    /// attributed to `cat` until the returned buffer drops. Long-lived
+    /// allocations whose buffers are *replaced* in place (the donated KV
+    /// cache) should instead hold a standalone [`MemLedger::entry`] and
+    /// upload through `upload_raw`.
+    pub fn upload_cat(
+        &self,
+        t: &HostTensor,
+        cat: MemCat,
+    ) -> Result<OwnedBuffer> {
+        let mut buf = self.upload_raw(t)?;
+        buf._ledger = Some(self.ledger.entry(cat, t.byte_size() as u64));
+        Ok(buf)
+    }
+
+    /// Metered, fault-guarded upload WITHOUT a ledger stake: for
+    /// (re-)uploads of an allocation whose residency is already staked by
+    /// a standalone [`MemLedger::entry`] — the KV cache zeros and the
+    /// host-splice mirror, whose buffers are replaced wholesale while
+    /// the logical allocation stays resident.
+    pub fn upload_raw(&self, t: &HostTensor) -> Result<OwnedBuffer> {
         self.with_faults(FaultSite::Transfer, "h2d", || {
             let buf = self.to_buffer(t.to_literal()?)?;
             self.note_h2d(t.byte_size());
@@ -560,7 +776,9 @@ impl Runtime {
                 }
             }
         };
-        *self.xla_seconds.borrow_mut() += t0.elapsed().as_secs_f64();
+        let secs = t0.elapsed().as_secs_f64();
+        *self.xla_seconds.borrow_mut() += secs;
+        self.note_graph(name, secs);
         self.note_d2h(fetched);
         Ok(lits)
     }
@@ -603,7 +821,9 @@ impl Runtime {
         let mut result = exe
             .execute_b::<&PjRtBuffer>(inputs)
             .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
-        *self.xla_seconds.borrow_mut() += t0.elapsed().as_secs_f64();
+        let secs = t0.elapsed().as_secs_f64();
+        *self.xla_seconds.borrow_mut() += secs;
+        self.note_graph(name, secs);
         if result.is_empty() || result[0].is_empty() {
             anyhow::bail!("execute {name}: no output buffers");
         }
@@ -814,6 +1034,65 @@ mod tests {
         assert!(DONATION_PROBE_HLO.starts_with("HloModule"));
         assert!(DONATION_PROBE_HLO.contains("input_output_alias"));
         assert!(DONATION_PROBE_HLO.contains("ROOT"));
+    }
+
+    #[test]
+    fn ledger_entries_drop_back_to_zero() {
+        let ledger = MemLedger::default();
+        let w = ledger.entry(MemCat::Weights, 4096);
+        let k = ledger.entry(MemCat::KvPages, 1 << 20);
+        let s = ledger.entry(MemCat::ScalePages, 512);
+        let io = ledger.entry(MemCat::Io, 64);
+        let snap = ledger.snapshot();
+        assert_eq!(snap.weights, 4096);
+        assert_eq!(snap.kv_pages, 1 << 20);
+        assert_eq!(snap.scale_pages, 512);
+        assert_eq!(snap.io, 64);
+        assert_eq!(snap.trace, 0);
+        assert_eq!(snap.total, snap.category_sum(), "independent total");
+        drop(io);
+        assert_eq!(ledger.snapshot().io, 0, "drop releases the stake");
+        drop((w, k, s));
+        let end = ledger.snapshot();
+        assert_eq!(end.total, 0);
+        assert_eq!(end.category_sum(), 0);
+    }
+
+    #[test]
+    fn ledger_sum_matches_total_under_churn() {
+        let ledger = MemLedger::default();
+        let _hold = ledger.entry(MemCat::Trace, 96 * 4096);
+        for i in 0..100u64 {
+            let a = ledger.entry(MemCat::Io, i * 7);
+            let b = ledger.entry(MemCat::KvPages, i * 13);
+            let snap = ledger.snapshot();
+            assert_eq!(snap.total, snap.category_sum());
+            drop(a);
+            drop(b);
+        }
+        let snap = ledger.snapshot();
+        assert_eq!(snap.total, 96 * 4096);
+        assert_eq!(snap.total, snap.category_sum());
+    }
+
+    #[test]
+    fn mem_cat_names_are_stable() {
+        // the report's mem[...] keys and the Prometheus category labels
+        // are this enum's strings; renaming one is a breaking change
+        let names: Vec<&str> = [
+            MemCat::Weights,
+            MemCat::KvPages,
+            MemCat::ScalePages,
+            MemCat::Io,
+            MemCat::Trace,
+        ]
+        .into_iter()
+        .map(MemCat::as_str)
+        .collect();
+        assert_eq!(
+            names,
+            vec!["weights", "kv_pages", "scale_pages", "io", "trace"]
+        );
     }
 
     #[test]

@@ -205,6 +205,149 @@ impl LogHistogram {
     }
 }
 
+/// Rolling-window histogram: a ring of per-window `LogHistogram`s over
+/// a caller-supplied epoch clock (microseconds since some fixed origin —
+/// the engine passes its trace-epoch time, tests pass synthetic values;
+/// this type never reads a clock itself).
+///
+/// Time is divided into consecutive windows of `window_us`; window `w`
+/// covers `[w*window_us, (w+1)*window_us)`. The ring keeps the most
+/// recent `n_windows` of them: recording at a later timestamp advances
+/// the ring, dropping any window that has fallen off the back. A rolling
+/// percentile over the last `span_us` is the `merge` of every retained
+/// window that *overlaps* `[now − span, now]` — so a span can include up
+/// to one partially-expired window at the old edge, and the estimate
+/// carries the same one-bucket error bound as `LogHistogram` itself.
+#[derive(Debug, Clone)]
+pub struct WindowedHistogram {
+    window_us: u64,
+    /// ring slot `w % n` holds window `w`'s histogram; `wins[i].0` is
+    /// the window number the slot currently belongs to (`u64::MAX` =
+    /// never written)
+    wins: Vec<(u64, LogHistogram)>,
+    /// highest window number ever advanced to (the "current" window)
+    cur: u64,
+}
+
+/// Default SLO ring geometry: 32 windows of 10s each — a 320s horizon,
+/// enough to answer both the 1-minute and 5-minute rolling queries.
+pub const SLO_WINDOWS: usize = 32;
+pub const SLO_WINDOW_US: u64 = 10_000_000;
+
+impl Default for WindowedHistogram {
+    fn default() -> Self {
+        WindowedHistogram::new(SLO_WINDOWS, SLO_WINDOW_US)
+    }
+}
+
+impl WindowedHistogram {
+    /// `n_windows` ring slots of `window_us` microseconds each. Both are
+    /// clamped to at least 1 so a misconfigured collector degrades to a
+    /// tiny window instead of dividing by zero.
+    pub fn new(n_windows: usize, window_us: u64) -> Self {
+        WindowedHistogram {
+            window_us: window_us.max(1),
+            wins: vec![
+                (u64::MAX, LogHistogram::new());
+                n_windows.max(1)
+            ],
+            cur: 0,
+        }
+    }
+
+    pub fn window_us(&self) -> u64 {
+        self.window_us
+    }
+
+    pub fn n_windows(&self) -> usize {
+        self.wins.len()
+    }
+
+    /// Roll the ring forward so `now_us` lands in the current window.
+    /// Slots whose window number has been lapped are reset — this is
+    /// where expired samples drop. Time never runs backwards here:
+    /// a stale `now_us` records into the current window rather than
+    /// resurrecting an expired one.
+    pub fn advance(&mut self, now_us: u64) {
+        let w = now_us / self.window_us;
+        if w > self.cur {
+            self.cur = w;
+        }
+    }
+
+    /// Record one sample at epoch time `now_us`.
+    pub fn record(&mut self, now_us: u64, v: f64) {
+        self.advance(now_us);
+        let n = self.wins.len();
+        let slot = &mut self.wins[(self.cur % n as u64) as usize];
+        if slot.0 != self.cur {
+            *slot = (self.cur, LogHistogram::new());
+        }
+        slot.1.record(v);
+    }
+
+    /// Is window `w` still inside the ring's retention horizon? A slot
+    /// whose window number has been lapped keeps its stale counts until
+    /// the next record overwrites it, so every read path filters here.
+    fn is_live(&self, w: u64, now_us: u64) -> bool {
+        let horizon = (now_us / self.window_us).max(self.cur);
+        w != u64::MAX
+            && w <= horizon
+            && w + self.wins.len() as u64 > horizon
+    }
+
+    /// Merge of every live window overlapping `[now − span, now]`.
+    /// Windows that fell off the ring (or were never written) contribute
+    /// nothing; an empty result means no samples landed in the span.
+    pub fn merged_last(&self, now_us: u64, span_us: u64) -> LogHistogram {
+        let mut out = LogHistogram::new();
+        let cutoff = now_us.saturating_sub(span_us);
+        for (w, h) in &self.wins {
+            if !self.is_live(*w, now_us) || h.is_empty() {
+                continue;
+            }
+            // overlap test: the window's end must be past the cutoff
+            // and its start at or before now
+            let (start, end) =
+                (*w * self.window_us, (*w + 1) * self.window_us);
+            if end > cutoff && start <= now_us {
+                out.merge(h);
+            }
+        }
+        out
+    }
+
+    /// Total samples currently retained across all live windows (as of
+    /// epoch time `now_us`).
+    pub fn len_at(&self, now_us: u64) -> u64 {
+        self.wins
+            .iter()
+            .filter(|(w, _)| self.is_live(*w, now_us))
+            .map(|(_, h)| h.len())
+            .sum()
+    }
+
+    pub fn is_empty_at(&self, now_us: u64) -> bool {
+        self.len_at(now_us) == 0
+    }
+}
+
+/// Per-artifact execution profile entry: host-timed for now (the wall
+/// clock around `execute_b`), named so device-event timing can replace
+/// the source without changing consumers. Produced by the runtime,
+/// rendered by the metrics report's `graphs[...]` table.
+#[derive(Debug, Clone)]
+pub struct GraphStat {
+    /// artifact name (manifest key)
+    pub name: String,
+    /// executions observed
+    pub calls: u64,
+    /// cumulative execution wall time, microseconds
+    pub exec_us: u64,
+    /// per-call execution seconds, log-bucketed
+    pub hist: LogHistogram,
+}
+
 /// Bench loop: warm up, then time `iters` calls, returning per-call seconds.
 pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> {
     for _ in 0..warmup {
@@ -399,6 +542,84 @@ mod tests {
         assert!(s.mean.is_nan());
         assert!(s.p95.is_nan());
         assert!(h.percentile_est(50.0).is_nan());
+    }
+
+    #[test]
+    fn windowed_full_horizon_merge_counts_live_samples() {
+        // a full-horizon merge accounts for exactly the samples the ring
+        // still retains — no double counting, no leakage from expired
+        // slots
+        let window_us = 10_000_000u64; // 10s
+        let mut w = WindowedHistogram::new(32, window_us);
+        let mut now = 0u64;
+        for i in 0..500u64 {
+            // 0.7s apart: ~350s of traffic, past the 320s horizon, so
+            // the oldest windows expire along the way
+            now = i * 700_000;
+            let v = 1e-3 * (1.0 + (i % 97) as f64);
+            w.record(now, v);
+        }
+        // span covering everything that is still live
+        let span = window_us * 32;
+        let merged = w.merged_last(now, span);
+        let live: u64 = w.len_at(now);
+        assert_eq!(merged.len(), live);
+        // the most recent window is always live, so merges are non-empty
+        assert!(!merged.is_empty());
+    }
+
+    #[test]
+    fn windowed_short_run_merge_is_exact() {
+        // a run shorter than the retention horizon loses nothing: merge
+        // over the full span equals the flat histogram exactly
+        let mut w = WindowedHistogram::new(32, 10_000_000);
+        let mut flat = LogHistogram::new();
+        let mut now = 0u64;
+        for i in 0..300u64 {
+            now = i * 500_000; // 150s total, horizon is 320s
+            let v = 1e-4 * (1.0 + (i % 53) as f64);
+            w.record(now, v);
+            flat.record(v);
+        }
+        let merged = w.merged_last(now, u64::MAX);
+        assert_eq!(merged.len(), flat.len());
+        assert_eq!(merged.sparse_counts(), flat.sparse_counts());
+        assert_eq!(merged.summary().p95, flat.summary().p95);
+    }
+
+    #[test]
+    fn windowed_expired_windows_drop() {
+        let window_us = 1_000_000u64;
+        let n = 4usize;
+        let mut w = WindowedHistogram::new(n, window_us);
+        w.record(0, 1.0);
+        assert_eq!(w.len_at(0), 1);
+        // advance far past the retention horizon without recording: the
+        // old sample must no longer be visible even though its ring slot
+        // was never overwritten
+        let later = window_us * (n as u64 + 3);
+        assert_eq!(w.len_at(later), 0);
+        assert!(w.merged_last(later, u64::MAX).is_empty());
+        // and recording again reuses the slot cleanly
+        w.record(later, 2.0);
+        assert_eq!(w.len_at(later), 1);
+        let m = w.merged_last(later, window_us);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.summary().max, 2.0);
+    }
+
+    #[test]
+    fn windowed_span_excludes_old_windows() {
+        let window_us = 1_000_000u64;
+        let mut w = WindowedHistogram::new(8, window_us);
+        w.record(0, 1.0); // window 0
+        w.record(3 * window_us + 1, 2.0); // window 3
+        // a one-window span at window 3 sees only the new sample
+        let m = w.merged_last(3 * window_us + 1, window_us / 2);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.summary().min, 2.0);
+        // a full-horizon span still sees both
+        assert_eq!(w.merged_last(3 * window_us + 1, u64::MAX).len(), 2);
     }
 
     #[test]

@@ -148,6 +148,10 @@ fn engine_serves_batched_requests() {
         trace_out: None,
         fault_jitter_ms: 0,
         bounded_stats: false,
+        metrics_out: None,
+        postmortem_dir: None,
+        slo_window_secs: 0,
+        slo_windows: 0,
     });
 
     let mut rxs = Vec::new();
@@ -223,6 +227,10 @@ fn engine_greedy_decode_is_deterministic() {
             trace_out: None,
             fault_jitter_ms: 0,
             bounded_stats: false,
+            metrics_out: None,
+            postmortem_dir: None,
+            slo_window_secs: 0,
+            slo_windows: 0,
         });
         let (tx, rx) = channel();
         handle
@@ -297,6 +305,10 @@ fn decode_host_traffic_is_logits_only() {
         trace_out: None,
         fault_jitter_ms: 0,
         bounded_stats: false,
+        metrics_out: None,
+        postmortem_dir: None,
+        slo_window_secs: 0,
+        slo_windows: 0,
     });
     let mut rxs = Vec::new();
     for i in 0..3u64 {
@@ -389,6 +401,10 @@ fn context_cap_grants_the_last_cache_slot() {
         trace_out: None,
         fault_jitter_ms: 0,
         bounded_stats: false,
+        metrics_out: None,
+        postmortem_dir: None,
+        slo_window_secs: 0,
+        slo_windows: 0,
     });
     let (tx, rx) = channel();
     handle
@@ -469,6 +485,10 @@ fn oversized_head_does_not_stall_admission() {
         trace_out: None,
         fault_jitter_ms: 0,
         bounded_stats: false,
+        metrics_out: None,
+        postmortem_dir: None,
+        slo_window_secs: 0,
+        slo_windows: 0,
     });
     // head: too long for any bucket; followers: ordinary prompts
     let (bad_tx, bad_rx) = channel();
@@ -625,6 +645,10 @@ fn admission_rows_only_under(cache_scheme: CacheScheme) {
         trace_out: None,
         fault_jitter_ms: 0,
         bounded_stats: false,
+        metrics_out: None,
+        postmortem_dir: None,
+        slo_window_secs: 0,
+        slo_windows: 0,
     });
     let mut rxs = Vec::new();
     for i in 0..3u64 {
@@ -726,6 +750,10 @@ fn admission_paths_agree_under(cache_scheme: CacheScheme) {
             trace_out: None,
             fault_jitter_ms: 0,
             bounded_stats: false,
+            metrics_out: None,
+            postmortem_dir: None,
+            slo_window_secs: 0,
+            slo_windows: 0,
         });
         let mut rxs = Vec::new();
         for i in 0..4u64 {
@@ -824,6 +852,10 @@ fn kv_cache_schemes_agree() {
             trace_out: None,
             fault_jitter_ms: 0,
             bounded_stats: false,
+            metrics_out: None,
+            postmortem_dir: None,
+            slo_window_secs: 0,
+            slo_windows: 0,
         });
         let mut rxs = Vec::new();
         for i in 0..5u64 {
@@ -940,6 +972,10 @@ fn kv_layouts_agree() {
                 trace_out: None,
                 fault_jitter_ms: 0,
                 bounded_stats: false,
+                metrics_out: None,
+                postmortem_dir: None,
+                slo_window_secs: 0,
+                slo_windows: 0,
             });
             let mut rxs = Vec::new();
             // mixed short/long greedy workload, more requests than fit at
@@ -1089,6 +1125,10 @@ fn prefix_cache_agrees() {
                 trace_out: None,
                 fault_jitter_ms: 0,
                 bounded_stats: false,
+                metrics_out: None,
+                postmortem_dir: None,
+                slo_window_secs: 0,
+                slo_windows: 0,
             });
             let collect = |rx: std::sync::mpsc::Receiver<Event>| {
                 let mut toks = Vec::new();
@@ -1239,6 +1279,10 @@ fn sampled_requests_diverge() {
         trace_out: None,
         fault_jitter_ms: 0,
         bounded_stats: false,
+        metrics_out: None,
+        postmortem_dir: None,
+        slo_window_secs: 0,
+        slo_windows: 0,
     });
     // identical prompts, temperature 1.0, seed == id (the collapsing case)
     let mut rxs = Vec::new();
@@ -1317,6 +1361,10 @@ fn empty_prompt_is_rejected() {
         trace_out: None,
         fault_jitter_ms: 0,
         bounded_stats: false,
+        metrics_out: None,
+        postmortem_dir: None,
+        slo_window_secs: 0,
+        slo_windows: 0,
     });
     let (bad_tx, bad_rx) = channel();
     handle
@@ -1447,6 +1495,10 @@ fn scheduler_agrees() {
                     trace_out: None,
                     fault_jitter_ms: 0,
                     bounded_stats: false,
+                    metrics_out: None,
+                    postmortem_dir: None,
+                    slo_window_secs: 0,
+                    slo_windows: 0,
                 });
                 let mut rxs = Vec::new();
                 // two short-prompt decoders first (they sit in Decoding
@@ -1621,6 +1673,10 @@ fn engine_survives_injected_faults() {
                     trace_out: None,
                     fault_jitter_ms: 0,
                     bounded_stats: false,
+                    metrics_out: None,
+                    postmortem_dir: None,
+                    slo_window_secs: 0,
+                    slo_windows: 0,
                 });
                 let mut rxs = Vec::new();
                 // mixed prompt lengths so admission spans buckets (and
@@ -1743,6 +1799,10 @@ fn exhausted_faults_fail_slots_not_the_engine() {
         trace_out: None,
         fault_jitter_ms: 0,
         bounded_stats: false,
+        metrics_out: None,
+        postmortem_dir: None,
+        slo_window_secs: 0,
+        slo_windows: 0,
     });
     let mut rxs = Vec::new();
     for i in 0..2u64 {
@@ -1850,6 +1910,10 @@ fn contained_failure_resumes_decoding_slots() {
             trace_out: None,
             fault_jitter_ms: 0,
             bounded_stats: false,
+            metrics_out: None,
+            postmortem_dir: None,
+            slo_window_secs: 0,
+            slo_windows: 0,
         });
         let mut rxs = Vec::new();
         // short prompts: everything is Decoding (with emitted tokens) by
@@ -1941,6 +2005,10 @@ fn drain_completes_inflight() {
         trace_out: None,
         fault_jitter_ms: 0,
         bounded_stats: false,
+        metrics_out: None,
+        postmortem_dir: None,
+        slo_window_secs: 0,
+        slo_windows: 0,
     });
     let mut rxs = Vec::new();
     for i in 0..4u64 {
@@ -2043,6 +2111,10 @@ fn deadlines_shed_queued_and_finish_decoding() {
         trace_out: None,
         fault_jitter_ms: 0,
         bounded_stats: false,
+        metrics_out: None,
+        postmortem_dir: None,
+        slo_window_secs: 0,
+        slo_windows: 0,
     });
     // already expired at submit: the sweep rejects it before prefill
     let (tx, rx) = channel();
@@ -2149,6 +2221,10 @@ fn cancel_releases_slot_and_pages() {
         trace_out: None,
         fault_jitter_ms: 0,
         bounded_stats: false,
+        metrics_out: None,
+        postmortem_dir: None,
+        slo_window_secs: 0,
+        slo_windows: 0,
     });
     let (tx, rx) = channel();
     handle
@@ -2247,6 +2323,10 @@ fn server_disconnect_cancels_request() {
         trace_out: None,
         fault_jitter_ms: 0,
         bounded_stats: false,
+        metrics_out: None,
+        postmortem_dir: None,
+        slo_window_secs: 0,
+        slo_windows: 0,
     });
     // grab a free port, then serve exactly three connections on it
     let addr = {
@@ -2351,6 +2431,10 @@ fn stats_op_roundtrip() {
             trace_out: None,
             fault_jitter_ms: 0,
             bounded_stats: false,
+            metrics_out: None,
+            postmortem_dir: None,
+            slo_window_secs: 0,
+            slo_windows: 0,
         });
         let addr = {
             let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
@@ -2410,5 +2494,308 @@ fn stats_op_roundtrip() {
             r.contains(&format!("out_tokens={}", m.n_output_tokens)),
             "{r}"
         );
+    }
+}
+
+/// Minimal Prometheus text-format check shared by the metrics-op and
+/// postmortem tests: every non-comment line must be
+/// `name{labels} value` with a parseable, finite value, and every
+/// sample must carry the per-engine label.
+fn assert_prometheus_wellformed(text: &str) {
+    let mut samples = 0usize;
+    for line in text.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (head, value) =
+            line.rsplit_once(' ').expect("sample line has a value");
+        assert!(
+            head.starts_with("ao_"),
+            "metric outside the ao_ namespace: {line}"
+        );
+        assert!(
+            head.contains("engine=\""),
+            "sample missing the engine label: {line}"
+        );
+        let v: f64 = value.parse().unwrap_or_else(|_| {
+            panic!("unparseable sample value in: {line}")
+        });
+        assert!(v.is_finite(), "non-finite sample value in: {line}");
+        samples += 1;
+    }
+    assert!(samples > 0, "exposition carries no samples");
+    for family in [
+        "ao_requests_total",
+        "ao_mem_resident_bytes",
+        "ao_rolling_latency_seconds",
+    ] {
+        assert!(
+            text.contains(&format!("# TYPE {family} ")),
+            "missing # TYPE for {family}"
+        );
+    }
+}
+
+#[test]
+fn metrics_op_exposes_prometheus() {
+    use ao::util::json::Value;
+    use std::io::{BufRead, BufReader, Write};
+    let Some(dir) = artifacts_dir() else { return };
+    if !has_admit_artifacts(&dir, CacheScheme::F32) {
+        return;
+    }
+    let master = tiny_master_ckpt(&dir);
+    let tmp = std::env::temp_dir().join("ao_int_tests");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let ckpt_path = tmp.join("tiny_f32_metrics_op.aockpt");
+    master.save(&ckpt_path).unwrap();
+
+    let (handle, join) = engine::spawn(engine::EngineConfig {
+        artifacts_dir: dir.clone(),
+        ckpt_path,
+        model: "tiny".into(),
+        scheme: "f32".into(),
+        cache_scheme: CacheScheme::F32,
+        kv_layout: KvLayout::Static,
+        eos_token: None,
+        host_admission: false,
+        prefix_cache: false,
+        max_batch_tokens: None,
+        fault_retries: 3,
+        fault_backoff_ms: 1,
+        fault_plan: None,
+        max_queue: None,
+        default_deadline_ms: None,
+        trace: false,
+        trace_capacity: 0,
+        trace_out: None,
+        fault_jitter_ms: 0,
+        bounded_stats: false,
+        metrics_out: None,
+        postmortem_dir: None,
+        slo_window_secs: 0,
+        slo_windows: 0,
+    });
+    let addr = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let server = {
+        let handle = handle.clone();
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            ao::coordinator::server::serve(
+                &addr,
+                handle,
+                std::sync::Arc::new(Tokenizer::byte_level()),
+                Some(2),
+            )
+        })
+    };
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    let gen = {
+        let mut c =
+            ao::coordinator::server::Client::connect(&addr).unwrap();
+        c.generate("hello world", 8, 0.0).unwrap()
+    };
+    assert_eq!(gen.n_generated, 8, "{:?}", gen.reason);
+    // metrics op, then shutdown on the SAME connection: like stats, the
+    // scrape must not consume the connection's request budget
+    let text = {
+        let mut c = std::net::TcpStream::connect(&addr).unwrap();
+        let mut reader = BufReader::new(c.try_clone().unwrap());
+        writeln!(c, "{{\"op\": \"metrics\"}}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let reply = Value::parse(&line).expect("metrics reply is JSON");
+        writeln!(c, "{{\"op\": \"shutdown\"}}").unwrap();
+        let mut bye = String::new();
+        reader.read_line(&mut bye).unwrap();
+        assert!(bye.contains("\"drained\""), "{bye}");
+        reply.req_str("metrics").expect("metrics envelope").to_string()
+    };
+    server.join().unwrap().unwrap();
+    handle.shutdown();
+    let m = join.join().unwrap().unwrap();
+    assert_prometheus_wellformed(&text);
+    // the scrape was taken after the only request finished, so its
+    // counters must equal the final report's
+    assert!(
+        text.contains(&format!(
+            "ao_requests_total{{engine=\"engine\"}} {}",
+            m.n_requests
+        )),
+        "{text}"
+    );
+    assert!(
+        text.contains(&format!(
+            "ao_output_tokens_total{{engine=\"engine\"}} {}",
+            m.n_output_tokens
+        )),
+        "{text}"
+    );
+}
+
+#[test]
+fn chaos_postmortem_bundle_round_trips() {
+    use ao::coordinator::trace::{check_spans, event_from_json};
+    use ao::util::json::Value;
+    let Some(dir) = artifacts_dir() else { return };
+    if !has_admit_artifacts(&dir, CacheScheme::F32) {
+        return;
+    }
+    let master = tiny_master_ckpt(&dir);
+    let tmp = std::env::temp_dir().join("ao_int_tests");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let ckpt_path = tmp.join("tiny_f32_postmortem.aockpt");
+    master.save(&ckpt_path).unwrap();
+    let bundle_dir = tmp.join("postmortem_chaos");
+    let _ = std::fs::remove_dir_all(&bundle_dir);
+
+    let plan = "exec:decode:every=5:n=2,transfer:h2d:every=7:n=2";
+    let (handle, join) = engine::spawn(engine::EngineConfig {
+        artifacts_dir: dir.clone(),
+        ckpt_path,
+        model: "tiny".into(),
+        scheme: "f32".into(),
+        cache_scheme: CacheScheme::F32,
+        kv_layout: KvLayout::Static,
+        eos_token: None,
+        host_admission: false,
+        prefix_cache: false,
+        max_batch_tokens: None,
+        fault_retries: 3,
+        fault_backoff_ms: 1,
+        fault_plan: Some(plan.into()),
+        max_queue: None,
+        default_deadline_ms: None,
+        trace: true,
+        trace_capacity: 0,
+        trace_out: None,
+        fault_jitter_ms: 0,
+        bounded_stats: false,
+        metrics_out: None,
+        postmortem_dir: Some(bundle_dir.clone()),
+        slo_window_secs: 0,
+        slo_windows: 0,
+    });
+    let mut rxs = Vec::new();
+    for i in 0..6u64 {
+        let (tx, rx) = channel();
+        handle
+            .submit(SubmitReq {
+                id: i,
+                prompt_tokens: vec![25 + 3 * i as u32; 3 + (2 * i as usize) % 7],
+                max_new_tokens: 6,
+                temperature: 0.0,
+                seed: i,
+                tx,
+                submitted_at: Instant::now(),
+                enqueued_at: None,
+                resume: None,
+                deadline: None,
+            })
+            .unwrap();
+        rxs.push(rx);
+    }
+    for rx in rxs {
+        let mut done = false;
+        for ev in rx {
+            if matches!(ev, Event::Done(_) | Event::Error(_)) {
+                done = true;
+                break;
+            }
+        }
+        assert!(done, "request stream ended without a terminal event");
+    }
+    // operator dump: same writer the fatal path uses
+    let outcome = handle.dump().unwrap();
+    assert!(
+        outcome.contains("postmortem bundle written"),
+        "{outcome}"
+    );
+    handle.shutdown();
+    let m = join.join().unwrap().unwrap();
+    assert!(m.faults_injected > 0, "chaos plan never fired");
+    assert!(m.faults_retried > 0, "no retries recorded");
+
+    // report.json: reason + a parseable report_json snapshot taken at
+    // dump time (after the last request, so counters match the final)
+    let report_text =
+        std::fs::read_to_string(bundle_dir.join("report.json")).unwrap();
+    let report = Value::parse(&report_text).expect("report.json parses");
+    assert!(
+        report.req_str("reason").unwrap().contains("operator dump"),
+        "{report_text}"
+    );
+    let snap = report.req("report").unwrap();
+    assert_eq!(snap.req_usize("requests").unwrap(), m.n_requests);
+    let mem = snap.req("mem").unwrap();
+    let cat_sum: u64 = ["weights", "kv_pages", "scale_pages", "io", "trace"]
+        .iter()
+        .map(|c| mem.req_usize(c).unwrap() as u64)
+        .sum();
+    assert_eq!(
+        cat_sum,
+        mem.req_usize("total").unwrap() as u64,
+        "ledger categories must sum to the total with no remainder"
+    );
+
+    // config.json: the resolved EngineConfig, chaos plan included
+    let cfg_text =
+        std::fs::read_to_string(bundle_dir.join("config.json")).unwrap();
+    let cfg = Value::parse(&cfg_text).expect("config.json parses");
+    assert_eq!(cfg.req_str("model").unwrap(), "tiny");
+    assert_eq!(cfg.req_str("fault_plan").unwrap(), plan);
+
+    // fault_plan.txt mirrors the armed plan verbatim
+    let plan_text =
+        std::fs::read_to_string(bundle_dir.join("fault_plan.txt")).unwrap();
+    assert_eq!(plan_text, plan);
+
+    // metrics.prom: a valid exposition snapshot
+    let prom =
+        std::fs::read_to_string(bundle_dir.join("metrics.prom")).unwrap();
+    assert_prometheus_wellformed(&prom);
+
+    // retries.jsonl: one parseable record per retained retry
+    let retries =
+        std::fs::read_to_string(bundle_dir.join("retries.jsonl")).unwrap();
+    let n_retry_lines = retries
+        .lines()
+        .map(|l| {
+            let r = Value::parse(l).expect("retry line parses");
+            assert!(r.req_str("site").is_ok(), "{l}");
+            assert!(r.req_usize("attempt").is_ok(), "{l}");
+        })
+        .count();
+    assert!(n_retry_lines > 0, "chaos run retained no retry records");
+
+    // trace.jsonl: meta header, then events that survive the
+    // JSON -> TraceEvent -> check_spans round trip
+    let trace_text =
+        std::fs::read_to_string(bundle_dir.join("trace.jsonl")).unwrap();
+    let mut events = Vec::new();
+    for (i, line) in trace_text.lines().enumerate() {
+        let v = Value::parse(line).expect("trace line parses");
+        if i == 0 {
+            assert_eq!(v.req_str("ev").unwrap(), "meta", "{line}");
+            continue;
+        }
+        events.push(
+            event_from_json(&v)
+                .unwrap_or_else(|| panic!("unmappable trace line: {line}")),
+        );
+    }
+    assert!(!events.is_empty(), "dumped trace is empty");
+    check_spans(events.iter()).expect("dumped trace passes check_spans");
+
+    // trace.chrome.json: loadable as a JSON array
+    let chrome =
+        std::fs::read_to_string(bundle_dir.join("trace.chrome.json"))
+            .unwrap();
+    match Value::parse(&chrome) {
+        Ok(Value::Arr(evs)) => assert!(!evs.is_empty()),
+        other => panic!("chrome dump is not a JSON array: {other:?}"),
     }
 }

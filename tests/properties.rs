@@ -1261,3 +1261,69 @@ fn prop_trace_lifecycle() {
         },
     );
 }
+
+#[test]
+fn prop_windowed_merge_matches_flat_histogram() {
+    // rolling-SLO spec: merging a WindowedHistogram's live windows must
+    // equal one LogHistogram fed exactly the samples whose window is
+    // still inside the ring's horizon — bucket counts identical, and
+    // anything older than n_windows windows must have dropped out. The
+    // flat side restates the semantics declaratively; the windowed side
+    // goes through the ring's lapping/lazy-reset mechanics.
+    use ao::util::stats::{LogHistogram, WindowedHistogram};
+    const N_WINDOWS: usize = 8;
+    const WINDOW_US: u64 = 1_000;
+    check(
+        "windowed-merge-flat",
+        60,
+        |r| {
+            let n = 1 + r.below(64);
+            (0..n)
+                .map(|_| (r.below(3_000), r.f32().abs() + 1e-6))
+                .collect::<Vec<(usize, f32)>>()
+        },
+        |steps| {
+            if steps.is_empty() {
+                return Ok(());
+            }
+            let mut w = WindowedHistogram::new(N_WINDOWS, WINDOW_US);
+            let mut t = 0u64;
+            let mut samples: Vec<(u64, f64)> = Vec::new();
+            for &(dt, v) in steps {
+                t += dt as u64;
+                w.record(t, v as f64);
+                samples.push((t, v as f64));
+            }
+            let now = t;
+            let horizon = now / WINDOW_US;
+            let mut flat = LogHistogram::new();
+            for &(ts, v) in &samples {
+                if ts / WINDOW_US + N_WINDOWS as u64 > horizon {
+                    flat.record(v);
+                }
+            }
+            let span_us = (now + 1).max(WINDOW_US * N_WINDOWS as u64 * 2);
+            let merged = w.merged_last(now, span_us);
+            if merged.sparse_counts() != flat.sparse_counts() {
+                return Err(format!(
+                    "merged buckets {:?} != flat buckets {:?}",
+                    merged.sparse_counts(),
+                    flat.sparse_counts()
+                ));
+            }
+            // expiry: once the run outlives the ring, the oldest
+            // sample's window must be gone from the merge
+            let first_window = samples.first().map(|&(ts, _)| ts / WINDOW_US);
+            if first_window
+                .is_some_and(|fw| horizon.saturating_sub(fw) >= N_WINDOWS as u64)
+                && merged.len() == samples.len() as u64
+            {
+                return Err(
+                    "a window older than the ring horizon never expired"
+                        .to_string(),
+                );
+            }
+            Ok(())
+        },
+    );
+}

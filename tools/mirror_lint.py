@@ -628,6 +628,10 @@ R3_TABLE = [
     ("trace_out", "trace-out", ("env", "AO_TRACE_OUT")),
     ("fault_jitter_ms", "fault-jitter-ms", ("env", "AO_FAULT_JITTER_MS")),
     ("bounded_stats", "bounded-stats", ("env", "AO_BOUNDED_STATS")),
+    ("metrics_out", "metrics-out", ("env", "AO_METRICS_OUT")),
+    ("postmortem_dir", "postmortem-dir", ("env", "AO_POSTMORTEM_DIR")),
+    ("slo_window_secs", "slo-window-secs", ("env", "AO_SLO_WINDOW_SECS")),
+    ("slo_windows", "slo-windows", ("env", "AO_SLO_WINDOWS")),
 ]
 
 
@@ -708,41 +712,52 @@ def method_bodies(toks):
     return out
 
 
+R4_ROOTS = ["report", "report_json", "prometheus"]
+
+
 def r4_check(metrics):
     toks = strip_cfg_test(lex_rust(metrics[1]))
     fields = struct_pub_fields(toks, "MetricsCollector")
     methods = method_bodies(toks)
-    covered = set()
-    seen = set()
-    stack = ["report"]
-    while stack:
-        name = stack.pop()
-        if name in seen:
-            continue
-        seen.add(name)
-        body = methods.get(name)
-        if body is None:
-            continue
-        for k, t in enumerate(body):
-            if t[:2] != ("ident", "self"):
+
+    def covered_from(root):
+        covered = set()
+        seen = set()
+        stack = [root]
+        while stack:
+            name = stack.pop()
+            if name in seen:
                 continue
-            if not (k + 1 < len(body)
-                    and body[k + 1][:2] == ("punct", ".")):
+            seen.add(name)
+            body = methods.get(name)
+            if body is None:
                 continue
-            if k + 2 >= len(body):
-                continue
-            member = body[k + 2]
-            if member[0] != "ident":
-                continue
-            if k + 3 < len(body) and body[k + 3][:2] == ("punct", "("):
-                stack.append(member[1])
-            elif any(f == member[1] for f, _ in fields):
-                covered.add(member[1])
-    return [
-        ("r4-metrics", metrics[0], line, f"field '{f}' never rendered")
-        for f, line in fields
-        if f not in covered
-    ]
+            for k, t in enumerate(body):
+                if t[:2] != ("ident", "self"):
+                    continue
+                if not (k + 1 < len(body)
+                        and body[k + 1][:2] == ("punct", ".")):
+                    continue
+                if k + 2 >= len(body):
+                    continue
+                member = body[k + 2]
+                if member[0] != "ident":
+                    continue
+                if k + 3 < len(body) and body[k + 3][:2] == ("punct", "("):
+                    stack.append(member[1])
+                elif any(f == member[1] for f, _ in fields):
+                    covered.add(member[1])
+        return covered
+
+    per_root = [(r, covered_from(r)) for r in R4_ROOTS]
+    out = []
+    for f, line in fields:
+        missing = [r for r, cov in per_root if f not in cov]
+        if missing:
+            out.append(("r4-metrics", metrics[0], line,
+                        f"field '{f}' missing from "
+                        f"[{', '.join(missing)}]"))
+    return out
 
 
 # ---------------- r5_events.rs ----------------
